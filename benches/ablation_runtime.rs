@@ -1,0 +1,134 @@
+//! Ablations beyond the paper's tables:
+//! 1. PJRT-backed vs native quantizer on the SZ-LV hot path (the cost
+//!    of the AOT/PJRT bridge on CPU; skipped when artifacts are absent);
+//! 2. SZ's optional lossless backend (Huffman-only vs +DEFLATE);
+//! 3. pipeline queue-depth (backpressure) sweep;
+//! 4. scheduler routing on/off on cosmology data (the §V-C rule).
+
+use nblc::bench::{f1, f2, Table, EB_REL};
+use nblc::compressors::sz::{Sz, SzConfig};
+use nblc::compressors::{mode_compressor, Mode};
+use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::coordinator::choose_compressor;
+use nblc::data::DatasetKind;
+use nblc::snapshot::{FieldCompressor, PerField, SnapshotCompressor};
+use nblc::util::stats::value_range;
+use nblc::util::timer::time_it;
+use std::sync::Arc;
+
+fn main() {
+    let hacc = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let field = &hacc.fields[2];
+    let eb = value_range(field) * EB_REL;
+    let mb = (field.len() * 4) as f64 / 1e6;
+
+    // 1. PJRT vs native quantizer.
+    let mut t1 = Table::new(
+        "Ablation 1: native vs PJRT quantizer (SZ-LV, one HACC field)",
+        &["Path", "Rate (MB/s)", "Ratio"],
+    );
+    let (native_bytes, native_secs) = time_it(|| Sz::lv().compress(field, eb).unwrap());
+    t1.row(vec![
+        "native (f64 lattice)".into(),
+        f1(mb / native_secs),
+        f2((field.len() * 4) as f64 / native_bytes.len() as f64),
+    ]);
+    match nblc::runtime::Runtime::load_default() {
+        Some(rt) => {
+            let sz_pjrt = nblc::runtime::quantizer::SzPjrt::lv(Arc::new(rt));
+            // Warm up (compile path already done at load; first exec warms buffers).
+            let _ = sz_pjrt.compress(&field[..65536.min(field.len())], eb).unwrap();
+            let (bytes, secs) = time_it(|| sz_pjrt.compress(field, eb).unwrap());
+            t1.row(vec![
+                "pjrt (AOT Pallas kernel)".into(),
+                f1(mb / secs),
+                f2((field.len() * 4) as f64 / bytes.len() as f64),
+            ]);
+            println!(
+                "stream sizes: native {} vs pjrt {} bytes (must be within 1%)",
+                native_bytes.len(),
+                bytes.len()
+            );
+            assert!(
+                (native_bytes.len() as f64 - bytes.len() as f64).abs()
+                    < native_bytes.len() as f64 * 0.01
+            );
+        }
+        None => println!("(PJRT ablation skipped: artifacts/ not built)"),
+    }
+    t1.print();
+
+    // 2. Lossless backend on/off.
+    let mut t2 = Table::new(
+        "Ablation 2: SZ lossless backend (Huffman only vs +DEFLATE)",
+        &["Config", "Ratio", "Rate (MB/s)"],
+    );
+    for (label, lossless) in [("huffman only", false), ("huffman + deflate", true)] {
+        let sz = Sz {
+            cfg: SzConfig {
+                lossless,
+                ..Default::default()
+            },
+        };
+        let (bytes, secs) = time_it(|| sz.compress(field, eb).unwrap());
+        t2.row(vec![
+            label.into(),
+            f2((field.len() * 4) as f64 / bytes.len() as f64),
+            f1(mb / secs),
+        ]);
+    }
+    t2.print();
+
+    // 3. Queue depth sweep (backpressure cost).
+    let mut t3 = Table::new(
+        "Ablation 3: pipeline queue depth (64 shards, model sink)",
+        &["Queue depth", "Wall (s)", "Source stalls", "Ratio"],
+    );
+    for depth in [1usize, 2, 8, 32] {
+        let factory: CompressorFactory =
+            Arc::new(|| Box::new(PerField(Sz::lv())) as Box<dyn SnapshotCompressor>);
+        let report = run_insitu(
+            &hacc,
+            &InsituConfig {
+                shards: 64,
+                workers: 1,
+                queue_depth: depth,
+                eb_rel: EB_REL,
+                factory,
+                sink: Sink::Null,
+            },
+        )
+        .unwrap();
+        t3.row(vec![
+            format!("{depth}"),
+            format!("{:.2}", report.wall_secs),
+            format!("{}", report.source_stalls),
+            f2(report.ratio),
+        ]);
+    }
+    t3.print();
+
+    // 4. Scheduler routing on cosmology data.
+    let mut t4 = Table::new(
+        "Ablation 4: scheduler routing (par.V-C rule) on HACC",
+        &["Requested", "Executed", "Ratio"],
+    );
+    for req in [Mode::BestCompression, Mode::BestSpeed] {
+        let routed = choose_compressor(&hacc, req);
+        let ratio = mode_compressor(routed)
+            .compress(&hacc, EB_REL)
+            .unwrap()
+            .compression_ratio();
+        t4.row(vec![req.name().into(), routed.name().into(), f2(ratio)]);
+    }
+    let unrouted = mode_compressor(Mode::BestCompression)
+        .compress(&hacc, EB_REL)
+        .unwrap()
+        .compression_ratio();
+    t4.row(vec![
+        "best_compression (routing off)".into(),
+        "best_compression".into(),
+        f2(unrouted),
+    ]);
+    t4.print();
+}

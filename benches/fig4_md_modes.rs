@@ -1,0 +1,57 @@
+//! Fig. 4 — compression ratios AND rates of all methods on AMDF @
+//! eb_rel=1e-4, defining the three modes (paper: SZ-LV best rate at
+//! −12% ratio vs CPC2000; SZ-LV-PRX ≈2x CPC2000's rate at equal ratio;
+//! SZ-CPC2000 +13% ratio, +10% rate vs CPC2000).
+
+use nblc::bench::{f1, f2, Table, EB_REL};
+use nblc::compressors::by_name;
+use nblc::data::DatasetKind;
+use nblc::util::timer::bench_min_time;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Amdf);
+    let mb = s.total_bytes() as f64 / 1e6;
+    let mut t = Table::new(
+        &format!("Fig. 4: ratio & rate on AMDF @ eb_rel=1e-4 (n={})", s.len()),
+        &["Method", "Ratio", "Rate (MB/s)", "Mode"],
+    );
+    let mode_of = |name: &str| match name {
+        "sz_lv" => "best_speed",
+        "sz_lv_prx" => "best_tradeoff",
+        "sz_cpc2000" => "best_compression",
+        _ => "",
+    };
+    let mut results = Vec::new();
+    for name in ["fpzip", "zfp", "sz", "cpc2000", "sz_lv", "sz_lv_rx", "sz_lv_prx", "sz_cpc2000"] {
+        let comp = by_name(name).unwrap();
+        let bundle = comp.compress(&s, EB_REL).unwrap();
+        let secs = bench_min_time(0.5, 2, || comp.compress(&s, EB_REL).unwrap());
+        let ratio = bundle.compression_ratio();
+        let rate = mb / secs;
+        results.push((name, ratio, rate));
+        t.row(vec![name.into(), f2(ratio), f1(rate), mode_of(name).into()]);
+    }
+    t.print();
+    t.write_csv("fig4_md_modes").unwrap();
+
+    let get = |n: &str| results.iter().find(|(name, _, _)| *name == n).unwrap();
+    let (_, r_cpc, v_cpc) = get("cpc2000");
+    let (_, r_lv, v_lv) = get("sz_lv");
+    let (_, r_szcpc, _) = get("sz_cpc2000");
+    println!("\nshape checks (paper Fig. 4):");
+    println!(
+        "  SZ-LV rate {:.0} MB/s vs CPC2000 {:.0} MB/s ({}x; paper 4.4x)",
+        v_lv, v_cpc, f2(v_lv / v_cpc)
+    );
+    println!(
+        "  SZ-LV ratio {:.2} vs CPC2000 {:.2} ({:+.1}%; paper -12%)",
+        r_lv, r_cpc, (r_lv / r_cpc - 1.0) * 100.0
+    );
+    println!(
+        "  SZ-CPC2000 ratio {:.2} vs CPC2000 {:.2} ({:+.1}%; paper +13%)",
+        r_szcpc, r_cpc, (r_szcpc / r_cpc - 1.0) * 100.0
+    );
+    assert!(r_lv < r_cpc, "CPC2000 must out-compress SZ-LV on AMDF");
+    assert!(r_szcpc > r_cpc, "SZ-CPC2000 must out-compress CPC2000");
+    assert!(v_lv > v_cpc, "SZ-LV must out-run CPC2000");
+}

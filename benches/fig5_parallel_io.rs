@@ -1,0 +1,104 @@
+//! Fig. 5 — parallel I/O study on HACC: time to write initial data vs
+//! time to compress + write compressed data with ZFP, FPZIP and SZ-LV
+//! at 16..1024 processes.
+//!
+//! Single-core compression rates and ratios are MEASURED on this
+//! machine; the cluster write/scaling behaviour comes from the GPFS
+//! model (substitution per DESIGN.md §2). Paper claims to reproduce in
+//! shape: compression wins from 64 procs on; SZ-LV reduces I/O time by
+//! ~80% at 1024 procs and beats the second-best method by ~60%.
+
+use nblc::bench::{f1, f2, pct, Table, EB_REL};
+use nblc::compressors::by_name;
+use nblc::coordinator::GpfsModel;
+use nblc::data::DatasetKind;
+use nblc::util::timer::time_it;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let mb = s.total_bytes() as f64 / 1e6;
+
+    // Measure single-core rate + ratio per compressor.
+    let mut measured = Vec::new();
+    for name in ["zfp", "fpzip", "sz_lv"] {
+        let comp = by_name(name).unwrap();
+        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        measured.push((name, mb * 1e6 / secs, bundle.compression_ratio()));
+        println!(
+            "measured {name}: {:.1} MB/s, ratio {:.2}",
+            mb / secs,
+            bundle.compression_ratio()
+        );
+    }
+
+    // Per-process share of the paper-scale snapshot at P=1024.
+    let model = GpfsModel::default();
+    let bytes_per_proc: u64 = 1 << 30; // 1 GiB/process (weak scaling)
+    let mut t = Table::new(
+        "Fig. 5: write-initial vs compress+write (GPFS model, measured rates)",
+        &["Procs", "Method", "T_initial (s)", "T_comp (s)", "T_write_comp (s)", "I/O reduction"],
+    );
+    let mut csv_rows = Vec::new();
+    for procs in [16usize, 64, 128, 256, 512, 1024] {
+        for &(name, rate, ratio) in &measured {
+            let (t0, tc, twc) = model.insitu_times(bytes_per_proc, procs, rate, ratio);
+            let reduction = 1.0 - (tc + twc) / t0;
+            t.row(vec![
+                format!("{procs}"),
+                name.into(),
+                f1(t0),
+                f1(tc),
+                f2(twc),
+                pct(reduction),
+            ]);
+            csv_rows.push((procs, name, t0, tc, twc, reduction));
+        }
+    }
+    t.print();
+    t.write_csv("fig5_parallel_io").unwrap();
+
+    // Shape checks.
+    let at = |p: usize, n: &str| {
+        csv_rows
+            .iter()
+            .find(|(pp, nn, ..)| *pp == p && *nn == n)
+            .unwrap()
+    };
+    let (_, _, t0, tc, twc, red_sz) = at(1024, "sz_lv");
+    println!("\nshape checks (paper Fig. 5):");
+    println!(
+        "  SZ-LV @1024: {:.0}s direct vs {:.0}s compressed ({} reduction; paper ~80%)",
+        t0,
+        tc + twc,
+        pct(*red_sz)
+    );
+    assert!(*red_sz > 0.6, "SZ-LV must cut I/O time by well over 60% at 1024");
+    // Compression must win from 64 procs on for SZ-LV and FPZIP. Our
+    // ZFP implementation is slower than the authors' binary (53 vs
+    // ~170 MB/s single-core), which pushes its crossover to ~512 procs
+    // — recorded as deviation 5 in EXPERIMENTS.md.
+    for procs in [64usize, 128, 256, 512, 1024] {
+        for name in ["fpzip", "sz_lv"] {
+            let (_, _, t0, tc, twc, _) = at(procs, name);
+            assert!(tc + twc < *t0, "{name}@{procs}: compression must win");
+        }
+    }
+    {
+        let (_, _, t0, tc, twc, _) = at(1024, "zfp");
+        assert!(tc + twc < *t0, "zfp@1024: compression must win at full scale");
+    }
+    // SZ-LV beats the second best.
+    let best_other = ["zfp", "fpzip"]
+        .iter()
+        .map(|n| {
+            let (_, _, _, tc, twc, _) = at(1024, n);
+            tc + twc
+        })
+        .fold(f64::INFINITY, f64::min);
+    let sz_time = tc + twc;
+    println!(
+        "  SZ-LV total {sz_time:.1}s vs second-best {best_other:.1}s ({} faster; paper ~60%)",
+        pct(1.0 - sz_time / best_other)
+    );
+    assert!(sz_time < best_other, "SZ-LV must be the fastest end-to-end");
+}

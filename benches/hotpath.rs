@@ -1,0 +1,117 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets): lattice
+//! quantization, Huffman encode/decode, radix sort, Morton interleave,
+//! AVLE, DEFLATE, and the end-to-end per-field SZ-LV compress /
+//! decompress. Uses min-of-N timing (robust on a noisy 1-core box).
+
+use nblc::bench::{Table, EB_REL};
+use nblc::codec::{avle, huffman, lz77};
+use nblc::compressors::sz::Sz;
+use nblc::data::DatasetKind;
+use nblc::model::quant::{LatticeQuantizer, Predictor};
+use nblc::rindex::morton::interleave3;
+use nblc::rindex::sort::sort_perm;
+use nblc::snapshot::FieldCompressor;
+use nblc::util::rng::Pcg64;
+use nblc::util::stats::value_range;
+use nblc::util::timer::bench_min_time;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let field = &s.fields[2]; // zz: representative entropy
+    let n = field.len();
+    let mb = (n * 4) as f64 / 1e6;
+    let eb = value_range(field) * EB_REL;
+    let quantizer = LatticeQuantizer::new(eb).unwrap();
+    let codes = quantizer.quantize(field, Predictor::LastValue);
+
+    let mut t = Table::new(
+        &format!("Hot-path micro benches (field n={n}, min-of-3 timing)"),
+        &["Stage", "Throughput", "Unit"],
+    );
+
+    let tq = bench_min_time(0.5, 3, || quantizer.quantize(field, Predictor::LastValue));
+    t.row(vec!["lattice quantize (LV)".into(), format!("{:.1}", mb / tq), "MB/s".into()]);
+
+    let tr = bench_min_time(0.5, 3, || quantizer.reconstruct(&codes));
+    t.row(vec!["lattice reconstruct".into(), format!("{:.1}", mb / tr), "MB/s".into()]);
+
+    // Huffman over the real code distribution.
+    let radius = 32768i64;
+    let symbols: Vec<u32> = codes
+        .codes
+        .iter()
+        .map(|&c| (c.clamp(-radius + 1, radius - 1) + radius) as u32)
+        .collect();
+    let th = bench_min_time(0.5, 3, || huffman::encode_block(&symbols, 2 * radius as usize + 1).unwrap());
+    t.row(vec![
+        "huffman encode".into(),
+        format!("{:.1}", symbols.len() as f64 / th / 1e6),
+        "Msym/s".into(),
+    ]);
+    let block = huffman::encode_block(&symbols, 2 * radius as usize + 1).unwrap();
+    let td = bench_min_time(0.5, 3, || {
+        let mut pos = 0;
+        huffman::decode_block(&block, &mut pos).unwrap()
+    });
+    t.row(vec![
+        "huffman decode".into(),
+        format!("{:.1}", symbols.len() as f64 / td / 1e6),
+        "Msym/s".into(),
+    ]);
+
+    // Radix sort over realistic Morton keys.
+    let mut rng = Pcg64::seeded(1);
+    let keys: Vec<u64> = (0..n).map(|_| rng.below(1 << 39)).collect();
+    let ts = bench_min_time(0.5, 3, || sort_perm(&keys, 0));
+    t.row(vec![
+        "radix sort (39-bit keys)".into(),
+        format!("{:.1}", n as f64 / ts / 1e6),
+        "Mkeys/s".into(),
+    ]);
+
+    // Morton interleave.
+    let q: Vec<u32> = (0..n).map(|i| (i % (1 << 21)) as u32).collect();
+    let tm = bench_min_time(0.3, 3, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc ^= interleave3(q[i], q[(i + 7) % n], q[(i + 13) % n]);
+        }
+        acc
+    });
+    t.row(vec![
+        "morton interleave3".into(),
+        format!("{:.1}", n as f64 / tm / 1e6),
+        "Mkeys/s".into(),
+    ]);
+
+    // AVLE.
+    let deltas: Vec<u64> = (0..n).map(|i| (i % 1000) as u64).collect();
+    let ta = bench_min_time(0.3, 3, || avle::encode_all(&deltas));
+    t.row(vec![
+        "AVLE encode".into(),
+        format!("{:.1}", n as f64 / ta / 1e6),
+        "Mvals/s".into(),
+    ]);
+
+    // DEFLATE on the field bytes.
+    let mut raw = Vec::with_capacity(n * 4);
+    for &x in field.iter().take(n.min(4 << 20)) {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    let tl = bench_min_time(0.5, 2, || lz77::compress(&raw, lz77::Effort::Fast).unwrap());
+    t.row(vec![
+        "deflate (fast)".into(),
+        format!("{:.1}", raw.len() as f64 / tl / 1e6),
+        "MB/s".into(),
+    ]);
+
+    // End-to-end SZ-LV field compress / decompress.
+    let te = bench_min_time(1.0, 3, || Sz::lv().compress(field, eb).unwrap());
+    t.row(vec!["sz_lv compress (e2e)".into(), format!("{:.1}", mb / te), "MB/s".into()]);
+    let bytes = Sz::lv().compress(field, eb).unwrap();
+    let tdx = bench_min_time(1.0, 3, || Sz::lv().decompress(&bytes).unwrap());
+    t.row(vec!["sz_lv decompress (e2e)".into(), format!("{:.1}", mb / tdx), "MB/s".into()]);
+
+    t.print();
+    t.write_csv("hotpath").unwrap();
+}

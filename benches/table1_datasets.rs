@@ -1,0 +1,47 @@
+//! Table I — description of the N-body data sets used in the
+//! assessment (generator statistics at bench scale; the paper's HACC is
+//! 147.3M particles / 1.8 TB over 500 snapshots — this testbed runs the
+//! scaled single-snapshot equivalents, DESIGN.md §2).
+
+use nblc::bench::{f2, f3, Table};
+use nblc::data::DatasetKind;
+use nblc::model::quant::{LatticeQuantizer, Predictor};
+use nblc::snapshot::FIELD_NAMES;
+use nblc::util::humansize;
+use nblc::util::stats::{monotone_fraction, value_range};
+
+fn main() {
+    let mut t = Table::new(
+        "Table I: data sets (bench scale; paper: HACC 147.3M/1.8TB, AMDF 2.8M/34GB)",
+        &["Name", "# Particles", "Snapshot Size", "Box"],
+    );
+    let mut stats = Table::new(
+        "Table I-b: per-field structure (drives every later result)",
+        &["Dataset", "Field", "Range", "LV NRMSE", "Monotone frac"],
+    );
+    for kind in [DatasetKind::Hacc, DatasetKind::Amdf] {
+        let s = nblc::bench::bench_snapshot(kind);
+        t.row(vec![
+            kind.name().into(),
+            format!("{}", s.len()),
+            humansize::bytes(s.total_bytes() as u64),
+            f2(s.box_size),
+        ]);
+        for f in 0..6 {
+            stats.row(vec![
+                kind.name().into(),
+                FIELD_NAMES[f].into(),
+                f2(value_range(&s.fields[f])),
+                f3(LatticeQuantizer::prediction_nrmse(
+                    &s.fields[f],
+                    Predictor::LastValue,
+                )),
+                f3(monotone_fraction(&s.fields[f])),
+            ]);
+        }
+    }
+    t.print();
+    stats.print();
+    t.write_csv("table1_datasets").unwrap();
+    stats.write_csv("table1_fields").unwrap();
+}

@@ -1,0 +1,51 @@
+//! Table II — compression ratios of the state-of-the-art lossless and
+//! lossy compressors on both data sets under eb_rel = 1e-4.
+//!
+//! Paper values: GZIP 1.2/1.1, CPC2000 3.5/3.2, FPZIP 3.1/1.8,
+//! ISABELA 1.4/1.2, ZFP 2.3/1.9, SZ 4.6/2.7 (HACC/AMDF). The shape to
+//! reproduce: SZ best on HACC, CPC2000 best on AMDF, GZIP/ISABELA at
+//! the bottom.
+
+use nblc::bench::{f2, Table, EB_REL};
+use nblc::compressors::{by_name, table2_lineup};
+use nblc::data::DatasetKind;
+
+fn main() {
+    let paper: &[(&str, f64, f64)] = &[
+        ("gzip", 1.2, 1.1),
+        ("cpc2000", 3.5, 3.2),
+        ("fpzip", 3.1, 1.8),
+        ("isabela", 1.4, 1.2),
+        ("zfp", 2.3, 1.9),
+        ("sz", 4.6, 2.7),
+    ];
+    let hacc = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let amdf = nblc::bench::bench_snapshot(DatasetKind::Amdf);
+    let mut t = Table::new(
+        &format!(
+            "Table II: compression ratios @ eb_rel=1e-4 (HACC n={}, AMDF n={})",
+            hacc.len(),
+            amdf.len()
+        ),
+        &["Compressor", "HACC", "AMDF", "HACC(paper)", "AMDF(paper)"],
+    );
+    for name in table2_lineup() {
+        let comp = by_name(name).unwrap();
+        let rh = comp
+            .compress(&hacc, EB_REL)
+            .map(|b| b.compression_ratio())
+            .unwrap_or(f64::NAN);
+        let ra = comp
+            .compress(&amdf, EB_REL)
+            .map(|b| b.compression_ratio())
+            .unwrap_or(f64::NAN);
+        let (ph, pa) = paper
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .map(|&(_, h, a)| (h, a))
+            .unwrap();
+        t.row(vec![name.into(), f2(rh), f2(ra), f2(ph), f2(pa)]);
+    }
+    t.print();
+    t.write_csv("table2_ratios").unwrap();
+}

@@ -1,0 +1,43 @@
+//! Table IV — SZ-LV + R-index sorting with different segment sizes on
+//! AMDF @ eb_rel=1e-4 (paper: ratio 2.85 -> 3.03..3.20 as segments grow
+//! 1024 -> 16384; rate drops from 94.4 to ~35 MB/s).
+
+use nblc::bench::{f1, f2, Table, EB_REL};
+use nblc::compressors::szrx::SzRx;
+use nblc::compressors::sz::Sz;
+use nblc::data::DatasetKind;
+use nblc::snapshot::{PerField, SnapshotCompressor};
+use nblc::util::timer::time_it;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Amdf);
+    let mb = s.total_bytes() as f64 / 1e6;
+    let mut t = Table::new(
+        &format!("Table IV: SZ-LV-RX segment-size sweep on AMDF (n={})", s.len()),
+        &["Method", "Segment", "Ratio", "Rate (MB/s)"],
+    );
+    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, EB_REL).unwrap());
+    let plain_ratio = plain.compression_ratio();
+    t.row(vec!["SZ-LV".into(), "/".into(), f2(plain_ratio), f1(mb / secs)]);
+    let mut last_ratio = 0.0;
+    for seg in [1024usize, 2048, 4096, 8192, 16384] {
+        let comp = SzRx::rx(seg);
+        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        let ratio = bundle.compression_ratio();
+        t.row(vec![
+            "SZ-LV-RX".into(),
+            format!("{seg}"),
+            f2(ratio),
+            f1(mb / secs),
+        ]);
+        assert!(ratio > plain_ratio, "RX must improve over plain SZ-LV");
+        last_ratio = ratio;
+    }
+    t.print();
+    t.write_csv("table4_segsize").unwrap();
+    println!(
+        "\nshape check: RX(16384) ratio {} > SZ-LV {} (paper: 3.20 vs 2.85) OK",
+        f2(last_ratio),
+        f2(plain_ratio)
+    );
+}

@@ -1,0 +1,59 @@
+//! Table V — SZ-LV-PRX: partial-radix sorting with different numbers of
+//! ignored trailing 3-bit groups (paper: ratio stays 3.20 up to 6
+//! ignored groups while the rate climbs 35.0 -> 43.8 MB/s; at 8 groups
+//! the ratio starts to slip).
+
+use nblc::bench::{f1, f2, f3, Table, EB_REL};
+use nblc::compressors::szrx::SzRx;
+use nblc::compressors::sz::Sz;
+use nblc::data::DatasetKind;
+use nblc::model::quant::Predictor;
+use nblc::rindex::RIndexSource;
+use nblc::snapshot::{PerField, SnapshotCompressor};
+use nblc::util::timer::time_it;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Amdf);
+    let mb = s.total_bytes() as f64 / 1e6;
+    let mut t = Table::new(
+        &format!("Table V: SZ-LV-PRX ignored-bits sweep, segment 16384 (n={})", s.len()),
+        &["Method", "Segment", "Ignored 3-bit groups", "Ratio", "Rate (MB/s)"],
+    );
+    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, EB_REL).unwrap());
+    t.row(vec![
+        "SZ-LV".into(),
+        "/".into(),
+        "/".into(),
+        f2(plain.compression_ratio()),
+        f1(mb / secs),
+    ]);
+    let mut full_rx_ratio = 0.0;
+    for groups in [0u32, 2, 4, 6, 8] {
+        let comp = SzRx {
+            segment: 16384,
+            ignored_groups: groups,
+            source: RIndexSource::Coordinates,
+            predictor: Predictor::LastValue,
+        };
+        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        let ratio = bundle.compression_ratio();
+        if groups == 0 {
+            full_rx_ratio = ratio;
+        }
+        t.row(vec![
+            "SZ-LV-PRX".into(),
+            "16384".into(),
+            format!("{groups}"),
+            f3(ratio),
+            f1(mb / secs),
+        ]);
+        if groups <= 6 {
+            assert!(
+                (ratio - full_rx_ratio).abs() / full_rx_ratio < 0.03,
+                "PRX<=6 must keep the full-RX ratio (paper Table V)"
+            );
+        }
+    }
+    t.print();
+    t.write_csv("table5_prx").unwrap();
+}

@@ -1,0 +1,105 @@
+//! Table VI — compression ratios of the R-index attempts on HACC @
+//! eb_rel=1e-4 (paper: every R-index variant LOSES overall vs plain
+//! SZ-LV because `yy` is approximately sorted; velocity-based R-index
+//! helps velocities ~20% but wrecks yy/zz).
+
+use nblc::bench::{f2, Table, EB_REL};
+use nblc::compressors::cpc2000::Cpc2000;
+use nblc::compressors::sz::Sz;
+use nblc::compressors::szrx::SzRx;
+use nblc::data::DatasetKind;
+use nblc::model::quant::Predictor;
+use nblc::rindex::RIndexSource;
+use nblc::snapshot::{FieldCompressor, SnapshotCompressor, FIELD_NAMES};
+use nblc::util::stats::value_range;
+
+/// Per-variable ratios of SZ-LV over a (possibly reordered) snapshot.
+fn szlv_per_field(s: &nblc::snapshot::Snapshot) -> Vec<f64> {
+    (0..6)
+        .map(|f| {
+            let eb = value_range(&s.fields[f]) * EB_REL;
+            let bytes = Sz::lv().compress(&s.fields[f], eb).unwrap().len();
+            (s.fields[f].len() * 4) as f64 / bytes as f64
+        })
+        .collect()
+}
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let mut t = Table::new(
+        &format!("Table VI: R-index attempts on HACC @ eb_rel=1e-4 (n={})", s.len()),
+        &["Field", "CPC2000", "SZ-LV", "SZ-LV+coordR", "SZ-LV+velR", "SZ-LV+bothR"],
+    );
+
+    // CPC2000 per-variable: coords share the joint R-index stream (the
+    // paper reports the same 7.1 for xx/yy/zz); velocities are separate.
+    let cpc = Cpc2000.compress(&s, EB_REL).unwrap();
+    let coord_ratio = (s.len() * 3 * 4) as f64 / cpc.fields[0].bytes.len() as f64;
+    let cpc_per: Vec<f64> = (0..6)
+        .map(|f| {
+            if f < 3 {
+                coord_ratio
+            } else {
+                (s.len() * 4) as f64 / cpc.fields[f - 2].bytes.len() as f64
+            }
+        })
+        .collect();
+
+    let plain = szlv_per_field(&s);
+    let mut variants = Vec::new();
+    for source in [
+        RIndexSource::Coordinates,
+        RIndexSource::Velocities,
+        RIndexSource::Both,
+    ] {
+        let rx = SzRx {
+            segment: 4096,
+            ignored_groups: 0,
+            source,
+            predictor: Predictor::LastValue,
+        };
+        let perm = rx.sort_permutation(&s, EB_REL);
+        let sorted = s.permute(&perm).unwrap();
+        variants.push(szlv_per_field(&sorted));
+    }
+
+    let overall = |per: &[f64]| 6.0 / per.iter().map(|r| 1.0 / r).sum::<f64>();
+    for f in 0..6 {
+        t.row(vec![
+            FIELD_NAMES[f].into(),
+            f2(cpc_per[f]),
+            f2(plain[f]),
+            f2(variants[0][f]),
+            f2(variants[1][f]),
+            f2(variants[2][f]),
+        ]);
+    }
+    t.row(vec![
+        "Overall".into(),
+        f2(cpc.compression_ratio()),
+        f2(overall(&plain)),
+        f2(overall(&variants[0])),
+        f2(overall(&variants[1])),
+        f2(overall(&variants[2])),
+    ]);
+    t.print();
+    t.write_csv("table6_hacc_rindex").unwrap();
+
+    println!("\nshape checks (paper Table VI):");
+    let o_plain = overall(&plain);
+    for (i, name) in ["coordR", "velR", "bothR"].iter().enumerate() {
+        let o = overall(&variants[i]);
+        println!("  SZ-LV+{name}: {:.2} vs plain {:.2}", o, o_plain);
+        assert!(
+            o < o_plain,
+            "R-index must NOT pay off on HACC overall ({name})"
+        );
+    }
+    // Velocity-based R-index should still help the velocity variables.
+    let vel_gain: f64 = (3..6).map(|f| variants[1][f] / plain[f]).product::<f64>();
+    println!(
+        "  velR velocity-variable gain: {:.1}% (paper ~+20%)",
+        (vel_gain.powf(1.0 / 3.0) - 1.0) * 100.0
+    );
+    assert!(o_plain > cpc.compression_ratio(), "SZ-LV must beat CPC2000 on HACC");
+}

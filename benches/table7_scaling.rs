@@ -1,0 +1,59 @@
+//! Table VII — compression rate (GB/s) and parallel efficiency of ZFP,
+//! FPZIP and SZ-LV on HACC at 1..1024 processes (measured single-core
+//! rates + GPFS/straggler model; efficiency normalised to 16 procs as
+//! in the paper; paper shape: ~99% to 256, ~84-88% at 1024).
+
+use nblc::bench::{f2, pct, Table, EB_REL};
+use nblc::compressors::by_name;
+use nblc::coordinator::GpfsModel;
+use nblc::data::DatasetKind;
+use nblc::util::timer::time_it;
+
+fn main() {
+    let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
+    let mb = s.total_bytes() as f64 / 1e6;
+    let mut measured = Vec::new();
+    for name in ["zfp", "fpzip", "sz_lv"] {
+        let comp = by_name(name).unwrap();
+        let (_, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        measured.push((name, mb * 1e6 / secs));
+    }
+
+    let model = GpfsModel::default();
+    let bytes_per_proc: u64 = 1 << 30;
+    let mut t = Table::new(
+        "Table VII: aggregate compression rate (GB/s) and parallel efficiency",
+        &[
+            "Procs", "ZFP GB/s", "ZFP eff", "FPZIP GB/s", "FPZIP eff", "SZ-LV GB/s",
+            "SZ-LV eff",
+        ],
+    );
+    for procs in [1usize, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut cells = vec![format!("{procs}")];
+        for &(_, rate) in &measured {
+            let agg = model.aggregate_rate(bytes_per_proc, rate, procs) / 1e9;
+            let eff = model.efficiency(bytes_per_proc, rate, procs);
+            cells.push(f2(agg));
+            cells.push(if procs == 1 { "/".into() } else { pct(eff) });
+        }
+        t.row(cells);
+    }
+    t.print();
+    t.write_csv("table7_scaling").unwrap();
+
+    println!("\nshape checks (paper Table VII):");
+    for &(name, rate) in &measured {
+        let e256 = model.efficiency(bytes_per_proc, rate, 256);
+        let e1024 = model.efficiency(bytes_per_proc, rate, 1024);
+        println!("  {name}: eff(256)={} eff(1024)={}", pct(e256), pct(e1024));
+        assert!(e256 > 0.95, "{name}: near-linear speedup to 256 procs");
+        assert!(e1024 < e256 && e1024 > 0.75, "{name}: drop at 1024");
+    }
+    // SZ-LV has the highest aggregate rate at every scale.
+    let sz = measured.iter().find(|(n, _)| *n == "sz_lv").unwrap().1;
+    for &(name, rate) in &measured {
+        if name != "sz_lv" {
+            assert!(sz > rate, "SZ-LV must have the best rate (vs {name})");
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Molecular-dynamics scenario: the three compression modes on an
+//! AMDF-like nanoparticle snapshot (paper §VI / conclusion) — pick the
+//! mode that matches your I/O budget.
+//!
+//! Run: `cargo run --release --example md_modes [n_particles]`
+
+use nblc::compressors::{mode_compressor, Mode};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::util::humansize;
+use nblc::util::timer::time_it;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let eb_rel = 1e-4;
+    let snap = generate_md(&MdConfig {
+        n_particles: n,
+        ..Default::default()
+    });
+    let mb = snap.total_bytes() as f64 / 1e6;
+    println!(
+        "AMDF-like snapshot: {} atoms, {} @ eb_rel={eb_rel:.0e}\n",
+        snap.len(),
+        humansize::bytes(snap.total_bytes() as u64)
+    );
+    println!("{:<18} {:>8} {:>12} {:>14}", "mode", "ratio", "rate", "use when");
+    let advice = [
+        "simulation is compute-bound; I/O is cheap",
+        "balanced runs (default)",
+        "storage/bandwidth is the bottleneck",
+    ];
+    let mut rows = Vec::new();
+    for (mode, hint) in [
+        Mode::BestSpeed,
+        Mode::BestTradeoff,
+        Mode::BestCompression,
+    ]
+    .into_iter()
+    .zip(advice)
+    {
+        let comp = mode_compressor(mode);
+        let (bundle, secs) = time_it(|| comp.compress(&snap, eb_rel).unwrap());
+        rows.push((mode, bundle.compression_ratio(), mb / secs));
+        println!(
+            "{:<18} {:>8.2} {:>10.1} MB/s {:>14}",
+            mode.name(),
+            bundle.compression_ratio(),
+            mb / secs,
+            hint
+        );
+    }
+    // The mode contract (paper Fig. 4).
+    assert!(rows[0].2 >= rows[1].2, "best_speed must be fastest");
+    assert!(
+        rows[2].1 >= rows[0].1,
+        "best_compression must out-compress best_speed"
+    );
+    assert!(
+        rows[1].1 >= rows[0].1,
+        "best_tradeoff must out-compress best_speed"
+    );
+    println!("\nmode contract holds: speed ordering and ratio ordering as documented.");
+}

@@ -1,0 +1,57 @@
+//! Dev probe: per-section compressed sizes for the CPC2000 family plus
+//! compress timing of the three modes (used to calibrate Fig. 4 shape).
+
+use nblc::compressors::{by_name, mode_compressor, Mode};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::util::stats::entropy_bits;
+use nblc::util::timer::time_it;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let s = generate_md(&MdConfig {
+        n_particles: n,
+        ..Default::default()
+    });
+    let eb_rel = 1e-4;
+
+    for name in ["cpc2000", "sz_cpc2000", "sz_lv", "sz_lv_prx"] {
+        let c = by_name(name).unwrap();
+        let (bundle, secs) = time_it(|| c.compress(&s, eb_rel).unwrap());
+        println!(
+            "{name:12} ratio={:.3} rate={:.1} MB/s",
+            bundle.compression_ratio(),
+            (s.total_bytes() as f64 / 1e6) / secs
+        );
+        for f in &bundle.fields {
+            println!(
+                "    {:8} {:9} bytes  {:5.2} bits/val",
+                f.name,
+                f.bytes.len(),
+                f.bytes.len() as f64 * 8.0 / f.n as f64 * if f.name == "coords" { 3.0 } else { 1.0 } / if f.name == "coords" { 3.0 } else { 1.0 }
+            );
+        }
+    }
+
+    // Entropy of LV-diff codes on a velocity field for reference.
+    let eb = nblc::util::stats::value_range(&s.fields[3]) * eb_rel;
+    let q = nblc::model::quant::LatticeQuantizer::new(eb).unwrap();
+    let codes = q.quantize(&s.fields[3], nblc::model::quant::Predictor::LastValue);
+    println!(
+        "vx LV-code entropy = {:.2} bits",
+        entropy_bits(codes.codes.iter().copied())
+    );
+
+    for mode in [Mode::BestSpeed, Mode::BestTradeoff, Mode::BestCompression] {
+        let c = mode_compressor(mode);
+        let (bundle, secs) = time_it(|| c.compress(&s, eb_rel).unwrap());
+        println!(
+            "{:16} ratio={:.3} rate={:.1} MB/s",
+            mode.name(),
+            bundle.compression_ratio(),
+            (s.total_bytes() as f64 / 1e6) / secs
+        );
+    }
+}

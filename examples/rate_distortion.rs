@@ -1,0 +1,66 @@
+//! Rate-distortion explorer: sweep error bounds for a chosen method and
+//! data set and print the (bits/value, PSNR) curve — the Fig. 6 tooling
+//! exposed as a user-facing utility.
+//!
+//! Run: `cargo run --release --example rate_distortion [method] [hacc|amdf]`
+
+use nblc::compressors::by_name;
+use nblc::data::DatasetKind;
+use nblc::metrics::ratedist::{rate_distortion_curve, standard_bounds};
+use nblc::snapshot::Snapshot;
+
+fn main() {
+    let method = std::env::args().nth(1).unwrap_or_else(|| "sz_lv".into());
+    let dataset = std::env::args().nth(2).unwrap_or_else(|| "hacc".into());
+    let kind = match dataset.as_str() {
+        "amdf" => DatasetKind::Amdf,
+        _ => DatasetKind::Hacc,
+    };
+    let comp = by_name(&method).unwrap_or_else(|| {
+        eprintln!("unknown method '{method}'");
+        std::process::exit(2);
+    });
+    let n = 300_000.min(nblc::data::default_n(kind));
+    let snap = nblc::data::generate(kind, n, nblc::bench::BENCH_SEED);
+
+    // Reordering methods need the aligned reference for PSNR.
+    let perm_fn: Option<Box<dyn Fn(&Snapshot, f64) -> nblc::Result<Vec<u32>>>> =
+        match method.as_str() {
+            "cpc2000" => Some(Box::new(|s: &Snapshot, eb: f64| {
+                nblc::compressors::cpc2000::Cpc2000.sort_permutation(s, eb)
+            })),
+            "sz_cpc2000" => Some(Box::new(|s: &Snapshot, eb: f64| {
+                nblc::compressors::szcpc::SzCpc2000.sort_permutation(s, eb)
+            })),
+            "sz_lv_rx" => Some(Box::new(|s: &Snapshot, eb: f64| {
+                Ok(nblc::compressors::szrx::SzRx::rx(16384).sort_permutation(s, eb))
+            })),
+            "sz_lv_prx" => Some(Box::new(|s: &Snapshot, eb: f64| {
+                Ok(nblc::compressors::szrx::SzRx::prx().sort_permutation(s, eb))
+            })),
+            _ => None,
+        };
+
+    println!("rate-distortion: {method} on {} (n={n})\n", kind.name());
+    println!("{:>10} {:>12} {:>10} {:>8}", "eb_rel", "bits/value", "PSNR(dB)", "ratio");
+    let points = rate_distortion_curve(
+        &snap,
+        comp.as_ref(),
+        &standard_bounds(),
+        perm_fn.as_ref().map(|f| f.as_ref() as _),
+    );
+    for p in &points {
+        println!(
+            "{:>10.0e} {:>12.2} {:>10.1} {:>8.2}",
+            p.eb_rel, p.bit_rate, p.psnr, p.ratio
+        );
+    }
+    assert!(!points.is_empty(), "no achievable bounds for {method}");
+    // Monotonicity sanity: tighter bounds give higher PSNR.
+    for w in points.windows(2) {
+        assert!(
+            w[1].psnr >= w[0].psnr - 1e-6,
+            "PSNR must rise as the bound tightens"
+        );
+    }
+}

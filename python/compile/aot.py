@@ -1,0 +1,69 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text -> artifacts/.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts [--n 262144]
+Writes one .hlo.txt per graph plus `manifest.txt`:
+    name<TAB>file<TAB>n<TAB>inputs
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Elements per AOT graph execution (the Rust runtime pads the tail).
+DEFAULT_N = 1 << 18
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def graphs(n):
+    f = jax.ShapeDtypeStruct((n,), jnp.float32)
+    i = jax.ShapeDtypeStruct((n,), jnp.int32)
+    s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return {
+        "quantize_lv": (model.quantize_lv, (f, s, s), "x,x0,inv_step"),
+        "quantize_lcf": (model.quantize_lcf, (f, s, s), "x,x0,inv_step"),
+        "dequantize_lv": (model.dequantize_lv, (i, s, s), "codes,x0,step"),
+        "dequantize_lcf": (model.dequantize_lcf, (i, s, s), "codes,x0,step"),
+        "field_metrics": (model.field_metrics, (f, f), "x,y"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=DEFAULT_N)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, (fn, specs, inputs) in graphs(args.n).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as fh:
+            fh.write(text)
+        manifest.append(f"{name}\t{fname}\t{args.n}\t{inputs}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest.txt ({len(manifest)} graphs, n={args.n})")
+
+
+if __name__ == "__main__":
+    main()

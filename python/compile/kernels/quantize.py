@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: error-bounded lattice quantization for SZ-style
+compression.
+
+The SZ prediction loop is sequential (predictions consume reconstructed
+values); nblc uses the parallel lattice reformulation (DESIGN.md par.3):
+
+    k_i    = round((x_i - x0) / (2*eb))          (lattice index)
+    LV:    q_i = k_i - k_{i-1}                    (order-1 difference)
+    LCF:   q_i = k_i - 2 k_{i-1} + k_{i-2}        (order-2 difference)
+
+which is elementwise + a 1-2 element halo — a perfect Pallas shape: each
+grid step streams one block from HBM to VMEM, loads the halo elements of
+the previous block, and emits int32 codes. `interpret=True` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU
+lowering would keep the same BlockSpecs (see DESIGN.md
+par.Hardware-Adaptation for the VMEM/roofline analysis).
+
+All kernels treat scalars (anchor, 1/step, step) as (1,)-shaped operands
+so the same HLO graph serves any bound.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size per grid step: 2^15 f32 elements = 128 KiB in + 128 KiB out
+# per step, comfortably inside a TPU core's ~16 MiB VMEM with double
+# buffering; on CPU-interpret it just bounds working-set size.
+BLOCK = 1 << 15
+
+
+def _halo_spec(block):
+    """BlockSpec for a 1-element halo: element i*block - 1, clamped to 0.
+
+    For grid step 0 the clamp yields element 0 == the anchor, making the
+    first code k_0 - k_0 = 0 by construction — exactly the stream spec.
+    """
+    return pl.BlockSpec((1,), lambda i: (jnp.maximum(i * block - 1, 0),))
+
+
+def _halo2_spec(block):
+    """Halo at element i*block - 2 (clamped), for the order-2 model."""
+    return pl.BlockSpec((1,), lambda i: (jnp.maximum(i * block - 2, 0),))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _k(x, x0, inv_step):
+    """Lattice index of x (f32 math; see DESIGN.md on the f32 domain)."""
+    return jnp.round((x - x0) * inv_step).astype(jnp.int32)
+
+
+def _quantize_lv_kernel(x_ref, prev_ref, x0_ref, inv_ref, o_ref):
+    x0 = x0_ref[0]
+    inv = inv_ref[0]
+    k = _k(x_ref[...], x0, inv)
+    k_prev = _k(prev_ref[...], x0, inv)  # shape (1,)
+    km1 = jnp.concatenate([k_prev, k[:-1]])
+    o_ref[...] = k - km1
+
+
+def _quantize_lcf_kernel(x_ref, prev_ref, prev2_ref, x0_ref, inv_ref, o_ref):
+    x0 = x0_ref[0]
+    inv = inv_ref[0]
+    k = _k(x_ref[...], x0, inv)
+    k_prev = _k(prev_ref[...], x0, inv)
+    k_prev2 = _k(prev2_ref[...], x0, inv)
+    km1 = jnp.concatenate([k_prev, k[:-1]])
+    km2 = jnp.concatenate([k_prev2, km1[:-1]])
+    o_ref[...] = k - 2 * km1 + km2
+
+
+def _dequantize_kernel(k_ref, x0_ref, step_ref, o_ref):
+    o_ref[...] = (x0_ref[0] + k_ref[...].astype(jnp.float32) * step_ref[0]).astype(
+        jnp.float32
+    )
+
+
+def _metrics_kernel(x_ref, y_ref, sse_ref, maxerr_ref):
+    d = (x_ref[...] - y_ref[...]).astype(jnp.float32)
+    sse_ref[0] = jnp.sum(d * d)
+    maxerr_ref[0] = jnp.max(jnp.abs(d))
+
+
+def quantize_codes(x, x0, inv_step, order, block=BLOCK):
+    """Pallas quantize+difference. `x.shape[0]` must be a multiple of
+    `block`; `x0`/`inv_step` are (1,)-shaped f32. Returns int32 codes.
+    """
+    n = x.shape[0]
+    assert n % block == 0 and n > 0, f"n={n} not a multiple of block={block}"
+    grid = (n // block,)
+    xspec = pl.BlockSpec((block,), lambda i: (i,))
+    ospec = pl.BlockSpec((block,), lambda i: (i,))
+    if order == 1:
+        return pl.pallas_call(
+            _quantize_lv_kernel,
+            grid=grid,
+            in_specs=[xspec, _halo_spec(block), _scalar_spec(), _scalar_spec()],
+            out_specs=ospec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+            interpret=True,
+        )(x, x, x0, inv_step)
+    elif order == 2:
+        return pl.pallas_call(
+            _quantize_lcf_kernel,
+            grid=grid,
+            in_specs=[
+                xspec,
+                _halo_spec(block),
+                _halo2_spec(block),
+                _scalar_spec(),
+                _scalar_spec(),
+            ],
+            out_specs=ospec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+            interpret=True,
+        )(x, x, x, x0, inv_step)
+    raise ValueError(f"order must be 1 or 2, got {order}")
+
+
+def dequantize_values(k, x0, step, block=BLOCK):
+    """Pallas dequantization: x0 + k*step (elementwise, blocked)."""
+    n = k.shape[0]
+    assert n % block == 0 and n > 0
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(k, x0, step)
+
+
+def metrics_partials(x, y, block=BLOCK):
+    """Per-block (sse, max_abs_err) partial reductions via Pallas."""
+    n = x.shape[0]
+    assert n % block == 0 and n > 0
+    nb = n // block
+    return pl.pallas_call(
+        _metrics_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y)

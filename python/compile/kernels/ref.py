@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the L1 quantization kernels.
+
+This is the correctness reference the Pallas kernels (and, via stream
+compatibility, the Rust native quantizer) are validated against in
+pytest. Everything here is straight-line jnp with no Pallas."""
+
+import jax.numpy as jnp
+
+
+def lattice_k(x, x0, inv_step):
+    """Lattice index of every element (f32 math, matching the kernel)."""
+    return jnp.round((x - x0) * inv_step).astype(jnp.int32)
+
+
+def quantize_codes_ref(x, x0, inv_step, order):
+    """Difference codes of the lattice indices (order 1 = LV, 2 = LCF)."""
+    k = lattice_k(x, x0, inv_step)
+    if order == 1:
+        km1 = jnp.concatenate([k[:1], k[:-1]])
+        return k - km1
+    if order == 2:
+        km1 = jnp.concatenate([k[:1], k[:-1]])
+        km2 = jnp.concatenate([km1[:1], km1[:-1]])
+        return k - 2 * km1 + km2
+    raise ValueError(f"order must be 1 or 2, got {order}")
+
+
+def reconstruct_k_ref(codes, order):
+    """Invert the difference coding back to lattice indices."""
+    if order == 1:
+        return jnp.cumsum(codes)
+    if order == 2:
+        return jnp.cumsum(jnp.cumsum(codes))
+    raise ValueError(f"order must be 1 or 2, got {order}")
+
+
+def dequantize_ref(codes, x0, step, order):
+    """Reconstruct values from codes."""
+    k = reconstruct_k_ref(codes, order)
+    return (x0 + k.astype(jnp.float32) * step).astype(jnp.float32)
+
+
+def metrics_ref(x, y):
+    """(sse, max abs err) in f32."""
+    d = (x - y).astype(jnp.float32)
+    return jnp.sum(d * d), jnp.max(jnp.abs(d))

@@ -1,0 +1,61 @@
+"""L2 JAX model: the compute graphs the Rust coordinator executes via
+PJRT. Each graph composes the L1 Pallas kernels with the padding /
+prefix-sum plumbing that XLA fuses around them.
+
+Graphs (all over a fixed element count ``N``, fixed at AOT time; the
+Rust runtime feeds padded blocks):
+
+* ``quantize_lv / quantize_lcf``:  x[N], x0[1], inv_step[1] -> codes i32[N]
+* ``dequantize_lv / dequantize_lcf``: codes i32[N], x0[1], step[1] -> x[N]
+* ``field_metrics``: x[N], y[N] -> (sse[1], max_err[1])
+
+Python never runs on the request path: `aot.py` lowers these once to
+HLO text in `artifacts/`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize as kq
+
+
+def quantize_lv(x, x0, inv_step):
+    """SZ-LV quantization codes (order-1 lattice differences)."""
+    return kq.quantize_codes(x, x0, inv_step, order=1, block=_block_for(x.shape[0]))
+
+
+def quantize_lcf(x, x0, inv_step):
+    """SZ-LCF quantization codes (order-2 lattice differences)."""
+    return kq.quantize_codes(x, x0, inv_step, order=2, block=_block_for(x.shape[0]))
+
+
+def dequantize_lv(codes, x0, step):
+    """Inverse of `quantize_lv`: prefix-sum then lattice evaluation."""
+    k = jnp.cumsum(codes, dtype=jnp.int64 if jax.config.x64_enabled else jnp.int32)
+    return kq.dequantize_values(
+        k.astype(jnp.int32), x0, step, block=_block_for(codes.shape[0])
+    )
+
+
+def dequantize_lcf(codes, x0, step):
+    """Inverse of `quantize_lcf`: double prefix-sum then lattice."""
+    dtype = jnp.int64 if jax.config.x64_enabled else jnp.int32
+    k = jnp.cumsum(jnp.cumsum(codes, dtype=dtype), dtype=dtype)
+    return kq.dequantize_values(
+        k.astype(jnp.int32), x0, step, block=_block_for(codes.shape[0])
+    )
+
+
+def field_metrics(x, y):
+    """(sse, max_err) over a field pair, Pallas partials + jnp reduce."""
+    sse_p, max_p = kq.metrics_partials(x, y, block=_block_for(x.shape[0]))
+    return jnp.sum(sse_p, keepdims=True), jnp.max(max_p, keepdims=True)
+
+
+def _block_for(n):
+    """Largest kernel block that divides n (tests use small n; the AOT
+    graphs use n = a multiple of the full kernel block)."""
+    b = min(kq.BLOCK, n)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)

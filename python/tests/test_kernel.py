@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, value scales, error bounds, and predictor
+order; every case asserts bit-identical codes and bound-respecting
+reconstruction. This is the CORE correctness signal for the AOT
+artifacts the Rust hot path executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as kq
+from compile.kernels import ref
+
+
+def _scalars(x0, inv_step):
+    return (
+        jnp.asarray([x0], dtype=jnp.float32),
+        jnp.asarray([inv_step], dtype=jnp.float32),
+    )
+
+
+def _field(draw_style, n, seed):
+    rng = np.random.default_rng(seed)
+    if draw_style == 0:  # smooth walk
+        x = np.cumsum(rng.normal(0, 0.01, n)).astype(np.float32)
+    elif draw_style == 1:  # white noise
+        x = rng.uniform(-100, 100, n).astype(np.float32)
+    elif draw_style == 2:  # piecewise with jumps
+        x = np.cumsum(rng.normal(0, 0.01, n))
+        jumps = rng.random(n) < 0.02
+        x[jumps] += rng.uniform(-50, 50, jumps.sum())
+        x = x.astype(np.float32)
+    else:  # constant
+        x = np.full(n, 3.25, dtype=np.float32)
+    return x
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_blocks=st.integers(1, 6),
+    block=st.sampled_from([8, 64, 256]),
+    style=st.integers(0, 3),
+    order=st.sampled_from([1, 2]),
+    eb_exp=st.floats(-5.0, -1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_codes_match_ref(n_blocks, block, style, order, eb_exp, seed):
+    n = n_blocks * block
+    x = _field(style, n, seed)
+    rng = float(x.max() - x.min()) or 1.0
+    eb = (10.0**eb_exp) * rng
+    inv_step = 1.0 / (2.0 * eb)
+    x0, inv = _scalars(x[0], inv_step)
+    xj = jnp.asarray(x)
+
+    got = kq.quantize_codes(xj, x0, inv, order=order, block=block)
+    want = ref.quantize_codes_ref(xj, x0[0], inv[0], order=order)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+    assert int(got[0]) == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 128]),
+    style=st.integers(0, 2),
+    order=st.sampled_from([1, 2]),
+    eb_exp=st.floats(-4.0, -1.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_respects_bound(n_blocks, block, style, order, eb_exp, seed):
+    n = n_blocks * block
+    x = _field(style, n, seed)
+    rng = float(x.max() - x.min()) or 1.0
+    eb = (10.0**eb_exp) * rng
+    step = 2.0 * eb
+    x0, inv = _scalars(x[0], 1.0 / step)
+    stepj = jnp.asarray([step], dtype=jnp.float32)
+    xj = jnp.asarray(x)
+
+    codes = kq.quantize_codes(xj, x0, inv, order=order, block=block)
+    k = ref.reconstruct_k_ref(codes, order)
+    recon = kq.dequantize_values(k.astype(jnp.int32), x0, stepj, block=block)
+    err = np.abs(np.asarray(recon, dtype=np.float64) - x.astype(np.float64))
+    # f32 lattice math leaves a small slop; the Rust side verifies the
+    # exact user bound and escapes violators (DESIGN.md par.3).
+    tol = eb * (1.0 + 1e-3) + float(np.abs(x).max()) * 1e-6
+    assert err.max() <= tol, f"max err {err.max():e} vs eb {eb:e}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_metrics_match_ref(n_blocks, block, seed):
+    n = n_blocks * block
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 10, n).astype(np.float32)
+    y = (x + rng.normal(0, 0.1, n)).astype(np.float32)
+    sse_p, max_p = kq.metrics_partials(jnp.asarray(x), jnp.asarray(y), block=block)
+    sse, maxerr = float(jnp.sum(sse_p)), float(jnp.max(max_p))
+    rsse, rmax = ref.metrics_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(sse, float(rsse), rtol=1e-5)
+    np.testing.assert_allclose(maxerr, float(rmax), rtol=1e-6)
+
+
+def test_first_code_is_zero_every_block_boundary():
+    # The halo trick: block boundaries must NOT reset the prediction.
+    n, block = 64, 8
+    # Exactly-representable ramp: steps of 0.5 on a lattice of 0.25.
+    x = (0.5 * np.arange(n)).astype(np.float32)
+    x0, inv = _scalars(x[0], 1.0 / 0.25)
+    codes = np.asarray(kq.quantize_codes(jnp.asarray(x), x0, inv, order=1, block=block))
+    want = np.asarray(
+        ref.quantize_codes_ref(jnp.asarray(x), x0[0], inv[0], order=1)
+    )
+    np.testing.assert_array_equal(codes, want)
+    # A linear ramp has constant LV codes everywhere after index 0 —
+    # including at block boundaries (indices 8, 16, ...).
+    assert np.all(codes[1:] == codes[1])
+
+
+def test_order2_is_zero_on_linear_ramp():
+    n, block = 64, 8
+    x = (3.0 + 0.5 * np.arange(n)).astype(np.float32)
+    x0, inv = _scalars(x[0], 1.0 / 0.5)
+    codes = np.asarray(kq.quantize_codes(jnp.asarray(x), x0, inv, order=2, block=block))
+    # LCF predicts a linear ramp exactly: codes are 0 except index 1.
+    assert codes[0] == 0
+    assert np.all(codes[2:] == 0), codes[:10]
+
+
+def test_bad_order_raises():
+    x = jnp.zeros((8,), jnp.float32)
+    x0, inv = _scalars(0.0, 1.0)
+    with pytest.raises(ValueError):
+        kq.quantize_codes(x, x0, inv, order=3, block=8)
+
+
+def test_block_must_divide():
+    x = jnp.zeros((10,), jnp.float32)
+    x0, inv = _scalars(0.0, 1.0)
+    with pytest.raises(AssertionError):
+        kq.quantize_codes(x, x0, inv, order=1, block=8)

@@ -1,0 +1,144 @@
+//! Bench harness: paper-style table printing, CSV emission, and the
+//! shared workload setup used by every `benches/*.rs` target.
+
+use crate::data::{default_n, generate, DatasetKind};
+use crate::snapshot::Snapshot;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Standard seed used by all benches (recorded in EXPERIMENTS.md).
+pub const BENCH_SEED: u64 = 20170707;
+
+/// The paper's headline error bound.
+pub const EB_REL: f64 = 1e-4;
+
+/// Results directory (`results/`), created on demand.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from(std::env::var("NBLC_RESULTS").unwrap_or_else(|_| "results".into()));
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Benchmark snapshot for a dataset at the standard (or overridden)
+/// scale. `NBLC_BENCH_N` overrides the particle count for quick runs.
+pub fn bench_snapshot(kind: DatasetKind) -> Snapshot {
+    let n = std::env::var("NBLC_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| default_n(kind));
+    generate(kind, n, BENCH_SEED)
+}
+
+/// Markdown-ish table printer with right-aligned numeric columns.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Also write as CSV into `results/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<PathBuf> {
+        let path = results_dir().join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format helpers shared by bench targets.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+/// Three decimals.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+/// One decimal.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+/// Scientific.
+pub fn sci(v: f64) -> String {
+    format!("{v:.2e}")
+}
+/// Percent.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["x".into(), "3.14".into()]);
+        t.print();
+        let path = t.write_csv("test_demo").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("a,b\n1,2\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn wrong_arity_panics() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(3.14159), "3.14");
+        assert_eq!(f1(3.14159), "3.1");
+        assert_eq!(pct(0.885), "88.5%");
+    }
+}

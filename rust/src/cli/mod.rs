@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (offline substitute for `clap`):
+//! `nblc <subcommand> [--flag value] [--switch]` with typed getters,
+//! unknown-flag detection, and generated help text.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            out.command = cmd;
+        }
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::invalid("empty flag name"));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name}: cannot parse '{s}'"))),
+        }
+    }
+
+    /// Boolean switch (present or not).
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.get(name) == Some("true")
+    }
+
+    /// Reject flags outside the allowed set (typo protection).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().map(|s| s.as_str()).chain(self.switches.iter().map(|s| s.as_str())) {
+            if !known.contains(&k) {
+                return Err(Error::invalid(format!(
+                    "unknown flag --{k} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["gen", "--dataset", "hacc", "--n=1000", "--force"]);
+        assert_eq!(a.command, "gen");
+        assert_eq!(a.get("dataset"), Some("hacc"));
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 1000);
+        assert!(a.has("force"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["compress", "in.snap", "out.nblc", "--eb", "1e-4"]);
+        assert_eq!(a.positionals, vec!["in.snap", "out.nblc"]);
+        assert_eq!(a.get_parse("eb", 0.0f64).unwrap(), 1e-4);
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse(&["gen", "--typo", "x"]);
+        assert!(a.expect_known(&["dataset", "n"]).is_err());
+        assert!(a.expect_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn parse_errors() {
+        let a = parse(&["gen", "--n", "abc"]);
+        assert!(a.get_parse("n", 0usize).is_err());
+    }
+}

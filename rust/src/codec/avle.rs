@@ -1,0 +1,211 @@
+//! Adaptive variable-length encoding (AVLE) of unsigned integers —
+//! CPC2000's stage-4 coder (Omeltchenko et al. 2000).
+//!
+//! Each value is preceded by *status bits* that adapt the current field
+//! width `w`:
+//!
+//! * status `0`  — the value fits in `w` bits; `w` bits follow. The
+//!   width then decays by one if the value would also have fit in
+//!   `w - 2` bits (slow downward adaptation).
+//! * status `1^k 0` — the value needs `w + k` bits (unary up-step);
+//!   `w + k` bits follow and `w` jumps to that width.
+//!
+//! The per-value overhead is 1..~10 status bits, exactly the range the
+//! paper reports for CPC2000's coder.
+
+use crate::error::Result;
+use crate::util::bits::{BitReader, BitWriter};
+
+const START_WIDTH: u32 = 4;
+const MAX_WIDTH: u32 = 57;
+
+#[inline]
+fn bitlen(v: u64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+/// Streaming AVLE encoder.
+pub struct AvleEncoder {
+    width: u32,
+}
+
+impl Default for AvleEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AvleEncoder {
+    /// New encoder with the standard starting width.
+    pub fn new() -> Self {
+        AvleEncoder { width: START_WIDTH }
+    }
+
+    /// Encode one value into `w`.
+    #[inline]
+    pub fn put(&mut self, w: &mut BitWriter, v: u64) {
+        let need = bitlen(v).max(1);
+        if need <= self.width {
+            w.put_bit(false);
+            w.put64(v, self.width);
+            // Slow decay: narrow the field when values shrink.
+            if need + 2 <= self.width {
+                self.width -= 1;
+            }
+        } else {
+            let k = need - self.width;
+            for _ in 0..k {
+                w.put_bit(true);
+            }
+            w.put_bit(false);
+            w.put64(v, need);
+            self.width = need.min(MAX_WIDTH);
+        }
+    }
+}
+
+/// Streaming AVLE decoder (must see values in encode order).
+pub struct AvleDecoder {
+    width: u32,
+}
+
+impl Default for AvleDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AvleDecoder {
+    /// New decoder with the standard starting width.
+    pub fn new() -> Self {
+        AvleDecoder { width: START_WIDTH }
+    }
+
+    /// Decode one value from `r`.
+    #[inline]
+    pub fn get(&mut self, r: &mut BitReader) -> Result<u64> {
+        let mut k = 0u32;
+        while r.get_bit()? {
+            k += 1;
+        }
+        if k == 0 {
+            let v = r.get(self.width)?;
+            let need = bitlen(v).max(1);
+            if need + 2 <= self.width {
+                self.width -= 1;
+            }
+            Ok(v)
+        } else {
+            let need = (self.width + k).min(MAX_WIDTH);
+            let v = r.get(need)?;
+            self.width = need;
+            Ok(v)
+        }
+    }
+}
+
+/// Encode a whole slice; returns packed bytes.
+pub fn encode_all(values: &[u64]) -> Vec<u8> {
+    let mut w = BitWriter::with_capacity(values.len());
+    let mut enc = AvleEncoder::new();
+    for &v in values {
+        enc.put(&mut w, v);
+    }
+    w.finish()
+}
+
+/// Decode `n` values from packed bytes.
+pub fn decode_all(bytes: &[u8], n: usize) -> Result<Vec<u64>> {
+    let mut r = BitReader::new(bytes);
+    let mut dec = AvleDecoder::new();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.get(&mut r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(values: &[u64]) -> usize {
+        let bytes = encode_all(values);
+        let back = decode_all(&bytes, values.len()).unwrap();
+        assert_eq!(back, values);
+        bytes.len()
+    }
+
+    #[test]
+    fn empty_and_small() {
+        roundtrip(&[]);
+        roundtrip(&[0]);
+        roundtrip(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn zeros_are_cheap() {
+        let n = 10_000;
+        let bytes = roundtrip(&vec![0u64; n]);
+        // status 0 + width bits; width decays to 2 -> 3 bits/value steady state
+        assert!(
+            bytes * 8 <= n * 3 + 32,
+            "{} bits for {} zeros",
+            bytes * 8,
+            n
+        );
+    }
+
+    #[test]
+    fn large_values() {
+        roundtrip(&[u64::MAX >> 7, 0, u64::MAX >> 7, 1]);
+    }
+
+    #[test]
+    fn adapts_down_after_spike() {
+        // One big value then many small ones: cost should be dominated by
+        // small widths again after adaptation.
+        let mut vals = vec![1u64 << 40];
+        vals.extend(std::iter::repeat(1u64).take(10_000));
+        let bytes = roundtrip(&vals);
+        assert!(bytes * 8 < 10_000 * 6, "{} bits", bytes * 8);
+    }
+
+    #[test]
+    fn overhead_band_matches_paper() {
+        // Smooth deltas around 8 bits: overhead should be ~1-3 status
+        // bits per value (paper: 1~10).
+        let mut rng = Pcg64::seeded(4);
+        let vals: Vec<u64> = (0..50_000).map(|_| 100 + rng.below(156)).collect();
+        let bytes = roundtrip(&vals);
+        let bits_per = bytes as f64 * 8.0 / vals.len() as f64;
+        assert!(
+            (8.0..12.0).contains(&bits_per),
+            "bits/value = {bits_per:.2}"
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed_magnitudes() {
+        Prop::new("avle roundtrip").cases(64).run(|rng| {
+            let n = rng.below_usize(4000);
+            let vals: Vec<u64> = (0..n)
+                .map(|_| {
+                    let b = rng.below(50) as u32;
+                    rng.next_u64() >> (63 - b)
+                })
+                .collect();
+            let bytes = encode_all(&vals);
+            assert_eq!(decode_all(&bytes, n).unwrap(), vals);
+        });
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let vals = vec![123u64; 100];
+        let bytes = encode_all(&vals);
+        assert!(decode_all(&bytes[..bytes.len() / 2], 100).is_err());
+    }
+}

@@ -1,0 +1,548 @@
+//! Canonical Huffman coding over a bounded integer alphabet.
+//!
+//! This is SZ's entropy stage ("customized Huffman coding" in the paper):
+//! quantization codes concentrate around the zero-difference symbol, so a
+//! per-field Huffman table gets close to the stream entropy. The
+//! implementation is canonical (only code *lengths* are serialized) with
+//! a 12-bit fast decode table plus a canonical slow path for long codes.
+//!
+//! Code lengths are kept <= 32 bits by pre-scaling symbol counts so the
+//! total is <= 2^20 (max Huffman depth ~ 1.44*log2(total) + 2 < 32);
+//! the ratio impact of scaling is negligible and it avoids a separate
+//! length-limiting pass.
+
+use crate::error::{Error, Result};
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::varint::{get_uvarint, put_uvarint};
+
+const MAX_LEN: u32 = 32;
+const FAST_BITS: u32 = 12;
+const SCALE_TOTAL_LOG2: u32 = 20;
+
+/// Compute canonical code lengths for `counts` (zero counts get length 0).
+pub fn build_lengths(counts: &[u64]) -> Vec<u8> {
+    let n = counts.len();
+    let mut lengths = vec![0u8; n];
+    let used: Vec<usize> = (0..n).filter(|&i| counts[i] > 0).collect();
+    match used.len() {
+        0 => return lengths,
+        1 => {
+            lengths[used[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Pre-scale counts so total <= 2^20 (bounds max code depth < 32).
+    let total: u128 = used.iter().map(|&i| counts[i] as u128).sum();
+    let mut shift = 0u32;
+    while (total >> shift) > (1u128 << SCALE_TOTAL_LOG2) {
+        shift += 1;
+    }
+
+    // Heap-based Huffman over (weight, node).
+    #[derive(PartialEq, Eq)]
+    struct HeapItem {
+        weight: u64,
+        node: u32,
+    }
+    impl Ord for HeapItem {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // min-heap via reversed compare; tie-break on node id for
+            // deterministic trees.
+            other
+                .weight
+                .cmp(&self.weight)
+                .then(other.node.cmp(&self.node))
+        }
+    }
+    impl PartialOrd for HeapItem {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let m = used.len();
+    // nodes: 0..m are leaves (indices into `used`), m.. are internal.
+    let mut parent: Vec<u32> = vec![u32::MAX; 2 * m - 1];
+    let mut heap = std::collections::BinaryHeap::with_capacity(m);
+    for (leaf, &sym) in used.iter().enumerate() {
+        let w = (counts[sym] >> shift).max(1);
+        heap.push(HeapItem {
+            weight: w,
+            node: leaf as u32,
+        });
+    }
+    let mut next = m as u32;
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.node as usize] = next;
+        parent[b.node as usize] = next;
+        heap.push(HeapItem {
+            weight: a.weight + b.weight,
+            node: next,
+        });
+        next += 1;
+    }
+
+    // Depth of each leaf = walk to root.
+    for (leaf, &sym) in used.iter().enumerate() {
+        let mut d = 0u32;
+        let mut node = leaf as u32;
+        while parent[node as usize] != u32::MAX {
+            node = parent[node as usize];
+            d += 1;
+        }
+        debug_assert!(d <= MAX_LEN, "huffman depth {d} exceeds {MAX_LEN}");
+        lengths[sym] = d as u8;
+    }
+    lengths
+}
+
+/// Assign canonical codes from lengths. Returns `(code, len)` per symbol.
+fn assign_codes(lengths: &[u8]) -> Result<Vec<(u32, u8)>> {
+    let mut bl_count = [0u32; MAX_LEN as usize + 1];
+    for &l in lengths {
+        if l as u32 > MAX_LEN {
+            return Err(Error::corrupt("huffman length out of range"));
+        }
+        bl_count[l as usize] += 1;
+    }
+    bl_count[0] = 0;
+    // Kraft check.
+    let kraft: u64 = (1..=MAX_LEN as usize)
+        .map(|l| (bl_count[l] as u64) << (MAX_LEN as usize - l))
+        .sum();
+    let used: u32 = bl_count[1..].iter().sum();
+    if used > 0 && kraft > (1u64 << MAX_LEN) {
+        return Err(Error::corrupt("huffman lengths over-subscribed"));
+    }
+    let mut next_code = [0u32; MAX_LEN as usize + 2];
+    let mut code = 0u32;
+    for l in 1..=MAX_LEN as usize {
+        code = (code + bl_count[l - 1]) << 1;
+        next_code[l] = code;
+    }
+    let mut out = vec![(0u32, 0u8); lengths.len()];
+    for (sym, &l) in lengths.iter().enumerate() {
+        if l > 0 {
+            out[sym] = (next_code[l as usize], l);
+            next_code[l as usize] += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// Canonical Huffman encoder.
+pub struct HuffmanEncoder {
+    codes: Vec<(u32, u8)>,
+    lengths: Vec<u8>,
+}
+
+impl HuffmanEncoder {
+    /// Build from symbol counts.
+    pub fn from_counts(counts: &[u64]) -> Result<Self> {
+        let lengths = build_lengths(counts);
+        let codes = assign_codes(&lengths)?;
+        Ok(HuffmanEncoder { codes, lengths })
+    }
+
+    /// The code lengths (serialize these for the decoder).
+    pub fn lengths(&self) -> &[u8] {
+        &self.lengths
+    }
+
+    /// Encode one symbol.
+    #[inline]
+    pub fn put(&self, w: &mut BitWriter, sym: u32) {
+        let (code, len) = self.codes[sym as usize];
+        debug_assert!(len > 0, "encoding symbol {sym} with zero count");
+        w.put64(code as u64, len as u32);
+    }
+
+    /// Total encoded size in bits for the given counts (exact).
+    pub fn cost_bits(&self, counts: &[u64]) -> u64 {
+        counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| c * self.codes[s].1 as u64)
+            .sum()
+    }
+}
+
+/// Canonical Huffman decoder with a 12-bit fast table.
+pub struct HuffmanDecoder {
+    /// fast[prefix] = (symbol, len) for codes with len <= FAST_BITS; len=0 means slow path.
+    fast: Vec<(u32, u8)>,
+    /// Slow path canonical tables, indexed by length.
+    first_code: [u32; MAX_LEN as usize + 1],
+    first_sym_idx: [u32; MAX_LEN as usize + 1],
+    count: [u32; MAX_LEN as usize + 1],
+    sorted_syms: Vec<u32>,
+    max_len: u32,
+}
+
+impl HuffmanDecoder {
+    /// Build from code lengths.
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self> {
+        let codes = assign_codes(lengths)?;
+        let mut count = [0u32; MAX_LEN as usize + 1];
+        for &l in lengths {
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        let max_len = (1..=MAX_LEN as usize)
+            .rev()
+            .find(|&l| count[l] > 0)
+            .unwrap_or(0) as u32;
+
+        // Sorted symbols by (len, canonical code order == symbol order).
+        let mut first_sym_idx = [0u32; MAX_LEN as usize + 1];
+        let mut acc = 0u32;
+        for l in 1..=MAX_LEN as usize {
+            first_sym_idx[l] = acc;
+            acc += count[l];
+        }
+        let mut sorted_syms = vec![0u32; acc as usize];
+        let mut cursor = first_sym_idx;
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l > 0 {
+                sorted_syms[cursor[l as usize] as usize] = sym as u32;
+                cursor[l as usize] += 1;
+            }
+        }
+        let mut first_code = [0u32; MAX_LEN as usize + 1];
+        {
+            let mut code = 0u32;
+            let mut bl_count = [0u32; MAX_LEN as usize + 1];
+            for &l in lengths {
+                bl_count[l as usize] += 1;
+            }
+            bl_count[0] = 0;
+            for l in 1..=MAX_LEN as usize {
+                code = (code + bl_count[l - 1]) << 1;
+                first_code[l] = code;
+            }
+        }
+
+        // Fast table.
+        let mut fast = vec![(0u32, 0u8); 1 << FAST_BITS];
+        for (sym, &(code, len)) in codes.iter().enumerate() {
+            if len == 0 || len as u32 > FAST_BITS {
+                continue;
+            }
+            let shift = FAST_BITS - len as u32;
+            let base = code << shift;
+            for fill in 0..(1u32 << shift) {
+                fast[(base | fill) as usize] = (sym as u32, len);
+            }
+        }
+        Ok(HuffmanDecoder {
+            fast,
+            first_code,
+            first_sym_idx,
+            count,
+            sorted_syms,
+            max_len,
+        })
+    }
+
+    /// Decode one symbol.
+    #[inline]
+    pub fn get(&self, r: &mut BitReader) -> Result<u32> {
+        let prefix = r.peek_zeropad(FAST_BITS);
+        let (sym, len) = self.fast[prefix as usize];
+        if len > 0 {
+            r.consume(len as u32)?;
+            return Ok(sym);
+        }
+        // Slow canonical path: extend bit by bit beyond FAST_BITS.
+        let mut code = 0u32;
+        for _ in 0..FAST_BITS {
+            code = (code << 1) | r.get(1)? as u32;
+        }
+        let mut len = FAST_BITS;
+        loop {
+            // Invariant: `code` holds the first `len` bits.
+            if len > self.max_len {
+                return Err(Error::corrupt("invalid huffman code"));
+            }
+            let l = len as usize;
+            if self.count[l] > 0 {
+                let offset = code.wrapping_sub(self.first_code[l]);
+                if offset < self.count[l] {
+                    return Ok(self.sorted_syms[(self.first_sym_idx[l] + offset) as usize]);
+                }
+            }
+            code = (code << 1) | r.get(1)? as u32;
+            len += 1;
+        }
+    }
+}
+
+/// Serialize code lengths compactly: varint alphabet size, then tokens —
+/// `0xFF` + varint means a run of zero lengths, any other byte is a
+/// literal length.
+pub fn serialize_lengths(lengths: &[u8], out: &mut Vec<u8>) {
+    put_uvarint(out, lengths.len() as u64);
+    let mut i = 0;
+    while i < lengths.len() {
+        if lengths[i] == 0 {
+            let start = i;
+            while i < lengths.len() && lengths[i] == 0 {
+                i += 1;
+            }
+            out.push(0xFF);
+            put_uvarint(out, (i - start) as u64);
+        } else {
+            out.push(lengths[i]);
+            i += 1;
+        }
+    }
+}
+
+/// Inverse of [`serialize_lengths`].
+pub fn deserialize_lengths(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
+    let n = get_uvarint(buf, pos)? as usize;
+    if n > (1 << 28) {
+        return Err(Error::corrupt("huffman alphabet implausibly large"));
+    }
+    let mut lengths = Vec::with_capacity(n);
+    while lengths.len() < n {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("huffman table truncated"))?;
+        *pos += 1;
+        if b == 0xFF {
+            let run = get_uvarint(buf, pos)? as usize;
+            if lengths.len() + run > n {
+                return Err(Error::corrupt("huffman zero-run overflows alphabet"));
+            }
+            lengths.resize(lengths.len() + run, 0);
+        } else {
+            if b as u32 > MAX_LEN {
+                return Err(Error::corrupt("huffman length > 32"));
+            }
+            lengths.push(b);
+        }
+    }
+    Ok(lengths)
+}
+
+/// Convenience: Huffman-encode a symbol stream into `(table bytes, payload bytes)`.
+pub fn encode_block(symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
+    let mut counts = vec![0u64; alphabet];
+    for &s in symbols {
+        counts[s as usize] += 1;
+    }
+    let enc = HuffmanEncoder::from_counts(&counts)?;
+    let mut out = Vec::new();
+    serialize_lengths(enc.lengths(), &mut out);
+    put_uvarint(&mut out, symbols.len() as u64);
+    // Single-distinct-symbol streams (e.g. constant fields) need no
+    // payload at all: the decoder reconstructs them from the table.
+    if counts.iter().filter(|&&c| c > 0).count() <= 1 {
+        put_uvarint(&mut out, 0);
+        return Ok(out);
+    }
+    let mut w = BitWriter::with_capacity(symbols.len() / 2);
+    for &s in symbols {
+        enc.put(&mut w, s);
+    }
+    let payload = w.finish();
+    put_uvarint(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Inverse of [`encode_block`]; advances `pos`.
+pub fn decode_block(buf: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
+    let lengths = deserialize_lengths(buf, pos)?;
+    let n = get_uvarint(buf, pos)? as usize;
+    let payload_len = get_uvarint(buf, pos)? as usize;
+    // Single-symbol fast path (see encode_block).
+    let used: Vec<u32> = lengths
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l > 0)
+        .map(|(s, _)| s as u32)
+        .collect();
+    if payload_len == 0 {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if used.len() == 1 {
+            return Ok(vec![used[0]; n]);
+        }
+        return Err(Error::corrupt("huffman empty payload with multi-symbol table"));
+    }
+    let dec = HuffmanDecoder::from_lengths(&lengths)?;
+    let end = *pos + payload_len;
+    if end > buf.len() {
+        return Err(Error::corrupt("huffman payload truncated"));
+    }
+    let mut r = BitReader::new(&buf[*pos..end]);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.get(&mut r)?);
+    }
+    *pos = end;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::entropy_bits;
+
+    fn roundtrip(symbols: &[u32], alphabet: usize) {
+        let bytes = encode_block(symbols, alphabet).unwrap();
+        let mut pos = 0;
+        let back = decode_block(&bytes, &mut pos).unwrap();
+        assert_eq!(back, symbols);
+        assert_eq!(pos, bytes.len());
+    }
+
+    #[test]
+    fn empty_stream() {
+        roundtrip(&[], 16);
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        roundtrip(&vec![7u32; 1000], 16);
+        // ~1 bit per symbol + table
+        let bytes = encode_block(&vec![7u32; 1000], 16).unwrap();
+        assert!(bytes.len() < 1000 / 8 + 32);
+    }
+
+    #[test]
+    fn two_symbols() {
+        let syms: Vec<u32> = (0..100).map(|i| i % 2).collect();
+        roundtrip(&syms, 4);
+    }
+
+    #[test]
+    fn skewed_distribution_near_entropy() {
+        let mut rng = Pcg64::seeded(42);
+        // Geometric-ish distribution over 64 symbols.
+        let syms: Vec<u32> = (0..100_000)
+            .map(|_| {
+                let mut s = 0u32;
+                while rng.next_f64() < 0.5 && s < 63 {
+                    s += 1;
+                }
+                s
+            })
+            .collect();
+        let h = entropy_bits(syms.iter().map(|&s| s as i64));
+        let bytes = encode_block(&syms, 64).unwrap();
+        let bits_per_sym = bytes.len() as f64 * 8.0 / syms.len() as f64;
+        assert!(
+            bits_per_sym < h + 0.2,
+            "bits/sym {bits_per_sym:.3} vs entropy {h:.3}"
+        );
+    }
+
+    #[test]
+    fn large_alphabet_sparse_use() {
+        // 65537-symbol alphabet (SZ default) with few used symbols.
+        let mut rng = Pcg64::seeded(7);
+        let used: Vec<u32> = vec![0, 1, 32768, 32769, 65000, 65536];
+        let syms: Vec<u32> = (0..10_000)
+            .map(|_| used[rng.below_usize(used.len())])
+            .collect();
+        roundtrip(&syms, 65537);
+    }
+
+    #[test]
+    fn uniform_large_alphabet() {
+        let mut rng = Pcg64::seeded(8);
+        let syms: Vec<u32> = (0..50_000).map(|_| rng.below(4096) as u32).collect();
+        roundtrip(&syms, 4096);
+        let bytes = encode_block(&syms, 4096).unwrap();
+        let bits_per_sym = bytes.len() as f64 * 8.0 / syms.len() as f64;
+        assert!(bits_per_sym < 12.7, "bits/sym={bits_per_sym}");
+    }
+
+    #[test]
+    fn lengths_serialization_roundtrip() {
+        let mut lengths = vec![0u8; 1000];
+        lengths[3] = 2;
+        lengths[500] = 7;
+        lengths[999] = 2;
+        lengths[42] = 1;
+        let mut buf = Vec::new();
+        serialize_lengths(&lengths, &mut buf);
+        let mut pos = 0;
+        assert_eq!(deserialize_lengths(&buf, &mut pos).unwrap(), lengths);
+    }
+
+    #[test]
+    fn corrupt_table_rejected() {
+        // Over-subscribed lengths (three 1-bit codes) must be rejected.
+        let lengths = vec![1u8, 1, 1];
+        assert!(HuffmanDecoder::from_lengths(&lengths).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let syms: Vec<u32> = (0..1000u32).map(|i| i % 50).collect();
+        let bytes = encode_block(&syms, 50).unwrap();
+        let mut pos = 0;
+        assert!(decode_block(&bytes[..bytes.len() - 8], &mut pos).is_err());
+    }
+
+    #[test]
+    fn prop_random_streams_roundtrip() {
+        Prop::new("huffman roundtrip").cases(48).run(|rng| {
+            let alphabet = 2 + rng.below_usize(2000);
+            let n = rng.below_usize(3000);
+            // Mixture of skew levels.
+            let hot = rng.below_usize(alphabet) as u32;
+            let syms: Vec<u32> = (0..n)
+                .map(|_| {
+                    if rng.next_f64() < 0.7 {
+                        hot
+                    } else {
+                        rng.below_usize(alphabet) as u32
+                    }
+                })
+                .collect();
+            let bytes = encode_block(&syms, alphabet).unwrap();
+            let mut pos = 0;
+            let back = decode_block(&bytes, &mut pos).unwrap();
+            assert_eq!(back, syms);
+        });
+    }
+
+    #[test]
+    fn deep_tree_from_fibonacci_weights() {
+        // Fibonacci-like counts create maximal-depth trees; verify the
+        // pre-scaling keeps lengths <= 32 and decode works.
+        let mut counts = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for i in 0..40 {
+            counts[i] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lengths = build_lengths(&counts);
+        assert!(lengths.iter().all(|&l| l as u32 <= MAX_LEN));
+        let enc = HuffmanEncoder::from_counts(&counts).unwrap();
+        let dec = HuffmanDecoder::from_lengths(enc.lengths()).unwrap();
+        let mut w = BitWriter::new();
+        for s in 0..40u32 {
+            enc.put(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for s in 0..40u32 {
+            assert_eq!(dec.get(&mut r).unwrap(), s);
+        }
+    }
+}

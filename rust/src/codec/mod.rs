@@ -1,0 +1,17 @@
+//! Entropy-coding and transform substrates, all implemented from scratch:
+//!
+//! * [`huffman`] — canonical Huffman over a bounded integer alphabet
+//!   (SZ's entropy stage).
+//! * [`lz77`] — DEFLATE-style LZ77 + Huffman lossless codec (the GZIP
+//!   baseline and SZ's optional lossless backend).
+//! * [`avle`] — CPC2000's adaptive variable-length integer coder with
+//!   status bits.
+//! * [`rangecoder`] — adaptive range coder (FPZIP's leading-bit entropy
+//!   stage).
+//! * [`bitplane`] — ZFP-style negabinary bit-plane coder for 1D blocks.
+
+pub mod huffman;
+pub mod lz77;
+pub mod avle;
+pub mod rangecoder;
+pub mod bitplane;

@@ -1,0 +1,285 @@
+//! Adaptive range coder (carry-less, Subbotin-style) with a frequency
+//! model for small alphabets. FPZIP's entropy stage: it arithmetically
+//! codes the *leading-bit group sizes* of prediction residuals while
+//! leaving the residual payload bits raw — exactly the split the paper
+//! describes for FPZIP.
+
+use crate::error::{Error, Result};
+
+const TOP: u32 = 1 << 24;
+const BOT: u32 = 1 << 16;
+const MAX_TOTAL: u32 = BOT;
+
+/// Adaptive frequency model over a small alphabet (<= 64 symbols).
+#[derive(Clone)]
+pub struct AdaptiveModel {
+    freq: Vec<u32>,
+    total: u32,
+    inc: u32,
+}
+
+impl AdaptiveModel {
+    /// New model with uniform initial frequencies.
+    pub fn new(alphabet: usize) -> Self {
+        assert!(alphabet >= 1 && alphabet <= 256);
+        AdaptiveModel {
+            freq: vec![1; alphabet],
+            total: alphabet as u32,
+            inc: 32,
+        }
+    }
+
+    #[inline]
+    fn cumfreq(&self, sym: usize) -> (u32, u32) {
+        let mut lo = 0u32;
+        for &f in &self.freq[..sym] {
+            lo += f;
+        }
+        (lo, self.freq[sym])
+    }
+
+    #[inline]
+    fn update(&mut self, sym: usize) {
+        self.freq[sym] += self.inc;
+        self.total += self.inc;
+        if self.total >= MAX_TOTAL {
+            let mut total = 0;
+            for f in &mut self.freq {
+                *f = (*f >> 1).max(1);
+                total += *f;
+            }
+            self.total = total;
+        }
+    }
+
+    #[inline]
+    fn find(&self, scaled: u32) -> (usize, u32, u32) {
+        let mut lo = 0u32;
+        for (s, &f) in self.freq.iter().enumerate() {
+            if scaled < lo + f {
+                return (s, lo, f);
+            }
+            lo += f;
+        }
+        let last = self.freq.len() - 1;
+        (last, lo - self.freq[last], self.freq[last])
+    }
+}
+
+/// Range encoder writing to an internal byte buffer.
+pub struct RangeEncoder {
+    low: u64,
+    range: u32,
+    out: Vec<u8>,
+}
+
+impl Default for RangeEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RangeEncoder {
+    /// New encoder.
+    pub fn new() -> Self {
+        RangeEncoder {
+            low: 0,
+            range: u32::MAX,
+            out: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        while (self.low ^ (self.low + self.range as u64)) < TOP as u64
+            || (self.range < BOT && {
+                self.range = (!self.low as u32) & (BOT - 1) | 1;
+                true
+            })
+        {
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & 0xFFFF_FFFF;
+            self.range = self.range.wrapping_shl(8);
+            if self.range == 0 {
+                self.range = u32::MAX;
+            }
+        }
+    }
+
+    /// Encode `sym` under `model`, updating the model.
+    pub fn encode(&mut self, model: &mut AdaptiveModel, sym: usize) {
+        let (cum, freq) = model.cumfreq(sym);
+        let r = self.range / model.total;
+        self.low += (r * cum) as u64;
+        self.range = r * freq;
+        self.normalize();
+        model.update(sym);
+    }
+
+    /// Flush and return the coded bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..4 {
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & 0xFFFF_FFFF;
+        }
+        self.out
+    }
+}
+
+/// Range decoder over a byte slice.
+pub struct RangeDecoder<'a> {
+    low: u64,
+    range: u32,
+    code: u32,
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    /// New decoder.
+    pub fn new(data: &'a [u8]) -> Result<Self> {
+        if data.len() < 4 {
+            return Err(Error::corrupt("range coder stream too short"));
+        }
+        let mut code = 0u32;
+        for i in 0..4 {
+            code = (code << 8) | data[i] as u32;
+        }
+        Ok(RangeDecoder {
+            low: 0,
+            range: u32::MAX,
+            code,
+            data,
+            pos: 4,
+        })
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.data.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        while (self.low ^ (self.low + self.range as u64)) < TOP as u64
+            || (self.range < BOT && {
+                self.range = (!self.low as u32) & (BOT - 1) | 1;
+                true
+            })
+        {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.low = (self.low << 8) & 0xFFFF_FFFF;
+            self.range = self.range.wrapping_shl(8);
+            if self.range == 0 {
+                self.range = u32::MAX;
+            }
+        }
+    }
+
+    /// Decode one symbol under `model`, updating the model.
+    pub fn decode(&mut self, model: &mut AdaptiveModel) -> Result<usize> {
+        let r = self.range / model.total;
+        let scaled = ((self.code.wrapping_sub(self.low as u32)) / r).min(model.total - 1);
+        let (sym, cum, freq) = model.find(scaled);
+        self.low += (r * cum) as u64;
+        self.range = r * freq;
+        self.normalize();
+        model.update(sym);
+        Ok(sym)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::entropy_bits;
+
+    fn roundtrip(symbols: &[usize], alphabet: usize) -> usize {
+        let mut enc = RangeEncoder::new();
+        let mut m = AdaptiveModel::new(alphabet);
+        for &s in symbols {
+            enc.encode(&mut m, s);
+        }
+        let bytes = enc.finish();
+        let mut dec = RangeDecoder::new(&bytes).unwrap();
+        let mut m2 = AdaptiveModel::new(alphabet);
+        for &s in symbols {
+            assert_eq!(dec.decode(&mut m2).unwrap(), s);
+        }
+        bytes.len()
+    }
+
+    #[test]
+    fn empty_and_single() {
+        roundtrip(&[], 8);
+        roundtrip(&[3], 8);
+    }
+
+    #[test]
+    fn constant_stream_near_zero_bits() {
+        let n = 20_000;
+        let bytes = roundtrip(&vec![5usize; n], 34);
+        assert!(bytes < n / 50, "{} bytes for {} constant symbols", bytes, n);
+    }
+
+    #[test]
+    fn skewed_close_to_entropy() {
+        let mut rng = Pcg64::seeded(3);
+        let syms: Vec<usize> = (0..60_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.6 {
+                    10
+                } else if r < 0.85 {
+                    11
+                } else if r < 0.95 {
+                    9
+                } else {
+                    rng.below_usize(34)
+                }
+            })
+            .collect();
+        let bytes = roundtrip(&syms, 34);
+        let h = entropy_bits(syms.iter().map(|&s| s as i64));
+        let bps = bytes as f64 * 8.0 / syms.len() as f64;
+        assert!(bps < h + 0.15, "bps={bps:.3} entropy={h:.3}");
+    }
+
+    #[test]
+    fn uniform_alphabet() {
+        let mut rng = Pcg64::seeded(4);
+        let syms: Vec<usize> = (0..30_000).map(|_| rng.below_usize(34)).collect();
+        let bytes = roundtrip(&syms, 34);
+        let bps = bytes as f64 * 8.0 / syms.len() as f64;
+        assert!(bps < 5.25, "bps={bps}");
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        Prop::new("range coder roundtrip").cases(48).run(|rng| {
+            let alphabet = 2 + rng.below_usize(63);
+            let n = rng.below_usize(5000);
+            let syms: Vec<usize> = (0..n).map(|_| rng.below_usize(alphabet)).collect();
+            let mut enc = RangeEncoder::new();
+            let mut m = AdaptiveModel::new(alphabet);
+            for &s in &syms {
+                enc.encode(&mut m, s);
+            }
+            let bytes = enc.finish();
+            let mut dec = RangeDecoder::new(&bytes).unwrap();
+            let mut m2 = AdaptiveModel::new(alphabet);
+            for &s in &syms {
+                assert_eq!(dec.decode(&mut m2).unwrap(), s);
+            }
+        });
+    }
+
+    #[test]
+    fn short_stream_rejected() {
+        assert!(RangeDecoder::new(&[1, 2]).is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! CPC2000 — Omeltchenko et al. (2000), "Scalable I/O of large-scale
+//! molecular dynamics simulations: a data-compression algorithm" — the
+//! single-snapshot particle compressor the paper reimplements and
+//! compares against (§II, §V-B).
+//!
+//! Four stages:
+//! 1. convert floats to integers by dividing by the user error bound
+//!    (uniform quantization; bin centers reconstruct within `eb`);
+//! 2. build the R-index by bit-interleaving the quantized coordinates
+//!    (zigzag space-filling curve / oct-tree order);
+//! 3. radix-sort particles by R-index and difference adjacent indices;
+//! 4. adaptive variable-length encoding (status bits) of the deltas and
+//!    of the quantized velocity values.
+//!
+//! No index array is stored: particle order is free, so decompression
+//! returns the particles in R-index order ([`SnapshotCompressor::reorders`]).
+
+use crate::codec::avle::{AvleDecoder, AvleEncoder};
+use crate::error::{Error, Result};
+use crate::rindex::morton::{deinterleave3, interleave3};
+use crate::rindex::sort::sort_perm;
+use crate::snapshot::{
+    CompressedField, CompressedSnapshot, Snapshot, SnapshotCompressor,
+};
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::varint::{get_uvarint, put_uvarint};
+
+const MAGIC: u8 = b'C';
+
+/// CPC2000 snapshot compressor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cpc2000;
+
+/// Per-coordinate quantization grid: `value = min + (q + 0.5) * width`.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Grid {
+    pub min: f64,
+    pub width: f64,
+    pub bits: u32,
+}
+
+impl Grid {
+    /// Build a grid for one field under an absolute bound (bin width
+    /// `<= 2 eb`).
+    pub fn for_field(xs: &[f32], eb_abs: f64) -> Result<Grid> {
+        if !(eb_abs > 0.0) {
+            return Err(Error::invalid("cpc2000 requires positive bounds"));
+        }
+        let (lo, hi) = crate::util::stats::min_max(xs);
+        let range = (hi - lo) as f64;
+        if xs.is_empty() || range <= 0.0 {
+            // Constant (or empty) field: q = 0 everywhere and the center
+            // offset of half a denormal width vanishes in f64 -> exact.
+            return Ok(Grid {
+                min: if xs.is_empty() { 0.0 } else { lo as f64 },
+                width: f64::MIN_POSITIVE,
+                bits: 1,
+            });
+        }
+        // Bin-center reconstruction is exact in f64 but rounds once to
+        // f32, so shrink the target bound by half an ULP at the largest
+        // magnitude present.
+        let max_abs = (lo.abs().max(hi.abs())) as f64;
+        let eb_eff = eb_abs - max_abs * (f32::EPSILON as f64) * 0.5;
+        if eb_eff <= 0.0 {
+            return Err(Error::invalid(
+                "error bound below f32 precision for cpc2000 grid",
+            ));
+        }
+        let bits = crate::rindex::morton::bits_for_step(range, 2.0 * eb_eff);
+        let levels = (1u64 << bits) as f64;
+        let width = if range > 0.0 { range / levels } else { 2.0 * eb_eff };
+        if range > 0.0 && width > 2.0 * eb_eff {
+            return Err(Error::invalid(format!(
+                "error bound too small for 21-bit morton grid (range {range:.3e}, eb {eb_abs:.3e})"
+            )));
+        }
+        Ok(Grid {
+            min: lo as f64,
+            width,
+            bits,
+        })
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let max_q = (1u64 << self.bits) - 1;
+        let q = ((x as f64 - self.min) / self.width) as i64;
+        q.clamp(0, max_q as i64) as u32
+    }
+
+    #[inline]
+    pub fn center(&self, q: u32) -> f32 {
+        (self.min + (q as f64 + 0.5) * self.width) as f32
+    }
+}
+
+/// Encode the coordinate section: R-index deltas, AVLE-coded.
+/// Returns `(bytes, perm)` — the sort permutation is also applied by the
+/// caller to the velocity fields.
+pub(crate) fn encode_coords(
+    coords: [&[f32]; 3],
+    ebs: [f64; 3],
+) -> Result<(Vec<u8>, Vec<u32>, [Grid; 3])> {
+    let n = coords[0].len();
+    let gx = Grid::for_field(coords[0], ebs[0])?;
+    let gy = Grid::for_field(coords[1], ebs[1])?;
+    let gz = Grid::for_field(coords[2], ebs[2])?;
+    let bits = gx.bits.max(gy.bits).max(gz.bits);
+    // Re-derive grids at the common bit width (finer bins stay in bound).
+    let regrid = |g: Grid| Grid {
+        min: g.min,
+        width: g.width * (1u64 << g.bits) as f64 / (1u64 << bits) as f64,
+        bits,
+    };
+    let (gx, gy, gz) = (regrid(gx), regrid(gy), regrid(gz));
+
+    let mut keys = Vec::with_capacity(n);
+    for i in 0..n {
+        keys.push(interleave3(
+            gx.quantize(coords[0][i]),
+            gy.quantize(coords[1][i]),
+            gz.quantize(coords[2][i]),
+        ));
+    }
+    let perm = sort_perm(&keys, 0);
+
+    let mut out = Vec::with_capacity(n);
+    put_uvarint(&mut out, n as u64);
+    out.push(bits as u8);
+    for g in [&gx, &gy, &gz] {
+        out.extend_from_slice(&g.min.to_le_bytes());
+        out.extend_from_slice(&g.width.to_le_bytes());
+    }
+    let mut w = BitWriter::with_capacity(n * 2);
+    let mut enc = AvleEncoder::new();
+    let mut prev = 0u64;
+    for &p in &perm {
+        let k = keys[p as usize];
+        enc.put(&mut w, k - prev);
+        prev = k;
+    }
+    let payload = w.finish();
+    put_uvarint(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    Ok((out, perm, [gx, gy, gz]))
+}
+
+/// Decode the coordinate section back to (sorted) coordinate arrays.
+pub(crate) fn decode_coords(bytes: &[u8], pos: &mut usize) -> Result<[Vec<f32>; 3]> {
+    let n = get_uvarint(bytes, pos)? as usize;
+    if *pos + 1 + 3 * 16 > bytes.len() {
+        return Err(Error::corrupt("cpc2000 coord header truncated"));
+    }
+    let bits = bytes[*pos] as u32;
+    *pos += 1;
+    if !(1..=21).contains(&bits) {
+        return Err(Error::corrupt("cpc2000 bits out of range"));
+    }
+    let mut grids = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let min = f64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        let width = f64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        if !width.is_finite() || width <= 0.0 {
+            return Err(Error::corrupt("cpc2000 grid width invalid"));
+        }
+        grids.push(Grid { min, width, bits });
+    }
+    let payload_len = get_uvarint(bytes, pos)? as usize;
+    if *pos + payload_len > bytes.len() {
+        return Err(Error::corrupt("cpc2000 coord payload truncated"));
+    }
+    let mut r = BitReader::new(&bytes[*pos..*pos + payload_len]);
+    *pos += payload_len;
+
+    let mut dec = AvleDecoder::new();
+    let mut out: [Vec<f32>; 3] = [
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+    ];
+    let mut key = 0u64;
+    for _ in 0..n {
+        key = key
+            .checked_add(dec.get(&mut r)?)
+            .ok_or_else(|| Error::corrupt("cpc2000 key overflow"))?;
+        let (qx, qy, qz) = deinterleave3(key);
+        out[0].push(grids[0].center(qx));
+        out[1].push(grids[1].center(qy));
+        out[2].push(grids[2].center(qz));
+    }
+    Ok(out)
+}
+
+/// Encode one velocity field (already permuted) with uniform
+/// quantization + AVLE over the quantized values.
+pub(crate) fn encode_velocity(vs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+    if !(eb_abs > 0.0) {
+        return Err(Error::invalid("cpc2000 requires positive bounds"));
+    }
+    let n = vs.len();
+    let (lo, hi) = crate::util::stats::min_max(vs);
+    let (lo, hi) = if n == 0 { (0.0, 0.0) } else { (lo as f64, hi as f64) };
+    let step = if hi <= lo {
+        // Constant/empty field: all lattice indices are 0, reconstruction
+        // is exact.
+        f64::MIN_POSITIVE
+    } else {
+        // Same half-ULP shrink as the coordinate grids (f32 rounding of
+        // the reconstructed lattice point).
+        let eb_eff = eb_abs - lo.abs().max(hi.abs()) * (f32::EPSILON as f64) * 0.5;
+        if eb_eff <= 0.0 {
+            return Err(Error::invalid(
+                "error bound below f32 precision for cpc2000 velocities",
+            ));
+        }
+        2.0 * eb_eff * crate::model::quant::EB_SAFETY
+    };
+    let mut out = Vec::with_capacity(n * 2);
+    put_uvarint(&mut out, n as u64);
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    let mut w = BitWriter::with_capacity(n * 2);
+    let mut enc = AvleEncoder::new();
+    for &v in vs {
+        let k = ((v as f64 - lo) / step).round() as u64;
+        enc.put(&mut w, k);
+    }
+    let payload = w.finish();
+    put_uvarint(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Decode one velocity field.
+pub(crate) fn decode_velocity(bytes: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let n = get_uvarint(bytes, pos)? as usize;
+    if *pos + 16 > bytes.len() {
+        return Err(Error::corrupt("cpc2000 velocity header truncated"));
+    }
+    let lo = f64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    let step = f64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    if !step.is_finite() || step <= 0.0 {
+        return Err(Error::corrupt("cpc2000 velocity step invalid"));
+    }
+    let payload_len = get_uvarint(bytes, pos)? as usize;
+    if *pos + payload_len > bytes.len() {
+        return Err(Error::corrupt("cpc2000 velocity payload truncated"));
+    }
+    let mut r = BitReader::new(&bytes[*pos..*pos + payload_len]);
+    *pos += payload_len;
+    let mut dec = AvleDecoder::new();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = dec.get(&mut r)?;
+        out.push((lo + k as f64 * step) as f32);
+    }
+    Ok(out)
+}
+
+impl Cpc2000 {
+    /// The deterministic sort permutation CPC2000 applies for a given
+    /// snapshot and bound (exposed so tests and benches can align the
+    /// original particles with the reordered reconstruction).
+    pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Result<Vec<u32>> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let (_, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        Ok(perm)
+    }
+}
+
+impl SnapshotCompressor for Cpc2000 {
+    fn name(&self) -> &'static str {
+        "cpc2000"
+    }
+
+    fn reorders(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let (coord_bytes, perm, _grids) =
+            encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        let mut header = vec![MAGIC];
+        header.extend_from_slice(&coord_bytes);
+        let mut fields = vec![CompressedField {
+            name: "coords".into(),
+            n: snap.len() * 3,
+            bytes: header,
+        }];
+        for (vi, v) in snap.velocities().iter().enumerate() {
+            let permuted: Vec<f32> = perm.iter().map(|&p| v[p as usize]).collect();
+            let bytes = encode_velocity(&permuted, ebs[3 + vi])?;
+            fields.push(CompressedField {
+                name: crate::snapshot::FIELD_NAMES[3 + vi].into(),
+                n: snap.len(),
+                bytes,
+            });
+        }
+        Ok(CompressedSnapshot {
+            compressor: self.name().into(),
+            eb_rel,
+            fields,
+            n: snap.len(),
+        })
+    }
+
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        if c.fields.len() != 4 {
+            return Err(Error::corrupt("cpc2000 bundle must have 4 sections"));
+        }
+        let cb = &c.fields[0].bytes;
+        if cb.is_empty() || cb[0] != MAGIC {
+            return Err(Error::Format {
+                expected: "CPC2000 stream".into(),
+                found: "bad magic".into(),
+            });
+        }
+        let mut pos = 1usize;
+        let [xx, yy, zz] = decode_coords(cb, &mut pos)?;
+        let mut vels: Vec<Vec<f32>> = Vec::with_capacity(3);
+        for vi in 0..3 {
+            let mut vpos = 0usize;
+            vels.push(decode_velocity(&c.fields[1 + vi].bytes, &mut vpos)?);
+        }
+        let [vx, vy, vz]: [Vec<f32>; 3] = vels.try_into().unwrap();
+        Snapshot::new("cpc2000", [xx, yy, zz, vx, vy, vz], 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::verify_bounds;
+
+    fn md(n: usize) -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn roundtrip_bound_after_permutation() {
+        let s = md(30_000);
+        let eb_rel = 1e-4;
+        let c = Cpc2000;
+        let bundle = c.compress(&s, eb_rel).unwrap();
+        let recon = c.decompress(&bundle).unwrap();
+        assert_eq!(recon.len(), s.len());
+        // Align with the deterministic sort permutation.
+        let perm = c.sort_permutation(&s, eb_rel).unwrap();
+        let sorted = s.permute(&perm).unwrap();
+        verify_bounds(&sorted, &recon, eb_rel).unwrap();
+    }
+
+    #[test]
+    fn ratio_beats_gzip_band() {
+        // Table II: CPC2000 ~3.2 on AMDF.
+        let s = md(100_000);
+        let bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let ratio = bundle.compression_ratio();
+        assert!(ratio > 2.0, "cpc2000 ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn coords_compress_much_better_than_velocities() {
+        // §V-B: "CPC2000's compression ratio is 2x higher than SZ's on
+        // the coordinate variables" — coord section beats velocities.
+        let s = md(100_000);
+        let bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let coords_ratio = (s.len() * 3 * 4) as f64 / bundle.fields[0].bytes.len() as f64;
+        let vel_bytes: usize = bundle.fields[1..].iter().map(|f| f.bytes.len()).sum();
+        let vel_ratio = (s.len() * 3 * 4) as f64 / vel_bytes as f64;
+        assert!(
+            coords_ratio > 1.5 * vel_ratio,
+            "coords {coords_ratio:.2} vs velocities {vel_ratio:.2}"
+        );
+    }
+
+    #[test]
+    fn small_snapshots() {
+        for n in [1usize, 2, 5, 63] {
+            let s = md(n.max(1));
+            let bundle = Cpc2000.compress(&s, 1e-3).unwrap();
+            let recon = Cpc2000.decompress(&bundle).unwrap();
+            assert_eq!(recon.len(), s.len());
+        }
+    }
+
+    #[test]
+    fn too_small_bound_is_clean_error() {
+        let s = md(1000);
+        // eb_rel so small the 21-bit Morton grid cannot honour it.
+        let r = Cpc2000.compress(&s, 1e-9);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn corrupt_bundle_rejected() {
+        let s = md(5000);
+        let mut bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let half = bundle.fields[0].bytes.len() / 2;
+        bundle.fields[0].bytes.truncate(half);
+        assert!(Cpc2000.decompress(&bundle).is_err());
+    }
+}

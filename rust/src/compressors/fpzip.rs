@@ -1,0 +1,300 @@
+//! FPZIP-like compressor (Lindstrom & Isenburg 2006): predictive coding
+//! over the monotonic integer representation of floats.
+//!
+//! For 1D data the Lorenzo predictor degenerates to last-value (paper
+//! §V-A). Pipeline per value:
+//!
+//! 1. map `f32` → ordered `u32` ([`crate::model::floatmap`]);
+//! 2. round away the low `32 − p` bits (`p` = retained bits — FPZIP's
+//!    precision knob; the paper uses `p = 21` for eb_rel ≈ 1e-4);
+//! 3. residual vs the previous reconstructed integer;
+//! 4. entropy-code the residual's significant-bit count with an
+//!    adaptive range coder; emit the remaining bits raw — exactly the
+//!    split the paper describes ("arithmetically encodes only the
+//!    leading-zero part ... the remainder raw bits are not compressed").
+//!
+//! Because precision is per-value (relative), the max error under a
+//! value-range-relative bound is only approximate: the paper observes
+//! 0.6e-4..2.4e-4 for eb_rel = 1e-4, i.e. FPZIP may slightly exceed the
+//! bound — reproduced here.
+
+use crate::codec::rangecoder::{AdaptiveModel, RangeDecoder, RangeEncoder};
+use crate::error::{Error, Result};
+use crate::model::floatmap::{f32_to_ord_u32, ord_u32_to_f32};
+use crate::snapshot::FieldCompressor;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::varint::{get_uvarint, put_uvarint};
+
+const MAGIC: u8 = b'F';
+
+/// FPZIP-like field compressor.
+#[derive(Clone, Copy, Debug)]
+pub struct Fpzip {
+    /// Retained bits per value (1..=32). `None` derives a conservative
+    /// precision from the absolute error bound at compress time.
+    pub retained_bits: Option<u32>,
+}
+
+impl Default for Fpzip {
+    fn default() -> Self {
+        // The paper's Table II setting for eb_rel = 1e-4.
+        Fpzip {
+            retained_bits: Some(21),
+        }
+    }
+}
+
+impl Fpzip {
+    /// Fixed-precision constructor (the paper's usage).
+    pub fn with_retained(p: u32) -> Self {
+        assert!((1..=32).contains(&p));
+        Fpzip {
+            retained_bits: Some(p),
+        }
+    }
+
+    /// Derive retained bits from an absolute bound: the ordinal-space
+    /// rounding of `s = 32 - p` bits moves a value by at most
+    /// `2^(s-1)` ULPs at the largest exponent present.
+    fn derive_p(xs: &[f32], eb_abs: f64) -> u32 {
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if max_abs == 0.0 {
+            return 8;
+        }
+        let ulp = (max_abs as f64) * f32::EPSILON as f64;
+        let mut p = 32u32;
+        while p > 2 {
+            let s = 32 - p;
+            let worst = if s == 0 { 0.0 } else { (1u64 << (s - 1)) as f64 * ulp };
+            if worst <= eb_abs {
+                break;
+            }
+            // Increasing p reduces error; here we search downward from 32.
+            break;
+        }
+        // Downward search: find smallest p with error <= eb.
+        for cand in (2..=32u32).rev() {
+            let s = 32 - cand;
+            let worst = if s == 0 { 0.0 } else { ((1u64 << s) / 2) as f64 * ulp };
+            if worst <= eb_abs {
+                p = cand;
+            } else {
+                break;
+            }
+        }
+        p
+    }
+}
+
+impl FieldCompressor for Fpzip {
+    fn name(&self) -> &'static str {
+        "fpzip"
+    }
+
+    fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+        let p = match self.retained_bits {
+            Some(p) => p,
+            None => Self::derive_p(xs, eb_abs),
+        };
+        let s = 32 - p;
+        let half = if s == 0 { 0u32 } else { 1u32 << (s - 1) };
+
+        // Header.
+        let mut out = Vec::with_capacity(xs.len());
+        out.push(MAGIC);
+        out.push(p as u8);
+        put_uvarint(&mut out, xs.len() as u64);
+
+        // Streams: range-coded group sizes + raw residual bits.
+        let mut enc = RangeEncoder::new();
+        let mut model = AdaptiveModel::new(p as usize + 2);
+        let mut raw = BitWriter::with_capacity(xs.len() * 2);
+        let mut prev = 0u32;
+        for &x in xs {
+            let u = f32_to_ord_u32(x);
+            // Round to p bits in ordinal space (saturating).
+            let q = if s == 0 { u } else { u.saturating_add(half) >> s };
+            let r = q as i64 - prev as i64;
+            let zz = ((r << 1) ^ (r >> 63)) as u64;
+            let g = 64 - zz.leading_zeros(); // significant bits of zigzag
+            debug_assert!(g <= p + 1);
+            enc.encode(&mut model, g as usize);
+            if g > 1 {
+                // MSB of zz is implicitly 1: store the low g-1 bits.
+                raw.put64(zz & ((1u64 << (g - 1)) - 1), g - 1);
+            }
+            prev = q;
+        }
+        let coded = enc.finish();
+        put_uvarint(&mut out, coded.len() as u64);
+        out.extend_from_slice(&coded);
+        let raw_bytes = raw.finish();
+        put_uvarint(&mut out, raw_bytes.len() as u64);
+        out.extend_from_slice(&raw_bytes);
+        Ok(out)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        if bytes.len() < 2 || bytes[0] != MAGIC {
+            return Err(Error::Format {
+                expected: "FPZIP stream".into(),
+                found: "bad magic".into(),
+            });
+        }
+        let p = bytes[1] as u32;
+        if !(1..=32).contains(&p) {
+            return Err(Error::corrupt("fpzip precision out of range"));
+        }
+        pos += 2;
+        let n = get_uvarint(bytes, &mut pos)? as usize;
+        let coded_len = get_uvarint(bytes, &mut pos)? as usize;
+        if pos + coded_len > bytes.len() {
+            return Err(Error::corrupt("fpzip coded section truncated"));
+        }
+        let coded = &bytes[pos..pos + coded_len];
+        pos += coded_len;
+        let raw_len = get_uvarint(bytes, &mut pos)? as usize;
+        if pos + raw_len > bytes.len() {
+            return Err(Error::corrupt("fpzip raw section truncated"));
+        }
+        let raw_sec = &bytes[pos..pos + raw_len];
+
+        let s = 32 - p;
+        let mut out = Vec::with_capacity(n);
+        if n == 0 {
+            return Ok(out);
+        }
+        let mut dec = RangeDecoder::new(coded)?;
+        let mut model = AdaptiveModel::new(p as usize + 2);
+        let mut raw = BitReader::new(raw_sec);
+        let mut prev = 0u32;
+        for _ in 0..n {
+            let g = dec.decode(&mut model)? as u32;
+            let zz = match g {
+                0 => 0u64,
+                1 => 1u64,
+                _ => {
+                    if g > p + 1 {
+                        return Err(Error::corrupt("fpzip group size invalid"));
+                    }
+                    (1u64 << (g - 1)) | raw.get(g - 1)?
+                }
+            };
+            let r = ((zz >> 1) as i64) ^ -((zz & 1) as i64);
+            let q = (prev as i64 + r) as u32;
+            prev = q;
+            let u = if s == 0 { q } else { q << s };
+            out.push(ord_u32_to_f32(u));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+    use crate::testkit::{gen_field_like, Prop};
+    use crate::util::stats::value_range;
+
+    #[test]
+    fn empty_and_tiny() {
+        let c = Fpzip::default();
+        for xs in [vec![], vec![1.5f32], vec![-3.0, 3.0]] {
+            let b = c.compress(&xs, 1e-4).unwrap();
+            let back = c.decompress(&b).unwrap();
+            assert_eq!(back.len(), xs.len());
+        }
+    }
+
+    #[test]
+    fn p32_is_lossless() {
+        let c = Fpzip::with_retained(32);
+        let xs: Vec<f32> = vec![0.0, -0.0, 1.5, -2.25, 1e20, -1e-20, 3.141592];
+        let b = c.compress(&xs, 0.0).unwrap();
+        let back = c.decompress(&b).unwrap();
+        for (&a, &r) in xs.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), r.to_bits());
+        }
+    }
+
+    #[test]
+    fn p21_error_band_matches_paper() {
+        // Paper §VI: p=21 gives max range-relative error 0.6e-4..2.4e-4.
+        let s = generate_cosmo(&CosmoConfig {
+            n_particles: 100_000,
+            ..Default::default()
+        });
+        let c = Fpzip::with_retained(21);
+        for f in 0..6 {
+            let xs = &s.fields[f];
+            let b = c.compress(xs, 0.0).unwrap();
+            let back = c.decompress(&b).unwrap();
+            let range = value_range(xs);
+            let max_rel = xs
+                .iter()
+                .zip(back.iter())
+                .map(|(&a, &r)| (a as f64 - r as f64).abs() / range)
+                .fold(0.0f64, f64::max);
+            assert!(
+                max_rel > 1e-6 && max_rel < 5e-4,
+                "field {f}: max rel err {max_rel:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn derived_precision_respects_bound() {
+        let xs: Vec<f32> = (0..20_000).map(|i| (i as f32 * 0.37).sin() * 120.0).collect();
+        let eb = 0.01;
+        let c = Fpzip { retained_bits: None };
+        let b = c.compress(&xs, eb).unwrap();
+        let back = c.decompress(&b).unwrap();
+        for (&a, &r) in xs.iter().zip(back.iter()) {
+            assert!((a as f64 - r as f64).abs() <= eb, "{a} vs {r}");
+        }
+    }
+
+    #[test]
+    fn smooth_data_compresses() {
+        let xs: Vec<f32> = (0..100_000).map(|i| (i as f32 * 1e-3).sin()).collect();
+        let c = Fpzip::with_retained(21);
+        let b = c.compress(&xs, 0.0).unwrap();
+        let ratio = (xs.len() * 4) as f64 / b.len() as f64;
+        assert!(ratio > 2.0, "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn prop_roundtrip_reconstruction_deterministic() {
+        Prop::new("fpzip roundtrip deterministic").cases(32).run(|rng| {
+            let xs = gen_field_like(rng, 0..2000);
+            let p = 8 + rng.below(25) as u32;
+            let c = Fpzip::with_retained(p);
+            let b = c.compress(&xs, 0.0).unwrap();
+            let back1 = c.decompress(&b).unwrap();
+            let back2 = c.decompress(&b).unwrap();
+            assert_eq!(back1.len(), xs.len());
+            for (a, b) in back1.iter().zip(back2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // Rel error bounded by ~2^-(p-9) of magnitude.
+            for (&a, &r) in xs.iter().zip(back1.iter()) {
+                let scale = a.abs().max(1e-3) as f64;
+                let rel = (a as f64 - r as f64).abs() / scale;
+                assert!(rel < 2f64.powi(-(p as i32) + 10), "p={p} rel={rel:e}");
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let xs = vec![1.0f32; 100];
+        let c = Fpzip::default();
+        let b = c.compress(&xs, 1e-4).unwrap();
+        assert!(c.decompress(&b[..b.len() / 3]).is_err());
+        let mut bad = b.clone();
+        bad[0] = b'Z';
+        assert!(c.decompress(&bad).is_err());
+    }
+}

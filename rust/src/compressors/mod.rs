@@ -1,0 +1,82 @@
+//! All compressors, the paper's optimizations, and the registry used by
+//! the CLI / benches.
+//!
+//! Field compressors (per-1D-array, applied via [`PerField`]):
+//! [`sz::Sz`] (LCF/LV), [`fpzip::Fpzip`], [`zfp::Zfp`],
+//! [`isabela::Isabela`], [`gzip::Gzip`].
+//!
+//! Snapshot compressors (joint, may reorder particles):
+//! [`cpc2000::Cpc2000`], [`szrx::SzRx`] (RX/PRX), [`szcpc::SzCpc2000`].
+
+pub mod sz;
+pub mod gzip;
+pub mod fpzip;
+pub mod zfp;
+pub mod isabela;
+pub mod cpc2000;
+pub mod szrx;
+pub mod szcpc;
+pub mod modes;
+
+pub use modes::{mode_compressor, Mode};
+
+use crate::snapshot::{PerField, SnapshotCompressor};
+
+/// Instantiate a snapshot compressor by its table name. Recognised:
+/// `gzip, cpc2000, fpzip, isabela, zfp, sz (alias sz_lcf), sz_lv,
+/// sz_lv_rx, sz_lv_prx, sz_cpc2000`.
+pub fn by_name(name: &str) -> Option<Box<dyn SnapshotCompressor>> {
+    Some(match name {
+        "gzip" => Box::new(PerField(gzip::Gzip)),
+        "cpc2000" => Box::new(cpc2000::Cpc2000),
+        "fpzip" => Box::new(PerField(fpzip::Fpzip::default())),
+        "isabela" => Box::new(PerField(isabela::Isabela)),
+        "zfp" => Box::new(PerField(zfp::Zfp)),
+        "sz" | "sz_lcf" => Box::new(PerField(sz::Sz::lcf())),
+        "sz_lv" => Box::new(PerField(sz::Sz::lv())),
+        "sz_lv_rx" => Box::new(szrx::SzRx::rx(16384)),
+        "sz_lv_prx" => Box::new(szrx::SzRx::prx()),
+        "sz_cpc2000" => Box::new(szcpc::SzCpc2000),
+        _ => return None,
+    })
+}
+
+/// The Table II lineup (state of the art before the paper's methods).
+pub fn table2_lineup() -> Vec<&'static str> {
+    vec!["gzip", "cpc2000", "fpzip", "isabela", "zfp", "sz"]
+}
+
+/// The full lineup including the paper's proposed methods.
+pub fn full_lineup() -> Vec<&'static str> {
+    vec![
+        "gzip", "cpc2000", "fpzip", "isabela", "zfp", "sz", "sz_lv", "sz_lv_rx",
+        "sz_lv_prx", "sz_cpc2000",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in full_lineup() {
+            let c = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!c.name().is_empty());
+        }
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn reorder_flags_are_correct() {
+        for (name, reorders) in [
+            ("sz_lv", false),
+            ("zfp", false),
+            ("cpc2000", true),
+            ("sz_lv_prx", true),
+            ("sz_cpc2000", true),
+        ] {
+            assert_eq!(by_name(name).unwrap().reorders(), reorders, "{name}");
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! SZ-style error-bounded compressor for 1D particle fields, with both
+//! prediction models of §V-A:
+//!
+//! * `SZ-LCF` — the original SZ: linear-curve-fitting prediction (the 1D
+//!   degeneration of SZ's multilayer model);
+//! * `SZ-LV`  — the paper's improved SZ: last-value prediction, which
+//!   is more accurate on irregular N-body fields (Table III, Fig. 1).
+//!
+//! Pipeline: lattice quantization (see [`crate::model::quant`]) →
+//! linear-scaling quantization codes with `2R` intervals → canonical
+//! Huffman coding, with out-of-range codes escaped to varints and
+//! bound-violating elements stored as exact literals ("unpredictable
+//! data" in SZ terms). Optionally the whole payload is re-compressed
+//! with the DEFLATE-style backend (SZ's gzip stage).
+
+use crate::codec::huffman;
+use crate::codec::lz77;
+use crate::error::{Error, Result};
+use crate::model::quant::{LatticeQuantizer, Predictor, QuantCodes};
+use crate::snapshot::FieldCompressor;
+use crate::util::varint::{get_ivarint, get_uvarint, put_ivarint, put_uvarint};
+
+const MAGIC: u8 = b'S';
+const VERSION: u8 = 1;
+
+/// SZ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SzConfig {
+    /// Prediction model.
+    pub predictor: Predictor,
+    /// Quantization radius R: codes in `(-R, R)` are Huffman symbols,
+    /// anything larger escapes to a varint. `2R` intervals total
+    /// (SZ 1.4's default capacity is 65536 -> R = 32768).
+    pub radius: u32,
+    /// Re-compress the payload with the DEFLATE-style lossless backend
+    /// (SZ's optional gzip stage). Off by default: the Huffman stage is
+    /// already near entropy on quantization codes, and the rate cost is
+    /// large (ablation bench `ablation_runtime`).
+    pub lossless: bool,
+}
+
+impl Default for SzConfig {
+    fn default() -> Self {
+        SzConfig {
+            predictor: Predictor::LastValue,
+            radius: 32768,
+            lossless: false,
+        }
+    }
+}
+
+/// The SZ compressor (field-level).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sz {
+    /// Configuration.
+    pub cfg: SzConfig,
+}
+
+impl Sz {
+    /// Improved SZ with last-value prediction (`SZ-LV`).
+    pub fn lv() -> Self {
+        Sz {
+            cfg: SzConfig {
+                predictor: Predictor::LastValue,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Original SZ with linear-curve-fitting prediction (`SZ-LCF`).
+    pub fn lcf() -> Self {
+        Sz {
+            cfg: SzConfig {
+                predictor: Predictor::LinearCurveFit,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Compress pre-computed quantization codes (the entry point used by
+    /// the PJRT-backed pipeline, where the L1 kernel already produced
+    /// the codes). The stream records the *effective* lattice step
+    /// (`q.eb_eff`), which is all the decoder needs.
+    pub fn compress_codes(&self, q: &QuantCodes) -> Result<Vec<u8>> {
+        let n = q.codes.len();
+        let radius = self.cfg.radius as i64;
+        let esc_sym = (2 * radius) as u32;
+        let alphabet = esc_sym as usize + 1;
+
+        // Pass 1: symbol counts + escape payload (no symbol vector —
+        // symbols are recomputed from codes during encoding).
+        let mut counts = vec![0u64; alphabet];
+        let mut escapes: Vec<u8> = Vec::new();
+        let mut n_escapes = 0u64;
+        for &c in &q.codes {
+            if c > -radius && c < radius {
+                counts[(c + radius) as usize] += 1;
+            } else {
+                counts[esc_sym as usize] += 1;
+                put_ivarint(&mut escapes, c);
+                n_escapes += 1;
+            }
+        }
+
+        // Pass 2: Huffman-encode straight from the codes (byte-format
+        // identical to `huffman::encode_block`).
+        let enc = huffman::HuffmanEncoder::from_counts(&counts)?;
+        let mut payload = Vec::with_capacity(n / 2 + 64);
+        huffman::serialize_lengths(enc.lengths(), &mut payload);
+        put_uvarint(&mut payload, n as u64);
+        if counts.iter().filter(|&&c| c > 0).count() <= 1 {
+            // Single-symbol fast path (matches decode_block).
+            put_uvarint(&mut payload, 0);
+        } else {
+            let mut w = crate::util::bits::BitWriter::with_capacity(n / 2);
+            for &c in &q.codes {
+                let sym = if c > -radius && c < radius {
+                    (c + radius) as u32
+                } else {
+                    esc_sym
+                };
+                enc.put(&mut w, sym);
+            }
+            let bits = w.finish();
+            put_uvarint(&mut payload, bits.len() as u64);
+            payload.extend_from_slice(&bits);
+        }
+        put_uvarint(&mut payload, n_escapes);
+        payload.extend_from_slice(&escapes);
+        put_uvarint(&mut payload, q.exceptions.len() as u64);
+        let mut prev_idx = 0u64;
+        for &(idx, v) in &q.exceptions {
+            put_uvarint(&mut payload, idx - prev_idx);
+            payload.extend_from_slice(&v.to_le_bytes());
+            prev_idx = idx;
+        }
+
+        let mut out = Vec::with_capacity(payload.len() + 32);
+        out.push(MAGIC);
+        out.push(VERSION);
+        out.push(q.predictor.order() as u8);
+        out.push(self.cfg.lossless as u8);
+        put_uvarint(&mut out, n as u64);
+        out.extend_from_slice(&q.eb_eff.to_le_bytes());
+        out.extend_from_slice(&q.anchor.to_le_bytes());
+        put_uvarint(&mut out, self.cfg.radius as u64);
+        if self.cfg.lossless {
+            let packed = lz77::compress(&payload, lz77::Effort::Fast)?;
+            out.extend_from_slice(&packed);
+        } else {
+            out.extend_from_slice(&payload);
+        }
+        Ok(out)
+    }
+}
+
+impl FieldCompressor for Sz {
+    fn name(&self) -> &'static str {
+        match (self.cfg.predictor, self.cfg.lossless) {
+            (Predictor::LastValue, false) => "sz_lv",
+            (Predictor::LastValue, true) => "sz_lv+gz",
+            (Predictor::LinearCurveFit, false) => "sz_lcf",
+            (Predictor::LinearCurveFit, true) => "sz_lcf+gz",
+        }
+    }
+
+    fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+        let q = LatticeQuantizer::quantize_field(eb_abs, xs, self.cfg.predictor)?;
+        self.compress_codes(&q)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, k: usize| -> Result<&[u8]> {
+            if *pos + k > bytes.len() {
+                return Err(Error::corrupt("sz stream truncated"));
+            }
+            let s = &bytes[*pos..*pos + k];
+            *pos += k;
+            Ok(s)
+        };
+        let head = take(&mut pos, 4)?;
+        if head[0] != MAGIC {
+            return Err(Error::Format {
+                expected: "SZ stream".into(),
+                found: format!("magic {:#x}", head[0]),
+            });
+        }
+        if head[1] != VERSION {
+            return Err(Error::Format {
+                expected: format!("sz v{VERSION}"),
+                found: format!("sz v{}", head[1]),
+            });
+        }
+        let predictor = match head[2] {
+            1 => Predictor::LastValue,
+            2 => Predictor::LinearCurveFit,
+            o => return Err(Error::corrupt(format!("bad predictor order {o}"))),
+        };
+        let lossless = head[3] != 0;
+        let n = get_uvarint(bytes, &mut pos)? as usize;
+        let eb_eff = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let anchor = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let radius = get_uvarint(bytes, &mut pos)? as i64;
+        if radius <= 0 || radius > (1 << 30) {
+            return Err(Error::corrupt("bad sz radius"));
+        }
+
+        let payload_owned;
+        let payload: &[u8] = if lossless {
+            payload_owned = lz77::decompress(&bytes[pos..])?;
+            &payload_owned
+        } else {
+            &bytes[pos..]
+        };
+
+        let mut ppos = 0usize;
+        let symbols = huffman::decode_block(payload, &mut ppos)?;
+        if symbols.len() != n {
+            return Err(Error::corrupt(format!(
+                "sz symbol count {} != n {}",
+                symbols.len(),
+                n
+            )));
+        }
+        let esc_sym = (2 * radius) as u32;
+        let n_escapes = get_uvarint(payload, &mut ppos)?;
+        let mut codes = Vec::with_capacity(n);
+        // First decode escapes lazily in stream order.
+        let mut esc_read = 0u64;
+        let mut esc_pos_after = ppos;
+        {
+            // Pre-scan: escapes are stored immediately after the count;
+            // decode them in order while mapping symbols.
+            for &s in &symbols {
+                if s == esc_sym {
+                    let v = get_ivarint(payload, &mut esc_pos_after)?;
+                    codes.push(v);
+                    esc_read += 1;
+                } else if s < esc_sym {
+                    codes.push(s as i64 - radius);
+                } else {
+                    return Err(Error::corrupt("sz symbol out of alphabet"));
+                }
+            }
+        }
+        if esc_read != n_escapes {
+            return Err(Error::corrupt("sz escape count mismatch"));
+        }
+        let mut ppos = esc_pos_after;
+        let n_exc = get_uvarint(payload, &mut ppos)? as usize;
+        let mut exceptions = Vec::with_capacity(n_exc);
+        let mut idx = 0u64;
+        for _ in 0..n_exc {
+            idx += get_uvarint(payload, &mut ppos)?;
+            if idx as usize >= n.max(1) {
+                return Err(Error::corrupt("sz exception index out of range"));
+            }
+            if ppos + 4 > payload.len() {
+                return Err(Error::corrupt("sz exception truncated"));
+            }
+            let v = f32::from_le_bytes(payload[ppos..ppos + 4].try_into().unwrap());
+            ppos += 4;
+            exceptions.push((idx, v));
+        }
+
+        let quantizer = LatticeQuantizer::from_eff(eb_eff)?;
+        let q = QuantCodes {
+            anchor,
+            codes,
+            exceptions,
+            predictor,
+            eb_eff,
+        };
+        Ok(quantizer.reconstruct(&q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::testkit::{gen_eb, gen_field_like, Prop};
+    use crate::util::stats::value_range;
+
+    fn roundtrip_bound(comp: &Sz, xs: &[f32], eb: f64) -> Vec<u8> {
+        let bytes = comp.compress(xs, eb).unwrap();
+        let back = comp.decompress(&bytes).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            assert!(err <= eb, "i={i} err={err:e} eb={eb:e}");
+        }
+        bytes
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        for comp in [Sz::lv(), Sz::lcf()] {
+            roundtrip_bound(&comp, &[], 1e-3);
+            roundtrip_bound(&comp, &[5.0], 1e-3);
+            roundtrip_bound(&comp, &[5.0, -5.0], 1e-3);
+        }
+    }
+
+    #[test]
+    fn constant_field_is_tiny() {
+        let xs = vec![3.25f32; 100_000];
+        let bytes = roundtrip_bound(&Sz::lv(), &xs, 1e-4);
+        assert!(bytes.len() < 200, "constant field took {} bytes", bytes.len());
+    }
+
+    #[test]
+    fn smooth_field_compresses_hard() {
+        let xs: Vec<f32> = (0..200_000).map(|i| (i as f32 * 1e-4).sin() * 10.0).collect();
+        let bytes = roundtrip_bound(&Sz::lv(), &xs, 20.0 * 1e-4);
+        let ratio = (xs.len() * 4) as f64 / bytes.len() as f64;
+        assert!(ratio > 10.0, "ratio={ratio:.2}");
+    }
+
+    #[test]
+    fn big_jumps_escape_correctly() {
+        // Values jumping by >> radius*2eb force escape varints.
+        let mut xs = Vec::new();
+        for i in 0..10_000 {
+            xs.push(if i % 2 == 0 { 0.0 } else { 1e6 });
+        }
+        roundtrip_bound(&Sz::lv(), &xs, 1e-3);
+        roundtrip_bound(&Sz::lcf(), &xs, 1e-3);
+    }
+
+    #[test]
+    fn tiny_eb_forces_exceptions_but_bound_holds() {
+        // eb below the f32 ULP of the data: everything becomes literal.
+        let xs: Vec<f32> = (0..1000).map(|i| 1000.0 + i as f32 * 0.5).collect();
+        roundtrip_bound(&Sz::lv(), &xs, 1e-9);
+    }
+
+    #[test]
+    fn lossless_backend_roundtrips() {
+        let comp = Sz {
+            cfg: SzConfig {
+                lossless: true,
+                ..Default::default()
+            },
+        };
+        let xs: Vec<f32> = (0..50_000).map(|i| (i as f32 * 0.01).cos()).collect();
+        let bytes = comp.compress(&xs, 1e-4).unwrap();
+        let back = comp.decompress(&bytes).unwrap();
+        for (&a, &b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= 1e-4);
+        }
+    }
+
+    #[test]
+    fn lv_beats_lcf_on_md_velocities() {
+        // Fig. 1's core claim on irregular fields.
+        let s = generate_md(&MdConfig {
+            n_particles: 100_000,
+            ..Default::default()
+        });
+        let eb = value_range(&s.fields[3]) * 1e-4;
+        let lv = Sz::lv().compress(&s.fields[3], eb).unwrap();
+        let lcf = Sz::lcf().compress(&s.fields[3], eb).unwrap();
+        assert!(
+            lv.len() < lcf.len(),
+            "LV {} should beat LCF {}",
+            lv.len(),
+            lcf.len()
+        );
+    }
+
+    #[test]
+    fn hacc_ratio_band() {
+        // Table II shape: SZ on HACC-like data reaches ratio > 4 overall.
+        let s = generate_cosmo(&CosmoConfig {
+            n_particles: 200_000,
+            ..Default::default()
+        });
+        let mut orig = 0usize;
+        let mut comp = 0usize;
+        for f in 0..6 {
+            let eb = value_range(&s.fields[f]) * 1e-4;
+            let bytes = roundtrip_bound(&Sz::lv(), &s.fields[f], eb);
+            orig += s.fields[f].len() * 4;
+            comp += bytes.len();
+        }
+        let ratio = orig as f64 / comp as f64;
+        assert!(ratio > 4.0, "HACC SZ-LV overall ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let xs = vec![1.0f32; 100];
+        let mut bytes = Sz::lv().compress(&xs, 1e-3).unwrap();
+        bytes[0] = b'X';
+        assert!(Sz::lv().decompress(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let xs: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        let bytes = Sz::lv().compress(&xs, 1e-3).unwrap();
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 3] {
+            assert!(Sz::lv().decompress(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_bound_holds() {
+        Prop::new("sz roundtrip bound").cases(48).run(|rng| {
+            let xs = gen_field_like(rng, 0..2500);
+            let range = value_range(&xs).max(1e-6);
+            let eb = gen_eb(rng) * range;
+            let comp = if rng.next_u64() % 2 == 0 {
+                Sz::lv()
+            } else {
+                Sz::lcf()
+            };
+            let bytes = comp.compress(&xs, eb).unwrap();
+            let back = comp.decompress(&bytes).unwrap();
+            assert_eq!(back.len(), xs.len());
+            for (&a, &b) in xs.iter().zip(back.iter()) {
+                assert!((a as f64 - b as f64).abs() <= eb);
+            }
+        });
+    }
+}

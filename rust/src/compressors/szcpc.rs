@@ -1,0 +1,148 @@
+//! SZ-CPC2000 (§V-B) — the best_compression mode: R-index sorting with
+//! CPC2000's delta/AVLE coding for the *coordinates* (where CPC2000 is
+//! ~2x better than SZ) and SZ-LV + tailored Huffman for the *velocities*
+//! (where CPC2000's status-bit coder pays 1-10 bits/value of overhead).
+//! Paper: +13% ratio and +10% rate over CPC2000 on AMDF.
+
+use crate::compressors::cpc2000::{decode_coords, decode_velocity, encode_coords};
+use crate::compressors::sz::Sz;
+use crate::error::{Error, Result};
+use crate::snapshot::{
+    CompressedField, CompressedSnapshot, FieldCompressor, Snapshot, SnapshotCompressor,
+    FIELD_NAMES,
+};
+
+const MAGIC: u8 = b'M';
+
+/// SZ-CPC2000 snapshot compressor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SzCpc2000;
+
+impl SzCpc2000 {
+    /// Deterministic sort permutation (for tests/benches).
+    pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Result<Vec<u32>> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let (_, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        Ok(perm)
+    }
+}
+
+impl SnapshotCompressor for SzCpc2000 {
+    fn name(&self) -> &'static str {
+        "sz_cpc2000"
+    }
+
+    fn reorders(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let (coord_bytes, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        let mut header = vec![MAGIC];
+        header.extend_from_slice(&coord_bytes);
+        let mut fields = vec![CompressedField {
+            name: "coords".into(),
+            n: snap.len() * 3,
+            bytes: header,
+        }];
+        let sz = Sz::lv();
+        for (vi, v) in snap.velocities().iter().enumerate() {
+            let permuted: Vec<f32> = perm.iter().map(|&p| v[p as usize]).collect();
+            let bytes = sz.compress(&permuted, ebs[3 + vi])?;
+            fields.push(CompressedField {
+                name: FIELD_NAMES[3 + vi].into(),
+                n: snap.len(),
+                bytes,
+            });
+        }
+        Ok(CompressedSnapshot {
+            compressor: self.name().into(),
+            eb_rel,
+            fields,
+            n: snap.len(),
+        })
+    }
+
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        if c.fields.len() != 4 {
+            return Err(Error::corrupt("sz_cpc2000 bundle must have 4 sections"));
+        }
+        let cb = &c.fields[0].bytes;
+        if cb.is_empty() || cb[0] != MAGIC {
+            return Err(Error::Format {
+                expected: "SZ-CPC2000 stream".into(),
+                found: "bad magic".into(),
+            });
+        }
+        let mut pos = 1usize;
+        let [xx, yy, zz] = decode_coords(cb, &mut pos)?;
+        let sz = Sz::lv();
+        let vx = sz.decompress(&c.fields[1].bytes)?;
+        let vy = sz.decompress(&c.fields[2].bytes)?;
+        let vz = sz.decompress(&c.fields[3].bytes)?;
+        Snapshot::new("sz_cpc2000", [xx, yy, zz, vx, vy, vz], 0.0)
+    }
+}
+
+/// Re-export of the CPC2000 velocity codec for the ablation bench
+/// (comparing AVLE vs SZ-LV+Huffman on identical reordered data).
+pub fn cpc_velocity_bytes(vs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+    crate::compressors::cpc2000::encode_velocity(vs, eb_abs)
+}
+
+/// Decode counterpart of [`cpc_velocity_bytes`].
+pub fn cpc_velocity_decode(bytes: &[u8]) -> Result<Vec<f32>> {
+    let mut pos = 0usize;
+    decode_velocity(bytes, &mut pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::cpc2000::Cpc2000;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::verify_bounds;
+
+    fn md(n: usize) -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn roundtrip_bound_after_permutation() {
+        let s = md(40_000);
+        let eb_rel = 1e-4;
+        let c = SzCpc2000;
+        let bundle = c.compress(&s, eb_rel).unwrap();
+        let recon = c.decompress(&bundle).unwrap();
+        let perm = c.sort_permutation(&s, eb_rel).unwrap();
+        let sorted = s.permute(&perm).unwrap();
+        verify_bounds(&sorted, &recon, eb_rel).unwrap();
+    }
+
+    #[test]
+    fn beats_cpc2000_ratio_on_md() {
+        // The paper's +13% claim (we accept any clear improvement).
+        let s = md(120_000);
+        let cpc = Cpc2000.compress(&s, 1e-4).unwrap().compression_ratio();
+        let ours = SzCpc2000.compress(&s, 1e-4).unwrap().compression_ratio();
+        // Paper: +13% at 2.8M particles; the margin shrinks at test
+        // scale (Huffman table amortization), so require a clear +4%.
+        assert!(
+            ours > cpc * 1.04,
+            "sz_cpc2000 {ours:.3} should beat cpc2000 {cpc:.3}"
+        );
+    }
+
+    #[test]
+    fn coordinate_sections_identical_to_cpc2000() {
+        // Both use the same stage-1..4 coordinate path.
+        let s = md(20_000);
+        let a = Cpc2000.compress(&s, 1e-4).unwrap();
+        let b = SzCpc2000.compress(&s, 1e-4).unwrap();
+        assert_eq!(a.fields[0].bytes[1..], b.fields[0].bytes[1..]);
+    }
+}

@@ -1,0 +1,199 @@
+//! SZ-LV-RX / SZ-LV-PRX (§V-B): segmented (partial-radix) R-index
+//! sorting followed by SZ-LV per-field compression.
+//!
+//! Step 1 reorders particles within segments by (partial) R-index so
+//! every field becomes locally smooth; step 2 runs SZ-LV on the
+//! *reordered data arrays* instead of compressing the R-index directly
+//! as CPC2000 does. No permutation is stored (particle order is free),
+//! so the only cost of sorting is time — which PRX attacks by ignoring
+//! the trailing 3-bit groups of the R-index (Table V).
+
+use crate::error::Result;
+use crate::model::quant::Predictor;
+use crate::rindex::morton::bits_for_step;
+use crate::rindex::sort::segmented_sort_perm;
+use crate::rindex::{build_rindex, RIndexSource};
+use crate::snapshot::{
+    CompressedField, CompressedSnapshot, FieldCompressor, Snapshot, SnapshotCompressor,
+    FIELD_NAMES,
+};
+use crate::compressors::sz::{Sz, SzConfig};
+
+/// SZ-LV with (partial) R-index sorting.
+#[derive(Clone, Copy, Debug)]
+pub struct SzRx {
+    /// Segment size for the segmented sort (paper Table IV: 1024..16384;
+    /// 0 = one global segment).
+    pub segment: usize,
+    /// Number of trailing 3-bit R-index groups ignored by the partial
+    /// radix sort (paper Table V: 0..8; 0 = full RX).
+    pub ignored_groups: u32,
+    /// Fields feeding the R-index (Table VI explores all three).
+    pub source: RIndexSource,
+    /// Inner SZ predictor (LV for all paper configurations).
+    pub predictor: Predictor,
+}
+
+impl SzRx {
+    /// SZ-LV-RX with the paper's best segment size (Table IV).
+    pub fn rx(segment: usize) -> Self {
+        SzRx {
+            segment,
+            ignored_groups: 0,
+            source: RIndexSource::Coordinates,
+            predictor: Predictor::LastValue,
+        }
+    }
+
+    /// SZ-LV-PRX — the best_tradeoff configuration (Table V: segment
+    /// 16384, 6 ignored 3-bit groups).
+    pub fn prx() -> Self {
+        SzRx {
+            segment: 16384,
+            ignored_groups: 6,
+            source: RIndexSource::Coordinates,
+            predictor: Predictor::LastValue,
+        }
+    }
+
+    /// The deterministic permutation applied before SZ (for tests).
+    pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Vec<u32> {
+        let ranges = snap.ranges();
+        // Bits per field chosen like CPC2000: bins = 1/(2 eb_rel).
+        let max_range = self
+            .source
+            .field_indices()
+            .iter()
+            .map(|&f| ranges[f])
+            .fold(0.0f64, f64::max);
+        let bits = bits_for_step(1.0, 2.0 * eb_rel).min(match self.source {
+            RIndexSource::Both => 10,
+            _ => 21,
+        });
+        let _ = max_range;
+        let keys = build_rindex(snap, self.source, bits);
+        segmented_sort_perm(&keys, self.segment, 3 * self.ignored_groups)
+    }
+}
+
+impl SnapshotCompressor for SzRx {
+    fn name(&self) -> &'static str {
+        match (self.ignored_groups, self.source) {
+            (0, RIndexSource::Coordinates) => "sz_lv_rx",
+            (_, RIndexSource::Coordinates) => "sz_lv_prx",
+            (_, RIndexSource::Velocities) => "sz_lv_rx_vel",
+            (_, RIndexSource::Both) => "sz_lv_rx_both",
+        }
+    }
+
+    fn reorders(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        let perm = self.sort_permutation(snap, eb_rel);
+        let sorted = snap.permute(&perm)?;
+        let ebs = sorted.abs_bounds(eb_rel);
+        let sz = Sz {
+            cfg: SzConfig {
+                predictor: self.predictor,
+                ..Default::default()
+            },
+        };
+        let mut fields = Vec::with_capacity(6);
+        for f in 0..6 {
+            let bytes = sz.compress(&sorted.fields[f], ebs[f])?;
+            fields.push(CompressedField {
+                name: FIELD_NAMES[f].into(),
+                n: snap.len(),
+                bytes,
+            });
+        }
+        Ok(CompressedSnapshot {
+            compressor: self.name().into(),
+            eb_rel,
+            fields,
+            n: snap.len(),
+        })
+    }
+
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        let sz = Sz {
+            cfg: SzConfig {
+                predictor: self.predictor,
+                ..Default::default()
+            },
+        };
+        let mut fields: [Vec<f32>; 6] = Default::default();
+        for f in 0..6 {
+            fields[f] = sz.decompress(&c.fields[f].bytes)?;
+        }
+        Snapshot::new("sz_rx", fields, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::verify_bounds;
+
+    fn md(n: usize) -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn roundtrip_bound_after_permutation() {
+        let s = md(40_000);
+        let eb_rel = 1e-4;
+        for comp in [SzRx::rx(4096), SzRx::prx()] {
+            let bundle = comp.compress(&s, eb_rel).unwrap();
+            let recon = comp.decompress(&bundle).unwrap();
+            let perm = comp.sort_permutation(&s, eb_rel);
+            let sorted = s.permute(&perm).unwrap();
+            verify_bounds(&sorted, &recon, eb_rel).unwrap();
+        }
+    }
+
+    #[test]
+    fn rx_improves_ratio_on_md_data() {
+        // Table IV: segmented R-index sorting lifts SZ-LV's ratio.
+        let s = md(120_000);
+        let eb_rel = 1e-4;
+        let plain = crate::snapshot::PerField(Sz::lv())
+            .compress(&s, eb_rel)
+            .unwrap()
+            .compression_ratio();
+        let rx = SzRx::rx(16384).compress(&s, eb_rel).unwrap().compression_ratio();
+        assert!(
+            rx > plain * 1.02,
+            "RX should improve ratio: plain {plain:.3} vs rx {rx:.3}"
+        );
+    }
+
+    #[test]
+    fn prx_ratio_matches_full_rx() {
+        // Table V: ignoring up to 6 trailing 3-bit groups leaves the
+        // ratio essentially unchanged.
+        let s = md(120_000);
+        let eb_rel = 1e-4;
+        let full = SzRx::rx(16384).compress(&s, eb_rel).unwrap().compression_ratio();
+        let prx = SzRx::prx().compress(&s, eb_rel).unwrap().compression_ratio();
+        assert!(
+            (prx - full).abs() / full < 0.03,
+            "PRX ratio {prx:.3} should match RX {full:.3}"
+        );
+    }
+
+    #[test]
+    fn bigger_segments_dont_hurt() {
+        // Table IV trend: ratio rises (weakly) with segment size.
+        let s = md(100_000);
+        let small = SzRx::rx(1024).compress(&s, 1e-4).unwrap().compression_ratio();
+        let large = SzRx::rx(16384).compress(&s, 1e-4).unwrap().compression_ratio();
+        assert!(large > small * 0.98, "small {small:.3} large {large:.3}");
+    }
+}

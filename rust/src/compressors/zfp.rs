@@ -1,0 +1,247 @@
+//! ZFP-like compressor (Lindstrom 2014), 1D variant in fixed-accuracy
+//! mode (the best-ratio mode per ZFP's developer, as used in the paper).
+//!
+//! Per block of 4 values: align to the block's max exponent, convert to
+//! fixed point, apply the decorrelating lifting transform, map to
+//! negabinary, and emit bit planes from the MSB down to the plane whose
+//! weight drops below the tolerance. Because plane truncation happens at
+//! power-of-two boundaries, ZFP *over-preserves* accuracy (paper §VI:
+//! max error 3.2e-5..4.6e-5 at eb 1e-4) — reproduced here.
+
+use crate::codec::bitplane::{decode_planes, encode_planes, from_negabinary, fwd_lift, inv_lift, to_negabinary};
+use crate::error::{Error, Result};
+use crate::snapshot::FieldCompressor;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::varint::{get_uvarint, put_uvarint};
+
+const MAGIC: u8 = b'Z';
+/// Fixed-point fraction bits (values are scaled to |v| <= 1 then
+/// multiplied by 2^FRAC). The lifting transform can grow magnitudes by
+/// <4x, so planes start at FRAC + 2.
+const FRAC: u32 = 40;
+const HI_PLANE: u32 = FRAC + 3;
+/// Guard planes below the tolerance cutoff: they absorb the lifting
+/// roundtrip error (a few fixed-point ULPs) and the fixed-point rounding.
+const GUARD_PLANES: u32 = 3;
+
+/// ZFP-like field compressor (fixed-accuracy mode).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Zfp;
+
+impl FieldCompressor for Zfp {
+    fn name(&self) -> &'static str {
+        "zfp"
+    }
+
+    fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+        if !(eb_abs > 0.0) {
+            return Err(Error::invalid("zfp requires a positive tolerance"));
+        }
+        let n = xs.len();
+        let mut out = Vec::with_capacity(n);
+        out.push(MAGIC);
+        put_uvarint(&mut out, n as u64);
+        out.extend_from_slice(&eb_abs.to_le_bytes());
+
+        let mut w = BitWriter::with_capacity(n * 2);
+        for block in xs.chunks(4) {
+            let mut vals = [0f64; 4];
+            for (i, &x) in block.iter().enumerate() {
+                vals[i] = x as f64;
+            }
+            // Pad short tail blocks by repeating the last value (cheap to
+            // encode, no effect on reconstruction of real elements).
+            for i in block.len()..4 {
+                vals[i] = vals[block.len() - 1];
+            }
+            let maxabs = vals.iter().fold(0f64, |m, &v| m.max(v.abs()));
+            if maxabs == 0.0 {
+                w.put_bit(false); // empty block flag
+                continue;
+            }
+            w.put_bit(true);
+            // Block exponent: 2^e >= maxabs.
+            let e = maxabs.log2().ceil() as i32;
+            let scale = 2f64.powi(e);
+            // Tolerance in fixed-point units at this block's scale.
+            let tol_units = eb_abs / scale * 2f64.powi(FRAC as i32);
+            // Lowest encoded plane: everything below contributes < tol/2
+            // after the guard planes.
+            let lo = if tol_units <= 1.0 {
+                0
+            } else {
+                (tol_units.log2().floor() as u32).saturating_sub(GUARD_PLANES).min(HI_PLANE - 1)
+            };
+            // Fixed point + transform + negabinary.
+            let mut p = [0i64; 4];
+            for i in 0..4 {
+                p[i] = (vals[i] / scale * 2f64.powi(FRAC as i32)).round() as i64;
+            }
+            fwd_lift(&mut p);
+            let nb = [
+                to_negabinary(p[0]),
+                to_negabinary(p[1]),
+                to_negabinary(p[2]),
+                to_negabinary(p[3]),
+            ];
+            // Header: exponent (signed, 9 bits biased) + lo plane (6 bits).
+            w.put((e + 256) as u64, 10);
+            w.put(lo as u64, 6);
+            encode_planes(&nb, HI_PLANE, lo, &mut w);
+        }
+        let payload = w.finish();
+        put_uvarint(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let mut pos = 0usize;
+        if bytes.is_empty() || bytes[0] != MAGIC {
+            return Err(Error::Format {
+                expected: "ZFP stream".into(),
+                found: "bad magic".into(),
+            });
+        }
+        pos += 1;
+        let n = get_uvarint(bytes, &mut pos)? as usize;
+        if pos + 8 > bytes.len() {
+            return Err(Error::corrupt("zfp header truncated"));
+        }
+        let _eb = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let payload_len = get_uvarint(bytes, &mut pos)? as usize;
+        if pos + payload_len > bytes.len() {
+            return Err(Error::corrupt("zfp payload truncated"));
+        }
+        let mut r = BitReader::new(&bytes[pos..pos + payload_len]);
+
+        let mut out = Vec::with_capacity(n);
+        let n_blocks = n.div_ceil(4);
+        for b in 0..n_blocks {
+            let take = (n - b * 4).min(4);
+            if !r.get_bit()? {
+                for _ in 0..take {
+                    out.push(0.0);
+                }
+                continue;
+            }
+            let e = r.get(10)? as i32 - 256;
+            let lo = r.get(6)? as u32;
+            if lo >= HI_PLANE {
+                return Err(Error::corrupt("zfp lo plane out of range"));
+            }
+            let nb = decode_planes(HI_PLANE, lo, &mut r)?;
+            let mut p = [
+                from_negabinary(nb[0]),
+                from_negabinary(nb[1]),
+                from_negabinary(nb[2]),
+                from_negabinary(nb[3]),
+            ];
+            inv_lift(&mut p);
+            let scale = 2f64.powi(e);
+            for i in 0..take {
+                out.push((p[i] as f64 / 2f64.powi(FRAC as i32) * scale) as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+    use crate::testkit::{gen_eb, gen_field_like, Prop};
+    use crate::util::stats::value_range;
+
+    fn roundtrip_bound(xs: &[f32], eb: f64) -> (Vec<u8>, f64) {
+        let c = Zfp;
+        let bytes = c.compress(xs, eb).unwrap();
+        let back = c.decompress(&bytes).unwrap();
+        assert_eq!(back.len(), xs.len());
+        let mut maxerr = 0f64;
+        for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            assert!(err <= eb, "i={i} err={err:e} eb={eb:e}");
+            maxerr = maxerr.max(err);
+        }
+        (bytes, maxerr)
+    }
+
+    #[test]
+    fn empty_and_partial_blocks() {
+        roundtrip_bound(&[], 1e-3);
+        roundtrip_bound(&[1.0], 1e-3);
+        roundtrip_bound(&[1.0, -2.0, 3.0], 1e-3);
+        roundtrip_bound(&[1.0, -2.0, 3.0, 4.0, 5.0], 1e-3);
+    }
+
+    #[test]
+    fn zero_blocks_are_one_bit() {
+        let xs = vec![0.0f32; 4096];
+        let (bytes, _) = roundtrip_bound(&xs, 1e-4);
+        assert!(bytes.len() < 4096 / 8 + 64);
+    }
+
+    #[test]
+    fn over_preserves_accuracy_like_paper() {
+        // Paper §VI: ZFP max err is 0.32-0.46x the requested bound.
+        let s = generate_cosmo(&CosmoConfig {
+            n_particles: 50_000,
+            ..Default::default()
+        });
+        let eb = value_range(&s.fields[0]) * 1e-4;
+        let (_, maxerr) = roundtrip_bound(&s.fields[0], eb);
+        assert!(
+            maxerr < 0.8 * eb,
+            "zfp should over-preserve: maxerr {maxerr:e} vs eb {eb:e}"
+        );
+        assert!(maxerr > 0.0);
+    }
+
+    #[test]
+    fn compresses_smooth_data() {
+        let xs: Vec<f32> = (0..100_000).map(|i| (i as f32 * 0.001).sin() * 10.0).collect();
+        let eb = 20.0 * 1e-4;
+        let (bytes, _) = roundtrip_bound(&xs, eb);
+        let ratio = (xs.len() * 4) as f64 / bytes.len() as f64;
+        assert!(ratio > 2.0, "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn mixed_magnitude_blocks() {
+        let mut xs = Vec::new();
+        for i in 0..1000 {
+            xs.push(if i % 7 == 0 { 1e6 } else { 1e-6 } * ((i % 13) as f32 - 6.0));
+        }
+        roundtrip_bound(&xs, 1.0);
+    }
+
+    #[test]
+    fn prop_bound_holds() {
+        Prop::new("zfp bound").cases(40).run(|rng| {
+            let xs = gen_field_like(rng, 0..1500);
+            if xs.is_empty() {
+                return;
+            }
+            let range = value_range(&xs).max(1e-6);
+            let eb = gen_eb(rng) * range;
+            let c = Zfp;
+            let bytes = c.compress(&xs, eb).unwrap();
+            let back = c.decompress(&bytes).unwrap();
+            for (&a, &b) in xs.iter().zip(back.iter()) {
+                assert!((a as f64 - b as f64).abs() <= eb);
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let xs = vec![1.0f32; 64];
+        let c = Zfp;
+        let bytes = c.compress(&xs, 1e-3).unwrap();
+        assert!(c.decompress(&bytes[..6]).is_err());
+        assert!(c.compress(&xs, 0.0).is_err());
+    }
+}

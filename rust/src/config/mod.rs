@@ -1,0 +1,20 @@
+//! Configuration system: a TOML-subset parser (sections, scalar keys)
+//! plus the typed pipeline schema with validation.
+//!
+//! Supported syntax (a strict subset of TOML — all nblc configs are
+//! expressible in it):
+//!
+//! ```toml
+//! # comment
+//! [pipeline]
+//! shards = 64
+//! eb_rel = 1e-4
+//! mode = "best_speed"
+//! use_pjrt = false
+//! ```
+
+pub mod parse;
+pub mod schema;
+
+pub use parse::{ConfigDoc, Value};
+pub use schema::PipelineSettings;

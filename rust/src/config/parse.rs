@@ -1,0 +1,224 @@
+//! TOML-subset parser: `[section]` headers and `key = value` lines with
+//! string / integer / float / boolean scalars.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// As string (only for `Str`).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (ints only; floats are not silently truncated).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// As float (ints widen).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config document: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(lineno, &m))?;
+            let dup = doc
+                .sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+            if dup.is_some() {
+                return Err(err(lineno, &format!("duplicate key '{key}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> Result<ConfigDoc> {
+        ConfigDoc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// All keys of a section (validation).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Section names present.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_types() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [pipeline]
+            shards = 64
+            eb_rel = 1e-4
+            mode = "best_speed"
+            use_pjrt = false
+            big = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("pipeline", "shards").unwrap().as_int(), Some(64));
+        assert_eq!(doc.get("pipeline", "eb_rel").unwrap().as_float(), Some(1e-4));
+        assert_eq!(
+            doc.get("pipeline", "mode").unwrap().as_str(),
+            Some("best_speed")
+        );
+        assert_eq!(doc.get("pipeline", "use_pjrt").unwrap().as_bool(), Some(false));
+        assert_eq!(doc.get("pipeline", "big").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = ConfigDoc::parse("# top\n[a]\nx = 1 # trailing\n\ny = \"a # b\"\n").unwrap();
+        assert_eq!(doc.get("a", "x").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("a", "y").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = ConfigDoc::parse("[a]\nbroken\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        assert!(ConfigDoc::parse("[never_closed\n").is_err());
+        assert!(ConfigDoc::parse("[a]\nx = \"oops\n").is_err());
+        assert!(ConfigDoc::parse("[a]\nx = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_are_none() {
+        let doc = ConfigDoc::parse("[a]\nx = 1\n").unwrap();
+        assert!(doc.get("a", "y").is_none());
+        assert!(doc.get("b", "x").is_none());
+    }
+
+    #[test]
+    fn type_coercion_rules() {
+        let doc = ConfigDoc::parse("[a]\ni = 3\nf = 3.5\n").unwrap();
+        assert_eq!(doc.get("a", "i").unwrap().as_float(), Some(3.0)); // int widens
+        assert_eq!(doc.get("a", "f").unwrap().as_int(), None); // float does not truncate
+    }
+}

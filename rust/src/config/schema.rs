@@ -1,0 +1,172 @@
+//! Typed pipeline configuration with defaults and validation.
+
+use crate::compressors::Mode;
+use crate::config::parse::ConfigDoc;
+use crate::error::{Error, Result};
+
+/// Validated settings for `nblc pipeline` (section `[pipeline]`).
+#[derive(Clone, Debug)]
+pub struct PipelineSettings {
+    /// Dataset kind: "hacc" or "amdf".
+    pub dataset: String,
+    /// Particle count (0 = dataset default).
+    pub particles: usize,
+    /// Shards ("ranks").
+    pub shards: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Bounded queue depth.
+    pub queue_depth: usize,
+    /// Relative error bound.
+    pub eb_rel: f64,
+    /// Compression mode.
+    pub mode: Mode,
+    /// Let the scheduler override R-index modes on orderly data (§V-C).
+    pub auto_route: bool,
+    /// Use the PJRT-backed quantizer when artifacts are present.
+    pub use_pjrt: bool,
+    /// Simulated processes for the PFS model sink (0 = null sink).
+    pub sim_procs: usize,
+}
+
+impl Default for PipelineSettings {
+    fn default() -> Self {
+        PipelineSettings {
+            dataset: "hacc".into(),
+            particles: 0,
+            shards: 16,
+            workers: 1,
+            queue_depth: 4,
+            eb_rel: 1e-4,
+            mode: Mode::BestSpeed,
+            auto_route: true,
+            use_pjrt: false,
+            sim_procs: 0,
+        }
+    }
+}
+
+impl PipelineSettings {
+    /// Read from a parsed document, applying defaults and validating.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
+        let mut s = PipelineSettings::default();
+        let sec = "pipeline";
+        const KNOWN: [&str; 10] = [
+            "dataset", "particles", "shards", "workers", "queue_depth", "eb_rel",
+            "mode", "auto_route", "use_pjrt", "sim_procs",
+        ];
+        for key in doc.keys(sec) {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!("unknown [pipeline] key '{key}'")));
+            }
+        }
+        let get_usize = |key: &str, default: usize| -> Result<usize> {
+            match doc.get(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_int()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer"))),
+            }
+        };
+        if let Some(v) = doc.get(sec, "dataset") {
+            s.dataset = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'dataset' must be a string".into()))?
+                .to_string();
+            if !["hacc", "amdf"].contains(&s.dataset.as_str()) {
+                return Err(Error::Config(format!("unknown dataset '{}'", s.dataset)));
+            }
+        }
+        s.particles = get_usize("particles", s.particles)?;
+        s.shards = get_usize("shards", s.shards)?;
+        s.workers = get_usize("workers", s.workers)?;
+        s.queue_depth = get_usize("queue_depth", s.queue_depth)?;
+        s.sim_procs = get_usize("sim_procs", s.sim_procs)?;
+        if let Some(v) = doc.get(sec, "eb_rel") {
+            s.eb_rel = v
+                .as_float()
+                .filter(|&f| f > 0.0 && f < 1.0)
+                .ok_or_else(|| Error::Config("'eb_rel' must be in (0, 1)".into()))?;
+        }
+        if let Some(v) = doc.get(sec, "mode") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'mode' must be a string".into()))?;
+            s.mode = Mode::parse(name)
+                .ok_or_else(|| Error::Config(format!("unknown mode '{name}'")))?;
+        }
+        if let Some(v) = doc.get(sec, "auto_route") {
+            s.auto_route = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("'auto_route' must be a boolean".into()))?;
+        }
+        if let Some(v) = doc.get(sec, "use_pjrt") {
+            s.use_pjrt = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("'use_pjrt' must be a boolean".into()))?;
+        }
+        if s.shards == 0 {
+            return Err(Error::Config("'shards' must be >= 1".into()));
+        }
+        if s.workers == 0 {
+            return Err(Error::Config("'workers' must be >= 1".into()));
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_section() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.shards, 16);
+        assert_eq!(s.mode, Mode::BestSpeed);
+    }
+
+    #[test]
+    fn full_parse() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [pipeline]
+            dataset = "amdf"
+            particles = 500000
+            shards = 32
+            workers = 2
+            eb_rel = 1e-3
+            mode = "best_compression"
+            auto_route = false
+            use_pjrt = true
+            sim_procs = 1024
+            "#,
+        )
+        .unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.dataset, "amdf");
+        assert_eq!(s.particles, 500_000);
+        assert_eq!(s.mode, Mode::BestCompression);
+        assert!(!s.auto_route);
+        assert!(s.use_pjrt);
+        assert_eq!(s.sim_procs, 1024);
+    }
+
+    #[test]
+    fn validation_errors() {
+        for bad in [
+            "[pipeline]\nshards = 0\n",
+            "[pipeline]\neb_rel = 2.0\n",
+            "[pipeline]\nmode = \"warp\"\n",
+            "[pipeline]\ndataset = \"enzo\"\n",
+            "[pipeline]\nmystery = 1\n",
+            "[pipeline]\nworkers = 0\n",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Bounded queues with stall accounting — the pipeline's backpressure
+//! substrate. In-situ compression must keep memory bounded (one
+//! snapshot resident); a bounded channel between stages makes the
+//! producer block when compression or the PFS writer falls behind, and
+//! the stall counters expose where the pipeline is limited.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared stall/throughput counters for one queue.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    /// Items pushed.
+    pub pushed: AtomicU64,
+    /// Items popped.
+    pub popped: AtomicU64,
+    /// Number of sends that had to block (queue full).
+    pub send_stalls: AtomicU64,
+    /// Total nanoseconds spent blocked in send.
+    pub stall_nanos: AtomicU64,
+}
+
+impl QueueStats {
+    /// Current queue depth estimate.
+    pub fn depth(&self) -> u64 {
+        self.pushed
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.popped.load(Ordering::Relaxed))
+    }
+}
+
+/// Sending half of a bounded queue.
+pub struct BoundedSender<T> {
+    tx: SyncSender<T>,
+    stats: Arc<QueueStats>,
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        BoundedSender {
+            tx: self.tx.clone(),
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+/// Receiving half of a bounded queue.
+pub struct BoundedReceiver<T> {
+    rx: Receiver<T>,
+    stats: Arc<QueueStats>,
+}
+
+/// Create a bounded queue of capacity `cap` with shared stats.
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>, Arc<QueueStats>) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(cap.max(1));
+    let stats = Arc::new(QueueStats::default());
+    (
+        BoundedSender {
+            tx,
+            stats: Arc::clone(&stats),
+        },
+        BoundedReceiver {
+            rx,
+            stats: Arc::clone(&stats),
+        },
+        stats,
+    )
+}
+
+impl<T> BoundedSender<T> {
+    /// Send, blocking under backpressure; records stall time.
+    /// Returns `Err` when the receiver is gone.
+    pub fn send(&self, item: T) -> Result<(), ()> {
+        match self.tx.try_send(item) {
+            Ok(()) => {
+                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Disconnected(_)) => Err(()),
+            Err(TrySendError::Full(item)) => {
+                self.stats.send_stalls.fetch_add(1, Ordering::Relaxed);
+                let t = std::time::Instant::now();
+                let r = self.tx.send(item).map_err(|_| ());
+                self.stats
+                    .stall_nanos
+                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if r.is_ok() {
+                    self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                }
+                r
+            }
+        }
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive; `None` when all senders are gone.
+    pub fn recv(&self) -> Option<T> {
+        match self.rx.recv() {
+            Ok(item) => {
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                Some(item)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Receive with timeout (for idle-loop metrics ticks).
+    pub fn recv_timeout(&self, d: Duration) -> Result<T, RecvTimeoutError> {
+        let item = self.rx.recv_timeout(d)?;
+        self.stats.popped.fetch_add(1, Ordering::Relaxed);
+        Ok(item)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx, _) = bounded::<u32>(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn blocking_send_stalls_are_counted() {
+        let (tx, rx, stats) = bounded::<u32>(1);
+        tx.send(0).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until the receiver drains
+            tx.send(2).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        t.join().unwrap();
+        assert!(stats.send_stalls.load(Ordering::Relaxed) >= 1);
+        assert!(stats.stall_nanos.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn disconnect_is_clean() {
+        let (tx, rx, _) = bounded::<u32>(2);
+        drop(rx);
+        assert!(tx.send(1).is_err());
+        let (tx2, rx2, _) = bounded::<u32>(2);
+        drop(tx2);
+        assert_eq!(rx2.recv(), None);
+    }
+
+    #[test]
+    fn depth_tracking() {
+        let (tx, rx, stats) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(stats.depth(), 5);
+        rx.recv();
+        rx.recv();
+        assert_eq!(stats.depth(), 3);
+    }
+}

@@ -1,0 +1,62 @@
+//! Pipeline counters: per-stage wall time, bytes, and rates; cheap
+//! atomics sampled by the report at the end of a run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated pipeline counters (shared across worker threads).
+#[derive(Debug, Default)]
+pub struct PipelineCounters {
+    /// Uncompressed bytes entering the compress stage.
+    pub bytes_in: AtomicU64,
+    /// Compressed bytes leaving the compress stage.
+    pub bytes_out: AtomicU64,
+    /// Shards fully processed.
+    pub shards_done: AtomicU64,
+    /// Nanoseconds spent compressing (summed across workers).
+    pub compress_nanos: AtomicU64,
+    /// Nanoseconds spent in the sink (PFS write or model).
+    pub sink_nanos: AtomicU64,
+}
+
+impl PipelineCounters {
+    /// Record one compressed shard.
+    pub fn record_shard(&self, bytes_in: usize, bytes_out: usize, nanos: u64) {
+        self.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out as u64, Ordering::Relaxed);
+        self.shards_done.fetch_add(1, Ordering::Relaxed);
+        self.compress_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Aggregate compression rate in bytes/second.
+    pub fn compress_rate(&self) -> f64 {
+        let nanos = self.compress_nanos.load(Ordering::Relaxed);
+        if nanos == 0 {
+            return 0.0;
+        }
+        self.bytes_in.load(Ordering::Relaxed) as f64 / (nanos as f64 / 1e9)
+    }
+
+    /// Overall ratio so far.
+    pub fn ratio(&self) -> f64 {
+        let out = self.bytes_out.load(Ordering::Relaxed);
+        if out == 0 {
+            return f64::INFINITY;
+        }
+        self.bytes_in.load(Ordering::Relaxed) as f64 / out as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_and_ratio() {
+        let c = PipelineCounters::default();
+        c.record_shard(1000, 250, 1_000_000_000);
+        c.record_shard(1000, 250, 1_000_000_000);
+        assert!((c.ratio() - 4.0).abs() < 1e-12);
+        assert!((c.compress_rate() - 1000.0).abs() < 1e-9);
+        assert_eq!(c.shards_done.load(Ordering::Relaxed), 2);
+    }
+}

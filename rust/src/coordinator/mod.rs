@@ -1,0 +1,32 @@
+//! L3 coordinator: the in-situ compression pipeline.
+//!
+//! The paper's systems contribution is inserting error-bounded lossy
+//! compression between simulation ranks and the parallel file system
+//! (§VI, Fig. 5, Table VII). This module is the deployable version of
+//! that insertion point:
+//!
+//! * [`shard`] — particle-range sharding + cost-based rebalancing;
+//! * [`backpressure`] — bounded queues with stall accounting (the
+//!   in-situ memory constraint: one snapshot in flight);
+//! * [`pipeline`] — staged source → compress-workers → sink pipeline
+//!   over std threads + bounded channels;
+//! * [`rank`] — per-rank compression work unit;
+//! * [`scheduler`] — per-dataset compressor routing (the paper's §V-C
+//!   rule: orderly fields must not be R-index sorted);
+//! * [`iomodel`] — GPFS-like parallel-file-system model + straggler
+//!   model used to project measured single-core rates to the paper's
+//!   16..1024-process scaling studies (substitution documented in
+//!   DESIGN.md §2);
+//! * [`counters`] — lightweight pipeline metrics.
+
+pub mod backpressure;
+pub mod counters;
+pub mod iomodel;
+pub mod pipeline;
+pub mod rank;
+pub mod scheduler;
+pub mod shard;
+
+pub use iomodel::GpfsModel;
+pub use pipeline::{InsituConfig, InsituReport, run_insitu};
+pub use scheduler::choose_compressor;

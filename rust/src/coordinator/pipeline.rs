@@ -1,0 +1,344 @@
+//! The staged in-situ pipeline: source → compress workers → sink.
+//!
+//! * **Source** walks the snapshot's shards (zero-copy slices of the
+//!   resident snapshot — the in-situ constraint) into a bounded queue.
+//! * **Workers** each own a compressor instance (built from a factory;
+//!   compressors are not `Sync`) and drain the shard queue.
+//! * **Sink** applies the PFS write: either a real file write or the
+//!   [`GpfsModel`]-timed simulated write used by the scaling benches.
+//!
+//! Every queue is bounded ([`backpressure`]), so a slow sink throttles
+//! the workers and a slow compressor throttles the source; stall
+//! counters land in the final [`InsituReport`].
+
+use crate::coordinator::backpressure::{bounded, QueueStats};
+use crate::coordinator::counters::PipelineCounters;
+use crate::coordinator::iomodel::GpfsModel;
+use crate::coordinator::rank::{run_rank, RankResult, RankTask};
+use crate::coordinator::shard::split_even;
+use crate::error::{Error, Result};
+use crate::snapshot::{Snapshot, SnapshotCompressor};
+use crate::util::timer::Timer;
+use std::io::Write;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Factory building one compressor per worker thread.
+pub type CompressorFactory = Arc<dyn Fn() -> Box<dyn SnapshotCompressor> + Send + Sync>;
+
+/// Where compressed shards go.
+pub enum Sink {
+    /// Discard (compute-only runs).
+    Null,
+    /// Write to a real file (one stream, appended in arrival order).
+    File(std::path::PathBuf),
+    /// Simulated parallel-file-system write, timed by the model as if
+    /// `procs` processes wrote concurrently.
+    Model { model: GpfsModel, procs: usize },
+}
+
+/// In-situ pipeline configuration.
+pub struct InsituConfig {
+    /// Number of shards ("ranks") to cut the snapshot into.
+    pub shards: usize,
+    /// Worker threads compressing shards.
+    pub workers: usize,
+    /// Bounded queue capacity between stages (the in-flight budget).
+    pub queue_depth: usize,
+    /// Relative error bound.
+    pub eb_rel: f64,
+    /// Compressor factory (one instance per worker).
+    pub factory: CompressorFactory,
+    /// Compressed-shard destination.
+    pub sink: Sink,
+}
+
+/// Pipeline outcome.
+#[derive(Debug)]
+pub struct InsituReport {
+    /// Total uncompressed bytes.
+    pub bytes_in: u64,
+    /// Total compressed bytes.
+    pub bytes_out: u64,
+    /// Overall ratio.
+    pub ratio: f64,
+    /// Wall-clock of the whole pipeline run (seconds).
+    pub wall_secs: f64,
+    /// Aggregate compression rate (bytes/s summed over workers).
+    pub compress_rate: f64,
+    /// Simulated (or real) sink write time (seconds).
+    pub sink_secs: f64,
+    /// Stalls observed on the shard queue (source blocked).
+    pub source_stalls: u64,
+    /// Stalls observed on the sink queue (workers blocked).
+    pub sink_stalls: u64,
+    /// Per-shard compression seconds (for rebalancing).
+    pub shard_secs: Vec<f64>,
+    /// Per-shard ratios.
+    pub shard_ratios: Vec<f64>,
+}
+
+/// Run the in-situ pipeline over a resident snapshot.
+pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
+    if cfg.shards == 0 {
+        return Err(Error::invalid("need at least one shard"));
+    }
+    let shards = split_even(snap.len(), cfg.shards);
+    let counters = Arc::new(PipelineCounters::default());
+    let wall = Timer::start();
+
+    let (task_tx, task_rx, source_q) = bounded::<RankTask>(cfg.queue_depth);
+    let (done_tx, done_rx, sink_q) = bounded::<RankResult>(cfg.queue_depth);
+
+    std::thread::scope(|scope| -> Result<InsituReport> {
+        // Workers: each builds its own compressor from the factory.
+        let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
+        let mut worker_handles = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let task_rx = Arc::clone(&task_rx);
+            let done_tx = done_tx.clone();
+            let factory = Arc::clone(&cfg.factory);
+            let counters = Arc::clone(&counters);
+            let eb_rel = cfg.eb_rel;
+            worker_handles.push(scope.spawn(move || -> Result<()> {
+                let compressor = factory();
+                loop {
+                    let task = {
+                        let guard = task_rx.lock().expect("task queue poisoned");
+                        guard.recv()
+                    };
+                    let Some(task) = task else { break };
+                    let result = run_rank(task, compressor.as_ref(), eb_rel)?;
+                    counters.record_shard(
+                        result.bytes_in,
+                        result.bundle.compressed_bytes(),
+                        (result.secs * 1e9) as u64,
+                    );
+                    if done_tx.send(result).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        drop(done_tx);
+
+        // Sink thread (moves the receiver; `cfg` is a shared reference
+        // and copies into the closure).
+        let sink_handle = scope.spawn(move || -> Result<(f64, Vec<f64>, Vec<f64>)> {
+            let mut sink_secs = 0f64;
+            let mut shard_secs = vec![0f64; cfg.shards];
+            let mut shard_ratios = vec![0f64; cfg.shards];
+            let mut file = match &cfg.sink {
+                Sink::File(path) => Some(std::io::BufWriter::new(
+                    std::fs::File::create(path)?,
+                )),
+                _ => None,
+            };
+            while let Some(result) = done_rx.recv() {
+                shard_secs[result.rank] = result.secs;
+                shard_ratios[result.rank] = result.bundle.compression_ratio();
+                let bytes = result.bundle.compressed_bytes() as u64;
+                match &cfg.sink {
+                    Sink::Null => {}
+                    Sink::File(_) => {
+                        let t = Timer::start();
+                        let w = file.as_mut().expect("file sink open");
+                        for f in &result.bundle.fields {
+                            w.write_all(&f.bytes)?;
+                        }
+                        sink_secs += t.secs();
+                    }
+                    Sink::Model { model, procs } => {
+                        sink_secs += model.write_time(bytes, *procs);
+                    }
+                }
+            }
+            if let Some(mut w) = file {
+                w.flush()?;
+            }
+            Ok((sink_secs, shard_secs, shard_ratios))
+        });
+
+        // Source: feed shards (slices of the resident snapshot).
+        for shard in &shards {
+            let task = RankTask {
+                rank: shard.id,
+                shard: snap.slice(shard.start, shard.end),
+            };
+            if task_tx.send(task).is_err() {
+                break; // workers died; join below reports the error
+            }
+        }
+        drop(task_tx);
+
+        for h in worker_handles {
+            h.join().expect("worker panicked")?;
+        }
+        let (sink_secs, shard_secs, shard_ratios) = sink_handle.join().expect("sink panicked")?;
+
+        let bytes_in = counters.bytes_in.load(Ordering::Relaxed);
+        let bytes_out = counters.bytes_out.load(Ordering::Relaxed);
+        Ok(InsituReport {
+            bytes_in,
+            bytes_out,
+            ratio: if bytes_out > 0 {
+                bytes_in as f64 / bytes_out as f64
+            } else {
+                f64::INFINITY
+            },
+            wall_secs: wall.secs(),
+            compress_rate: counters.compress_rate(),
+            sink_secs,
+            source_stalls: stat_stalls(&source_q),
+            sink_stalls: stat_stalls(&sink_q),
+            shard_secs,
+            shard_ratios,
+        })
+    })
+}
+
+fn stat_stalls(q: &Arc<QueueStats>) -> u64 {
+    q.send_stalls.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::sz::Sz;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::{PerField, SnapshotCompressor};
+
+    fn factory() -> CompressorFactory {
+        Arc::new(|| Box::new(PerField(Sz::lv())) as Box<dyn SnapshotCompressor>)
+    }
+
+    fn md(n: usize) -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn pipeline_compresses_everything() {
+        let s = md(60_000);
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 8,
+                workers: 2,
+                queue_depth: 4,
+                eb_rel: 1e-4,
+                factory: factory(),
+                sink: Sink::Null,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.bytes_in, s.total_bytes() as u64);
+        assert!(report.ratio > 1.5, "ratio {}", report.ratio);
+        assert_eq!(report.shard_secs.len(), 8);
+        assert!(report.shard_ratios.iter().all(|&r| r > 1.0));
+    }
+
+    #[test]
+    fn shard_streams_decode_and_respect_bounds() {
+        let s = md(30_000);
+        // Compress via pipeline semantics (shards), then verify each
+        // shard decodes within bound — exactly what a reader would do.
+        let shards = split_even(s.len(), 4);
+        let comp = PerField(Sz::lv());
+        for sh in shards {
+            let sub = s.slice(sh.start, sh.end);
+            let bundle = comp.compress(&sub, 1e-4).unwrap();
+            let back = comp.decompress(&bundle).unwrap();
+            crate::snapshot::verify_bounds(&sub, &back, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn backpressure_throttles_with_model_sink() {
+        // A slow modelled sink with tiny queues must produce stalls on
+        // the sink queue (workers blocked) without losing data.
+        let s = md(50_000);
+        let slow = GpfsModel {
+            per_proc_bw: 1e6, // pathological 1 MB/s stream
+            sustained_bw: 1e6,
+            ..Default::default()
+        };
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 16,
+                workers: 2,
+                queue_depth: 1,
+                eb_rel: 1e-4,
+                factory: factory(),
+                sink: Sink::Model {
+                    model: slow,
+                    procs: 1,
+                },
+            },
+        )
+        .unwrap();
+        assert_eq!(report.bytes_in, s.total_bytes() as u64);
+        assert!(report.sink_secs > 0.0);
+    }
+
+    #[test]
+    fn file_sink_writes_bytes() {
+        let s = md(10_000);
+        let path = std::env::temp_dir().join(format!("nblc_pipe_{}.bin", std::process::id()));
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 2,
+                workers: 1,
+                queue_depth: 2,
+                eb_rel: 1e-4,
+                factory: factory(),
+                sink: Sink::File(path.clone()),
+            },
+        )
+        .unwrap();
+        let written = std::fs::metadata(&path).unwrap().len();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(written, report.bytes_out);
+    }
+
+    #[test]
+    fn single_shard_single_worker() {
+        let s = md(5_000);
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 1,
+                workers: 1,
+                queue_depth: 1,
+                eb_rel: 1e-3,
+                factory: factory(),
+                sink: Sink::Null,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.shard_secs.len(), 1);
+        assert!(report.compress_rate > 0.0);
+    }
+
+    #[test]
+    fn zero_shards_is_error() {
+        let s = md(100);
+        let r = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 0,
+                workers: 1,
+                queue_depth: 1,
+                eb_rel: 1e-3,
+                factory: factory(),
+                sink: Sink::Null,
+            },
+        );
+        assert!(r.is_err());
+    }
+}

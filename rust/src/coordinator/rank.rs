@@ -1,0 +1,83 @@
+//! Per-rank work unit: one shard of the snapshot, compressed in place
+//! by a rank-local compressor instance (compressors are not shared
+//! across threads — PJRT handles are thread-affine).
+
+use crate::error::Result;
+use crate::snapshot::{CompressedSnapshot, Snapshot, SnapshotCompressor};
+use crate::util::timer::Timer;
+
+/// Input to a rank: its shard of the snapshot.
+pub struct RankTask {
+    /// Shard / rank id.
+    pub rank: usize,
+    /// The shard's particles.
+    pub shard: Snapshot,
+}
+
+/// Output of a rank.
+pub struct RankResult {
+    /// Shard / rank id.
+    pub rank: usize,
+    /// Compressed bundle.
+    pub bundle: CompressedSnapshot,
+    /// Input bytes.
+    pub bytes_in: usize,
+    /// Compression wall time (seconds).
+    pub secs: f64,
+}
+
+impl RankResult {
+    /// Compression rate in bytes/s.
+    pub fn rate(&self) -> f64 {
+        if self.secs <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.bytes_in as f64 / self.secs
+    }
+}
+
+/// Run one rank's compression.
+pub fn run_rank(
+    task: RankTask,
+    compressor: &dyn SnapshotCompressor,
+    eb_rel: f64,
+) -> Result<RankResult> {
+    let bytes_in = task.shard.total_bytes();
+    let t = Timer::start();
+    let bundle = compressor.compress(&task.shard, eb_rel)?;
+    let secs = t.secs();
+    Ok(RankResult {
+        rank: task.rank,
+        bundle,
+        bytes_in,
+        secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::sz::Sz;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::PerField;
+
+    #[test]
+    fn rank_compresses_its_shard() {
+        let s = generate_md(&MdConfig {
+            n_particles: 20_000,
+            ..Default::default()
+        });
+        let shard = s.slice(5_000, 15_000);
+        let comp = PerField(Sz::lv());
+        let result = run_rank(
+            RankTask { rank: 3, shard },
+            &comp,
+            1e-4,
+        )
+        .unwrap();
+        assert_eq!(result.rank, 3);
+        assert_eq!(result.bundle.n, 10_000);
+        assert!(result.bundle.compression_ratio() > 1.5);
+        assert!(result.rate() > 0.0);
+    }
+}

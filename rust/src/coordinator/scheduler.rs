@@ -1,0 +1,132 @@
+//! Compressor routing — the paper's §V-C rule as a scheduler policy:
+//!
+//! > "the orderly variable with high autocorrelation is not applicable
+//! > to be reordered by any R-index based sorting methods ... SZ-LV is
+//! > more suitable than SZ-LV-PRX/SZ-CPC2000 on the orderly data sets
+//! > with high autocorrelations."
+//!
+//! The scheduler probes each snapshot for an approximately-sorted,
+//! highly-autocorrelated coordinate (HACC's `yy`): if one exists,
+//! R-index sorting would destroy it, so the dataset routes to SZ-LV
+//! (`best_speed`); otherwise the molecular-dynamics modes apply.
+
+use crate::compressors::Mode;
+use crate::snapshot::Snapshot;
+use crate::util::stats::autocorrelation;
+
+/// Probe result for one field.
+#[derive(Clone, Copy, Debug)]
+pub struct OrderlinessProbe {
+    /// Lag-1 autocorrelation.
+    pub ac1: f64,
+    /// Wide-range monotone trend (fraction of rising 1%-block means).
+    pub trend: f64,
+}
+
+/// Probe a field on a subsample (cheap: the probe must not cost a
+/// meaningful fraction of compression time).
+pub fn probe_field(xs: &[f32]) -> OrderlinessProbe {
+    const PROBE_MAX: usize = 65_536;
+    let stride = (xs.len() / PROBE_MAX).max(1);
+    let sample: Vec<f32> = xs.iter().step_by(stride).copied().collect();
+    let blocks = 100.min(sample.len().max(1));
+    let bs = (sample.len() / blocks).max(1);
+    let means: Vec<f64> = sample
+        .chunks(bs)
+        .map(|c| c.iter().map(|&v| v as f64).sum::<f64>() / c.len() as f64)
+        .collect();
+    let rising = means.windows(2).filter(|w| w[1] > w[0]).count();
+    let trend = if means.len() > 1 {
+        rising as f64 / (means.len() - 1) as f64
+    } else {
+        1.0
+    };
+    OrderlinessProbe {
+        ac1: autocorrelation(&sample, 1),
+        trend,
+    }
+}
+
+/// Decide whether any coordinate is "orderly" in the paper's sense.
+pub fn has_orderly_coordinate(snap: &Snapshot) -> bool {
+    snap.coords().iter().any(|c| {
+        let p = probe_field(c);
+        p.trend > 0.9 && p.ac1 > 0.95
+    })
+}
+
+/// Route a snapshot to a compression mode given the user's preference.
+/// `requested` is honoured except that R-index modes are overridden to
+/// `BestSpeed` on orderly data (where they *reduce* the ratio, Table VI).
+pub fn choose_compressor(snap: &Snapshot, requested: Mode) -> Mode {
+    match requested {
+        Mode::BestSpeed => Mode::BestSpeed,
+        m => {
+            if has_orderly_coordinate(snap) {
+                Mode::BestSpeed
+            } else {
+                m
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    fn hacc() -> Snapshot {
+        generate_cosmo(&CosmoConfig {
+            n_particles: 100_000,
+            ..Default::default()
+        })
+    }
+
+    fn amdf() -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: 100_000,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn hacc_is_orderly_amdf_is_not() {
+        assert!(has_orderly_coordinate(&hacc()), "HACC yy should probe orderly");
+        assert!(!has_orderly_coordinate(&amdf()), "AMDF should not probe orderly");
+    }
+
+    #[test]
+    fn rindex_modes_overridden_on_cosmology() {
+        let h = hacc();
+        assert_eq!(choose_compressor(&h, Mode::BestCompression), Mode::BestSpeed);
+        assert_eq!(choose_compressor(&h, Mode::BestTradeoff), Mode::BestSpeed);
+        assert_eq!(choose_compressor(&h, Mode::BestSpeed), Mode::BestSpeed);
+    }
+
+    #[test]
+    fn md_modes_pass_through() {
+        let a = amdf();
+        assert_eq!(
+            choose_compressor(&a, Mode::BestCompression),
+            Mode::BestCompression
+        );
+        assert_eq!(choose_compressor(&a, Mode::BestTradeoff), Mode::BestTradeoff);
+    }
+
+    #[test]
+    fn routing_actually_improves_ratio_on_hacc() {
+        // The rule exists because R-index sorting hurts HACC (Table VI):
+        // verify the routed choice beats the un-routed one.
+        let h = hacc();
+        let routed = crate::compressors::mode_compressor(choose_compressor(
+            &h,
+            Mode::BestCompression,
+        ));
+        let unrouted = crate::compressors::mode_compressor(Mode::BestCompression);
+        let r1 = routed.compress(&h, 1e-4).unwrap().compression_ratio();
+        let r2 = unrouted.compress(&h, 1e-4).unwrap().compression_ratio();
+        assert!(r1 > r2, "routed {r1:.3} should beat unrouted {r2:.3}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Particle-range sharding: contiguous, disjoint, covering ranges, plus
+//! cost-based rebalancing driven by observed per-shard compression cost.
+
+/// One shard: particle range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Shard id (rank id in the in-situ setting).
+    pub id: usize,
+    /// First particle index.
+    pub start: usize,
+    /// One past the last particle index.
+    pub end: usize,
+}
+
+impl Shard {
+    /// Number of particles.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split `n` particles into `k` balanced contiguous shards (sizes differ
+/// by at most one).
+pub fn split_even(n: usize, k: usize) -> Vec<Shard> {
+    let k = k.max(1);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for id in 0..k {
+        let len = base + usize::from(id < extra);
+        out.push(Shard {
+            id,
+            start,
+            end: start + len,
+        });
+        start += len;
+    }
+    out
+}
+
+/// Rebalance shard boundaries so predicted per-shard cost is even.
+/// `cost_per_particle[i]` is the observed cost of shard `i` divided by
+/// its size from a previous round; boundaries move so each new shard
+/// carries ~1/k of the total predicted cost. Contiguity is preserved.
+pub fn rebalance(shards: &[Shard], cost_per_particle: &[f64]) -> Vec<Shard> {
+    assert_eq!(shards.len(), cost_per_particle.len());
+    if shards.is_empty() {
+        return Vec::new();
+    }
+    let n = shards.last().unwrap().end;
+    let k = shards.len();
+    // Piecewise-constant cost density over the particle axis.
+    let total: f64 = shards
+        .iter()
+        .zip(cost_per_particle)
+        .map(|(s, &c)| s.len() as f64 * c.max(1e-12))
+        .sum();
+    let target = total / k as f64;
+    let mut out = Vec::with_capacity(k);
+    let mut cur_shard = 0usize;
+    let mut pos = 0usize;
+    let mut budget = target;
+    let mut start = 0usize;
+    for id in 0..k {
+        if id == k - 1 {
+            out.push(Shard { id, start, end: n });
+            break;
+        }
+        // Advance until the budget for this shard is spent.
+        while cur_shard < k {
+            let density = cost_per_particle[cur_shard].max(1e-12);
+            let avail = (shards[cur_shard].end - pos) as f64 * density;
+            if avail >= budget {
+                pos += (budget / density).ceil() as usize;
+                pos = pos.min(n);
+                budget = target;
+                break;
+            }
+            budget -= avail;
+            pos = shards[cur_shard].end;
+            cur_shard += 1;
+        }
+        let end = pos.max(start + usize::from(start < n)).min(n);
+        out.push(Shard { id, start, end });
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+
+    fn assert_partition(shards: &[Shard], n: usize) {
+        assert_eq!(shards.first().unwrap().start, 0);
+        assert_eq!(shards.last().unwrap().end, n);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "shards must be contiguous");
+        }
+    }
+
+    #[test]
+    fn even_split_covers() {
+        for (n, k) in [(100, 7), (5, 10), (0, 3), (1024, 16)] {
+            let shards = split_even(n, k);
+            assert_eq!(shards.len(), k);
+            assert_partition(&shards, n);
+            let max = shards.iter().map(Shard::len).max().unwrap();
+            let min = shards.iter().map(Shard::len).min().unwrap();
+            assert!(max - min <= 1, "n={n} k={k}: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn rebalance_shifts_towards_expensive_shards() {
+        let shards = split_even(1000, 4);
+        // Shard 0 is 3x as expensive per particle: it should shrink.
+        let rebalanced = rebalance(&shards, &[3.0, 1.0, 1.0, 1.0]);
+        assert_partition(&rebalanced, 1000);
+        assert!(
+            rebalanced[0].len() < shards[0].len(),
+            "expensive shard should shrink: {} -> {}",
+            shards[0].len(),
+            rebalanced[0].len()
+        );
+    }
+
+    #[test]
+    fn rebalance_uniform_cost_is_stable() {
+        let shards = split_even(1200, 6);
+        let rebalanced = rebalance(&shards, &[1.0; 6]);
+        assert_partition(&rebalanced, 1200);
+        for (a, b) in shards.iter().zip(rebalanced.iter()) {
+            assert!((a.len() as i64 - b.len() as i64).abs() <= 2);
+        }
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        Prop::new("shard partition").cases(64).run(|rng| {
+            let n = rng.below_usize(100_000);
+            let k = 1 + rng.below_usize(64);
+            let shards = split_even(n, k);
+            assert_partition(&shards, n);
+            let costs: Vec<f64> = (0..k).map(|_| 0.1 + rng.next_f64() * 10.0).collect();
+            let rb = rebalance(&shards, &costs);
+            assert_eq!(rb.len(), k);
+            assert_partition(&rb, n);
+        });
+    }
+}

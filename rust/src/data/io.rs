@@ -1,0 +1,156 @@
+//! Binary snapshot file format (little-endian):
+//!
+//! ```text
+//! magic   8  b"NBLCSNAP"
+//! version 4  u32 (currently 1)
+//! n       8  u64 particle count
+//! box     8  f64 box size
+//! seed    8  u64 generator seed
+//! name    4+L u32 length + utf8 bytes
+//! fields  6 × n × 4  f32 arrays in FIELD_NAMES order
+//! ```
+//!
+//! This is the on-disk form the in-situ pipeline writes when it stores
+//! *initial* (uncompressed) data, and what `nblc gen --out` produces.
+
+use crate::error::{Error, Result};
+use crate::snapshot::Snapshot;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"NBLCSNAP";
+const VERSION: u32 = 1;
+
+/// Write a snapshot to `path`.
+pub fn write_snapshot(snap: &Snapshot, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(snap.len() as u64).to_le_bytes())?;
+    w.write_all(&snap.box_size.to_le_bytes())?;
+    w.write_all(&snap.seed.to_le_bytes())?;
+    let name = snap.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    for field in &snap.fields {
+        // Bulk conversion: safe reinterpretation via chunked buffer.
+        let mut buf = Vec::with_capacity(field.len() * 4);
+        for &x in field {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a snapshot from `path`.
+pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Format {
+            expected: String::from_utf8_lossy(MAGIC).into_owned(),
+            found: String::from_utf8_lossy(&magic).into_owned(),
+        });
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    r.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        return Err(Error::Format {
+            expected: format!("version {VERSION}"),
+            found: format!("version {version}"),
+        });
+    }
+    r.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    if n > (1usize << 40) {
+        return Err(Error::corrupt("implausible particle count"));
+    }
+    r.read_exact(&mut u64b)?;
+    let box_size = f64::from_le_bytes(u64b);
+    r.read_exact(&mut u64b)?;
+    let seed = u64::from_le_bytes(u64b);
+    r.read_exact(&mut u32b)?;
+    let name_len = u32::from_le_bytes(u32b) as usize;
+    if name_len > 4096 {
+        return Err(Error::corrupt("implausible name length"));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes)
+        .map_err(|_| Error::corrupt("snapshot name is not utf8"))?;
+
+    let mut fields: [Vec<f32>; 6] = Default::default();
+    let mut buf = vec![0u8; n * 4];
+    for field in fields.iter_mut() {
+        r.read_exact(&mut buf)?;
+        field.reserve_exact(n);
+        for c in buf.chunks_exact(4) {
+            field.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+    }
+    let mut snap = Snapshot::new(name, fields, box_size)?;
+    snap.seed = seed;
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("nblc_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = generate_md(&MdConfig {
+            n_particles: 5000,
+            ..Default::default()
+        });
+        let p = tmpfile("roundtrip.snap");
+        write_snapshot(&s, &p).unwrap();
+        let back = read_snapshot(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.len(), s.len());
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.seed, s.seed);
+        assert_eq!(back.box_size, s.box_size);
+        for f in 0..6 {
+            assert_eq!(back.fields[f], s.fields[f]);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("badmagic.snap");
+        std::fs::write(&p, b"NOTASNAPxxxxxxxxxxxxxxxxxxx").unwrap();
+        let r = read_snapshot(&p);
+        std::fs::remove_file(&p).ok();
+        assert!(matches!(r, Err(Error::Format { .. })));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let s = generate_md(&MdConfig {
+            n_particles: 1000,
+            ..Default::default()
+        });
+        let p = tmpfile("trunc.snap");
+        write_snapshot(&s, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let r = read_snapshot(&p);
+        std::fs::remove_file(&p).ok();
+        assert!(r.is_err());
+    }
+}

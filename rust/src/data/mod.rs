@@ -1,0 +1,64 @@
+//! Data substrate: synthetic N-body snapshot generators calibrated to
+//! the statistical structure of the paper's two data sets, plus a binary
+//! snapshot file format.
+//!
+//! | Paper data set | Generator | Key statistics reproduced |
+//! |---|---|---|
+//! | HACC (cosmology, hierarchical) | [`gen_cosmo`] | `yy` approximately sorted; `xx` very smooth in index space; `zz` piecewise-smooth with halo jumps; velocities = smooth bulk flow + halo offsets + dispersion |
+//! | AMDF (molecular dynamics, nanoparticle) | [`gen_md`] | low index-space coherence (diffusion-mixed atom order), high *spatial* coherence (R-index sorting helps), Maxwell-Boltzmann velocities |
+//!
+//! See DESIGN.md §2 for the substitution argument and the calibration
+//! tests at the bottom of each generator for the Table III targets.
+
+pub mod gen_cosmo;
+pub mod gen_md;
+pub mod io;
+
+use crate::snapshot::Snapshot;
+
+/// Which reference data set a benchmark runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// HACC-like hierarchical cosmology snapshot.
+    Hacc,
+    /// AMDF-like molecular-dynamics nanoparticle snapshot.
+    Amdf,
+}
+
+impl DatasetKind {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::Hacc => "HACC",
+            DatasetKind::Amdf => "AMDF",
+        }
+    }
+}
+
+/// Generate the standard benchmark snapshot for `kind` at `n` particles.
+pub fn generate(kind: DatasetKind, n: usize, seed: u64) -> Snapshot {
+    match kind {
+        DatasetKind::Hacc => gen_cosmo::generate_cosmo(&gen_cosmo::CosmoConfig {
+            n_particles: n,
+            seed,
+            ..Default::default()
+        }),
+        DatasetKind::Amdf => gen_md::generate_md(&gen_md::MdConfig {
+            n_particles: n,
+            seed,
+            ..Default::default()
+        }),
+    }
+}
+
+/// Default benchmark particle counts on this testbed (scaled-down from
+/// the paper's 147.3M / 2.8M; override with `NBLC_SCALE=full`).
+pub fn default_n(kind: DatasetKind) -> usize {
+    let full = std::env::var("NBLC_SCALE").map(|s| s == "full").unwrap_or(false);
+    match (kind, full) {
+        (DatasetKind::Hacc, false) => 2_000_000,
+        (DatasetKind::Hacc, true) => 16_000_000,
+        (DatasetKind::Amdf, false) => 1_000_000,
+        (DatasetKind::Amdf, true) => 2_800_000,
+    }
+}

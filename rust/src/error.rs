@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for all `nblc` operations.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Malformed or truncated compressed stream.
+    #[error("corrupt stream: {0}")]
+    Corrupt(String),
+
+    /// A compressed stream claims a different format/version than expected.
+    #[error("format mismatch: expected {expected}, found {found}")]
+    Format { expected: String, found: String },
+
+    /// Invalid user-supplied parameter.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// Error-bound violation detected during verification.
+    #[error("error bound violated: index {index}, |err|={err:.3e} > eb={eb:.3e}")]
+    BoundViolation { index: usize, err: f64, eb: f64 },
+
+    /// Configuration file problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA runtime problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / pipeline problems.
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand for a corrupt-stream error.
+    pub fn corrupt(msg: impl Into<String>) -> Self {
+        Error::Corrupt(msg.into())
+    }
+    /// Shorthand for an invalid-argument error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArg(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

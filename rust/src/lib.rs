@@ -1,0 +1,54 @@
+//! # nblc — Single-Snapshot Lossy Compression for N-Body Simulations
+//!
+//! `nblc` is a production-oriented framework reproducing Tao, Di, Chen &
+//! Cappello, *"In-Depth Exploration of Single-Snapshot Lossy Compression
+//! Techniques for N-Body Simulations"* (2017). It provides:
+//!
+//! * **Error-bounded lossy compressors** for 1D particle fields:
+//!   SZ (LCF and LV prediction), CPC2000, FPZIP-like, ZFP-like,
+//!   ISABELA-like, and a from-scratch DEFLATE-style lossless baseline.
+//! * **The paper's optimizations**: SZ-LV, segmented R-index sorting
+//!   (SZ-LV-RX), partial-radix R-index sorting (SZ-LV-PRX), and the
+//!   combined SZ-CPC2000, exposed as three compression *modes*
+//!   (`best_speed`, `best_tradeoff`, `best_compression`).
+//! * **An in-situ streaming coordinator**: sharding, bounded-queue
+//!   backpressure, worker scheduling, and a GPFS-like parallel-file-system
+//!   model for scaling studies.
+//! * **A PJRT runtime** executing the AOT-compiled JAX/Pallas
+//!   prediction+quantization kernels (`artifacts/*.hlo.txt`) from the Rust
+//!   hot path.
+//! * **Benchmark harnesses** regenerating every table and figure of the
+//!   paper's evaluation section (see `benches/`).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nblc::data::gen_md::{MdConfig, generate_md};
+//! use nblc::compressors::{Mode, mode_compressor};
+//! use nblc::snapshot::SnapshotCompressor;
+//!
+//! let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
+//! let comp = mode_compressor(Mode::BestSpeed);
+//! let bundle = comp.compress(&snap, 1e-4).unwrap();
+//! println!("ratio = {:.2}", bundle.compression_ratio());
+//! let restored = comp.decompress(&bundle).unwrap();
+//! assert_eq!(restored.len(), snap.len());
+//! ```
+
+pub mod error;
+pub mod util;
+pub mod testkit;
+pub mod codec;
+pub mod model;
+pub mod rindex;
+pub mod data;
+pub mod snapshot;
+pub mod compressors;
+pub mod metrics;
+pub mod config;
+pub mod cli;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+pub use error::{Error, Result};

@@ -1,0 +1,337 @@
+//! `nblc` — the launcher / leader entrypoint.
+//!
+//! Subcommands:
+//!   gen        generate a synthetic snapshot to a file
+//!   compress   compress a snapshot file with a named method
+//!   decompress decompress a bundle back to a snapshot file
+//!   analyze    distortion report (max err / NRMSE / PSNR per field)
+//!   pipeline   run the in-situ pipeline from a config file
+//!   info       print dataset / artifact / runtime diagnostics
+
+use nblc::cli::Args;
+use nblc::compressors::{by_name, mode_compressor};
+use nblc::config::{ConfigDoc, PipelineSettings};
+use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::coordinator::{choose_compressor, GpfsModel};
+use nblc::data::io::{read_snapshot, write_snapshot};
+use nblc::data::{generate, DatasetKind};
+use nblc::error::{Error, Result};
+use nblc::metrics::ErrorStats;
+use nblc::snapshot::FIELD_NAMES;
+use nblc::util::humansize;
+use nblc::util::timer::Timer;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const HELP: &str = "\
+nblc — single-snapshot lossy compression for N-body simulations
+
+USAGE: nblc <command> [flags]
+
+COMMANDS:
+  gen        --dataset hacc|amdf --n <count> --seed <u64> --out <file>
+  compress   <in.snap> <out.nblc> --method <name> [--eb 1e-4]
+  decompress <in.nblc> <out.snap> --method <name>
+  analyze    <orig.snap> <recon.snap>
+  pipeline   --config <file.toml>
+  info       [--artifacts <dir>]
+
+Methods: gzip cpc2000 fpzip isabela zfp sz sz_lv sz_lv_rx sz_lv_prx sz_cpc2000
+Modes (pipeline): best_speed best_tradeoff best_compression
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print!("{HELP}");
+        return;
+    }
+    let parsed = match Args::parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&parsed) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "gen" => cmd_gen(args),
+        "compress" => cmd_compress(args),
+        "decompress" => cmd_decompress(args),
+        "analyze" => cmd_analyze(args),
+        "pipeline" => cmd_pipeline(args),
+        "info" => cmd_info(args),
+        other => Err(Error::invalid(format!(
+            "unknown command '{other}' (try --help)"
+        ))),
+    }
+}
+
+fn dataset_kind(name: &str) -> Result<DatasetKind> {
+    match name {
+        "hacc" => Ok(DatasetKind::Hacc),
+        "amdf" => Ok(DatasetKind::Amdf),
+        _ => Err(Error::invalid(format!("unknown dataset '{name}'"))),
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    args.expect_known(&["dataset", "n", "seed", "out"])?;
+    let kind = dataset_kind(&args.get_or("dataset", "hacc"))?;
+    let n: usize = args.get_parse("n", 1_000_000)?;
+    let seed: u64 = args.get_parse("seed", nblc::bench::BENCH_SEED)?;
+    let out = PathBuf::from(args.get_or("out", "snapshot.snap"));
+    let t = Timer::start();
+    let snap = generate(kind, n, seed);
+    write_snapshot(&snap, &out)?;
+    println!(
+        "generated {} ({} particles, {}) in {} -> {}",
+        kind.name(),
+        snap.len(),
+        humansize::bytes(snap.total_bytes() as u64),
+        humansize::secs(t.secs()),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Bundle container: magic, method, eb, per-field streams.
+mod bundlefile {
+    use super::*;
+    use nblc::snapshot::{CompressedField, CompressedSnapshot};
+    use nblc::util::varint::{get_uvarint, put_uvarint};
+    use std::io::{Read, Write};
+
+    const MAGIC: &[u8; 8] = b"NBLCBNDL";
+
+    pub fn write(bundle: &CompressedSnapshot, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        let mut head = Vec::new();
+        put_uvarint(&mut head, bundle.compressor.len() as u64);
+        head.extend_from_slice(bundle.compressor.as_bytes());
+        head.extend_from_slice(&bundle.eb_rel.to_le_bytes());
+        put_uvarint(&mut head, bundle.n as u64);
+        put_uvarint(&mut head, bundle.fields.len() as u64);
+        w.write_all(&head)?;
+        for f in &bundle.fields {
+            let mut fh = Vec::new();
+            put_uvarint(&mut fh, f.name.len() as u64);
+            fh.extend_from_slice(f.name.as_bytes());
+            put_uvarint(&mut fh, f.n as u64);
+            put_uvarint(&mut fh, f.bytes.len() as u64);
+            w.write_all(&fh)?;
+            w.write_all(&f.bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read(path: &Path) -> Result<CompressedSnapshot> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        if bytes.len() < 8 || &bytes[..8] != MAGIC {
+            return Err(Error::Format {
+                expected: "NBLCBNDL".into(),
+                found: "bad magic".into(),
+            });
+        }
+        let mut pos = 8usize;
+        let name_len = get_uvarint(&bytes, &mut pos)? as usize;
+        let compressor = String::from_utf8(bytes[pos..pos + name_len].to_vec())
+            .map_err(|_| Error::corrupt("bundle method name not utf8"))?;
+        pos += name_len;
+        let eb_rel = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let n = get_uvarint(&bytes, &mut pos)? as usize;
+        let n_fields = get_uvarint(&bytes, &mut pos)? as usize;
+        let mut fields = Vec::with_capacity(n_fields);
+        for _ in 0..n_fields {
+            let nl = get_uvarint(&bytes, &mut pos)? as usize;
+            let name = String::from_utf8(bytes[pos..pos + nl].to_vec())
+                .map_err(|_| Error::corrupt("field name not utf8"))?;
+            pos += nl;
+            let fn_ = get_uvarint(&bytes, &mut pos)? as usize;
+            let bl = get_uvarint(&bytes, &mut pos)? as usize;
+            if pos + bl > bytes.len() {
+                return Err(Error::corrupt("bundle truncated"));
+            }
+            fields.push(CompressedField {
+                name,
+                n: fn_,
+                bytes: bytes[pos..pos + bl].to_vec(),
+            });
+            pos += bl;
+        }
+        Ok(CompressedSnapshot {
+            compressor,
+            eb_rel,
+            fields,
+            n,
+        })
+    }
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    args.expect_known(&["method", "eb"])?;
+    let [input, output] = args.positionals.as_slice() else {
+        return Err(Error::invalid("usage: compress <in.snap> <out.nblc>"));
+    };
+    let method = args.get_or("method", "sz_lv");
+    let eb: f64 = args.get_parse("eb", 1e-4)?;
+    let comp =
+        by_name(&method).ok_or_else(|| Error::invalid(format!("unknown method '{method}'")))?;
+    let snap = read_snapshot(Path::new(input))?;
+    let t = Timer::start();
+    let bundle = comp.compress(&snap, eb)?;
+    let secs = t.secs();
+    bundlefile::write(&bundle, Path::new(output))?;
+    println!(
+        "{method}: {} -> {} (ratio {:.2}, {} at {})",
+        humansize::bytes(bundle.original_bytes() as u64),
+        humansize::bytes(bundle.compressed_bytes() as u64),
+        bundle.compression_ratio(),
+        humansize::secs(secs),
+        humansize::rate(bundle.original_bytes() as f64 / secs),
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    args.expect_known(&["method"])?;
+    let [input, output] = args.positionals.as_slice() else {
+        return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
+    };
+    let bundle = bundlefile::read(Path::new(input))?;
+    let method = args.get_or("method", &bundle.compressor);
+    let comp =
+        by_name(&method).ok_or_else(|| Error::invalid(format!("unknown method '{method}'")))?;
+    let t = Timer::start();
+    let snap = comp.decompress(&bundle)?;
+    write_snapshot(&snap, Path::new(output))?;
+    println!(
+        "decompressed {} particles in {} ({})",
+        snap.len(),
+        humansize::secs(t.secs()),
+        if comp.reorders() {
+            "R-index particle order"
+        } else {
+            "original particle order"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    let [orig_path, recon_path] = args.positionals.as_slice() else {
+        return Err(Error::invalid("usage: analyze <orig.snap> <recon.snap>"));
+    };
+    let orig = read_snapshot(Path::new(orig_path))?;
+    let recon = read_snapshot(Path::new(recon_path))?;
+    println!("{:>4} {:>12} {:>12} {:>10}", "fld", "max_err", "NRMSE", "PSNR");
+    for f in 0..6 {
+        let s = ErrorStats::compute(&orig.fields[f], &recon.fields[f])?;
+        println!(
+            "{:>4} {:>12.3e} {:>12.3e} {:>9.2}dB",
+            FIELD_NAMES[f], s.max_err, s.nrmse, s.psnr
+        );
+    }
+    let psnr = ErrorStats::snapshot_psnr(&orig, &recon)?;
+    println!("overall PSNR: {psnr:.2} dB");
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    args.expect_known(&["config"])?;
+    let cfg_path = args.get_or("config", "nblc.toml");
+    let doc = ConfigDoc::from_file(Path::new(&cfg_path))?;
+    let settings = PipelineSettings::from_doc(&doc)?;
+    let kind = dataset_kind(&settings.dataset)?;
+    let n = if settings.particles > 0 {
+        settings.particles
+    } else {
+        nblc::data::default_n(kind)
+    };
+    println!("generating {} snapshot (n={n})...", kind.name());
+    let snap = generate(kind, n, nblc::bench::BENCH_SEED);
+
+    let mode = if settings.auto_route {
+        let routed = choose_compressor(&snap, settings.mode);
+        if routed != settings.mode {
+            println!(
+                "scheduler: '{}' overridden to '{}' (orderly coordinate detected, par.V-C)",
+                settings.mode.name(),
+                routed.name()
+            );
+        }
+        routed
+    } else {
+        settings.mode
+    };
+
+    let factory: CompressorFactory = Arc::new(move || mode_compressor(mode));
+    let sink = if settings.sim_procs > 0 {
+        Sink::Model {
+            model: GpfsModel::default(),
+            procs: settings.sim_procs,
+        }
+    } else {
+        Sink::Null
+    };
+    let report = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: settings.shards,
+            workers: settings.workers,
+            queue_depth: settings.queue_depth,
+            eb_rel: settings.eb_rel,
+            factory,
+            sink,
+        },
+    )?;
+    println!(
+        "pipeline done: ratio {:.2}, compress rate {}, wall {}, sink {}, stalls src={} sink={}",
+        report.ratio,
+        humansize::rate(report.compress_rate),
+        humansize::secs(report.wall_secs),
+        humansize::secs(report.sink_secs),
+        report.source_stalls,
+        report.sink_stalls,
+    );
+    if settings.use_pjrt {
+        println!("(note: use_pjrt requested; PJRT quantizer engages in the sz_lv path when artifacts are present)");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts"])?;
+    println!("nblc {}", env!("CARGO_PKG_VERSION"));
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(nblc::runtime::default_artifacts_dir);
+    match nblc::runtime::Runtime::load(&dir) {
+        Ok(rt) => println!(
+            "artifacts: {} (platform {})",
+            rt.dir().display(),
+            rt.platform()
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    for kind in [DatasetKind::Hacc, DatasetKind::Amdf] {
+        println!(
+            "dataset {}: default n = {}",
+            kind.name(),
+            nblc::data::default_n(kind)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Pointwise compression-error statistics (paper §III definitions):
+//! absolute error, NRMSE = sqrt(Σe²/N)/R, and PSNR = −20·log10(NRMSE).
+
+use crate::error::{Error, Result};
+use crate::snapshot::Snapshot;
+use crate::util::stats::value_range;
+
+/// Error statistics between an original and a reconstructed field.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    /// Maximum pointwise absolute error.
+    pub max_err: f64,
+    /// Mean absolute error.
+    pub mean_err: f64,
+    /// Normalised root-mean-square error (range-normalised).
+    pub nrmse: f64,
+    /// Peak signal-to-noise ratio in dB (−20·log10(NRMSE)).
+    pub psnr: f64,
+    /// Value range of the original data.
+    pub range: f64,
+}
+
+impl ErrorStats {
+    /// Compute over one field pair.
+    pub fn compute(orig: &[f32], recon: &[f32]) -> Result<ErrorStats> {
+        if orig.len() != recon.len() {
+            return Err(Error::invalid("length mismatch in error stats"));
+        }
+        if orig.is_empty() {
+            return Ok(ErrorStats::default());
+        }
+        let range = value_range(orig);
+        let mut max_err = 0f64;
+        let mut sum_err = 0f64;
+        let mut sse = 0f64;
+        for (&a, &b) in orig.iter().zip(recon.iter()) {
+            let e = (a as f64 - b as f64).abs();
+            max_err = max_err.max(e);
+            sum_err += e;
+            sse += e * e;
+        }
+        let n = orig.len() as f64;
+        let rmse = (sse / n).sqrt();
+        let nrmse = if range > 0.0 { rmse / range } else { 0.0 };
+        let psnr = if nrmse > 0.0 {
+            -20.0 * nrmse.log10()
+        } else {
+            f64::INFINITY
+        };
+        Ok(ErrorStats {
+            max_err,
+            mean_err: sum_err / n,
+            nrmse,
+            psnr,
+            range,
+        })
+    }
+
+    /// Aggregate PSNR over all six fields of a snapshot pair (each field
+    /// range-normalised separately, then averaged in the error domain —
+    /// how Z-checker reports multi-field data).
+    pub fn snapshot_psnr(orig: &Snapshot, recon: &Snapshot) -> Result<f64> {
+        if orig.len() != recon.len() {
+            return Err(Error::invalid("snapshot length mismatch"));
+        }
+        let mut total_sq = 0f64;
+        let mut total_n = 0usize;
+        for f in 0..6 {
+            let range = value_range(&orig.fields[f]);
+            if range <= 0.0 {
+                continue;
+            }
+            for (&a, &b) in orig.fields[f].iter().zip(recon.fields[f].iter()) {
+                let e = (a as f64 - b as f64) / range;
+                total_sq += e * e;
+            }
+            total_n += orig.len();
+        }
+        if total_n == 0 || total_sq == 0.0 {
+            return Ok(f64::INFINITY);
+        }
+        let nrmse = (total_sq / total_n as f64).sqrt();
+        Ok(-20.0 * nrmse.log10())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_is_infinite_psnr() {
+        let xs = vec![1.0f32, 2.0, 3.0];
+        let s = ErrorStats::compute(&xs, &xs).unwrap();
+        assert_eq!(s.max_err, 0.0);
+        assert!(s.psnr.is_infinite());
+    }
+
+    #[test]
+    fn known_values() {
+        let orig = vec![0.0f32, 1.0];
+        let recon = vec![0.1f32, 0.9];
+        let s = ErrorStats::compute(&orig, &recon).unwrap();
+        assert!((s.max_err - 0.1).abs() < 1e-6);
+        assert!((s.nrmse - 0.1).abs() < 1e-6);
+        assert!((s.psnr - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(ErrorStats::compute(&[1.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn psnr_improves_with_smaller_error() {
+        let orig: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let coarse: Vec<f32> = orig.iter().map(|x| x + 1.0).collect();
+        let fine: Vec<f32> = orig.iter().map(|x| x + 0.01).collect();
+        let a = ErrorStats::compute(&orig, &coarse).unwrap();
+        let b = ErrorStats::compute(&orig, &fine).unwrap();
+        assert!(b.psnr > a.psnr);
+    }
+}

@@ -1,0 +1,8 @@
+//! Distortion analysis (the paper's "Z-checker" role, §VI): pointwise
+//! error statistics, PSNR, and rate-distortion sweeps.
+
+pub mod error;
+pub mod ratedist;
+
+pub use error::ErrorStats;
+pub use ratedist::{rate_distortion_curve, RdPoint};

@@ -1,0 +1,98 @@
+//! Rate-distortion sweeps (Fig. 6): run a compressor across a range of
+//! error bounds, recording (bit-rate, PSNR) pairs.
+
+use crate::error::Result;
+use crate::metrics::error::ErrorStats;
+use crate::snapshot::{Snapshot, SnapshotCompressor};
+
+/// One rate-distortion sample.
+#[derive(Clone, Copy, Debug)]
+pub struct RdPoint {
+    /// Relative error bound that produced this point.
+    pub eb_rel: f64,
+    /// Mean bits per value (32 / compression ratio).
+    pub bit_rate: f64,
+    /// Aggregate PSNR in dB.
+    pub psnr: f64,
+    /// Compression ratio.
+    pub ratio: f64,
+}
+
+/// Sweep `compressor` over `eb_rels`, skipping bounds the method cannot
+/// honour (e.g. CPC2000 below its 21-bit Morton grid). For reordering
+/// compressors the PSNR is computed against the consistently-permuted
+/// original via `perm_of` (deterministic re-sort).
+pub fn rate_distortion_curve(
+    snap: &Snapshot,
+    compressor: &dyn SnapshotCompressor,
+    eb_rels: &[f64],
+    perm_of: Option<&dyn Fn(&Snapshot, f64) -> Result<Vec<u32>>>,
+) -> Vec<RdPoint> {
+    let mut out = Vec::new();
+    for &eb in eb_rels {
+        let Ok(bundle) = compressor.compress(snap, eb) else {
+            continue;
+        };
+        let Ok(recon) = compressor.decompress(&bundle) else {
+            continue;
+        };
+        let reference = if let Some(f) = perm_of {
+            match f(snap, eb).and_then(|p| snap.permute(&p)) {
+                Ok(s) => s,
+                Err(_) => continue,
+            }
+        } else {
+            snap.clone()
+        };
+        let Ok(psnr) = ErrorStats::snapshot_psnr(&reference, &recon) else {
+            continue;
+        };
+        out.push(RdPoint {
+            eb_rel: eb,
+            bit_rate: bundle.bit_rate(),
+            psnr,
+            ratio: bundle.compression_ratio(),
+        });
+    }
+    out
+}
+
+/// Standard bound sweep for Fig. 6 (log-spaced; bit-rates < 16 as the
+/// paper restricts the plot).
+pub fn standard_bounds() -> Vec<f64> {
+    vec![1e-2, 3e-3, 1e-3, 3e-4, 1e-4, 3e-5, 1e-5, 3e-6]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::sz::Sz;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::PerField;
+
+    #[test]
+    fn curve_is_monotone_in_the_right_direction() {
+        let s = generate_md(&MdConfig {
+            n_particles: 30_000,
+            ..Default::default()
+        });
+        let comp = PerField(Sz::lv());
+        let points =
+            rate_distortion_curve(&s, &comp, &[1e-2, 1e-3, 1e-4], None);
+        assert_eq!(points.len(), 3);
+        // Tighter bound -> more bits and higher PSNR.
+        assert!(points[0].bit_rate < points[2].bit_rate);
+        assert!(points[0].psnr < points[2].psnr);
+    }
+
+    #[test]
+    fn unachievable_bounds_are_skipped() {
+        let s = generate_md(&MdConfig {
+            n_particles: 5000,
+            ..Default::default()
+        });
+        let comp = crate::compressors::cpc2000::Cpc2000;
+        let points = rate_distortion_curve(&s, &comp, &[1e-12], None);
+        assert!(points.is_empty());
+    }
+}

@@ -1,0 +1,87 @@
+//! Monotonic bijection between `f32` and `u32` (total order preserving),
+//! used by the FPZIP-like compressor: after the mapping, numeric
+//! prediction residuals can be formed in integer space and their
+//! leading-zero structure encoded, exactly as FPZIP does over the IEEE
+//! 754 representation.
+
+/// Map `f32` to `u32` such that the integer order matches the float
+/// total order (negative floats reversed, sign bit flipped).
+#[inline]
+pub fn f32_to_ord_u32(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+/// Inverse of [`f32_to_ord_u32`].
+#[inline]
+pub fn ord_u32_to_f32(u: u32) -> f32 {
+    let b = if u & 0x8000_0000 != 0 {
+        u & 0x7FFF_FFFF
+    } else {
+        !u
+    };
+    f32::from_bits(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn roundtrip_specials() {
+        for x in [
+            0.0f32, -0.0, 1.0, -1.0, f32::MIN, f32::MAX, f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE, 1e-38, -1e-38, 3.14159, -2.71828,
+        ] {
+            let back = ord_u32_to_f32(f32_to_ord_u32(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn order_preserved() {
+        let mut vals = vec![
+            -1e30f32, -5.0, -1.0, -1e-20, -0.0, 0.0, 1e-20, 0.5, 1.0, 42.0, 1e30,
+        ];
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in vals.windows(2) {
+            assert!(
+                f32_to_ord_u32(w[0]) <= f32_to_ord_u32(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn prop_order_and_roundtrip() {
+        Prop::new("floatmap monotone bijection").cases(64).run(|rng| {
+            let a = f32::from_bits(rng.next_u64() as u32);
+            let b = f32::from_bits(rng.next_u64() as u32);
+            if a.is_nan() || b.is_nan() {
+                return;
+            }
+            assert_eq!(ord_u32_to_f32(f32_to_ord_u32(a)).to_bits(), a.to_bits());
+            if a < b {
+                assert!(f32_to_ord_u32(a) < f32_to_ord_u32(b));
+            }
+        });
+    }
+
+    #[test]
+    fn nearby_floats_nearby_ints() {
+        // Truncating low bits of the ordinal representation bounds the
+        // value perturbation — the property FPZIP's precision mode uses.
+        let x = 123.456f32;
+        let u = f32_to_ord_u32(x);
+        let truncated = ord_u32_to_f32(u & !0x7FF); // drop 11 bits
+        let rel = ((x - truncated) / x).abs();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Prediction + quantization models shared by the SZ-family compressors
+//! and mirrored by the L1 Pallas kernels.
+
+pub mod quant;
+pub mod floatmap;
+
+pub use quant::{Predictor, QuantCodes, LatticeQuantizer};

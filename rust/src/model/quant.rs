@@ -1,0 +1,452 @@
+//! Error-bounded lattice quantization with LV / LCF prediction.
+//!
+//! SZ's prediction loop is inherently sequential: the predictor consumes
+//! *reconstructed* values. This module implements the parallel
+//! reformulation used throughout `nblc` (and by the Pallas kernel):
+//! with midpoint quantization the reconstruction
+//! `x̃_i = pred_i + 2eb·q_i` stays on the lattice `{x̃_0 + 2eb·k}` for
+//! both the last-value (LV) and linear-curve-fitting (LCF) predictors,
+//! and `x̃_i` is exactly the nearest lattice point to `x_i`. Hence with
+//! `k_i = round((x_i − x0)/2eb)`:
+//!
+//! * LV  (order 1): `q_i = k_i − k_{i-1}`
+//! * LCF (order 2): `q_i = k_i − 2k_{i-1} + k_{i-2}`
+//!
+//! Both are bit-identical to the sequential SZ recurrence and fully
+//! parallel; the inverse is a first/second-order prefix sum. See
+//! DESIGN.md §3 for the derivation.
+//!
+//! The quantizer shrinks the lattice step by a tiny margin
+//! (`EB_SAFETY`) so that f32/f64 roundoff can never push a reconstructed
+//! value past the user bound — matching the paper's observation that SZ
+//! errors equal the bound *exactly* in the worst case, never exceed it.
+
+use crate::error::{Error, Result};
+
+/// Relative shrink applied to the error bound before quantization so
+/// floating-point roundoff stays inside the user bound.
+pub const EB_SAFETY: f64 = 1.0 - 1e-6;
+
+/// Prediction model (paper §V-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Predictor {
+    /// Last-value model (FPZIP's degenerate Lorenzo in 1D): `pred = x̃_{i-1}`.
+    LastValue,
+    /// Linear curve fitting (SZ's 1D multilayer model):
+    /// `pred = 2x̃_{i-1} − x̃_{i-2}`.
+    LinearCurveFit,
+}
+
+impl Predictor {
+    /// Finite-difference order of the model.
+    pub fn order(self) -> usize {
+        match self {
+            Predictor::LastValue => 1,
+            Predictor::LinearCurveFit => 2,
+        }
+    }
+
+    /// Name used in tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Predictor::LastValue => "LV",
+            Predictor::LinearCurveFit => "LCF",
+        }
+    }
+}
+
+/// Quantization output: anchor value plus difference codes.
+#[derive(Clone, Debug)]
+pub struct QuantCodes {
+    /// The exact first value (lattice anchor).
+    pub anchor: f32,
+    /// Difference codes; `codes.len() == n` with `codes[0] == k_0 == 0`
+    /// and, for LCF, `codes[1] == k_1 − k_0`.
+    pub codes: Vec<i64>,
+    /// "Unpredictable" literals: `(index, exact value)` for the rare
+    /// elements whose lattice reconstruction would exceed the user bound
+    /// after f32 rounding (mirrors SZ's unpredictable-data path). The
+    /// lattice codes at these indices are kept, so downstream diffs stay
+    /// valid; reconstruction patches the value afterwards.
+    pub exceptions: Vec<(u64, f32)>,
+    /// Predictor used.
+    pub predictor: Predictor,
+    /// Effective (shrunk) half-step: reconstruction steps by `2*eb_eff`.
+    pub eb_eff: f64,
+}
+
+/// Error-bounded lattice quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct LatticeQuantizer {
+    /// The user's absolute bound (reconstruction is verified against it).
+    pub eb_user: f64,
+    /// Effective half-step (user bound × [`EB_SAFETY`]).
+    pub eb_eff: f64,
+    /// Precomputed `1 / (2 * eb_eff)` — the hot loop multiplies instead
+    /// of dividing (a per-element division costs more than the rest of
+    /// the quantization arithmetic combined).
+    inv_step: f64,
+}
+
+impl LatticeQuantizer {
+    /// Build from the user's absolute error bound.
+    pub fn new(eb_abs: f64) -> Result<Self> {
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return Err(Error::invalid(format!("error bound must be positive, got {eb_abs}")));
+        }
+        let eb_eff = eb_abs * EB_SAFETY;
+        Ok(LatticeQuantizer {
+            eb_user: eb_abs,
+            eb_eff,
+            inv_step: 1.0 / (2.0 * eb_eff),
+        })
+    }
+
+    /// Rebuild a quantizer from the *effective* half-step stored in a
+    /// compressed stream (decoder side: only `value_at` is needed).
+    pub fn from_eff(eb_eff: f64) -> Result<Self> {
+        if !(eb_eff > 0.0) || !eb_eff.is_finite() {
+            return Err(Error::corrupt(format!("invalid stream step {eb_eff}")));
+        }
+        Ok(LatticeQuantizer {
+            eb_user: eb_eff / EB_SAFETY,
+            eb_eff,
+            inv_step: 1.0 / (2.0 * eb_eff),
+        })
+    }
+
+    /// Quantizer whose lattice step absorbs the worst-case f32 rounding
+    /// of the data (`max_abs` = largest magnitude present), making the
+    /// per-element bound check unnecessary: lattice error <= eb_eff and
+    /// the final f32 cast adds at most half an ULP, which the shrunk
+    /// step already budgets for. Returns `None` when the bound is too
+    /// close to the float precision (callers fall back to the verified
+    /// path with literal exceptions).
+    pub fn with_cast_margin(eb_abs: f64, max_abs: f64) -> Option<Self> {
+        if !(eb_abs > 0.0) || !eb_abs.is_finite() {
+            return None;
+        }
+        let ulp_half = max_abs * (f32::EPSILON as f64) * 0.5;
+        let eb_eff = (eb_abs - 1.001 * ulp_half) * EB_SAFETY;
+        if eb_eff < eb_abs * 0.5 {
+            return None;
+        }
+        Some(LatticeQuantizer {
+            eb_user: eb_abs,
+            eb_eff,
+            inv_step: 1.0 / (2.0 * eb_eff),
+        })
+    }
+
+    /// Lattice index of `x` relative to `anchor` (f64 math).
+    #[inline]
+    pub fn index_of(&self, x: f32, anchor: f32) -> i64 {
+        (((x as f64) - (anchor as f64)) * self.inv_step).round() as i64
+    }
+
+    /// Reconstruct the value at lattice index `k`.
+    #[inline]
+    pub fn value_at(&self, k: i64, anchor: f32) -> f32 {
+        ((anchor as f64) + 2.0 * self.eb_eff * (k as f64)) as f32
+    }
+
+    /// Quantize a field into difference codes under `predictor`,
+    /// verifying the user bound element-wise and recording exceptions
+    /// where f32 rounding would violate it.
+    ///
+    /// Prefer [`Self::quantize_field`], which picks the margin-based
+    /// fast path (no per-element verification) when the bound allows.
+    pub fn quantize(&self, xs: &[f32], predictor: Predictor) -> QuantCodes {
+        self.quantize_impl(xs, predictor, true)
+    }
+
+    /// Entry point used by the compressors: scans the field once for
+    /// its magnitude, then uses the cast-margin quantizer (verification
+    /// elided, zero exceptions by construction) whenever the bound
+    /// permits, falling back to the verified path otherwise.
+    pub fn quantize_field(eb_abs: f64, xs: &[f32], predictor: Predictor) -> Result<QuantCodes> {
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
+        match Self::with_cast_margin(eb_abs, max_abs) {
+            Some(q) => Ok(q.quantize_impl(xs, predictor, false)),
+            None => Ok(Self::new(eb_abs)?.quantize_impl(xs, predictor, true)),
+        }
+    }
+
+    fn quantize_impl(&self, xs: &[f32], predictor: Predictor, verify: bool) -> QuantCodes {
+        let n = xs.len();
+        let mut codes = vec![0i64; n];
+        let mut exceptions = Vec::new();
+        if n == 0 {
+            return QuantCodes {
+                anchor: 0.0,
+                codes,
+                exceptions,
+                predictor,
+                eb_eff: self.eb_eff,
+            };
+        }
+        let anchor = xs[0];
+        let anchor64 = anchor as f64;
+        // k_i for every element (k_0 = 0 by construction).
+        let mut k_prev = 0i64; // k_{i-1}
+        let mut k_prev2 = 0i64; // k_{i-2}
+        match (predictor, verify) {
+            (Predictor::LastValue, false) => {
+                // Hot path: no verification, order-1 difference.
+                for i in 1..n {
+                    let k = ((xs[i] as f64 - anchor64) * self.inv_step).round() as i64;
+                    codes[i] = k - k_prev;
+                    k_prev = k;
+                }
+            }
+            _ => {
+                for i in 1..n {
+                    let k = ((xs[i] as f64 - anchor64) * self.inv_step).round() as i64;
+                    codes[i] = match predictor {
+                        Predictor::LastValue => k - k_prev,
+                        Predictor::LinearCurveFit => {
+                            if i == 1 {
+                                k - k_prev
+                            } else {
+                                k - 2 * k_prev + k_prev2
+                            }
+                        }
+                    };
+                    if verify {
+                        // Element-wise check against the *user* bound
+                        // (SZ's unpredictable-data path).
+                        let recon = self.value_at(k, anchor);
+                        if ((recon as f64) - (xs[i] as f64)).abs() > self.eb_user {
+                            exceptions.push((i as u64, xs[i]));
+                        }
+                    }
+                    k_prev2 = k_prev;
+                    k_prev = k;
+                }
+            }
+        }
+        QuantCodes {
+            anchor,
+            codes,
+            exceptions,
+            predictor,
+            eb_eff: self.eb_eff,
+        }
+    }
+
+    /// Reconstruct a field from difference codes (inverse prefix sums),
+    /// then patch exception literals.
+    pub fn reconstruct(&self, q: &QuantCodes) -> Vec<f32> {
+        let n = q.codes.len();
+        let mut out = Vec::with_capacity(n);
+        if n == 0 {
+            return out;
+        }
+        out.push(q.anchor);
+        let mut k_prev = 0i64;
+        let mut k_prev2 = 0i64;
+        match q.predictor {
+            Predictor::LastValue => {
+                for i in 1..n {
+                    let k = k_prev + q.codes[i];
+                    out.push(self.value_at(k, q.anchor));
+                    k_prev = k;
+                }
+            }
+            Predictor::LinearCurveFit => {
+                for i in 1..n {
+                    let k = if i == 1 {
+                        k_prev + q.codes[i]
+                    } else {
+                        q.codes[i] + 2 * k_prev - k_prev2
+                    };
+                    out.push(self.value_at(k, q.anchor));
+                    k_prev2 = k_prev;
+                    k_prev = k;
+                }
+            }
+        }
+        for &(idx, v) in &q.exceptions {
+            out[idx as usize] = v;
+        }
+        out
+    }
+
+    /// Prediction NRMSE of a model on raw data (Table III): the RMS of
+    /// `x_i − pred(x_{i-1}, x_{i-2})` normalised by the value range,
+    /// evaluated on the *original* values (prediction-accuracy probe,
+    /// independent of the error bound).
+    pub fn prediction_nrmse(xs: &[f32], predictor: Predictor) -> f64 {
+        let n = xs.len();
+        if n < 3 {
+            return 0.0;
+        }
+        let range = crate::util::stats::value_range(xs);
+        if range <= 0.0 {
+            return 0.0;
+        }
+        let mut sse = 0.0f64;
+        let mut count = 0usize;
+        match predictor {
+            Predictor::LastValue => {
+                for i in 1..n {
+                    let e = xs[i] as f64 - xs[i - 1] as f64;
+                    sse += e * e;
+                    count += 1;
+                }
+            }
+            Predictor::LinearCurveFit => {
+                for i in 2..n {
+                    let pred = 2.0 * xs[i - 1] as f64 - xs[i - 2] as f64;
+                    let e = xs[i] as f64 - pred;
+                    sse += e * e;
+                    count += 1;
+                }
+            }
+        }
+        (sse / count as f64).sqrt() / range
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{gen_eb, gen_field_like, Prop};
+    use crate::util::stats::value_range;
+
+    fn check_bound(xs: &[f32], eb: f64, pred: Predictor) {
+        let q = LatticeQuantizer::new(eb).unwrap();
+        let codes = q.quantize(xs, pred);
+        let recon = q.reconstruct(&codes);
+        assert_eq!(recon.len(), xs.len());
+        for (i, (&a, &b)) in xs.iter().zip(recon.iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            assert!(err <= eb, "i={i} err={err:e} eb={eb:e} pred={pred:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+            check_bound(&[], 1e-3, pred);
+            check_bound(&[42.0], 1e-3, pred);
+            check_bound(&[1.0, 2.0], 1e-3, pred);
+        }
+    }
+
+    #[test]
+    fn bound_holds_smooth_data() {
+        let xs: Vec<f32> = (0..10_000).map(|i| (i as f32 * 0.01).sin() * 50.0).collect();
+        for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+            for eb in [1e-1, 1e-3, 1e-5] {
+                check_bound(&xs, eb, pred);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_eb_rejected() {
+        assert!(LatticeQuantizer::new(0.0).is_err());
+        assert!(LatticeQuantizer::new(-1.0).is_err());
+        assert!(LatticeQuantizer::new(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn lv_codes_match_sequential_sz() {
+        // Reference: the true sequential SZ recurrence with reconstructed
+        // values must produce identical codes.
+        let xs: Vec<f32> = vec![1.0, 1.5, 1.4, 3.0, 2.2, 2.25, -1.0, 7.5];
+        let eb = 0.05;
+        let q = LatticeQuantizer::new(eb).unwrap();
+        let fast = q.quantize(&xs, Predictor::LastValue);
+
+        // Sequential: x̃_0 = x_0; q_i = round((x_i - x̃_{i-1}) / 2eb').
+        let step = 2.0 * q.eb_eff;
+        let mut recon_prev = xs[0] as f64;
+        let mut seq_codes = vec![0i64];
+        for i in 1..xs.len() {
+            let code = ((xs[i] as f64 - recon_prev) / step).round() as i64;
+            recon_prev += step * code as f64;
+            seq_codes.push(code);
+        }
+        assert_eq!(fast.codes, seq_codes);
+    }
+
+    #[test]
+    fn lcf_codes_match_sequential_sz() {
+        let xs: Vec<f32> = vec![0.0, 0.4, 0.9, 1.2, 1.0, 0.5, 0.6, 5.0, 4.9];
+        let eb = 0.03;
+        let q = LatticeQuantizer::new(eb).unwrap();
+        let fast = q.quantize(&xs, Predictor::LinearCurveFit);
+
+        let step = 2.0 * q.eb_eff;
+        let mut recon = vec![xs[0] as f64];
+        let mut seq_codes = vec![0i64];
+        for i in 1..xs.len() {
+            let pred = if i == 1 {
+                recon[0]
+            } else {
+                2.0 * recon[i - 1] - recon[i - 2]
+            };
+            let code = ((xs[i] as f64 - pred) / step).round() as i64;
+            recon.push(pred + step * code as f64);
+            seq_codes.push(code);
+        }
+        assert_eq!(fast.codes, seq_codes);
+    }
+
+    #[test]
+    fn lv_beats_lcf_on_noise() {
+        // Table III's core observation: on irregular data LV's prediction
+        // error is smaller than LCF's.
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();
+        let lv = LatticeQuantizer::prediction_nrmse(&xs, Predictor::LastValue);
+        let lcf = LatticeQuantizer::prediction_nrmse(&xs, Predictor::LinearCurveFit);
+        assert!(lv < lcf, "LV {lv} should beat LCF {lcf} on noise");
+        // Theory: lcf/lv = sqrt(6)/sqrt(2) = sqrt(3) on white noise.
+        let ratio = lcf / lv;
+        assert!((ratio - 3f64.sqrt()).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn lcf_wins_on_linear_ramp() {
+        let xs: Vec<f32> = (0..10_000).map(|i| 3.0 + 0.5 * i as f32).collect();
+        let lv = LatticeQuantizer::prediction_nrmse(&xs, Predictor::LastValue);
+        let lcf = LatticeQuantizer::prediction_nrmse(&xs, Predictor::LinearCurveFit);
+        assert!(lcf < lv * 1e-3, "lcf={lcf} lv={lv}");
+    }
+
+    #[test]
+    fn prop_bound_holds_on_field_like_data() {
+        Prop::new("lattice quantizer bound").cases(64).run(|rng| {
+            let xs = gen_field_like(rng, 0..3000);
+            let range = value_range(&xs).max(1e-6);
+            let eb = gen_eb(rng) * range;
+            let pred = if rng.next_u64() % 2 == 0 {
+                Predictor::LastValue
+            } else {
+                Predictor::LinearCurveFit
+            };
+            let q = LatticeQuantizer::new(eb).unwrap();
+            let codes = q.quantize(&xs, pred);
+            let recon = q.reconstruct(&codes);
+            for (i, (&a, &b)) in xs.iter().zip(recon.iter()).enumerate() {
+                let err = (a as f64 - b as f64).abs();
+                assert!(err <= eb, "i={i} err={err:e} eb={eb:e}");
+            }
+        });
+    }
+
+    #[test]
+    fn codes_entropy_smaller_for_smoother_data() {
+        use crate::util::stats::entropy_bits;
+        let q = LatticeQuantizer::new(1e-3).unwrap();
+        let smooth: Vec<f32> = (0..50_000).map(|i| (i as f32 * 0.001).sin()).collect();
+        let mut rng = crate::util::rng::Pcg64::seeded(77);
+        let rough: Vec<f32> = (0..50_000).map(|_| rng.next_f32()).collect();
+        let hs = entropy_bits(q.quantize(&smooth, Predictor::LastValue).codes.into_iter());
+        let hr = entropy_bits(q.quantize(&rough, Predictor::LastValue).codes.into_iter());
+        assert!(hs < hr, "smooth {hs} vs rough {hr}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Bit interleaving (Morton / Z-order keys) over 2..6 fields, plus the
+//! uniform quantization used to derive integer coordinates from floats
+//! (CPC2000 stage 1: "convert all floating-point values to integer
+//! numbers by dividing them by user-required error bound").
+
+/// Uniformly quantize a float field to `bits`-bit integers over its own
+/// min..max range. With `bits = ceil(log2(range/2eb))` the bin width is
+/// `<= 2eb`, so bin centers reconstruct within `eb`.
+pub fn quantize_uniform(xs: &[f32], bits: u32) -> Vec<u32> {
+    assert!(bits >= 1 && bits <= 21);
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let (lo, hi) = crate::util::stats::min_max(xs);
+    let range = (hi - lo) as f64;
+    let levels = (1u64 << bits) as f64;
+    if range <= 0.0 {
+        return vec![0; xs.len()];
+    }
+    let scale = levels / range;
+    let max_q = (1u32 << bits) - 1;
+    xs.iter()
+        .map(|&x| {
+            let q = (((x - lo) as f64) * scale) as i64;
+            q.clamp(0, max_q as i64) as u32
+        })
+        .collect()
+}
+
+/// Number of bits needed so a uniform quantization of `range` has bin
+/// width `<= step` (at least 1, at most 21).
+pub fn bits_for_step(range: f64, step: f64) -> u32 {
+    if range <= 0.0 || step <= 0.0 || range <= step {
+        return 1;
+    }
+    let bins = (range / step).ceil();
+    let bits = (bins.log2().ceil() as u32).max(1);
+    bits.min(21)
+}
+
+/// Spread the low 21 bits of `v` so consecutive bits land 3 apart.
+#[inline]
+fn spread3(v: u64) -> u64 {
+    let mut x = v & 0x1F_FFFF; // 21 bits
+    x = (x | (x << 32)) & 0x1F00000000FFFF;
+    x = (x | (x << 16)) & 0x1F0000FF0000FF;
+    x = (x | (x << 8)) & 0x100F00F00F00F00F;
+    x = (x | (x << 4)) & 0x10C30C30C30C30C3;
+    x = (x | (x << 2)) & 0x1249249249249249;
+    x
+}
+
+/// Compact the inverse of [`spread3`].
+#[inline]
+fn compact3(v: u64) -> u64 {
+    let mut x = v & 0x1249249249249249;
+    x = (x | (x >> 2)) & 0x10C30C30C30C30C3;
+    x = (x | (x >> 4)) & 0x100F00F00F00F00F;
+    x = (x | (x >> 8)) & 0x1F0000FF0000FF;
+    x = (x | (x >> 16)) & 0x1F00000000FFFF;
+    x = (x | (x >> 32)) & 0x1F_FFFF;
+    x
+}
+
+/// 3-way Morton interleave of `bits`-bit values (bits <= 21). Bit `i` of
+/// `x` lands at position `3i`, of `y` at `3i+1`, of `z` at `3i+2` — the
+/// zigzag space-filling order of CPC2000 (Fig. 2a).
+#[inline]
+pub fn interleave3(x: u32, y: u32, z: u32) -> u64 {
+    spread3(x as u64) | (spread3(y as u64) << 1) | (spread3(z as u64) << 2)
+}
+
+/// Inverse of [`interleave3`].
+#[inline]
+pub fn deinterleave3(m: u64) -> (u32, u32, u32) {
+    (
+        compact3(m) as u32,
+        compact3(m >> 1) as u32,
+        compact3(m >> 2) as u32,
+    )
+}
+
+/// General n-way interleave (n = fields.len() in 1..=6, n*bits <= 63).
+/// Bit `i` of field `f` lands at position `n*i + f`. The 3-way case
+/// dispatches to the fast path.
+pub fn interleave_fields(fields: &[&[u32]], bits: u32) -> Vec<u64> {
+    let nf = fields.len();
+    assert!((1..=6).contains(&nf));
+    assert!(bits as usize * nf <= 63, "interleave exceeds 63 bits");
+    let n = fields[0].len();
+    assert!(fields.iter().all(|f| f.len() == n));
+    if nf == 3 {
+        return (0..n)
+            .map(|i| interleave3(fields[0][i], fields[1][i], fields[2][i]))
+            .collect();
+    }
+    (0..n)
+        .map(|i| {
+            let mut key = 0u64;
+            for b in 0..bits {
+                for (f, field) in fields.iter().enumerate() {
+                    let bit = (field[i] >> b) & 1;
+                    key |= (bit as u64) << (b as usize * nf + f);
+                }
+            }
+            key
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn interleave3_roundtrip() {
+        Prop::new("morton3 roundtrip").cases(64).run(|rng| {
+            let x = rng.below(1 << 21) as u32;
+            let y = rng.below(1 << 21) as u32;
+            let z = rng.below(1 << 21) as u32;
+            let m = interleave3(x, y, z);
+            assert_eq!(deinterleave3(m), (x, y, z));
+        });
+    }
+
+    #[test]
+    fn interleave3_known_values() {
+        // x=1 -> bit 0; y=1 -> bit 1; z=1 -> bit 2.
+        assert_eq!(interleave3(1, 0, 0), 0b001);
+        assert_eq!(interleave3(0, 1, 0), 0b010);
+        assert_eq!(interleave3(0, 0, 1), 0b100);
+        assert_eq!(interleave3(2, 0, 0), 0b001000);
+        assert_eq!(interleave3(3, 3, 3), 0b111111);
+    }
+
+    #[test]
+    fn morton_order_is_spatially_local() {
+        // Points in the same octant share high key bits: keys of nearby
+        // points are numerically close.
+        let near = interleave3(100, 200, 300) ^ interleave3(101, 200, 300);
+        let far = interleave3(100, 200, 300) ^ interleave3(100_000, 200, 300);
+        assert!(near < far);
+    }
+
+    #[test]
+    fn general_interleave_matches_3way() {
+        let xs = vec![5u32, 100, 999];
+        let ys = vec![7u32, 0, 123];
+        let zs = vec![1u32, 55, 1 << 20];
+        let fast = interleave_fields(&[&xs, &ys, &zs], 21);
+        for i in 0..3 {
+            assert_eq!(fast[i], interleave3(xs[i], ys[i], zs[i]));
+        }
+    }
+
+    #[test]
+    fn six_way_interleave_roundtrip_bits() {
+        // 6 fields x 10 bits = 60 bits; verify bit placement.
+        let fields: Vec<Vec<u32>> = (0..6).map(|f| vec![1u32 << f]).collect();
+        let refs: Vec<&[u32]> = fields.iter().map(|v| v.as_slice()).collect();
+        let keys = interleave_fields(&refs, 10);
+        let mut expect = 0u64;
+        for f in 0..6usize {
+            // bit f of field f is set -> lands at 6*f + f = 7f
+            expect |= 1u64 << (7 * f);
+        }
+        assert_eq!(keys[0], expect);
+    }
+
+    #[test]
+    fn quantize_uniform_bounds_and_monotone() {
+        let xs = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let q = quantize_uniform(&xs, 8);
+        assert_eq!(q.len(), 5);
+        assert!(q.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(q[0], 0);
+        assert_eq!(*q.last().unwrap(), 255);
+    }
+
+    #[test]
+    fn quantize_constant_field() {
+        let xs = vec![3.3f32; 10];
+        assert!(quantize_uniform(&xs, 12).iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn bits_for_step_math() {
+        assert_eq!(bits_for_step(1.0, 1.0 / 256.0), 8);
+        assert_eq!(bits_for_step(1.0, 2.0), 1);
+        assert_eq!(bits_for_step(0.0, 0.1), 1);
+        // Huge ratios clamp at 21 (the Morton limit per dimension).
+        assert_eq!(bits_for_step(1.0, 1e-9), 21);
+    }
+
+    #[test]
+    fn quantize_bin_width_respects_eb() {
+        // bits_for_step + quantize_uniform together bound the bin width.
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.1).collect();
+        let range = 99.9f64;
+        let eb = 0.05;
+        let bits = bits_for_step(range, 2.0 * eb);
+        let q = quantize_uniform(&xs, bits);
+        let (lo, _) = crate::util::stats::min_max(&xs);
+        let bin = range / (1u64 << bits) as f64;
+        assert!(bin <= 2.0 * eb + 1e-12);
+        for (i, &x) in xs.iter().enumerate() {
+            let center = lo as f64 + (q[i] as f64 + 0.5) * bin;
+            assert!(
+                (center - x as f64).abs() <= eb + 1e-9,
+                "i={i} x={x} center={center}"
+            );
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Stable LSD radix sort over u64 keys returning permutations, with the
+//! paper's two refinements:
+//!
+//! * **Partial-radix (PRX) sorting** (§V-B): the last `ignore_bits` bits
+//!   of the R-index are skipped, cutting sort rounds while leaving the
+//!   reordered arrays smooth enough that the compression ratio is
+//!   unchanged (Table V).
+//! * **Segmented sorting**: the particle array is split into segments of
+//!   `seg` particles and each segment is sorted independently (Table IV) —
+//!   this bounds working-set size and preserves large-scale structure.
+//!
+//! Radix digits are 8 bits; rounds whose covered key bits are entirely
+//! ignored or entirely constant are skipped.
+
+/// Stable ascending sort permutation of `keys`, ignoring the low
+/// `ignore_bits` bits of each key. `perm[i]` is the index (into `keys`)
+/// of the i-th smallest key.
+pub fn sort_perm(keys: &[u64], ignore_bits: u32) -> Vec<u32> {
+    let n = keys.len();
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    if n <= 1 {
+        return perm;
+    }
+    sort_perm_range(keys, &mut perm, ignore_bits);
+    perm
+}
+
+/// Sort `perm` (a slice of indices into `keys`) in place, stable, by the
+/// masked keys.
+fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32) {
+    let mask = if ignore_bits >= 64 {
+        0u64
+    } else {
+        !0u64 << ignore_bits
+    };
+    // Determine which bits actually vary (skip constant high rounds).
+    let mut or_all = 0u64;
+    let mut and_all = !0u64;
+    for &i in perm.iter() {
+        let k = keys[i as usize] & mask;
+        or_all |= k;
+        and_all &= k;
+    }
+    let varying = or_all & !and_all;
+    if varying == 0 {
+        return;
+    }
+    let hi_bit = 63 - varying.leading_zeros();
+    let lo_bit = varying.trailing_zeros();
+
+    let n = perm.len();
+    let mut aux: Vec<u32> = vec![0; n];
+    let mut counts = [0usize; 256];
+    let first_round = (lo_bit / 8) as usize;
+    let last_round = (hi_bit / 8) as usize;
+    for round in first_round..=last_round {
+        let shift = (round * 8) as u32;
+        // Skip rounds whose digit never varies.
+        if (varying >> shift) & 0xFF == 0 {
+            continue;
+        }
+        counts.fill(0);
+        for &i in perm.iter() {
+            let d = ((keys[i as usize] & mask) >> shift) & 0xFF;
+            counts[d as usize] += 1;
+        }
+        let mut sum = 0usize;
+        let mut starts = [0usize; 256];
+        for d in 0..256 {
+            starts[d] = sum;
+            sum += counts[d];
+        }
+        for &i in perm.iter() {
+            let d = (((keys[i as usize] & mask) >> shift) & 0xFF) as usize;
+            aux[starts[d]] = i;
+            starts[d] += 1;
+        }
+        perm.copy_from_slice(&aux);
+    }
+}
+
+/// Segmented sort: independently sort each consecutive segment of `seg`
+/// particles (the paper's Table IV setup). `seg == 0` means one global
+/// segment.
+pub fn segmented_sort_perm(keys: &[u64], seg: usize, ignore_bits: u32) -> Vec<u32> {
+    let n = keys.len();
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    if n <= 1 {
+        return perm;
+    }
+    let seg = if seg == 0 { n } else { seg };
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + seg).min(n);
+        sort_perm_range(keys, &mut perm[start..end], ignore_bits);
+        start = end;
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use crate::util::rng::Pcg64;
+
+    fn is_sorted_by_key(keys: &[u64], perm: &[u32], ignore_bits: u32) -> bool {
+        let mask = if ignore_bits >= 64 { 0 } else { !0u64 << ignore_bits };
+        perm.windows(2)
+            .all(|w| keys[w[0] as usize] & mask <= keys[w[1] as usize] & mask)
+    }
+
+    fn is_permutation(perm: &[u32]) -> bool {
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if seen[p as usize] {
+                return false;
+            }
+            seen[p as usize] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn empty_single_sorted() {
+        assert!(sort_perm(&[], 0).is_empty());
+        assert_eq!(sort_perm(&[42], 0), vec![0]);
+        assert_eq!(sort_perm(&[1, 2, 3], 0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sorts_random_keys() {
+        let mut rng = Pcg64::seeded(10);
+        let keys: Vec<u64> = (0..50_000).map(|_| rng.next_u64()).collect();
+        let perm = sort_perm(&keys, 0);
+        assert!(is_permutation(&perm));
+        assert!(is_sorted_by_key(&keys, &perm, 0));
+    }
+
+    #[test]
+    fn stability_within_equal_keys() {
+        let keys = vec![5u64, 3, 5, 3, 5];
+        let perm = sort_perm(&keys, 0);
+        assert_eq!(perm, vec![1, 3, 0, 2, 4]);
+    }
+
+    #[test]
+    fn ignore_bits_keeps_original_order_within_buckets() {
+        // With low bits ignored, elements equal in the masked key keep
+        // their original relative order (stability = PRX's smoothness).
+        let keys = vec![0b1010u64, 0b1001, 0b1000, 0b0111, 0b0100];
+        let perm = sort_perm(&keys, 2);
+        // masked: 0b1000,0b1000,0b1000,0b0100,0b0100
+        assert_eq!(perm, vec![3, 4, 0, 1, 2]);
+    }
+
+    #[test]
+    fn full_ignore_is_identity() {
+        let keys = vec![9u64, 1, 5];
+        assert_eq!(sort_perm(&keys, 64), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn segmented_sorts_each_segment() {
+        let keys = vec![3u64, 1, 2, 9, 7, 8];
+        let perm = segmented_sort_perm(&keys, 3, 0);
+        assert_eq!(perm, vec![1, 2, 0, 4, 5, 3]);
+    }
+
+    #[test]
+    fn segment_zero_means_global() {
+        let mut rng = Pcg64::seeded(3);
+        let keys: Vec<u64> = (0..1000).map(|_| rng.below(1 << 40)).collect();
+        assert_eq!(segmented_sort_perm(&keys, 0, 0), sort_perm(&keys, 0));
+    }
+
+    #[test]
+    fn prop_sort_invariants() {
+        Prop::new("radix sort invariants").cases(48).run(|rng| {
+            let n = rng.below_usize(3000);
+            let top = 1 + rng.below(60) as u32;
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64() >> (64 - top)).collect();
+            let ignore = rng.below(24) as u32;
+            let seg = if rng.next_f64() < 0.5 {
+                0
+            } else {
+                1 + rng.below_usize(500)
+            };
+            let perm = segmented_sort_perm(&keys, seg, ignore);
+            assert!(is_permutation(&perm));
+            let segn = if seg == 0 { n.max(1) } else { seg };
+            let mut start = 0;
+            while start < n {
+                let end = (start + segn).min(n);
+                assert!(is_sorted_by_key(&keys, &perm[start..end], ignore));
+                start = end;
+            }
+        });
+    }
+
+    #[test]
+    fn matches_std_sort() {
+        let mut rng = Pcg64::seeded(8);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.below(1 << 30)).collect();
+        let perm = sort_perm(&keys, 0);
+        let mut expect: Vec<u32> = (0..keys.len() as u32).collect();
+        expect.sort_by_key(|&i| (keys[i as usize], i)); // stable by construction
+        assert_eq!(perm, expect);
+    }
+}

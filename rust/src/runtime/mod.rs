@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas graphs
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them from the Rust hot path. Python never runs at request
+//! time.
+//!
+//! * [`pjrt`] — client + executable cache keyed by the artifact
+//!   manifest.
+//! * [`quantizer`] — the SZ hot path backed by the `quantize_*` graphs:
+//!   blocks are padded to the AOT element count, codes come back as
+//!   i32, and a single Rust pass rebuilds exceptions/bound guarantees
+//!   (DESIGN.md §3).
+
+pub mod pjrt;
+pub mod quantizer;
+
+pub use pjrt::Runtime;
+pub use quantizer::PjrtQuantizer;
+
+/// Default artifacts directory (relative to the repo root; tests run
+/// from the workspace root so this resolves to `./artifacts`).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("NBLC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

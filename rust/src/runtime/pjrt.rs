@@ -1,0 +1,175 @@
+//! PJRT client wrapper: manifest-driven loading of HLO-text artifacts,
+//! compilation on the CPU PJRT client, and an executable cache.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §1).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from `manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Graph name ("quantize_lv", ...).
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Element count the graph was lowered at.
+    pub n: usize,
+    /// Comma-separated input names (documentation / arity check).
+    pub inputs: Vec<String>,
+}
+
+/// Parse `manifest.txt` (TSV: name, file, n, inputs).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            return Err(Error::corrupt(format!(
+                "manifest line {} has {} fields, expected 4",
+                lineno + 1,
+                parts.len()
+            )));
+        }
+        out.push(ArtifactMeta {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            n: parts[2]
+                .parse()
+                .map_err(|_| Error::corrupt("manifest n not an integer"))?,
+            inputs: parts[3].split(',').map(|s| s.to_string()).collect(),
+        });
+    }
+    Ok(out)
+}
+
+/// PJRT runtime: one CPU client plus compiled executables for every
+/// manifest entry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    metas: HashMap<String, ArtifactMeta>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile all artifacts in `dir` (must contain
+    /// `manifest.txt`). Compilation happens once; executions are cheap.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e:?}")))?;
+        let mut exes = HashMap::new();
+        let mut meta_map = HashMap::new();
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", meta.file)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e:?}", meta.name)))?;
+            exes.insert(meta.name.clone(), exe);
+            meta_map.insert(meta.name.clone(), meta);
+        }
+        Ok(Runtime {
+            client,
+            exes,
+            metas: meta_map,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Try to load the default artifacts dir; `None` when artifacts have
+    /// not been built (callers fall back to the native path).
+    pub fn load_default() -> Option<Runtime> {
+        let dir = super::default_artifacts_dir();
+        Runtime::load(&dir).ok()
+    }
+
+    /// Artifacts directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Metadata for a graph.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown graph '{name}'")))
+    }
+
+    /// Execute a graph with the given input literals; returns the tuple
+    /// elements of the (always-tupled) result.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown graph '{name}'")))?;
+        let meta = &self.metas[name];
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "graph '{name}' takes {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e:?}")))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e:?}")))?;
+        literal
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = "quantize_lv\tquantize_lv.hlo.txt\t262144\tx,x0,inv_step\n\
+                    field_metrics\tfield_metrics.hlo.txt\t262144\tx,y\n";
+        let metas = parse_manifest(text).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].name, "quantize_lv");
+        assert_eq!(metas[0].n, 262144);
+        assert_eq!(metas[0].inputs, vec!["x", "x0", "inv_step"]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("too\tfew\tfields\n").is_err());
+        assert!(parse_manifest("a\tb\tnot_a_number\tc\n").is_err());
+    }
+
+    // Full PJRT execution tests live in tests/runtime_integration.rs and
+    // are skipped when artifacts/ has not been built.
+}

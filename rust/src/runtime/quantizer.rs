@@ -1,0 +1,241 @@
+//! PJRT-backed SZ quantization: the L1 Pallas kernel (AOT-compiled)
+//! produces the difference codes; a single Rust pass re-derives lattice
+//! indices, enforces the *user* bound exactly (escaping violators as
+//! literal exceptions), and hands `QuantCodes` to the unchanged entropy
+//! stage.
+//!
+//! Chunking: the AOT graph is lowered at a fixed element count `N`.
+//! Longer fields run in ceil(n/N) executions; the kernel's halo clamps
+//! at each chunk start (making the chunk's first code 0), so the Rust
+//! side patches `codes[chunk_start]` with the true cross-chunk
+//! difference — one `index_of` per chunk. Tails are padded with the
+//! last value (codes 0, discarded).
+
+use crate::error::Result;
+use crate::model::quant::{LatticeQuantizer, Predictor, QuantCodes};
+use crate::runtime::pjrt::Runtime;
+use crate::snapshot::FieldCompressor;
+use std::sync::Arc;
+
+/// SZ quantization through the AOT-compiled Pallas kernels.
+pub struct PjrtQuantizer {
+    runtime: Arc<Runtime>,
+}
+
+impl PjrtQuantizer {
+    /// Wrap a loaded runtime.
+    pub fn new(runtime: Arc<Runtime>) -> Self {
+        PjrtQuantizer { runtime }
+    }
+
+    fn graph_name(predictor: Predictor) -> &'static str {
+        match predictor {
+            Predictor::LastValue => "quantize_lv",
+            Predictor::LinearCurveFit => "quantize_lcf",
+        }
+    }
+
+    /// Quantize a field via PJRT, returning bound-verified codes.
+    pub fn quantize(
+        &self,
+        xs: &[f32],
+        eb_abs: f64,
+        predictor: Predictor,
+    ) -> Result<QuantCodes> {
+        let quantizer = LatticeQuantizer::new(eb_abs)?;
+        let n = xs.len();
+        let graph = Self::graph_name(predictor);
+        let block_n = self.runtime.meta(graph)?.n;
+        let mut codes: Vec<i64> = Vec::with_capacity(n);
+        if n == 0 {
+            return Ok(QuantCodes {
+                anchor: 0.0,
+                codes,
+                exceptions: Vec::new(),
+                predictor,
+                eb_eff: quantizer.eb_eff,
+            });
+        }
+        let anchor = xs[0];
+        let inv_step = (1.0 / (2.0 * quantizer.eb_eff)) as f32;
+        let x0_lit = xla::Literal::vec1(&[anchor]);
+        let inv_lit = xla::Literal::vec1(&[inv_step]);
+
+        let mut chunk_start = 0usize;
+        let mut padded = vec![0f32; block_n];
+        while chunk_start < n {
+            let take = (n - chunk_start).min(block_n);
+            padded[..take].copy_from_slice(&xs[chunk_start..chunk_start + take]);
+            // Pad tail with the last real value: zero codes, discarded.
+            let last = xs[chunk_start + take - 1];
+            padded[take..].fill(last);
+            let x_lit = xla::Literal::vec1(&padded);
+            let outputs = self
+                .runtime
+                .execute(graph, &[x_lit, x0_lit.clone(), inv_lit.clone()])?;
+            let chunk_codes: Vec<i32> = outputs[0]
+                .to_vec::<i32>()
+                .map_err(|e| crate::error::Error::Runtime(format!("codes fetch: {e:?}")))?;
+            codes.extend(chunk_codes[..take].iter().map(|&c| c as i64));
+            chunk_start += take;
+        }
+
+        // Patch cross-chunk boundaries (kernel clamps its halo per
+        // execution) and element 0, then verify the user bound while
+        // walking the lattice once.
+        //
+        // NOTE: the kernel quantizes in f32. For eb small relative to
+        // the value magnitudes (k beyond 2^23) the f32 lattice index can
+        // drift from the f64 one; the bound check below catches every
+        // such element and escapes it, so streams stay correct — just
+        // with more exceptions than the native f64 path would produce.
+        let f32_k = |x: f32| -> i64 {
+            (((x - anchor) as f64) * inv_step as f64).round() as i64
+        };
+        let mut boundary = block_n;
+        while boundary < n {
+            codes[boundary] = f32_k(xs[boundary]) - f32_k(xs[boundary - 1]);
+            if predictor == Predictor::LinearCurveFit {
+                codes[boundary] = f32_k(xs[boundary]) - 2 * f32_k(xs[boundary - 1])
+                    + f32_k(xs[boundary.saturating_sub(2)]);
+                if boundary + 1 < n {
+                    codes[boundary + 1] = f32_k(xs[boundary + 1])
+                        - 2 * f32_k(xs[boundary])
+                        + f32_k(xs[boundary - 1]);
+                }
+            }
+            boundary += block_n;
+        }
+
+        let mut exceptions = Vec::new();
+        let mut k: i64 = 0;
+        let mut k_prev: i64 = 0;
+        for i in 1..n {
+            let next = match predictor {
+                Predictor::LastValue => k + codes[i],
+                Predictor::LinearCurveFit => codes[i] + 2 * k - k_prev,
+            };
+            k_prev = k;
+            k = next;
+            let recon = quantizer.value_at(k, anchor);
+            if ((recon as f64) - (xs[i] as f64)).abs() > quantizer.eb_user {
+                exceptions.push((i as u64, xs[i]));
+            }
+        }
+
+        Ok(QuantCodes {
+            anchor,
+            codes,
+            exceptions,
+            predictor,
+            eb_eff: quantizer.eb_eff,
+        })
+    }
+
+    /// Reconstruct a field via the `dequantize_*` graph (used by the
+    /// verification path of the pipeline and the runtime tests).
+    pub fn dequantize(&self, q: &QuantCodes) -> Result<Vec<f32>> {
+        let graph = match q.predictor {
+            Predictor::LastValue => "dequantize_lv",
+            Predictor::LinearCurveFit => "dequantize_lcf",
+        };
+        let block_n = self.runtime.meta(graph)?.n;
+        let n = q.codes.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let step = (2.0 * q.eb_eff) as f32;
+        let x0_lit = xla::Literal::vec1(&[q.anchor]);
+        let step_lit = xla::Literal::vec1(&[step]);
+        let mut out: Vec<f32> = Vec::with_capacity(n);
+        // The graph prefix-sums per execution, so feed it *absolute*
+        // chunk-local codes: convert via the running lattice index.
+        let mut k_carry: i64 = 0;
+        let mut k_prev_carry: i64 = 0;
+        let mut chunk_start = 0usize;
+        let mut chunk_codes = vec![0i32; block_n];
+        while chunk_start < n {
+            let take = (n - chunk_start).min(block_n);
+            // Make chunk-local code[0] carry the absolute index so the
+            // in-graph cumsum starts from the right lattice point.
+            for j in 0..take {
+                let c = q.codes[chunk_start + j];
+                chunk_codes[j] = if j == 0 {
+                    match q.predictor {
+                        Predictor::LastValue => (k_carry + c) as i32,
+                        Predictor::LinearCurveFit => (c + 2 * k_carry - k_prev_carry) as i32,
+                    }
+                } else if j == 1 && q.predictor == Predictor::LinearCurveFit {
+                    // Local double-cumsum stream: c'_1 = c - k_{s-1}
+                    // (derivation in DESIGN.md §3 chunking note).
+                    (c - k_carry) as i32
+                } else {
+                    c as i32
+                };
+            }
+            chunk_codes[take..].fill(0);
+            // Track carries using the original difference stream.
+            for j in 0..take {
+                let c = q.codes[chunk_start + j];
+                let next = if chunk_start + j == 0 {
+                    0
+                } else {
+                    match q.predictor {
+                        Predictor::LastValue => k_carry + c,
+                        Predictor::LinearCurveFit => c + 2 * k_carry - k_prev_carry,
+                    }
+                };
+                k_prev_carry = k_carry;
+                k_carry = next;
+            }
+            let codes_lit = xla::Literal::vec1(&chunk_codes);
+            let outputs = self
+                .runtime
+                .execute(graph, &[codes_lit, x0_lit.clone(), step_lit.clone()])?;
+            let vals: Vec<f32> = outputs[0]
+                .to_vec::<f32>()
+                .map_err(|e| crate::error::Error::Runtime(format!("values fetch: {e:?}")))?;
+            out.extend_from_slice(&vals[..take]);
+            chunk_start += take;
+        }
+        for &(idx, v) in &q.exceptions {
+            out[idx as usize] = v;
+        }
+        Ok(out)
+    }
+}
+
+/// A `FieldCompressor` running SZ with the PJRT-backed quantizer — the
+/// production configuration of the three-layer architecture.
+pub struct SzPjrt {
+    quantizer: PjrtQuantizer,
+    inner: crate::compressors::sz::Sz,
+}
+
+impl SzPjrt {
+    /// SZ-LV over PJRT.
+    pub fn lv(runtime: Arc<Runtime>) -> Self {
+        SzPjrt {
+            quantizer: PjrtQuantizer::new(runtime),
+            inner: crate::compressors::sz::Sz::lv(),
+        }
+    }
+}
+
+impl FieldCompressor for SzPjrt {
+    fn name(&self) -> &'static str {
+        "sz_lv_pjrt"
+    }
+
+    fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+        let q = self
+            .quantizer
+            .quantize(xs, eb_abs, self.inner.cfg.predictor)?;
+        self.inner.compress_codes(&q)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        // Streams are format-identical to native SZ.
+        self.inner.decompress(bytes)
+    }
+}

@@ -1,0 +1,376 @@
+//! Core data model: particle snapshots (six 1D f32 fields with
+//! index-consistent particles), compressed bundles, and the compressor
+//! traits every algorithm implements.
+//!
+//! As in the paper (§III), a snapshot holds exactly six floating-point
+//! variables — `xx, yy, zz` (coordinates) and `vx, vy, vz` (velocities) —
+//! stored as separate 1D arrays whose indices are consistent for the same
+//! particle. Decompression of R-index-family compressors may return a
+//! *permutation* of the particles; that is legal as long as the
+//! permutation is identical across all six arrays
+//! ([`SnapshotCompressor::reorders`]).
+
+use crate::error::{Error, Result};
+use crate::util::stats;
+
+/// Field names in canonical order.
+pub const FIELD_NAMES: [&str; 6] = ["xx", "yy", "zz", "vx", "vy", "vz"];
+
+/// Index of the first velocity field in [`FIELD_NAMES`].
+pub const VEL_OFFSET: usize = 3;
+
+/// A particle snapshot: six index-consistent 1D fields.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// Data set name ("HACC", "AMDF", ...), used in reports.
+    pub name: String,
+    /// Field arrays in [`FIELD_NAMES`] order.
+    pub fields: [Vec<f32>; 6],
+    /// Simulation box edge (coordinate fields live in `[0, box_size]`).
+    pub box_size: f64,
+    /// PRNG seed that generated this snapshot (0 for file-loaded data).
+    pub seed: u64,
+}
+
+impl Snapshot {
+    /// Construct from six arrays, validating equal lengths.
+    pub fn new(name: impl Into<String>, fields: [Vec<f32>; 6], box_size: f64) -> Result<Self> {
+        let n = fields[0].len();
+        if fields.iter().any(|f| f.len() != n) {
+            return Err(Error::invalid("snapshot fields have unequal lengths"));
+        }
+        Ok(Snapshot {
+            name: name.into(),
+            fields,
+            box_size,
+            seed: 0,
+        })
+    }
+
+    /// Number of particles.
+    pub fn len(&self) -> usize {
+        self.fields[0].len()
+    }
+
+    /// True when the snapshot holds no particles.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Uncompressed size in bytes (6 × n × 4).
+    pub fn total_bytes(&self) -> usize {
+        6 * self.len() * 4
+    }
+
+    /// Field by canonical index.
+    pub fn field(&self, i: usize) -> &[f32] {
+        &self.fields[i]
+    }
+
+    /// The three coordinate fields.
+    pub fn coords(&self) -> [&[f32]; 3] {
+        [&self.fields[0], &self.fields[1], &self.fields[2]]
+    }
+
+    /// The three velocity fields.
+    pub fn velocities(&self) -> [&[f32]; 3] {
+        [&self.fields[3], &self.fields[4], &self.fields[5]]
+    }
+
+    /// Value range per field (max - min).
+    pub fn ranges(&self) -> [f64; 6] {
+        std::array::from_fn(|i| stats::value_range(&self.fields[i]))
+    }
+
+    /// Absolute error bounds derived from a value-range-based relative
+    /// bound (paper §III: `eb_abs = eb_rel * (max - min)` per variable).
+    pub fn abs_bounds(&self, eb_rel: f64) -> [f64; 6] {
+        let r = self.ranges();
+        std::array::from_fn(|i| (eb_rel * r[i]).max(f64::MIN_POSITIVE))
+    }
+
+    /// Extract a contiguous particle range (used by the sharding layer).
+    pub fn slice(&self, start: usize, end: usize) -> Snapshot {
+        Snapshot {
+            name: self.name.clone(),
+            fields: std::array::from_fn(|i| self.fields[i][start..end].to_vec()),
+            box_size: self.box_size,
+            seed: self.seed,
+        }
+    }
+
+    /// Apply one permutation to all six fields (consistent reordering).
+    pub fn permute(&self, perm: &[u32]) -> Result<Snapshot> {
+        if perm.len() != self.len() {
+            return Err(Error::invalid("permutation length mismatch"));
+        }
+        let fields = std::array::from_fn(|i| {
+            perm.iter()
+                .map(|&p| self.fields[i][p as usize])
+                .collect::<Vec<f32>>()
+        });
+        Ok(Snapshot {
+            name: self.name.clone(),
+            fields,
+            box_size: self.box_size,
+            seed: self.seed,
+        })
+    }
+}
+
+/// One compressed field stream.
+#[derive(Clone, Debug)]
+pub struct CompressedField {
+    /// Field name (for reports).
+    pub name: String,
+    /// Original element count.
+    pub n: usize,
+    /// Encoded bytes.
+    pub bytes: Vec<u8>,
+}
+
+impl CompressedField {
+    /// Compression ratio of this field alone (orig bytes / encoded bytes).
+    pub fn ratio(&self) -> f64 {
+        if self.bytes.is_empty() {
+            return f64::INFINITY;
+        }
+        (self.n * 4) as f64 / self.bytes.len() as f64
+    }
+}
+
+/// A fully compressed snapshot bundle.
+#[derive(Clone, Debug)]
+pub struct CompressedSnapshot {
+    /// Compressor name that produced this bundle.
+    pub compressor: String,
+    /// The relative error bound used.
+    pub eb_rel: f64,
+    /// Per-field streams, in [`FIELD_NAMES`] order. Joint compressors
+    /// (CPC2000 family) may use fewer streams; they document their own
+    /// layout and keep per-field accounting where possible.
+    pub fields: Vec<CompressedField>,
+    /// Original particle count.
+    pub n: usize,
+}
+
+impl CompressedSnapshot {
+    /// Total compressed bytes.
+    pub fn compressed_bytes(&self) -> usize {
+        self.fields.iter().map(|f| f.bytes.len()).sum()
+    }
+
+    /// Original bytes (6 fields × 4 bytes).
+    pub fn original_bytes(&self) -> usize {
+        6 * self.n * 4
+    }
+
+    /// Overall compression ratio.
+    pub fn compression_ratio(&self) -> f64 {
+        let c = self.compressed_bytes();
+        if c == 0 {
+            return f64::INFINITY;
+        }
+        self.original_bytes() as f64 / c as f64
+    }
+
+    /// Mean bit-rate in bits/value (32 / ratio), the x-axis of Fig. 6.
+    pub fn bit_rate(&self) -> f64 {
+        32.0 / self.compression_ratio()
+    }
+}
+
+/// Compressor over a single 1D field under an *absolute* error bound.
+///
+/// Deliberately NOT `Send + Sync`: the PJRT-backed implementation wraps
+/// thread-affine XLA handles. Parallel pipelines construct one
+/// compressor per worker thread via a factory (see
+/// `coordinator::pipeline`).
+pub trait FieldCompressor {
+    /// Short identifier ("sz_lv", "zfp", ...).
+    fn name(&self) -> &'static str;
+    /// Compress `xs` so every reconstructed value differs by at most
+    /// `eb_abs`.
+    fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>>;
+    /// Reconstruct the field (element count is embedded in the stream).
+    fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>>;
+}
+
+/// Compressor over a whole snapshot under a value-range-relative bound.
+/// (Not `Send + Sync` — see [`FieldCompressor`].)
+pub trait SnapshotCompressor {
+    /// Short identifier used in tables.
+    fn name(&self) -> &'static str;
+    /// Compress all six fields under `eb_rel` (per-field absolute bounds
+    /// derived from each field's value range).
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot>;
+    /// Reconstruct a snapshot (possibly particle-permuted, see
+    /// [`Self::reorders`]).
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot>;
+    /// True when decompression may return the particles in a different
+    /// (but cross-field-consistent) order.
+    fn reorders(&self) -> bool {
+        false
+    }
+}
+
+/// Adapter: lift any [`FieldCompressor`] to a [`SnapshotCompressor`]
+/// by compressing each of the six arrays independently (how the paper
+/// applies the mesh compressors to particle data, §IV).
+pub struct PerField<T: FieldCompressor>(pub T);
+
+impl<T: FieldCompressor> SnapshotCompressor for PerField<T> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let mut fields = Vec::with_capacity(6);
+        for i in 0..6 {
+            let bytes = self.0.compress(&snap.fields[i], ebs[i])?;
+            fields.push(CompressedField {
+                name: FIELD_NAMES[i].to_string(),
+                n: snap.len(),
+                bytes,
+            });
+        }
+        Ok(CompressedSnapshot {
+            compressor: self.name().to_string(),
+            eb_rel,
+            fields,
+            n: snap.len(),
+        })
+    }
+
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        if c.fields.len() != 6 {
+            return Err(Error::corrupt("expected 6 per-field streams"));
+        }
+        let mut fields: [Vec<f32>; 6] = Default::default();
+        for i in 0..6 {
+            fields[i] = self.0.decompress(&c.fields[i].bytes)?;
+            if fields[i].len() != c.n {
+                return Err(Error::corrupt("field length mismatch after decompress"));
+            }
+        }
+        Snapshot::new("decompressed", fields, 0.0)
+    }
+}
+
+/// Verify the per-element error bound between an original and a
+/// reconstructed snapshot (same particle order), per field.
+pub fn verify_bounds(orig: &Snapshot, recon: &Snapshot, eb_rel: f64) -> Result<()> {
+    if orig.len() != recon.len() {
+        return Err(Error::invalid("length mismatch in bound verification"));
+    }
+    let ebs = orig.abs_bounds(eb_rel);
+    for f in 0..6 {
+        let eb = ebs[f];
+        for (i, (&a, &b)) in orig.fields[f].iter().zip(recon.fields[f].iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            if err > eb {
+                return Err(Error::BoundViolation {
+                    index: f * orig.len() + i,
+                    err,
+                    eb,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_snapshot() -> Snapshot {
+        Snapshot::new(
+            "t",
+            [
+                vec![0.0, 1.0, 2.0],
+                vec![0.5, 1.5, 2.5],
+                vec![0.0, 0.0, 4.0],
+                vec![-1.0, 1.0, 0.0],
+                vec![0.0, 0.0, 0.0],
+                vec![2.0, 2.0, 2.0],
+            ],
+            4.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lengths_must_match() {
+        let r = Snapshot::new(
+            "bad",
+            [
+                vec![0.0],
+                vec![0.0, 1.0],
+                vec![],
+                vec![],
+                vec![],
+                vec![],
+            ],
+            1.0,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ranges_and_bounds() {
+        let s = tiny_snapshot();
+        let r = s.ranges();
+        assert_eq!(r[0], 2.0);
+        assert_eq!(r[2], 4.0);
+        let ebs = s.abs_bounds(1e-2);
+        assert!((ebs[0] - 0.02).abs() < 1e-12);
+        assert!((ebs[2] - 0.04).abs() < 1e-12);
+        // constant field -> tiny positive bound, never zero
+        assert!(ebs[4] > 0.0);
+    }
+
+    #[test]
+    fn slice_and_bytes() {
+        let s = tiny_snapshot();
+        assert_eq!(s.total_bytes(), 6 * 3 * 4);
+        let sl = s.slice(1, 3);
+        assert_eq!(sl.len(), 2);
+        assert_eq!(sl.fields[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn permute_consistent() {
+        let s = tiny_snapshot();
+        let p = s.permute(&[2, 0, 1]).unwrap();
+        assert_eq!(p.fields[0], vec![2.0, 0.0, 1.0]);
+        assert_eq!(p.fields[5], vec![2.0, 2.0, 2.0]);
+        assert!(s.permute(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn verify_bounds_catches_violation() {
+        let s = tiny_snapshot();
+        let mut bad = s.clone();
+        bad.fields[0][1] += 1.0;
+        assert!(verify_bounds(&s, &bad, 1e-4).is_err());
+        assert!(verify_bounds(&s, &s, 1e-4).is_ok());
+    }
+
+    #[test]
+    fn ratio_math() {
+        let c = CompressedSnapshot {
+            compressor: "x".into(),
+            eb_rel: 1e-4,
+            fields: vec![CompressedField {
+                name: "xx".into(),
+                n: 100,
+                bytes: vec![0u8; 300],
+            }],
+            n: 100,
+        };
+        assert!((c.compression_ratio() - 8.0).abs() < 1e-12);
+        assert!((c.bit_rate() - 4.0).abs() < 1e-12);
+    }
+}

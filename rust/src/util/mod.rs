@@ -1,0 +1,14 @@
+//! Low-level substrates shared by all subsystems: deterministic PRNG,
+//! bitstreams, varints, timing, statistics helpers, and a thread pool.
+
+pub mod rng;
+pub mod bits;
+pub mod varint;
+pub mod timer;
+pub mod stats;
+pub mod humansize;
+pub mod threadpool;
+
+pub use bits::{BitReader, BitWriter};
+pub use rng::Pcg64;
+pub use timer::Timer;

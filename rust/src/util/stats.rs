@@ -1,0 +1,174 @@
+//! Streaming statistics over f32 fields: min/max/range, mean, variance,
+//! entropy estimates, autocorrelation. Used by the generators'
+//! calibration tests, the metrics module, and the scheduler's
+//! orderliness probe.
+
+/// Min/max/range of a slice (single pass, NaN-poisoning avoided by
+/// treating NaN as "ignored"; N-body fields never legitimately contain
+/// NaN, and the generators/tests assert so).
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+/// Value range `max - min` as f64 (0 for empty/constant input).
+pub fn value_range(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let (lo, hi) = min_max(xs);
+    (hi - lo) as f64
+}
+
+/// Mean of a slice in f64.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance in f64.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Lag-k autocorrelation coefficient (Pearson, population normalisation).
+pub fn autocorrelation(xs: &[f32], lag: usize) -> f64 {
+    if xs.len() <= lag + 1 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = variance(xs);
+    if var <= 0.0 {
+        return 1.0;
+    }
+    let n = xs.len() - lag;
+    let cov = (0..n)
+        .map(|i| (xs[i] as f64 - m) * (xs[i + lag] as f64 - m))
+        .sum::<f64>()
+        / xs.len() as f64;
+    cov / var
+}
+
+/// Shannon entropy (bits/symbol) of an i64 symbol stream, computed from
+/// exact counts. Used to sanity-check the Huffman stage against the
+/// theoretical optimum.
+pub fn entropy_bits(symbols: impl Iterator<Item = i64>) -> f64 {
+    use std::collections::HashMap;
+    let mut counts: HashMap<i64, u64> = HashMap::new();
+    let mut n: u64 = 0;
+    for s in symbols {
+        *counts.entry(s).or_insert(0) += 1;
+        n += 1;
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / nf;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Fraction of elements for which `xs[i] >= xs[i-1]` — the "orderliness"
+/// probe used by the scheduler to detect approximately-sorted fields
+/// (e.g. HACC's `yy`), per the paper's §V-C routing rule.
+pub fn monotone_fraction(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 1.0;
+    }
+    let asc = xs.windows(2).filter(|w| w[1] >= w[0]).count();
+    asc as f64 / (xs.len() - 1) as f64
+}
+
+/// Percentile (nearest-rank) of a copy of the data. `p` in [0,100].
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn min_max_basics() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+        assert_eq!(value_range(&[1.0, 5.0]), 4.0);
+        assert_eq!(value_range(&[]), 0.0);
+    }
+
+    #[test]
+    fn mean_variance() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn autocorr_of_smooth_signal_high() {
+        let xs: Vec<f32> = (0..10_000).map(|i| (i as f32 * 0.001).sin()).collect();
+        assert!(autocorrelation(&xs, 1) > 0.999);
+    }
+
+    #[test]
+    fn autocorr_of_noise_low() {
+        let mut rng = Pcg64::seeded(17);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.next_f32()).collect();
+        assert!(autocorrelation(&xs, 1).abs() < 0.02);
+    }
+
+    #[test]
+    fn entropy_uniform_symbols() {
+        // 4 equiprobable symbols -> 2 bits
+        let syms = (0..40_000).map(|i| (i % 4) as i64);
+        assert!((entropy_bits(syms) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_constant_is_zero() {
+        assert_eq!(entropy_bits((0..100).map(|_| 7i64)), 0.0);
+    }
+
+    #[test]
+    fn monotone_fraction_sorted_vs_noise() {
+        let sorted: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        assert_eq!(monotone_fraction(&sorted), 1.0);
+        let mut rng = Pcg64::seeded(2);
+        let noise: Vec<f32> = (0..10_000).map(|_| rng.next_f32()).collect();
+        let f = monotone_fraction(&noise);
+        assert!(f > 0.45 && f < 0.55, "f={f}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f32> = (0..=100).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! A small fixed-size thread pool with scoped parallel-map, built on
+//! std threads + channels (no external async runtime is available in
+//! this environment; the coordinator composes pipelines from these
+//! primitives plus bounded channels).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let active = Arc::clone(&active);
+                thread::Builder::new()
+                    .name(format!("nblc-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                job();
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            active,
+        }
+    }
+
+    /// Number of jobs currently executing.
+    pub fn active_jobs(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker threads all dead");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over items using transient scoped threads, preserving
+/// order. Chunks the index space evenly; `f` must be `Sync`.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    let chunk = items.len().div_ceil(threads);
+    thread::scope(|scope| {
+        for (islice, oslice) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(|| {
+                for (x, o) in islice.iter().zip(oslice.iter_mut()) {
+                    *o = Some(f(x));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread_fallback() {
+        let items = [1u32, 2, 3];
+        assert_eq!(par_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(par_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_workers_panics() {
+        let _ = ThreadPool::new(0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Wall-clock timing helpers used by the bench harness and pipeline
+//! metrics.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the previous elapsed seconds.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Run `f` repeatedly until `min_time` seconds have accumulated (at least
+/// `min_iters` times) and return the *minimum* per-iteration seconds —
+/// the standard robust micro-bench estimator on a noisy machine.
+pub fn bench_min_time<T>(min_time: f64, min_iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    let mut iters = 0usize;
+    loop {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        let s = t.secs();
+        best = best.min(s);
+        total += s;
+        iters += 1;
+        if total >= min_time && iters >= min_iters {
+            return best;
+        }
+    }
+}
+
+/// Throughput in MB/s given bytes processed and seconds taken.
+pub fn mb_per_sec(bytes: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 / 1e6 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_min_time_runs_enough() {
+        let mut count = 0;
+        let best = bench_min_time(0.0, 5, || {
+            count += 1;
+        });
+        assert!(count >= 5);
+        assert!(best >= 0.0);
+    }
+
+    #[test]
+    fn mbps_math() {
+        assert!((mb_per_sec(1_000_000, 1.0) - 1.0).abs() < 1e-12);
+        assert!((mb_per_sec(2_000_000, 0.5) - 4.0).abs() < 1e-12);
+    }
+}

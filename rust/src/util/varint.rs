@@ -1,0 +1,129 @@
+//! LEB128 varints and zigzag mapping. Used for escape payloads in SZ
+//! streams and headers throughout.
+
+use crate::error::{Error, Result};
+
+/// Zigzag-map a signed 64-bit value to unsigned.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse zigzag mapping.
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append a LEB128-encoded u64.
+#[inline]
+pub fn put_uvarint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Append a zigzag LEB128-encoded i64.
+#[inline]
+pub fn put_ivarint(buf: &mut Vec<u8>, v: i64) {
+    put_uvarint(buf, zigzag(v));
+}
+
+/// Decode a LEB128 u64 from `buf[*pos..]`, advancing `pos`.
+#[inline]
+pub fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("varint truncated"))?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err(Error::corrupt("varint overflow"));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(Error::corrupt("varint too long"));
+        }
+    }
+}
+
+/// Decode a zigzag LEB128 i64.
+#[inline]
+pub fn get_ivarint(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    Ok(unzigzag(get_uvarint(buf, pos)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zigzag_roundtrip_edges() {
+        for v in [0i64, 1, -1, i64::MAX, i64::MIN, 12345, -98765] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_small_values_small_codes() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+    }
+
+    #[test]
+    fn varint_roundtrip_random() {
+        let mut rng = Pcg64::seeded(123);
+        let vals: Vec<u64> = (0..5000)
+            .map(|i| {
+                if i % 3 == 0 {
+                    rng.next_u64()
+                } else {
+                    let width = 1 + rng.below(40) as u32;
+                    rng.below(1 << width)
+                }
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for &v in &vals {
+            put_uvarint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn ivarint_roundtrip() {
+        let vals = [0i64, -1, 1, i64::MIN, i64::MAX, -1_000_000, 1_000_000];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            put_ivarint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_ivarint(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn truncated_is_error() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, u64::MAX);
+        buf.pop();
+        let mut pos = 0;
+        assert!(get_uvarint(&buf, &mut pos).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration: config file -> validated settings -> sharded in-situ
+//! pipeline -> per-shard streams decode within bound; plus the
+//! rebalancing loop over observed shard costs.
+
+use nblc::compressors::{mode_compressor, Mode};
+use nblc::config::{ConfigDoc, PipelineSettings};
+use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::coordinator::shard::{rebalance, split_even, Shard};
+use nblc::coordinator::GpfsModel;
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::snapshot::{verify_bounds, PerField, SnapshotCompressor};
+use std::sync::Arc;
+
+fn factory_for(mode: Mode) -> CompressorFactory {
+    Arc::new(move || mode_compressor(mode))
+}
+
+#[test]
+fn config_to_pipeline_roundtrip() {
+    let doc = ConfigDoc::parse(
+        r#"
+        [pipeline]
+        dataset = "amdf"
+        particles = 80000
+        shards = 8
+        workers = 2
+        queue_depth = 2
+        eb_rel = 1e-4
+        mode = "best_speed"
+        sim_procs = 256
+        "#,
+    )
+    .unwrap();
+    let settings = PipelineSettings::from_doc(&doc).unwrap();
+    let snap = generate_md(&MdConfig {
+        n_particles: settings.particles,
+        ..Default::default()
+    });
+    let report = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: settings.shards,
+            workers: settings.workers,
+            queue_depth: settings.queue_depth,
+            eb_rel: settings.eb_rel,
+            factory: factory_for(settings.mode),
+            sink: Sink::Model {
+                model: GpfsModel::default(),
+                procs: settings.sim_procs,
+            },
+        },
+    )
+    .unwrap();
+    assert_eq!(report.bytes_in, snap.total_bytes() as u64);
+    assert!(report.ratio > 2.0, "ratio {}", report.ratio);
+    assert!(report.sink_secs > 0.0);
+    assert_eq!(report.shard_ratios.len(), 8);
+}
+
+#[test]
+fn every_shard_stream_decodes_within_bound() {
+    // What a reader of the pipeline's output does: decode each shard
+    // independently and check the bound against the matching slice.
+    let snap = generate_md(&MdConfig {
+        n_particles: 40_000,
+        ..Default::default()
+    });
+    let eb_rel = 1e-4;
+    let comp = PerField(nblc::compressors::sz::Sz::lv());
+    for shard in split_even(snap.len(), 5) {
+        let sub = snap.slice(shard.start, shard.end);
+        let bundle = comp.compress(&sub, eb_rel).unwrap();
+        let recon = comp.decompress(&bundle).unwrap();
+        verify_bounds(&sub, &recon, eb_rel).unwrap();
+    }
+}
+
+#[test]
+fn rebalance_feedback_loop_converges() {
+    // Feed observed per-shard costs back into the splitter: shards with
+    // higher per-particle cost should shrink, and a second round with
+    // uniform costs should stay put.
+    let n = 120_000;
+    let shards = split_even(n, 6);
+    // Pretend shard 0 and 1 are twice as expensive.
+    let costs = [2.0, 2.0, 1.0, 1.0, 1.0, 1.0];
+    let round2 = rebalance(&shards, &costs);
+    assert_eq!(round2.last().unwrap().end, n);
+    assert!(round2[0].len() < shards[0].len());
+    assert!(round2[5].len() > shards[5].len());
+    // Contiguity invariant.
+    for w in round2.windows(2) {
+        assert_eq!(w[0].end, w[1].start);
+    }
+    // Cost-balance: predicted cost spread under 15%.
+    let pred = |s: &Shard, c: f64| s.len() as f64 * c;
+    let preds: Vec<f64> = round2
+        .iter()
+        .map(|s| {
+            // map the new shard to the dominant old density region
+            let mid = (s.start + s.end) / 2;
+            let old = shards.iter().position(|o| mid < o.end).unwrap();
+            pred(s, costs[old])
+        })
+        .collect();
+    let max = preds.iter().cloned().fold(0.0, f64::max);
+    let min = preds.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(max / min < 1.35, "cost spread {max}/{min}");
+}
+
+#[test]
+fn scheduler_routing_via_pipeline() {
+    // The pipeline run with auto-routed mode must out-compress the
+    // unrouted R-index mode on cosmology data.
+    let snap = nblc::data::gen_cosmo::generate_cosmo(&nblc::data::gen_cosmo::CosmoConfig {
+        n_particles: 100_000,
+        ..Default::default()
+    });
+    let routed = nblc::coordinator::choose_compressor(&snap, Mode::BestCompression);
+    assert_eq!(routed, Mode::BestSpeed);
+    let r1 = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: 4,
+            workers: 1,
+            queue_depth: 2,
+            eb_rel: 1e-4,
+            factory: factory_for(routed),
+            sink: Sink::Null,
+        },
+    )
+    .unwrap();
+    let r2 = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: 4,
+            workers: 1,
+            queue_depth: 2,
+            eb_rel: 1e-4,
+            factory: factory_for(Mode::BestCompression),
+            sink: Sink::Null,
+        },
+    )
+    .unwrap();
+    assert!(
+        r1.ratio > r2.ratio,
+        "routed {} must beat unrouted {}",
+        r1.ratio,
+        r2.ratio
+    );
+}

@@ -1,0 +1,144 @@
+//! Integration: AOT artifacts -> PJRT -> Rust SZ entropy stage.
+//!
+//! These tests exercise the full three-layer bridge (Pallas kernel
+//! lowered to HLO, compiled by the CPU PJRT client, driven from Rust)
+//! and are skipped with a notice when `artifacts/` has not been built
+//! (`make artifacts`).
+
+use nblc::compressors::sz::Sz;
+use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+use nblc::model::quant::{LatticeQuantizer, Predictor};
+use nblc::runtime::{PjrtQuantizer, Runtime};
+use nblc::snapshot::FieldCompressor;
+use nblc::util::stats::value_range;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    match Runtime::load_default() {
+        Some(rt) => Some(Arc::new(rt)),
+        None => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn test_field(n: usize) -> Vec<f32> {
+    let s = generate_cosmo(&CosmoConfig {
+        n_particles: n,
+        ..Default::default()
+    });
+    s.fields[2].clone() // zz: piecewise-smooth with jumps
+}
+
+#[test]
+fn pjrt_codes_reconstruct_within_bound() {
+    let Some(rt) = runtime() else { return };
+    let q = PjrtQuantizer::new(rt);
+    for n in [1000usize, 262144, 300_000] {
+        let xs = test_field(n);
+        let eb = value_range(&xs) * 1e-4;
+        for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+            let codes = q.quantize(&xs, eb, pred).unwrap();
+            assert_eq!(codes.codes.len(), n);
+            assert_eq!(codes.codes[0], 0);
+            let native = LatticeQuantizer::new(eb).unwrap();
+            let recon = native.reconstruct(&codes);
+            for (i, (&a, &b)) in xs.iter().zip(recon.iter()).enumerate() {
+                let err = (a as f64 - b as f64).abs();
+                assert!(err <= eb, "n={n} pred={pred:?} i={i} err={err:e} eb={eb:e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_codes_match_native_at_paper_bound() {
+    // At eb_rel = 1e-4 the lattice fits comfortably in f32, so the
+    // kernel's codes must be identical to the native f64 quantizer's.
+    let Some(rt) = runtime() else { return };
+    let q = PjrtQuantizer::new(rt);
+    let xs = test_field(262144);
+    let eb = value_range(&xs) * 1e-4;
+    let pjrt_codes = q.quantize(&xs, eb, Predictor::LastValue).unwrap();
+    let native = LatticeQuantizer::new(eb).unwrap();
+    let native_codes = native.quantize(&xs, Predictor::LastValue);
+    let diff = pjrt_codes
+        .codes
+        .iter()
+        .zip(native_codes.codes.iter())
+        .filter(|(a, b)| a != b)
+        .count();
+    // f32 vs f64 rounding can flip ties on a tiny fraction of elements.
+    assert!(
+        diff as f64 <= xs.len() as f64 * 1e-3,
+        "{diff} / {} codes differ",
+        xs.len()
+    );
+}
+
+#[test]
+fn pjrt_dequantize_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let q = PjrtQuantizer::new(rt);
+    let xs = test_field(300_000); // forces multi-chunk path
+    let eb = value_range(&xs) * 1e-4;
+    // The graph evaluates the lattice in f32 (step rounded once), so
+    // allow one f32 ULP of slop on top of the bound; the *authoritative*
+    // decoder is the native f64 path tested above.
+    let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
+    let tol = eb + max_abs * f32::EPSILON as f64;
+    for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+        let codes = q.quantize(&xs, eb, pred).unwrap();
+        let recon = q.dequantize(&codes).unwrap();
+        assert_eq!(recon.len(), xs.len());
+        for (i, (&a, &b)) in xs.iter().zip(recon.iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            assert!(err <= tol, "pred={pred:?} i={i} err={err:e} tol={tol:e}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_streams_decode_with_native_sz() {
+    // Production path: PJRT-produced streams must be byte-compatible
+    // with the plain SZ decoder.
+    let Some(rt) = runtime() else { return };
+    let sz_pjrt = nblc::runtime::quantizer::SzPjrt::lv(rt);
+    let xs = test_field(100_000);
+    let eb = value_range(&xs) * 1e-4;
+    let bytes = sz_pjrt.compress(&xs, eb).unwrap();
+    let back = Sz::lv().decompress(&bytes).unwrap();
+    assert_eq!(back.len(), xs.len());
+    for (&a, &b) in xs.iter().zip(back.iter()) {
+        assert!((a as f64 - b as f64).abs() <= eb);
+    }
+}
+
+#[test]
+fn pjrt_metrics_graph_matches_cpu() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.meta("field_metrics").unwrap().n;
+    let xs = test_field(n);
+    let mut ys = xs.clone();
+    for (i, y) in ys.iter_mut().enumerate() {
+        *y += (i % 7) as f32 * 1e-3;
+    }
+    let x_lit = xla::Literal::vec1(&xs);
+    let y_lit = xla::Literal::vec1(&ys);
+    let out = rt.execute("field_metrics", &[x_lit, y_lit]).unwrap();
+    let sse: Vec<f32> = out[0].to_vec().unwrap();
+    let maxerr: Vec<f32> = out[1].to_vec().unwrap();
+    let want_sse: f64 = xs
+        .iter()
+        .zip(ys.iter())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let want_max = xs
+        .iter()
+        .zip(ys.iter())
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!((sse[0] as f64 - want_sse).abs() / want_sse.max(1e-12) < 1e-3);
+    assert!((maxerr[0] - want_max).abs() < 1e-6);
+}
