@@ -7,11 +7,11 @@
 
 use nblc::bench::{f1, f2, Table, EB_REL};
 use nblc::compressors::sz::{Sz, SzConfig};
-use nblc::compressors::{mode_compressor, Mode};
-use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::compressors::{mode_compressor, registry, Mode};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::coordinator::choose_compressor;
 use nblc::data::DatasetKind;
-use nblc::snapshot::{FieldCompressor, PerField, SnapshotCompressor};
+use nblc::snapshot::FieldCompressor;
 use nblc::util::stats::value_range;
 use nblc::util::timer::time_it;
 use std::sync::Arc;
@@ -85,8 +85,7 @@ fn main() {
         &["Queue depth", "Wall (s)", "Source stalls", "Ratio"],
     );
     for depth in [1usize, 2, 8, 32] {
-        let factory: CompressorFactory =
-            Arc::new(|| Box::new(PerField(Sz::lv())) as Box<dyn SnapshotCompressor>);
+        let factory = registry::factory("sz_lv").unwrap();
         let report = run_insitu(
             &hacc,
             &InsituConfig {

@@ -4,7 +4,7 @@
 //! SZ-CPC2000 +13% ratio, +10% rate vs CPC2000).
 
 use nblc::bench::{f1, f2, Table, EB_REL};
-use nblc::compressors::by_name;
+use nblc::compressors::registry;
 use nblc::data::DatasetKind;
 use nblc::util::timer::bench_min_time;
 
@@ -23,7 +23,7 @@ fn main() {
     };
     let mut results = Vec::new();
     for name in ["fpzip", "zfp", "sz", "cpc2000", "sz_lv", "sz_lv_rx", "sz_lv_prx", "sz_cpc2000"] {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let bundle = comp.compress(&s, EB_REL).unwrap();
         let secs = bench_min_time(0.5, 2, || comp.compress(&s, EB_REL).unwrap());
         let ratio = bundle.compression_ratio();

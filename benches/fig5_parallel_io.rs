@@ -9,7 +9,7 @@
 //! ~80% at 1024 procs and beats the second-best method by ~60%.
 
 use nblc::bench::{f1, f2, pct, Table, EB_REL};
-use nblc::compressors::by_name;
+use nblc::compressors::registry;
 use nblc::coordinator::GpfsModel;
 use nblc::data::DatasetKind;
 use nblc::util::timer::time_it;
@@ -21,7 +21,7 @@ fn main() {
     // Measure single-core rate + ratio per compressor.
     let mut measured = Vec::new();
     for name in ["zfp", "fpzip", "sz_lv"] {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
         measured.push((name, mb * 1e6 / secs, bundle.compression_ratio()));
         println!(

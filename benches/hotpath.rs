@@ -112,6 +112,17 @@ fn main() {
     let tdx = bench_min_time(1.0, 3, || Sz::lv().decompress(&bytes).unwrap());
     t.row(vec!["sz_lv decompress (e2e)".into(), format!("{:.1}", mb / tdx), "MB/s".into()]);
 
+    // Snapshot write path (io.rs chunked-buffer reuse): whole-snapshot
+    // f32 -> LE bytes -> file throughput.
+    let tmp = std::env::temp_dir().join(format!("nblc_hotpath_{}.snap", std::process::id()));
+    let tw = bench_min_time(0.5, 3, || nblc::data::io::write_snapshot(&s, &tmp).unwrap());
+    std::fs::remove_file(&tmp).ok();
+    t.row(vec![
+        "snapshot write (io)".into(),
+        format!("{:.1}", s.total_bytes() as f64 / tw / 1e6),
+        "MB/s".into(),
+    ]);
+
     t.print();
     t.write_csv("hotpath").unwrap();
 }

@@ -6,7 +6,7 @@
 //!   it (paper: 0.6e-4..2.4e-4 at eb_rel 1e-4).
 
 use nblc::bench::{sci, Table, EB_REL};
-use nblc::compressors::by_name;
+use nblc::compressors::registry;
 use nblc::compressors::cpc2000::Cpc2000;
 use nblc::compressors::szcpc::SzCpc2000;
 use nblc::compressors::szrx::SzRx;
@@ -31,7 +31,7 @@ fn main() {
         &["Method", "max rel err", "vs bound", "verdict"],
     );
     for name in ["cpc2000", "zfp", "sz", "sz_lv", "sz_lv_prx", "sz_cpc2000", "fpzip"] {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let bundle = comp.compress(&s, EB_REL).unwrap();
         let recon = comp.decompress(&bundle).unwrap();
         // Reordering methods: align with their deterministic permutation.

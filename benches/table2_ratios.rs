@@ -7,7 +7,7 @@
 //! the bottom.
 
 use nblc::bench::{f2, Table, EB_REL};
-use nblc::compressors::{by_name, table2_lineup};
+use nblc::compressors::{registry, table2_lineup};
 use nblc::data::DatasetKind;
 
 fn main() {
@@ -30,7 +30,7 @@ fn main() {
         &["Compressor", "HACC", "AMDF", "HACC(paper)", "AMDF(paper)"],
     );
     for name in table2_lineup() {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let rh = comp
             .compress(&hacc, EB_REL)
             .map(|b| b.compression_ratio())

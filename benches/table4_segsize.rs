@@ -3,7 +3,7 @@
 //! 1024 -> 16384; rate drops from 94.4 to ~35 MB/s).
 
 use nblc::bench::{f1, f2, Table, EB_REL};
-use nblc::compressors::szrx::SzRx;
+use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
 use nblc::data::DatasetKind;
 use nblc::snapshot::{PerField, SnapshotCompressor};
@@ -21,7 +21,8 @@ fn main() {
     t.row(vec!["SZ-LV".into(), "/".into(), f2(plain_ratio), f1(mb / secs)]);
     let mut last_ratio = 0.0;
     for seg in [1024usize, 2048, 4096, 8192, 16384] {
-        let comp = SzRx::rx(seg);
+        // The Table IV sweep, expressed as parameterized codec specs.
+        let comp = registry::build_str(&format!("sz_lv_rx:segment={seg}")).unwrap();
         let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
         let ratio = bundle.compression_ratio();
         t.row(vec![

@@ -4,7 +4,7 @@
 //! in the paper; paper shape: ~99% to 256, ~84-88% at 1024).
 
 use nblc::bench::{f2, pct, Table, EB_REL};
-use nblc::compressors::by_name;
+use nblc::compressors::registry;
 use nblc::coordinator::GpfsModel;
 use nblc::data::DatasetKind;
 use nblc::util::timer::time_it;
@@ -14,7 +14,7 @@ fn main() {
     let mb = s.total_bytes() as f64 / 1e6;
     let mut measured = Vec::new();
     for name in ["zfp", "fpzip", "sz_lv"] {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let (_, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
         measured.push((name, mb * 1e6 / secs));
     }

@@ -15,7 +15,7 @@
 //! Results recorded in EXPERIMENTS.md par.End-to-end.
 
 use nblc::compressors::sz::Sz;
-use nblc::compressors::{mode_compressor, Mode};
+use nblc::compressors::{registry, Mode};
 use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
 use nblc::coordinator::{choose_compressor, GpfsModel};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
@@ -62,7 +62,7 @@ fn main() {
         })
     } else {
         println!("[3/5] PJRT runtime: artifacts NOT built — native quantizer fallback");
-        Arc::new(move || mode_compressor(Mode::BestSpeed))
+        registry::factory(&Mode::BestSpeed.spec()).expect("mode spec is registry-valid")
     };
 
     // Shard size should cover the AOT block (2^18 elements) so PJRT

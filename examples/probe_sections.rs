@@ -1,7 +1,7 @@
 //! Dev probe: per-section compressed sizes for the CPC2000 family plus
 //! compress timing of the three modes (used to calibrate Fig. 4 shape).
 
-use nblc::compressors::{by_name, mode_compressor, Mode};
+use nblc::compressors::{mode_compressor, registry, Mode};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::util::stats::entropy_bits;
 use nblc::util::timer::time_it;
@@ -18,7 +18,7 @@ fn main() {
     let eb_rel = 1e-4;
 
     for name in ["cpc2000", "sz_cpc2000", "sz_lv", "sz_lv_prx"] {
-        let c = by_name(name).unwrap();
+        let c = registry::build_str(name).unwrap();
         let (bundle, secs) = time_it(|| c.compress(&s, eb_rel).unwrap());
         println!(
             "{name:12} ratio={:.3} rate={:.1} MB/s",

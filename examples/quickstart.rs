@@ -1,12 +1,10 @@
 //! Quickstart: generate a small snapshot, compress it with every
-//! method, decompress, and verify the error bound.
+//! method (built from its codec spec via the registry), decompress,
+//! and verify the error bound.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use nblc::compressors::{by_name, full_lineup};
-use nblc::compressors::cpc2000::Cpc2000;
-use nblc::compressors::szcpc::SzCpc2000;
-use nblc::compressors::szrx::SzRx;
+use nblc::compressors::{full_lineup, registry};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::snapshot::verify_bounds;
 use nblc::util::timer::time_it;
@@ -27,22 +25,14 @@ fn main() {
         "method", "ratio", "compress", "decompress", "verified"
     );
     for name in full_lineup() {
-        let comp = by_name(name).unwrap();
+        let comp = registry::build_str(name).unwrap();
         let (bundle, t_c) = time_it(|| comp.compress(&snap, eb_rel).unwrap());
         let (recon, t_d) = time_it(|| comp.decompress(&bundle).unwrap());
         // Reordering methods return a consistent permutation of the
         // particles; align with the deterministic sort to verify.
-        let reference = if comp.reorders() {
-            let perm = match name {
-                "cpc2000" => Cpc2000.sort_permutation(&snap, eb_rel).unwrap(),
-                "sz_cpc2000" => SzCpc2000.sort_permutation(&snap, eb_rel).unwrap(),
-                "sz_lv_rx" => SzRx::rx(16384).sort_permutation(&snap, eb_rel),
-                "sz_lv_prx" => SzRx::prx().sort_permutation(&snap, eb_rel),
-                _ => unreachable!(),
-            };
-            snap.permute(&perm).unwrap()
-        } else {
-            snap.clone()
+        let reference = match registry::sort_permutation(name, &snap, eb_rel).unwrap() {
+            Some(perm) => snap.permute(&perm).unwrap(),
+            None => snap.clone(),
         };
         let verified = if name == "fpzip" {
             // FPZIP is precision-based: near the bound, not strictly under.

@@ -2,9 +2,11 @@
 //! data set and print the (bits/value, PSNR) curve — the Fig. 6 tooling
 //! exposed as a user-facing utility.
 //!
-//! Run: `cargo run --release --example rate_distortion [method] [hacc|amdf]`
+//! Run: `cargo run --release --example rate_distortion [spec] [hacc|amdf]`
+//! where `spec` is a registry codec spec, e.g. `sz_lv` or
+//! `sz_lv_rx:segment=4096`.
 
-use nblc::compressors::by_name;
+use nblc::compressors::registry;
 use nblc::data::DatasetKind;
 use nblc::metrics::ratedist::{rate_distortion_curve, standard_bounds};
 use nblc::snapshot::Snapshot;
@@ -16,29 +18,25 @@ fn main() {
         "amdf" => DatasetKind::Amdf,
         _ => DatasetKind::Hacc,
     };
-    let comp = by_name(&method).unwrap_or_else(|| {
-        eprintln!("unknown method '{method}'");
+    let comp = registry::build_str(&method).unwrap_or_else(|e| {
+        eprintln!("bad method spec '{method}': {e}");
         std::process::exit(2);
     });
     let n = 300_000.min(nblc::data::default_n(kind));
     let snap = nblc::data::generate(kind, n, nblc::bench::BENCH_SEED);
 
-    // Reordering methods need the aligned reference for PSNR.
+    // Reordering methods need the aligned reference for PSNR; the
+    // registry rebuilds the sort permutation with the spec's own
+    // tuning parameters.
+    let perm_spec = method.clone();
     let perm_fn: Option<Box<dyn Fn(&Snapshot, f64) -> nblc::Result<Vec<u32>>>> =
-        match method.as_str() {
-            "cpc2000" => Some(Box::new(|s: &Snapshot, eb: f64| {
-                nblc::compressors::cpc2000::Cpc2000.sort_permutation(s, eb)
-            })),
-            "sz_cpc2000" => Some(Box::new(|s: &Snapshot, eb: f64| {
-                nblc::compressors::szcpc::SzCpc2000.sort_permutation(s, eb)
-            })),
-            "sz_lv_rx" => Some(Box::new(|s: &Snapshot, eb: f64| {
-                Ok(nblc::compressors::szrx::SzRx::rx(16384).sort_permutation(s, eb))
-            })),
-            "sz_lv_prx" => Some(Box::new(|s: &Snapshot, eb: f64| {
-                Ok(nblc::compressors::szrx::SzRx::prx().sort_permutation(s, eb))
-            })),
-            _ => None,
+        if comp.reorders() {
+            Some(Box::new(move |s: &Snapshot, eb: f64| {
+                Ok(registry::sort_permutation(&perm_spec, s, eb)?
+                    .expect("reordering codec has a sort permutation"))
+            }))
+        } else {
+            None
         };
 
     println!("rate-distortion: {method} on {} (n={n})\n", kind.name());

@@ -1,5 +1,5 @@
-//! All compressors, the paper's optimizations, and the registry used by
-//! the CLI / benches.
+//! All compressors, the paper's optimizations, and the central codec
+//! registry used by the CLI / pipeline / benches.
 //!
 //! Field compressors (per-1D-array, applied via [`PerField`]):
 //! [`sz::Sz`] (LCF/LV), [`fpzip::Fpzip`], [`zfp::Zfp`],
@@ -7,6 +7,12 @@
 //!
 //! Snapshot compressors (joint, may reorder particles):
 //! [`cpc2000::Cpc2000`], [`szrx::SzRx`] (RX/PRX), [`szcpc::SzCpc2000`].
+//!
+//! Construction goes through [`registry`]: a [`CodecSpec`] such as
+//! `sz_lv_rx:segment=4096` names a codec plus typed parameters, and
+//! [`registry::build`] turns it into a boxed [`SnapshotCompressor`].
+//! [`by_name`] and [`mode_compressor`] are thin compatibility wrappers
+//! over that same path.
 
 pub mod sz;
 pub mod gzip;
@@ -17,28 +23,19 @@ pub mod cpc2000;
 pub mod szrx;
 pub mod szcpc;
 pub mod modes;
+pub mod registry;
 
 pub use modes::{mode_compressor, Mode};
+pub use registry::{CodecEntry, CodecSpec, ParamDef, ParamKind};
 
-use crate::snapshot::{PerField, SnapshotCompressor};
+use crate::snapshot::SnapshotCompressor;
 
-/// Instantiate a snapshot compressor by its table name. Recognised:
-/// `gzip, cpc2000, fpzip, isabela, zfp, sz (alias sz_lcf), sz_lv,
-/// sz_lv_rx, sz_lv_prx, sz_cpc2000`.
+/// Instantiate a snapshot compressor by its table name (or any codec
+/// spec — this is a thin wrapper over [`registry::build_str`]).
+/// Recognised bare names: `gzip, cpc2000, fpzip, isabela, zfp, sz
+/// (alias sz_lcf), sz_lv, sz_lv_rx, sz_lv_prx, sz_cpc2000, mode`.
 pub fn by_name(name: &str) -> Option<Box<dyn SnapshotCompressor>> {
-    Some(match name {
-        "gzip" => Box::new(PerField(gzip::Gzip)),
-        "cpc2000" => Box::new(cpc2000::Cpc2000),
-        "fpzip" => Box::new(PerField(fpzip::Fpzip::default())),
-        "isabela" => Box::new(PerField(isabela::Isabela)),
-        "zfp" => Box::new(PerField(zfp::Zfp)),
-        "sz" | "sz_lcf" => Box::new(PerField(sz::Sz::lcf())),
-        "sz_lv" => Box::new(PerField(sz::Sz::lv())),
-        "sz_lv_rx" => Box::new(szrx::SzRx::rx(16384)),
-        "sz_lv_prx" => Box::new(szrx::SzRx::prx()),
-        "sz_cpc2000" => Box::new(szcpc::SzCpc2000),
-        _ => return None,
-    })
+    registry::build_str(name).ok()
 }
 
 /// The Table II lineup (state of the art before the paper's methods).
@@ -68,6 +65,13 @@ mod tests {
     }
 
     #[test]
+    fn by_name_accepts_parameterized_specs() {
+        let c = by_name("sz_lv_rx:segment=4096").unwrap();
+        assert_eq!(c.name(), "sz_lv_rx");
+        assert!(by_name("sz_lv_rx:segment=x").is_none());
+    }
+
+    #[test]
     fn reorder_flags_are_correct() {
         for (name, reorders) in [
             ("sz_lv", false),
@@ -77,6 +81,16 @@ mod tests {
             ("sz_cpc2000", true),
         ] {
             assert_eq!(by_name(name).unwrap().reorders(), reorders, "{name}");
+        }
+    }
+
+    #[test]
+    fn lineups_are_registered() {
+        for name in table2_lineup() {
+            assert!(registry::find(name).is_some(), "{name} not registered");
+        }
+        for name in full_lineup() {
+            assert!(registry::find(name).is_some(), "{name} not registered");
         }
     }
 }

@@ -7,10 +7,8 @@
 //! | `best_tradeoff` | SZ-LV-PRX | 2x CPC2000's rate at equal ratio |
 //! | `best_compression` | SZ-CPC2000 | +13% ratio, +10% rate vs CPC2000 |
 
-use crate::compressors::sz::Sz;
-use crate::compressors::szcpc::SzCpc2000;
-use crate::compressors::szrx::SzRx;
-use crate::snapshot::{PerField, SnapshotCompressor};
+use crate::compressors::registry;
+use crate::snapshot::SnapshotCompressor;
 
 /// Compression mode selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,15 +41,17 @@ impl Mode {
             Mode::BestCompression => "best_compression",
         }
     }
+
+    /// The registry codec spec for this mode (e.g. `mode:best_speed`).
+    pub fn spec(self) -> String {
+        format!("mode:{}", self.name())
+    }
 }
 
-/// Build the snapshot compressor for a mode.
+/// Build the snapshot compressor for a mode (served by the codec
+/// registry's `mode` entry).
 pub fn mode_compressor(mode: Mode) -> Box<dyn SnapshotCompressor> {
-    match mode {
-        Mode::BestSpeed => Box::new(PerField(Sz::lv())),
-        Mode::BestTradeoff => Box::new(SzRx::prx()),
-        Mode::BestCompression => Box::new(SzCpc2000),
-    }
+    registry::build_str(&mode.spec()).expect("mode specs are registry-valid")
 }
 
 #[cfg(test)]

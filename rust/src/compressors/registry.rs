@@ -1,0 +1,840 @@
+//! Central codec registry keyed by [`CodecSpec`].
+//!
+//! Every way of obtaining a snapshot compressor in this crate —
+//! [`crate::compressors::by_name`], [`crate::compressors::mode_compressor`],
+//! the CLI's `--method` flag, the pipeline's worker factory — funnels
+//! through [`build`] here. A spec is a parsed `name:key=val,key=val`
+//! string, for example:
+//!
+//! * `sz_lv` — a bare codec name with its default parameters;
+//! * `sz_lv_rx:segment=4096` — a tuned segmented-sort size (Table IV);
+//! * `sz:pred=lv,lossless=true` — SZ with last-value prediction and the
+//!   DEFLATE backend;
+//! * `mode:best_tradeoff` — the paper's mode selector (§VI), a bare
+//!   positional value.
+//!
+//! Each [`CodecEntry`] carries metadata (description, whether
+//! decompression reorders particles, the tunable-parameter schema shown
+//! by `nblc list-codecs`) and a plain-`fn` build hook, so entries are
+//! `Send + Sync` and a validated spec can be turned into a per-worker
+//! [`CompressorFactory`] for the in-situ pipeline.
+
+use crate::compressors::cpc2000::Cpc2000;
+use crate::compressors::fpzip::Fpzip;
+use crate::compressors::gzip::Gzip;
+use crate::compressors::isabela::Isabela;
+use crate::compressors::sz::{Sz, SzConfig};
+use crate::compressors::szcpc::SzCpc2000;
+use crate::compressors::szrx::SzRx;
+use crate::compressors::zfp::Zfp;
+use crate::coordinator::pipeline::CompressorFactory;
+use crate::error::{Error, Result};
+use crate::model::quant::Predictor;
+use crate::rindex::RIndexSource;
+use crate::snapshot::{PerField, SnapshotCompressor};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+/// A parsed `name:key=val,key=val` codec specification.
+///
+/// Parsing is purely syntactic; names, keys, and values are checked
+/// against the registry schema by [`build`] / [`validate`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CodecSpec {
+    /// Codec (registry entry) name or alias.
+    pub name: String,
+    /// Explicit `key=val` parameters.
+    pub params: BTreeMap<String, String>,
+    /// At most one bare (keyless) value, e.g. the `best_tradeoff` in
+    /// `mode:best_tradeoff`; bound to the entry's positional parameter.
+    pub positional: Option<String>,
+}
+
+impl CodecSpec {
+    /// Parse a spec string. Grammar: `name[:item[,item]*]` where each
+    /// item is `key=val` or a single bare value.
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim();
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        if name.is_empty() {
+            return Err(Error::invalid("empty codec name in spec"));
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            return Err(Error::invalid(format!(
+                "codec name '{name}' must be lowercase [a-z0-9_]"
+            )));
+        }
+        let mut spec = CodecSpec {
+            name: name.to_string(),
+            ..Default::default()
+        };
+        if let Some(rest) = rest {
+            if rest.is_empty() {
+                return Err(Error::invalid(format!(
+                    "trailing ':' with no parameters in spec '{s}'"
+                )));
+            }
+            for item in rest.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    return Err(Error::invalid(format!("empty parameter in spec '{s}'")));
+                }
+                match item.split_once('=') {
+                    Some((k, v)) => {
+                        let (k, v) = (k.trim(), v.trim());
+                        if k.is_empty() || v.is_empty() {
+                            return Err(Error::invalid(format!(
+                                "malformed parameter '{item}' in spec '{s}'"
+                            )));
+                        }
+                        if spec.params.insert(k.to_string(), v.to_string()).is_some() {
+                            return Err(Error::invalid(format!(
+                                "duplicate parameter '{k}' in spec '{s}'"
+                            )));
+                        }
+                    }
+                    None => {
+                        if spec.positional.is_some() {
+                            return Err(Error::invalid(format!(
+                                "more than one bare value in spec '{s}'"
+                            )));
+                        }
+                        spec.positional = Some(item.to_string());
+                    }
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        let mut sep = ':';
+        if let Some(p) = &self.positional {
+            write!(f, "{sep}{p}")?;
+            sep = ',';
+        }
+        for (k, v) in &self.params {
+            write!(f, "{sep}{k}={v}")?;
+            sep = ',';
+        }
+        Ok(())
+    }
+}
+
+/// Value domain of one tunable parameter.
+#[derive(Clone, Copy, Debug)]
+pub enum ParamKind {
+    /// Integer in `[min, max]`.
+    Int { min: i64, max: i64 },
+    /// `true` or `false`.
+    Bool,
+    /// One of a fixed set of identifiers.
+    Choice(&'static [&'static str]),
+}
+
+impl ParamKind {
+    /// Human-readable domain, for `list-codecs`.
+    pub fn describe(&self) -> String {
+        match self {
+            ParamKind::Int { min, max } => format!("int {min}..={max}"),
+            ParamKind::Bool => "bool".into(),
+            ParamKind::Choice(opts) => opts.join("|"),
+        }
+    }
+
+    fn check(&self, key: &str, value: &str) -> Result<()> {
+        match self {
+            ParamKind::Int { min, max } => {
+                let v: i64 = value.parse().map_err(|_| {
+                    Error::invalid(format!("parameter '{key}': '{value}' is not an integer"))
+                })?;
+                if !(*min..=*max).contains(&v) {
+                    return Err(Error::invalid(format!(
+                        "parameter '{key}': {v} outside {min}..={max}"
+                    )));
+                }
+            }
+            ParamKind::Bool => {
+                if value != "true" && value != "false" {
+                    return Err(Error::invalid(format!(
+                        "parameter '{key}': '{value}' is not true/false"
+                    )));
+                }
+            }
+            ParamKind::Choice(opts) => {
+                if !opts.contains(&value) {
+                    return Err(Error::invalid(format!(
+                        "parameter '{key}': '{value}' not one of {}",
+                        opts.join("|")
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Schema of one tunable parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamDef {
+    /// Parameter key as written in specs.
+    pub key: &'static str,
+    /// Value domain.
+    pub kind: ParamKind,
+    /// Default value (spec syntax).
+    pub default: &'static str,
+    /// One-line help shown by `list-codecs`.
+    pub help: &'static str,
+}
+
+/// Validated, default-filled parameters handed to a codec's build hook.
+#[derive(Clone, Debug)]
+pub struct Params {
+    values: BTreeMap<&'static str, String>,
+}
+
+impl Params {
+    /// Raw string value (always present after validation).
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("parameter '{key}' missing from validated set"))
+    }
+
+    /// Integer value (validated against the schema's range).
+    pub fn get_i64(&self, key: &str) -> i64 {
+        self.get(key).parse().expect("validated integer parameter")
+    }
+
+    /// Integer value as usize.
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get_i64(key) as usize
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.get(key) == "true"
+    }
+}
+
+/// One registered codec: identity, metadata, parameter schema, and a
+/// `Send + Sync` build hook (a plain `fn` pointer).
+pub struct CodecEntry {
+    /// Canonical name.
+    pub name: &'static str,
+    /// Accepted alternative names.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `list-codecs`.
+    pub description: &'static str,
+    /// Whether decompression *may* return a (cross-field-consistent)
+    /// permutation of the particles, worst-case over the entry's
+    /// parameter space; query the built compressor's
+    /// [`SnapshotCompressor::reorders`] for the exact answer.
+    pub reorders: bool,
+    /// Key the bare positional value binds to, if the codec accepts one.
+    pub positional: Option<&'static str>,
+    /// Tunable-parameter schema.
+    pub params: &'static [ParamDef],
+    /// Build a compressor from validated parameters.
+    pub build: fn(&Params) -> Result<Box<dyn SnapshotCompressor>>,
+}
+
+fn build_gzip(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(PerField(Gzip)))
+}
+
+fn build_cpc2000(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(Cpc2000))
+}
+
+fn build_fpzip(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    let bits = p.get_i64("bits");
+    let fp = if bits == 0 {
+        Fpzip { retained_bits: None }
+    } else {
+        Fpzip::with_retained(bits as u32)
+    };
+    Ok(Box::new(PerField(fp)))
+}
+
+fn build_isabela(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(PerField(Isabela)))
+}
+
+fn build_zfp(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(PerField(Zfp)))
+}
+
+fn sz_from(p: &Params, predictor: Predictor) -> Sz {
+    Sz {
+        cfg: SzConfig {
+            predictor,
+            radius: p.get_i64("radius") as u32,
+            lossless: p.get_bool("lossless"),
+        },
+    }
+}
+
+fn build_sz(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    let predictor = match p.get("pred") {
+        "lv" => Predictor::LastValue,
+        _ => Predictor::LinearCurveFit,
+    };
+    Ok(Box::new(PerField(sz_from(p, predictor))))
+}
+
+fn build_sz_lv(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(PerField(sz_from(p, Predictor::LastValue))))
+}
+
+fn rindex_source(p: &Params) -> RIndexSource {
+    match p.get("source") {
+        "velocities" => RIndexSource::Velocities,
+        "both" => RIndexSource::Both,
+        _ => RIndexSource::Coordinates,
+    }
+}
+
+fn szrx_from(p: &Params) -> SzRx {
+    SzRx {
+        segment: p.get_usize("segment"),
+        ignored_groups: p.get_i64("ignore") as u32,
+        source: rindex_source(p),
+        predictor: Predictor::LastValue,
+    }
+}
+
+fn build_szrx(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(szrx_from(p)))
+}
+
+fn build_szcpc(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(SzCpc2000))
+}
+
+/// The concrete codec a `mode:` spec stands for. Shared by [`build`]
+/// and [`canonical`], which archives the *resolved* codec so old
+/// archives survive future changes to the mode mapping.
+fn mode_target(which: &str) -> &'static str {
+    match which {
+        "best_speed" | "speed" => "sz_lv",
+        "best_compression" | "compression" => "sz_cpc2000",
+        _ => "sz_lv_prx",
+    }
+}
+
+fn build_mode(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    build_str(mode_target(p.get("which")))
+}
+
+const SZ_SHARED_PARAMS: [ParamDef; 2] = [
+    ParamDef {
+        key: "radius",
+        kind: ParamKind::Int { min: 2, max: 1 << 30 },
+        default: "32768",
+        help: "quantization radius R: codes in (-R, R) are Huffman symbols",
+    },
+    ParamDef {
+        key: "lossless",
+        kind: ParamKind::Bool,
+        default: "false",
+        help: "re-compress the payload with the DEFLATE backend (SZ's gzip stage)",
+    },
+];
+
+const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 3] {
+    [
+        ParamDef {
+            key: "segment",
+            kind: ParamKind::Int { min: 0, max: 1 << 24 },
+            default: segment,
+            help: "segmented-sort size, paper Table IV sweeps 1024..16384 (0 = one global segment)",
+        },
+        ParamDef {
+            key: "ignore",
+            kind: ParamKind::Int { min: 0, max: 20 },
+            default: ignore,
+            help: "trailing 3-bit R-index groups ignored by the partial radix sort (Table V)",
+        },
+        ParamDef {
+            key: "source",
+            kind: ParamKind::Choice(&["coords", "velocities", "both"]),
+            default: "coords",
+            help: "fields feeding the R-index (Table VI)",
+        },
+    ]
+}
+
+static RX_PARAMS: [ParamDef; 3] = szrx_params("16384", "0");
+static PRX_PARAMS: [ParamDef; 3] = szrx_params("16384", "6");
+
+/// The registry: every codec the crate can build.
+pub static REGISTRY: &[CodecEntry] = &[
+    CodecEntry {
+        name: "gzip",
+        aliases: &[],
+        description: "lossless DEFLATE-style baseline, per field",
+        reorders: false,
+        positional: None,
+        params: &[],
+        build: build_gzip,
+    },
+    CodecEntry {
+        name: "cpc2000",
+        aliases: &[],
+        description: "R-index sorting + delta/AVLE coordinate coding + status-bit velocity coder",
+        reorders: true,
+        positional: None,
+        params: &[],
+        build: build_cpc2000,
+    },
+    CodecEntry {
+        name: "fpzip",
+        aliases: &[],
+        description: "FPZIP-like fixed-precision ordinal truncation, per field",
+        reorders: false,
+        positional: None,
+        params: &[ParamDef {
+            key: "bits",
+            kind: ParamKind::Int { min: 0, max: 32 },
+            default: "21",
+            help: "retained bits per value (0 = derive from the error bound)",
+        }],
+        build: build_fpzip,
+    },
+    CodecEntry {
+        name: "isabela",
+        aliases: &[],
+        description: "ISABELA-like sort + spline approximation with index array, per field",
+        reorders: false,
+        positional: None,
+        params: &[],
+        build: build_isabela,
+    },
+    CodecEntry {
+        name: "zfp",
+        aliases: &[],
+        description: "ZFP-like fixed-accuracy block transform coder, per field",
+        reorders: false,
+        positional: None,
+        params: &[],
+        build: build_zfp,
+    },
+    CodecEntry {
+        name: "sz",
+        aliases: &["sz_lcf"],
+        description: "SZ error-bounded predictor + quantizer + Huffman, per field",
+        reorders: false,
+        positional: None,
+        params: &[
+            ParamDef {
+                key: "pred",
+                kind: ParamKind::Choice(&["lcf", "lv"]),
+                default: "lcf",
+                help: "prediction model: linear-curve-fitting (original SZ) or last-value",
+            },
+            SZ_SHARED_PARAMS[0],
+            SZ_SHARED_PARAMS[1],
+        ],
+        build: build_sz,
+    },
+    CodecEntry {
+        name: "sz_lv",
+        aliases: &[],
+        description: "SZ with last-value prediction (the paper's best_speed method)",
+        reorders: false,
+        positional: None,
+        params: &SZ_SHARED_PARAMS,
+        build: build_sz_lv,
+    },
+    CodecEntry {
+        name: "sz_lv_rx",
+        aliases: &[],
+        description: "segmented R-index sorting + SZ-LV (paper §V-B)",
+        reorders: true,
+        positional: None,
+        params: &RX_PARAMS,
+        build: build_szrx,
+    },
+    CodecEntry {
+        name: "sz_lv_prx",
+        aliases: &[],
+        description: "partial-radix R-index sorting + SZ-LV (the best_tradeoff method)",
+        reorders: true,
+        positional: None,
+        params: &PRX_PARAMS,
+        build: build_szrx,
+    },
+    CodecEntry {
+        name: "sz_cpc2000",
+        aliases: &[],
+        description: "R-index coordinates (CPC2000 coding) + SZ-LV velocities (best_compression)",
+        reorders: true,
+        positional: None,
+        params: &[],
+        build: build_szcpc,
+    },
+    CodecEntry {
+        name: "mode",
+        aliases: &[],
+        description: "paper mode selector (§VI): speed=sz_lv (keeps particle order), tradeoff=sz_lv_prx, compression=sz_cpc2000 (both reorder)",
+        reorders: true,
+        positional: Some("which"),
+        params: &[ParamDef {
+            key: "which",
+            kind: ParamKind::Choice(&[
+                "best_speed",
+                "speed",
+                "best_tradeoff",
+                "tradeoff",
+                "best_compression",
+                "compression",
+            ]),
+            default: "best_tradeoff",
+            help: "which of the three paper modes to build",
+        }],
+        build: build_mode,
+    },
+];
+
+/// All registered codecs, in listing order.
+pub fn entries() -> &'static [CodecEntry] {
+    REGISTRY
+}
+
+/// Look up an entry by name or alias.
+pub fn find(name: &str) -> Option<&'static CodecEntry> {
+    REGISTRY
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+}
+
+/// Validate a spec against its entry's schema and fill defaults.
+fn resolve(spec: &CodecSpec) -> Result<(&'static CodecEntry, Params)> {
+    let entry = find(&spec.name).ok_or_else(|| {
+        Error::invalid(format!(
+            "unknown codec '{}' (known: {})",
+            spec.name,
+            REGISTRY
+                .iter()
+                .map(|e| e.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
+    })?;
+    let mut values: BTreeMap<&'static str, String> = entry
+        .params
+        .iter()
+        .map(|d| (d.key, d.default.to_string()))
+        .collect();
+    if let Some(pos) = &spec.positional {
+        let key = entry.positional.ok_or_else(|| {
+            Error::invalid(format!(
+                "codec '{}' does not take a bare value ('{pos}')",
+                entry.name
+            ))
+        })?;
+        if spec.params.contains_key(key) {
+            return Err(Error::invalid(format!(
+                "parameter '{key}' given both as bare value '{pos}' and as '{key}=...'"
+            )));
+        }
+        values.insert(key, pos.clone());
+    }
+    for (k, v) in &spec.params {
+        let def = entry.params.iter().find(|d| d.key == k.as_str()).ok_or_else(|| {
+            Error::invalid(format!(
+                "unknown parameter '{k}' for codec '{}' (allowed: {})",
+                entry.name,
+                if entry.params.is_empty() {
+                    "none".to_string()
+                } else {
+                    entry
+                        .params
+                        .iter()
+                        .map(|d| d.key)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                }
+            ))
+        })?;
+        values.insert(def.key, v.clone());
+    }
+    for def in entry.params {
+        def.kind.check(def.key, &values[def.key])?;
+    }
+    Ok((entry, Params { values }))
+}
+
+/// Check a spec without building anything.
+pub fn validate(spec: &CodecSpec) -> Result<()> {
+    resolve(spec).map(|_| ())
+}
+
+/// Build a snapshot compressor from a parsed spec.
+pub fn build(spec: &CodecSpec) -> Result<Box<dyn SnapshotCompressor>> {
+    let (entry, params) = resolve(spec)?;
+    (entry.build)(&params)
+}
+
+/// Parse and build in one step.
+pub fn build_str(s: &str) -> Result<Box<dyn SnapshotCompressor>> {
+    build(&CodecSpec::parse(s)?)
+}
+
+/// Canonical form of a spec: alias-normalized name plus the *complete*
+/// resolved parameter set (defaults included), keys sorted. This is what
+/// the archive format stores, so a bundle decompresses identically even
+/// if a codec's defaults change in a later version. Indirect specs
+/// (`mode:...`) canonicalize to the concrete codec they stand for, so
+/// archives survive changes to the mode mapping too.
+pub fn canonical(s: &str) -> Result<String> {
+    let spec = CodecSpec::parse(s)?;
+    let (entry, params) = resolve(&spec)?;
+    if entry.name == "mode" {
+        return canonical(mode_target(params.get("which")));
+    }
+    let mut out = entry.name.to_string();
+    let mut sep = ':';
+    for (k, v) in &params.values {
+        out.push(sep);
+        out.push_str(k);
+        out.push('=');
+        out.push_str(v);
+        sep = ',';
+    }
+    Ok(out)
+}
+
+/// The deterministic pre-compression permutation a reordering codec
+/// applies under a spec, rebuilt with the spec's own tuning parameters
+/// (`Ok(None)` for order-preserving codecs). This is what examples and
+/// tests align against when verifying bounds modulo reordering.
+pub fn sort_permutation(
+    s: &str,
+    snap: &crate::snapshot::Snapshot,
+    eb_rel: f64,
+) -> Result<Option<Vec<u32>>> {
+    let spec = CodecSpec::parse(s)?;
+    let (entry, params) = resolve(&spec)?;
+    Ok(match entry.name {
+        "cpc2000" => Some(Cpc2000.sort_permutation(snap, eb_rel)?),
+        "sz_cpc2000" => Some(SzCpc2000.sort_permutation(snap, eb_rel)?),
+        "sz_lv_rx" | "sz_lv_prx" => Some(szrx_from(&params).sort_permutation(snap, eb_rel)),
+        "mode" => return sort_permutation(mode_target(params.get("which")), snap, eb_rel),
+        _ => None,
+    })
+}
+
+/// Turn a spec string into a per-worker [`CompressorFactory`] for the
+/// in-situ pipeline. The spec is validated once, here; the returned
+/// closure builds a fresh compressor per call (compressors are not
+/// `Sync`, workers each own one).
+pub fn factory(s: &str) -> Result<CompressorFactory> {
+    let spec = CodecSpec::parse(s)?;
+    validate(&spec)?;
+    Ok(Arc::new(move || {
+        build(&spec).expect("pre-validated codec spec must build")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::full_lineup;
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    #[test]
+    fn parse_bare_name() {
+        let s = CodecSpec::parse("sz_lv").unwrap();
+        assert_eq!(s.name, "sz_lv");
+        assert!(s.params.is_empty());
+        assert!(s.positional.is_none());
+    }
+
+    #[test]
+    fn parse_params_and_positional() {
+        let s = CodecSpec::parse("sz_lv_rx:segment=4096,ignore=2").unwrap();
+        assert_eq!(s.params["segment"], "4096");
+        assert_eq!(s.params["ignore"], "2");
+        let m = CodecSpec::parse("mode:best_tradeoff").unwrap();
+        assert_eq!(m.positional.as_deref(), Some("best_tradeoff"));
+        assert_eq!(m.to_string(), "mode:best_tradeoff");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            ":",
+            "sz:",
+            "sz:,",
+            "sz:=3",
+            "sz:pred=",
+            "SZ",
+            "sz lv",
+            "sz:pred=lv,pred=lcf",
+            "mode:a,b",
+        ] {
+            assert!(CodecSpec::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn build_full_lineup() {
+        for name in full_lineup() {
+            let c = build_str(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!c.name().is_empty());
+            let entry = find(name).unwrap();
+            assert_eq!(entry.reorders, c.reorders(), "{name} reorders flag");
+        }
+    }
+
+    #[test]
+    fn unknown_names_and_params_rejected() {
+        assert!(build_str("bogus").is_err());
+        assert!(build_str("sz_lv:segment=4096").is_err());
+        assert!(build_str("sz_lv_rx:segment=nope").is_err());
+        assert!(build_str("sz_lv_rx:segment=-1").is_err());
+        assert!(build_str("sz:pred=quadratic").is_err());
+        assert!(build_str("sz:lossless=maybe").is_err());
+        assert!(build_str("mode:warp").is_err());
+        assert!(build_str("gzip:level=9").is_err());
+        assert!(build_str("sz_lv:3").is_err(), "no positional declared");
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(build_str("sz_lcf").unwrap().name(), "sz_lcf");
+        assert_eq!(build_str("sz").unwrap().name(), "sz_lcf");
+        assert_eq!(build_str("sz:pred=lv").unwrap().name(), "sz_lv");
+    }
+
+    #[test]
+    fn canonical_fills_defaults_and_normalizes() {
+        let c = canonical("sz_lv_rx:segment=4096").unwrap();
+        assert_eq!(c, "sz_lv_rx:ignore=0,segment=4096,source=coords");
+        assert_eq!(canonical("gzip").unwrap(), "gzip");
+        assert_eq!(
+            canonical("sz_lcf").unwrap(),
+            "sz:lossless=false,pred=lcf,radius=32768"
+        );
+        // Canonical form is a fixed point.
+        let c2 = canonical(&c).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn canonical_resolves_modes_to_concrete_codecs() {
+        // Archives must pin the actual codec, not the mode indirection,
+        // so they survive future changes to the mode mapping.
+        assert_eq!(
+            canonical("mode:speed").unwrap(),
+            "sz_lv:lossless=false,radius=32768"
+        );
+        assert_eq!(
+            canonical("mode:best_tradeoff").unwrap(),
+            "sz_lv_prx:ignore=6,segment=16384,source=coords"
+        );
+        assert_eq!(canonical("mode:best_compression").unwrap(), "sz_cpc2000");
+        // The resolved spec builds the same compressor the mode does.
+        assert_eq!(
+            build_str(&canonical("mode:best_tradeoff").unwrap()).unwrap().name(),
+            build_str("mode:best_tradeoff").unwrap().name()
+        );
+    }
+
+    #[test]
+    fn positional_conflicting_with_key_rejected() {
+        assert!(build_str("mode:speed,which=compression").is_err());
+        assert!(build_str("mode:speed,which=speed").is_err());
+    }
+
+    #[test]
+    fn sort_permutation_helper_matches_struct_api() {
+        let s = generate_md(&MdConfig {
+            n_particles: 8_000,
+            ..Default::default()
+        });
+        let via_registry = sort_permutation("sz_lv_rx:segment=2048", &s, 1e-4)
+            .unwrap()
+            .expect("reordering codec");
+        let via_struct = SzRx::rx(2048).sort_permutation(&s, 1e-4);
+        assert_eq!(via_registry, via_struct);
+        assert!(sort_permutation("sz_lv", &s, 1e-4).unwrap().is_none());
+        assert!(sort_permutation("mode:best_tradeoff", &s, 1e-4)
+            .unwrap()
+            .is_some());
+        assert!(sort_permutation("bogus", &s, 1e-4).is_err());
+    }
+
+    #[test]
+    fn parameterized_build_takes_effect() {
+        // A tuned segment changes the sort permutation granularity; the
+        // compressor still round-trips within bound.
+        let s = generate_md(&MdConfig {
+            n_particles: 20_000,
+            ..Default::default()
+        });
+        let comp = build_str("sz_lv_rx:segment=1024").unwrap();
+        let bundle = comp.compress(&s, 1e-4).unwrap();
+        let back = comp.decompress(&bundle).unwrap();
+        assert_eq!(back.len(), s.len());
+        let reference = s
+            .permute(&SzRx::rx(1024).sort_permutation(&s, 1e-4))
+            .unwrap();
+        crate::snapshot::verify_bounds(&reference, &back, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn mode_specs_build_the_documented_codecs() {
+        assert_eq!(build_str("mode:best_speed").unwrap().name(), "sz_lv");
+        assert_eq!(build_str("mode:best_tradeoff").unwrap().name(), "sz_lv_prx");
+        assert_eq!(
+            build_str("mode:best_compression").unwrap().name(),
+            "sz_cpc2000"
+        );
+        assert_eq!(build_str("mode").unwrap().name(), "sz_lv_prx");
+    }
+
+    #[test]
+    fn factory_is_send_sync_and_builds() {
+        let f = factory("sz_lv_rx:segment=2048").unwrap();
+        fn assert_send_sync<T: Send + Sync>(_: &T) {}
+        assert_send_sync(&f);
+        let c = f();
+        assert_eq!(c.name(), "sz_lv_rx");
+        assert!(factory("sz_lv_rx:segment=oops").is_err());
+    }
+
+    #[test]
+    fn entry_metadata_is_complete() {
+        for e in entries() {
+            assert!(!e.description.is_empty(), "{} needs a description", e.name);
+            for d in e.params {
+                d.kind
+                    .check(d.key, d.default)
+                    .unwrap_or_else(|err| panic!("{}: bad default: {err}", e.name));
+                assert!(!d.help.is_empty(), "{}.{} needs help text", e.name, d.key);
+            }
+            if let Some(p) = e.positional {
+                assert!(
+                    e.params.iter().any(|d| d.key == p),
+                    "{}: positional key '{p}' must be declared",
+                    e.name
+                );
+            }
+        }
+    }
+}

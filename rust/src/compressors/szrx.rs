@@ -8,7 +8,7 @@
 //! so the only cost of sorting is time — which PRX attacks by ignoring
 //! the trailing 3-bit groups of the R-index (Table V).
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::quant::Predictor;
 use crate::rindex::morton::bits_for_step;
 use crate::rindex::sort::segmented_sort_perm;
@@ -118,6 +118,9 @@ impl SnapshotCompressor for SzRx {
     }
 
     fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        if c.fields.len() != 6 {
+            return Err(Error::corrupt("sz_rx bundle must have 6 field streams"));
+        }
         let sz = Sz {
             cfg: SzConfig {
                 predictor: self.predictor,
@@ -186,6 +189,19 @@ mod tests {
             (prx - full).abs() / full < 0.03,
             "PRX ratio {prx:.3} should match RX {full:.3}"
         );
+    }
+
+    #[test]
+    fn wrong_field_count_is_error_not_panic() {
+        // Reachable from hostile archives: the stream count is not tied
+        // to the codec by the container format.
+        let c = CompressedSnapshot {
+            compressor: "sz_lv_rx".into(),
+            eb_rel: 1e-4,
+            fields: vec![],
+            n: 0,
+        };
+        assert!(SzRx::prx().decompress(&c).is_err());
     }
 
     #[test]

@@ -21,6 +21,9 @@ pub struct PipelineSettings {
     pub eb_rel: f64,
     /// Compression mode.
     pub mode: Mode,
+    /// Explicit codec spec (e.g. `sz_lv_rx:segment=4096`); overrides
+    /// `mode`/`auto_route` when set.
+    pub method: Option<String>,
     /// Let the scheduler override R-index modes on orderly data (§V-C).
     pub auto_route: bool,
     /// Use the PJRT-backed quantizer when artifacts are present.
@@ -39,6 +42,7 @@ impl Default for PipelineSettings {
             queue_depth: 4,
             eb_rel: 1e-4,
             mode: Mode::BestSpeed,
+            method: None,
             auto_route: true,
             use_pjrt: false,
             sim_procs: 0,
@@ -51,9 +55,9 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 10] = [
+        const KNOWN: [&str; 11] = [
             "dataset", "particles", "shards", "workers", "queue_depth", "eb_rel",
-            "mode", "auto_route", "use_pjrt", "sim_procs",
+            "mode", "method", "auto_route", "use_pjrt", "sim_procs",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -96,6 +100,16 @@ impl PipelineSettings {
                 .ok_or_else(|| Error::Config("'mode' must be a string".into()))?;
             s.mode = Mode::parse(name)
                 .ok_or_else(|| Error::Config(format!("unknown mode '{name}'")))?;
+        }
+        if let Some(v) = doc.get(sec, "method") {
+            let spec_str = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'method' must be a string".into()))?;
+            let spec = crate::compressors::registry::CodecSpec::parse(spec_str)
+                .map_err(|e| Error::Config(format!("'method': {e}")))?;
+            crate::compressors::registry::validate(&spec)
+                .map_err(|e| Error::Config(format!("'method': {e}")))?;
+            s.method = Some(spec_str.to_string());
         }
         if let Some(v) = doc.get(sec, "auto_route") {
             s.auto_route = v
@@ -156,6 +170,16 @@ mod tests {
     }
 
     #[test]
+    fn method_spec_parses_and_validates() {
+        let doc = ConfigDoc::parse(
+            "[pipeline]\nmethod = \"sz_lv_rx:segment=4096\"\n",
+        )
+        .unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.method.as_deref(), Some("sz_lv_rx:segment=4096"));
+    }
+
+    #[test]
     fn validation_errors() {
         for bad in [
             "[pipeline]\nshards = 0\n",
@@ -164,6 +188,9 @@ mod tests {
             "[pipeline]\ndataset = \"enzo\"\n",
             "[pipeline]\nmystery = 1\n",
             "[pipeline]\nworkers = 0\n",
+            "[pipeline]\nmethod = \"warp_drive\"\n",
+            "[pipeline]\nmethod = \"sz_lv_rx:segment=oops\"\n",
+            "[pipeline]\nmethod = 3\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

@@ -23,7 +23,8 @@ use std::io::Write;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-/// Factory building one compressor per worker thread.
+/// Factory building one compressor per worker thread. Usually obtained
+/// from a codec spec via [`crate::compressors::registry::factory`].
 pub type CompressorFactory = Arc<dyn Fn() -> Box<dyn SnapshotCompressor> + Send + Sync>;
 
 /// Where compressed shards go.

@@ -1,0 +1,497 @@
+//! The versioned, self-describing `.nblc` archive format.
+//!
+//! An archive is a [`CompressedSnapshot`] plus the *canonical codec
+//! spec* that produced it (see [`crate::compressors::registry`]), so a
+//! reader can rebuild the right decompressor — including non-default
+//! tuning parameters — from the file alone.
+//!
+//! ## v2 layout (written by this crate, little-endian)
+//!
+//! ```text
+//! magic     8   b"NBLCARC2"
+//! version   4   u32 (currently 2)
+//! spec      v+L uvarint length + utf8 canonical codec spec
+//! eb_rel    8   f64 relative error bound
+//! n         v   uvarint particle count
+//! n_fields  v   uvarint stream count
+//! head_crc  4   CRC-32 of all preceding bytes
+//! per field:
+//!   name    v+L uvarint length + utf8
+//!   n       v   uvarint element count
+//!   len     v   uvarint payload length
+//!   crc     4   CRC-32 of the field header bytes above + the payload
+//!   bytes   len payload
+//! ```
+//!
+//! ## v1 compatibility
+//!
+//! Bundles written before the format was versioned (magic `NBLCBNDL`:
+//! compressor *name* only, no checksums) are still readable; their
+//! bare name doubles as a valid codec spec. All parsing — v1 included —
+//! is bounds-checked: truncated or hostile input returns
+//! [`Error::Corrupt`], never panics.
+
+use crate::error::{Error, Result};
+use crate::snapshot::{CompressedField, CompressedSnapshot};
+use crate::util::crc32::crc32;
+use crate::util::varint::{get_uvarint, put_uvarint};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Magic of the current (v2) archive format.
+pub const MAGIC_V2: &[u8; 8] = b"NBLCARC2";
+/// Magic of the legacy (v1) bundle container.
+pub const MAGIC_V1: &[u8; 8] = b"NBLCBNDL";
+/// Format version written by [`write`].
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Caps against hostile headers (far above anything we write).
+const MAX_STR_LEN: usize = 4096;
+const MAX_FIELDS: usize = 4096;
+const MAX_PARTICLES: u64 = 1 << 40;
+
+/// A decoded archive: the bundle plus its self-description.
+#[derive(Clone, Debug)]
+pub struct Archive {
+    /// Format version the file carried (1 or 2).
+    pub version: u32,
+    /// Codec spec needed to decompress. For v1 files this is the bare
+    /// compressor name; for v2 the canonical parameterized spec.
+    pub spec: String,
+    /// The compressed snapshot payload.
+    pub bundle: CompressedSnapshot,
+}
+
+/// Encode the v2 archive header (magic through header CRC).
+fn encode_header(bundle: &CompressedSnapshot, spec: &str) -> Result<Vec<u8>> {
+    if spec.is_empty() || spec.len() > MAX_STR_LEN {
+        return Err(Error::invalid("archive codec spec empty or too long"));
+    }
+    if bundle.fields.len() > MAX_FIELDS {
+        return Err(Error::invalid("archive has too many field streams"));
+    }
+    let mut out = Vec::with_capacity(64 + spec.len());
+    out.extend_from_slice(MAGIC_V2);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    put_uvarint(&mut out, spec.len() as u64);
+    out.extend_from_slice(spec.as_bytes());
+    out.extend_from_slice(&bundle.eb_rel.to_le_bytes());
+    put_uvarint(&mut out, bundle.n as u64);
+    put_uvarint(&mut out, bundle.fields.len() as u64);
+    let head_crc = crc32(&out);
+    out.extend_from_slice(&head_crc.to_le_bytes());
+    Ok(out)
+}
+
+/// Encode one field's header (name, n, len — everything before its CRC).
+fn encode_field_header(f: &CompressedField) -> Result<Vec<u8>> {
+    if f.name.len() > MAX_STR_LEN {
+        return Err(Error::invalid("field name too long"));
+    }
+    let mut fh = Vec::with_capacity(16 + f.name.len());
+    put_uvarint(&mut fh, f.name.len() as u64);
+    fh.extend_from_slice(f.name.as_bytes());
+    put_uvarint(&mut fh, f.n as u64);
+    put_uvarint(&mut fh, f.bytes.len() as u64);
+    Ok(fh)
+}
+
+/// CRC-32 covering a field's header and payload.
+fn field_crc(fh: &[u8], payload: &[u8]) -> u32 {
+    crate::util::crc32::update(crc32(fh), payload)
+}
+
+/// Emit the complete v2 layout to any writer (the single source of
+/// truth for the format; both [`write`] and [`write_bytes`] go
+/// through here).
+fn write_to<W: Write>(w: &mut W, bundle: &CompressedSnapshot, spec: &str) -> Result<()> {
+    let head = encode_header(bundle, spec)?;
+    w.write_all(&head)?;
+    for f in &bundle.fields {
+        let fh = encode_field_header(f)?;
+        let crc = field_crc(&fh, &f.bytes);
+        w.write_all(&fh)?;
+        w.write_all(&crc.to_le_bytes())?;
+        w.write_all(&f.bytes)?;
+    }
+    Ok(())
+}
+
+/// Serialize a bundle to v2 archive bytes (in-memory; [`write`] streams
+/// the same layout to a file without materializing it).
+pub fn write_bytes(bundle: &CompressedSnapshot, spec: &str) -> Result<Vec<u8>> {
+    let mut out =
+        Vec::with_capacity(64 + spec.len() + bundle.compressed_bytes() + 32 * bundle.fields.len());
+    write_to(&mut out, bundle, spec)?;
+    Ok(out)
+}
+
+/// Write a v2 archive file, streaming field payloads (no whole-archive
+/// buffer — compressed bundles can be large).
+pub fn write(path: &Path, bundle: &CompressedSnapshot, spec: &str) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_to(&mut w, bundle, spec)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Parse archive bytes (v2 or legacy v1, dispatched on the magic).
+pub fn read_bytes(bytes: &[u8]) -> Result<Archive> {
+    if bytes.len() < 8 {
+        return Err(Error::corrupt("archive shorter than its magic"));
+    }
+    match &bytes[..8] {
+        m if m == MAGIC_V2 => read_v2(bytes),
+        m if m == MAGIC_V1 => read_v1(bytes),
+        _ => Err(Error::Format {
+            expected: "NBLCARC2 or NBLCBNDL".into(),
+            found: "bad magic".into(),
+        }),
+    }
+}
+
+/// Read an archive file (v2 or legacy v1).
+pub fn read(path: &Path) -> Result<Archive> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    read_bytes(&bytes)
+}
+
+/// Bounds-checked fixed-width take.
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, k: usize, what: &str) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(k)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| Error::corrupt(format!("archive truncated in {what}")))?;
+    let s = &bytes[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+/// Bounds-checked length-prefixed UTF-8 string.
+fn take_string(bytes: &[u8], pos: &mut usize, what: &str) -> Result<String> {
+    let len = get_uvarint(bytes, pos)?;
+    if len > MAX_STR_LEN as u64 {
+        return Err(Error::corrupt(format!("implausible {what} length {len}")));
+    }
+    let raw = take(bytes, pos, len as usize, what)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| Error::corrupt(format!("{what} is not utf8")))
+}
+
+fn read_v2(bytes: &[u8]) -> Result<Archive> {
+    let mut pos = 8usize;
+    let version = u32::from_le_bytes(take(bytes, &mut pos, 4, "version")?.try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(Error::Format {
+            expected: format!("archive v{FORMAT_VERSION}"),
+            found: format!("archive v{version}"),
+        });
+    }
+    let spec = take_string(bytes, &mut pos, "codec spec")?;
+    let eb_rel = f64::from_le_bytes(take(bytes, &mut pos, 8, "error bound")?.try_into().unwrap());
+    let n = get_uvarint(bytes, &mut pos)?;
+    if n > MAX_PARTICLES {
+        return Err(Error::corrupt("implausible particle count"));
+    }
+    let n_fields = get_uvarint(bytes, &mut pos)?;
+    if n_fields > MAX_FIELDS as u64 {
+        return Err(Error::corrupt("implausible field count"));
+    }
+    let stored_crc =
+        u32::from_le_bytes(take(bytes, &mut pos, 4, "header crc")?.try_into().unwrap());
+    let actual_crc = crc32(&bytes[..pos - 4]);
+    if stored_crc != actual_crc {
+        return Err(Error::corrupt(format!(
+            "header checksum mismatch (stored {stored_crc:#010x}, computed {actual_crc:#010x})"
+        )));
+    }
+    let mut fields = Vec::with_capacity(n_fields as usize);
+    for i in 0..n_fields {
+        let header_start = pos;
+        let name = take_string(bytes, &mut pos, "field name")?;
+        let fn_ = get_uvarint(bytes, &mut pos)?;
+        if fn_ > MAX_PARTICLES * 6 {
+            return Err(Error::corrupt("implausible field element count"));
+        }
+        let len = get_uvarint(bytes, &mut pos)?;
+        if len > (bytes.len() - pos) as u64 {
+            return Err(Error::corrupt(format!("field {i} payload truncated")));
+        }
+        let header_crc = crc32(&bytes[header_start..pos]);
+        let stored =
+            u32::from_le_bytes(take(bytes, &mut pos, 4, "field crc")?.try_into().unwrap());
+        let payload = take(bytes, &mut pos, len as usize, "field payload")?;
+        let actual = crate::util::crc32::update(header_crc, payload);
+        if stored != actual {
+            return Err(Error::corrupt(format!(
+                "field '{name}' checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+            )));
+        }
+        fields.push(CompressedField {
+            name,
+            n: fn_ as usize,
+            bytes: payload.to_vec(),
+        });
+    }
+    if pos != bytes.len() {
+        return Err(Error::corrupt("trailing garbage after archive payload"));
+    }
+    // The spec's name component keeps `CompressedSnapshot::compressor`
+    // meaningful for reports without re-resolving the registry here.
+    let compressor = spec.split(':').next().unwrap_or(&spec).to_string();
+    Ok(Archive {
+        version,
+        spec,
+        bundle: CompressedSnapshot {
+            compressor,
+            eb_rel,
+            fields,
+            n: n as usize,
+        },
+    })
+}
+
+/// Legacy v1 bundle reader (`NBLCBNDL`): no version field, no
+/// checksums, compressor identified by bare name.
+fn read_v1(bytes: &[u8]) -> Result<Archive> {
+    let mut pos = 8usize;
+    let compressor = take_string(bytes, &mut pos, "bundle method name")?;
+    let eb_rel = f64::from_le_bytes(take(bytes, &mut pos, 8, "error bound")?.try_into().unwrap());
+    let n = get_uvarint(bytes, &mut pos)?;
+    if n > MAX_PARTICLES {
+        return Err(Error::corrupt("implausible particle count"));
+    }
+    let n_fields = get_uvarint(bytes, &mut pos)?;
+    if n_fields > MAX_FIELDS as u64 {
+        return Err(Error::corrupt("implausible field count"));
+    }
+    let mut fields = Vec::with_capacity(n_fields as usize);
+    for i in 0..n_fields {
+        let name = take_string(bytes, &mut pos, "field name")?;
+        let fn_ = get_uvarint(bytes, &mut pos)?;
+        let len = get_uvarint(bytes, &mut pos)?;
+        if len > (bytes.len() - pos) as u64 {
+            return Err(Error::corrupt(format!("field {i} payload truncated")));
+        }
+        let payload = take(bytes, &mut pos, len as usize, "field payload")?;
+        fields.push(CompressedField {
+            name,
+            n: fn_ as usize,
+            bytes: payload.to_vec(),
+        });
+    }
+    Ok(Archive {
+        version: 1,
+        spec: compressor.clone(),
+        bundle: CompressedSnapshot {
+            compressor,
+            eb_rel,
+            fields,
+            n: n as usize,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::registry;
+    use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::snapshot::Snapshot;
+
+    fn bundle() -> (Snapshot, CompressedSnapshot) {
+        let s = generate_md(&MdConfig {
+            n_particles: 4000,
+            ..Default::default()
+        });
+        let comp = registry::build_str("sz_lv").unwrap();
+        let b = comp.compress(&s, 1e-4).unwrap();
+        (s, b)
+    }
+
+    /// Encode a pre-PR v1 bundle byte-for-byte like `main.rs::bundlefile`
+    /// used to, so compatibility is pinned by test.
+    fn encode_v1(b: &CompressedSnapshot) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
+        put_uvarint(&mut out, b.compressor.len() as u64);
+        out.extend_from_slice(b.compressor.as_bytes());
+        out.extend_from_slice(&b.eb_rel.to_le_bytes());
+        put_uvarint(&mut out, b.n as u64);
+        put_uvarint(&mut out, b.fields.len() as u64);
+        for f in &b.fields {
+            put_uvarint(&mut out, f.name.len() as u64);
+            out.extend_from_slice(f.name.as_bytes());
+            put_uvarint(&mut out, f.n as u64);
+            put_uvarint(&mut out, f.bytes.len() as u64);
+            out.extend_from_slice(&f.bytes);
+        }
+        out
+    }
+
+    #[test]
+    fn v2_roundtrip() {
+        let (_, b) = bundle();
+        let spec = registry::canonical("sz_lv").unwrap();
+        let bytes = write_bytes(&b, &spec).unwrap();
+        let arch = read_bytes(&bytes).unwrap();
+        assert_eq!(arch.version, FORMAT_VERSION);
+        assert_eq!(arch.spec, spec);
+        assert_eq!(arch.bundle.n, b.n);
+        assert_eq!(arch.bundle.eb_rel, b.eb_rel);
+        assert_eq!(arch.bundle.fields.len(), b.fields.len());
+        for (a, e) in arch.bundle.fields.iter().zip(&b.fields) {
+            assert_eq!(a.name, e.name);
+            assert_eq!(a.n, e.n);
+            assert_eq!(a.bytes, e.bytes);
+        }
+    }
+
+    #[test]
+    fn v2_file_roundtrip_and_decompress() {
+        let (s, b) = bundle();
+        let p = std::env::temp_dir().join(format!("nblc_arch_{}.nblc", std::process::id()));
+        write(&p, &b, "sz_lv:lossless=false,radius=32768").unwrap();
+        let arch = read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        let comp = registry::build_str(&arch.spec).unwrap();
+        let back = comp.decompress(&arch.bundle).unwrap();
+        crate::snapshot::verify_bounds(&s, &back, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn v1_bundles_still_read() {
+        let (s, b) = bundle();
+        let bytes = encode_v1(&b);
+        let arch = read_bytes(&bytes).unwrap();
+        assert_eq!(arch.version, 1);
+        assert_eq!(arch.spec, "sz_lv");
+        let comp = registry::build_str(&arch.spec).unwrap();
+        let back = comp.decompress(&arch.bundle).unwrap();
+        crate::snapshot::verify_bounds(&s, &back, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn truncation_never_panics_v2() {
+        let (_, b) = bundle();
+        let bytes = write_bytes(&b, "sz_lv").unwrap();
+        // Every prefix must fail cleanly (Err), not panic. Step through
+        // the header densely and the payload sparsely.
+        for cut in (0..bytes.len().min(64))
+            .chain((64..bytes.len()).step_by(101))
+            .chain([bytes.len() - 1])
+        {
+            assert!(read_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn truncation_never_panics_v1() {
+        // The seed's reader sliced `bytes[pos..pos+len]` unchecked and
+        // `try_into().unwrap()`-ed the eb field; both paths panicked on
+        // truncated input. Regression: every prefix errors cleanly.
+        let (_, b) = bundle();
+        let bytes = encode_v1(&b);
+        for cut in (0..bytes.len().min(64))
+            .chain((64..bytes.len()).step_by(101))
+            .chain([bytes.len() - 1])
+        {
+            assert!(read_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_rejected() {
+        // v1 header claiming a gigantic name length must not allocate
+        // or slice out of bounds.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        put_uvarint(&mut bytes, u64::MAX / 2);
+        bytes.extend_from_slice(&[0u8; 32]);
+        assert!(read_bytes(&bytes).is_err());
+
+        // v2 field payload length larger than the file.
+        let (_, b) = bundle();
+        let good = write_bytes(&b, "sz_lv").unwrap();
+        let mut evil = good.clone();
+        let tail = evil.len() - 40;
+        for i in tail..evil.len() {
+            evil[i] = 0xFF; // scribble over a field header
+        }
+        assert!(read_bytes(&evil).is_err());
+    }
+
+    #[test]
+    fn bit_flips_are_detected_v2() {
+        let (_, b) = bundle();
+        let bytes = write_bytes(&b, "sz_lv").unwrap();
+        // Flip one bit in the header and one deep in a payload: the
+        // CRCs must catch both.
+        for flip in [10usize, bytes.len() - 8] {
+            let mut bad = bytes.clone();
+            bad[flip] ^= 0x10;
+            assert!(read_bytes(&bad).is_err(), "flip at {flip} undetected");
+        }
+    }
+
+    #[test]
+    fn streamed_file_matches_in_memory_encoding() {
+        let (_, b) = bundle();
+        let expected = write_bytes(&b, "sz_lv").unwrap();
+        let p = std::env::temp_dir().join(format!("nblc_arch_stream_{}.nblc", std::process::id()));
+        write(&p, &b, "sz_lv").unwrap();
+        let on_disk = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(on_disk, expected);
+    }
+
+    #[test]
+    fn field_header_corruption_detected() {
+        // The field CRC covers the field's name/n/len header, not just
+        // its payload: flipping a bit in the stored name must fail.
+        let b = CompressedSnapshot {
+            compressor: "gzip".into(),
+            eb_rel: 1e-4,
+            n: 16,
+            fields: vec![CompressedField {
+                name: "XFIELDNAMEX".into(),
+                n: 16,
+                bytes: vec![0u8; 64],
+            }],
+        };
+        let bytes = write_bytes(&b, "gzip").unwrap();
+        let at = bytes
+            .windows(11)
+            .position(|w| w == b"XFIELDNAMEX")
+            .expect("field name present in header");
+        let mut bad = bytes.clone();
+        bad[at] ^= 0x01;
+        assert!(read_bytes(&bad).is_err(), "corrupted field name undetected");
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(read_bytes(b"").is_err());
+        assert!(read_bytes(b"short").is_err());
+        assert!(read_bytes(b"NOTMAGIC________________").is_err());
+        let mut junk = MAGIC_V2.to_vec();
+        junk.extend_from_slice(&[0xAB; 100]);
+        assert!(read_bytes(&junk).is_err());
+    }
+
+    #[test]
+    fn spec_survives_nondefault_parameters() {
+        let s = generate_md(&MdConfig {
+            n_particles: 3000,
+            ..Default::default()
+        });
+        let spec = registry::canonical("sz_lv_rx:segment=4096").unwrap();
+        let comp = registry::build_str(&spec).unwrap();
+        let b = comp.compress(&s, 1e-4).unwrap();
+        let bytes = write_bytes(&b, &spec).unwrap();
+        let arch = read_bytes(&bytes).unwrap();
+        assert_eq!(arch.spec, "sz_lv_rx:ignore=0,segment=4096,source=coords");
+        assert_eq!(arch.bundle.compressor, "sz_lv_rx");
+        assert!(registry::build_str(&arch.spec).is_ok());
+    }
+}

@@ -21,6 +21,11 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"NBLCSNAP";
 const VERSION: u32 = 1;
 
+/// Elements per conversion chunk in [`write_snapshot`] (256 KiB of
+/// bytes): large enough to amortize `write_all` calls, small enough to
+/// stay cache-resident instead of allocating `n * 4` bytes per field.
+const WRITE_CHUNK: usize = 1 << 16;
+
 /// Write a snapshot to `path`.
 pub fn write_snapshot(snap: &Snapshot, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)?;
@@ -33,13 +38,17 @@ pub fn write_snapshot(snap: &Snapshot, path: &Path) -> Result<()> {
     let name = snap.name.as_bytes();
     w.write_all(&(name.len() as u32).to_le_bytes())?;
     w.write_all(name)?;
+    // One bounded conversion buffer reused across all six fields
+    // (previously a fresh n*4-byte allocation per field).
+    let mut buf: Vec<u8> = Vec::with_capacity(WRITE_CHUNK * 4);
     for field in &snap.fields {
-        // Bulk conversion: safe reinterpretation via chunked buffer.
-        let mut buf = Vec::with_capacity(field.len() * 4);
-        for &x in field {
-            buf.extend_from_slice(&x.to_le_bytes());
+        for chunk in field.chunks(WRITE_CHUNK) {
+            buf.clear();
+            for &x in chunk {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
         }
-        w.write_all(&buf)?;
     }
     w.flush()?;
     Ok(())

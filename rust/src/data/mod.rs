@@ -10,6 +10,7 @@
 //! See DESIGN.md §2 for the substitution argument and the calibration
 //! tests at the bottom of each generator for the Table III targets.
 
+pub mod archive;
 pub mod gen_cosmo;
 pub mod gen_md;
 pub mod io;

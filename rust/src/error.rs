@@ -1,41 +1,71 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no derive-macro dependency) so
+//! the crate builds offline with zero external crates.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all `nblc` operations.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or truncated compressed stream.
-    #[error("corrupt stream: {0}")]
     Corrupt(String),
 
     /// A compressed stream claims a different format/version than expected.
-    #[error("format mismatch: expected {expected}, found {found}")]
     Format { expected: String, found: String },
 
     /// Invalid user-supplied parameter.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// Error-bound violation detected during verification.
-    #[error("error bound violated: index {index}, |err|={err:.3e} > eb={eb:.3e}")]
     BoundViolation { index: usize, err: f64, eb: f64 },
 
     /// Configuration file problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT / XLA runtime problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / pipeline problems.
-    #[error("pipeline error: {0}")]
     Pipeline(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Corrupt(msg) => write!(f, "corrupt stream: {msg}"),
+            Error::Format { expected, found } => {
+                write!(f, "format mismatch: expected {expected}, found {found}")
+            }
+            Error::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+            Error::BoundViolation { index, err, eb } => write!(
+                f,
+                "error bound violated: index {index}, |err|={err:.3e} > eb={eb:.3e}"
+            ),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -51,3 +81,30 @@ impl Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_format() {
+        assert_eq!(
+            Error::corrupt("bad").to_string(),
+            "corrupt stream: bad"
+        );
+        assert_eq!(
+            Error::Format {
+                expected: "a".into(),
+                found: "b".into()
+            }
+            .to_string(),
+            "format mismatch: expected a, found b"
+        );
+        assert_eq!(
+            Error::invalid("nope").to_string(),
+            "invalid argument: nope"
+        );
+        let io: Error = std::io::Error::other("boom").into();
+        assert_eq!(io.to_string(), "boom");
+    }
+}

@@ -20,20 +20,52 @@
 //! * **Benchmark harnesses** regenerating every table and figure of the
 //!   paper's evaluation section (see `benches/`).
 //!
-//! ## Quickstart
+//! ## Quickstart: the codec registry
+//!
+//! Compressors are built from a **codec spec** — `name:key=val,key=val`
+//! — through the central registry in [`compressors::registry`]. Bare
+//! names (`sz_lv`), tuned parameters (`sz_lv_rx:segment=4096`, swept in
+//! the paper's Table IV), and the paper's mode selector
+//! (`mode:best_tradeoff`) all go through the same path:
 //!
 //! ```no_run
+//! use nblc::compressors::registry;
 //! use nblc::data::gen_md::{MdConfig, generate_md};
-//! use nblc::compressors::{Mode, mode_compressor};
-//! use nblc::snapshot::SnapshotCompressor;
 //!
 //! let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
-//! let comp = mode_compressor(Mode::BestSpeed);
+//! let comp = registry::build_str("sz_lv_rx:segment=4096").unwrap();
 //! let bundle = comp.compress(&snap, 1e-4).unwrap();
 //! println!("ratio = {:.2}", bundle.compression_ratio());
 //! let restored = comp.decompress(&bundle).unwrap();
 //! assert_eq!(restored.len(), snap.len());
 //! ```
+//!
+//! ## Self-describing archives
+//!
+//! [`data::archive`] persists a compressed snapshot together with the
+//! *canonical* spec that produced it (defaults filled in), magic +
+//! format version, and per-field CRC32s, so decompression needs nothing
+//! but the file — even for non-default parameters:
+//!
+//! ```no_run
+//! # use nblc::compressors::registry;
+//! # use nblc::data::gen_md::{MdConfig, generate_md};
+//! use nblc::data::archive;
+//! use std::path::Path;
+//!
+//! # let snap = generate_md(&MdConfig { n_particles: 1000, ..Default::default() });
+//! let spec = registry::canonical("sz_lv_rx:segment=4096").unwrap();
+//! let bundle = registry::build_str(&spec).unwrap().compress(&snap, 1e-4).unwrap();
+//! archive::write(Path::new("out.nblc"), &bundle, &spec).unwrap();
+//!
+//! let arch = archive::read(Path::new("out.nblc")).unwrap();
+//! let restored = registry::build_str(&arch.spec).unwrap()
+//!     .decompress(&arch.bundle).unwrap();
+//! ```
+//!
+//! Pipelines build one compressor per worker thread from the same spec
+//! via [`compressors::registry::factory`]. `nblc list-codecs` prints
+//! every registered codec with its tunable-parameter schema.
 
 pub mod error;
 pub mod util;

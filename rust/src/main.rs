@@ -1,18 +1,21 @@
 //! `nblc` — the launcher / leader entrypoint.
 //!
 //! Subcommands:
-//!   gen        generate a synthetic snapshot to a file
-//!   compress   compress a snapshot file with a named method
-//!   decompress decompress a bundle back to a snapshot file
-//!   analyze    distortion report (max err / NRMSE / PSNR per field)
-//!   pipeline   run the in-situ pipeline from a config file
-//!   info       print dataset / artifact / runtime diagnostics
+//!   gen         generate a synthetic snapshot to a file
+//!   compress    compress a snapshot file with a codec spec
+//!   decompress  decompress an archive back to a snapshot file
+//!   inspect     print an archive's self-description (spec, fields, CRCs)
+//!   list-codecs show every registered codec and its tunable parameters
+//!   analyze     distortion report (max err / NRMSE / PSNR per field)
+//!   pipeline    run the in-situ pipeline from a config file
+//!   info        print dataset / artifact / runtime diagnostics
 
 use nblc::cli::Args;
-use nblc::compressors::{by_name, mode_compressor};
+use nblc::compressors::registry;
 use nblc::config::{ConfigDoc, PipelineSettings};
-use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::coordinator::{choose_compressor, GpfsModel};
+use nblc::data::archive;
 use nblc::data::io::{read_snapshot, write_snapshot};
 use nblc::data::{generate, DatasetKind};
 use nblc::error::{Error, Result};
@@ -21,7 +24,6 @@ use nblc::snapshot::FIELD_NAMES;
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 const HELP: &str = "\
 nblc — single-snapshot lossy compression for N-body simulations
@@ -29,15 +31,19 @@ nblc — single-snapshot lossy compression for N-body simulations
 USAGE: nblc <command> [flags]
 
 COMMANDS:
-  gen        --dataset hacc|amdf --n <count> --seed <u64> --out <file>
-  compress   <in.snap> <out.nblc> --method <name> [--eb 1e-4]
-  decompress <in.nblc> <out.snap> --method <name>
-  analyze    <orig.snap> <recon.snap>
-  pipeline   --config <file.toml>
-  info       [--artifacts <dir>]
+  gen         --dataset hacc|amdf --n <count> --seed <u64> --out <file>
+  compress    <in.snap> <out.nblc> --method <spec> [--eb 1e-4]
+  decompress  <in.nblc> <out.snap> [--method <spec>]
+  inspect     <in.nblc>
+  list-codecs
+  analyze     <orig.snap> <recon.snap>
+  pipeline    --config <file.toml>
+  info        [--artifacts <dir>]
 
-Methods: gzip cpc2000 fpzip isabela zfp sz sz_lv sz_lv_rx sz_lv_prx sz_cpc2000
-Modes (pipeline): best_speed best_tradeoff best_compression
+A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
+`sz_lv_rx:segment=4096`, `sz:pred=lv`, or `mode:best_tradeoff`.
+Archives are self-describing: `decompress` needs no --method.
+Run `nblc list-codecs` for every codec and tunable parameter.
 ";
 
 fn main() {
@@ -64,6 +70,8 @@ fn run(args: &Args) -> Result<()> {
         "gen" => cmd_gen(args),
         "compress" => cmd_compress(args),
         "decompress" => cmd_decompress(args),
+        "inspect" => cmd_inspect(args),
+        "list-codecs" => cmd_list_codecs(args),
         "analyze" => cmd_analyze(args),
         "pipeline" => cmd_pipeline(args),
         "info" => cmd_info(args),
@@ -101,83 +109,6 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Bundle container: magic, method, eb, per-field streams.
-mod bundlefile {
-    use super::*;
-    use nblc::snapshot::{CompressedField, CompressedSnapshot};
-    use nblc::util::varint::{get_uvarint, put_uvarint};
-    use std::io::{Read, Write};
-
-    const MAGIC: &[u8; 8] = b"NBLCBNDL";
-
-    pub fn write(bundle: &CompressedSnapshot, path: &Path) -> Result<()> {
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(MAGIC)?;
-        let mut head = Vec::new();
-        put_uvarint(&mut head, bundle.compressor.len() as u64);
-        head.extend_from_slice(bundle.compressor.as_bytes());
-        head.extend_from_slice(&bundle.eb_rel.to_le_bytes());
-        put_uvarint(&mut head, bundle.n as u64);
-        put_uvarint(&mut head, bundle.fields.len() as u64);
-        w.write_all(&head)?;
-        for f in &bundle.fields {
-            let mut fh = Vec::new();
-            put_uvarint(&mut fh, f.name.len() as u64);
-            fh.extend_from_slice(f.name.as_bytes());
-            put_uvarint(&mut fh, f.n as u64);
-            put_uvarint(&mut fh, f.bytes.len() as u64);
-            w.write_all(&fh)?;
-            w.write_all(&f.bytes)?;
-        }
-        w.flush()?;
-        Ok(())
-    }
-
-    pub fn read(path: &Path) -> Result<CompressedSnapshot> {
-        let mut bytes = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
-        if bytes.len() < 8 || &bytes[..8] != MAGIC {
-            return Err(Error::Format {
-                expected: "NBLCBNDL".into(),
-                found: "bad magic".into(),
-            });
-        }
-        let mut pos = 8usize;
-        let name_len = get_uvarint(&bytes, &mut pos)? as usize;
-        let compressor = String::from_utf8(bytes[pos..pos + name_len].to_vec())
-            .map_err(|_| Error::corrupt("bundle method name not utf8"))?;
-        pos += name_len;
-        let eb_rel = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
-        pos += 8;
-        let n = get_uvarint(&bytes, &mut pos)? as usize;
-        let n_fields = get_uvarint(&bytes, &mut pos)? as usize;
-        let mut fields = Vec::with_capacity(n_fields);
-        for _ in 0..n_fields {
-            let nl = get_uvarint(&bytes, &mut pos)? as usize;
-            let name = String::from_utf8(bytes[pos..pos + nl].to_vec())
-                .map_err(|_| Error::corrupt("field name not utf8"))?;
-            pos += nl;
-            let fn_ = get_uvarint(&bytes, &mut pos)? as usize;
-            let bl = get_uvarint(&bytes, &mut pos)? as usize;
-            if pos + bl > bytes.len() {
-                return Err(Error::corrupt("bundle truncated"));
-            }
-            fields.push(CompressedField {
-                name,
-                n: fn_,
-                bytes: bytes[pos..pos + bl].to_vec(),
-            });
-            pos += bl;
-        }
-        Ok(CompressedSnapshot {
-            compressor,
-            eb_rel,
-            fields,
-            n,
-        })
-    }
-}
-
 fn cmd_compress(args: &Args) -> Result<()> {
     args.expect_known(&["method", "eb"])?;
     let [input, output] = args.positionals.as_slice() else {
@@ -185,13 +116,13 @@ fn cmd_compress(args: &Args) -> Result<()> {
     };
     let method = args.get_or("method", "sz_lv");
     let eb: f64 = args.get_parse("eb", 1e-4)?;
-    let comp =
-        by_name(&method).ok_or_else(|| Error::invalid(format!("unknown method '{method}'")))?;
+    let spec = registry::canonical(&method)?;
+    let comp = registry::build_str(&spec)?;
     let snap = read_snapshot(Path::new(input))?;
     let t = Timer::start();
     let bundle = comp.compress(&snap, eb)?;
     let secs = t.secs();
-    bundlefile::write(&bundle, Path::new(output))?;
+    archive::write(Path::new(output), &bundle, &spec)?;
     println!(
         "{method}: {} -> {} (ratio {:.2}, {} at {})",
         humansize::bytes(bundle.original_bytes() as u64),
@@ -200,6 +131,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         humansize::secs(secs),
         humansize::rate(bundle.original_bytes() as f64 / secs),
     );
+    println!("archived spec: {spec}");
     Ok(())
 }
 
@@ -208,15 +140,18 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
-    let bundle = bundlefile::read(Path::new(input))?;
-    let method = args.get_or("method", &bundle.compressor);
-    let comp =
-        by_name(&method).ok_or_else(|| Error::invalid(format!("unknown method '{method}'")))?;
+    let arch = archive::read(Path::new(input))?;
+    // The archive is self-describing; --method only overrides it.
+    let spec = args
+        .get("method")
+        .map(str::to_string)
+        .unwrap_or_else(|| arch.spec.clone());
+    let comp = registry::build_str(&spec)?;
     let t = Timer::start();
-    let snap = comp.decompress(&bundle)?;
+    let snap = comp.decompress(&arch.bundle)?;
     write_snapshot(&snap, Path::new(output))?;
     println!(
-        "decompressed {} particles in {} ({})",
+        "decompressed {} particles via '{spec}' in {} ({})",
         snap.len(),
         humansize::secs(t.secs()),
         if comp.reorders() {
@@ -225,6 +160,75 @@ fn cmd_decompress(args: &Args) -> Result<()> {
             "original particle order"
         }
     );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    let [input] = args.positionals.as_slice() else {
+        return Err(Error::invalid("usage: inspect <in.nblc>"));
+    };
+    let arch = archive::read(Path::new(input))?;
+    println!("archive:   {input}");
+    println!("format:    v{}", arch.version);
+    println!("spec:      {}", arch.spec);
+    println!("eb_rel:    {:.3e}", arch.bundle.eb_rel);
+    println!("particles: {}", arch.bundle.n);
+    println!(
+        "size:      {} -> {} (ratio {:.2}, {:.2} bits/value)",
+        humansize::bytes(arch.bundle.original_bytes() as u64),
+        humansize::bytes(arch.bundle.compressed_bytes() as u64),
+        arch.bundle.compression_ratio(),
+        arch.bundle.bit_rate(),
+    );
+    println!(
+        "integrity: {}",
+        if arch.version >= 2 {
+            "per-field CRC32 verified"
+        } else {
+            "v1 bundle (no checksums)"
+        }
+    );
+    println!("{:>8} {:>12} {:>12} {:>8}", "field", "values", "bytes", "ratio");
+    for f in &arch.bundle.fields {
+        println!(
+            "{:>8} {:>12} {:>12} {:>8.2}",
+            f.name,
+            f.n,
+            f.bytes.len(),
+            f.ratio()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list_codecs(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    println!("{:<12} {:<8} description", "codec", "reorders");
+    for e in registry::entries() {
+        let name = if e.aliases.is_empty() {
+            e.name.to_string()
+        } else {
+            format!("{} ({})", e.name, e.aliases.join(", "))
+        };
+        println!(
+            "{:<12} {:<8} {}",
+            name,
+            if e.reorders { "yes" } else { "no" },
+            e.description
+        );
+        for p in e.params {
+            println!(
+                "             --method {}:{}=<{}>  default {}  {}",
+                e.name,
+                p.key,
+                p.kind.describe(),
+                p.default,
+                p.help
+            );
+        }
+    }
+    println!("\nspec syntax: name:key=val,key=val   e.g. sz_lv_rx:segment=4096");
     Ok(())
 }
 
@@ -262,21 +266,33 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("generating {} snapshot (n={n})...", kind.name());
     let snap = generate(kind, n, nblc::bench::BENCH_SEED);
 
-    let mode = if settings.auto_route {
-        let routed = choose_compressor(&snap, settings.mode);
-        if routed != settings.mode {
-            println!(
-                "scheduler: '{}' overridden to '{}' (orderly coordinate detected, par.V-C)",
-                settings.mode.name(),
-                routed.name()
-            );
+    // An explicit codec spec pins the compressor; otherwise the mode
+    // (plus the §V-C scheduler when auto_route is on) picks it.
+    let spec = match &settings.method {
+        Some(m) => {
+            let canonical = registry::canonical(m)?;
+            println!("pipeline codec: {canonical}");
+            canonical
         }
-        routed
-    } else {
-        settings.mode
+        None => {
+            let mode = if settings.auto_route {
+                let routed = choose_compressor(&snap, settings.mode);
+                if routed != settings.mode {
+                    println!(
+                        "scheduler: '{}' overridden to '{}' (orderly coordinate detected, par.V-C)",
+                        settings.mode.name(),
+                        routed.name()
+                    );
+                }
+                routed
+            } else {
+                settings.mode
+            };
+            mode.spec()
+        }
     };
 
-    let factory: CompressorFactory = Arc::new(move || mode_compressor(mode));
+    let factory = registry::factory(&spec)?;
     let sink = if settings.sim_procs > 0 {
         Sink::Model {
             model: GpfsModel::default(),
@@ -333,5 +349,11 @@ fn cmd_info(args: &Args) -> Result<()> {
             nblc::data::default_n(kind)
         );
     }
+    // Quick sanity that every registered codec still builds.
+    let ok = registry::entries()
+        .iter()
+        .filter(|e| registry::build_str(e.name).is_ok())
+        .count();
+    println!("codecs: {}/{} registered specs build", ok, registry::entries().len());
     Ok(())
 }

@@ -1,0 +1,72 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) used by the
+//! `.nblc` archive format for header and per-field integrity checks.
+
+/// Lookup table generated at compile time.
+static TABLE: [u32; 256] = make_table();
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    update(0, data)
+}
+
+/// Incremental CRC-32: feed chunks, starting from `crc = 0`.
+pub fn update(crc: u32, data: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let whole = crc32(&data);
+        let mut inc = 0u32;
+        for chunk in data.chunks(97) {
+            inc = update(inc, chunk);
+        }
+        assert_eq!(inc, whole);
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![0u8; 1024];
+        data[500] = 0x55;
+        let before = crc32(&data);
+        data[500] ^= 0x01;
+        assert_ne!(before, crc32(&data));
+    }
+}

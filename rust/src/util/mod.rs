@@ -3,6 +3,7 @@
 
 pub mod rng;
 pub mod bits;
+pub mod crc32;
 pub mod varint;
 pub mod timer;
 pub mod stats;

@@ -1,0 +1,99 @@
+//! Round-trip property test over the whole codec lineup × error bounds
+//! × data sets: compress → archive-write → archive-read → rebuild the
+//! codec *from the archived spec* → decompress → verify the error bound
+//! (modulo the reordering codecs' deterministic permutation).
+
+use nblc::compressors::{full_lineup, registry};
+use nblc::data::archive;
+use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::snapshot::verify_bounds;
+
+#[test]
+fn full_lineup_roundtrips_through_archive() {
+    let md = generate_md(&MdConfig {
+        n_particles: 3000,
+        ..Default::default()
+    });
+    let cosmo = generate_cosmo(&CosmoConfig {
+        n_particles: 3000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    for (tag, snap) in [("md", &md), ("cosmo", &cosmo)] {
+        for name in full_lineup() {
+            for (ei, eb_rel) in [1e-3, 1e-4, 1e-5].into_iter().enumerate() {
+                let ctx = format!("{tag}/{name}/eb={eb_rel:e}");
+                let comp = registry::build_str(name).unwrap();
+                let bundle = comp
+                    .compress(snap, eb_rel)
+                    .unwrap_or_else(|e| panic!("{ctx}: compress failed: {e}"));
+                let spec = registry::canonical(name).unwrap();
+                let path = dir.join(format!(
+                    "nblc_rt_{}_{tag}_{name}_{ei}.nblc",
+                    std::process::id()
+                ));
+                archive::write(&path, &bundle, &spec)
+                    .unwrap_or_else(|e| panic!("{ctx}: write failed: {e}"));
+                let arch = archive::read(&path)
+                    .unwrap_or_else(|e| panic!("{ctx}: read failed: {e}"));
+                std::fs::remove_file(&path).ok();
+                assert_eq!(arch.version, archive::FORMAT_VERSION, "{ctx}");
+                assert_eq!(arch.bundle.n, snap.len(), "{ctx}");
+                assert_eq!(arch.bundle.eb_rel, eb_rel, "{ctx}");
+
+                // Decompress with a codec rebuilt purely from the file's
+                // self-description, as `nblc decompress` (no --method) does.
+                let decomp = registry::build_str(&arch.spec)
+                    .unwrap_or_else(|e| panic!("{ctx}: archived spec invalid: {e}"));
+                let recon = decomp
+                    .decompress(&arch.bundle)
+                    .unwrap_or_else(|e| panic!("{ctx}: decompress failed: {e}"));
+                assert_eq!(recon.len(), snap.len(), "{ctx}");
+
+                if name == "fpzip" {
+                    // Precision-based: lands *near* the requested bound,
+                    // not strictly under it (paper §IV) — length check only.
+                    continue;
+                }
+                let reference = match registry::sort_permutation(name, snap, eb_rel).unwrap() {
+                    Some(perm) => snap.permute(&perm).unwrap(),
+                    None => snap.clone(),
+                };
+                verify_bounds(&reference, &recon, eb_rel)
+                    .unwrap_or_else(|e| panic!("{ctx}: bound violated: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn tuned_spec_roundtrips_from_archive_alone() {
+    // The acceptance-criteria flow: compress with a non-default
+    // parameter, then decompress knowing nothing but the archive.
+    let snap = generate_md(&MdConfig {
+        n_particles: 5000,
+        ..Default::default()
+    });
+    let user_spec = "sz_lv_rx:segment=4096";
+    let canonical = registry::canonical(user_spec).unwrap();
+    let comp = registry::build_str(user_spec).unwrap();
+    let bundle = comp.compress(&snap, 1e-4).unwrap();
+    let path = std::env::temp_dir().join(format!("nblc_rt_tuned_{}.nblc", std::process::id()));
+    archive::write(&path, &bundle, &canonical).unwrap();
+
+    let arch = archive::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(arch.spec, "sz_lv_rx:ignore=0,segment=4096,source=coords");
+    let recon = registry::build_str(&arch.spec)
+        .unwrap()
+        .decompress(&arch.bundle)
+        .unwrap();
+    // Align using the *archived* spec: the permutation must come out
+    // with segment=4096, not the default.
+    let perm = registry::sort_permutation(&arch.spec, &snap, 1e-4)
+        .unwrap()
+        .expect("sz_lv_rx reorders");
+    let reference = snap.permute(&perm).unwrap();
+    verify_bounds(&reference, &recon, 1e-4).unwrap();
+}

@@ -2,17 +2,16 @@
 //! pipeline -> per-shard streams decode within bound; plus the
 //! rebalancing loop over observed shard costs.
 
-use nblc::compressors::{mode_compressor, Mode};
+use nblc::compressors::{registry, Mode};
 use nblc::config::{ConfigDoc, PipelineSettings};
 use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
 use nblc::coordinator::shard::{rebalance, split_even, Shard};
 use nblc::coordinator::GpfsModel;
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::snapshot::{verify_bounds, PerField, SnapshotCompressor};
-use std::sync::Arc;
 
 fn factory_for(mode: Mode) -> CompressorFactory {
-    Arc::new(move || mode_compressor(mode))
+    registry::factory(&mode.spec()).expect("mode spec is registry-valid")
 }
 
 #[test]
@@ -55,6 +54,45 @@ fn config_to_pipeline_roundtrip() {
     assert!(report.ratio > 2.0, "ratio {}", report.ratio);
     assert!(report.sink_secs > 0.0);
     assert_eq!(report.shard_ratios.len(), 8);
+}
+
+#[test]
+fn config_method_spec_drives_pipeline() {
+    // An explicit parameterized codec spec in the config feeds the
+    // registry factory directly (the `method` key overrides `mode`).
+    let doc = ConfigDoc::parse(
+        r#"
+        [pipeline]
+        dataset = "amdf"
+        particles = 30000
+        shards = 4
+        workers = 2
+        queue_depth = 2
+        eb_rel = 1e-4
+        method = "sz_lv_rx:segment=2048"
+        "#,
+    )
+    .unwrap();
+    let settings = PipelineSettings::from_doc(&doc).unwrap();
+    let spec = settings.method.as_deref().expect("method key parsed");
+    let snap = generate_md(&MdConfig {
+        n_particles: settings.particles,
+        ..Default::default()
+    });
+    let report = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: settings.shards,
+            workers: settings.workers,
+            queue_depth: settings.queue_depth,
+            eb_rel: settings.eb_rel,
+            factory: registry::factory(spec).unwrap(),
+            sink: Sink::Null,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.bytes_in, snap.total_bytes() as u64);
+    assert!(report.ratio > 1.5, "ratio {}", report.ratio);
 }
 
 #[test]
