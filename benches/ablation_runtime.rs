@@ -91,6 +91,7 @@ fn main() {
             &InsituConfig {
                 shards: 64,
                 workers: 1,
+                threads: 1,
                 queue_depth: depth,
                 eb_rel: EB_REL,
                 factory,

@@ -1,12 +1,20 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf targets): lattice
 //! quantization, Huffman encode/decode, radix sort, Morton interleave,
-//! AVLE, DEFLATE, and the end-to-end per-field SZ-LV compress /
-//! decompress. Uses min-of-N timing (robust on a noisy 1-core box).
+//! AVLE, DEFLATE, the end-to-end per-field SZ-LV compress / decompress,
+//! and the snapshot-level parallel field-plane engine (1 thread vs all
+//! cores; byte-identity across budgets is enforced by
+//! `tests/parallel_determinism.rs`, not re-checked here). Uses min-of-N
+//! timing (robust on a noisy 1-core box). Besides the usual CSV, the
+//! engine rows land in a machine-readable `BENCH_hotpath.json` (codec,
+//! threads, MB/s) so later changes have a perf trajectory to compare
+//! against.
 
-use nblc::bench::{Table, EB_REL};
+use nblc::bench::{results_dir, Table, EB_REL};
 use nblc::codec::{avle, huffman, lz77};
+use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
 use nblc::data::DatasetKind;
+use nblc::exec::ExecCtx;
 use nblc::model::quant::{LatticeQuantizer, Predictor};
 use nblc::rindex::morton::interleave3;
 use nblc::rindex::sort::sort_perm;
@@ -14,6 +22,7 @@ use nblc::snapshot::FieldCompressor;
 use nblc::util::rng::Pcg64;
 use nblc::util::stats::value_range;
 use nblc::util::timer::bench_min_time;
+use std::io::Write;
 
 fn main() {
     let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
@@ -125,4 +134,52 @@ fn main() {
 
     t.print();
     t.write_csv("hotpath").unwrap();
+
+    // Snapshot-level parallel engine: whole-snapshot compress at 1
+    // thread vs all cores, per paper mode. Bytes must not depend on the
+    // budget (the engine's determinism contract).
+    let n_threads = ExecCtx::auto().threads();
+    let total_mb = s.total_bytes() as f64 / 1e6;
+    let mut engine = Table::new(
+        &format!("Snapshot engine (6 planes, n={}, {} cores)", s.len(), n_threads),
+        &["Codec", "Threads", "Compress MB/s", "Speedup"],
+    );
+    let mut json_rows: Vec<(String, usize, f64)> = Vec::new();
+    for spec in ["sz_lv", "sz_lv_rx", "mode:best_compression"] {
+        let comp = registry::build_str(spec).unwrap();
+        let budgets = if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
+        let mut base_rate = 0.0f64;
+        for &threads in &budgets {
+            let ctx = ExecCtx::with_threads(threads);
+            let secs = bench_min_time(1.0, 3, || comp.compress_with(&ctx, &s, EB_REL).unwrap());
+            let rate = total_mb / secs;
+            if threads == 1 {
+                base_rate = rate;
+            }
+            engine.row(vec![
+                spec.into(),
+                format!("{threads}"),
+                format!("{rate:.1}"),
+                format!("{:.2}x", rate / base_rate),
+            ]);
+            json_rows.push((spec.to_string(), threads, rate));
+        }
+        // Byte-identity across budgets is enforced by the test suite
+        // (tests/parallel_determinism.rs); no redundant smoke here.
+    }
+    engine.print();
+    engine.write_csv("hotpath_engine").unwrap();
+
+    let json_path = results_dir().join("BENCH_hotpath.json");
+    let mut j = String::from("[\n");
+    for (i, (codec, threads, rate)) in json_rows.iter().enumerate() {
+        let sep = if i + 1 == json_rows.len() { "" } else { "," };
+        j.push_str(&format!(
+            "  {{\"codec\": \"{codec}\", \"threads\": {threads}, \"mb_per_s\": {rate:.2}}}{sep}\n"
+        ));
+    }
+    j.push_str("]\n");
+    let mut f = std::fs::File::create(&json_path).unwrap();
+    f.write_all(j.as_bytes()).unwrap();
+    println!("\nwrote {}", json_path.display());
 }

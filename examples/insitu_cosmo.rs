@@ -20,7 +20,7 @@ use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, S
 use nblc::coordinator::{choose_compressor, GpfsModel};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::runtime::quantizer::SzPjrt;
-use nblc::snapshot::{verify_bounds, PerField, SnapshotCompressor};
+use nblc::snapshot::{verify_bounds, PerField, PerFieldSeq, SnapshotCompressor};
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
 use std::sync::Arc;
@@ -58,7 +58,8 @@ fn main() {
         println!("[3/5] PJRT runtime: artifacts loaded — L1 Pallas kernels on the hot path");
         Arc::new(|| {
             let rt = Arc::new(nblc::runtime::Runtime::load_default().expect("artifacts vanished"));
-            Box::new(PerField(SzPjrt::lv(rt))) as Box<dyn SnapshotCompressor>
+            // PJRT handles are thread-affine: sequential per-field adapter.
+            Box::new(PerFieldSeq(SzPjrt::lv(rt))) as Box<dyn SnapshotCompressor>
         })
     } else {
         println!("[3/5] PJRT runtime: artifacts NOT built — native quantizer fallback");
@@ -74,6 +75,7 @@ fn main() {
         &InsituConfig {
             shards,
             workers: 1,
+            threads: 1,
             queue_depth: 4,
             eb_rel,
             factory,

@@ -356,38 +356,90 @@ pub fn encode_block(symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+enum BlockKind<'a> {
+    /// `n == 0`: nothing to emit.
+    Empty,
+    /// One distinct symbol, no payload (see `encode_block`).
+    Single(u32),
+    /// Huffman-coded payload.
+    Coded(HuffmanDecoder, &'a [u8]),
+}
+
+/// A parsed [`encode_block`] stream, ready to emit its symbols one at a
+/// time. This is the zero-copy path used by the SZ decoder, which maps
+/// symbols straight into quantization codes without materializing the
+/// intermediate `Vec<u32>` that [`decode_block`] returns.
+pub struct BlockDecoder<'a> {
+    n: usize,
+    kind: BlockKind<'a>,
+}
+
+impl<'a> BlockDecoder<'a> {
+    /// Parse a block header (table, count, payload length) and borrow
+    /// the payload; `pos` advances past the whole block.
+    pub fn parse(buf: &'a [u8], pos: &mut usize) -> Result<BlockDecoder<'a>> {
+        let lengths = deserialize_lengths(buf, pos)?;
+        let n = get_uvarint(buf, pos)? as usize;
+        let payload_len = get_uvarint(buf, pos)? as usize;
+        if payload_len == 0 {
+            if n == 0 {
+                return Ok(BlockDecoder { n, kind: BlockKind::Empty });
+            }
+            // Single-symbol fast path (see encode_block).
+            let mut used = lengths.iter().enumerate().filter(|(_, &l)| l > 0);
+            return match (used.next(), used.next()) {
+                (Some((sym, _)), None) => Ok(BlockDecoder {
+                    n,
+                    kind: BlockKind::Single(sym as u32),
+                }),
+                _ => Err(Error::corrupt("huffman empty payload with multi-symbol table")),
+            };
+        }
+        let end = pos.checked_add(payload_len).filter(|&e| e <= buf.len());
+        let end = end.ok_or_else(|| Error::corrupt("huffman payload truncated"))?;
+        let dec = HuffmanDecoder::from_lengths(&lengths)?;
+        let payload = &buf[*pos..end];
+        *pos = end;
+        Ok(BlockDecoder {
+            n,
+            kind: BlockKind::Coded(dec, payload),
+        })
+    }
+
+    /// Number of symbols the block encodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stream every symbol through `sink` in encode order.
+    pub fn decode_each(&self, mut sink: impl FnMut(u32) -> Result<()>) -> Result<()> {
+        match &self.kind {
+            BlockKind::Empty => Ok(()),
+            BlockKind::Single(sym) => {
+                for _ in 0..self.n {
+                    sink(*sym)?;
+                }
+                Ok(())
+            }
+            BlockKind::Coded(dec, payload) => {
+                let mut r = BitReader::new(payload);
+                for _ in 0..self.n {
+                    sink(dec.get(&mut r)?)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Inverse of [`encode_block`]; advances `pos`.
 pub fn decode_block(buf: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
-    let lengths = deserialize_lengths(buf, pos)?;
-    let n = get_uvarint(buf, pos)? as usize;
-    let payload_len = get_uvarint(buf, pos)? as usize;
-    // Single-symbol fast path (see encode_block).
-    let used: Vec<u32> = lengths
-        .iter()
-        .enumerate()
-        .filter(|(_, &l)| l > 0)
-        .map(|(s, _)| s as u32)
-        .collect();
-    if payload_len == 0 {
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        if used.len() == 1 {
-            return Ok(vec![used[0]; n]);
-        }
-        return Err(Error::corrupt("huffman empty payload with multi-symbol table"));
-    }
-    let dec = HuffmanDecoder::from_lengths(&lengths)?;
-    let end = *pos + payload_len;
-    if end > buf.len() {
-        return Err(Error::corrupt("huffman payload truncated"));
-    }
-    let mut r = BitReader::new(&buf[*pos..end]);
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(dec.get(&mut r)?);
-    }
-    *pos = end;
+    let block = BlockDecoder::parse(buf, pos)?;
+    let mut out = Vec::with_capacity(block.n());
+    block.decode_each(|s| {
+        out.push(s);
+        Ok(())
+    })?;
     Ok(out)
 }
 
@@ -517,6 +569,38 @@ mod tests {
             let back = decode_block(&bytes, &mut pos).unwrap();
             assert_eq!(back, syms);
         });
+    }
+
+    #[test]
+    fn block_decoder_streams_without_materializing() {
+        let syms: Vec<u32> = (0..5000u32).map(|i| (i * i) % 97).collect();
+        let bytes = encode_block(&syms, 100).unwrap();
+        let mut pos = 0;
+        let block = BlockDecoder::parse(&bytes, &mut pos).unwrap();
+        assert_eq!(block.n(), syms.len());
+        assert_eq!(pos, bytes.len());
+        let mut got = Vec::new();
+        block
+            .decode_each(|s| {
+                got.push(s);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(got, syms);
+        // Sink errors abort the stream.
+        let mut pos = 0;
+        let block = BlockDecoder::parse(&bytes, &mut pos).unwrap();
+        let mut count = 0usize;
+        let r = block.decode_each(|_| {
+            count += 1;
+            if count == 10 {
+                Err(Error::invalid("stop"))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+        assert_eq!(count, 10);
     }
 
     #[test]

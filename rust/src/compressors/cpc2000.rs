@@ -17,6 +17,7 @@
 
 use crate::codec::avle::{AvleDecoder, AvleEncoder};
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::rindex::morton::{deinterleave3, interleave3};
 use crate::rindex::sort::sort_perm;
 use crate::snapshot::{
@@ -282,7 +283,12 @@ impl SnapshotCompressor for Cpc2000 {
         true
     }
 
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+    fn compress_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
         let ebs = snap.abs_bounds(eb_rel);
         let (coord_bytes, perm, _grids) =
             encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
@@ -293,15 +299,22 @@ impl SnapshotCompressor for Cpc2000 {
             n: snap.len() * 3,
             bytes: header,
         }];
-        for (vi, v) in snap.velocities().iter().enumerate() {
-            let permuted: Vec<f32> = perm.iter().map(|&p| v[p as usize]).collect();
+        // The three velocity planes are independent: gather through the
+        // shared permutation (scratch buffers) and encode concurrently.
+        let vel_idx: [usize; 3] = [0, 1, 2];
+        let vels = ctx.try_par(&vel_idx, |&vi| {
+            let v = &snap.fields[3 + vi];
+            let mut permuted = ctx.take_f32();
+            permuted.extend(perm.iter().map(|&p| v[p as usize]));
             let bytes = encode_velocity(&permuted, ebs[3 + vi])?;
-            fields.push(CompressedField {
+            ctx.put_f32(permuted);
+            Ok(CompressedField {
                 name: crate::snapshot::FIELD_NAMES[3 + vi].into(),
                 n: snap.len(),
                 bytes,
-            });
-        }
+            })
+        })?;
+        fields.extend(vels);
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
             eb_rel,
@@ -310,7 +323,7 @@ impl SnapshotCompressor for Cpc2000 {
         })
     }
 
-    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+    fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
         if c.fields.len() != 4 {
             return Err(Error::corrupt("cpc2000 bundle must have 4 sections"));
         }
@@ -323,11 +336,11 @@ impl SnapshotCompressor for Cpc2000 {
         }
         let mut pos = 1usize;
         let [xx, yy, zz] = decode_coords(cb, &mut pos)?;
-        let mut vels: Vec<Vec<f32>> = Vec::with_capacity(3);
-        for vi in 0..3 {
+        let vel_idx: [usize; 3] = [0, 1, 2];
+        let vels = ctx.try_par(&vel_idx, |&vi| {
             let mut vpos = 0usize;
-            vels.push(decode_velocity(&c.fields[1 + vi].bytes, &mut vpos)?);
-        }
+            decode_velocity(&c.fields[1 + vi].bytes, &mut vpos)
+        })?;
         let [vx, vy, vz]: [Vec<f32>; 3] = vels.try_into().unwrap();
         Snapshot::new("cpc2000", [xx, yy, zz, vx, vy, vz], 0.0)
     }

@@ -6,6 +6,10 @@
 //! | `best_speed` | SZ-LV | 4.4x CPC2000's rate at −12% ratio |
 //! | `best_tradeoff` | SZ-LV-PRX | 2x CPC2000's rate at equal ratio |
 //! | `best_compression` | SZ-CPC2000 | +13% ratio, +10% rate vs CPC2000 |
+//!
+//! A mode builds the concrete codec it stands for, so the parallel
+//! `compress_with`/`decompress_with` engine (and its byte-determinism
+//! guarantee) applies to mode-built compressors unchanged.
 
 use crate::compressors::registry;
 use crate::snapshot::SnapshotCompressor;

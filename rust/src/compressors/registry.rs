@@ -626,13 +626,31 @@ pub fn sort_permutation(
     snap: &crate::snapshot::Snapshot,
     eb_rel: f64,
 ) -> Result<Option<Vec<u32>>> {
+    sort_permutation_with(s, snap, eb_rel, &crate::exec::ExecCtx::sequential())
+}
+
+/// [`sort_permutation`] under an execution context. For the R-index
+/// codecs (`sz_lv_rx`/`sz_lv_prx`) the key build and segmented sort fan
+/// out across `ctx.threads()` threads with an identical permutation at
+/// every budget; the CPC2000 family's single global radix sort stays
+/// sequential and ignores the context.
+pub fn sort_permutation_with(
+    s: &str,
+    snap: &crate::snapshot::Snapshot,
+    eb_rel: f64,
+    ctx: &crate::exec::ExecCtx,
+) -> Result<Option<Vec<u32>>> {
     let spec = CodecSpec::parse(s)?;
     let (entry, params) = resolve(&spec)?;
     Ok(match entry.name {
         "cpc2000" => Some(Cpc2000.sort_permutation(snap, eb_rel)?),
         "sz_cpc2000" => Some(SzCpc2000.sort_permutation(snap, eb_rel)?),
-        "sz_lv_rx" | "sz_lv_prx" => Some(szrx_from(&params).sort_permutation(snap, eb_rel)),
-        "mode" => return sort_permutation(mode_target(params.get("which")), snap, eb_rel),
+        "sz_lv_rx" | "sz_lv_prx" => {
+            Some(szrx_from(&params).sort_permutation_with(ctx, snap, eb_rel))
+        }
+        "mode" => {
+            return sort_permutation_with(mode_target(params.get("which")), snap, eb_rel, ctx)
+        }
         _ => None,
     })
 }
@@ -806,6 +824,27 @@ mod tests {
             "sz_cpc2000"
         );
         assert_eq!(build_str("mode").unwrap().name(), "sz_lv_prx");
+    }
+
+    #[test]
+    fn every_entry_compresses_byte_identically_in_parallel() {
+        // The engine-wide determinism contract, checked at registry
+        // granularity (the full matrix lives in
+        // tests/parallel_determinism.rs).
+        let s = generate_md(&MdConfig {
+            n_particles: 2_000,
+            ..Default::default()
+        });
+        let ctx = crate::exec::ExecCtx::with_threads(4);
+        for e in entries() {
+            let comp = build_str(e.name).unwrap();
+            let seq = comp.compress(&s, 1e-3).unwrap();
+            let par = comp.compress_with(&ctx, &s, 1e-3).unwrap();
+            assert_eq!(seq.fields.len(), par.fields.len(), "{}", e.name);
+            for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
+                assert_eq!(a.bytes, b.bytes, "{}", e.name);
+            }
+        }
     }
 
     #[test]

@@ -80,29 +80,71 @@ impl Sz {
     /// Compress pre-computed quantization codes (the entry point used by
     /// the PJRT-backed pipeline, where the L1 kernel already produced
     /// the codes). The stream records the *effective* lattice step
-    /// (`q.eb_eff`), which is all the decoder needs.
+    /// (`q.eb_eff`), which is all the decoder needs. The symbol scratch
+    /// is thread-local, so repeated calls on a long-lived thread
+    /// (sequential loops, the PJRT path, pipeline workers) reuse one
+    /// allocation; ctx-pooled callers use [`Self::compress_codes_into`]
+    /// directly.
     pub fn compress_codes(&self, q: &QuantCodes) -> Result<Vec<u8>> {
+        thread_local! {
+            static SYMBOLS: std::cell::RefCell<Vec<u32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SYMBOLS.with(|s| {
+            let mut symbols = s.borrow_mut();
+            let out = self.compress_codes_into(q, &mut symbols);
+            // Bound per-thread retention: a one-shot compress of a huge
+            // field must not pin field-sized memory for the thread's
+            // lifetime (same 4M-element ceiling as the ExecCtx pool).
+            if symbols.capacity() > (1 << 22) {
+                *symbols = Vec::new();
+            }
+            out
+        })
+    }
+
+    /// [`Self::compress_codes`] with a caller-provided symbol scratch
+    /// buffer (cleared and refilled here), so parallel per-field
+    /// fan-outs can recycle the allocation through the
+    /// [`ExecCtx`](crate::exec::ExecCtx) pool.
+    pub fn compress_codes_into(&self, q: &QuantCodes, symbols: &mut Vec<u32>) -> Result<Vec<u8>> {
         let n = q.codes.len();
         let radius = self.cfg.radius as i64;
         let esc_sym = (2 * radius) as u32;
         let alphabet = esc_sym as usize + 1;
 
-        // Pass 1: symbol counts + escape payload (no symbol vector —
-        // symbols are recomputed from codes during encoding).
+        // Single pass over the codes: symbol stream, symbol counts, and
+        // escape payload all come out of one walk (the radius checks run
+        // once per element instead of once per pass).
         let mut counts = vec![0u64; alphabet];
         let mut escapes: Vec<u8> = Vec::new();
         let mut n_escapes = 0u64;
-        for &c in &q.codes {
-            if c > -radius && c < radius {
-                counts[(c + radius) as usize] += 1;
+        symbols.clear();
+        symbols.reserve(n);
+        for (i, &c) in q.codes.iter().enumerate() {
+            let sym = if c > -radius && c < radius {
+                (c + radius) as u32
             } else {
-                counts[esc_sym as usize] += 1;
+                if n_escapes == 0 {
+                    // First escape at element i: pre-size the varint
+                    // buffer from the observed escape rate (assume the
+                    // rest of the field escapes at the same density;
+                    // ~5 bytes per escape varint). Capped so an early
+                    // lone escape on a huge field cannot reserve memory
+                    // proportional to n; past the cap Vec doubling takes
+                    // over at O(actual escapes).
+                    let expected = (n - i) / (i + 1) + 1;
+                    escapes.reserve(expected.saturating_mul(5).min(1 << 20));
+                }
                 put_ivarint(&mut escapes, c);
                 n_escapes += 1;
-            }
+                esc_sym
+            };
+            counts[sym as usize] += 1;
+            symbols.push(sym);
         }
 
-        // Pass 2: Huffman-encode straight from the codes (byte-format
+        // Entropy stage: encode the prepared symbol stream (byte-format
         // identical to `huffman::encode_block`).
         let enc = huffman::HuffmanEncoder::from_counts(&counts)?;
         let mut payload = Vec::with_capacity(n / 2 + 64);
@@ -113,12 +155,7 @@ impl Sz {
             put_uvarint(&mut payload, 0);
         } else {
             let mut w = crate::util::bits::BitWriter::with_capacity(n / 2);
-            for &c in &q.codes {
-                let sym = if c > -radius && c < radius {
-                    (c + radius) as u32
-                } else {
-                    esc_sym
-                };
+            for &sym in symbols.iter() {
                 enc.put(&mut w, sym);
             }
             let bits = w.finish();
@@ -152,6 +189,31 @@ impl Sz {
         }
         Ok(out)
     }
+
+    /// Compress the permuted view `xs[perm[i]]` without materializing
+    /// the permuted array — the R-index codecs' fused-gather path,
+    /// byte-identical to `compress` on a materialized permutation.
+    /// Skips per-call permutation validation: the callers' shared
+    /// permutation is a radix-sort output (correct by construction)
+    /// reused across all field planes. External users wanting a
+    /// validated gather go through
+    /// [`LatticeQuantizer::quantize_field_gathered`] +
+    /// [`Self::compress_codes`].
+    pub(crate) fn compress_gathered_trusted(
+        &self,
+        xs: &[f32],
+        perm: &[u32],
+        eb_abs: f64,
+        symbols: &mut Vec<u32>,
+    ) -> Result<Vec<u8>> {
+        let q = LatticeQuantizer::quantize_field_gathered_trusted(
+            eb_abs,
+            xs,
+            perm,
+            self.cfg.predictor,
+        )?;
+        self.compress_codes_into(&q, symbols)
+    }
 }
 
 impl FieldCompressor for Sz {
@@ -167,6 +229,16 @@ impl FieldCompressor for Sz {
     fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
         let q = LatticeQuantizer::quantize_field(eb_abs, xs, self.cfg.predictor)?;
         self.compress_codes(&q)
+    }
+
+    fn compress_scratch(
+        &self,
+        xs: &[f32],
+        eb_abs: f64,
+        scratch: &mut Vec<u32>,
+    ) -> Result<Vec<u8>> {
+        let q = LatticeQuantizer::quantize_field(eb_abs, xs, self.cfg.predictor)?;
+        self.compress_codes_into(&q, scratch)
     }
 
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
@@ -214,36 +286,37 @@ impl FieldCompressor for Sz {
             &bytes[pos..]
         };
 
+        // Stream Huffman symbols straight into the code vector (no
+        // intermediate symbol buffer): escapes are stored immediately
+        // after the symbol payload and their count, so the escape
+        // cursor advances in lockstep with the escape symbols.
         let mut ppos = 0usize;
-        let symbols = huffman::decode_block(payload, &mut ppos)?;
-        if symbols.len() != n {
+        let block = huffman::BlockDecoder::parse(payload, &mut ppos)?;
+        if block.n() != n {
             return Err(Error::corrupt(format!(
                 "sz symbol count {} != n {}",
-                symbols.len(),
+                block.n(),
                 n
             )));
         }
         let esc_sym = (2 * radius) as u32;
         let n_escapes = get_uvarint(payload, &mut ppos)?;
         let mut codes = Vec::with_capacity(n);
-        // First decode escapes lazily in stream order.
         let mut esc_read = 0u64;
         let mut esc_pos_after = ppos;
-        {
-            // Pre-scan: escapes are stored immediately after the count;
-            // decode them in order while mapping symbols.
-            for &s in &symbols {
-                if s == esc_sym {
-                    let v = get_ivarint(payload, &mut esc_pos_after)?;
-                    codes.push(v);
-                    esc_read += 1;
-                } else if s < esc_sym {
-                    codes.push(s as i64 - radius);
-                } else {
-                    return Err(Error::corrupt("sz symbol out of alphabet"));
-                }
+        block.decode_each(|s| {
+            if s == esc_sym {
+                let v = get_ivarint(payload, &mut esc_pos_after)?;
+                codes.push(v);
+                esc_read += 1;
+                Ok(())
+            } else if s < esc_sym {
+                codes.push(s as i64 - radius);
+                Ok(())
+            } else {
+                Err(Error::corrupt("sz symbol out of alphabet"))
             }
-        }
+        })?;
         if esc_read != n_escapes {
             return Err(Error::corrupt("sz escape count mismatch"));
         }

@@ -7,6 +7,7 @@
 use crate::compressors::cpc2000::{decode_coords, decode_velocity, encode_coords};
 use crate::compressors::sz::Sz;
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::snapshot::{
     CompressedField, CompressedSnapshot, FieldCompressor, Snapshot, SnapshotCompressor,
     FIELD_NAMES,
@@ -36,7 +37,12 @@ impl SnapshotCompressor for SzCpc2000 {
         true
     }
 
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+    fn compress_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
         let ebs = snap.abs_bounds(eb_rel);
         let (coord_bytes, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
         let mut header = vec![MAGIC];
@@ -47,15 +53,26 @@ impl SnapshotCompressor for SzCpc2000 {
             bytes: header,
         }];
         let sz = Sz::lv();
-        for (vi, v) in snap.velocities().iter().enumerate() {
-            let permuted: Vec<f32> = perm.iter().map(|&p| v[p as usize]).collect();
-            let bytes = sz.compress(&permuted, ebs[3 + vi])?;
-            fields.push(CompressedField {
+        // Velocity planes compress concurrently, each gathering through
+        // the shared coordinate permutation fused into SZ quantization
+        // (no permuted array is materialized).
+        let vel_idx: [usize; 3] = [0, 1, 2];
+        let vels = ctx.try_par(&vel_idx, |&vi| {
+            let mut symbols = ctx.take_u32();
+            let bytes = sz.compress_gathered_trusted(
+                &snap.fields[3 + vi],
+                &perm,
+                ebs[3 + vi],
+                &mut symbols,
+            )?;
+            ctx.put_u32(symbols);
+            Ok(CompressedField {
                 name: FIELD_NAMES[3 + vi].into(),
                 n: snap.len(),
                 bytes,
-            });
-        }
+            })
+        })?;
+        fields.extend(vels);
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
             eb_rel,
@@ -64,7 +81,7 @@ impl SnapshotCompressor for SzCpc2000 {
         })
     }
 
-    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+    fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
         if c.fields.len() != 4 {
             return Err(Error::corrupt("sz_cpc2000 bundle must have 4 sections"));
         }
@@ -78,9 +95,9 @@ impl SnapshotCompressor for SzCpc2000 {
         let mut pos = 1usize;
         let [xx, yy, zz] = decode_coords(cb, &mut pos)?;
         let sz = Sz::lv();
-        let vx = sz.decompress(&c.fields[1].bytes)?;
-        let vy = sz.decompress(&c.fields[2].bytes)?;
-        let vz = sz.decompress(&c.fields[3].bytes)?;
+        let vel_idx: [usize; 3] = [0, 1, 2];
+        let vels = ctx.try_par(&vel_idx, |&vi| sz.decompress(&c.fields[1 + vi].bytes))?;
+        let [vx, vy, vz]: [Vec<f32>; 3] = vels.try_into().unwrap();
         Snapshot::new("sz_cpc2000", [xx, yy, zz, vx, vy, vz], 0.0)
     }
 }

@@ -7,15 +7,23 @@
 //! as CPC2000 does. No permutation is stored (particle order is free),
 //! so the only cost of sorting is time — which PRX attacks by ignoring
 //! the trailing 3-bit groups of the R-index (Table V).
+//!
+//! The hot path is fully threaded under an [`ExecCtx`]: the segmented
+//! sort fans segments across threads, and the six field planes compress
+//! concurrently with the permutation gather *fused into quantization* —
+//! no permuted `Snapshot` is ever materialized (saving ~24 bytes of
+//! allocation and memory traffic per particle). Output is byte-identical
+//! at every thread count.
 
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::model::quant::Predictor;
 use crate::rindex::morton::bits_for_step;
-use crate::rindex::sort::segmented_sort_perm;
-use crate::rindex::{build_rindex, RIndexSource};
+use crate::rindex::sort::segmented_sort_perm_ctx;
+use crate::rindex::{build_rindex_ctx, RIndexSource};
 use crate::snapshot::{
-    CompressedField, CompressedSnapshot, FieldCompressor, Snapshot, SnapshotCompressor,
-    FIELD_NAMES,
+    collect_fields, CompressedField, CompressedSnapshot, FieldCompressor, Snapshot,
+    SnapshotCompressor, FIELD_IDX, FIELD_NAMES,
 };
 use crate::compressors::sz::{Sz, SzConfig};
 
@@ -58,21 +66,30 @@ impl SzRx {
 
     /// The deterministic permutation applied before SZ (for tests).
     pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Vec<u32> {
-        let ranges = snap.ranges();
-        // Bits per field chosen like CPC2000: bins = 1/(2 eb_rel).
-        let max_range = self
-            .source
-            .field_indices()
-            .iter()
-            .map(|&f| ranges[f])
-            .fold(0.0f64, f64::max);
+        self.sort_permutation_with(&ExecCtx::sequential(), snap, eb_rel)
+    }
+
+    /// [`Self::sort_permutation`] under an execution context (key build
+    /// and segmented sort both fan out; the permutation is identical at
+    /// any thread count).
+    pub fn sort_permutation_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Vec<u32> {
+        // Bits per field chosen like CPC2000: bins = 1/(2 eb). The
+        // R-index quantizes each field uniformly over its *own* value
+        // range (`quantize_uniform`), so the absolute range cancels out
+        // of CPC2000's bins = range / (2 * eb_rel * range) and the bin
+        // count depends only on the relative bound — hence the unit
+        // range here, with no per-field range consulted.
         let bits = bits_for_step(1.0, 2.0 * eb_rel).min(match self.source {
             RIndexSource::Both => 10,
             _ => 21,
         });
-        let _ = max_range;
-        let keys = build_rindex(snap, self.source, bits);
-        segmented_sort_perm(&keys, self.segment, 3 * self.ignored_groups)
+        let keys = build_rindex_ctx(snap, self.source, bits, ctx);
+        segmented_sort_perm_ctx(&keys, self.segment, 3 * self.ignored_groups, ctx)
     }
 }
 
@@ -90,25 +107,35 @@ impl SnapshotCompressor for SzRx {
         true
     }
 
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
-        let perm = self.sort_permutation(snap, eb_rel);
-        let sorted = snap.permute(&perm)?;
-        let ebs = sorted.abs_bounds(eb_rel);
+    fn compress_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
+        let perm = self.sort_permutation_with(ctx, snap, eb_rel);
+        // Per-field bounds from the *original* arrays: value ranges are
+        // permutation-invariant, so these equal the sorted snapshot's.
+        let ebs = snap.abs_bounds(eb_rel);
         let sz = Sz {
             cfg: SzConfig {
                 predictor: self.predictor,
                 ..Default::default()
             },
         };
-        let mut fields = Vec::with_capacity(6);
-        for f in 0..6 {
-            let bytes = sz.compress(&sorted.fields[f], ebs[f])?;
-            fields.push(CompressedField {
+        // Each plane gathers through the shared permutation on the fly
+        // (fused into quantization) and compresses independently.
+        let fields = ctx.try_par(&FIELD_IDX, |&f| {
+            let mut symbols = ctx.take_u32();
+            let bytes =
+                sz.compress_gathered_trusted(&snap.fields[f], &perm, ebs[f], &mut symbols)?;
+            ctx.put_u32(symbols);
+            Ok(CompressedField {
                 name: FIELD_NAMES[f].into(),
                 n: snap.len(),
                 bytes,
-            });
-        }
+            })
+        })?;
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
             eb_rel,
@@ -117,7 +144,7 @@ impl SnapshotCompressor for SzRx {
         })
     }
 
-    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+    fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
         if c.fields.len() != 6 {
             return Err(Error::corrupt("sz_rx bundle must have 6 field streams"));
         }
@@ -127,11 +154,8 @@ impl SnapshotCompressor for SzRx {
                 ..Default::default()
             },
         };
-        let mut fields: [Vec<f32>; 6] = Default::default();
-        for f in 0..6 {
-            fields[f] = sz.decompress(&c.fields[f].bytes)?;
-        }
-        Snapshot::new("sz_rx", fields, 0.0)
+        let decoded = ctx.try_par(&FIELD_IDX, |&f| sz.decompress(&c.fields[f].bytes))?;
+        collect_fields("sz_rx", decoded)
     }
 }
 
@@ -189,6 +213,40 @@ mod tests {
             (prx - full).abs() / full < 0.03,
             "PRX ratio {prx:.3} should match RX {full:.3}"
         );
+    }
+
+    #[test]
+    fn fused_gather_matches_materialized_permutation() {
+        // The fused gather-quantize path must emit the exact streams the
+        // old materialize-then-compress path produced.
+        let s = md(20_000);
+        let comp = SzRx::rx(4096);
+        let bundle = comp.compress(&s, 1e-4).unwrap();
+        let sorted = s.permute(&comp.sort_permutation(&s, 1e-4)).unwrap();
+        let ebs = sorted.abs_bounds(1e-4);
+        let sz = Sz::lv();
+        for f in 0..6 {
+            let reference = sz.compress(&sorted.fields[f], ebs[f]).unwrap();
+            assert_eq!(bundle.fields[f].bytes, reference, "field {f}");
+        }
+    }
+
+    #[test]
+    fn parallel_compress_is_byte_identical() {
+        let s = md(30_000);
+        for comp in [SzRx::rx(2048), SzRx::prx()] {
+            let seq = comp.compress(&s, 1e-4).unwrap();
+            for threads in [2usize, 8] {
+                let ctx = ExecCtx::with_threads(threads);
+                let par = comp.compress_with(&ctx, &s, 1e-4).unwrap();
+                for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
+                    assert_eq!(a.bytes, b.bytes, "{} threads={threads}", comp.name());
+                }
+                let recon = comp.decompress_with(&ctx, &par).unwrap();
+                let sorted = s.permute(&comp.sort_permutation(&s, 1e-4)).unwrap();
+                verify_bounds(&sorted, &recon, 1e-4).unwrap();
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct PipelineSettings {
     pub shards: usize,
     /// Worker threads.
     pub workers: usize,
+    /// Intra-snapshot threads per worker for the parallel field-plane
+    /// engine (0 = auto: `NBLC_THREADS` env / available parallelism).
+    /// Compressed bytes are identical at every setting.
+    pub threads: usize,
     /// Bounded queue depth.
     pub queue_depth: usize,
     /// Relative error bound.
@@ -39,6 +43,7 @@ impl Default for PipelineSettings {
             particles: 0,
             shards: 16,
             workers: 1,
+            threads: 1,
             queue_depth: 4,
             eb_rel: 1e-4,
             mode: Mode::BestSpeed,
@@ -55,9 +60,9 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 11] = [
-            "dataset", "particles", "shards", "workers", "queue_depth", "eb_rel",
-            "mode", "method", "auto_route", "use_pjrt", "sim_procs",
+        const KNOWN: [&str; 12] = [
+            "dataset", "particles", "shards", "workers", "threads", "queue_depth",
+            "eb_rel", "mode", "method", "auto_route", "use_pjrt", "sim_procs",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -86,6 +91,7 @@ impl PipelineSettings {
         s.particles = get_usize("particles", s.particles)?;
         s.shards = get_usize("shards", s.shards)?;
         s.workers = get_usize("workers", s.workers)?;
+        s.threads = get_usize("threads", s.threads)?;
         s.queue_depth = get_usize("queue_depth", s.queue_depth)?;
         s.sim_procs = get_usize("sim_procs", s.sim_procs)?;
         if let Some(v) = doc.get(sec, "eb_rel") {
@@ -152,6 +158,7 @@ mod tests {
             particles = 500000
             shards = 32
             workers = 2
+            threads = 0
             eb_rel = 1e-3
             mode = "best_compression"
             auto_route = false
@@ -163,6 +170,7 @@ mod tests {
         let s = PipelineSettings::from_doc(&doc).unwrap();
         assert_eq!(s.dataset, "amdf");
         assert_eq!(s.particles, 500_000);
+        assert_eq!(s.threads, 0, "0 = auto thread budget");
         assert_eq!(s.mode, Mode::BestCompression);
         assert!(!s.auto_route);
         assert!(s.use_pjrt);

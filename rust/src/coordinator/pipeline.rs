@@ -17,6 +17,7 @@ use crate::coordinator::iomodel::GpfsModel;
 use crate::coordinator::rank::{run_rank, RankResult, RankTask};
 use crate::coordinator::shard::split_even;
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::snapshot::{Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
 use std::io::Write;
@@ -44,6 +45,11 @@ pub struct InsituConfig {
     pub shards: usize,
     /// Worker threads compressing shards.
     pub workers: usize,
+    /// Intra-snapshot threads *per worker* for the parallel field-plane
+    /// engine (`0` = auto: `NBLC_THREADS` env / available parallelism;
+    /// `1` = sequential — the safe default when `workers` already
+    /// saturates the machine). Output bytes are identical either way.
+    pub threads: usize,
     /// Bounded queue capacity between stages (the in-flight budget).
     pub queue_depth: usize,
     /// Relative error bound.
@@ -91,6 +97,10 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
     let (task_tx, task_rx, source_q) = bounded::<RankTask>(cfg.queue_depth);
     let (done_tx, done_rx, sink_q) = bounded::<RankResult>(cfg.queue_depth);
 
+    // One execution context shared by all workers (scratch pools are
+    // concurrent; the thread budget applies within each rank compress).
+    let exec = ExecCtx::resolve(cfg.threads);
+
     std::thread::scope(|scope| -> Result<InsituReport> {
         // Workers: each builds its own compressor from the factory.
         let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
@@ -101,6 +111,7 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             let factory = Arc::clone(&cfg.factory);
             let counters = Arc::clone(&counters);
             let eb_rel = cfg.eb_rel;
+            let exec = exec.clone();
             worker_handles.push(scope.spawn(move || -> Result<()> {
                 let compressor = factory();
                 loop {
@@ -109,7 +120,7 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                         guard.recv()
                     };
                     let Some(task) = task else { break };
-                    let result = run_rank(task, compressor.as_ref(), eb_rel)?;
+                    let result = run_rank(task, compressor.as_ref(), eb_rel, &exec)?;
                     counters.record_shard(
                         result.bytes_in,
                         result.bundle.compressed_bytes(),
@@ -229,6 +240,7 @@ mod tests {
             &InsituConfig {
                 shards: 8,
                 workers: 2,
+                threads: 1,
                 queue_depth: 4,
                 eb_rel: 1e-4,
                 factory: factory(),
@@ -272,6 +284,7 @@ mod tests {
             &InsituConfig {
                 shards: 16,
                 workers: 2,
+                threads: 1,
                 queue_depth: 1,
                 eb_rel: 1e-4,
                 factory: factory(),
@@ -295,6 +308,7 @@ mod tests {
             &InsituConfig {
                 shards: 2,
                 workers: 1,
+                threads: 1,
                 queue_depth: 2,
                 eb_rel: 1e-4,
                 factory: factory(),
@@ -315,6 +329,7 @@ mod tests {
             &InsituConfig {
                 shards: 1,
                 workers: 1,
+                threads: 1,
                 queue_depth: 1,
                 eb_rel: 1e-3,
                 factory: factory(),
@@ -327,6 +342,32 @@ mod tests {
     }
 
     #[test]
+    fn intra_worker_threads_do_not_change_bytes() {
+        // The per-worker field-plane engine must be byte-deterministic,
+        // so total compressed size is independent of the thread budget.
+        let s = md(40_000);
+        let run = |threads: usize| {
+            run_insitu(
+                &s,
+                &InsituConfig {
+                    shards: 4,
+                    workers: 2,
+                    threads,
+                    queue_depth: 4,
+                    eb_rel: 1e-4,
+                    factory: factory(),
+                    sink: Sink::Null,
+                },
+            )
+            .unwrap()
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(seq.bytes_in, par.bytes_in);
+        assert_eq!(seq.bytes_out, par.bytes_out);
+    }
+
+    #[test]
     fn zero_shards_is_error() {
         let s = md(100);
         let r = run_insitu(
@@ -334,6 +375,7 @@ mod tests {
             &InsituConfig {
                 shards: 0,
                 workers: 1,
+                threads: 1,
                 queue_depth: 1,
                 eb_rel: 1e-3,
                 factory: factory(),

@@ -3,6 +3,7 @@
 //! across threads — PJRT handles are thread-affine).
 
 use crate::error::Result;
+use crate::exec::ExecCtx;
 use crate::snapshot::{CompressedSnapshot, Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
 
@@ -36,15 +37,17 @@ impl RankResult {
     }
 }
 
-/// Run one rank's compression.
+/// Run one rank's compression under the worker's execution context
+/// (intra-snapshot thread budget; see `InsituConfig::threads`).
 pub fn run_rank(
     task: RankTask,
     compressor: &dyn SnapshotCompressor,
     eb_rel: f64,
+    ctx: &ExecCtx,
 ) -> Result<RankResult> {
     let bytes_in = task.shard.total_bytes();
     let t = Timer::start();
-    let bundle = compressor.compress(&task.shard, eb_rel)?;
+    let bundle = compressor.compress_with(ctx, &task.shard, eb_rel)?;
     let secs = t.secs();
     Ok(RankResult {
         rank: task.rank,
@@ -73,6 +76,7 @@ mod tests {
             RankTask { rank: 3, shard },
             &comp,
             1e-4,
+            &ExecCtx::sequential(),
         )
         .unwrap();
         assert_eq!(result.rank, 3);

@@ -1,0 +1,252 @@
+//! Execution context for the compression engine: a thread budget plus
+//! reusable scratch buffers, threaded through every
+//! [`SnapshotCompressor`](crate::snapshot::SnapshotCompressor).
+//!
+//! The paper's headline result is compression *rate* at scale; rank-level
+//! parallelism (the in-situ pipeline) is not enough when a single rank
+//! owns a whole snapshot. An [`ExecCtx`] lets one compressor fan its six
+//! field planes (and the segmented R-index sort's segments) across
+//! threads, with a hard invariant enforced by `tests/parallel_determinism.rs`:
+//!
+//! > **Compressed output is byte-identical for every thread count.**
+//!
+//! Parallelism only changes *scheduling* — each field plane / sort
+//! segment is an independent work item whose bytes do not depend on its
+//! neighbours — so archives stay deterministic and reproducible.
+//!
+//! Thread-budget resolution order (mirrored by the CLI's `--threads`):
+//! explicit count > `NBLC_THREADS` environment variable >
+//! [`std::thread::available_parallelism`]. The plain
+//! `SnapshotCompressor::compress`/`decompress` wrappers stay sequential
+//! so library callers (and the per-worker pipeline ranks, which are
+//! already parallel across shards) never oversubscribe silently.
+//!
+//! Scratch buffers are pooled `Vec<u32>` / `Vec<f32>` instances shared
+//! through an `Arc`: hot paths (radix-sort aux arrays, SZ symbol
+//! streams, CPC2000 velocity gathers) borrow a buffer, use it, and
+//! return it, so a six-field compression reuses a handful of
+//! allocations instead of making one per field.
+
+use crate::util::threadpool::par_map;
+use std::sync::{Arc, Mutex};
+
+/// Maximum number of buffers each pool retains (bounds idle memory).
+const POOL_CAP: usize = 32;
+/// Maximum total *elements* retained per pool (bounds idle memory in
+/// bytes, not just buffer count: 4M elements ≈ 16 MB of u32s). Buffers
+/// that would push the pool past this are dropped instead of retained.
+const POOL_ELEMS_CAP: usize = 1 << 22;
+
+#[derive(Default)]
+struct Scratch {
+    u32s: Mutex<Vec<Vec<u32>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+}
+
+fn pool_take<T>(pool: &Mutex<Vec<Vec<T>>>) -> Vec<T> {
+    pool.lock().expect("scratch pool poisoned").pop().unwrap_or_default()
+}
+
+fn pool_put<T>(pool: &Mutex<Vec<Vec<T>>>, mut buf: Vec<T>) {
+    buf.clear();
+    if buf.capacity() == 0 {
+        return;
+    }
+    let mut pool = pool.lock().expect("scratch pool poisoned");
+    let retained: usize = pool.iter().map(|b| b.capacity()).sum();
+    // An empty pool always retains the buffer, whatever its size: the
+    // dominant reuse pattern is one hot buffer cycling through a
+    // sequential six-field pass, and it must keep working at full
+    // snapshot scale (where a single buffer exceeds the cap). Beyond
+    // that first slot, total idle capacity is bounded.
+    if pool.len() < POOL_CAP
+        && (pool.is_empty() || retained + buf.capacity() <= POOL_ELEMS_CAP)
+    {
+        pool.push(buf);
+    }
+}
+
+/// A thread budget plus reusable scratch buffers. Cheap to clone
+/// (buffer pools are shared through an `Arc`), `Send + Sync`, and safe
+/// to share across pipeline workers.
+#[derive(Clone)]
+pub struct ExecCtx {
+    threads: usize,
+    scratch: Arc<Scratch>,
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::sequential()
+    }
+}
+
+impl ExecCtx {
+    /// Single-threaded context (the behaviour of the plain
+    /// `compress`/`decompress` trait wrappers).
+    pub fn sequential() -> Self {
+        ExecCtx::with_threads(1)
+    }
+
+    /// Context with an explicit thread budget, clamped to
+    /// `1..=max(64, 4x available parallelism)`. The ceiling exists
+    /// because fan-outs spawn up to `threads` OS threads and a runaway
+    /// `--threads` value would abort at spawn time instead of erroring;
+    /// output bytes are identical at every budget, so clamping is
+    /// invisible except in speed.
+    pub fn with_threads(threads: usize) -> Self {
+        let cap = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .saturating_mul(4)
+            .max(64);
+        ExecCtx {
+            threads: threads.clamp(1, cap),
+            scratch: Arc::new(Scratch::default()),
+        }
+    }
+
+    /// Auto-sized context: `NBLC_THREADS` when set to a positive
+    /// integer, otherwise [`std::thread::available_parallelism`].
+    pub fn auto() -> Self {
+        let env = std::env::var("NBLC_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0);
+        let threads = env.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        ExecCtx::with_threads(threads)
+    }
+
+    /// Resolve a CLI/config `--threads` value: `0` means [`Self::auto`],
+    /// anything else is an explicit budget.
+    pub fn resolve(threads: usize) -> Self {
+        if threads == 0 {
+            ExecCtx::auto()
+        } else {
+            ExecCtx::with_threads(threads)
+        }
+    }
+
+    /// The thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Order-preserving parallel map over `items` under this context's
+    /// thread budget (sequential when the budget is 1).
+    pub fn par<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> U + Sync,
+    {
+        par_map(items, self.threads, f)
+    }
+
+    /// Fallible parallel map: runs every item, then returns the first
+    /// error in item order (matching what a sequential loop would
+    /// report for deterministic per-item failures).
+    pub fn try_par<T, U, F>(&self, items: &[T], f: F) -> crate::error::Result<Vec<U>>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> crate::error::Result<U> + Sync,
+    {
+        self.par(items, f).into_iter().collect()
+    }
+
+    /// Borrow a `u32` scratch buffer (empty, capacity retained from
+    /// earlier uses). Return it with [`Self::put_u32`].
+    pub fn take_u32(&self) -> Vec<u32> {
+        pool_take(&self.scratch.u32s)
+    }
+
+    /// Return a `u32` scratch buffer to the pool.
+    pub fn put_u32(&self, buf: Vec<u32>) {
+        pool_put(&self.scratch.u32s, buf);
+    }
+
+    /// Borrow an `f32` scratch buffer. Return it with [`Self::put_f32`].
+    pub fn take_f32(&self) -> Vec<f32> {
+        pool_take(&self.scratch.f32s)
+    }
+
+    /// Return an `f32` scratch buffer to the pool.
+    pub fn put_f32(&self, buf: Vec<f32>) {
+        pool_put(&self.scratch.f32s, buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_clamp_to_sane_range() {
+        assert_eq!(ExecCtx::with_threads(0).threads(), 1);
+        assert_eq!(ExecCtx::sequential().threads(), 1);
+        assert_eq!(ExecCtx::with_threads(8).threads(), 8);
+        assert!(ExecCtx::resolve(0).threads() >= 1);
+        assert_eq!(ExecCtx::resolve(3).threads(), 3);
+        // Runaway budgets must not translate into OS thread spawns.
+        let runaway = ExecCtx::with_threads(usize::MAX).threads();
+        assert!(runaway >= 64 && runaway < 1 << 20, "runaway={runaway}");
+    }
+
+    #[test]
+    fn ctx_is_send_sync_and_cheap_to_clone() {
+        fn assert_send_sync<T: Send + Sync + Clone>(_: &T) {}
+        let ctx = ExecCtx::with_threads(4);
+        assert_send_sync(&ctx);
+        let clone = ctx.clone();
+        assert_eq!(clone.threads(), 4);
+        // Clones share the scratch pool.
+        clone.put_u32(Vec::with_capacity(64));
+        assert!(ctx.take_u32().capacity() >= 64);
+    }
+
+    #[test]
+    fn par_preserves_order_at_any_budget() {
+        let items: Vec<u64> = (0..500).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * 3).collect();
+        for threads in [1, 2, 7] {
+            let ctx = ExecCtx::with_threads(threads);
+            assert_eq!(ctx.par(&items, |&x| x * 3), expect);
+        }
+    }
+
+    #[test]
+    fn try_par_reports_first_error_in_item_order() {
+        let ctx = ExecCtx::with_threads(4);
+        let items: Vec<u32> = (0..100).collect();
+        let r = ctx.try_par(&items, |&x| {
+            if x >= 40 {
+                Err(crate::error::Error::invalid(format!("item {x}")))
+            } else {
+                Ok(x)
+            }
+        });
+        assert!(r.unwrap_err().to_string().contains("item 40"));
+        let ok = ctx.try_par(&items, |&x| Ok::<u32, crate::error::Error>(x)).unwrap();
+        assert_eq!(ok, items);
+    }
+
+    #[test]
+    fn scratch_buffers_recycle_capacity() {
+        let ctx = ExecCtx::sequential();
+        let mut b = ctx.take_u32();
+        assert!(b.is_empty());
+        b.extend(0..1000u32);
+        let cap = b.capacity();
+        ctx.put_u32(b);
+        let b2 = ctx.take_u32();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap);
+        // f32 pool is independent.
+        let f = ctx.take_f32();
+        assert!(f.is_empty());
+        ctx.put_f32(f);
+    }
+}

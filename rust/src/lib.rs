@@ -66,9 +66,44 @@
 //! Pipelines build one compressor per worker thread from the same spec
 //! via [`compressors::registry::factory`]. `nblc list-codecs` prints
 //! every registered codec with its tunable-parameter schema.
+//!
+//! ## Threading model
+//!
+//! Every snapshot compressor is driven by an [`exec::ExecCtx`] — a
+//! thread budget plus reusable scratch buffers. The six field planes
+//! (and the segmented R-index sort's segments) are independent work
+//! items, so `compress_with`/`decompress_with` fan them across the
+//! budget; the plain `compress`/`decompress` wrappers stay sequential.
+//!
+//! ```no_run
+//! # use nblc::compressors::registry;
+//! # use nblc::data::gen_md::{MdConfig, generate_md};
+//! use nblc::exec::ExecCtx;
+//!
+//! # let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
+//! let comp = registry::build_str("sz_lv_rx").unwrap();
+//! let ctx = ExecCtx::auto(); // NBLC_THREADS env, else all cores
+//! let bundle = comp.compress_with(&ctx, &snap, 1e-4).unwrap();
+//! // Hard guarantee: identical bytes at ANY thread count.
+//! let sequential = comp.compress(&snap, 1e-4).unwrap();
+//! for (par, seq) in bundle.fields.iter().zip(sequential.fields.iter()) {
+//!     assert_eq!(par.bytes, seq.bytes);
+//! }
+//! ```
+//!
+//! **Determinism guarantee**: compressed bytes are identical for every
+//! thread count (enforced by `tests/parallel_determinism.rs`), because
+//! parallelism only reschedules independent work items — archives never
+//! depend on the machine that wrote them. The CLI exposes the budget as
+//! `--threads N` (default: `NBLC_THREADS`, else all cores); the in-situ
+//! pipeline multiplies it per worker (`threads` in `[pipeline]`
+//! config). Parallelism pays off from roughly 10⁵ particles upward;
+//! below that, thread spawn overhead dominates and `ExecCtx::sequential`
+//! (or the plain wrappers) is the right call.
 
 pub mod error;
 pub mod util;
+pub mod exec;
 pub mod testkit;
 pub mod codec;
 pub mod model;

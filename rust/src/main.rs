@@ -19,6 +19,7 @@ use nblc::data::archive;
 use nblc::data::io::{read_snapshot, write_snapshot};
 use nblc::data::{generate, DatasetKind};
 use nblc::error::{Error, Result};
+use nblc::exec::ExecCtx;
 use nblc::metrics::ErrorStats;
 use nblc::snapshot::FIELD_NAMES;
 use nblc::util::humansize;
@@ -32,18 +33,24 @@ USAGE: nblc <command> [flags]
 
 COMMANDS:
   gen         --dataset hacc|amdf --n <count> --seed <u64> --out <file>
-  compress    <in.snap> <out.nblc> --method <spec> [--eb 1e-4]
-  decompress  <in.nblc> <out.snap> [--method <spec>]
+  compress    <in.snap> <out.nblc> --method <spec> [--eb 1e-4] [--threads N]
+  decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
   inspect     <in.nblc>
   list-codecs
   analyze     <orig.snap> <recon.snap>
-  pipeline    --config <file.toml>
+  pipeline    --config <file.toml> [--threads N]
   info        [--artifacts <dir>]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
 `sz_lv_rx:segment=4096`, `sz:pred=lv`, or `mode:best_tradeoff`.
 Archives are self-describing: `decompress` needs no --method.
 Run `nblc list-codecs` for every codec and tunable parameter.
+
+--threads N sets the field-plane engine's thread budget. For compress/
+decompress the default is the NBLC_THREADS env var, else all available
+cores; pipeline defaults to 1 per worker (workers already run in
+parallel) unless the config or --threads says otherwise, with 0 = auto.
+Compressed bytes are identical at every thread count.
 ";
 
 fn main() {
@@ -109,34 +116,43 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the `--threads` flag: explicit value > `NBLC_THREADS` env >
+/// available parallelism (`--threads 0` also means auto).
+fn exec_ctx(args: &Args) -> Result<ExecCtx> {
+    let threads: usize = args.get_parse("threads", 0)?;
+    Ok(ExecCtx::resolve(threads))
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "eb"])?;
+    args.expect_known(&["method", "eb", "threads"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: compress <in.snap> <out.nblc>"));
     };
     let method = args.get_or("method", "sz_lv");
     let eb: f64 = args.get_parse("eb", 1e-4)?;
+    let ctx = exec_ctx(args)?;
     let spec = registry::canonical(&method)?;
     let comp = registry::build_str(&spec)?;
     let snap = read_snapshot(Path::new(input))?;
     let t = Timer::start();
-    let bundle = comp.compress(&snap, eb)?;
+    let bundle = comp.compress_with(&ctx, &snap, eb)?;
     let secs = t.secs();
     archive::write(Path::new(output), &bundle, &spec)?;
     println!(
-        "{method}: {} -> {} (ratio {:.2}, {} at {})",
+        "{method}: {} -> {} (ratio {:.2}, {} at {}, {} threads)",
         humansize::bytes(bundle.original_bytes() as u64),
         humansize::bytes(bundle.compressed_bytes() as u64),
         bundle.compression_ratio(),
         humansize::secs(secs),
         humansize::rate(bundle.original_bytes() as f64 / secs),
+        ctx.threads(),
     );
     println!("archived spec: {spec}");
     Ok(())
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    args.expect_known(&["method"])?;
+    args.expect_known(&["method", "threads"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
@@ -146,9 +162,10 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         .get("method")
         .map(str::to_string)
         .unwrap_or_else(|| arch.spec.clone());
+    let ctx = exec_ctx(args)?;
     let comp = registry::build_str(&spec)?;
     let t = Timer::start();
-    let snap = comp.decompress(&arch.bundle)?;
+    let snap = comp.decompress_with(&ctx, &arch.bundle)?;
     write_snapshot(&snap, Path::new(output))?;
     println!(
         "decompressed {} particles via '{spec}' in {} ({})",
@@ -253,10 +270,12 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    args.expect_known(&["config"])?;
+    args.expect_known(&["config", "threads"])?;
     let cfg_path = args.get_or("config", "nblc.toml");
     let doc = ConfigDoc::from_file(Path::new(&cfg_path))?;
-    let settings = PipelineSettings::from_doc(&doc)?;
+    let mut settings = PipelineSettings::from_doc(&doc)?;
+    // --threads overrides the config's per-worker budget (0 = auto).
+    settings.threads = args.get_parse("threads", settings.threads)?;
     let kind = dataset_kind(&settings.dataset)?;
     let n = if settings.particles > 0 {
         settings.particles
@@ -306,6 +325,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         &InsituConfig {
             shards: settings.shards,
             workers: settings.workers,
+            threads: settings.threads,
             queue_depth: settings.queue_depth,
             eb_rel: settings.eb_rel,
             factory,

@@ -38,15 +38,25 @@ impl RIndexSource {
 /// field is uniformly quantized to `bits_per_field` bits over its value
 /// range, then bit-interleaved.
 pub fn build_rindex(snap: &Snapshot, source: RIndexSource, bits_per_field: u32) -> Vec<u64> {
+    build_rindex_ctx(snap, source, bits_per_field, &crate::exec::ExecCtx::sequential())
+}
+
+/// [`build_rindex`] under an execution context: the contributing fields
+/// quantize concurrently (each field's grid depends only on that field,
+/// so the keys are identical at any thread count).
+pub fn build_rindex_ctx(
+    snap: &Snapshot,
+    source: RIndexSource,
+    bits_per_field: u32,
+    ctx: &crate::exec::ExecCtx,
+) -> Vec<u64> {
     let idxs = source.field_indices();
     assert!(
         bits_per_field as usize * idxs.len() <= 63,
         "R-index would exceed 63 bits"
     );
-    let quantized: Vec<Vec<u32>> = idxs
-        .iter()
-        .map(|&f| morton::quantize_uniform(&snap.fields[f], bits_per_field))
-        .collect();
+    let quantized: Vec<Vec<u32>> =
+        ctx.par(idxs, |&f| morton::quantize_uniform(&snap.fields[f], bits_per_field));
     let refs: Vec<&[u32]> = quantized.iter().map(|v| v.as_slice()).collect();
     morton::interleave_fields(&refs, bits_per_field)
 }

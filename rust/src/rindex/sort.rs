@@ -11,6 +11,12 @@
 //!
 //! Radix digits are 8 bits; rounds whose covered key bits are entirely
 //! ignored or entirely constant are skipped.
+//!
+//! Segments are independent work items, so [`segmented_sort_perm_ctx`]
+//! fans them across an [`ExecCtx`]'s threads with output identical to
+//! the sequential [`segmented_sort_perm`].
+
+use crate::exec::ExecCtx;
 
 /// Stable ascending sort permutation of `keys`, ignoring the low
 /// `ignore_bits` bits of each key. `perm[i]` is the index (into `keys`)
@@ -21,13 +27,13 @@ pub fn sort_perm(keys: &[u64], ignore_bits: u32) -> Vec<u32> {
     if n <= 1 {
         return perm;
     }
-    sort_perm_range(keys, &mut perm, ignore_bits);
+    sort_perm_range(keys, &mut perm, ignore_bits, &mut Vec::new());
     perm
 }
 
 /// Sort `perm` (a slice of indices into `keys`) in place, stable, by the
-/// masked keys.
-fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32) {
+/// masked keys. `aux` is a reusable scatter buffer (resized here).
+fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32, aux: &mut Vec<u32>) {
     let mask = if ignore_bits >= 64 {
         0u64
     } else {
@@ -49,7 +55,9 @@ fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32) {
     let lo_bit = varying.trailing_zeros();
 
     let n = perm.len();
-    let mut aux: Vec<u32> = vec![0; n];
+    aux.clear();
+    aux.resize(n, 0);
+    let aux = &mut aux[..n];
     let mut counts = [0usize; 256];
     let first_round = (lo_bit / 8) as usize;
     let last_round = (hi_bit / 8) as usize;
@@ -81,7 +89,8 @@ fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32) {
 
 /// Segmented sort: independently sort each consecutive segment of `seg`
 /// particles (the paper's Table IV setup). `seg == 0` means one global
-/// segment.
+/// segment. The scatter buffer is shared across segments, so the whole
+/// pass makes one allocation instead of one per segment.
 pub fn segmented_sort_perm(keys: &[u64], seg: usize, ignore_bits: u32) -> Vec<u32> {
     let n = keys.len();
     let mut perm: Vec<u32> = (0..n as u32).collect();
@@ -89,12 +98,56 @@ pub fn segmented_sort_perm(keys: &[u64], seg: usize, ignore_bits: u32) -> Vec<u3
         return perm;
     }
     let seg = if seg == 0 { n } else { seg };
+    let mut aux = Vec::new();
     let mut start = 0usize;
     while start < n {
         let end = (start + seg).min(n);
-        sort_perm_range(keys, &mut perm[start..end], ignore_bits);
+        sort_perm_range(keys, &mut perm[start..end], ignore_bits, &mut aux);
         start = end;
     }
+    perm
+}
+
+/// [`segmented_sort_perm`] under an execution context: one identity
+/// permutation is cut into per-thread runs of whole segments
+/// (`chunks_mut`, so every segment keeps its global boundary) and each
+/// thread sorts its segments in place with a pooled scatter buffer —
+/// the sequential pass's one-allocation property is preserved, and the
+/// permutation is exactly what the sequential pass produces.
+pub fn segmented_sort_perm_ctx(
+    keys: &[u64],
+    seg: usize,
+    ignore_bits: u32,
+    ctx: &ExecCtx,
+) -> Vec<u32> {
+    let n = keys.len();
+    if ctx.threads() <= 1 || n <= 1 {
+        return segmented_sort_perm(keys, seg, ignore_bits);
+    }
+    let seg = if seg == 0 { n } else { seg };
+    let n_segs = n.div_ceil(seg);
+    let threads = ctx.threads().min(n_segs);
+    if threads <= 1 {
+        return segmented_sort_perm(keys, seg, ignore_bits);
+    }
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    // Whole segments per thread chunk: chunk offsets stay multiples of
+    // `seg`, so in-chunk segment boundaries equal the global ones.
+    let chunk_len = n_segs.div_ceil(threads) * seg;
+    std::thread::scope(|scope| {
+        for chunk in perm.chunks_mut(chunk_len) {
+            scope.spawn(move || {
+                let mut aux = ctx.take_u32();
+                let mut start = 0usize;
+                while start < chunk.len() {
+                    let end = (start + seg).min(chunk.len());
+                    sort_perm_range(keys, &mut chunk[start..end], ignore_bits, &mut aux);
+                    start = end;
+                }
+                ctx.put_u32(aux);
+            });
+        }
+    });
     perm
 }
 
@@ -196,6 +249,22 @@ mod tests {
                 start = end;
             }
         });
+    }
+
+    #[test]
+    fn parallel_segmented_sort_matches_sequential() {
+        let mut rng = Pcg64::seeded(21);
+        let keys: Vec<u64> = (0..40_000).map(|_| rng.below(1 << 45)).collect();
+        for seg in [0usize, 1, 777, 4096, 100_000] {
+            for ignore in [0u32, 6] {
+                let seq = segmented_sort_perm(&keys, seg, ignore);
+                for threads in [2usize, 8] {
+                    let ctx = ExecCtx::with_threads(threads);
+                    let par = segmented_sort_perm_ctx(&keys, seg, ignore, &ctx);
+                    assert_eq!(seq, par, "seg={seg} ignore={ignore} threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! ([`SnapshotCompressor::reorders`]).
 
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::util::stats;
 
 /// Field names in canonical order.
@@ -192,21 +193,55 @@ pub trait FieldCompressor {
     /// Compress `xs` so every reconstructed value differs by at most
     /// `eb_abs`.
     fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>>;
+    /// [`Self::compress`] with a reusable `u32` scratch buffer (e.g. an
+    /// entropy-stage symbol stream). The default ignores the scratch;
+    /// compressors that materialize per-call `u32` state (SZ's symbol
+    /// vector) override it so [`PerField`]'s fan-out can recycle the
+    /// allocation through the [`ExecCtx`] pool.
+    fn compress_scratch(
+        &self,
+        xs: &[f32],
+        eb_abs: f64,
+        _scratch: &mut Vec<u32>,
+    ) -> Result<Vec<u8>> {
+        self.compress(xs, eb_abs)
+    }
     /// Reconstruct the field (element count is embedded in the stream).
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>>;
 }
 
 /// Compressor over a whole snapshot under a value-range-relative bound.
 /// (Not `Send + Sync` — see [`FieldCompressor`].)
+///
+/// The `*_with` methods are the primary entry points and take an
+/// [`ExecCtx`] carrying the thread budget and scratch buffers; the
+/// plain `compress`/`decompress` wrappers run sequentially. Every
+/// implementation MUST produce byte-identical output for every thread
+/// count (enforced by `tests/parallel_determinism.rs`) so archives
+/// stay deterministic regardless of how they were produced.
 pub trait SnapshotCompressor {
     /// Short identifier used in tables.
     fn name(&self) -> &'static str;
     /// Compress all six fields under `eb_rel` (per-field absolute bounds
-    /// derived from each field's value range).
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot>;
+    /// derived from each field's value range), fanning independent work
+    /// items across `ctx.threads()` threads.
+    fn compress_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot>;
     /// Reconstruct a snapshot (possibly particle-permuted, see
-    /// [`Self::reorders`]).
-    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot>;
+    /// [`Self::reorders`]) under the context's thread budget.
+    fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot>;
+    /// Sequential convenience wrapper over [`Self::compress_with`].
+    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        self.compress_with(&ExecCtx::sequential(), snap, eb_rel)
+    }
+    /// Sequential convenience wrapper over [`Self::decompress_with`].
+    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+        self.decompress_with(&ExecCtx::sequential(), c)
+    }
     /// True when decompression may return the particles in a different
     /// (but cross-field-consistent) order.
     fn reorders(&self) -> bool {
@@ -214,26 +249,113 @@ pub trait SnapshotCompressor {
     }
 }
 
-/// Adapter: lift any [`FieldCompressor`] to a [`SnapshotCompressor`]
-/// by compressing each of the six arrays independently (how the paper
-/// applies the mesh compressors to particle data, §IV).
-pub struct PerField<T: FieldCompressor>(pub T);
+/// Field indices in canonical order, used as the work list for
+/// per-field parallel fan-out.
+pub(crate) const FIELD_IDX: [usize; 6] = [0, 1, 2, 3, 4, 5];
 
-impl<T: FieldCompressor> SnapshotCompressor for PerField<T> {
+fn compress_one_field<T: FieldCompressor>(
+    inner: &T,
+    snap: &Snapshot,
+    ebs: &[f64; 6],
+    i: usize,
+    scratch: &mut Vec<u32>,
+) -> Result<CompressedField> {
+    let bytes = inner.compress_scratch(&snap.fields[i], ebs[i], scratch)?;
+    Ok(CompressedField {
+        name: FIELD_NAMES[i].to_string(),
+        n: snap.len(),
+        bytes,
+    })
+}
+
+fn decompress_one_field<T: FieldCompressor>(
+    inner: &T,
+    c: &CompressedSnapshot,
+    i: usize,
+) -> Result<Vec<f32>> {
+    let field = inner.decompress(&c.fields[i].bytes)?;
+    if field.len() != c.n {
+        return Err(Error::corrupt("field length mismatch after decompress"));
+    }
+    Ok(field)
+}
+
+/// Assemble six decoded field arrays (in canonical order) into a
+/// snapshot. Shared by the per-field adapters and the R-index codecs.
+pub(crate) fn collect_fields(name: &str, decoded: Vec<Vec<f32>>) -> Result<Snapshot> {
+    let mut fields: [Vec<f32>; 6] = Default::default();
+    for (i, f) in decoded.into_iter().enumerate() {
+        fields[i] = f;
+    }
+    Snapshot::new(name, fields, 0.0)
+}
+
+/// Adapter: lift any `Sync` [`FieldCompressor`] to a
+/// [`SnapshotCompressor`] by compressing each of the six arrays
+/// independently (how the paper applies the mesh compressors to
+/// particle data, §IV). The six planes are independent work items, so
+/// they fan out across the context's threads with byte-identical
+/// output at any budget. Thread-affine field compressors (the
+/// PJRT-backed SZ) use [`PerFieldSeq`] instead.
+pub struct PerField<T: FieldCompressor + Sync>(pub T);
+
+impl<T: FieldCompressor + Sync> SnapshotCompressor for PerField<T> {
     fn name(&self) -> &'static str {
         self.0.name()
     }
 
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+    fn compress_with(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
         let ebs = snap.abs_bounds(eb_rel);
+        let fields = ctx.try_par(&FIELD_IDX, |&i| {
+            let mut scratch = ctx.take_u32();
+            let field = compress_one_field(&self.0, snap, &ebs, i, &mut scratch);
+            ctx.put_u32(scratch);
+            field
+        })?;
+        Ok(CompressedSnapshot {
+            compressor: self.name().to_string(),
+            eb_rel,
+            fields,
+            n: snap.len(),
+        })
+    }
+
+    fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
+        if c.fields.len() != 6 {
+            return Err(Error::corrupt("expected 6 per-field streams"));
+        }
+        let decoded = ctx.try_par(&FIELD_IDX, |&i| decompress_one_field(&self.0, c, i))?;
+        collect_fields("decompressed", decoded)
+    }
+}
+
+/// Sequential per-field adapter for thread-affine field compressors
+/// (e.g. [`crate::runtime::quantizer::SzPjrt`], whose XLA handles must
+/// stay on one thread). Stream layout is identical to [`PerField`];
+/// the execution context's thread budget is ignored.
+pub struct PerFieldSeq<T: FieldCompressor>(pub T);
+
+impl<T: FieldCompressor> SnapshotCompressor for PerFieldSeq<T> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn compress_with(
+        &self,
+        _ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
+        let ebs = snap.abs_bounds(eb_rel);
+        let mut scratch = Vec::new();
         let mut fields = Vec::with_capacity(6);
         for i in 0..6 {
-            let bytes = self.0.compress(&snap.fields[i], ebs[i])?;
-            fields.push(CompressedField {
-                name: FIELD_NAMES[i].to_string(),
-                n: snap.len(),
-                bytes,
-            });
+            fields.push(compress_one_field(&self.0, snap, &ebs, i, &mut scratch)?);
         }
         Ok(CompressedSnapshot {
             compressor: self.name().to_string(),
@@ -243,18 +365,15 @@ impl<T: FieldCompressor> SnapshotCompressor for PerField<T> {
         })
     }
 
-    fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
+    fn decompress_with(&self, _ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
         if c.fields.len() != 6 {
             return Err(Error::corrupt("expected 6 per-field streams"));
         }
-        let mut fields: [Vec<f32>; 6] = Default::default();
+        let mut decoded = Vec::with_capacity(6);
         for i in 0..6 {
-            fields[i] = self.0.decompress(&c.fields[i].bytes)?;
-            if fields[i].len() != c.n {
-                return Err(Error::corrupt("field length mismatch after decompress"));
-            }
+            decoded.push(decompress_one_field(&self.0, c, i)?);
         }
-        Snapshot::new("decompressed", fields, 0.0)
+        collect_fields("decompressed", decoded)
     }
 }
 
@@ -356,6 +475,35 @@ mod tests {
         bad.fields[0][1] += 1.0;
         assert!(verify_bounds(&s, &bad, 1e-4).is_err());
         assert!(verify_bounds(&s, &s, 1e-4).is_ok());
+    }
+
+    #[test]
+    fn perfield_parallel_output_matches_sequential() {
+        use crate::compressors::sz::Sz;
+        let mut fields: [Vec<f32>; 6] = Default::default();
+        for (f, field) in fields.iter_mut().enumerate() {
+            *field = (0..5000)
+                .map(|i| ((i + f * 31) as f32 * 0.01).sin() * (f as f32 + 1.0))
+                .collect();
+        }
+        let s = Snapshot::new("par", fields, 1.0).unwrap();
+        let comp = PerField(Sz::lv());
+        let seq = comp.compress(&s, 1e-4).unwrap();
+        for threads in [2usize, 8] {
+            let ctx = ExecCtx::with_threads(threads);
+            let par = comp.compress_with(&ctx, &s, 1e-4).unwrap();
+            assert_eq!(seq.fields.len(), par.fields.len());
+            for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
+                assert_eq!(a.bytes, b.bytes, "threads={threads}");
+            }
+            let recon = comp.decompress_with(&ctx, &par).unwrap();
+            verify_bounds(&s, &recon, 1e-4).unwrap();
+        }
+        // The sequential adapter emits the same streams.
+        let seq_adapter = PerFieldSeq(Sz::lv()).compress(&s, 1e-4).unwrap();
+        for (a, b) in seq.fields.iter().zip(seq_adapter.fields.iter()) {
+            assert_eq!(a.bytes, b.bytes);
+        }
     }
 
     #[test]

@@ -83,28 +83,46 @@ impl Drop for ThreadPool {
 }
 
 /// Parallel map over items using transient scoped threads, preserving
-/// order. Chunks the index space evenly; `f` must be `Sync`.
+/// order; `f` must be `Sync`. Work is claimed dynamically through an
+/// atomic index, so every budgeted thread runs and uneven item costs
+/// balance out (static chunking would idle threads whenever
+/// `items.len()` is a small non-multiple of the budget — e.g. 6 field
+/// planes over 4 threads). Results are placed by item index, so the
+/// output order is identical whatever the scheduling.
 pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
 where
     T: Sync,
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
         return items.iter().map(&f).collect();
     }
-    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
-    let chunk = items.len().div_ceil(threads);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, U)>();
     thread::scope(|scope| {
-        for (islice, oslice) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
-            scope.spawn(|| {
-                for (x, o) in islice.iter().zip(oslice.iter_mut()) {
-                    *o = Some(f(x));
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    break;
                 }
             });
         }
     });
+    drop(tx);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    for (i, u) in rx {
+        out[i] = Some(u);
+    }
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
 

@@ -40,6 +40,7 @@ fn config_to_pipeline_roundtrip() {
         &InsituConfig {
             shards: settings.shards,
             workers: settings.workers,
+            threads: settings.threads,
             queue_depth: settings.queue_depth,
             eb_rel: settings.eb_rel,
             factory: factory_for(settings.mode),
@@ -84,6 +85,7 @@ fn config_method_spec_drives_pipeline() {
         &InsituConfig {
             shards: settings.shards,
             workers: settings.workers,
+            threads: settings.threads,
             queue_depth: settings.queue_depth,
             eb_rel: settings.eb_rel,
             factory: registry::factory(spec).unwrap(),
@@ -161,6 +163,7 @@ fn scheduler_routing_via_pipeline() {
         &InsituConfig {
             shards: 4,
             workers: 1,
+            threads: 1,
             queue_depth: 2,
             eb_rel: 1e-4,
             factory: factory_for(routed),
@@ -173,6 +176,7 @@ fn scheduler_routing_via_pipeline() {
         &InsituConfig {
             shards: 4,
             workers: 1,
+            threads: 1,
             queue_depth: 2,
             eb_rel: 1e-4,
             factory: factory_for(Mode::BestCompression),
