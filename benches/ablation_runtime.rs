@@ -90,6 +90,7 @@ fn main() {
             &hacc,
             &InsituConfig {
                 shards: 64,
+                layout: None,
                 workers: 1,
                 threads: 1,
                 queue_depth: depth,

@@ -13,6 +13,8 @@ use nblc::bench::{results_dir, Table, EB_REL};
 use nblc::codec::{avle, huffman, lz77};
 use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
+use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::DatasetKind;
 use nblc::exec::ExecCtx;
 use nblc::model::quant::{LatticeQuantizer, Predictor};
@@ -23,6 +25,39 @@ use nblc::util::rng::Pcg64;
 use nblc::util::stats::value_range;
 use nblc::util::timer::bench_min_time;
 use std::io::Write;
+
+/// Time `work` at 1 thread vs all cores: one table row per budget
+/// (rate + speedup vs the 1-thread base) and one machine-readable
+/// `(json_label, threads, MB/s)` row for `BENCH_hotpath.json`. Shared
+/// by the compress-engine and archive-decode scaling benches so the
+/// row/JSON shape can't drift between them.
+fn bench_scaling(
+    table: &mut Table,
+    json_rows: &mut Vec<(String, usize, f64)>,
+    n_threads: usize,
+    total_mb: f64,
+    row_label: &str,
+    json_label: &str,
+    mut work: impl FnMut(&ExecCtx),
+) {
+    let budgets = if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
+    let mut base_rate = 0.0f64;
+    for &threads in &budgets {
+        let ctx = ExecCtx::with_threads(threads);
+        let secs = bench_min_time(1.0, 3, || work(&ctx));
+        let rate = total_mb / secs;
+        if threads == 1 {
+            base_rate = rate;
+        }
+        table.row(vec![
+            row_label.into(),
+            format!("{threads}"),
+            format!("{rate:.1}"),
+            format!("{:.2}x", rate / base_rate),
+        ]);
+        json_rows.push((json_label.to_string(), threads, rate));
+    }
+}
 
 fn main() {
     let s = nblc::bench::bench_snapshot(DatasetKind::Hacc);
@@ -147,28 +182,58 @@ fn main() {
     let mut json_rows: Vec<(String, usize, f64)> = Vec::new();
     for spec in ["sz_lv", "sz_lv_rx", "mode:best_compression"] {
         let comp = registry::build_str(spec).unwrap();
-        let budgets = if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
-        let mut base_rate = 0.0f64;
-        for &threads in &budgets {
-            let ctx = ExecCtx::with_threads(threads);
-            let secs = bench_min_time(1.0, 3, || comp.compress_with(&ctx, &s, EB_REL).unwrap());
-            let rate = total_mb / secs;
-            if threads == 1 {
-                base_rate = rate;
-            }
-            engine.row(vec![
-                spec.into(),
-                format!("{threads}"),
-                format!("{rate:.1}"),
-                format!("{:.2}x", rate / base_rate),
-            ]);
-            json_rows.push((spec.to_string(), threads, rate));
-        }
         // Byte-identity across budgets is enforced by the test suite
         // (tests/parallel_determinism.rs); no redundant smoke here.
+        bench_scaling(&mut engine, &mut json_rows, n_threads, total_mb, spec, spec, |ctx| {
+            comp.compress_with(ctx, &s, EB_REL).unwrap();
+        });
     }
     engine.print();
     engine.write_csv("hotpath_engine").unwrap();
+
+    // Sharded-archive parallel decompression: pipeline-write a v3
+    // archive, then decode it end-to-end at 1 thread vs all cores. The
+    // shard fan-out is what makes DECODE scale with cores (compression
+    // already scales via pipeline workers / field planes).
+    let decode_shard_count = 8usize;
+    let arch_spec = registry::canonical("sz_lv").unwrap();
+    let arch_path = std::env::temp_dir().join(format!("nblc_hotpath_{}.nblc", std::process::id()));
+    run_insitu(
+        &s,
+        &InsituConfig {
+            shards: decode_shard_count,
+            layout: None,
+            workers: n_threads.clamp(1, decode_shard_count),
+            threads: 1,
+            queue_depth: 4,
+            eb_rel: EB_REL,
+            factory: registry::factory(&arch_spec).unwrap(),
+            sink: Sink::Archive {
+                path: arch_path.clone(),
+                spec: arch_spec.clone(),
+            },
+        },
+    )
+    .unwrap();
+    let reader = ShardReader::open(&arch_path).unwrap();
+    let mut decode = Table::new(
+        &format!("v3 archive decode ({decode_shard_count} shards, shard fan-out)"),
+        &["Stage", "Threads", "Decode MB/s", "Speedup"],
+    );
+    bench_scaling(
+        &mut decode,
+        &mut json_rows,
+        n_threads,
+        total_mb,
+        "v3 shard decode (sz_lv)",
+        "v3_decode:sz_lv",
+        |ctx| {
+            decode_shards(&reader, reader.spec(), None, ctx).unwrap();
+        },
+    );
+    decode.print();
+    decode.write_csv("hotpath_decode").unwrap();
+    std::fs::remove_file(&arch_path).ok();
 
     let json_path = results_dir().join("BENCH_hotpath.json");
     let mut j = String::from("[\n");

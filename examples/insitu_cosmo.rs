@@ -74,6 +74,7 @@ fn main() {
         &snap,
         &InsituConfig {
             shards,
+            layout: None,
             workers: 1,
             threads: 1,
             queue_depth: 4,

@@ -19,6 +19,17 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        Args::parse_with_switches(args, &[])
+    }
+
+    /// [`Self::parse`] with a set of declared boolean switches: a
+    /// `--flag` in `switches` never consumes the following token, so
+    /// `inspect --verify file.nblc` keeps `file.nblc` as a positional
+    /// instead of greedily binding it as the flag's value.
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        args: I,
+        switches: &[&str],
+    ) -> Result<Args> {
         let mut out = Args::default();
         let mut iter = args.into_iter().peekable();
         if let Some(cmd) = iter.next() {
@@ -31,10 +42,11 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if !switches.contains(&name)
+                    && iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
                     out.flags.insert(name.to_string(), v);
@@ -123,5 +135,26 @@ mod tests {
     fn parse_errors() {
         let a = parse(&["gen", "--n", "abc"]);
         assert!(a.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn declared_switches_do_not_eat_positionals() {
+        let argv = ["inspect", "--verify", "a.nblc"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_switches(argv, &["verify"]).unwrap();
+        assert_eq!(a.positionals, vec!["a.nblc"]);
+        assert!(a.has("verify"));
+        // Trailing position and `=` form still work.
+        let argv = ["inspect", "a.nblc", "--verify"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_switches(argv, &["verify"]).unwrap();
+        assert_eq!(a.positionals, vec!["a.nblc"]);
+        assert!(a.has("verify"));
+        let argv = ["inspect", "--verify=true", "a.nblc"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_switches(argv, &["verify"]).unwrap();
+        assert_eq!(a.positionals, vec!["a.nblc"]);
+        assert!(a.has("verify"));
+        // Undeclared flags keep the greedy value binding.
+        let argv = ["gen", "--n", "5"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_switches(argv, &["verify"]).unwrap();
+        assert_eq!(a.get("n"), Some("5"));
     }
 }

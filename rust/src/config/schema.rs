@@ -34,6 +34,13 @@ pub struct PipelineSettings {
     pub use_pjrt: bool,
     /// Simulated processes for the PFS model sink (0 = null sink).
     pub sim_procs: usize,
+    /// Write a sharded, seekable v3 `.nblc` archive to this path
+    /// (takes precedence over `sim_procs` for the sink choice).
+    pub output: Option<String>,
+    /// Run a second pipeline round with shard boundaries rebalanced
+    /// from the first round's per-shard cost counters (the counters the
+    /// v3 footer records).
+    pub rebalance: bool,
 }
 
 impl Default for PipelineSettings {
@@ -51,6 +58,8 @@ impl Default for PipelineSettings {
             auto_route: true,
             use_pjrt: false,
             sim_procs: 0,
+            output: None,
+            rebalance: false,
         }
     }
 }
@@ -60,9 +69,10 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 12] = [
+        const KNOWN: [&str; 14] = [
             "dataset", "particles", "shards", "workers", "threads", "queue_depth",
             "eb_rel", "mode", "method", "auto_route", "use_pjrt", "sim_procs",
+            "output", "rebalance",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -127,6 +137,20 @@ impl PipelineSettings {
                 .as_bool()
                 .ok_or_else(|| Error::Config("'use_pjrt' must be a boolean".into()))?;
         }
+        if let Some(v) = doc.get(sec, "output") {
+            let path = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'output' must be a string path".into()))?;
+            if path.is_empty() {
+                return Err(Error::Config("'output' must not be empty".into()));
+            }
+            s.output = Some(path.to_string());
+        }
+        if let Some(v) = doc.get(sec, "rebalance") {
+            s.rebalance = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("'rebalance' must be a boolean".into()))?;
+        }
         if s.shards == 0 {
             return Err(Error::Config("'shards' must be >= 1".into()));
         }
@@ -164,6 +188,8 @@ mod tests {
             auto_route = false
             use_pjrt = true
             sim_procs = 1024
+            output = "out.nblc"
+            rebalance = true
             "#,
         )
         .unwrap();
@@ -175,6 +201,8 @@ mod tests {
         assert!(!s.auto_route);
         assert!(s.use_pjrt);
         assert_eq!(s.sim_procs, 1024);
+        assert_eq!(s.output.as_deref(), Some("out.nblc"));
+        assert!(s.rebalance);
     }
 
     #[test]
@@ -199,6 +227,9 @@ mod tests {
             "[pipeline]\nmethod = \"warp_drive\"\n",
             "[pipeline]\nmethod = \"sz_lv_rx:segment=oops\"\n",
             "[pipeline]\nmethod = 3\n",
+            "[pipeline]\noutput = 3\n",
+            "[pipeline]\noutput = \"\"\n",
+            "[pipeline]\nrebalance = \"yes\"\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

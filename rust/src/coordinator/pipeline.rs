@@ -4,8 +4,11 @@
 //!   resident snapshot — the in-situ constraint) into a bounded queue.
 //! * **Workers** each own a compressor instance (built from a factory;
 //!   compressors are not `Sync`) and drain the shard queue.
-//! * **Sink** applies the PFS write: either a real file write or the
-//!   [`GpfsModel`]-timed simulated write used by the scaling benches.
+//! * **Sink** applies the PFS write: a sharded, seekable v3 `.nblc`
+//!   archive streamed through [`ShardWriter`] (records land in
+//!   completion order, the footer restores logical order — compute and
+//!   I/O stay overlapped), or the [`GpfsModel`]-timed simulated write
+//!   used by the scaling benches.
 //!
 //! Every queue is bounded ([`backpressure`]), so a slow sink throttles
 //! the workers and a slow compressor throttles the source; stall
@@ -15,12 +18,12 @@ use crate::coordinator::backpressure::{bounded, QueueStats};
 use crate::coordinator::counters::PipelineCounters;
 use crate::coordinator::iomodel::GpfsModel;
 use crate::coordinator::rank::{run_rank, RankResult, RankTask};
-use crate::coordinator::shard::split_even;
+use crate::coordinator::shard::{split_even, Shard};
+use crate::data::archive::{ShardIndex, ShardWriter};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::snapshot::{Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
-use std::io::Write;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -32,8 +35,18 @@ pub type CompressorFactory = Arc<dyn Fn() -> Box<dyn SnapshotCompressor> + Send 
 pub enum Sink {
     /// Discard (compute-only runs).
     Null,
-    /// Write to a real file (one stream, appended in arrival order).
-    File(std::path::PathBuf),
+    /// Stream a sharded, seekable v3 `.nblc` archive via
+    /// [`ShardWriter`]: records are appended in worker-completion order
+    /// (no re-buffering), the footer makes the logical order explicit,
+    /// and [`crate::data::archive::ShardReader`] reads it back —
+    /// including partial particle ranges. `spec` must be the canonical
+    /// codec spec the factory builds.
+    Archive {
+        /// Output path.
+        path: std::path::PathBuf,
+        /// Canonical codec spec recorded in the archive header.
+        spec: String,
+    },
     /// Simulated parallel-file-system write, timed by the model as if
     /// `procs` processes wrote concurrently.
     Model { model: GpfsModel, procs: usize },
@@ -41,8 +54,14 @@ pub enum Sink {
 
 /// In-situ pipeline configuration.
 pub struct InsituConfig {
-    /// Number of shards ("ranks") to cut the snapshot into.
+    /// Number of shards ("ranks") to cut the snapshot into (evenly;
+    /// ignored when `layout` pins explicit boundaries).
     pub shards: usize,
+    /// Explicit shard boundaries, e.g. from
+    /// [`crate::coordinator::shard::rebalance`] fed by a previous
+    /// round's per-shard cost counters (`[pipeline] rebalance`). Must
+    /// partition the snapshot contiguously from particle 0.
+    pub layout: Option<Vec<Shard>>,
     /// Worker threads compressing shards.
     pub workers: usize,
     /// Intra-snapshot threads *per worker* for the parallel field-plane
@@ -83,14 +102,46 @@ pub struct InsituReport {
     pub shard_secs: Vec<f64>,
     /// Per-shard ratios.
     pub shard_ratios: Vec<f64>,
+    /// The shard layout that was actually used (even split or the
+    /// explicit `layout`), indexed like `shard_secs`.
+    pub layout: Vec<Shard>,
+    /// The archive footer written by an [`Sink::Archive`] run (`None`
+    /// for other sinks). Carries the same per-shard cost counters as
+    /// `shard_secs`, persisted in the file.
+    pub shard_index: Option<ShardIndex>,
+}
+
+impl InsituReport {
+    /// Observed compression cost per particle for each shard — the
+    /// input [`crate::coordinator::shard::rebalance`] expects when
+    /// computing the next round's boundaries.
+    pub fn cost_per_particle(&self) -> Vec<f64> {
+        self.layout
+            .iter()
+            .zip(&self.shard_secs)
+            .map(|(s, &secs)| if s.is_empty() { 0.0 } else { secs / s.len() as f64 })
+            .collect()
+    }
 }
 
 /// Run the in-situ pipeline over a resident snapshot.
 pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
-    if cfg.shards == 0 {
-        return Err(Error::invalid("need at least one shard"));
-    }
-    let shards = split_even(snap.len(), cfg.shards);
+    let layout = match &cfg.layout {
+        Some(l) => {
+            let ranges: Vec<(u64, u64)> =
+                l.iter().map(|s| (s.start as u64, s.end as u64)).collect();
+            crate::coordinator::shard::check_partition(&ranges, snap.len() as u64)
+                .map_err(|m| Error::Pipeline(format!("explicit shard layout invalid: {m}")))?;
+            l.clone()
+        }
+        None => {
+            if cfg.shards == 0 {
+                return Err(Error::invalid("need at least one shard"));
+            }
+            split_even(snap.len(), cfg.shards)
+        }
+    };
+    let k = layout.len();
     let counters = Arc::new(PipelineCounters::default());
     let wall = Timer::start();
 
@@ -136,46 +187,60 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
         drop(done_tx);
 
         // Sink thread (moves the receiver; `cfg` is a shared reference
-        // and copies into the closure).
-        let sink_handle = scope.spawn(move || -> Result<(f64, Vec<f64>, Vec<f64>)> {
-            let mut sink_secs = 0f64;
-            let mut shard_secs = vec![0f64; cfg.shards];
-            let mut shard_ratios = vec![0f64; cfg.shards];
-            let mut file = match &cfg.sink {
-                Sink::File(path) => Some(std::io::BufWriter::new(
-                    std::fs::File::create(path)?,
-                )),
-                _ => None,
-            };
-            while let Some(result) = done_rx.recv() {
-                shard_secs[result.rank] = result.secs;
-                shard_ratios[result.rank] = result.bundle.compression_ratio();
-                let bytes = result.bundle.compressed_bytes() as u64;
-                match &cfg.sink {
-                    Sink::Null => {}
-                    Sink::File(_) => {
-                        let t = Timer::start();
-                        let w = file.as_mut().expect("file sink open");
-                        for f in &result.bundle.fields {
-                            w.write_all(&f.bytes)?;
-                        }
-                        sink_secs += t.secs();
+        // and copies into the closure). Archive records are written the
+        // moment a shard completes — the footer, not buffering, makes
+        // the logical order explicit.
+        let sink_handle =
+            scope.spawn(move || -> Result<(f64, Vec<f64>, Vec<f64>, Option<ShardIndex>)> {
+                let mut sink_secs = 0f64;
+                let mut shard_secs = vec![0f64; k];
+                let mut shard_ratios = vec![0f64; k];
+                let mut writer = match &cfg.sink {
+                    Sink::Archive { path, spec } => {
+                        Some(ShardWriter::create(path, spec, cfg.eb_rel)?)
                     }
-                    Sink::Model { model, procs } => {
-                        sink_secs += model.write_time(bytes, *procs);
+                    _ => None,
+                };
+                while let Some(result) = done_rx.recv() {
+                    shard_secs[result.rank] = result.secs;
+                    shard_ratios[result.rank] = result.bundle.compression_ratio();
+                    let bytes = result.bundle.compressed_bytes() as u64;
+                    match &cfg.sink {
+                        Sink::Null => {}
+                        Sink::Archive { .. } => {
+                            let t = Timer::start();
+                            let w = writer.as_mut().expect("archive sink open");
+                            w.write_shard(
+                                result.start,
+                                result.end,
+                                &result.bundle,
+                                (result.secs * 1e9) as u64,
+                            )?;
+                            sink_secs += t.secs();
+                        }
+                        Sink::Model { model, procs } => {
+                            sink_secs += model.write_time(bytes, *procs);
+                        }
                     }
                 }
-            }
-            if let Some(mut w) = file {
-                w.flush()?;
-            }
-            Ok((sink_secs, shard_secs, shard_ratios))
-        });
+                let shard_index = match writer {
+                    Some(w) => {
+                        let t = Timer::start();
+                        let index = w.finish()?;
+                        sink_secs += t.secs();
+                        Some(index)
+                    }
+                    None => None,
+                };
+                Ok((sink_secs, shard_secs, shard_ratios, shard_index))
+            });
 
         // Source: feed shards (slices of the resident snapshot).
-        for shard in &shards {
+        for (id, shard) in layout.iter().enumerate() {
             let task = RankTask {
-                rank: shard.id,
+                rank: id,
+                start: shard.start,
+                end: shard.end,
                 shard: snap.slice(shard.start, shard.end),
             };
             if task_tx.send(task).is_err() {
@@ -187,7 +252,8 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
         for h in worker_handles {
             h.join().expect("worker panicked")?;
         }
-        let (sink_secs, shard_secs, shard_ratios) = sink_handle.join().expect("sink panicked")?;
+        let (sink_secs, shard_secs, shard_ratios, shard_index) =
+            sink_handle.join().expect("sink panicked")?;
 
         let bytes_in = counters.bytes_in.load(Ordering::Relaxed);
         let bytes_out = counters.bytes_out.load(Ordering::Relaxed);
@@ -206,6 +272,8 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             sink_stalls: stat_stalls(&sink_q),
             shard_secs,
             shard_ratios,
+            layout: layout.clone(),
+            shard_index,
         })
     })
 }
@@ -244,6 +312,7 @@ mod tests {
                 queue_depth: 4,
                 eb_rel: 1e-4,
                 factory: factory(),
+                layout: None,
                 sink: Sink::Null,
             },
         )
@@ -288,6 +357,7 @@ mod tests {
                 queue_depth: 1,
                 eb_rel: 1e-4,
                 factory: factory(),
+                layout: None,
                 sink: Sink::Model {
                     model: slow,
                     procs: 1,
@@ -300,25 +370,85 @@ mod tests {
     }
 
     #[test]
-    fn file_sink_writes_bytes() {
+    fn archive_sink_writes_readable_v3() {
+        use crate::data::archive::{decode_shards, ShardReader};
         let s = md(10_000);
-        let path = std::env::temp_dir().join(format!("nblc_pipe_{}.bin", std::process::id()));
+        let path = std::env::temp_dir().join(format!("nblc_pipe_{}.nblc", std::process::id()));
         let report = run_insitu(
             &s,
             &InsituConfig {
-                shards: 2,
-                workers: 1,
+                shards: 3,
+                workers: 2,
                 threads: 1,
                 queue_depth: 2,
                 eb_rel: 1e-4,
                 factory: factory(),
-                sink: Sink::File(path.clone()),
+                layout: None,
+                sink: Sink::Archive {
+                    path: path.clone(),
+                    spec: "sz_lv:lossless=false,radius=32768".into(),
+                },
             },
         )
         .unwrap();
-        let written = std::fs::metadata(&path).unwrap().len();
+        // The footer the sink returned matches the report's counters.
+        let index = report.shard_index.as_ref().expect("archive sink returns its index");
+        assert_eq!(index.n, 10_000);
+        assert_eq!(index.entries.len(), 3);
+        assert_eq!(index.compressed_bytes(), report.bytes_out);
+        // ...and the file round-trips through the sharded reader within
+        // the configured bound, shard by shard.
+        let reader = ShardReader::open(&path).unwrap();
+        assert_eq!(reader.n(), 10_000);
+        reader.verify_file_crc().unwrap();
+        let dec = decode_shards(&reader, reader.spec(), None, &ExecCtx::with_threads(2)).unwrap();
         std::fs::remove_file(&path).ok();
-        assert_eq!(written, report.bytes_out);
+        assert_eq!(dec.snapshot.len(), s.len());
+        for sh in &report.layout {
+            let sub = s.slice(sh.start, sh.end);
+            let got = dec.snapshot.slice(sh.start, sh.end);
+            crate::snapshot::verify_bounds(&sub, &got, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn explicit_layout_drives_shards() {
+        let s = md(9_000);
+        let layout = vec![
+            Shard { id: 0, start: 0, end: 2_000 },
+            Shard { id: 1, start: 2_000, end: 9_000 },
+        ];
+        let cfg = |layout: Option<Vec<Shard>>| InsituConfig {
+            shards: 99, // ignored when a layout is pinned
+            workers: 1,
+            threads: 1,
+            queue_depth: 2,
+            eb_rel: 1e-4,
+            factory: factory(),
+            layout,
+            sink: Sink::Null,
+        };
+        let report = run_insitu(&s, &cfg(Some(layout.clone()))).unwrap();
+        assert_eq!(report.layout, layout);
+        assert_eq!(report.shard_secs.len(), 2);
+        assert_eq!(report.cost_per_particle().len(), 2);
+        // Non-covering layouts are rejected.
+        let gap = vec![
+            Shard { id: 0, start: 0, end: 1_000 },
+            Shard { id: 1, start: 1_500, end: 9_000 },
+        ];
+        assert!(run_insitu(&s, &cfg(Some(gap))).is_err());
+        let short = vec![Shard { id: 0, start: 0, end: 5_000 }];
+        assert!(run_insitu(&s, &cfg(Some(short))).is_err());
+        assert!(run_insitu(&s, &cfg(Some(Vec::new()))).is_err());
+        // A backwards shard satisfies the pairwise-contiguity probe but
+        // must still error (not panic in Snapshot::slice).
+        let backwards = vec![
+            Shard { id: 0, start: 0, end: 9_000 },
+            Shard { id: 1, start: 9_000, end: 2_000 },
+            Shard { id: 2, start: 2_000, end: 9_000 },
+        ];
+        assert!(run_insitu(&s, &cfg(Some(backwards))).is_err());
     }
 
     #[test]
@@ -333,6 +463,7 @@ mod tests {
                 queue_depth: 1,
                 eb_rel: 1e-3,
                 factory: factory(),
+                layout: None,
                 sink: Sink::Null,
             },
         )
@@ -356,6 +487,7 @@ mod tests {
                     queue_depth: 4,
                     eb_rel: 1e-4,
                     factory: factory(),
+                    layout: None,
                     sink: Sink::Null,
                 },
             )
@@ -379,6 +511,7 @@ mod tests {
                 queue_depth: 1,
                 eb_rel: 1e-3,
                 factory: factory(),
+                layout: None,
                 sink: Sink::Null,
             },
         );

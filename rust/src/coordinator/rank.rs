@@ -11,6 +11,10 @@ use crate::util::timer::Timer;
 pub struct RankTask {
     /// Shard / rank id.
     pub rank: usize,
+    /// First particle index of the shard in the full snapshot.
+    pub start: usize,
+    /// One past the last particle index.
+    pub end: usize,
     /// The shard's particles.
     pub shard: Snapshot,
 }
@@ -19,6 +23,11 @@ pub struct RankTask {
 pub struct RankResult {
     /// Shard / rank id.
     pub rank: usize,
+    /// First particle index of the shard in the full snapshot (carried
+    /// through so the archive sink can index the record).
+    pub start: usize,
+    /// One past the last particle index.
+    pub end: usize,
     /// Compressed bundle.
     pub bundle: CompressedSnapshot,
     /// Input bytes.
@@ -51,6 +60,8 @@ pub fn run_rank(
     let secs = t.secs();
     Ok(RankResult {
         rank: task.rank,
+        start: task.start,
+        end: task.end,
         bundle,
         bytes_in,
         secs,
@@ -73,13 +84,19 @@ mod tests {
         let shard = s.slice(5_000, 15_000);
         let comp = PerField(Sz::lv());
         let result = run_rank(
-            RankTask { rank: 3, shard },
+            RankTask {
+                rank: 3,
+                start: 5_000,
+                end: 15_000,
+                shard,
+            },
             &comp,
             1e-4,
             &ExecCtx::sequential(),
         )
         .unwrap();
         assert_eq!(result.rank, 3);
+        assert_eq!((result.start, result.end), (5_000, 15_000));
         assert_eq!(result.bundle.n, 10_000);
         assert!(result.bundle.compression_ratio() > 1.5);
         assert!(result.rate() > 0.0);

@@ -24,6 +24,37 @@ impl Shard {
     }
 }
 
+/// Check that `ranges` (in the given order) partition `0..n`
+/// contiguously: the first starts at 0, every range has `start <= end`,
+/// consecutive ranges abut, and the last ends at `n`. This is THE
+/// shard-coverage invariant — shared by the archive writer
+/// ([`crate::data::archive::ShardWriter::finish`]), the archive reader
+/// (v3 footer validation), and the pipeline's explicit-layout check, so
+/// a writer can never produce a layout a reader rejects. Returns a
+/// description of the first violation; callers wrap it in their own
+/// error type.
+pub fn check_partition(ranges: &[(u64, u64)], n: u64) -> std::result::Result<(), String> {
+    if ranges.is_empty() {
+        return Err("no shards".into());
+    }
+    let mut prev_end = 0u64;
+    for (i, &(start, end)) in ranges.iter().enumerate() {
+        if start > end {
+            return Err(format!("shard {i} range {start}..{end} is backwards"));
+        }
+        if start != prev_end {
+            return Err(format!(
+                "shard {i} starts at {start}, expected {prev_end} (gap or overlap)"
+            ));
+        }
+        prev_end = end;
+    }
+    if prev_end != n {
+        return Err(format!("shards end at {prev_end}, expected {n}"));
+    }
+    Ok(())
+}
+
 /// Split `n` particles into `k` balanced contiguous shards (sizes differ
 /// by at most one).
 pub fn split_even(n: usize, k: usize) -> Vec<Shard> {
@@ -103,6 +134,23 @@ mod tests {
         assert_eq!(shards.last().unwrap().end, n);
         for w in shards.windows(2) {
             assert_eq!(w[0].end, w[1].start, "shards must be contiguous");
+        }
+    }
+
+    #[test]
+    fn check_partition_accepts_exactly_the_valid_layouts() {
+        assert!(check_partition(&[(0, 10), (10, 25)], 25).is_ok());
+        assert!(check_partition(&[(0, 0)], 0).is_ok(), "empty snapshot");
+        assert!(check_partition(&[(0, 5), (5, 5), (5, 9)], 9).is_ok(), "empty shard");
+        for (bad, n) in [
+            (vec![], 0u64),                           // no shards
+            (vec![(1, 5), (5, 9)], 9),                // not from 0
+            (vec![(0, 5), (6, 9)], 9),                // gap
+            (vec![(0, 5), (4, 9)], 9),                // overlap
+            (vec![(0, 5), (5, 8)], 9),                // not to n
+            (vec![(0, 9), (9, 2), (2, 9)], 9),        // backwards middle shard
+        ] {
+            assert!(check_partition(&bad, n).is_err(), "{bad:?} n={n}");
         }
     }
 

@@ -23,32 +23,87 @@
 //!   bytes   len payload
 //! ```
 //!
+//! ## v3 layout: sharded + seekable (written by [`ShardWriter`])
+//!
+//! The in-situ pipeline compresses particle *shards* on many workers
+//! and streams them out in completion order. A v3 archive preserves
+//! that streaming property — shard records are appended in whatever
+//! order they finish — while a seekable index footer restores the
+//! logical (particle-range) order and makes partial reads possible:
+//!
+//! ```text
+//! header:
+//!   magic     8   b"NBLCARC3"
+//!   version   4   u32 (3)
+//!   spec      v+L uvarint length + utf8 canonical codec spec
+//!   eb_rel    8   f64 relative error bound
+//!   head_crc  4   CRC-32 of all preceding bytes
+//! shard records (completion order, one per shard):
+//!   marker    4   b"SHRD"
+//!   start     v   first particle index (inclusive)
+//!   end       v   one past the last particle index
+//!   n_fields  v   stream count
+//!   per field:    name v+L, n v, len v, crc 4, payload   (as in v2)
+//! footer (the seekable index):
+//!   marker    4   b"FIDX"
+//!   n         v   total particle count
+//!   k         v   shard count
+//!   per shard (sorted by start — the explicit logical order):
+//!             start v, end v, offset v, len v, bytes_out v, cost_ns v
+//!   file_crc  4   CRC-32 of every byte before the footer marker
+//!   foot_crc  4   CRC-32 of the footer from its marker through file_crc
+//!   foot_len  8   u64 byte length of marker..=foot_crc
+//!   tail      8   b"NBLCEND3"
+//! ```
+//!
+//! A reader seeks to the 16-byte tail, loads the footer, and can then
+//! fetch any shard record independently ([`ShardReader::read_shard`] is
+//! `&self`, so shard decodes fan out across threads —
+//! [`decode_shards`]). `offset`/`len` give each record's byte extent;
+//! `cost_ns` carries the per-shard compression timing the rebalancer
+//! feeds back into the next round's shard layout.
+//!
 //! ## v1 compatibility
 //!
 //! Bundles written before the format was versioned (magic `NBLCBNDL`:
 //! compressor *name* only, no checksums) are still readable; their
-//! bare name doubles as a valid codec spec. All parsing — v1 included —
+//! bare name doubles as a valid codec spec. [`ShardReader::open`]
+//! accepts all three versions, presenting v1/v2 single-record archives
+//! as one shard covering the whole snapshot. All parsing — v1 included —
 //! is bounds-checked: truncated or hostile input returns
 //! [`Error::Corrupt`], never panics.
 
 use crate::error::{Error, Result};
-use crate::snapshot::{CompressedField, CompressedSnapshot};
+use crate::exec::ExecCtx;
+use crate::snapshot::{CompressedField, CompressedSnapshot, Snapshot};
 use crate::util::crc32::crc32;
 use crate::util::varint::{get_uvarint, put_uvarint};
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
-/// Magic of the current (v2) archive format.
+/// Magic of the sharded, seekable (v3) archive format.
+pub const MAGIC_V3: &[u8; 8] = b"NBLCARC3";
+/// Magic of the single-record (v2) archive format.
 pub const MAGIC_V2: &[u8; 8] = b"NBLCARC2";
 /// Magic of the legacy (v1) bundle container.
 pub const MAGIC_V1: &[u8; 8] = b"NBLCBNDL";
-/// Format version written by [`write`].
+/// Trailing magic of a v3 archive (the seek anchor).
+pub const MAGIC_TAIL: &[u8; 8] = b"NBLCEND3";
+/// Format version written by [`write`] (single-record path).
 pub const FORMAT_VERSION: u32 = 2;
+/// Format version written by [`ShardWriter`].
+pub const FORMAT_VERSION_V3: u32 = 3;
+
+/// Per-record marker preceding each shard.
+const SHARD_MARKER: &[u8; 4] = b"SHRD";
+/// Footer marker preceding the shard index.
+const FOOTER_MARKER: &[u8; 4] = b"FIDX";
 
 /// Caps against hostile headers (far above anything we write).
 const MAX_STR_LEN: usize = 4096;
 const MAX_FIELDS: usize = 4096;
 const MAX_PARTICLES: u64 = 1 << 40;
+const MAX_SHARDS: usize = 1 << 20;
 
 /// A decoded archive: the bundle plus its self-description.
 #[derive(Clone, Debug)]
@@ -143,8 +198,12 @@ pub fn read_bytes(bytes: &[u8]) -> Result<Archive> {
     match &bytes[..8] {
         m if m == MAGIC_V2 => read_v2(bytes),
         m if m == MAGIC_V1 => read_v1(bytes),
+        m if m == MAGIC_V3 => Err(Error::Format {
+            expected: "NBLCARC2 or NBLCBNDL single-record archive".into(),
+            found: "NBLCARC3 sharded archive (open it with ShardReader)".into(),
+        }),
         _ => Err(Error::Format {
-            expected: "NBLCARC2 or NBLCBNDL".into(),
+            expected: "NBLCARC3, NBLCARC2 or NBLCBNDL".into(),
             found: "bad magic".into(),
         }),
     }
@@ -178,6 +237,36 @@ fn take_string(bytes: &[u8], pos: &mut usize, what: &str) -> Result<String> {
     String::from_utf8(raw.to_vec()).map_err(|_| Error::corrupt(format!("{what} is not utf8")))
 }
 
+/// Parse one CRC-protected field stream — the per-field wire format
+/// shared by v2 archives and v3 shard records (name, n, len, CRC over
+/// header+payload, payload). `i` is the stream's ordinal, for errors.
+fn parse_field_stream(bytes: &[u8], pos: &mut usize, i: u64) -> Result<CompressedField> {
+    let header_start = *pos;
+    let name = take_string(bytes, pos, "field name")?;
+    let fn_ = get_uvarint(bytes, pos)?;
+    if fn_ > MAX_PARTICLES * 6 {
+        return Err(Error::corrupt("implausible field element count"));
+    }
+    let len = get_uvarint(bytes, pos)?;
+    if len > (bytes.len() - *pos) as u64 {
+        return Err(Error::corrupt(format!("field {i} payload truncated")));
+    }
+    let header_crc = crc32(&bytes[header_start..*pos]);
+    let stored = u32::from_le_bytes(take(bytes, pos, 4, "field crc")?.try_into().unwrap());
+    let payload = take(bytes, pos, len as usize, "field payload")?;
+    let actual = crate::util::crc32::update(header_crc, payload);
+    if stored != actual {
+        return Err(Error::corrupt(format!(
+            "field '{name}' checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+        )));
+    }
+    Ok(CompressedField {
+        name,
+        n: fn_ as usize,
+        bytes: payload.to_vec(),
+    })
+}
+
 fn read_v2(bytes: &[u8]) -> Result<Archive> {
     let mut pos = 8usize;
     let version = u32::from_le_bytes(take(bytes, &mut pos, 4, "version")?.try_into().unwrap());
@@ -207,31 +296,7 @@ fn read_v2(bytes: &[u8]) -> Result<Archive> {
     }
     let mut fields = Vec::with_capacity(n_fields as usize);
     for i in 0..n_fields {
-        let header_start = pos;
-        let name = take_string(bytes, &mut pos, "field name")?;
-        let fn_ = get_uvarint(bytes, &mut pos)?;
-        if fn_ > MAX_PARTICLES * 6 {
-            return Err(Error::corrupt("implausible field element count"));
-        }
-        let len = get_uvarint(bytes, &mut pos)?;
-        if len > (bytes.len() - pos) as u64 {
-            return Err(Error::corrupt(format!("field {i} payload truncated")));
-        }
-        let header_crc = crc32(&bytes[header_start..pos]);
-        let stored =
-            u32::from_le_bytes(take(bytes, &mut pos, 4, "field crc")?.try_into().unwrap());
-        let payload = take(bytes, &mut pos, len as usize, "field payload")?;
-        let actual = crate::util::crc32::update(header_crc, payload);
-        if stored != actual {
-            return Err(Error::corrupt(format!(
-                "field '{name}' checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
-            )));
-        }
-        fields.push(CompressedField {
-            name,
-            n: fn_ as usize,
-            bytes: payload.to_vec(),
-        });
+        fields.push(parse_field_stream(bytes, &mut pos, i)?);
     }
     if pos != bytes.len() {
         return Err(Error::corrupt("trailing garbage after archive payload"));
@@ -289,6 +354,676 @@ fn read_v1(bytes: &[u8]) -> Result<Archive> {
             fields,
             n: n as usize,
         },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// v3: sharded, seekable archives
+// ---------------------------------------------------------------------------
+
+/// One shard's entry in the v3 footer index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// First particle index (inclusive).
+    pub start: u64,
+    /// One past the last particle index.
+    pub end: u64,
+    /// Byte offset of the shard record (its `SHRD` marker) in the file.
+    pub offset: u64,
+    /// Byte length of the whole shard record.
+    pub len: u64,
+    /// Compressed payload bytes (sum of the record's field streams).
+    pub bytes_out: u64,
+    /// Compression cost counter (nanoseconds) recorded by the writer —
+    /// the input to cost-based shard rebalancing.
+    pub cost_nanos: u64,
+}
+
+impl ShardEntry {
+    /// Particle count of this shard.
+    pub fn particles(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// Uncompressed bytes this shard covers.
+    pub fn original_bytes(&self) -> u64 {
+        self.particles() * crate::snapshot::PARTICLE_BYTES as u64
+    }
+}
+
+/// The decoded v3 footer: snapshot-level metadata plus the shard table
+/// in logical (particle-range) order.
+#[derive(Clone, Debug)]
+pub struct ShardIndex {
+    /// Canonical codec spec for every shard.
+    pub spec: String,
+    /// Relative error bound used for every shard.
+    pub eb_rel: f64,
+    /// Total particle count across all shards.
+    pub n: u64,
+    /// Shard table, sorted by `start` (the explicit logical order, no
+    /// matter in which order the records were streamed out).
+    pub entries: Vec<ShardEntry>,
+    /// CRC-32 of every byte before the footer marker.
+    pub file_crc: u32,
+}
+
+impl ShardIndex {
+    /// Total compressed payload bytes across all shards.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes_out).sum()
+    }
+
+    /// Total uncompressed bytes the archive covers.
+    pub fn original_bytes(&self) -> u64 {
+        self.n * crate::snapshot::PARTICLE_BYTES as u64
+    }
+}
+
+/// Streaming v3 archive writer: records are appended in whatever order
+/// [`Self::write_shard`] is called (completion order in the pipeline);
+/// [`Self::finish`] sorts the index into logical order, validates that
+/// the shards partition `0..n` contiguously, and writes the seekable
+/// footer. No shard payload is ever re-buffered or rewritten.
+pub struct ShardWriter {
+    w: std::io::BufWriter<std::fs::File>,
+    offset: u64,
+    crc: u32,
+    spec: String,
+    eb_rel: f64,
+    entries: Vec<ShardEntry>,
+}
+
+impl ShardWriter {
+    /// Create the archive file and write the v3 header.
+    pub fn create(path: &Path, spec: &str, eb_rel: f64) -> Result<ShardWriter> {
+        if spec.is_empty() || spec.len() > MAX_STR_LEN {
+            return Err(Error::invalid("archive codec spec empty or too long"));
+        }
+        let mut head = Vec::with_capacity(64 + spec.len());
+        head.extend_from_slice(MAGIC_V3);
+        head.extend_from_slice(&FORMAT_VERSION_V3.to_le_bytes());
+        put_uvarint(&mut head, spec.len() as u64);
+        head.extend_from_slice(spec.as_bytes());
+        head.extend_from_slice(&eb_rel.to_le_bytes());
+        let head_crc = crc32(&head);
+        head.extend_from_slice(&head_crc.to_le_bytes());
+        let mut sw = ShardWriter {
+            w: std::io::BufWriter::new(std::fs::File::create(path)?),
+            offset: 0,
+            crc: 0,
+            spec: spec.to_string(),
+            eb_rel,
+            entries: Vec::new(),
+        };
+        sw.emit(&head)?;
+        Ok(sw)
+    }
+
+    /// Write bytes, tracking the file offset and the running whole-file
+    /// CRC the footer will pin.
+    fn emit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.crc = crate::util::crc32::update(self.crc, bytes);
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Append one compressed shard covering particles `[start, end)`.
+    /// Shards may arrive in any order; `cost_nanos` is the shard's
+    /// compression time, recorded in the footer for rebalancing.
+    pub fn write_shard(
+        &mut self,
+        start: usize,
+        end: usize,
+        bundle: &CompressedSnapshot,
+        cost_nanos: u64,
+    ) -> Result<()> {
+        if end < start || end as u64 > MAX_PARTICLES {
+            return Err(Error::invalid("shard particle range is invalid"));
+        }
+        if bundle.n != end - start {
+            return Err(Error::invalid(format!(
+                "bundle holds {} particles but the shard range is {start}..{end}",
+                bundle.n
+            )));
+        }
+        if bundle.fields.len() > MAX_FIELDS {
+            return Err(Error::invalid("shard has too many field streams"));
+        }
+        if self.entries.len() >= MAX_SHARDS {
+            return Err(Error::invalid("too many shards in archive"));
+        }
+        let offset = self.offset;
+        let mut head = Vec::with_capacity(16);
+        head.extend_from_slice(SHARD_MARKER);
+        put_uvarint(&mut head, start as u64);
+        put_uvarint(&mut head, end as u64);
+        put_uvarint(&mut head, bundle.fields.len() as u64);
+        self.emit(&head)?;
+        let mut bytes_out = 0u64;
+        for f in &bundle.fields {
+            let fh = encode_field_header(f)?;
+            let crc = field_crc(&fh, &f.bytes);
+            self.emit(&fh)?;
+            self.emit(&crc.to_le_bytes())?;
+            self.emit(&f.bytes)?;
+            bytes_out += f.bytes.len() as u64;
+        }
+        self.entries.push(ShardEntry {
+            start: start as u64,
+            end: end as u64,
+            offset,
+            len: self.offset - offset,
+            bytes_out,
+            cost_nanos,
+        });
+        Ok(())
+    }
+
+    /// Validate shard coverage, write the seekable footer, and flush.
+    /// Returns the index that was written.
+    pub fn finish(mut self) -> Result<ShardIndex> {
+        if self.entries.is_empty() {
+            return Err(Error::invalid("a v3 archive needs at least one shard"));
+        }
+        self.entries.sort_by_key(|e| (e.start, e.end));
+        let n = self.entries.last().unwrap().end;
+        let ranges: Vec<(u64, u64)> = self.entries.iter().map(|e| (e.start, e.end)).collect();
+        crate::coordinator::shard::check_partition(&ranges, n)
+            .map_err(|m| Error::invalid(format!("shards do not partition the snapshot: {m}")))?;
+        let tail = encode_footer_tail(n, &self.entries, self.crc);
+        self.w.write_all(&tail)?;
+        self.w.flush()?;
+        Ok(ShardIndex {
+            spec: self.spec,
+            eb_rel: self.eb_rel,
+            n,
+            entries: self.entries,
+            file_crc: self.crc,
+        })
+    }
+}
+
+/// Encode everything after the last shard record: footer, footer CRC,
+/// footer length, tail magic.
+fn encode_footer_tail(n: u64, entries: &[ShardEntry], file_crc: u32) -> Vec<u8> {
+    let mut f = Vec::with_capacity(32 + entries.len() * 24);
+    f.extend_from_slice(FOOTER_MARKER);
+    put_uvarint(&mut f, n);
+    put_uvarint(&mut f, entries.len() as u64);
+    for e in entries {
+        put_uvarint(&mut f, e.start);
+        put_uvarint(&mut f, e.end);
+        put_uvarint(&mut f, e.offset);
+        put_uvarint(&mut f, e.len);
+        put_uvarint(&mut f, e.bytes_out);
+        put_uvarint(&mut f, e.cost_nanos);
+    }
+    f.extend_from_slice(&file_crc.to_le_bytes());
+    let foot_crc = crc32(&f);
+    f.extend_from_slice(&foot_crc.to_le_bytes());
+    let foot_len = f.len() as u64;
+    f.extend_from_slice(&foot_len.to_le_bytes());
+    f.extend_from_slice(MAGIC_TAIL);
+    f
+}
+
+/// Seekable archive reader for all format versions. v3 archives are
+/// opened by footer alone (no payload is read until
+/// [`Self::read_shard`]); v1/v2 single-record archives are loaded fully
+/// and presented as one shard covering the whole snapshot, so every
+/// consumer can be written against the sharded API.
+pub struct ShardReader {
+    path: PathBuf,
+    version: u32,
+    index: ShardIndex,
+    /// Fully-loaded bundle for v1/v2 archives (one logical shard).
+    legacy: Option<CompressedSnapshot>,
+    /// Byte offset where the footer starts (records end here).
+    data_end: u64,
+}
+
+impl ShardReader {
+    /// Open an archive file of any supported version.
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let mut magic = [0u8; 8];
+        {
+            let mut file = std::fs::File::open(path)?;
+            file.read_exact(&mut magic)
+                .map_err(|_| Error::corrupt("archive shorter than its magic"))?;
+        }
+        if &magic == MAGIC_V3 {
+            return Self::open_v3(path);
+        }
+        // v1/v2: the existing whole-file reader validates everything.
+        let arch = read(path)?;
+        let file_len = std::fs::metadata(path)?.len();
+        let n = arch.bundle.n as u64;
+        let bytes_out = arch.bundle.compressed_bytes() as u64;
+        Ok(ShardReader {
+            path: path.to_path_buf(),
+            version: arch.version,
+            index: ShardIndex {
+                spec: arch.spec,
+                eb_rel: arch.bundle.eb_rel,
+                n,
+                entries: vec![ShardEntry {
+                    start: 0,
+                    end: n,
+                    offset: 0,
+                    len: file_len,
+                    bytes_out,
+                    cost_nanos: 0,
+                }],
+                file_crc: 0,
+            },
+            legacy: Some(arch.bundle),
+            data_end: file_len,
+        })
+    }
+
+    fn open_v3(path: &Path) -> Result<ShardReader> {
+        let mut file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        // Smallest possible v3 file: minimal header (26) + minimal
+        // record (7) + minimal footer (14) + 16-byte tail.
+        if file_len < 26 + 7 + 14 + 16 {
+            return Err(Error::corrupt("v3 archive shorter than its fixed framing"));
+        }
+        file.seek(SeekFrom::End(-16))?;
+        let mut tail = [0u8; 16];
+        file.read_exact(&mut tail)?;
+        if &tail[8..16] != MAGIC_TAIL {
+            return Err(Error::corrupt("v3 tail magic missing (truncated archive?)"));
+        }
+        let foot_len = u64::from_le_bytes(tail[0..8].try_into().unwrap());
+        if foot_len < 14 || foot_len > file_len - 16 - 26 {
+            return Err(Error::corrupt("implausible v3 footer length"));
+        }
+        let data_end = file_len - 16 - foot_len;
+        file.seek(SeekFrom::Start(data_end))?;
+        let mut foot = vec![0u8; foot_len as usize];
+        file.read_exact(&mut foot)?;
+        let fl = foot.len();
+        let stored_fcrc = u32::from_le_bytes(foot[fl - 4..].try_into().unwrap());
+        let actual_fcrc = crc32(&foot[..fl - 4]);
+        if stored_fcrc != actual_fcrc {
+            return Err(Error::corrupt(format!(
+                "footer checksum mismatch (stored {stored_fcrc:#010x}, computed {actual_fcrc:#010x})"
+            )));
+        }
+        if &foot[..4] != FOOTER_MARKER {
+            return Err(Error::corrupt("v3 footer marker missing"));
+        }
+        let mut pos = 4usize;
+        let n = get_uvarint(&foot, &mut pos)?;
+        if n > MAX_PARTICLES {
+            return Err(Error::corrupt("implausible particle count"));
+        }
+        let k = get_uvarint(&foot, &mut pos)?;
+        if k == 0 || k > MAX_SHARDS as u64 {
+            return Err(Error::corrupt("implausible shard count"));
+        }
+        let mut entries = Vec::with_capacity(k as usize);
+        for i in 0..k {
+            let start = get_uvarint(&foot, &mut pos)?;
+            let end = get_uvarint(&foot, &mut pos)?;
+            let offset = get_uvarint(&foot, &mut pos)?;
+            let len = get_uvarint(&foot, &mut pos)?;
+            let bytes_out = get_uvarint(&foot, &mut pos)?;
+            let cost_nanos = get_uvarint(&foot, &mut pos)?;
+            if bytes_out > len {
+                return Err(Error::corrupt(format!("shard {i} payload larger than its record")));
+            }
+            entries.push(ShardEntry {
+                start,
+                end,
+                offset,
+                len,
+                bytes_out,
+                cost_nanos,
+            });
+        }
+        if pos != fl - 8 {
+            return Err(Error::corrupt("trailing garbage in v3 footer"));
+        }
+        let file_crc = u32::from_le_bytes(foot[fl - 8..fl - 4].try_into().unwrap());
+
+        // Header (start of file): spec + error bound, CRC-protected.
+        file.seek(SeekFrom::Start(0))?;
+        let head_cap = (data_end.min(26 + 10 + MAX_STR_LEN as u64)) as usize;
+        let mut head = vec![0u8; head_cap];
+        file.read_exact(&mut head)?;
+        let mut hpos = 8usize; // magic checked by open()
+        let version =
+            u32::from_le_bytes(take(&head, &mut hpos, 4, "version")?.try_into().unwrap());
+        if version != FORMAT_VERSION_V3 {
+            return Err(Error::Format {
+                expected: format!("archive v{FORMAT_VERSION_V3}"),
+                found: format!("archive v{version}"),
+            });
+        }
+        let spec = take_string(&head, &mut hpos, "codec spec")?;
+        let eb_rel =
+            f64::from_le_bytes(take(&head, &mut hpos, 8, "error bound")?.try_into().unwrap());
+        let stored_hcrc =
+            u32::from_le_bytes(take(&head, &mut hpos, 4, "header crc")?.try_into().unwrap());
+        let actual_hcrc = crc32(&head[..hpos - 4]);
+        if stored_hcrc != actual_hcrc {
+            return Err(Error::corrupt("v3 header checksum mismatch"));
+        }
+        let header_len = hpos as u64;
+
+        // The shards must partition 0..n contiguously in footer order
+        // (the same invariant the writer enforced), and every record
+        // must lie inside the data region.
+        let ranges: Vec<(u64, u64)> = entries.iter().map(|e| (e.start, e.end)).collect();
+        crate::coordinator::shard::check_partition(&ranges, n)
+            .map_err(|m| Error::corrupt(format!("shard table invalid: {m}")))?;
+        for (i, e) in entries.iter().enumerate() {
+            let in_data = e.offset >= header_len
+                && e.len >= 7
+                && e.offset
+                    .checked_add(e.len)
+                    .is_some_and(|rec_end| rec_end <= data_end);
+            if !in_data {
+                return Err(Error::corrupt(format!("shard {i} record outside the data region")));
+            }
+        }
+        Ok(ShardReader {
+            path: path.to_path_buf(),
+            version: FORMAT_VERSION_V3,
+            index: ShardIndex {
+                spec,
+                eb_rel,
+                n,
+                entries,
+                file_crc,
+            },
+            legacy: None,
+            data_end,
+        })
+    }
+
+    /// Format version the file carried (1, 2, or 3).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Canonical codec spec stored in the archive.
+    pub fn spec(&self) -> &str {
+        &self.index.spec
+    }
+
+    /// Relative error bound the archive was compressed under.
+    pub fn eb_rel(&self) -> f64 {
+        self.index.eb_rel
+    }
+
+    /// Total particle count.
+    pub fn n(&self) -> u64 {
+        self.index.n
+    }
+
+    /// The shard table (logical order).
+    pub fn index(&self) -> &ShardIndex {
+        &self.index
+    }
+
+    /// The fully-loaded bundle of a v1/v2 single-record archive
+    /// (`None` for sharded v3 archives).
+    pub fn single_record(&self) -> Option<&CompressedSnapshot> {
+        self.legacy.as_ref()
+    }
+
+    /// Indices of the non-empty shards overlapping the particle range
+    /// `[a, b)` (a zero-length shard contains no particles and is never
+    /// part of a partial read).
+    pub fn shards_for_range(&self, a: u64, b: u64) -> Vec<usize> {
+        self.index
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.start < e.end && e.start < b && e.end > a)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Fetch and fully validate one shard record (CRC-checked). Takes
+    /// `&self` — concurrent callers each use their own file handle, so
+    /// shard decodes can fan out across threads.
+    pub fn read_shard(&self, i: usize) -> Result<CompressedSnapshot> {
+        let e = self
+            .index
+            .entries
+            .get(i)
+            .ok_or_else(|| Error::invalid(format!("shard index {i} out of range")))?;
+        if let Some(bundle) = &self.legacy {
+            return Ok(bundle.clone());
+        }
+        let mut file = std::fs::File::open(&self.path)?;
+        file.seek(SeekFrom::Start(e.offset))?;
+        let mut rec = vec![0u8; e.len as usize];
+        file.read_exact(&mut rec)
+            .map_err(|_| Error::corrupt(format!("shard {i} record truncated")))?;
+        parse_shard_record(&rec, e, &self.index.spec, self.index.eb_rel)
+    }
+
+    /// Stream the whole pre-footer region and compare against the
+    /// footer's whole-file CRC. v2 archives return `Ok` without
+    /// re-reading (their header + per-field CRCs were already verified
+    /// at open time); v1 bundles carry no checksums at all, so asking
+    /// to verify one is an error rather than a false guarantee.
+    pub fn verify_file_crc(&self) -> Result<()> {
+        if self.legacy.is_some() {
+            return if self.version == 1 {
+                Err(Error::invalid(
+                    "v1 bundles carry no checksums; nothing to verify",
+                ))
+            } else {
+                Ok(())
+            };
+        }
+        let mut file = std::fs::File::open(&self.path)?;
+        let mut remaining = self.data_end;
+        let mut crc = 0u32;
+        let mut buf = vec![0u8; 1 << 16];
+        while remaining > 0 {
+            let k = remaining.min(buf.len() as u64) as usize;
+            file.read_exact(&mut buf[..k])
+                .map_err(|_| Error::corrupt("archive truncated during CRC verification"))?;
+            crc = crate::util::crc32::update(crc, &buf[..k]);
+            remaining -= k as u64;
+        }
+        if crc != self.index.file_crc {
+            return Err(Error::corrupt(format!(
+                "whole-file checksum mismatch (stored {:#010x}, computed {crc:#010x})",
+                self.index.file_crc
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Parse one shard record's bytes against its footer entry.
+fn parse_shard_record(
+    rec: &[u8],
+    e: &ShardEntry,
+    spec: &str,
+    eb_rel: f64,
+) -> Result<CompressedSnapshot> {
+    if rec.len() < 4 || &rec[..4] != SHARD_MARKER {
+        return Err(Error::corrupt("shard record marker missing"));
+    }
+    let mut pos = 4usize;
+    let start = get_uvarint(rec, &mut pos)?;
+    let end = get_uvarint(rec, &mut pos)?;
+    if start != e.start || end != e.end {
+        return Err(Error::corrupt(format!(
+            "shard record range {start}..{end} does not match footer {}..{}",
+            e.start, e.end
+        )));
+    }
+    let n_fields = get_uvarint(rec, &mut pos)?;
+    if n_fields > MAX_FIELDS as u64 {
+        return Err(Error::corrupt("implausible field count in shard record"));
+    }
+    let mut fields = Vec::with_capacity(n_fields as usize);
+    for i in 0..n_fields {
+        fields.push(parse_field_stream(rec, &mut pos, i)?);
+    }
+    if pos != rec.len() {
+        return Err(Error::corrupt("trailing garbage in shard record"));
+    }
+    let compressor = spec.split(':').next().unwrap_or(spec).to_string();
+    Ok(CompressedSnapshot {
+        compressor,
+        eb_rel,
+        fields,
+        n: (e.end - e.start) as usize,
+    })
+}
+
+/// Result of [`decode_shards`].
+#[derive(Debug)]
+pub struct DecodedRange {
+    /// The decoded particles, shards stitched in logical order.
+    pub snapshot: Snapshot,
+    /// How many shard records were fetched and decoded (the
+    /// partial-read guarantee: only shards overlapping the range).
+    pub shards_touched: usize,
+    /// First particle index covered by `snapshot`.
+    pub particle_start: u64,
+    /// One past the last particle index covered by `snapshot`.
+    pub particle_end: u64,
+    /// Whether `snapshot` was trimmed exactly to the requested range
+    /// (always true for order-preserving codecs; reordering codecs
+    /// return whole shards, since particle identity inside a shard is
+    /// permuted).
+    pub exact: bool,
+    /// Whether the codec reorders particles within each shard.
+    pub reordered: bool,
+}
+
+/// Decode an archive (fully, or any particle range `[a, b)`) by fanning
+/// the per-shard decodes across the context's threads — the decode-side
+/// counterpart of the pipeline's parallel compression. `spec` is
+/// usually [`ShardReader::spec`], but can be overridden (the CLI's
+/// `--method`). Partial reads fetch only the shards overlapping the
+/// range; order-preserving codecs are trimmed exactly to `[a, b)`,
+/// reordering (RX-family) codecs return the whole overlapping shards
+/// stitched together, each internally in its deterministic sort order.
+pub fn decode_shards(
+    reader: &ShardReader,
+    spec: &str,
+    range: Option<(u64, u64)>,
+    ctx: &ExecCtx,
+) -> Result<DecodedRange> {
+    let n = reader.n();
+    let (a, b, partial) = match range {
+        None => (0, n, false),
+        Some((a, b)) => {
+            if a >= b {
+                return Err(Error::invalid("particle range is empty"));
+            }
+            if a >= n {
+                return Err(Error::invalid(format!(
+                    "particle range starts at {a} but the archive holds {n} particles"
+                )));
+            }
+            (a, b.min(n), true)
+        }
+    };
+    // Validate the spec once; the factory hands out cheap pre-validated
+    // builders for the per-shard fan-out (compressors are not `Sync`).
+    let factory = crate::compressors::registry::factory(spec)?;
+    let reordered = factory().reorders();
+    // A full decode covers every shard — including empty ones (and the
+    // n == 0 archive), which an overlap filter would drop.
+    let touched: Vec<usize> = if partial {
+        reader.shards_for_range(a, b)
+    } else {
+        (0..reader.index().entries.len()).collect()
+    };
+    if touched.is_empty() {
+        return Err(Error::invalid("particle range overlaps no shards"));
+    }
+    let entries = &reader.index().entries;
+    let cover_start = entries[touched[0]].start;
+    let cover_end = entries[*touched.last().unwrap()].end;
+    let parts = if let Some(bundle) = reader.single_record() {
+        // v1/v2: the bundle already lives in memory — decode it in
+        // place (no clone) with the whole thread budget.
+        let part = factory().decompress_with(ctx, bundle)?;
+        if part.len() as u64 != n {
+            return Err(Error::corrupt(format!(
+                "archive decoded to {} particles, header says {n}",
+                part.len()
+            )));
+        }
+        vec![part]
+    } else {
+        // Split the budget across the two parallel axes: shards fan out
+        // over `ctx`, and each shard's field-plane decode gets the
+        // remaining threads/shards budget (floor, so the product never
+        // oversubscribes; the whole budget when only one shard
+        // overlaps). Bytes are identical at any split — only scheduling
+        // differs.
+        let per_shard = (ctx.threads() / touched.len()).max(1);
+        let inner = ExecCtx::with_threads(per_shard);
+        ctx.try_par(&touched, |&i| {
+            let comp = factory();
+            let bundle = reader.read_shard(i)?;
+            let part = comp.decompress_with(&inner, &bundle)?;
+            let e = &reader.index().entries[i];
+            if part.len() as u64 != e.end - e.start {
+                return Err(Error::corrupt(format!(
+                    "shard {i} decoded to {} particles, footer says {}",
+                    part.len(),
+                    e.end - e.start
+                )));
+            }
+            Ok(part)
+        })?
+    };
+    // Trim the boundary shards BEFORE stitching, so a partial read only
+    // ever copies ~(b - a) particles, not the whole cover region.
+    let parts = if partial && !reordered {
+        parts
+            .into_iter()
+            .zip(&touched)
+            .map(|(p, &i)| {
+                let e = &reader.index().entries[i];
+                let lo = (a.max(e.start) - e.start) as usize;
+                let hi = (b.min(e.end) - e.start) as usize;
+                if lo == 0 && hi == p.len() {
+                    p
+                } else {
+                    p.slice(lo, hi)
+                }
+            })
+            .collect()
+    } else {
+        parts
+    };
+    let snapshot = if parts.len() == 1 {
+        parts.into_iter().next().unwrap()
+    } else {
+        Snapshot::concat(&parts)?
+    };
+    let (particle_start, particle_end, exact) = if partial && !reordered {
+        (a, b, true)
+    } else {
+        (cover_start, cover_end, cover_start == a && cover_end == b)
+    };
+    Ok(DecodedRange {
+        snapshot,
+        shards_touched: touched.len(),
+        particle_start,
+        particle_end,
+        exact,
+        reordered,
     })
 }
 
@@ -493,5 +1228,329 @@ mod tests {
         assert_eq!(arch.spec, "sz_lv_rx:ignore=0,segment=4096,source=coords");
         assert_eq!(arch.bundle.compressor, "sz_lv_rx");
         assert!(registry::build_str(&arch.spec).is_ok());
+    }
+
+    // ------------------------------------------------------------------
+    // v3: sharded, seekable archives
+    // ------------------------------------------------------------------
+
+    const V3_SPEC: &str = "sz_lv:lossless=false,radius=32768";
+    const V3_EB: f64 = 1e-4;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nblc_v3_{tag}_{}.nblc", std::process::id()))
+    }
+
+    /// Write a v3 archive with `shards` shards of a small MD snapshot,
+    /// records streamed in REVERSE particle order (the footer must
+    /// restore the logical order).
+    fn v3_file(tag: &str, n: usize, shards: usize) -> (Snapshot, std::path::PathBuf, ShardIndex) {
+        let s = generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        });
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let path = tmp_path(tag);
+        let mut w = ShardWriter::create(&path, V3_SPEC, V3_EB).unwrap();
+        let mut layout = crate::coordinator::shard::split_even(s.len(), shards);
+        layout.reverse();
+        for sh in &layout {
+            let b = comp.compress(&s.slice(sh.start, sh.end), V3_EB).unwrap();
+            w.write_shard(sh.start, sh.end, &b, 1_000 + sh.id as u64).unwrap();
+        }
+        let index = w.finish().unwrap();
+        (s, path, index)
+    }
+
+    #[test]
+    fn v3_roundtrip_restores_logical_order() {
+        let (s, path, index) = v3_file("roundtrip", 3_000, 4);
+        assert_eq!(index.n, 3_000);
+        assert_eq!(index.entries.len(), 4);
+        // Records were streamed in reverse, the index is logical.
+        for w in index.entries.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+            assert!(w[0].offset > w[1].offset, "reverse arrival preserved on disk");
+        }
+        let reader = ShardReader::open(&path).unwrap();
+        assert_eq!(reader.version(), FORMAT_VERSION_V3);
+        assert_eq!(reader.spec(), V3_SPEC);
+        assert_eq!(reader.eb_rel(), V3_EB);
+        assert_eq!(reader.n(), 3_000);
+        assert!(reader.single_record().is_none());
+        for (a, b) in reader.index().entries.iter().zip(&index.entries) {
+            assert_eq!(a, b);
+        }
+        reader.verify_file_crc().unwrap();
+        // Full parallel decode matches a per-shard sequential decode.
+        let ctx = ExecCtx::with_threads(4);
+        let dec = decode_shards(&reader, reader.spec(), None, &ctx).unwrap();
+        assert_eq!(dec.shards_touched, 4);
+        assert!(dec.exact && !dec.reordered);
+        assert_eq!(dec.snapshot.len(), s.len());
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        for (li, e) in index.entries.iter().enumerate() {
+            let sub = s.slice(e.start as usize, e.end as usize);
+            let got = dec.snapshot.slice(e.start as usize, e.end as usize);
+            crate::snapshot::verify_bounds(&sub, &got, V3_EB).unwrap();
+            // Bitwise: the stitched decode equals decompressing the
+            // shard's record alone.
+            let alone = comp.decompress(&reader.read_shard(li).unwrap()).unwrap();
+            assert_eq!(alone.len(), e.particles() as usize);
+            for f in 0..6 {
+                assert_eq!(got.fields[f], alone.fields[f], "shard {li} field {f}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_partial_reads_touch_only_overlapping_shards() {
+        let (_s, path, _) = v3_file("partial", 4_000, 4);
+        let reader = ShardReader::open(&path).unwrap();
+        let ctx = ExecCtx::sequential();
+        // Window inside shard 1 ([1000, 2000)).
+        let dec = decode_shards(&reader, reader.spec(), Some((1_200, 1_700)), &ctx).unwrap();
+        assert_eq!(dec.shards_touched, 1);
+        assert!(dec.exact);
+        assert_eq!((dec.particle_start, dec.particle_end), (1_200, 1_700));
+        assert_eq!(dec.snapshot.len(), 500);
+        // Trimmed values still come from the right particles: compare
+        // against a decode of the whole shard.
+        let whole = decode_shards(&reader, reader.spec(), Some((1_000, 2_000)), &ctx).unwrap();
+        for f in 0..6 {
+            assert_eq!(
+                dec.snapshot.fields[f],
+                whole.snapshot.fields[f][200..700].to_vec()
+            );
+        }
+        // Window spanning a boundary touches two shards.
+        let two = decode_shards(&reader, reader.spec(), Some((900, 1_100)), &ctx).unwrap();
+        assert_eq!(two.shards_touched, 2);
+        assert_eq!(two.snapshot.len(), 200);
+        // End beyond n clamps; empty/out-of-range ranges error.
+        let tail = decode_shards(&reader, reader.spec(), Some((3_900, 10_000)), &ctx).unwrap();
+        assert_eq!(tail.snapshot.len(), 100);
+        assert!(decode_shards(&reader, reader.spec(), Some((5, 5)), &ctx).is_err());
+        assert!(decode_shards(&reader, reader.spec(), Some((4_000, 4_001)), &ctx).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_empty_snapshot_roundtrips() {
+        // Codecs support zero-particle snapshots; the sharded container
+        // (and its full-decode path) must too.
+        let s = Snapshot::default();
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let b = comp.compress(&s, V3_EB).unwrap();
+        let p = tmp_path("empty");
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.write_shard(0, 0, &b, 0).unwrap();
+        w.finish().unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        assert_eq!(reader.n(), 0);
+        let dec = decode_shards(&reader, reader.spec(), None, &ExecCtx::sequential()).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(dec.snapshot.len(), 0);
+        assert_eq!(dec.shards_touched, 1);
+        assert!(dec.exact);
+    }
+
+    #[test]
+    fn v3_truncation_never_panics() {
+        let (_, path, _) = v3_file("trunc", 2_000, 2);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let cut_path = tmp_path("trunc_cut");
+        let len = bytes.len();
+        for cut in (0..64)
+            .chain((64..len).step_by(257))
+            .chain(len.saturating_sub(40)..len)
+        {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            assert!(ShardReader::open(&cut_path).is_err(), "cut at {cut}");
+        }
+        std::fs::remove_file(&cut_path).ok();
+    }
+
+    #[test]
+    fn v3_bit_flips_detected() {
+        let (_, path, index) = v3_file("flip", 2_000, 2);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // Flip one byte deep inside the first (logical) record payload:
+        // the footer still parses, but the shard read and the whole-file
+        // CRC must both fail.
+        let e = &index.entries[0];
+        let mut bad = bytes.clone();
+        bad[(e.offset + e.len / 2) as usize] ^= 0x20;
+        let p = tmp_path("flip_payload");
+        std::fs::write(&p, &bad).unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        let logical = index
+            .entries
+            .iter()
+            .position(|x| x.start == e.start)
+            .unwrap();
+        assert!(reader.read_shard(logical).is_err(), "payload flip undetected");
+        assert!(reader.verify_file_crc().is_err(), "file CRC missed the flip");
+        std::fs::remove_file(&p).ok();
+
+        // Flip a byte inside the footer: open itself must fail.
+        let mut bad = bytes.clone();
+        let at = bytes.len() - 24; // inside the entry table / file_crc
+        bad[at] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(ShardReader::open(&p).is_err(), "footer flip undetected");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_hostile_footers_rejected() {
+        let (_, path, index) = v3_file("hostile", 2_000, 2);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // Everything before the genuine footer.
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        let data_end = bytes.len() - 16 - foot_len as usize;
+        let data = &bytes[..data_end];
+        let file_crc = crc32(data);
+        let good = index.entries.clone();
+        let e = |start: u64, end: u64, i: usize| ShardEntry {
+            start,
+            end,
+            ..good[i].clone()
+        };
+
+        let hostile: Vec<(&str, u64, Vec<ShardEntry>)> = vec![
+            ("overlap", 2_000, vec![e(0, 1_200, 0), e(1_000, 2_000, 1)]),
+            ("gap", 2_000, vec![e(0, 800, 0), e(1_000, 2_000, 1)]),
+            ("not from zero", 2_000, vec![e(500, 1_000, 0), e(1_000, 2_000, 1)]),
+            ("not to n", 2_000, vec![e(0, 1_000, 0), e(1_000, 1_500, 1)]),
+            ("start>end", 2_000, vec![e(1_000, 0, 0), e(1_000, 2_000, 1)]),
+            (
+                "offset out of bounds",
+                2_000,
+                vec![
+                    ShardEntry {
+                        offset: 1 << 50,
+                        ..good[0].clone()
+                    },
+                    good[1].clone(),
+                ],
+            ),
+            (
+                "len out of bounds",
+                2_000,
+                vec![
+                    ShardEntry {
+                        len: u64::MAX - 8,
+                        ..good[0].clone()
+                    },
+                    good[1].clone(),
+                ],
+            ),
+            (
+                "payload larger than record",
+                2_000,
+                vec![
+                    ShardEntry {
+                        bytes_out: good[0].len + 1,
+                        ..good[0].clone()
+                    },
+                    good[1].clone(),
+                ],
+            ),
+            ("zero shards", 2_000, vec![]),
+        ];
+        let p = tmp_path("hostile_case");
+        for (what, n, entries) in hostile {
+            let mut evil = data.to_vec();
+            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc));
+            std::fs::write(&p, &evil).unwrap();
+            match ShardReader::open(&p) {
+                Err(_) => {}
+                Ok(_) => panic!("hostile footer accepted: {what}"),
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_writer_rejects_bad_input() {
+        let s = generate_md(&MdConfig {
+            n_particles: 1_000,
+            ..Default::default()
+        });
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let b = comp.compress(&s.slice(0, 500), V3_EB).unwrap();
+        let p = tmp_path("badwriter");
+
+        // Range/bundle mismatch.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        assert!(w.write_shard(0, 400, &b, 0).is_err(), "n mismatch");
+        assert!(w.write_shard(500, 400, &b, 0).is_err(), "start > end");
+        // No shards at all.
+        assert!(w.finish().is_err());
+
+        // Gap between shards is caught at finish.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.write_shard(0, 500, &b, 0).unwrap();
+        let b2 = comp.compress(&s.slice(600, 1_000), V3_EB).unwrap();
+        w.write_shard(600, 1_000, &b2, 0).unwrap();
+        assert!(w.finish().is_err(), "gap must be rejected");
+
+        // Empty spec rejected.
+        assert!(ShardWriter::create(&p, "", V3_EB).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_rejected_by_single_record_reader() {
+        let (_, path, _) = v3_file("wrongapi", 1_000, 1);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let err = read_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("ShardReader"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn legacy_archives_open_through_shard_reader() {
+        let (s, b) = bundle();
+        let ctx = ExecCtx::with_threads(2);
+
+        // v2 file.
+        let p = tmp_path("legacy_v2");
+        write(&p, &b, V3_SPEC).unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        assert_eq!(reader.version(), 2);
+        assert_eq!(reader.index().entries.len(), 1);
+        assert_eq!(reader.n() as usize, s.len());
+        assert!(reader.single_record().is_some());
+        reader.verify_file_crc().unwrap(); // no-op for v2, must not error
+        let dec = decode_shards(&reader, reader.spec(), None, &ctx).unwrap();
+        assert_eq!(dec.shards_touched, 1);
+        crate::snapshot::verify_bounds(&s, &dec.snapshot, 1e-4).unwrap();
+        // Partial read of a single-record archive still trims exactly.
+        let part = decode_shards(&reader, reader.spec(), Some((100, 300)), &ctx).unwrap();
+        assert_eq!(part.snapshot.len(), 200);
+        for f in 0..6 {
+            assert_eq!(part.snapshot.fields[f], dec.snapshot.fields[f][100..300].to_vec());
+        }
+        std::fs::remove_file(&p).ok();
+
+        // v1 bytes.
+        let p = tmp_path("legacy_v1");
+        std::fs::write(&p, encode_v1(&b)).unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        assert_eq!(reader.version(), 1);
+        assert_eq!(reader.spec(), "sz_lv");
+        // v1 has no checksums — claiming to verify one would be a lie.
+        assert!(reader.verify_file_crc().is_err());
+        let dec = decode_shards(&reader, reader.spec(), None, &ctx).unwrap();
+        crate::snapshot::verify_bounds(&s, &dec.snapshot, 1e-4).unwrap();
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -67,6 +67,46 @@
 //! via [`compressors::registry::factory`]. `nblc list-codecs` prints
 //! every registered codec with its tunable-parameter schema.
 //!
+//! ## Sharded, seekable archives (v3)
+//!
+//! The in-situ pipeline writes **v3** archives: every shard (particle
+//! range + per-field CRCs + payload) is an independent record, streamed
+//! in completion order; a seekable footer holds the shard table
+//! (offsets, lengths, per-shard cost counters) in logical order. That
+//! buys parallel decompression (shard decodes fan out across an
+//! [`exec::ExecCtx`]) and partial reads that only touch overlapping
+//! shards. [`data::archive::ShardReader`] opens all three format
+//! versions — v1/v2 single-record files present as one shard:
+//!
+//! ```no_run
+//! use nblc::compressors::registry;
+//! use nblc::data::archive::{decode_shards, ShardReader, ShardWriter};
+//! use nblc::exec::ExecCtx;
+//! # use nblc::data::gen_md::{MdConfig, generate_md};
+//! use std::path::Path;
+//!
+//! # let snap = generate_md(&MdConfig { n_particles: 10_000, ..Default::default() });
+//! let spec = registry::canonical("sz_lv").unwrap();
+//! let comp = registry::build_str(&spec).unwrap();
+//! let mut w = ShardWriter::create(Path::new("out.nblc"), &spec, 1e-4).unwrap();
+//! for (start, end) in [(0usize, 5_000), (5_000, 10_000)] {
+//!     let bundle = comp.compress(&snap.slice(start, end), 1e-4).unwrap();
+//!     w.write_shard(start, end, &bundle, 0).unwrap();
+//! }
+//! let index = w.finish().unwrap(); // validates coverage, writes footer
+//! assert_eq!(index.entries.len(), 2);
+//!
+//! let reader = ShardReader::open(Path::new("out.nblc")).unwrap();
+//! // Partial read: decodes only the shards overlapping [2000, 7000).
+//! let part = decode_shards(&reader, reader.spec(), Some((2_000, 7_000)), &ExecCtx::auto()).unwrap();
+//! assert_eq!(part.shards_touched, 2);
+//! ```
+//!
+//! Determinism carries over: the archive's *file* bytes depend on shard
+//! completion order, but the footer's logical order, each shard's
+//! payload, and the decoded snapshot are bit-identical at any worker /
+//! thread count.
+//!
 //! ## Threading model
 //!
 //! Every snapshot compressor is driven by an [`exec::ExecCtx`] — a

@@ -13,9 +13,10 @@
 use nblc::cli::Args;
 use nblc::compressors::registry;
 use nblc::config::{ConfigDoc, PipelineSettings};
-use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink};
+use nblc::coordinator::shard::{rebalance, Shard};
 use nblc::coordinator::{choose_compressor, GpfsModel};
-use nblc::data::archive;
+use nblc::data::archive::{self, decode_shards, ShardReader};
 use nblc::data::io::{read_snapshot, write_snapshot};
 use nblc::data::{generate, DatasetKind};
 use nblc::error::{Error, Result};
@@ -35,7 +36,8 @@ COMMANDS:
   gen         --dataset hacc|amdf --n <count> --seed <u64> --out <file>
   compress    <in.snap> <out.nblc> --method <spec> [--eb 1e-4] [--threads N]
   decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
-  inspect     <in.nblc>
+              [--particles a..b]
+  inspect     <in.nblc> [--verify]
   list-codecs
   analyze     <orig.snap> <recon.snap>
   pipeline    --config <file.toml> [--threads N]
@@ -46,10 +48,16 @@ A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
 Archives are self-describing: `decompress` needs no --method.
 Run `nblc list-codecs` for every codec and tunable parameter.
 
---threads N sets the field-plane engine's thread budget. For compress/
-decompress the default is the NBLC_THREADS env var, else all available
-cores; pipeline defaults to 1 per worker (workers already run in
-parallel) unless the config or --threads says otherwise, with 0 = auto.
+decompress reads v1/v2 single-record archives and sharded v3 archives
+(written by `pipeline` with `output = \"...\"`). For v3, shard decodes
+fan out across --threads, and --particles a..b decodes only the shards
+overlapping that range (seekable partial read). inspect prints the v3
+shard table; --verify additionally streams the whole-file CRC.
+
+--threads N sets the engine's thread budget. For compress/decompress
+the default is the NBLC_THREADS env var, else all available cores;
+pipeline defaults to 1 per worker (workers already run in parallel)
+unless the config or --threads says otherwise, with 0 = auto.
 Compressed bytes are identical at every thread count.
 ";
 
@@ -59,7 +67,9 @@ fn main() {
         print!("{HELP}");
         return;
     }
-    let parsed = match Args::parse(args) {
+    // Boolean switches declared up front so they never swallow a
+    // following positional (e.g. `inspect --verify file.nblc`).
+    let parsed = match Args::parse_with_switches(args, &["verify"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}");
@@ -151,70 +161,135 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--particles a..b` range.
+fn parse_particles(s: &str) -> Result<(u64, u64)> {
+    let err = || Error::invalid(format!("--particles expects 'start..end', got '{s}'"));
+    let (a, b) = s.split_once("..").ok_or_else(err)?;
+    let a: u64 = a.trim().parse().map_err(|_| err())?;
+    let b: u64 = b.trim().parse().map_err(|_| err())?;
+    if a >= b {
+        return Err(Error::invalid(format!("--particles range '{s}' is empty")));
+    }
+    Ok((a, b))
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "threads"])?;
+    args.expect_known(&["method", "threads", "particles"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
-    let arch = archive::read(Path::new(input))?;
+    let reader = ShardReader::open(Path::new(input))?;
     // The archive is self-describing; --method only overrides it.
     let spec = args
         .get("method")
         .map(str::to_string)
-        .unwrap_or_else(|| arch.spec.clone());
+        .unwrap_or_else(|| reader.spec().to_string());
+    let range = match args.get("particles") {
+        Some(s) => Some(parse_particles(s)?),
+        None => None,
+    };
     let ctx = exec_ctx(args)?;
-    let comp = registry::build_str(&spec)?;
     let t = Timer::start();
-    let snap = comp.decompress_with(&ctx, &arch.bundle)?;
-    write_snapshot(&snap, Path::new(output))?;
+    let dec = decode_shards(&reader, &spec, range, &ctx)?;
+    write_snapshot(&dec.snapshot, Path::new(output))?;
     println!(
-        "decompressed {} particles via '{spec}' in {} ({})",
-        snap.len(),
+        "decompressed {} particles [{}..{}] via '{spec}' in {} ({}/{} shards, {}, {} threads)",
+        dec.snapshot.len(),
+        dec.particle_start,
+        dec.particle_end,
         humansize::secs(t.secs()),
-        if comp.reorders() {
-            "R-index particle order"
+        dec.shards_touched,
+        reader.index().entries.len(),
+        if dec.reordered {
+            "R-index particle order per shard"
         } else {
             "original particle order"
-        }
+        },
+        ctx.threads(),
     );
     Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
-    args.expect_known(&[])?;
+    args.expect_known(&["verify"])?;
     let [input] = args.positionals.as_slice() else {
-        return Err(Error::invalid("usage: inspect <in.nblc>"));
+        return Err(Error::invalid("usage: inspect <in.nblc> [--verify]"));
     };
-    let arch = archive::read(Path::new(input))?;
+    let verify = args.has("verify");
+    let reader = ShardReader::open(Path::new(input))?;
+    let idx = reader.index();
+    let orig_bytes = idx.original_bytes();
+    let comp_bytes = idx.compressed_bytes();
+    let ratio = if comp_bytes > 0 {
+        orig_bytes as f64 / comp_bytes as f64
+    } else {
+        f64::INFINITY
+    };
     println!("archive:   {input}");
-    println!("format:    v{}", arch.version);
-    println!("spec:      {}", arch.spec);
-    println!("eb_rel:    {:.3e}", arch.bundle.eb_rel);
-    println!("particles: {}", arch.bundle.n);
+    println!("format:    v{}", reader.version());
+    println!("spec:      {}", idx.spec);
+    println!("eb_rel:    {:.3e}", idx.eb_rel);
+    println!("particles: {}", idx.n);
     println!(
-        "size:      {} -> {} (ratio {:.2}, {:.2} bits/value)",
-        humansize::bytes(arch.bundle.original_bytes() as u64),
-        humansize::bytes(arch.bundle.compressed_bytes() as u64),
-        arch.bundle.compression_ratio(),
-        arch.bundle.bit_rate(),
+        "size:      {} -> {} (ratio {ratio:.2}, {:.2} bits/value)",
+        humansize::bytes(orig_bytes),
+        humansize::bytes(comp_bytes),
+        32.0 / ratio,
     );
-    println!(
-        "integrity: {}",
-        if arch.version >= 2 {
-            "per-field CRC32 verified"
-        } else {
-            "v1 bundle (no checksums)"
-        }
-    );
-    println!("{:>8} {:>12} {:>12} {:>8}", "field", "values", "bytes", "ratio");
-    for f in &arch.bundle.fields {
+    if let Some(bundle) = reader.single_record() {
+        // v1/v2: one record, per-field breakdown.
         println!(
-            "{:>8} {:>12} {:>12} {:>8.2}",
-            f.name,
-            f.n,
-            f.bytes.len(),
-            f.ratio()
+            "integrity: {}",
+            if reader.version() >= 2 {
+                "per-field CRC32 verified"
+            } else {
+                "v1 bundle (no checksums)"
+            }
         );
+        println!("{:>8} {:>12} {:>12} {:>8}", "field", "values", "bytes", "ratio");
+        for f in &bundle.fields {
+            println!(
+                "{:>8} {:>12} {:>12} {:>8.2}",
+                f.name,
+                f.n,
+                f.bytes.len(),
+                f.ratio()
+            );
+        }
+    } else {
+        // v3: seekable shard table from the footer.
+        println!("integrity: footer CRC verified (per-field CRCs checked on read)");
+        println!(
+            "{:>6} {:>17} {:>12} {:>12} {:>8} {:>10}",
+            "shard", "particles", "offset", "bytes", "ratio", "cost_ms"
+        );
+        for (i, e) in idx.entries.iter().enumerate() {
+            let shard_ratio = if e.bytes_out > 0 {
+                e.original_bytes() as f64 / e.bytes_out as f64
+            } else {
+                f64::INFINITY
+            };
+            println!(
+                "{:>6} {:>8}..{:<8} {:>12} {:>12} {:>8.2} {:>10.2}",
+                i,
+                e.start,
+                e.end,
+                e.offset,
+                e.bytes_out,
+                shard_ratio,
+                e.cost_nanos as f64 / 1e6,
+            );
+        }
+    }
+    if verify {
+        match reader.version() {
+            3 => {
+                reader.verify_file_crc()?;
+                println!("whole-file CRC: OK");
+            }
+            2 => println!("whole-file CRC: n/a (v2: header + per-field CRCs verified at open)"),
+            _ => println!("whole-file CRC: n/a (v1 bundles carry no checksums)"),
+        }
     }
     Ok(())
 }
@@ -307,40 +382,84 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             } else {
                 settings.mode
             };
-            mode.spec()
+            // Canonicalize (resolving `mode:` to the concrete codec +
+            // full parameter set) so an archive sink records a spec
+            // that survives future changes to the mode mapping.
+            registry::canonical(&mode.spec())?
         }
     };
 
     let factory = registry::factory(&spec)?;
-    let sink = if settings.sim_procs > 0 {
-        Sink::Model {
-            model: GpfsModel::default(),
-            procs: settings.sim_procs,
+    let make_sink = || {
+        if let Some(out) = &settings.output {
+            Sink::Archive {
+                path: PathBuf::from(out),
+                spec: spec.clone(),
+            }
+        } else if settings.sim_procs > 0 {
+            Sink::Model {
+                model: GpfsModel::default(),
+                procs: settings.sim_procs,
+            }
+        } else {
+            Sink::Null
         }
-    } else {
-        Sink::Null
     };
-    let report = run_insitu(
-        &snap,
-        &InsituConfig {
-            shards: settings.shards,
-            workers: settings.workers,
-            threads: settings.threads,
-            queue_depth: settings.queue_depth,
-            eb_rel: settings.eb_rel,
-            factory,
-            sink,
-        },
-    )?;
-    println!(
-        "pipeline done: ratio {:.2}, compress rate {}, wall {}, sink {}, stalls src={} sink={}",
-        report.ratio,
-        humansize::rate(report.compress_rate),
-        humansize::secs(report.wall_secs),
-        humansize::secs(report.sink_secs),
-        report.source_stalls,
-        report.sink_stalls,
-    );
+    let run = |layout: Option<Vec<Shard>>, final_round: bool| {
+        // A rebalancing round 1 only exists to collect cost counters;
+        // don't stream the whole archive to disk twice when an output
+        // path is configured — round 2 writes the real file.
+        let sink = if !final_round && settings.output.is_some() {
+            Sink::Null
+        } else {
+            make_sink()
+        };
+        run_insitu(
+            &snap,
+            &InsituConfig {
+                shards: settings.shards,
+                layout,
+                workers: settings.workers,
+                threads: settings.threads,
+                queue_depth: settings.queue_depth,
+                eb_rel: settings.eb_rel,
+                factory: factory.clone(),
+                sink,
+            },
+        )
+    };
+    let print_report = |label: &str, report: &InsituReport| {
+        println!(
+            "pipeline {label}: ratio {:.2}, compress rate {}, wall {}, sink {}, stalls src={} sink={}",
+            report.ratio,
+            humansize::rate(report.compress_rate),
+            humansize::secs(report.wall_secs),
+            humansize::secs(report.sink_secs),
+            report.source_stalls,
+            report.sink_stalls,
+        );
+    };
+
+    let mut report = run(None, !settings.rebalance)?;
+    print_report("round 1", &report);
+    if settings.rebalance {
+        // Feed the observed per-shard cost counters (the same numbers
+        // the v3 footer records) back into the boundary splitter and
+        // re-run; the archive is written by this final round.
+        let costs = report.cost_per_particle();
+        let layout2 = rebalance(&report.layout, &costs);
+        println!("rebalance: shard boundaries recut from round-1 cost counters");
+        report = run(Some(layout2), true)?;
+        print_report("round 2 (rebalanced)", &report);
+    }
+    if let Some(out) = &settings.output {
+        let shards_written = report
+            .shard_index
+            .as_ref()
+            .map(|i| i.entries.len())
+            .unwrap_or(0);
+        println!("archive: wrote sharded v3 archive to {out} ({shards_written} shards; try `nblc inspect {out}`)");
+    }
     if settings.use_pjrt {
         println!("(note: use_pjrt requested; PJRT quantizer engages in the sz_lv path when artifacts are present)");
     }

@@ -17,6 +17,11 @@ use crate::util::stats;
 /// Field names in canonical order.
 pub const FIELD_NAMES: [&str; 6] = ["xx", "yy", "zz", "vx", "vy", "vz"];
 
+/// Uncompressed bytes per particle (6 `f32` fields). The single source
+/// of truth for size/ratio math everywhere (snapshots, bundles, the
+/// archive shard table, the CLI).
+pub const PARTICLE_BYTES: usize = FIELD_NAMES.len() * 4;
+
 /// Index of the first velocity field in [`FIELD_NAMES`].
 pub const VEL_OFFSET: usize = 3;
 
@@ -58,9 +63,9 @@ impl Snapshot {
         self.len() == 0
     }
 
-    /// Uncompressed size in bytes (6 × n × 4).
+    /// Uncompressed size in bytes ([`PARTICLE_BYTES`] × n).
     pub fn total_bytes(&self) -> usize {
-        6 * self.len() * 4
+        PARTICLE_BYTES * self.len()
     }
 
     /// Field by canonical index.
@@ -98,6 +103,29 @@ impl Snapshot {
             box_size: self.box_size,
             seed: self.seed,
         }
+    }
+
+    /// Stitch contiguous parts (e.g. decoded archive shards, in logical
+    /// order) back into one snapshot. Name/box metadata comes from the
+    /// first part.
+    pub fn concat(parts: &[Snapshot]) -> Result<Snapshot> {
+        let Some(first) = parts.first() else {
+            return Err(Error::invalid("cannot concatenate zero snapshots"));
+        };
+        let total: usize = parts.iter().map(Snapshot::len).sum();
+        let fields = std::array::from_fn(|i| {
+            let mut f = Vec::with_capacity(total);
+            for p in parts {
+                f.extend_from_slice(&p.fields[i]);
+            }
+            f
+        });
+        Ok(Snapshot {
+            name: first.name.clone(),
+            fields,
+            box_size: first.box_size,
+            seed: first.seed,
+        })
     }
 
     /// Apply one permutation to all six fields (consistent reordering).
@@ -161,9 +189,9 @@ impl CompressedSnapshot {
         self.fields.iter().map(|f| f.bytes.len()).sum()
     }
 
-    /// Original bytes (6 fields × 4 bytes).
+    /// Original bytes ([`PARTICLE_BYTES`] × n).
     pub fn original_bytes(&self) -> usize {
-        6 * self.n * 4
+        PARTICLE_BYTES * self.n
     }
 
     /// Overall compression ratio.
@@ -457,6 +485,18 @@ mod tests {
         let sl = s.slice(1, 3);
         assert_eq!(sl.len(), 2);
         assert_eq!(sl.fields[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn concat_restitches_slices() {
+        let s = tiny_snapshot();
+        let back = Snapshot::concat(&[s.slice(0, 1), s.slice(1, 2), s.slice(2, 3)]).unwrap();
+        assert_eq!(back.len(), 3);
+        for f in 0..6 {
+            assert_eq!(back.fields[f], s.fields[f]);
+        }
+        assert_eq!(back.box_size, s.box_size);
+        assert!(Snapshot::concat(&[]).is_err());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! produced them.
 
 use nblc::compressors::{full_lineup, registry};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
+use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::exec::ExecCtx;
@@ -98,6 +100,80 @@ fn cosmology_data_is_byte_identical_across_thread_counts() {
     });
     for spec in ["sz_lv", "sz_lv_rx", "sz_cpc2000"] {
         assert_deterministic(spec, &cosmo, 1e-3);
+    }
+}
+
+#[test]
+fn pipeline_archives_decode_identically_at_any_concurrency() {
+    // The v3 sink appends shard records in worker-completion order, so
+    // the FILE bytes may differ across worker/thread counts — but the
+    // footer's logical shard order, every shard's compressed payload,
+    // and the decoded snapshot must be bit-identical.
+    let md = generate_md(&MdConfig {
+        n_particles: 12_000,
+        ..Default::default()
+    });
+    for name in ["sz_lv", "sz_lv_rx"] {
+        let spec = registry::canonical(name).unwrap();
+        let mut baseline: Option<(Vec<(u64, u64, u64)>, Vec<Vec<u8>>, Vec<Vec<u32>>)> = None;
+        for (workers, threads) in [(1usize, 1usize), (2, 2), (4, 1)] {
+            let path = std::env::temp_dir().join(format!(
+                "nblc_det_{}_{name}_{workers}_{threads}.nblc",
+                std::process::id()
+            ));
+            run_insitu(
+                &md,
+                &InsituConfig {
+                    shards: 5,
+                    layout: None,
+                    workers,
+                    threads,
+                    queue_depth: 3,
+                    eb_rel: 1e-4,
+                    factory: registry::factory(&spec).unwrap(),
+                    sink: Sink::Archive {
+                        path: path.clone(),
+                        spec: spec.clone(),
+                    },
+                },
+            )
+            .unwrap_or_else(|e| panic!("{name}@{workers}w/{threads}t: pipeline failed: {e}"));
+            let reader = ShardReader::open(&path).unwrap();
+            let order: Vec<(u64, u64, u64)> = reader
+                .index()
+                .entries
+                .iter()
+                .map(|e| (e.start, e.end, e.bytes_out))
+                .collect();
+            let payloads: Vec<Vec<u8>> = (0..reader.index().entries.len())
+                .map(|i| {
+                    let bundle = reader.read_shard(i).unwrap();
+                    bundle.fields.iter().flat_map(|f| f.bytes.clone()).collect()
+                })
+                .collect();
+            let dec = decode_shards(
+                &reader,
+                reader.spec(),
+                None,
+                &ExecCtx::with_threads(threads.max(workers)),
+            )
+            .unwrap();
+            std::fs::remove_file(&path).ok();
+            let bits: Vec<Vec<u32>> = dec
+                .snapshot
+                .fields
+                .iter()
+                .map(|f| f.iter().map(|x| x.to_bits()).collect())
+                .collect();
+            match &baseline {
+                None => baseline = Some((order, payloads, bits)),
+                Some((o0, p0, b0)) => {
+                    assert_eq!(o0, &order, "{name}@{workers}w/{threads}t: logical shard order");
+                    assert_eq!(p0, &payloads, "{name}@{workers}w/{threads}t: shard payload bytes");
+                    assert_eq!(b0, &bits, "{name}@{workers}w/{threads}t: decoded snapshot bits");
+                }
+            }
+        }
     }
 }
 

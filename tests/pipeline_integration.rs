@@ -39,6 +39,7 @@ fn config_to_pipeline_roundtrip() {
         &snap,
         &InsituConfig {
             shards: settings.shards,
+            layout: None,
             workers: settings.workers,
             threads: settings.threads,
             queue_depth: settings.queue_depth,
@@ -84,6 +85,7 @@ fn config_method_spec_drives_pipeline() {
         &snap,
         &InsituConfig {
             shards: settings.shards,
+            layout: None,
             workers: settings.workers,
             threads: settings.threads,
             queue_depth: settings.queue_depth,
@@ -149,6 +151,81 @@ fn rebalance_feedback_loop_converges() {
 }
 
 #[test]
+fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
+    // The `[pipeline] rebalance` path: round 1 with an even split, feed
+    // the observed per-shard cost counters back into the splitter, and
+    // run round 2 with the recut layout — writing a v3 archive whose
+    // footer reflects the new boundaries.
+    let snap = generate_md(&MdConfig {
+        n_particles: 50_000,
+        ..Default::default()
+    });
+    let factory = registry::factory("sz_lv").unwrap();
+    let round1 = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: 5,
+            layout: None,
+            workers: 2,
+            threads: 1,
+            queue_depth: 2,
+            eb_rel: 1e-4,
+            factory: factory.clone(),
+            sink: Sink::Null,
+        },
+    )
+    .unwrap();
+    let costs = round1.cost_per_particle();
+    assert_eq!(costs.len(), 5);
+    let layout2 = rebalance(&round1.layout, &costs);
+    let path = std::env::temp_dir().join(format!("nblc_rebal_{}.nblc", std::process::id()));
+    let round2 = run_insitu(
+        &snap,
+        &InsituConfig {
+            shards: 5,
+            layout: Some(layout2.clone()),
+            workers: 2,
+            threads: 1,
+            queue_depth: 2,
+            eb_rel: 1e-4,
+            factory,
+            sink: Sink::Archive {
+                path: path.clone(),
+                spec: registry::canonical("sz_lv").unwrap(),
+            },
+        },
+    )
+    .unwrap();
+    assert_eq!(round2.layout, layout2);
+    let index = round2.shard_index.expect("archive sink returns footer");
+    // The footer's logical table mirrors the rebalanced boundaries and
+    // carries the per-shard cost counters for the *next* round.
+    assert_eq!(index.entries.len(), layout2.len());
+    for (e, sh) in index.entries.iter().zip(&layout2) {
+        assert_eq!((e.start as usize, e.end as usize), (sh.start, sh.end));
+    }
+    assert!(index.entries.iter().any(|e| e.cost_nanos > 0));
+    // And the archive still decodes within bound per shard.
+    let reader = nblc::data::archive::ShardReader::open(&path).unwrap();
+    let dec = nblc::data::archive::decode_shards(
+        &reader,
+        reader.spec(),
+        None,
+        &nblc::exec::ExecCtx::with_threads(2),
+    )
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+    for sh in &layout2 {
+        verify_bounds(
+            &snap.slice(sh.start, sh.end),
+            &dec.snapshot.slice(sh.start, sh.end),
+            1e-4,
+        )
+        .unwrap();
+    }
+}
+
+#[test]
 fn scheduler_routing_via_pipeline() {
     // The pipeline run with auto-routed mode must out-compress the
     // unrouted R-index mode on cosmology data.
@@ -162,6 +239,7 @@ fn scheduler_routing_via_pipeline() {
         &snap,
         &InsituConfig {
             shards: 4,
+            layout: None,
             workers: 1,
             threads: 1,
             queue_depth: 2,
@@ -175,6 +253,7 @@ fn scheduler_routing_via_pipeline() {
         &snap,
         &InsituConfig {
             shards: 4,
+            layout: None,
             workers: 1,
             threads: 1,
             queue_depth: 2,
