@@ -6,7 +6,7 @@
 //! 4. scheduler routing on/off on cosmology data (the §V-C rule).
 
 use nblc::bench::{f1, f2, Table, EB_REL};
-use nblc::compressors::sz::{Sz, SzConfig};
+use nblc::compressors::sz::{LzMode, Sz, SzConfig};
 use nblc::compressors::{mode_compressor, registry, Mode};
 use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::coordinator::choose_compressor;
@@ -63,10 +63,13 @@ fn main() {
         "Ablation 2: SZ lossless backend (Huffman only vs +DEFLATE)",
         &["Config", "Ratio", "Rate (MB/s)"],
     );
-    for (label, lossless) in [("huffman only", false), ("huffman + deflate", true)] {
+    for (label, lz) in [
+        ("huffman only", LzMode::Off),
+        ("huffman + deflate (gated)", LzMode::Fast),
+    ] {
         let sz = Sz {
             cfg: SzConfig {
-                lossless,
+                lz,
                 ..Default::default()
             },
         };

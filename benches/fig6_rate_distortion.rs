@@ -66,7 +66,7 @@ fn main() {
                     &s,
                     &SzCpc2000,
                     &bounds,
-                    Some(&|snap: &Snapshot, eb: f64| SzCpc2000.sort_permutation(snap, eb)),
+                    Some(&|snap: &Snapshot, eb: f64| SzCpc2000::default().sort_permutation(snap, eb)),
                 ),
             ),
         ];

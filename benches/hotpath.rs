@@ -21,6 +21,7 @@ use nblc::model::quant::{LatticeQuantizer, Predictor};
 use nblc::rindex::morton::interleave3;
 use nblc::rindex::sort::sort_perm;
 use nblc::snapshot::FieldCompressor;
+use nblc::util::bits::{BitReader, BitWriter};
 use nblc::util::rng::Pcg64;
 use nblc::util::stats::value_range;
 use nblc::util::timer::bench_min_time;
@@ -72,9 +73,25 @@ fn main() {
         &format!("Hot-path micro benches (field n={n}, min-of-3 timing)"),
         &["Stage", "Throughput", "Unit"],
     );
+    // Single-thread micro rows land in BENCH_hotpath.json too (threads
+    // = 1), so the CI regression gate can pin inner-loop throughputs.
+    let mut json_rows: Vec<(String, usize, f64)> = Vec::new();
 
+    // Quantize: split (chunked branchless two-pass, the shipping path)
+    // vs fused (the legacy inline predict+verify loop, kept as the
+    // behavioral reference).
     let tq = bench_min_time(0.5, 3, || quantizer.quantize(field, Predictor::LastValue));
-    t.row(vec!["lattice quantize (LV)".into(), format!("{:.1}", mb / tq), "MB/s".into()]);
+    t.row(vec!["lattice quantize (LV, split)".into(), format!("{:.1}", mb / tq), "MB/s".into()]);
+    let tq_ref = bench_min_time(0.5, 3, || {
+        quantizer.quantize_reference(field, Predictor::LastValue, true)
+    });
+    t.row(vec![
+        "lattice quantize (LV, fused legacy)".into(),
+        format!("{:.1}", mb / tq_ref),
+        "MB/s".into(),
+    ]);
+    json_rows.push(("quantize_split".into(), 1, mb / tq));
+    json_rows.push(("quantize_fused_legacy".into(), 1, mb / tq_ref));
 
     let tr = bench_min_time(0.5, 3, || quantizer.reconstruct(&codes));
     t.row(vec!["lattice reconstruct".into(), format!("{:.1}", mb / tr), "MB/s".into()]);
@@ -102,6 +119,77 @@ fn main() {
         format!("{:.1}", symbols.len() as f64 / td / 1e6),
         "Msym/s".into(),
     ]);
+
+    // Entropy inner loops, batched vs legacy (same bytes either way;
+    // JSON rates in MB/s of u32 symbol data, 4 bytes/symbol, so the
+    // gate compares like units across rows).
+    let mut counts = vec![0u64; 2 * radius as usize + 1];
+    for &s in &symbols {
+        counts[s as usize] += 1;
+    }
+    let enc = huffman::HuffmanEncoder::from_counts(&counts).unwrap();
+    let sym_mb = (symbols.len() * 4) as f64 / 1e6;
+    let te_batched = bench_min_time(0.5, 3, || {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2);
+        enc.encode_slice(&mut w, &symbols);
+        w.finish()
+    });
+    let te_legacy = bench_min_time(0.5, 3, || {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2);
+        for &s in &symbols {
+            enc.put(&mut w, s);
+        }
+        w.finish()
+    });
+    t.row(vec![
+        "huffman emit (batched pairs)".into(),
+        format!("{:.1}", symbols.len() as f64 / te_batched / 1e6),
+        "Msym/s".into(),
+    ]);
+    t.row(vec![
+        "huffman emit (legacy put)".into(),
+        format!("{:.1}", symbols.len() as f64 / te_legacy / 1e6),
+        "Msym/s".into(),
+    ]);
+    json_rows.push(("huffman_encode_batched".into(), 1, sym_mb / te_batched));
+    json_rows.push(("huffman_encode_legacy".into(), 1, sym_mb / te_legacy));
+
+    let payload = {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2);
+        enc.encode_slice(&mut w, &symbols);
+        w.finish()
+    };
+    let dec = huffman::HuffmanDecoder::from_lengths(enc.lengths()).unwrap();
+    let td_multi = bench_min_time(0.5, 3, || {
+        let mut r = BitReader::new(&payload);
+        let mut acc = 0u64;
+        dec.decode_all(&mut r, symbols.len(), |s| {
+            acc ^= s as u64;
+            Ok(())
+        })
+        .unwrap();
+        acc
+    });
+    let td_legacy = bench_min_time(0.5, 3, || {
+        let mut r = BitReader::new(&payload);
+        let mut acc = 0u64;
+        for _ in 0..symbols.len() {
+            acc ^= dec.get(&mut r).unwrap() as u64;
+        }
+        acc
+    });
+    t.row(vec![
+        "huffman decode (multi-symbol)".into(),
+        format!("{:.1}", symbols.len() as f64 / td_multi / 1e6),
+        "Msym/s".into(),
+    ]);
+    t.row(vec![
+        "huffman decode (legacy get)".into(),
+        format!("{:.1}", symbols.len() as f64 / td_legacy / 1e6),
+        "Msym/s".into(),
+    ]);
+    json_rows.push(("huffman_decode_multisym".into(), 1, sym_mb / td_multi));
+    json_rows.push(("huffman_decode_legacy".into(), 1, sym_mb / td_legacy));
 
     // Radix sort over realistic Morton keys.
     let mut rng = Pcg64::seeded(1);
@@ -179,7 +267,6 @@ fn main() {
         &format!("Snapshot engine (6 planes, n={}, {} cores)", s.len(), n_threads),
         &["Codec", "Threads", "Compress MB/s", "Speedup"],
     );
-    let mut json_rows: Vec<(String, usize, f64)> = Vec::new();
     for spec in ["sz_lv", "sz_lv_rx", "mode:best_compression"] {
         let comp = registry::build_str(spec).unwrap();
         // Byte-identity across budgets is enforced by the test suite

@@ -38,7 +38,7 @@ fn main() {
         let reference = match name {
             "cpc2000" => s.permute(&Cpc2000.sort_permutation(&s, EB_REL).unwrap()).unwrap(),
             "sz_cpc2000" => s
-                .permute(&SzCpc2000.sort_permutation(&s, EB_REL).unwrap())
+                .permute(&SzCpc2000::default().sort_permutation(&s, EB_REL).unwrap())
                 .unwrap(),
             "sz_lv_prx" => s.permute(&SzRx::prx().sort_permutation(&s, EB_REL)).unwrap(),
             _ => s.clone(),

@@ -7,8 +7,6 @@ use nblc::bench::{f1, f2, f3, Table, EB_REL};
 use nblc::compressors::szrx::SzRx;
 use nblc::compressors::sz::Sz;
 use nblc::data::DatasetKind;
-use nblc::model::quant::Predictor;
-use nblc::rindex::RIndexSource;
 use nblc::snapshot::{PerField, SnapshotCompressor};
 use nblc::util::timer::time_it;
 
@@ -30,10 +28,8 @@ fn main() {
     let mut full_rx_ratio = 0.0;
     for groups in [0u32, 2, 4, 6, 8] {
         let comp = SzRx {
-            segment: 16384,
             ignored_groups: groups,
-            source: RIndexSource::Coordinates,
-            predictor: Predictor::LastValue,
+            ..SzRx::rx(16384)
         };
         let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
         let ratio = bundle.compression_ratio();

@@ -8,7 +8,6 @@ use nblc::compressors::cpc2000::Cpc2000;
 use nblc::compressors::sz::Sz;
 use nblc::compressors::szrx::SzRx;
 use nblc::data::DatasetKind;
-use nblc::model::quant::Predictor;
 use nblc::rindex::RIndexSource;
 use nblc::snapshot::{FieldCompressor, SnapshotCompressor, FIELD_NAMES};
 use nblc::util::stats::value_range;
@@ -53,10 +52,8 @@ fn main() {
         RIndexSource::Both,
     ] {
         let rx = SzRx {
-            segment: 4096,
-            ignored_groups: 0,
             source,
-            predictor: Predictor::LastValue,
+            ..SzRx::rx(4096)
         };
         let perm = rx.sort_permutation(&s, EB_REL);
         let sorted = s.permute(&perm).unwrap();

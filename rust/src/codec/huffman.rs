@@ -6,13 +6,22 @@
 //! implementation is canonical (only code *lengths* are serialized) with
 //! a 12-bit fast decode table plus a canonical slow path for long codes.
 //!
+//! Both directions are batched for throughput. Encoding goes through a
+//! flat precomputed `(code, len)` pair table and the bit writer's bulk
+//! accumulator path ([`HuffmanEncoder::encode_slice`]), byte-identical
+//! to the per-symbol [`HuffmanEncoder::put`]. Decoding uses zlib-style
+//! multi-symbol fast-table entries: when two short codes fit together
+//! in the 12-bit window, a single table lookup emits both symbols
+//! ([`HuffmanDecoder::decode_all`]) — on skewed quantization-code
+//! distributions most lookups emit two symbols.
+//!
 //! Code lengths are kept <= 32 bits by pre-scaling symbol counts so the
 //! total is <= 2^20 (max Huffman depth ~ 1.44*log2(total) + 2 < 32);
 //! the ratio impact of scaling is negligible and it avoids a separate
 //! length-limiting pass.
 
 use crate::error::{Error, Result};
-use crate::util::bits::{BitReader, BitWriter};
+use crate::util::bits::{pack_pair, BitReader, BitWriter};
 use crate::util::varint::{get_uvarint, put_uvarint};
 
 const MAX_LEN: u32 = 32;
@@ -137,6 +146,11 @@ fn assign_codes(lengths: &[u8]) -> Result<Vec<(u32, u8)>> {
 /// Canonical Huffman encoder.
 pub struct HuffmanEncoder {
     codes: Vec<(u32, u8)>,
+    /// Flat packed `(code << 6) | len` pairs (see
+    /// [`crate::util::bits::pack_pair`]) — the bulk encode path's table:
+    /// one load per symbol, no tuple unpacking. Zero-count symbols hold
+    /// a zero entry (len 0), which the bulk path must never emit.
+    pairs: Vec<u64>,
     lengths: Vec<u8>,
 }
 
@@ -145,7 +159,17 @@ impl HuffmanEncoder {
     pub fn from_counts(counts: &[u64]) -> Result<Self> {
         let lengths = build_lengths(counts);
         let codes = assign_codes(&lengths)?;
-        Ok(HuffmanEncoder { codes, lengths })
+        let pairs = codes
+            .iter()
+            .map(|&(code, len)| {
+                if len == 0 {
+                    0
+                } else {
+                    pack_pair(code, len as u32)
+                }
+            })
+            .collect();
+        Ok(HuffmanEncoder { codes, pairs, lengths })
     }
 
     /// The code lengths (serialize these for the decoder).
@@ -153,12 +177,24 @@ impl HuffmanEncoder {
         &self.lengths
     }
 
-    /// Encode one symbol.
+    /// Encode one symbol (the legacy scalar path; prefer
+    /// [`Self::encode_slice`] for whole streams).
     #[inline]
     pub fn put(&self, w: &mut BitWriter, sym: u32) {
         let (code, len) = self.codes[sym as usize];
         debug_assert!(len > 0, "encoding symbol {sym} with zero count");
         w.put64(code as u64, len as u32);
+    }
+
+    /// Encode a whole symbol slice through the writer's bulk pair path.
+    /// Byte-identical to calling [`Self::put`] per symbol; the
+    /// accumulator stays in registers for the whole run.
+    pub fn encode_slice(&self, w: &mut BitWriter, syms: &[u32]) {
+        w.put_pairs(syms.iter().map(|&s| {
+            let p = self.pairs[s as usize];
+            debug_assert!(p & 63 != 0, "encoding symbol {s} with zero count");
+            p
+        }));
     }
 
     /// Total encoded size in bits for the given counts (exact).
@@ -171,10 +207,23 @@ impl HuffmanEncoder {
     }
 }
 
-/// Canonical Huffman decoder with a 12-bit fast table.
+/// One 12-bit fast-table slot. `count` is the number of complete codes
+/// decodable from the window: 0 = code longer than [`FAST_BITS`] (slow
+/// path), 1 = one symbol (`sym1`, consume `len1`), 2 = two symbols
+/// (`sym1` then `sym2`, consume `len_total`) — the zlib-style
+/// multi-symbol entry.
+#[derive(Clone, Copy, Default)]
+struct FastEntry {
+    sym1: u32,
+    sym2: u32,
+    len1: u8,
+    len_total: u8,
+    count: u8,
+}
+
+/// Canonical Huffman decoder with a 12-bit multi-symbol fast table.
 pub struct HuffmanDecoder {
-    /// fast[prefix] = (symbol, len) for codes with len <= FAST_BITS; len=0 means slow path.
-    fast: Vec<(u32, u8)>,
+    fast: Vec<FastEntry>,
     /// Slow path canonical tables, indexed by length.
     first_code: [u32; MAX_LEN as usize + 1],
     first_sym_idx: [u32; MAX_LEN as usize + 1],
@@ -226,8 +275,8 @@ impl HuffmanDecoder {
             }
         }
 
-        // Fast table.
-        let mut fast = vec![(0u32, 0u8); 1 << FAST_BITS];
+        // Fast table, single-symbol pass.
+        let mut fast = vec![FastEntry::default(); 1 << FAST_BITS];
         for (sym, &(code, len)) in codes.iter().enumerate() {
             if len == 0 || len as u32 > FAST_BITS {
                 continue;
@@ -235,7 +284,37 @@ impl HuffmanDecoder {
             let shift = FAST_BITS - len as u32;
             let base = code << shift;
             for fill in 0..(1u32 << shift) {
-                fast[(base | fill) as usize] = (sym as u32, len);
+                let e = &mut fast[(base | fill) as usize];
+                e.sym1 = sym as u32;
+                e.len1 = len;
+                e.len_total = len;
+                e.count = 1;
+            }
+        }
+        // Multi-symbol pass: when a second complete code fits in the
+        // remainder of the 12-bit window, one lookup emits both. The
+        // second code's bits top-align at `prefix << len1`; its decode
+        // is valid iff it needs no more than the `FAST_BITS - len1`
+        // real bits available (the shifted-in zeros are never read).
+        let mask = (1u32 << FAST_BITS) - 1;
+        for p in 0..(1usize << FAST_BITS) {
+            let (sym1_len, avail) = {
+                let e = &fast[p];
+                if e.count == 0 || e.len1 as u32 >= FAST_BITS {
+                    continue;
+                }
+                (e.len1, FAST_BITS - e.len1 as u32)
+            };
+            let q = (((p as u32) << sym1_len) & mask) as usize;
+            let (sym2, len2, ok) = {
+                let e2 = &fast[q];
+                (e2.sym1, e2.len1, e2.count > 0 && (e2.len1 as u32) <= avail)
+            };
+            if ok {
+                let e = &mut fast[p];
+                e.sym2 = sym2;
+                e.len_total = sym1_len + len2;
+                e.count = 2;
             }
         }
         Ok(HuffmanDecoder {
@@ -248,16 +327,55 @@ impl HuffmanDecoder {
         })
     }
 
-    /// Decode one symbol.
+    /// Decode one symbol (the legacy scalar path; prefer
+    /// [`Self::decode_all`] for whole streams).
     #[inline]
     pub fn get(&self, r: &mut BitReader) -> Result<u32> {
         let prefix = r.peek_zeropad(FAST_BITS);
-        let (sym, len) = self.fast[prefix as usize];
-        if len > 0 {
-            r.consume(len as u32)?;
-            return Ok(sym);
+        let e = self.fast[prefix as usize];
+        if e.count > 0 {
+            r.consume(e.len1 as u32)?;
+            return Ok(e.sym1);
         }
-        // Slow canonical path: extend bit by bit beyond FAST_BITS.
+        self.get_slow(r)
+    }
+
+    /// Decode exactly `n` symbols into `emit`, using multi-symbol fast
+    /// entries (two short codes per 12-bit lookup where they fit). Bit
+    /// consumption is identical to `n` calls of [`Self::get`].
+    pub fn decode_all(
+        &self,
+        r: &mut BitReader,
+        n: usize,
+        mut emit: impl FnMut(u32) -> Result<()>,
+    ) -> Result<()> {
+        let mut i = 0usize;
+        while i < n {
+            let prefix = r.peek_zeropad(FAST_BITS);
+            let e = self.fast[prefix as usize];
+            if e.count == 2 && n - i >= 2 {
+                r.consume(e.len_total as u32)?;
+                emit(e.sym1)?;
+                emit(e.sym2)?;
+                i += 2;
+            } else if e.count > 0 {
+                // Single-symbol entry, or the final symbol of an
+                // odd-length stream (emit only the first of a pair —
+                // the second decode may be reading zero padding).
+                r.consume(e.len1 as u32)?;
+                emit(e.sym1)?;
+                i += 1;
+            } else {
+                emit(self.get_slow(r)?)?;
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Slow canonical path: extend bit by bit beyond FAST_BITS.
+    #[cold]
+    fn get_slow(&self, r: &mut BitReader) -> Result<u32> {
         let mut code = 0u32;
         for _ in 0..FAST_BITS {
             code = (code << 1) | r.get(1)? as u32;
@@ -347,9 +465,7 @@ pub fn encode_block(symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
         return Ok(out);
     }
     let mut w = BitWriter::with_capacity(symbols.len() / 2);
-    for &s in symbols {
-        enc.put(&mut w, s);
-    }
+    enc.encode_slice(&mut w, symbols);
     let payload = w.finish();
     put_uvarint(&mut out, payload.len() as u64);
     out.extend_from_slice(&payload);
@@ -411,7 +527,8 @@ impl<'a> BlockDecoder<'a> {
         self.n
     }
 
-    /// Stream every symbol through `sink` in encode order.
+    /// Stream every symbol through `sink` in encode order (batched:
+    /// multi-symbol fast-table lookups, no per-bit loops).
     pub fn decode_each(&self, mut sink: impl FnMut(u32) -> Result<()>) -> Result<()> {
         match &self.kind {
             BlockKind::Empty => Ok(()),
@@ -423,10 +540,7 @@ impl<'a> BlockDecoder<'a> {
             }
             BlockKind::Coded(dec, payload) => {
                 let mut r = BitReader::new(payload);
-                for _ in 0..self.n {
-                    sink(dec.get(&mut r)?)?;
-                }
-                Ok(())
+                dec.decode_all(&mut r, self.n, sink)
             }
         }
     }
@@ -601,6 +715,131 @@ mod tests {
         });
         assert!(r.is_err());
         assert_eq!(count, 10);
+    }
+
+    /// Decode a block two ways — per-symbol [`HuffmanDecoder::get`] and
+    /// batched [`HuffmanDecoder::decode_all`] — and require identical
+    /// symbols AND identical bit consumption.
+    fn assert_batched_decode_matches_scalar(symbols: &[u32], alphabet: usize) {
+        let mut counts = vec![0u64; alphabet];
+        for &s in symbols {
+            counts[s as usize] += 1;
+        }
+        if counts.iter().filter(|&&c| c > 0).count() < 2 {
+            return; // no coded payload to compare
+        }
+        let enc = HuffmanEncoder::from_counts(&counts).unwrap();
+        let mut w = BitWriter::new();
+        enc.encode_slice(&mut w, symbols);
+        let bytes = w.finish();
+
+        let dec = HuffmanDecoder::from_lengths(enc.lengths()).unwrap();
+        let mut scalar = Vec::with_capacity(symbols.len());
+        let mut r = BitReader::new(&bytes);
+        for _ in 0..symbols.len() {
+            scalar.push(dec.get(&mut r).unwrap());
+        }
+        let scalar_left = r.remaining_bits();
+
+        let mut batched = Vec::with_capacity(symbols.len());
+        let mut r = BitReader::new(&bytes);
+        dec.decode_all(&mut r, symbols.len(), |s| {
+            batched.push(s);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(batched, scalar);
+        assert_eq!(batched, symbols);
+        assert_eq!(r.remaining_bits(), scalar_left, "bit consumption differs");
+    }
+
+    #[test]
+    fn multi_symbol_table_adversarial_distributions() {
+        // Streams chosen to stress the multi-symbol decode table:
+        // two 1-bit codes per lookup, odd-length tails, fast/slow
+        // boundary codes, and escape-heavy alternations.
+        let mut rng = Pcg64::seeded(1234);
+
+        // All-short codes: nearly every lookup emits two symbols; odd
+        // lengths force the single-emit tail inside a pair entry.
+        for n in [1usize, 2, 3, 101, 4096, 4097] {
+            let syms: Vec<u32> = (0..n).map(|_| (rng.next_u64() % 3) as u32).collect();
+            assert_batched_decode_matches_scalar(&syms, 4);
+            roundtrip(&syms, 4);
+        }
+
+        // Max-depth skew (Fibonacci-ish counts): long codes near and
+        // past FAST_BITS so pair entries mix with slow-path decodes.
+        let mut skewed = Vec::new();
+        for s in 0..24u32 {
+            let reps = 1usize << (23 - s).min(12);
+            skewed.resize(skewed.len() + reps, s);
+        }
+        // Deterministic interleave so short and long codes alternate.
+        let mut interleaved = Vec::with_capacity(skewed.len());
+        let half = skewed.len() / 2;
+        for i in 0..half {
+            interleaved.push(skewed[i]);
+            interleaved.push(skewed[skewed.len() - 1 - i]);
+        }
+        assert_batched_decode_matches_scalar(&interleaved, 24);
+        roundtrip(&interleaved, 24);
+
+        // Escape-heavy stream (SZ shape): one hot symbol + a rare
+        // escape symbol at the top of the alphabet.
+        let esc = 65536u32;
+        let escape_heavy: Vec<u32> = (0..20_000)
+            .map(|_| {
+                if rng.next_f64() < 0.3 {
+                    esc
+                } else {
+                    32768 + (rng.next_u64() % 5) as u32
+                }
+            })
+            .collect();
+        assert_batched_decode_matches_scalar(&escape_heavy, 65537);
+        roundtrip(&escape_heavy, 65537);
+    }
+
+    #[test]
+    fn prop_batched_decode_matches_scalar_fuzz() {
+        Prop::new("huffman multi-symbol decode").cases(64).run(|rng| {
+            let alphabet = 2 + rng.below_usize(3000);
+            let n = rng.below_usize(5000);
+            let hot = rng.below_usize(alphabet) as u32;
+            let hot2 = rng.below_usize(alphabet) as u32;
+            let syms: Vec<u32> = (0..n)
+                .map(|_| {
+                    let r = rng.next_f64();
+                    if r < 0.45 {
+                        hot
+                    } else if r < 0.8 {
+                        hot2
+                    } else {
+                        rng.below_usize(alphabet) as u32
+                    }
+                })
+                .collect();
+            assert_batched_decode_matches_scalar(&syms, alphabet);
+        });
+    }
+
+    #[test]
+    fn encode_slice_matches_per_symbol_put() {
+        let mut rng = Pcg64::seeded(55);
+        let syms: Vec<u32> = (0..30_000).map(|_| (rng.next_u64() % 97) as u32).collect();
+        let mut counts = vec![0u64; 97];
+        for &s in &syms {
+            counts[s as usize] += 1;
+        }
+        let enc = HuffmanEncoder::from_counts(&counts).unwrap();
+        let mut a = BitWriter::new();
+        for &s in &syms {
+            enc.put(&mut a, s);
+        }
+        let mut b = BitWriter::new();
+        enc.encode_slice(&mut b, &syms);
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

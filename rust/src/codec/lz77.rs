@@ -7,9 +7,19 @@
 //! symbol stream, distance-class stream, and extra-bits stream are
 //! stored as separate sections, which keeps the decoder simple and
 //! allows reusing [`crate::codec::huffman`] blocks directly.
+//!
+//! Matching strategy per [`Effort`]: `Best` adds one-step *lazy
+//! matching* (defer a short match when the next position holds a longer
+//! one — DEFLATE's ratio trick); `Fast` adds an LZ4-style *skip
+//! heuristic* that, after a run of consecutive literal misses, emits
+//! literals without probing the hash chain at all, so incompressible
+//! regions stream through at memcpy-like speed. The `head`/`chain`
+//! search arrays can be borrowed from an [`ExecCtx`] pool
+//! ([`compress_ctx`]) instead of being allocated `O(n)` per call.
 
 use crate::codec::huffman::{decode_block, encode_block};
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::util::bits::{BitReader, BitWriter};
 use crate::util::varint::{get_uvarint, put_uvarint};
 
@@ -18,6 +28,16 @@ const MIN_MATCH: usize = 3;
 const MAX_MATCH: usize = 258;
 const HASH_BITS: u32 = 15;
 const HASH_SIZE: usize = 1 << HASH_BITS;
+
+/// `Fast`: after `2^SKIP_SHIFT` consecutive literal misses, every miss
+/// emits `miss_run >> SKIP_SHIFT` extra literals without searching.
+const SKIP_SHIFT: u32 = 5;
+/// Cap on the per-miss skip length, so a late match inside a long
+/// incompressible run is found at most this many bytes late.
+const SKIP_MAX: usize = 64;
+/// `Best`: matches at least this long are taken greedily (no lazy
+/// probe) — DEFLATE's `good_length` idea.
+const LAZY_GOOD: usize = 32;
 
 /// DEFLATE length-code table: (base, extra_bits) for codes 0..=28,
 /// covering match lengths 3..=258.
@@ -83,31 +103,31 @@ pub enum Effort {
     Best,
 }
 
-/// LZ77-compress `data`. Container: varint original size, then three
-/// Huffman sections (symbols, distance classes, extra-bit stream length +
-/// bytes).
-pub fn compress(data: &[u8], effort: Effort) -> Result<Vec<u8>> {
-    let max_chain = match effort {
-        Effort::Fast => 16,
-        Effort::Best => 128,
-    };
-    let mut symbols: Vec<u32> = Vec::with_capacity(data.len() / 2);
-    let mut dist_classes: Vec<u32> = Vec::new();
-    let mut extras = BitWriter::with_capacity(data.len() / 8);
+/// Hash-chain matcher state. `next_insert` tracks the first position
+/// not yet in the chains, making insertion idempotent: the lazy probe
+/// and the match-region loop may both ask for the same position, and a
+/// double insert would make a position its own chain predecessor.
+struct Matcher<'a> {
+    data: &'a [u8],
+    head: &'a mut [u32],
+    chain: &'a mut [u32],
+    max_chain: usize,
+    next_insert: usize,
+}
 
-    let mut head = vec![u32::MAX; HASH_SIZE];
-    let mut chain = vec![u32::MAX; data.len()];
-
-    let mut i = 0usize;
-    while i < data.len() {
+impl Matcher<'_> {
+    /// Longest match at `i` as `(len, dist)`; `(0, 0)` when none or too
+    /// close to the end.
+    fn find(&self, i: usize) -> (usize, usize) {
+        let data = self.data;
         let mut best_len = 0usize;
         let mut best_dist = 0usize;
         if i + MIN_MATCH + 1 <= data.len() && i + 4 <= data.len() {
             let h = hash4(data, i);
-            let mut cand = head[h];
+            let mut cand = self.head[h];
             let mut steps = 0;
             let limit = i.saturating_sub(WINDOW);
-            while cand != u32::MAX && (cand as usize) >= limit && steps < max_chain {
+            while cand != u32::MAX && (cand as usize) >= limit && steps < self.max_chain {
                 let c = cand as usize;
                 // quick reject on the byte after current best
                 if best_len == 0
@@ -128,38 +148,126 @@ pub fn compress(data: &[u8], effort: Effort) -> Result<Vec<u8>> {
                         }
                     }
                 }
-                cand = chain[c];
+                cand = self.chain[c];
                 steps += 1;
             }
         }
+        (best_len, best_dist)
+    }
 
-        if best_len >= MIN_MATCH {
-            let (lc, lex, leb) = len_code(best_len);
-            symbols.push(256 + lc);
-            extras.put(lex as u64, leb as u32);
-            let (dc, dex, deb) = dist_code(best_dist);
-            dist_classes.push(dc);
-            extras.put(dex as u64, deb as u32);
-            // Insert hash entries for the matched region (bounded for speed).
-            let end = (i + best_len).min(data.len().saturating_sub(4));
-            let step = if best_len > 64 { 4 } else { 1 };
-            let mut j = i;
-            while j < end {
-                let h = hash4(data, j);
-                chain[j] = head[h];
-                head[h] = j as u32;
-                j += step;
-            }
-            i += best_len;
-        } else {
-            symbols.push(data[i] as u32);
-            if i + 4 <= data.len() {
-                let h = hash4(data, i);
-                chain[i] = head[h];
-                head[h] = i as u32;
-            }
-            i += 1;
+    /// Insert position `j` into the chains (no-op when already inserted
+    /// or when fewer than 4 bytes remain for the hash).
+    #[inline]
+    fn insert(&mut self, j: usize) {
+        if j < self.next_insert || j + 4 > self.data.len() {
+            return;
         }
+        let h = hash4(self.data, j);
+        self.chain[j] = self.head[h];
+        self.head[h] = j as u32;
+        self.next_insert = j + 1;
+    }
+}
+
+/// LZ77-compress `data`. Container: varint original size, then three
+/// Huffman sections (symbols, distance classes, extra-bit stream length +
+/// bytes).
+pub fn compress(data: &[u8], effort: Effort) -> Result<Vec<u8>> {
+    compress_ctx(data, effort, None)
+}
+
+/// [`compress`] borrowing the `head`/`chain` search arrays from an
+/// [`ExecCtx`] scratch pool (mirroring the radix-sort scratch pattern)
+/// instead of allocating `O(n)` per call; falls back to local
+/// allocations without a context. Output bytes are identical either
+/// way.
+pub fn compress_ctx(data: &[u8], effort: Effort, ctx: Option<&ExecCtx>) -> Result<Vec<u8>> {
+    let max_chain = match effort {
+        Effort::Fast => 16,
+        Effort::Best => 128,
+    };
+    let lazy = effort == Effort::Best;
+    let skip = effort == Effort::Fast;
+
+    let mut symbols: Vec<u32> = Vec::with_capacity(data.len() / 2);
+    let mut dist_classes: Vec<u32> = Vec::new();
+    let mut extras = BitWriter::with_capacity(data.len() / 8);
+
+    let (mut head, mut chain) = match ctx {
+        Some(c) => (c.take_u32(), c.take_u32()),
+        None => (Vec::new(), Vec::new()),
+    };
+    head.clear();
+    head.resize(HASH_SIZE, u32::MAX);
+    chain.clear();
+    chain.resize(data.len(), u32::MAX);
+
+    {
+        let mut m = Matcher {
+            data,
+            head: &mut head,
+            chain: &mut chain,
+            max_chain,
+            next_insert: 0,
+        };
+        let mut miss_run = 0usize;
+        let mut i = 0usize;
+        while i < data.len() {
+            let (mut best_len, mut best_dist) = m.find(i);
+            if lazy && best_len >= MIN_MATCH && best_len < LAZY_GOOD {
+                // Lazy probe: a longer match starting one byte later
+                // wins; the current byte goes out as a literal.
+                m.insert(i);
+                let (next_len, next_dist) = m.find(i + 1);
+                if next_len > best_len {
+                    symbols.push(data[i] as u32);
+                    i += 1;
+                    best_len = next_len;
+                    best_dist = next_dist;
+                }
+            }
+            if best_len >= MIN_MATCH {
+                miss_run = 0;
+                let (lc, lex, leb) = len_code(best_len);
+                symbols.push(256 + lc);
+                extras.put(lex as u64, leb as u32);
+                let (dc, dex, deb) = dist_code(best_dist);
+                dist_classes.push(dc);
+                extras.put(dex as u64, deb as u32);
+                // Insert hash entries for the matched region (bounded
+                // stepping for long matches, for speed).
+                let end = i + best_len;
+                let step = if best_len > 64 { 4 } else { 1 };
+                let mut j = i;
+                while j < end {
+                    m.insert(j);
+                    j += step;
+                }
+                i = end;
+            } else {
+                symbols.push(data[i] as u32);
+                m.insert(i);
+                i += 1;
+                if skip {
+                    miss_run += 1;
+                    let hop = (miss_run >> SKIP_SHIFT).min(SKIP_MAX);
+                    if hop > 0 {
+                        // Incompressible region: stream literals without
+                        // probing (or feeding) the hash chain at all.
+                        let end = (i + hop).min(data.len());
+                        while i < end {
+                            symbols.push(data[i] as u32);
+                            i += 1;
+                        }
+                        miss_run += hop;
+                    }
+                }
+            }
+        }
+    }
+    if let Some(c) = ctx {
+        c.put_u32(head);
+        c.put_u32(chain);
     }
 
     let mut out = Vec::with_capacity(data.len() / 2 + 64);
@@ -353,6 +461,55 @@ mod tests {
             ours.len(),
             theirs.len()
         );
+    }
+
+    #[test]
+    fn skip_heuristic_region_transitions_roundtrip() {
+        // Fast mode skips match probing inside incompressible runs; a
+        // compressible tail after a long random run must still
+        // round-trip exactly (matches are just found slightly later).
+        let mut rng = Pcg64::seeded(77);
+        let mut data: Vec<u8> = (0..80_000).map(|_| rng.next_u64() as u8).collect();
+        data.extend_from_slice(&b"compressible tail ".repeat(2000));
+        data.extend((0..40_000).map(|_| rng.next_u64() as u8));
+        let c = compress(&data, Effort::Fast).unwrap();
+        assert_eq!(decompress(&c).unwrap(), data);
+        // The compressible middle must still be found.
+        assert!(c.len() < data.len(), "{} vs {}", c.len(), data.len());
+    }
+
+    #[test]
+    fn lazy_matching_helps_on_shifted_repeats() {
+        // Classic lazy-matching win: a literal prefix that shadows a
+        // longer match one byte later. Best must not be worse than Fast
+        // here, and both must round-trip.
+        let mut data = Vec::new();
+        for i in 0..3000u32 {
+            data.extend_from_slice(b"abcde_fghij_klmno");
+            data.push(b'x' + (i % 3) as u8);
+        }
+        let fast = compress(&data, Effort::Fast).unwrap();
+        let best = compress(&data, Effort::Best).unwrap();
+        assert_eq!(decompress(&fast).unwrap(), data);
+        assert_eq!(decompress(&best).unwrap(), data);
+        assert!(best.len() <= fast.len(), "best {} fast {}", best.len(), fast.len());
+    }
+
+    #[test]
+    fn ctx_pooled_scratch_is_byte_identical_and_reused() {
+        let ctx = crate::exec::ExecCtx::sequential();
+        let data = b"pooled scratch determinism check ".repeat(500);
+        let plain = compress(&data, Effort::Best).unwrap();
+        // Two pooled runs: the second reuses the buffers returned by
+        // the first; bytes must match the unpooled path every time.
+        for _ in 0..2 {
+            let pooled = compress_ctx(&data, Effort::Best, Some(&ctx)).unwrap();
+            assert_eq!(pooled, plain);
+        }
+        // The pool retained the head-array capacity.
+        let buf = ctx.take_u32();
+        assert!(buf.capacity() >= HASH_SIZE);
+        ctx.put_u32(buf);
     }
 
     #[test]

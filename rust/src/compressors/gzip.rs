@@ -24,6 +24,19 @@ impl FieldCompressor for Gzip {
         lz77::compress(&raw, lz77::Effort::Best)
     }
 
+    fn compress_pooled(
+        &self,
+        ctx: &crate::exec::ExecCtx,
+        xs: &[f32],
+        _eb_abs: f64,
+    ) -> Result<Vec<u8>> {
+        let mut raw = Vec::with_capacity(xs.len() * 4);
+        for &x in xs {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        lz77::compress_ctx(&raw, lz77::Effort::Best, Some(ctx))
+    }
+
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
         let raw = lz77::decompress(bytes)?;
         if raw.len() % 4 != 0 {

@@ -1,11 +1,15 @@
 //! The paper's three compression modes for molecular-dynamics data
 //! (§VI / conclusion), mirroring GZIP's mode knob:
 //!
-//! | Mode | Method | Tradeoff (paper, AMDF) |
-//! |---|---|---|
-//! | `best_speed` | SZ-LV | 4.4x CPC2000's rate at −12% ratio |
-//! | `best_tradeoff` | SZ-LV-PRX | 2x CPC2000's rate at equal ratio |
-//! | `best_compression` | SZ-CPC2000 | +13% ratio, +10% rate vs CPC2000 |
+//! | Mode | Method | `lz` | Tradeoff (paper, AMDF) |
+//! |---|---|---|---|
+//! | `best_speed` | SZ-LV | `off` | 4.4x CPC2000's rate at −12% ratio |
+//! | `best_tradeoff` | SZ-LV-PRX | `off` | 2x CPC2000's rate at equal ratio |
+//! | `best_compression` | SZ-CPC2000 | `best` | +13% ratio, +10% rate vs CPC2000 |
+//!
+//! The `lz` column is the entropy-gated LZ pass over SZ payloads
+//! ([`crate::compressors::sz::LzMode`]): the speed-oriented modes never
+//! pay for it, `best_compression` takes every ratio point it offers.
 //!
 //! A mode builds the concrete codec it stands for, so the parallel
 //! `compress_with`/`decompress_with` engine (and its byte-determinism
@@ -70,6 +74,25 @@ mod tests {
         assert_eq!(Mode::parse("tradeoff"), Some(Mode::BestTradeoff));
         assert_eq!(Mode::parse("best_compression"), Some(Mode::BestCompression));
         assert_eq!(Mode::parse("nope"), None);
+    }
+
+    #[test]
+    fn mode_to_lz_mapping_is_pinned() {
+        // best_speed must never pay for an LZ pass; best_compression
+        // must request the strongest one. The canonical (archived) spec
+        // is the contract.
+        assert_eq!(
+            registry::canonical(&Mode::BestSpeed.spec()).unwrap(),
+            "sz_lv:lossless=false,lz=off,radius=32768"
+        );
+        assert_eq!(
+            registry::canonical(&Mode::BestTradeoff.spec()).unwrap(),
+            "sz_lv_prx:ignore=6,lz=off,segment=16384,source=coords"
+        );
+        assert_eq!(
+            registry::canonical(&Mode::BestCompression.spec()).unwrap(),
+            "sz_cpc2000:lz=best"
+        );
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!
 //! * `sz_lv` — a bare codec name with its default parameters;
 //! * `sz_lv_rx:segment=4096` — a tuned segmented-sort size (Table IV);
-//! * `sz:pred=lv,lossless=true` — SZ with last-value prediction and the
-//!   DEFLATE backend;
+//! * `sz:pred=lv,lz=fast` — SZ with last-value prediction and the
+//!   entropy-gated DEFLATE backend (`lossless=true` is the deprecated
+//!   alias for `lz=fast`);
 //! * `mode:best_tradeoff` — the paper's mode selector (§VI), a bare
 //!   positional value.
 //!
@@ -23,7 +24,7 @@ use crate::compressors::cpc2000::Cpc2000;
 use crate::compressors::fpzip::Fpzip;
 use crate::compressors::gzip::Gzip;
 use crate::compressors::isabela::Isabela;
-use crate::compressors::sz::{Sz, SzConfig};
+use crate::compressors::sz::{LzMode, Sz, SzConfig};
 use crate::compressors::szcpc::SzCpc2000;
 use crate::compressors::szrx::SzRx;
 use crate::compressors::zfp::Zfp;
@@ -201,6 +202,10 @@ pub struct ParamDef {
 #[derive(Clone, Debug)]
 pub struct Params {
     values: BTreeMap<&'static str, String>,
+    /// Keys the spec set explicitly (vs. schema defaults) — lets build
+    /// hooks resolve conflicts between a parameter and its deprecated
+    /// alias in favor of whichever the user actually wrote.
+    explicit: std::collections::BTreeSet<&'static str>,
 }
 
 impl Params {
@@ -210,6 +215,12 @@ impl Params {
             .get(key)
             .map(|s| s.as_str())
             .unwrap_or_else(|| panic!("parameter '{key}' missing from validated set"))
+    }
+
+    /// True when the spec set `key` explicitly (not filled from the
+    /// schema default).
+    pub fn is_explicit(&self, key: &str) -> bool {
+        self.explicit.contains(key)
     }
 
     /// Integer value (validated against the schema's range).
@@ -276,12 +287,23 @@ fn build_zfp(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
     Ok(Box::new(PerField(Zfp)))
 }
 
+/// Resolve the `lz` choice, honoring the deprecated `lossless` bool:
+/// `lossless=true` with `lz` left *unset* maps to `lz=fast` (the old
+/// backend behavior), so pre-`lz` specs and archives keep building. An
+/// explicitly written `lz=` always wins, including `lz=off`.
+fn lz_from(p: &Params) -> LzMode {
+    if !p.is_explicit("lz") && p.get_bool("lossless") {
+        return LzMode::Fast;
+    }
+    LzMode::parse(p.get("lz")).expect("validated lz parameter")
+}
+
 fn sz_from(p: &Params, predictor: Predictor) -> Sz {
     Sz {
         cfg: SzConfig {
             predictor,
             radius: p.get_i64("radius") as u32,
-            lossless: p.get_bool("lossless"),
+            lz: lz_from(p),
         },
     }
 }
@@ -306,12 +328,19 @@ fn rindex_source(p: &Params) -> RIndexSource {
     }
 }
 
+/// The bare `lz` choice (entries without the deprecated `lossless`
+/// alias: the R-index and CPC hybrid codecs).
+fn lz_param(p: &Params) -> LzMode {
+    LzMode::parse(p.get("lz")).expect("validated lz parameter")
+}
+
 fn szrx_from(p: &Params) -> SzRx {
     SzRx {
         segment: p.get_usize("segment"),
         ignored_groups: p.get_i64("ignore") as u32,
         source: rindex_source(p),
         predictor: Predictor::LastValue,
+        lz: lz_param(p),
     }
 }
 
@@ -319,18 +348,23 @@ fn build_szrx(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
     Ok(Box::new(szrx_from(p)))
 }
 
-fn build_szcpc(_: &Params) -> Result<Box<dyn SnapshotCompressor>> {
-    Ok(Box::new(SzCpc2000))
+fn build_szcpc(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
+    Ok(Box::new(SzCpc2000 { lz: lz_param(p) }))
 }
 
-/// The concrete codec a `mode:` spec stands for. Shared by [`build`]
+/// The concrete codec a `mode:` spec stands for, including the paper
+/// modes' `lz` mapping: `best_speed` pins `lz=off` (no LZ pass at all
+/// on the rate-critical path), `best_tradeoff` likewise stays `lz=off`
+/// (the Huffman stage is already near entropy and the pass would only
+/// cost rate), and `best_compression` pins `lz=best` (take every ratio
+/// point; the entropy gate keeps the cost bounded). Shared by [`build`]
 /// and [`canonical`], which archives the *resolved* codec so old
 /// archives survive future changes to the mode mapping.
 fn mode_target(which: &str) -> &'static str {
     match which {
-        "best_speed" | "speed" => "sz_lv",
-        "best_compression" | "compression" => "sz_cpc2000",
-        _ => "sz_lv_prx",
+        "best_speed" | "speed" => "sz_lv:lz=off",
+        "best_compression" | "compression" => "sz_cpc2000:lz=best",
+        _ => "sz_lv_prx:lz=off",
     }
 }
 
@@ -338,22 +372,31 @@ fn build_mode(p: &Params) -> Result<Box<dyn SnapshotCompressor>> {
     build_str(mode_target(p.get("which")))
 }
 
-const SZ_SHARED_PARAMS: [ParamDef; 2] = [
+/// The `lz=off|fast|best` parameter shared by every SZ-backed entry.
+const LZ_PARAM: ParamDef = ParamDef {
+    key: "lz",
+    kind: ParamKind::Choice(&["off", "fast", "best"]),
+    default: "off",
+    help: "entropy-gated LZ77 pass over the payload (best_speed: off, best_compression: best)",
+};
+
+const SZ_SHARED_PARAMS: [ParamDef; 3] = [
     ParamDef {
         key: "radius",
         kind: ParamKind::Int { min: 2, max: 1 << 30 },
         default: "32768",
         help: "quantization radius R: codes in (-R, R) are Huffman symbols",
     },
+    LZ_PARAM,
     ParamDef {
         key: "lossless",
         kind: ParamKind::Bool,
         default: "false",
-        help: "re-compress the payload with the DEFLATE backend (SZ's gzip stage)",
+        help: "deprecated alias kept for old specs/archives: lossless=true means lz=fast",
     },
 ];
 
-const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 3] {
+const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 4] {
     [
         ParamDef {
             key: "segment",
@@ -373,11 +416,12 @@ const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 
             default: "coords",
             help: "fields feeding the R-index (Table VI)",
         },
+        LZ_PARAM,
     ]
 }
 
-static RX_PARAMS: [ParamDef; 3] = szrx_params("16384", "0");
-static PRX_PARAMS: [ParamDef; 3] = szrx_params("16384", "6");
+static RX_PARAMS: [ParamDef; 4] = szrx_params("16384", "0");
+static PRX_PARAMS: [ParamDef; 4] = szrx_params("16384", "6");
 
 /// The registry: every codec the crate can build.
 pub static REGISTRY: &[CodecEntry] = &[
@@ -446,6 +490,7 @@ pub static REGISTRY: &[CodecEntry] = &[
             },
             SZ_SHARED_PARAMS[0],
             SZ_SHARED_PARAMS[1],
+            SZ_SHARED_PARAMS[2],
         ],
         build: build_sz,
     },
@@ -482,7 +527,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "R-index coordinates (CPC2000 coding) + SZ-LV velocities (best_compression)",
         reorders: true,
         positional: None,
-        params: &[],
+        params: &[LZ_PARAM],
         build: build_szcpc,
     },
     CodecEntry {
@@ -538,6 +583,7 @@ fn resolve(spec: &CodecSpec) -> Result<(&'static CodecEntry, Params)> {
         .iter()
         .map(|d| (d.key, d.default.to_string()))
         .collect();
+    let mut explicit = std::collections::BTreeSet::new();
     if let Some(pos) = &spec.positional {
         let key = entry.positional.ok_or_else(|| {
             Error::invalid(format!(
@@ -551,6 +597,7 @@ fn resolve(spec: &CodecSpec) -> Result<(&'static CodecEntry, Params)> {
             )));
         }
         values.insert(key, pos.clone());
+        explicit.insert(key);
     }
     for (k, v) in &spec.params {
         let def = entry.params.iter().find(|d| d.key == k.as_str()).ok_or_else(|| {
@@ -570,11 +617,12 @@ fn resolve(spec: &CodecSpec) -> Result<(&'static CodecEntry, Params)> {
             ))
         })?;
         values.insert(def.key, v.clone());
+        explicit.insert(def.key);
     }
     for def in entry.params {
         def.kind.check(def.key, &values[def.key])?;
     }
-    Ok((entry, Params { values }))
+    Ok((entry, Params { values, explicit }))
 }
 
 /// Check a spec without building anything.
@@ -601,9 +649,18 @@ pub fn build_str(s: &str) -> Result<Box<dyn SnapshotCompressor>> {
 /// archives survive changes to the mode mapping too.
 pub fn canonical(s: &str) -> Result<String> {
     let spec = CodecSpec::parse(s)?;
-    let (entry, params) = resolve(&spec)?;
+    let (entry, mut params) = resolve(&spec)?;
     if entry.name == "mode" {
         return canonical(mode_target(params.get("which")));
+    }
+    // Normalize the deprecated `lossless` alias into the `lz` value it
+    // stands for, so the archived string rebuilds the exact codec the
+    // original spec did (an explicit `lz=` in the canonical form always
+    // wins over the alias on re-parse).
+    if params.values.contains_key("lossless") {
+        let effective = lz_from(&params);
+        params.values.insert("lz", effective.name().to_string());
+        params.values.insert("lossless", "false".to_string());
     }
     let mut out = entry.name.to_string();
     let mut sep = ':';
@@ -644,7 +701,7 @@ pub fn sort_permutation_with(
     let (entry, params) = resolve(&spec)?;
     Ok(match entry.name {
         "cpc2000" => Some(Cpc2000.sort_permutation(snap, eb_rel)?),
-        "sz_cpc2000" => Some(SzCpc2000.sort_permutation(snap, eb_rel)?),
+        "sz_cpc2000" => Some(SzCpc2000::default().sort_permutation(snap, eb_rel)?),
         "sz_lv_rx" | "sz_lv_prx" => {
             Some(szrx_from(&params).sort_permutation_with(ctx, snap, eb_rel))
         }
@@ -742,11 +799,11 @@ mod tests {
     #[test]
     fn canonical_fills_defaults_and_normalizes() {
         let c = canonical("sz_lv_rx:segment=4096").unwrap();
-        assert_eq!(c, "sz_lv_rx:ignore=0,segment=4096,source=coords");
+        assert_eq!(c, "sz_lv_rx:ignore=0,lz=off,segment=4096,source=coords");
         assert_eq!(canonical("gzip").unwrap(), "gzip");
         assert_eq!(
             canonical("sz_lcf").unwrap(),
-            "sz:lossless=false,pred=lcf,radius=32768"
+            "sz:lossless=false,lz=off,pred=lcf,radius=32768"
         );
         // Canonical form is a fixed point.
         let c2 = canonical(&c).unwrap();
@@ -759,18 +816,60 @@ mod tests {
         // so they survive future changes to the mode mapping.
         assert_eq!(
             canonical("mode:speed").unwrap(),
-            "sz_lv:lossless=false,radius=32768"
+            "sz_lv:lossless=false,lz=off,radius=32768"
         );
         assert_eq!(
             canonical("mode:best_tradeoff").unwrap(),
-            "sz_lv_prx:ignore=6,segment=16384,source=coords"
+            "sz_lv_prx:ignore=6,lz=off,segment=16384,source=coords"
         );
-        assert_eq!(canonical("mode:best_compression").unwrap(), "sz_cpc2000");
+        assert_eq!(
+            canonical("mode:best_compression").unwrap(),
+            "sz_cpc2000:lz=best"
+        );
         // The resolved spec builds the same compressor the mode does.
         assert_eq!(
             build_str(&canonical("mode:best_tradeoff").unwrap()).unwrap().name(),
             build_str("mode:best_tradeoff").unwrap().name()
         );
+    }
+
+    #[test]
+    fn pre_lz_specs_and_archived_canonicals_still_build() {
+        // Spec strings written by older archives (no lz key) must keep
+        // resolving, and the deprecated lossless=true alias must map to
+        // the fast LZ backend.
+        assert_eq!(
+            build_str("sz_lv:lossless=false,radius=32768").unwrap().name(),
+            "sz_lv"
+        );
+        assert_eq!(build_str("sz_lv:lossless=true").unwrap().name(), "sz_lv+gz");
+        assert_eq!(build_str("sz_lv:lz=fast").unwrap().name(), "sz_lv+gz");
+        assert_eq!(build_str("sz:pred=lv,lossless=true").unwrap().name(), "sz_lv+gz");
+        // An explicitly written lz always wins over the alias — both
+        // directions, including lz=off silencing lossless=true.
+        assert_eq!(build_str("sz_lv:lz=best,lossless=false").unwrap().name(), "sz_lv+gz");
+        assert_eq!(build_str("sz_lv:lz=off,lossless=true").unwrap().name(), "sz_lv");
+        // Canonicalization folds the alias into the lz value it stood
+        // for, so archived strings rebuild the exact original codec.
+        let c = canonical("sz_lv:lossless=true").unwrap();
+        assert_eq!(c, "sz_lv:lossless=false,lz=fast,radius=32768");
+        assert_eq!(
+            build_str(&c).unwrap().name(),
+            build_str("sz_lv:lossless=true").unwrap().name()
+        );
+        assert!(build_str("sz_lv:lz=nope").is_err());
+        assert!(build_str("sz_lv_rx:lossless=true").is_err(), "rx never had the alias");
+        // lz=off and the old default spec compress byte-identically.
+        let s = generate_md(&MdConfig {
+            n_particles: 3_000,
+            ..Default::default()
+        });
+        let old = build_str("sz_lv:lossless=false,radius=32768").unwrap();
+        let new = build_str("sz_lv:lz=off").unwrap();
+        let (a, b) = (old.compress(&s, 1e-4).unwrap(), new.compress(&s, 1e-4).unwrap());
+        for (fa, fb) in a.fields.iter().zip(b.fields.iter()) {
+            assert_eq!(fa.bytes, fb.bytes);
+        }
     }
 
     #[test]

@@ -10,18 +10,76 @@
 //! linear-scaling quantization codes with `2R` intervals → canonical
 //! Huffman coding, with out-of-range codes escaped to varints and
 //! bound-violating elements stored as exact literals ("unpredictable
-//! data" in SZ terms). Optionally the whole payload is re-compressed
-//! with the DEFLATE-style backend (SZ's gzip stage).
+//! data" in SZ terms). Optionally ([`LzMode`], the `lz=` codec param)
+//! the whole payload is re-compressed with the DEFLATE-style backend
+//! (SZ's gzip stage) — entropy-gated, so the pass is skipped outright
+//! when the Huffman payload is near-incompressible.
 
 use crate::codec::huffman;
 use crate::codec::lz77;
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
 use crate::model::quant::{LatticeQuantizer, Predictor, QuantCodes};
 use crate::snapshot::FieldCompressor;
 use crate::util::varint::{get_ivarint, get_uvarint, put_ivarint, put_uvarint};
 
 const MAGIC: u8 = b'S';
 const VERSION: u8 = 1;
+
+/// Byte-entropy threshold (bits/byte) for the LZ gate: when the Huffman
+/// payload's sampled byte entropy is at or above this, even an ideal
+/// order-0 recoder would gain under ~8%, and an LZ pass on top of a
+/// near-entropy Huffman stream essentially never pays for its container
+/// overhead — so the pass is skipped entirely.
+const LZ_GATE_BITS: f64 = 7.4;
+
+/// Optional LZ77 pass over SZ's entropy-coded payload (SZ's "gzip
+/// stage"), the `lz=` codec parameter. The pass is *entropy-gated*: it
+/// only runs when the Huffman payload looks compressible (see
+/// [`LZ_GATE_BITS`]), so enabling it costs little on the (common)
+/// near-incompressible streams. Maps onto the paper's modes:
+/// `best_speed` uses `Off`, `best_compression` uses `Best`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LzMode {
+    /// No LZ pass (the best_speed choice): Huffman output is already
+    /// near the symbol-stream entropy.
+    #[default]
+    Off,
+    /// Short-chain greedy LZ77 with the incompressible-skip heuristic.
+    Fast,
+    /// Long-chain lazy LZ77 (the best_compression choice).
+    Best,
+}
+
+impl LzMode {
+    /// Parse a codec-spec value (`off|fast|best`).
+    pub fn parse(s: &str) -> Option<LzMode> {
+        match s {
+            "off" => Some(LzMode::Off),
+            "fast" => Some(LzMode::Fast),
+            "best" => Some(LzMode::Best),
+            _ => None,
+        }
+    }
+
+    /// Spec-syntax name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LzMode::Off => "off",
+            LzMode::Fast => "fast",
+            LzMode::Best => "best",
+        }
+    }
+
+    /// The LZ77 effort level this mode runs, `None` for `Off`.
+    pub(crate) fn effort(self) -> Option<lz77::Effort> {
+        match self {
+            LzMode::Off => None,
+            LzMode::Fast => Some(lz77::Effort::Fast),
+            LzMode::Best => Some(lz77::Effort::Best),
+        }
+    }
+}
 
 /// SZ configuration.
 #[derive(Clone, Copy, Debug)]
@@ -32,11 +90,11 @@ pub struct SzConfig {
     /// anything larger escapes to a varint. `2R` intervals total
     /// (SZ 1.4's default capacity is 65536 -> R = 32768).
     pub radius: u32,
-    /// Re-compress the payload with the DEFLATE-style lossless backend
-    /// (SZ's optional gzip stage). Off by default: the Huffman stage is
-    /// already near entropy on quantization codes, and the rate cost is
-    /// large (ablation bench `ablation_runtime`).
-    pub lossless: bool,
+    /// Optional entropy-gated LZ pass over the payload (SZ's gzip
+    /// stage). Off by default: the Huffman stage is already near
+    /// entropy on quantization codes, and the rate cost is large
+    /// (ablation bench `ablation_runtime`).
+    pub lz: LzMode,
 }
 
 impl Default for SzConfig {
@@ -44,9 +102,38 @@ impl Default for SzConfig {
         SzConfig {
             predictor: Predictor::LastValue,
             radius: 32768,
-            lossless: false,
+            lz: LzMode::Off,
         }
     }
+}
+
+/// The LZ gate: sampled byte entropy of the payload must be clearly
+/// below random for the pass to run. Deterministic (a pure function of
+/// the payload bytes), so archives stay byte-identical at every thread
+/// count.
+fn lz_gate(payload: &[u8]) -> bool {
+    if payload.len() < 64 {
+        // Container overhead dominates any conceivable gain.
+        return false;
+    }
+    // Sample at most 64 Ki bytes, evenly strided.
+    let step = (payload.len() >> 16).max(1);
+    let mut hist = [0u32; 256];
+    let mut total = 0u64;
+    let mut idx = 0usize;
+    while idx < payload.len() {
+        hist[payload[idx] as usize] += 1;
+        total += 1;
+        idx += step;
+    }
+    let mut h = 0f64;
+    for &c in &hist {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.log2();
+        }
+    }
+    h < LZ_GATE_BITS
 }
 
 /// The SZ compressor (field-level).
@@ -105,9 +192,21 @@ impl Sz {
 
     /// [`Self::compress_codes`] with a caller-provided symbol scratch
     /// buffer (cleared and refilled here), so parallel per-field
-    /// fan-outs can recycle the allocation through the
-    /// [`ExecCtx`](crate::exec::ExecCtx) pool.
+    /// fan-outs can recycle the allocation through the [`ExecCtx`]
+    /// pool.
     pub fn compress_codes_into(&self, q: &QuantCodes, symbols: &mut Vec<u32>) -> Result<Vec<u8>> {
+        self.compress_codes_ctx(q, symbols, None)
+    }
+
+    /// Core encode: symbol build, Huffman stage, optional entropy-gated
+    /// LZ pass. `ctx` only feeds scratch pools (the LZ search arrays);
+    /// output bytes are identical with or without it.
+    fn compress_codes_ctx(
+        &self,
+        q: &QuantCodes,
+        symbols: &mut Vec<u32>,
+        ctx: Option<&ExecCtx>,
+    ) -> Result<Vec<u8>> {
         let n = q.codes.len();
         let radius = self.cfg.radius as i64;
         let esc_sym = (2 * radius) as u32;
@@ -145,7 +244,8 @@ impl Sz {
         }
 
         // Entropy stage: encode the prepared symbol stream (byte-format
-        // identical to `huffman::encode_block`).
+        // identical to `huffman::encode_block`) through the batched
+        // pair-table path.
         let enc = huffman::HuffmanEncoder::from_counts(&counts)?;
         let mut payload = Vec::with_capacity(n / 2 + 64);
         huffman::serialize_lengths(enc.lengths(), &mut payload);
@@ -155,9 +255,7 @@ impl Sz {
             put_uvarint(&mut payload, 0);
         } else {
             let mut w = crate::util::bits::BitWriter::with_capacity(n / 2);
-            for &sym in symbols.iter() {
-                enc.put(&mut w, sym);
-            }
+            enc.encode_slice(&mut w, symbols);
             let bits = w.finish();
             put_uvarint(&mut payload, bits.len() as u64);
             payload.extend_from_slice(&bits);
@@ -172,27 +270,34 @@ impl Sz {
             prev_idx = idx;
         }
 
+        // The optional LZ pass runs only when the lz mode asks for it
+        // AND the payload looks compressible; the stream records what
+        // actually happened so the decoder never consults the config.
+        let effort = self.cfg.lz.effort().filter(|_| lz_gate(&payload));
         let mut out = Vec::with_capacity(payload.len() + 32);
         out.push(MAGIC);
         out.push(VERSION);
         out.push(q.predictor.order() as u8);
-        out.push(self.cfg.lossless as u8);
+        out.push(effort.is_some() as u8);
         put_uvarint(&mut out, n as u64);
         out.extend_from_slice(&q.eb_eff.to_le_bytes());
         out.extend_from_slice(&q.anchor.to_le_bytes());
         put_uvarint(&mut out, self.cfg.radius as u64);
-        if self.cfg.lossless {
-            let packed = lz77::compress(&payload, lz77::Effort::Fast)?;
-            out.extend_from_slice(&packed);
-        } else {
-            out.extend_from_slice(&payload);
+        match effort {
+            Some(effort) => {
+                let packed = lz77::compress_ctx(&payload, effort, ctx)?;
+                out.extend_from_slice(&packed);
+            }
+            None => out.extend_from_slice(&payload),
         }
         Ok(out)
     }
 
     /// Compress the permuted view `xs[perm[i]]` without materializing
     /// the permuted array — the R-index codecs' fused-gather path,
-    /// byte-identical to `compress` on a materialized permutation.
+    /// byte-identical to `compress` on a materialized permutation. All
+    /// per-call scratch (quantizer code array, symbol stream, LZ search
+    /// arrays) cycles through the context's pools.
     /// Skips per-call permutation validation: the callers' shared
     /// permutation is a radix-sort output (correct by construction)
     /// reused across all field planes. External users wanting a
@@ -201,28 +306,33 @@ impl Sz {
     /// [`Self::compress_codes`].
     pub(crate) fn compress_gathered_trusted(
         &self,
+        ctx: &ExecCtx,
         xs: &[f32],
         perm: &[u32],
         eb_abs: f64,
-        symbols: &mut Vec<u32>,
     ) -> Result<Vec<u8>> {
         let q = LatticeQuantizer::quantize_field_gathered_trusted(
             eb_abs,
             xs,
             perm,
             self.cfg.predictor,
+            ctx.take_i64(),
         )?;
-        self.compress_codes_into(&q, symbols)
+        let mut symbols = ctx.take_u32();
+        let out = self.compress_codes_ctx(&q, &mut symbols, Some(ctx));
+        ctx.put_u32(symbols);
+        ctx.put_i64(q.codes);
+        out
     }
 }
 
 impl FieldCompressor for Sz {
     fn name(&self) -> &'static str {
-        match (self.cfg.predictor, self.cfg.lossless) {
-            (Predictor::LastValue, false) => "sz_lv",
-            (Predictor::LastValue, true) => "sz_lv+gz",
-            (Predictor::LinearCurveFit, false) => "sz_lcf",
-            (Predictor::LinearCurveFit, true) => "sz_lcf+gz",
+        match (self.cfg.predictor, self.cfg.lz == LzMode::Off) {
+            (Predictor::LastValue, true) => "sz_lv",
+            (Predictor::LastValue, false) => "sz_lv+gz",
+            (Predictor::LinearCurveFit, true) => "sz_lcf",
+            (Predictor::LinearCurveFit, false) => "sz_lcf+gz",
         }
     }
 
@@ -231,14 +341,18 @@ impl FieldCompressor for Sz {
         self.compress_codes(&q)
     }
 
-    fn compress_scratch(
-        &self,
-        xs: &[f32],
-        eb_abs: f64,
-        scratch: &mut Vec<u32>,
-    ) -> Result<Vec<u8>> {
-        let q = LatticeQuantizer::quantize_field(eb_abs, xs, self.cfg.predictor)?;
-        self.compress_codes_into(&q, scratch)
+    fn compress_pooled(&self, ctx: &ExecCtx, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
+        let q = LatticeQuantizer::quantize_field_into(
+            eb_abs,
+            xs,
+            self.cfg.predictor,
+            ctx.take_i64(),
+        )?;
+        let mut symbols = ctx.take_u32();
+        let out = self.compress_codes_ctx(&q, &mut symbols, Some(ctx));
+        ctx.put_u32(symbols);
+        ctx.put_i64(q.codes);
+        out
     }
 
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
@@ -412,17 +526,78 @@ mod tests {
 
     #[test]
     fn lossless_backend_roundtrips() {
+        for lz in [LzMode::Fast, LzMode::Best] {
+            let comp = Sz {
+                cfg: SzConfig {
+                    lz,
+                    ..Default::default()
+                },
+            };
+            let xs: Vec<f32> = (0..50_000).map(|i| (i as f32 * 0.01).cos()).collect();
+            let bytes = comp.compress(&xs, 1e-4).unwrap();
+            let back = comp.decompress(&bytes).unwrap();
+            for (&a, &b) in xs.iter().zip(back.iter()) {
+                assert!((a - b).abs() <= 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn lz_gate_runs_on_repetitive_payloads_and_skips_noise() {
         let comp = Sz {
             cfg: SzConfig {
-                lossless: true,
+                lz: LzMode::Fast,
                 ..Default::default()
             },
         };
-        let xs: Vec<f32> = (0..50_000).map(|i| (i as f32 * 0.01).cos()).collect();
-        let bytes = comp.compress(&xs, 1e-4).unwrap();
+        // Periodic codes -> periodic Huffman payload bytes -> low byte
+        // entropy -> the gate lets the LZ pass run (stream byte 3 = 1).
+        let periodic: Vec<f32> = (0..60_000).map(|i| (i % 16) as f32).collect();
+        let bytes = comp.compress(&periodic, 1e-3).unwrap();
+        assert_eq!(bytes[3], 1, "gate should engage LZ on a periodic payload");
         let back = comp.decompress(&bytes).unwrap();
-        for (&a, &b) in xs.iter().zip(back.iter()) {
-            assert!((a - b).abs() <= 1e-4);
+        for (&a, &b) in periodic.iter().zip(back.iter()) {
+            assert!((a as f64 - b as f64).abs() <= 1e-3);
+        }
+        // Near-incompressible payload: uniform-noise codes spread over
+        // the whole ±R alphabet, the Huffman bitstream is near-random,
+        // and the gate skips the pass entirely (stream byte 3 = 0) —
+        // the best-speed escape hatch.
+        let mut rng = crate::util::rng::Pcg64::seeded(9);
+        let noise: Vec<f32> = (0..60_000).map(|_| rng.next_f32()).collect();
+        let eb = 1.5e-5;
+        let bytes = comp.compress(&noise, eb).unwrap();
+        assert_eq!(bytes[3], 0, "gate should skip LZ on a near-random payload");
+        let back = comp.decompress(&bytes).unwrap();
+        for (&a, &b) in noise.iter().zip(back.iter()) {
+            assert!((a as f64 - b as f64).abs() <= eb);
+        }
+        // With the gate skipping, bytes match lz=off exactly.
+        let off = Sz::lv().compress(&noise, eb).unwrap();
+        assert_eq!(bytes, off);
+    }
+
+    #[test]
+    fn pooled_compress_is_byte_identical() {
+        use crate::exec::ExecCtx;
+        let xs: Vec<f32> = (0..30_000).map(|i| (i as f32 * 0.013).sin() * 40.0).collect();
+        let ctx = ExecCtx::sequential();
+        for comp in [
+            Sz::lv(),
+            Sz::lcf(),
+            Sz {
+                cfg: SzConfig {
+                    lz: LzMode::Best,
+                    ..Default::default()
+                },
+            },
+        ] {
+            let plain = comp.compress(&xs, 1e-4).unwrap();
+            // Twice: the second run reuses pooled buffers.
+            for _ in 0..2 {
+                let pooled = comp.compress_pooled(&ctx, &xs, 1e-4).unwrap();
+                assert_eq!(pooled, plain, "{}", comp.name());
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 //! Paper: +13% ratio and +10% rate over CPC2000 on AMDF.
 
 use crate::compressors::cpc2000::{decode_coords, decode_velocity, encode_coords};
-use crate::compressors::sz::Sz;
+use crate::compressors::sz::{LzMode, Sz, SzConfig};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::snapshot::{
@@ -17,7 +17,12 @@ const MAGIC: u8 = b'M';
 
 /// SZ-CPC2000 snapshot compressor.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct SzCpc2000;
+pub struct SzCpc2000 {
+    /// Entropy-gated LZ pass of the inner SZ velocity coder (`lz=`
+    /// codec param; the coordinate AVLE path is unaffected). The
+    /// `mode:best_compression` spec selects `best`.
+    pub lz: LzMode,
+}
 
 impl SzCpc2000 {
     /// Deterministic sort permutation (for tests/benches).
@@ -52,20 +57,20 @@ impl SnapshotCompressor for SzCpc2000 {
             n: snap.len() * 3,
             bytes: header,
         }];
-        let sz = Sz::lv();
+        let sz = Sz {
+            cfg: SzConfig {
+                lz: self.lz,
+                ..Default::default()
+            },
+        };
         // Velocity planes compress concurrently, each gathering through
         // the shared coordinate permutation fused into SZ quantization
-        // (no permuted array is materialized).
+        // (no permuted array is materialized); scratch cycles through
+        // the context's pools.
         let vel_idx: [usize; 3] = [0, 1, 2];
         let vels = ctx.try_par(&vel_idx, |&vi| {
-            let mut symbols = ctx.take_u32();
-            let bytes = sz.compress_gathered_trusted(
-                &snap.fields[3 + vi],
-                &perm,
-                ebs[3 + vi],
-                &mut symbols,
-            )?;
-            ctx.put_u32(symbols);
+            let bytes =
+                sz.compress_gathered_trusted(ctx, &snap.fields[3 + vi], &perm, ebs[3 + vi])?;
             Ok(CompressedField {
                 name: FIELD_NAMES[3 + vi].into(),
                 n: snap.len(),
@@ -132,7 +137,7 @@ mod tests {
     fn roundtrip_bound_after_permutation() {
         let s = md(40_000);
         let eb_rel = 1e-4;
-        let c = SzCpc2000;
+        let c = SzCpc2000::default();
         let bundle = c.compress(&s, eb_rel).unwrap();
         let recon = c.decompress(&bundle).unwrap();
         let perm = c.sort_permutation(&s, eb_rel).unwrap();
@@ -145,7 +150,7 @@ mod tests {
         // The paper's +13% claim (we accept any clear improvement).
         let s = md(120_000);
         let cpc = Cpc2000.compress(&s, 1e-4).unwrap().compression_ratio();
-        let ours = SzCpc2000.compress(&s, 1e-4).unwrap().compression_ratio();
+        let ours = SzCpc2000::default().compress(&s, 1e-4).unwrap().compression_ratio();
         // Paper: +13% at 2.8M particles; the margin shrinks at test
         // scale (Huffman table amortization), so require a clear +4%.
         assert!(
@@ -159,7 +164,7 @@ mod tests {
         // Both use the same stage-1..4 coordinate path.
         let s = md(20_000);
         let a = Cpc2000.compress(&s, 1e-4).unwrap();
-        let b = SzCpc2000.compress(&s, 1e-4).unwrap();
+        let b = SzCpc2000::default().compress(&s, 1e-4).unwrap();
         assert_eq!(a.fields[0].bytes[1..], b.fields[0].bytes[1..]);
     }
 }

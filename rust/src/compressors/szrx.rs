@@ -25,7 +25,7 @@ use crate::snapshot::{
     collect_fields, CompressedField, CompressedSnapshot, FieldCompressor, Snapshot,
     SnapshotCompressor, FIELD_IDX, FIELD_NAMES,
 };
-use crate::compressors::sz::{Sz, SzConfig};
+use crate::compressors::sz::{LzMode, Sz, SzConfig};
 
 /// SZ-LV with (partial) R-index sorting.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +40,8 @@ pub struct SzRx {
     pub source: RIndexSource,
     /// Inner SZ predictor (LV for all paper configurations).
     pub predictor: Predictor,
+    /// Inner SZ entropy-gated LZ pass (`lz=` codec param).
+    pub lz: LzMode,
 }
 
 impl SzRx {
@@ -50,6 +52,7 @@ impl SzRx {
             ignored_groups: 0,
             source: RIndexSource::Coordinates,
             predictor: Predictor::LastValue,
+            lz: LzMode::Off,
         }
     }
 
@@ -61,6 +64,7 @@ impl SzRx {
             ignored_groups: 6,
             source: RIndexSource::Coordinates,
             predictor: Predictor::LastValue,
+            lz: LzMode::Off,
         }
     }
 
@@ -120,16 +124,15 @@ impl SnapshotCompressor for SzRx {
         let sz = Sz {
             cfg: SzConfig {
                 predictor: self.predictor,
+                lz: self.lz,
                 ..Default::default()
             },
         };
         // Each plane gathers through the shared permutation on the fly
-        // (fused into quantization) and compresses independently.
+        // (fused into quantization) and compresses independently; all
+        // per-field scratch cycles through the context's pools.
         let fields = ctx.try_par(&FIELD_IDX, |&f| {
-            let mut symbols = ctx.take_u32();
-            let bytes =
-                sz.compress_gathered_trusted(&snap.fields[f], &perm, ebs[f], &mut symbols)?;
-            ctx.put_u32(symbols);
+            let bytes = sz.compress_gathered_trusted(ctx, &snap.fields[f], &perm, ebs[f])?;
             Ok(CompressedField {
                 name: FIELD_NAMES[f].into(),
                 n: snap.len(),

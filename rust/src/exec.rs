@@ -41,6 +41,7 @@ const POOL_ELEMS_CAP: usize = 1 << 22;
 struct Scratch {
     u32s: Mutex<Vec<Vec<u32>>>,
     f32s: Mutex<Vec<Vec<f32>>>,
+    i64s: Mutex<Vec<Vec<i64>>>,
 }
 
 fn pool_take<T>(pool: &Mutex<Vec<Vec<T>>>) -> Vec<T> {
@@ -177,6 +178,17 @@ impl ExecCtx {
     pub fn put_f32(&self, buf: Vec<f32>) {
         pool_put(&self.scratch.f32s, buf);
     }
+
+    /// Borrow an `i64` scratch buffer (the quantizer's difference-code
+    /// arrays). Return it with [`Self::put_i64`].
+    pub fn take_i64(&self) -> Vec<i64> {
+        pool_take(&self.scratch.i64s)
+    }
+
+    /// Return an `i64` scratch buffer to the pool.
+    pub fn put_i64(&self, buf: Vec<i64>) {
+        pool_put(&self.scratch.i64s, buf);
+    }
 }
 
 #[cfg(test)]
@@ -244,9 +256,15 @@ mod tests {
         let b2 = ctx.take_u32();
         assert!(b2.is_empty());
         assert_eq!(b2.capacity(), cap);
-        // f32 pool is independent.
+        // f32 / i64 pools are independent.
         let f = ctx.take_f32();
         assert!(f.is_empty());
         ctx.put_f32(f);
+        let mut k = ctx.take_i64();
+        assert!(k.is_empty());
+        k.extend(0..500i64);
+        let kcap = k.capacity();
+        ctx.put_i64(k);
+        assert_eq!(ctx.take_i64().capacity(), kcap);
     }
 }

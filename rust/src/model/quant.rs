@@ -27,6 +27,10 @@ use crate::error::{Error, Result};
 /// floating-point roundoff stays inside the user bound.
 pub const EB_SAFETY: f64 = 1.0 - 1e-6;
 
+/// Elements per chunk in the batched quantization loop: the f32 source
+/// buffer plus the i64 index buffer stay L1-resident (~6 KB).
+const QUANT_CHUNK: usize = 512;
+
 /// Prediction model (paper §V-A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Predictor {
@@ -157,7 +161,7 @@ impl LatticeQuantizer {
     /// Prefer [`Self::quantize_field`], which picks the margin-based
     /// fast path (no per-element verification) when the bound allows.
     pub fn quantize(&self, xs: &[f32], predictor: Predictor) -> QuantCodes {
-        self.quantize_impl(xs, predictor, true)
+        self.quantize_src(xs.len(), |i| xs[i], predictor, true, Vec::new())
     }
 
     /// Entry point used by the compressors: scans the field once for
@@ -165,10 +169,27 @@ impl LatticeQuantizer {
     /// elided, zero exceptions by construction) whenever the bound
     /// permits, falling back to the verified path otherwise.
     pub fn quantize_field(eb_abs: f64, xs: &[f32], predictor: Predictor) -> Result<QuantCodes> {
+        Self::quantize_field_into(eb_abs, xs, predictor, Vec::new())
+    }
+
+    /// [`Self::quantize_field`] writing the difference codes into a
+    /// caller-provided buffer (cleared and refilled here), so hot loops
+    /// can recycle the `n × 8`-byte code array through the
+    /// [`ExecCtx`](crate::exec::ExecCtx) `i64` pool instead of
+    /// allocating one per field. The buffer comes back as
+    /// [`QuantCodes::codes`]; return it to the pool after encoding.
+    pub fn quantize_field_into(
+        eb_abs: f64,
+        xs: &[f32],
+        predictor: Predictor,
+        codes_buf: Vec<i64>,
+    ) -> Result<QuantCodes> {
         let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
         match Self::with_cast_margin(eb_abs, max_abs) {
-            Some(q) => Ok(q.quantize_src(xs.len(), |i| xs[i], predictor, false)),
-            None => Ok(Self::new(eb_abs)?.quantize_src(xs.len(), |i| xs[i], predictor, true)),
+            Some(q) => Ok(q.quantize_src(xs.len(), |i| xs[i], predictor, false, codes_buf)),
+            None => {
+                Ok(Self::new(eb_abs)?.quantize_src(xs.len(), |i| xs[i], predictor, true, codes_buf))
+            }
         }
     }
 
@@ -198,7 +219,7 @@ impl LatticeQuantizer {
                 xs.len()
             )));
         }
-        Self::quantize_field_gathered_trusted(eb_abs, xs, perm, predictor)
+        Self::quantize_field_gathered_trusted(eb_abs, xs, perm, predictor, Vec::new())
     }
 
     /// [`Self::quantize_field_gathered`] minus the O(n) permutation
@@ -212,32 +233,41 @@ impl LatticeQuantizer {
         xs: &[f32],
         perm: &[u32],
         predictor: Predictor,
+        codes_buf: Vec<i64>,
     ) -> Result<QuantCodes> {
         debug_assert_eq!(xs.len(), perm.len());
         let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
         let at = |i: usize| xs[perm[i] as usize];
         match Self::with_cast_margin(eb_abs, max_abs) {
-            Some(q) => Ok(q.quantize_src(perm.len(), at, predictor, false)),
-            None => Ok(Self::new(eb_abs)?.quantize_src(perm.len(), at, predictor, true)),
+            Some(q) => Ok(q.quantize_src(perm.len(), at, predictor, false, codes_buf)),
+            None => Ok(Self::new(eb_abs)?.quantize_src(perm.len(), at, predictor, true, codes_buf)),
         }
-    }
-
-    fn quantize_impl(&self, xs: &[f32], predictor: Predictor, verify: bool) -> QuantCodes {
-        self.quantize_src(xs.len(), |i| xs[i], predictor, verify)
     }
 
     /// Core quantization loop over an arbitrary indexed source (direct
     /// slice access or an on-the-fly permutation gather). Monomorphized
-    /// per accessor, so the direct path compiles to the same loop as
-    /// before the gather fusion.
+    /// per accessor.
+    ///
+    /// The loop is chunked and branchless: per [`QUANT_CHUNK`]-element
+    /// chunk, pass A gathers sources and computes lattice indices with
+    /// no data-dependent branches (auto-vectorizes), pass B turns
+    /// indices into difference codes, and — verified path only — pass C
+    /// reduces the chunk to a single violation flag (again branchless)
+    /// and re-scans for exception literals only when the flag tripped,
+    /// so `exceptions.push` never appears in the hot loop. Codes and
+    /// exceptions are bit-identical to [`Self::quantize_reference`]
+    /// (asserted by tests).
     fn quantize_src(
         &self,
         n: usize,
         at: impl Fn(usize) -> f32,
         predictor: Predictor,
         verify: bool,
+        codes_buf: Vec<i64>,
     ) -> QuantCodes {
-        let mut codes = vec![0i64; n];
+        let mut codes = codes_buf;
+        codes.clear();
+        codes.resize(n, 0);
         let mut exceptions = Vec::new();
         if n == 0 {
             return QuantCodes {
@@ -250,44 +280,118 @@ impl LatticeQuantizer {
         }
         let anchor = at(0);
         let anchor64 = anchor as f64;
-        // k_i for every element (k_0 = 0 by construction).
-        let mut k_prev = 0i64; // k_{i-1}
-        let mut k_prev2 = 0i64; // k_{i-2}
-        match (predictor, verify) {
-            (Predictor::LastValue, false) => {
-                // Hot path: no verification, order-1 difference.
-                for i in 1..n {
-                    let k = ((at(i) as f64 - anchor64) * self.inv_step).round() as i64;
-                    codes[i] = k - k_prev;
-                    k_prev = k;
+        let mut xbuf = [0f32; QUANT_CHUNK];
+        let mut kbuf = [0i64; QUANT_CHUNK];
+        let mut k_prev = 0i64; // k_{i-1} entering the chunk (k_0 = 0)
+        let mut k_prev2 = 0i64; // k_{i-2} entering the chunk
+        let mut start = 1usize;
+        while start < n {
+            let m = (n - start).min(QUANT_CHUNK);
+            // Pass A: gather sources, compute lattice indices.
+            for (j, (x, k)) in xbuf[..m].iter_mut().zip(kbuf[..m].iter_mut()).enumerate() {
+                *x = at(start + j);
+                *k = ((*x as f64 - anchor64) * self.inv_step).round() as i64;
+            }
+            // Pass B: difference codes from the index buffer.
+            match predictor {
+                Predictor::LastValue => {
+                    let mut kp = k_prev;
+                    for (c, &k) in codes[start..start + m].iter_mut().zip(kbuf[..m].iter()) {
+                        *c = k - kp;
+                        kp = k;
+                    }
+                }
+                Predictor::LinearCurveFit => {
+                    let mut kp = k_prev;
+                    let mut kp2 = k_prev2;
+                    for (j, &k) in kbuf[..m].iter().enumerate() {
+                        // i == 1 has no k_{i-2}: first-order difference.
+                        let c = if start + j == 1 {
+                            k - kp
+                        } else {
+                            k - 2 * kp + kp2
+                        };
+                        codes[start + j] = c;
+                        kp2 = kp;
+                        kp = k;
+                    }
                 }
             }
-            _ => {
-                for i in 1..n {
-                    let x = at(i);
-                    let k = ((x as f64 - anchor64) * self.inv_step).round() as i64;
-                    codes[i] = match predictor {
-                        Predictor::LastValue => k - k_prev,
-                        Predictor::LinearCurveFit => {
-                            if i == 1 {
-                                k - k_prev
-                            } else {
-                                k - 2 * k_prev + k_prev2
-                            }
-                        }
-                    };
-                    if verify {
-                        // Element-wise check against the *user* bound
-                        // (SZ's unpredictable-data path).
+            // Pass C (verified path): branchless chunk flag, then a
+            // rare patch pass pushing exception literals.
+            if verify {
+                let mut any_bad = false;
+                for (&x, &k) in xbuf[..m].iter().zip(kbuf[..m].iter()) {
+                    let recon = ((anchor64 + 2.0 * self.eb_eff * (k as f64)) as f32) as f64;
+                    any_bad |= (recon - x as f64).abs() > self.eb_user;
+                }
+                if any_bad {
+                    for (j, (&x, &k)) in xbuf[..m].iter().zip(kbuf[..m].iter()).enumerate() {
                         let recon = self.value_at(k, anchor);
                         if ((recon as f64) - (x as f64)).abs() > self.eb_user {
-                            exceptions.push((i as u64, x));
+                            exceptions.push(((start + j) as u64, x));
                         }
                     }
-                    k_prev2 = k_prev;
-                    k_prev = k;
                 }
             }
+            let chunk_last_prev = k_prev;
+            k_prev = kbuf[m - 1];
+            k_prev2 = if m >= 2 { kbuf[m - 2] } else { chunk_last_prev };
+            start += m;
+        }
+        QuantCodes {
+            anchor,
+            codes,
+            exceptions,
+            predictor,
+            eb_eff: self.eb_eff,
+        }
+    }
+
+    /// The pre-batching single-loop implementation: predict, quantize,
+    /// verify, and push exceptions element by element. Kept as the
+    /// behavioral reference — tests assert the chunked two-pass path in
+    /// [`Self::quantize`] is bit-identical, and `benches/hotpath.rs`
+    /// reports fused-vs-split throughput against it.
+    pub fn quantize_reference(&self, xs: &[f32], predictor: Predictor, verify: bool) -> QuantCodes {
+        let n = xs.len();
+        let mut codes = vec![0i64; n];
+        let mut exceptions = Vec::new();
+        if n == 0 {
+            return QuantCodes {
+                anchor: 0.0,
+                codes,
+                exceptions,
+                predictor,
+                eb_eff: self.eb_eff,
+            };
+        }
+        let anchor = xs[0];
+        let anchor64 = anchor as f64;
+        let mut k_prev = 0i64;
+        let mut k_prev2 = 0i64;
+        for (i, &x) in xs.iter().enumerate().skip(1) {
+            let k = ((x as f64 - anchor64) * self.inv_step).round() as i64;
+            codes[i] = match predictor {
+                Predictor::LastValue => k - k_prev,
+                Predictor::LinearCurveFit => {
+                    if i == 1 {
+                        k - k_prev
+                    } else {
+                        k - 2 * k_prev + k_prev2
+                    }
+                }
+            };
+            if verify {
+                // Element-wise check against the *user* bound (SZ's
+                // unpredictable-data path).
+                let recon = self.value_at(k, anchor);
+                if ((recon as f64) - (x as f64)).abs() > self.eb_user {
+                    exceptions.push((i as u64, x));
+                }
+            }
+            k_prev2 = k_prev;
+            k_prev = k;
         }
         QuantCodes {
             anchor,
@@ -542,6 +646,61 @@ mod tests {
             Predictor::LastValue
         )
         .is_err());
+    }
+
+    #[test]
+    fn chunked_two_pass_matches_inline_reference_bitwise() {
+        // The batched quantizer (branchless chunked main loop + rare
+        // exception patch pass) must reproduce the old inline loop
+        // exactly: same codes, same exceptions, same reconstruction
+        // bits. Exercise chunk-boundary cases (n near multiples of the
+        // chunk size) and exception-heavy bounds.
+        let mut rng = crate::util::rng::Pcg64::seeded(23);
+        let mut xs: Vec<f32> = (0..2500)
+            .map(|i| (i as f32 * 0.01).sin() * 1000.0 + rng.normal() as f32)
+            .collect();
+        // A few huge outliers to stress escape-scale codes.
+        xs[700] = 3e7;
+        xs[701] = -3e7;
+        for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+            // Bounds from comfortable to below-ULP (everything excepts).
+            for eb in [1.0, 1e-3, 1e-6, 1e-9] {
+                for n in [0usize, 1, 2, 3, 511, 512, 513, 1024, 1025, 2500] {
+                    let q = LatticeQuantizer::new(eb).unwrap();
+                    let fast = q.quantize(&xs[..n], pred);
+                    let reference = q.quantize_reference(&xs[..n], pred, true);
+                    assert_eq!(fast.codes, reference.codes, "codes eb={eb} n={n} {pred:?}");
+                    assert_eq!(
+                        fast.exceptions, reference.exceptions,
+                        "exceptions eb={eb} n={n} {pred:?}"
+                    );
+                    assert_eq!(fast.anchor.to_bits(), reference.anchor.to_bits());
+                    let ra: Vec<u32> =
+                        q.reconstruct(&fast).iter().map(|v| v.to_bits()).collect();
+                    let rb: Vec<u32> =
+                        q.reconstruct(&reference).iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ra, rb, "reconstruction eb={eb} n={n} {pred:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_field_into_reuses_buffer_and_matches() {
+        let xs: Vec<f32> = (0..4000).map(|i| (i as f32 * 0.02).cos() * 7.0).collect();
+        let mut buf = Vec::with_capacity(8192);
+        let cap = buf.capacity();
+        buf.push(99i64); // stale content must not leak through
+        for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+            let plain = LatticeQuantizer::quantize_field(1e-4, &xs, pred).unwrap();
+            let pooled =
+                LatticeQuantizer::quantize_field_into(1e-4, &xs, pred, std::mem::take(&mut buf))
+                    .unwrap();
+            assert_eq!(plain.codes, pooled.codes);
+            assert_eq!(plain.exceptions, pooled.exceptions);
+            buf = pooled.codes;
+        }
+        assert!(buf.capacity() >= cap, "buffer capacity must be retained");
     }
 
     #[test]

@@ -221,17 +221,15 @@ pub trait FieldCompressor {
     /// Compress `xs` so every reconstructed value differs by at most
     /// `eb_abs`.
     fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>>;
-    /// [`Self::compress`] with a reusable `u32` scratch buffer (e.g. an
-    /// entropy-stage symbol stream). The default ignores the scratch;
-    /// compressors that materialize per-call `u32` state (SZ's symbol
-    /// vector) override it so [`PerField`]'s fan-out can recycle the
-    /// allocation through the [`ExecCtx`] pool.
-    fn compress_scratch(
-        &self,
-        xs: &[f32],
-        eb_abs: f64,
-        _scratch: &mut Vec<u32>,
-    ) -> Result<Vec<u8>> {
+    /// [`Self::compress`] with access to an [`ExecCtx`]'s scratch pools
+    /// (symbol streams, quantizer code arrays, LZ search arrays). The
+    /// default ignores the context; compressors that materialize
+    /// per-call buffers (SZ, the DEFLATE backend) override it so the
+    /// per-field fan-out recycles allocations instead of making `O(n)`
+    /// ones per field. MUST produce the same bytes as
+    /// [`Self::compress`] — the context only affects where scratch
+    /// memory comes from.
+    fn compress_pooled(&self, _ctx: &ExecCtx, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
         self.compress(xs, eb_abs)
     }
     /// Reconstruct the field (element count is embedded in the stream).
@@ -286,9 +284,9 @@ fn compress_one_field<T: FieldCompressor>(
     snap: &Snapshot,
     ebs: &[f64; 6],
     i: usize,
-    scratch: &mut Vec<u32>,
+    ctx: &ExecCtx,
 ) -> Result<CompressedField> {
-    let bytes = inner.compress_scratch(&snap.fields[i], ebs[i], scratch)?;
+    let bytes = inner.compress_pooled(ctx, &snap.fields[i], ebs[i])?;
     Ok(CompressedField {
         name: FIELD_NAMES[i].to_string(),
         n: snap.len(),
@@ -339,12 +337,7 @@ impl<T: FieldCompressor + Sync> SnapshotCompressor for PerField<T> {
         eb_rel: f64,
     ) -> Result<CompressedSnapshot> {
         let ebs = snap.abs_bounds(eb_rel);
-        let fields = ctx.try_par(&FIELD_IDX, |&i| {
-            let mut scratch = ctx.take_u32();
-            let field = compress_one_field(&self.0, snap, &ebs, i, &mut scratch);
-            ctx.put_u32(scratch);
-            field
-        })?;
+        let fields = ctx.try_par(&FIELD_IDX, |&i| compress_one_field(&self.0, snap, &ebs, i, ctx))?;
         Ok(CompressedSnapshot {
             compressor: self.name().to_string(),
             eb_rel,
@@ -375,15 +368,16 @@ impl<T: FieldCompressor> SnapshotCompressor for PerFieldSeq<T> {
 
     fn compress_with(
         &self,
-        _ctx: &ExecCtx,
+        ctx: &ExecCtx,
         snap: &Snapshot,
         eb_rel: f64,
     ) -> Result<CompressedSnapshot> {
         let ebs = snap.abs_bounds(eb_rel);
-        let mut scratch = Vec::new();
         let mut fields = Vec::with_capacity(6);
         for i in 0..6 {
-            fields.push(compress_one_field(&self.0, snap, &ebs, i, &mut scratch)?);
+            // Sequential by design (thread-affine inner compressors),
+            // but scratch still cycles through the context's pools.
+            fields.push(compress_one_field(&self.0, snap, &ebs, i, ctx)?);
         }
         Ok(CompressedSnapshot {
             compressor: self.name().to_string(),

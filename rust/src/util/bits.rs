@@ -8,6 +8,16 @@
 
 use crate::error::{Error, Result};
 
+/// Pack a `(code, len)` pair for [`BitWriter::put_pair`] /
+/// [`BitWriter::put_pairs`]: `(code << 6) | len`, `len` in `1..=32`.
+/// Entropy coders precompute these so the hot emit loop is one table
+/// load and one shift-or per symbol.
+#[inline]
+pub fn pack_pair(code: u32, len: u32) -> u64 {
+    debug_assert!((1..=32).contains(&len), "pair length {len} out of range");
+    ((code as u64) << 6) | len as u64
+}
+
 /// MSB-first bit writer with a 64-bit accumulator.
 #[derive(Default)]
 pub struct BitWriter {
@@ -38,7 +48,10 @@ impl BitWriter {
     #[inline]
     pub fn put(&mut self, v: u64, n: u32) {
         debug_assert!(n <= 32, "put() supports at most 32 bits per call (use put64)");
-        debug_assert!(n == 64 || v < (1u64 << n), "value {v} does not fit in {n} bits");
+        // n <= 32, so `1u64 << n` never overflows; for n == 0 this
+        // correctly demands v == 0 (a nonzero v would corrupt the
+        // accumulator).
+        debug_assert!(v < (1u64 << n), "value {v} does not fit in {n} bits");
         self.acc = (self.acc << n) | v;
         self.nbits += n;
         if self.nbits >= 32 {
@@ -57,6 +70,39 @@ impl BitWriter {
         } else if n > 0 {
             self.put(v & ((1u64 << n) - 1), n);
         }
+    }
+
+    /// Append one packed `(code, len)` pair (see [`pack_pair`]).
+    #[inline]
+    pub fn put_pair(&mut self, packed: u64) {
+        self.put(packed >> 6, (packed & 63) as u32);
+    }
+
+    /// Bulk path for entropy coders: append a stream of packed
+    /// `(code, len)` pairs (see [`pack_pair`]), keeping the 64-bit
+    /// accumulator in registers across the whole run and flushing whole
+    /// 32-bit words. Byte-identical to calling [`Self::put_pair`] per
+    /// element; measurably faster because the accumulator state is not
+    /// stored/reloaded through `self` on every symbol.
+    pub fn put_pairs<I: IntoIterator<Item = u64>>(&mut self, pairs: I) {
+        let mut acc = self.acc;
+        let mut nbits = self.nbits;
+        for p in pairs {
+            let len = (p & 63) as u32;
+            let code = p >> 6;
+            debug_assert!((1..=32).contains(&len), "pair length {len} out of range");
+            debug_assert!(code < (1u64 << len), "code {code} does not fit in {len} bits");
+            // Invariant (same as `put`): nbits <= 31 here, so
+            // nbits + len <= 63 never overflows the accumulator.
+            acc = (acc << len) | code;
+            nbits += len;
+            if nbits >= 32 {
+                nbits -= 32;
+                self.buf.extend_from_slice(&((acc >> nbits) as u32).to_be_bytes());
+            }
+        }
+        self.acc = acc;
+        self.nbits = nbits;
     }
 
     /// Append a single bit.
@@ -276,6 +322,38 @@ mod tests {
             assert_eq!(p, i % 16);
             r.consume(4).unwrap();
         }
+    }
+
+    #[test]
+    fn put_pairs_matches_per_symbol_put() {
+        let mut rng = Pcg64::seeded(41);
+        let pairs: Vec<(u32, u32)> = (0..5_000)
+            .map(|_| {
+                let n = 1 + rng.below(32) as u32;
+                let v = (rng.next_u64() as u32) & (((1u64 << n) - 1) as u32);
+                (v, n)
+            })
+            .collect();
+        let mut a = BitWriter::new();
+        for &(v, n) in &pairs {
+            a.put(v as u64, n);
+        }
+        let mut b = BitWriter::new();
+        b.put_pairs(pairs.iter().map(|&(v, n)| pack_pair(v, n)));
+        // A bulk run interleaved with scalar puts must also agree.
+        let mut c = BitWriter::new();
+        let mid = pairs.len() / 2;
+        for &(v, n) in &pairs[..7] {
+            c.put(v as u64, n);
+        }
+        c.put_pairs(pairs[7..mid].iter().map(|&(v, n)| pack_pair(v, n)));
+        for &(v, n) in &pairs[mid..mid + 3] {
+            c.put_pair(pack_pair(v, n));
+        }
+        c.put_pairs(pairs[mid + 3..].iter().map(|&(v, n)| pack_pair(v, n)));
+        let (a, b, c) = (a.finish(), b.finish(), c.finish());
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 
     #[test]

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Hot-path bench regression gate.
+
+Compares the freshly generated ``results/BENCH_hotpath.json`` against the
+checked-in ``results/BENCH_baseline.json`` and fails when any gated row's
+throughput drops more than the tolerance below its baseline. Rows are
+matched by ``(codec, threads)``; only rows present in the baseline are
+gated, so adding new bench rows never breaks the gate.
+
+Environment:
+  NBLC_BENCH_GATE=off|0|skip   skip entirely (cold/shared runners)
+  NBLC_BENCH_TOLERANCE=0.2     allowed fractional drop (default 20%)
+
+Exit status: 0 pass/skipped, 1 regression, 2 usage/parse error.
+"""
+
+import json
+import os
+import sys
+
+
+def load_rows(path):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for row in rows:
+        try:
+            out[(row["codec"], int(row["threads"]))] = float(row["mb_per_s"])
+        except (KeyError, TypeError, ValueError) as e:
+            print(f"error: malformed row {row!r} in {path}: {e}", file=sys.stderr)
+            sys.exit(2)
+    return out
+
+
+def main():
+    if os.environ.get("NBLC_BENCH_GATE", "").lower() in ("off", "0", "skip"):
+        print("bench gate: skipped (NBLC_BENCH_GATE set)")
+        return 0
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} <measured.json> <baseline.json>", file=sys.stderr)
+        return 2
+    measured = load_rows(sys.argv[1])
+    baseline = load_rows(sys.argv[2])
+    try:
+        tolerance = float(os.environ.get("NBLC_BENCH_TOLERANCE", "0.2"))
+    except ValueError:
+        print("error: NBLC_BENCH_TOLERANCE is not a number", file=sys.stderr)
+        return 2
+
+    failures = []
+    for key, base in sorted(baseline.items()):
+        codec, threads = key
+        floor = base * (1.0 - tolerance)
+        got = measured.get(key)
+        if got is None:
+            failures.append(f"{codec}@{threads}t: row missing from measured results")
+            continue
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(
+            f"bench gate: {codec}@{threads}t {got:8.2f} MB/s"
+            f"  (baseline {base:.2f}, floor {floor:.2f})  {verdict}"
+        )
+        if got < floor:
+            failures.append(
+                f"{codec}@{threads}t: {got:.2f} MB/s is more than "
+                f"{tolerance:.0%} below baseline {base:.2f} MB/s"
+            )
+    if failures:
+        for f in failures:
+            print(f"bench gate FAILED: {f}", file=sys.stderr)
+        print(
+            "Re-baseline results/BENCH_baseline.json if this drop is intended, "
+            "or set NBLC_BENCH_GATE=off on cold runners.",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench gate: all gated rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
