@@ -11,6 +11,7 @@ use nblc::compressors::{mode_compressor, registry, Mode};
 use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::coordinator::choose_compressor;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::snapshot::FieldCompressor;
 use nblc::util::stats::value_range;
 use nblc::util::timer::time_it;
@@ -97,7 +98,7 @@ fn main() {
                 workers: 1,
                 threads: 1,
                 queue_depth: depth,
-                eb_rel: EB_REL,
+                quality: Quality::rel(EB_REL),
                 factory,
                 sink: Sink::Null,
             },
@@ -120,13 +121,13 @@ fn main() {
     for req in [Mode::BestCompression, Mode::BestSpeed] {
         let routed = choose_compressor(&hacc, req);
         let ratio = mode_compressor(routed)
-            .compress(&hacc, EB_REL)
+            .compress(&hacc, &Quality::rel(EB_REL))
             .unwrap()
             .compression_ratio();
         t4.row(vec![req.name().into(), routed.name().into(), f2(ratio)]);
     }
     let unrouted = mode_compressor(Mode::BestCompression)
-        .compress(&hacc, EB_REL)
+        .compress(&hacc, &Quality::rel(EB_REL))
         .unwrap()
         .compression_ratio();
     t4.row(vec![

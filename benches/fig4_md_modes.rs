@@ -6,6 +6,7 @@
 use nblc::bench::{f1, f2, Table, EB_REL};
 use nblc::compressors::registry;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::util::timer::bench_min_time;
 
 fn main() {
@@ -24,8 +25,9 @@ fn main() {
     let mut results = Vec::new();
     for name in ["fpzip", "zfp", "sz", "cpc2000", "sz_lv", "sz_lv_rx", "sz_lv_prx", "sz_cpc2000"] {
         let comp = registry::build_str(name).unwrap();
-        let bundle = comp.compress(&s, EB_REL).unwrap();
-        let secs = bench_min_time(0.5, 2, || comp.compress(&s, EB_REL).unwrap());
+        let q = Quality::rel(EB_REL);
+        let bundle = comp.compress(&s, &q).unwrap();
+        let secs = bench_min_time(0.5, 2, || comp.compress(&s, &q).unwrap());
         let ratio = bundle.compression_ratio();
         let rate = mb / secs;
         results.push((name, ratio, rate));

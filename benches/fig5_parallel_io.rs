@@ -12,6 +12,7 @@ use nblc::bench::{f1, f2, pct, Table, EB_REL};
 use nblc::compressors::registry;
 use nblc::coordinator::GpfsModel;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::util::timer::time_it;
 
 fn main() {
@@ -22,7 +23,7 @@ fn main() {
     let mut measured = Vec::new();
     for name in ["zfp", "fpzip", "sz_lv"] {
         let comp = registry::build_str(name).unwrap();
-        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        let (bundle, secs) = time_it(|| comp.compress(&s, &Quality::rel(EB_REL)).unwrap());
         measured.push((name, mb * 1e6 / secs, bundle.compression_ratio()));
         println!(
             "measured {name}: {:.1} MB/s, ratio {:.2}",

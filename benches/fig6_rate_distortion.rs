@@ -13,13 +13,14 @@ use nblc::compressors::zfp::Zfp;
 use nblc::data::DatasetKind;
 use nblc::metrics::ratedist::{rate_distortion_curve, standard_bounds};
 use nblc::metrics::{ErrorStats, RdPoint};
+use nblc::quality::Quality;
 use nblc::snapshot::{PerField, Snapshot, SnapshotCompressor};
 
 fn fpzip_curve(s: &Snapshot) -> Vec<RdPoint> {
     let mut out = Vec::new();
     for p in [10u32, 12, 14, 16, 18, 20, 24, 28] {
         let comp = PerField(Fpzip::with_retained(p));
-        let Ok(bundle) = comp.compress(s, 1e-4) else { continue };
+        let Ok(bundle) = comp.compress(s, &Quality::rel(1e-4)) else { continue };
         let Ok(recon) = comp.decompress(&bundle) else { continue };
         let Ok(psnr) = ErrorStats::snapshot_psnr(s, &recon) else { continue };
         out.push(RdPoint {

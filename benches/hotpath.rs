@@ -18,6 +18,7 @@ use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::DatasetKind;
 use nblc::exec::ExecCtx;
 use nblc::model::quant::{LatticeQuantizer, Predictor};
+use nblc::quality::{Quality, SnapshotStats};
 use nblc::rindex::morton::interleave3;
 use nblc::rindex::sort::sort_perm;
 use nblc::snapshot::FieldCompressor;
@@ -255,6 +256,40 @@ fn main() {
         "MB/s".into(),
     ]);
 
+    // Planning stage (stats sampling + sample-compress plan): the
+    // whole point of a cheap plan is that it costs a negligible
+    // fraction of a real compress, so measure both and report the
+    // overhead percentage. The JSON row records the plan throughput in
+    // MB/s of *planned* (full-snapshot) data, so the CI gate can pin
+    // it like any other row.
+    let plan_quality = Quality::rel(EB_REL);
+    let plan_codec = registry::build_str("sz_lv").unwrap();
+    let t_plan = bench_min_time(0.5, 3, || {
+        let stats = SnapshotStats::collect(&s);
+        plan_codec.plan(&stats, &plan_quality).unwrap()
+    });
+    let t_full = bench_min_time(1.0, 3, || {
+        plan_codec
+            .compress_with(&ExecCtx::sequential(), &s, &plan_quality)
+            .unwrap()
+    });
+    let total_mb_all = s.total_bytes() as f64 / 1e6;
+    let overhead = t_plan / t_full * 100.0;
+    t.row(vec![
+        "plan (stats + sample compress)".into(),
+        format!("{:.1}", total_mb_all / t_plan),
+        "MB/s planned".into(),
+    ]);
+    t.row(vec![
+        "plan overhead vs sz_lv compress".into(),
+        format!("{overhead:.2}"),
+        "% (target < 1%)".into(),
+    ]);
+    json_rows.push(("plan:sz_lv".into(), 1, total_mb_all / t_plan));
+    if overhead >= 1.0 {
+        eprintln!("WARNING: plan overhead {overhead:.2}% exceeds the 1% budget");
+    }
+
     t.print();
     t.write_csv("hotpath").unwrap();
 
@@ -272,7 +307,7 @@ fn main() {
         // Byte-identity across budgets is enforced by the test suite
         // (tests/parallel_determinism.rs); no redundant smoke here.
         bench_scaling(&mut engine, &mut json_rows, n_threads, total_mb, spec, spec, |ctx| {
-            comp.compress_with(ctx, &s, EB_REL).unwrap();
+            comp.compress_with(ctx, &s, &Quality::rel(EB_REL)).unwrap();
         });
     }
     engine.print();
@@ -293,7 +328,7 @@ fn main() {
             workers: n_threads.clamp(1, decode_shard_count),
             threads: 1,
             queue_depth: 4,
-            eb_rel: EB_REL,
+            quality: Quality::rel(EB_REL),
             factory: registry::factory(&arch_spec).unwrap(),
             sink: Sink::Archive {
                 path: arch_path.clone(),

@@ -12,6 +12,7 @@ use nblc::compressors::szcpc::SzCpc2000;
 use nblc::compressors::szrx::SzRx;
 use nblc::data::DatasetKind;
 use nblc::metrics::ErrorStats;
+use nblc::quality::Quality;
 use nblc::snapshot::Snapshot;
 
 fn max_rel_err(orig: &Snapshot, recon: &Snapshot) -> f64 {
@@ -32,7 +33,7 @@ fn main() {
     );
     for name in ["cpc2000", "zfp", "sz", "sz_lv", "sz_lv_prx", "sz_cpc2000", "fpzip"] {
         let comp = registry::build_str(name).unwrap();
-        let bundle = comp.compress(&s, EB_REL).unwrap();
+        let bundle = comp.compress(&s, &Quality::rel(EB_REL)).unwrap();
         let recon = comp.decompress(&bundle).unwrap();
         // Reordering methods: align with their deterministic permutation.
         let reference = match name {

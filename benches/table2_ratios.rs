@@ -9,6 +9,7 @@
 use nblc::bench::{f2, Table, EB_REL};
 use nblc::compressors::{registry, table2_lineup};
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 
 fn main() {
     let paper: &[(&str, f64, f64)] = &[
@@ -32,11 +33,11 @@ fn main() {
     for name in table2_lineup() {
         let comp = registry::build_str(name).unwrap();
         let rh = comp
-            .compress(&hacc, EB_REL)
+            .compress(&hacc, &Quality::rel(EB_REL))
             .map(|b| b.compression_ratio())
             .unwrap_or(f64::NAN);
         let ra = comp
-            .compress(&amdf, EB_REL)
+            .compress(&amdf, &Quality::rel(EB_REL))
             .map(|b| b.compression_ratio())
             .unwrap_or(f64::NAN);
         let (ph, pa) = paper

@@ -6,6 +6,7 @@ use nblc::bench::{f1, f2, Table, EB_REL};
 use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::snapshot::{PerField, SnapshotCompressor};
 use nblc::util::timer::time_it;
 
@@ -16,14 +17,14 @@ fn main() {
         &format!("Table IV: SZ-LV-RX segment-size sweep on AMDF (n={})", s.len()),
         &["Method", "Segment", "Ratio", "Rate (MB/s)"],
     );
-    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, EB_REL).unwrap());
+    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, &Quality::rel(EB_REL)).unwrap());
     let plain_ratio = plain.compression_ratio();
     t.row(vec!["SZ-LV".into(), "/".into(), f2(plain_ratio), f1(mb / secs)]);
     let mut last_ratio = 0.0;
     for seg in [1024usize, 2048, 4096, 8192, 16384] {
         // The Table IV sweep, expressed as parameterized codec specs.
         let comp = registry::build_str(&format!("sz_lv_rx:segment={seg}")).unwrap();
-        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        let (bundle, secs) = time_it(|| comp.compress(&s, &Quality::rel(EB_REL)).unwrap());
         let ratio = bundle.compression_ratio();
         t.row(vec![
             "SZ-LV-RX".into(),

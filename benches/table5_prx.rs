@@ -7,6 +7,7 @@ use nblc::bench::{f1, f2, f3, Table, EB_REL};
 use nblc::compressors::szrx::SzRx;
 use nblc::compressors::sz::Sz;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::snapshot::{PerField, SnapshotCompressor};
 use nblc::util::timer::time_it;
 
@@ -17,7 +18,7 @@ fn main() {
         &format!("Table V: SZ-LV-PRX ignored-bits sweep, segment 16384 (n={})", s.len()),
         &["Method", "Segment", "Ignored 3-bit groups", "Ratio", "Rate (MB/s)"],
     );
-    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, EB_REL).unwrap());
+    let (plain, secs) = time_it(|| PerField(Sz::lv()).compress(&s, &Quality::rel(EB_REL)).unwrap());
     t.row(vec![
         "SZ-LV".into(),
         "/".into(),
@@ -31,7 +32,7 @@ fn main() {
             ignored_groups: groups,
             ..SzRx::rx(16384)
         };
-        let (bundle, secs) = time_it(|| comp.compress(&s, EB_REL).unwrap());
+        let (bundle, secs) = time_it(|| comp.compress(&s, &Quality::rel(EB_REL)).unwrap());
         let ratio = bundle.compression_ratio();
         if groups == 0 {
             full_rx_ratio = ratio;

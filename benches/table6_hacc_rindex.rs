@@ -8,6 +8,7 @@ use nblc::compressors::cpc2000::Cpc2000;
 use nblc::compressors::sz::Sz;
 use nblc::compressors::szrx::SzRx;
 use nblc::data::DatasetKind;
+use nblc::quality::Quality;
 use nblc::rindex::RIndexSource;
 use nblc::snapshot::{FieldCompressor, SnapshotCompressor, FIELD_NAMES};
 use nblc::util::stats::value_range;
@@ -32,7 +33,7 @@ fn main() {
 
     // CPC2000 per-variable: coords share the joint R-index stream (the
     // paper reports the same 7.1 for xx/yy/zz); velocities are separate.
-    let cpc = Cpc2000.compress(&s, EB_REL).unwrap();
+    let cpc = Cpc2000.compress(&s, &Quality::rel(EB_REL)).unwrap();
     let coord_ratio = (s.len() * 3 * 4) as f64 / cpc.fields[0].bytes.len() as f64;
     let cpc_per: Vec<f64> = (0..6)
         .map(|f| {

@@ -19,6 +19,7 @@ use nblc::compressors::{registry, Mode};
 use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
 use nblc::coordinator::{choose_compressor, GpfsModel};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
+use nblc::quality::Quality;
 use nblc::runtime::quantizer::SzPjrt;
 use nblc::snapshot::{verify_bounds, PerField, PerFieldSeq, SnapshotCompressor};
 use nblc::util::humansize;
@@ -31,6 +32,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1_000_000);
     let eb_rel = 1e-4;
+    let quality = Quality::rel(eb_rel);
 
     println!("=== nblc end-to-end in-situ driver (HACC-like, n={n}) ===\n");
     let t = Timer::start();
@@ -78,7 +80,7 @@ fn main() {
             workers: 1,
             threads: 1,
             queue_depth: 4,
-            eb_rel,
+            quality: quality.clone(),
             factory,
             sink: Sink::Model {
                 model: GpfsModel::default(),
@@ -102,7 +104,7 @@ fn main() {
     // a performance proxy — DESIGN.md par.Hardware-Adaptation).
     let comp = PerField(Sz::lv());
     let t_native = Timer::start();
-    let bundle = comp.compress(&snap, eb_rel).expect("compress");
+    let bundle = comp.compress(&snap, &quality).expect("compress");
     let native_rate = snap.total_bytes() as f64 / t_native.secs();
     let recon = comp.decompress(&bundle).expect("decompress");
     verify_bounds(&snap, &recon, eb_rel).expect("bound verification");

@@ -6,6 +6,7 @@
 
 use nblc::compressors::{mode_compressor, Mode};
 use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::quality::Quality;
 use nblc::util::humansize;
 use nblc::util::timer::time_it;
 
@@ -15,6 +16,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(500_000);
     let eb_rel = 1e-4;
+    let quality = Quality::rel(eb_rel);
     let snap = generate_md(&MdConfig {
         n_particles: n,
         ..Default::default()
@@ -41,7 +43,7 @@ fn main() {
     .zip(advice)
     {
         let comp = mode_compressor(mode);
-        let (bundle, secs) = time_it(|| comp.compress(&snap, eb_rel).unwrap());
+        let (bundle, secs) = time_it(|| comp.compress(&snap, &quality).unwrap());
         rows.push((mode, bundle.compression_ratio(), mb / secs));
         println!(
             "{:<18} {:>8.2} {:>10.1} MB/s {:>14}",

@@ -3,6 +3,7 @@
 
 use nblc::compressors::{mode_compressor, registry, Mode};
 use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::quality::Quality;
 use nblc::util::stats::entropy_bits;
 use nblc::util::timer::time_it;
 
@@ -16,10 +17,11 @@ fn main() {
         ..Default::default()
     });
     let eb_rel = 1e-4;
+    let quality = Quality::rel(eb_rel);
 
     for name in ["cpc2000", "sz_cpc2000", "sz_lv", "sz_lv_prx"] {
         let c = registry::build_str(name).unwrap();
-        let (bundle, secs) = time_it(|| c.compress(&s, eb_rel).unwrap());
+        let (bundle, secs) = time_it(|| c.compress(&s, &quality).unwrap());
         println!(
             "{name:12} ratio={:.3} rate={:.1} MB/s",
             bundle.compression_ratio(),
@@ -46,7 +48,7 @@ fn main() {
 
     for mode in [Mode::BestSpeed, Mode::BestTradeoff, Mode::BestCompression] {
         let c = mode_compressor(mode);
-        let (bundle, secs) = time_it(|| c.compress(&s, eb_rel).unwrap());
+        let (bundle, secs) = time_it(|| c.compress(&s, &quality).unwrap());
         println!(
             "{:16} ratio={:.3} rate={:.1} MB/s",
             mode.name(),

@@ -6,11 +6,13 @@
 
 use nblc::compressors::{full_lineup, registry};
 use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::quality::Quality;
 use nblc::snapshot::verify_bounds;
 use nblc::util::timer::time_it;
 
 fn main() {
     let eb_rel = 1e-4;
+    let quality = Quality::rel(eb_rel);
     let snap = generate_md(&MdConfig {
         n_particles: 200_000,
         ..Default::default()
@@ -26,7 +28,7 @@ fn main() {
     );
     for name in full_lineup() {
         let comp = registry::build_str(name).unwrap();
-        let (bundle, t_c) = time_it(|| comp.compress(&snap, eb_rel).unwrap());
+        let (bundle, t_c) = time_it(|| comp.compress(&snap, &quality).unwrap());
         let (recon, t_d) = time_it(|| comp.decompress(&bundle).unwrap());
         // Reordering methods return a consistent permutation of the
         // particles; align with the deterministic sort to verify.

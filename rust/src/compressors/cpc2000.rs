@@ -18,6 +18,7 @@
 use crate::codec::avle::{AvleDecoder, AvleEncoder};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
+use crate::quality::{self, Quality};
 use crate::rindex::morton::{deinterleave3, interleave3};
 use crate::rindex::sort::sort_perm;
 use crate::snapshot::{
@@ -266,10 +267,17 @@ pub(crate) fn decode_velocity(bytes: &[u8], pos: &mut usize) -> Result<Vec<f32>>
 impl Cpc2000 {
     /// The deterministic sort permutation CPC2000 applies for a given
     /// snapshot and bound (exposed so tests and benches can align the
-    /// original particles with the reordered reconstruction).
+    /// original particles with the reordered reconstruction), legacy
+    /// value-range-relative spelling.
     pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Result<Vec<u32>> {
         let ebs = snap.abs_bounds(eb_rel);
-        let (_, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        self.sort_permutation_abs(snap, [ebs[0], ebs[1], ebs[2]])
+    }
+
+    /// [`Self::sort_permutation`] under explicit absolute coordinate
+    /// bounds (what a resolved [`Quality`] supplies).
+    pub fn sort_permutation_abs(&self, snap: &Snapshot, ebs: [f64; 3]) -> Result<Vec<u32>> {
+        let (_, perm, _) = encode_coords(snap.coords(), ebs)?;
         Ok(perm)
     }
 }
@@ -287,9 +295,10 @@ impl SnapshotCompressor for Cpc2000 {
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot> {
-        let ebs = snap.abs_bounds(eb_rel);
+        let ebs = quality.resolve(snap);
+        quality::ensure_no_exact(self.name(), &ebs)?;
         let (coord_bytes, perm, _grids) =
             encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
         let mut header = vec![MAGIC];
@@ -317,7 +326,8 @@ impl SnapshotCompressor for Cpc2000 {
         fields.extend(vels);
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
-            eb_rel,
+            eb_rel: quality.legacy_rel(),
+            field_bounds: Some(ebs),
             fields,
             n: snap.len(),
         })
@@ -364,7 +374,7 @@ mod tests {
         let s = md(30_000);
         let eb_rel = 1e-4;
         let c = Cpc2000;
-        let bundle = c.compress(&s, eb_rel).unwrap();
+        let bundle = c.compress(&s, &Quality::rel(eb_rel)).unwrap();
         let recon = c.decompress(&bundle).unwrap();
         assert_eq!(recon.len(), s.len());
         // Align with the deterministic sort permutation.
@@ -377,7 +387,7 @@ mod tests {
     fn ratio_beats_gzip_band() {
         // Table II: CPC2000 ~3.2 on AMDF.
         let s = md(100_000);
-        let bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let bundle = Cpc2000.compress(&s, &Quality::rel(1e-4)).unwrap();
         let ratio = bundle.compression_ratio();
         assert!(ratio > 2.0, "cpc2000 ratio {ratio:.2}");
     }
@@ -387,7 +397,7 @@ mod tests {
         // §V-B: "CPC2000's compression ratio is 2x higher than SZ's on
         // the coordinate variables" — coord section beats velocities.
         let s = md(100_000);
-        let bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let bundle = Cpc2000.compress(&s, &Quality::rel(1e-4)).unwrap();
         let coords_ratio = (s.len() * 3 * 4) as f64 / bundle.fields[0].bytes.len() as f64;
         let vel_bytes: usize = bundle.fields[1..].iter().map(|f| f.bytes.len()).sum();
         let vel_ratio = (s.len() * 3 * 4) as f64 / vel_bytes as f64;
@@ -401,7 +411,7 @@ mod tests {
     fn small_snapshots() {
         for n in [1usize, 2, 5, 63] {
             let s = md(n.max(1));
-            let bundle = Cpc2000.compress(&s, 1e-3).unwrap();
+            let bundle = Cpc2000.compress(&s, &Quality::rel(1e-3)).unwrap();
             let recon = Cpc2000.decompress(&bundle).unwrap();
             assert_eq!(recon.len(), s.len());
         }
@@ -411,14 +421,14 @@ mod tests {
     fn too_small_bound_is_clean_error() {
         let s = md(1000);
         // eb_rel so small the 21-bit Morton grid cannot honour it.
-        let r = Cpc2000.compress(&s, 1e-9);
+        let r = Cpc2000.compress(&s, &Quality::rel(1e-9));
         assert!(r.is_err());
     }
 
     #[test]
     fn corrupt_bundle_rejected() {
         let s = md(5000);
-        let mut bundle = Cpc2000.compress(&s, 1e-4).unwrap();
+        let mut bundle = Cpc2000.compress(&s, &Quality::rel(1e-4)).unwrap();
         let half = bundle.fields[0].bytes.len() / 2;
         bundle.fields[0].bytes.truncate(half);
         assert!(Cpc2000.decompress(&bundle).is_err());

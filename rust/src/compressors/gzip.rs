@@ -3,9 +3,8 @@
 //! paper configures GZIP in Table II). Lossless — the error bound is
 //! ignored (it is trivially satisfied).
 
-use crate::codec::lz77;
-use crate::error::{Error, Result};
-use crate::snapshot::FieldCompressor;
+use crate::error::Result;
+use crate::snapshot::{lossless_field_bytes, lossless_field_decode, FieldCompressor};
 
 /// Lossless GZIP-like field compressor.
 #[derive(Clone, Copy, Debug, Default)]
@@ -16,12 +15,14 @@ impl FieldCompressor for Gzip {
         "gzip"
     }
 
+    /// Exact regardless of the bound — exact-coding requests reach
+    /// [`Self::compress`] directly instead of the adapters' fallback.
+    fn is_lossless(&self) -> bool {
+        true
+    }
+
     fn compress(&self, xs: &[f32], _eb_abs: f64) -> Result<Vec<u8>> {
-        let mut raw = Vec::with_capacity(xs.len() * 4);
-        for &x in xs {
-            raw.extend_from_slice(&x.to_le_bytes());
-        }
-        lz77::compress(&raw, lz77::Effort::Best)
+        lossless_field_bytes(None, xs)
     }
 
     fn compress_pooled(
@@ -30,22 +31,11 @@ impl FieldCompressor for Gzip {
         xs: &[f32],
         _eb_abs: f64,
     ) -> Result<Vec<u8>> {
-        let mut raw = Vec::with_capacity(xs.len() * 4);
-        for &x in xs {
-            raw.extend_from_slice(&x.to_le_bytes());
-        }
-        lz77::compress_ctx(&raw, lz77::Effort::Best, Some(ctx))
+        lossless_field_bytes(Some(ctx), xs)
     }
 
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>> {
-        let raw = lz77::decompress(bytes)?;
-        if raw.len() % 4 != 0 {
-            return Err(Error::corrupt("gzip payload not a multiple of 4 bytes"));
-        }
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        lossless_field_decode(bytes)
     }
 }
 

@@ -31,11 +31,15 @@ pub use registry::{CodecEntry, CodecSpec, ParamDef, ParamKind};
 use crate::snapshot::SnapshotCompressor;
 
 /// Instantiate a snapshot compressor by its table name (or any codec
-/// spec — this is a thin wrapper over [`registry::build_str`]).
+/// spec — this is a thin wrapper over [`registry::try_build_str`]).
 /// Recognised bare names: `gzip, cpc2000, fpzip, isabela, zfp, sz
 /// (alias sz_lcf), sz_lv, sz_lv_rx, sz_lv_prx, sz_cpc2000, mode`.
+///
+/// The `Option` return swallows the registry's diagnostics (WHY a spec
+/// is invalid); anything user-facing should call
+/// [`registry::try_build_str`] and print the typed error instead.
 pub fn by_name(name: &str) -> Option<Box<dyn SnapshotCompressor>> {
-    registry::build_str(name).ok()
+    registry::try_build_str(name).ok()
 }
 
 /// The Table II lineup (state of the art before the paper's methods).

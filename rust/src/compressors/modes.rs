@@ -66,6 +66,7 @@ pub fn mode_compressor(mode: Mode) -> Box<dyn SnapshotCompressor> {
 mod tests {
     use super::*;
     use crate::data::gen_md::{generate_md, MdConfig};
+    use crate::quality::Quality;
     use crate::util::timer::time_it;
 
     #[test]
@@ -105,8 +106,9 @@ mod tests {
         });
         let speed = mode_compressor(Mode::BestSpeed);
         let comp = mode_compressor(Mode::BestCompression);
-        let (b_speed, t_speed) = time_it(|| speed.compress(&s, 1e-4).unwrap());
-        let (b_comp, t_comp) = time_it(|| comp.compress(&s, 1e-4).unwrap());
+        let q = Quality::rel(1e-4);
+        let (b_speed, t_speed) = time_it(|| speed.compress(&s, &q).unwrap());
+        let (b_comp, t_comp) = time_it(|| comp.compress(&s, &q).unwrap());
         assert!(
             b_comp.compression_ratio() > b_speed.compression_ratio(),
             "ratio: compression {:.3} vs speed {:.3}",
@@ -128,16 +130,17 @@ mod tests {
             n_particles: 150_000,
             ..Default::default()
         });
+        let q = Quality::rel(1e-4);
         let r_speed = mode_compressor(Mode::BestSpeed)
-            .compress(&s, 1e-4)
+            .compress(&s, &q)
             .unwrap()
             .compression_ratio();
         let r_trade = mode_compressor(Mode::BestTradeoff)
-            .compress(&s, 1e-4)
+            .compress(&s, &q)
             .unwrap()
             .compression_ratio();
         let r_comp = mode_compressor(Mode::BestCompression)
-            .compress(&s, 1e-4)
+            .compress(&s, &q)
             .unwrap()
             .compression_ratio();
         assert!(r_trade > r_speed, "tradeoff {r_trade:.3} vs speed {r_speed:.3}");

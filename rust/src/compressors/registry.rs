@@ -31,6 +31,7 @@ use crate::compressors::zfp::Zfp;
 use crate::coordinator::pipeline::CompressorFactory;
 use crate::error::{Error, Result};
 use crate::model::quant::Predictor;
+use crate::quality::{self, ErrorBound, Plan, Quality, SnapshotStats};
 use crate::rindex::RIndexSource;
 use crate::snapshot::{PerField, SnapshotCompressor};
 use std::collections::BTreeMap;
@@ -141,6 +142,10 @@ pub enum ParamKind {
     Bool,
     /// One of a fixed set of identifiers.
     Choice(&'static [&'static str]),
+    /// A typed quality target: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`,
+    /// `lossless`, or a bare float (deprecated `rel:` spelling) — see
+    /// [`crate::quality::ErrorBound::parse`].
+    ErrorBound,
 }
 
 impl ParamKind {
@@ -150,11 +155,16 @@ impl ParamKind {
             ParamKind::Int { min, max } => format!("int {min}..={max}"),
             ParamKind::Bool => "bool".into(),
             ParamKind::Choice(opts) => opts.join("|"),
+            ParamKind::ErrorBound => "abs:<v>|rel:<v>|pw_rel:<v>|lossless".into(),
         }
     }
 
     fn check(&self, key: &str, value: &str) -> Result<()> {
         match self {
+            ParamKind::ErrorBound => {
+                ErrorBound::parse(value)
+                    .map_err(|e| Error::invalid(format!("parameter '{key}': {e}")))?;
+            }
             ParamKind::Int { min, max } => {
                 let v: i64 = value.parse().map_err(|_| {
                     Error::invalid(format!("parameter '{key}': '{value}' is not an integer"))
@@ -380,7 +390,19 @@ const LZ_PARAM: ParamDef = ParamDef {
     help: "entropy-gated LZ77 pass over the payload (best_speed: off, best_compression: best)",
 };
 
-const SZ_SHARED_PARAMS: [ParamDef; 3] = [
+/// The `eb=` quality-hint parameter accepted by every concrete codec
+/// entry: a typed [`ErrorBound`] drivers use as the *default* quality
+/// when no `--quality`/`--eb` is given (`quality_hint`). Never part of
+/// the canonical (archived) spec — the archive's quality block records
+/// the bound that was actually enforced.
+const EB_PARAM: ParamDef = ParamDef {
+    key: "eb",
+    kind: ParamKind::ErrorBound,
+    default: "rel:1e-4",
+    help: "quality target hint (abs:<v>|rel:<v>|pw_rel:<v>|lossless); drivers use it when no explicit quality is given",
+};
+
+const SZ_SHARED_PARAMS: [ParamDef; 4] = [
     ParamDef {
         key: "radius",
         kind: ParamKind::Int { min: 2, max: 1 << 30 },
@@ -394,9 +416,10 @@ const SZ_SHARED_PARAMS: [ParamDef; 3] = [
         default: "false",
         help: "deprecated alias kept for old specs/archives: lossless=true means lz=fast",
     },
+    EB_PARAM,
 ];
 
-const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 4] {
+const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 5] {
     [
         ParamDef {
             key: "segment",
@@ -417,11 +440,12 @@ const fn szrx_params(segment: &'static str, ignore: &'static str) -> [ParamDef; 
             help: "fields feeding the R-index (Table VI)",
         },
         LZ_PARAM,
+        EB_PARAM,
     ]
 }
 
-static RX_PARAMS: [ParamDef; 4] = szrx_params("16384", "0");
-static PRX_PARAMS: [ParamDef; 4] = szrx_params("16384", "6");
+static RX_PARAMS: [ParamDef; 5] = szrx_params("16384", "0");
+static PRX_PARAMS: [ParamDef; 5] = szrx_params("16384", "6");
 
 /// The registry: every codec the crate can build.
 pub static REGISTRY: &[CodecEntry] = &[
@@ -431,7 +455,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "lossless DEFLATE-style baseline, per field",
         reorders: false,
         positional: None,
-        params: &[],
+        params: &[EB_PARAM],
         build: build_gzip,
     },
     CodecEntry {
@@ -440,7 +464,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "R-index sorting + delta/AVLE coordinate coding + status-bit velocity coder",
         reorders: true,
         positional: None,
-        params: &[],
+        params: &[EB_PARAM],
         build: build_cpc2000,
     },
     CodecEntry {
@@ -449,12 +473,15 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "FPZIP-like fixed-precision ordinal truncation, per field",
         reorders: false,
         positional: None,
-        params: &[ParamDef {
-            key: "bits",
-            kind: ParamKind::Int { min: 0, max: 32 },
-            default: "21",
-            help: "retained bits per value (0 = derive from the error bound)",
-        }],
+        params: &[
+            ParamDef {
+                key: "bits",
+                kind: ParamKind::Int { min: 0, max: 32 },
+                default: "21",
+                help: "retained bits per value (0 = derive from the error bound)",
+            },
+            EB_PARAM,
+        ],
         build: build_fpzip,
     },
     CodecEntry {
@@ -463,7 +490,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "ISABELA-like sort + spline approximation with index array, per field",
         reorders: false,
         positional: None,
-        params: &[],
+        params: &[EB_PARAM],
         build: build_isabela,
     },
     CodecEntry {
@@ -472,7 +499,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "ZFP-like fixed-accuracy block transform coder, per field",
         reorders: false,
         positional: None,
-        params: &[],
+        params: &[EB_PARAM],
         build: build_zfp,
     },
     CodecEntry {
@@ -491,6 +518,7 @@ pub static REGISTRY: &[CodecEntry] = &[
             SZ_SHARED_PARAMS[0],
             SZ_SHARED_PARAMS[1],
             SZ_SHARED_PARAMS[2],
+            SZ_SHARED_PARAMS[3],
         ],
         build: build_sz,
     },
@@ -527,7 +555,7 @@ pub static REGISTRY: &[CodecEntry] = &[
         description: "R-index coordinates (CPC2000 coding) + SZ-LV velocities (best_compression)",
         reorders: true,
         positional: None,
-        params: &[LZ_PARAM],
+        params: &[LZ_PARAM, EB_PARAM],
         build: build_szcpc,
     },
     CodecEntry {
@@ -641,6 +669,31 @@ pub fn build_str(s: &str) -> Result<Box<dyn SnapshotCompressor>> {
     build(&CodecSpec::parse(s)?)
 }
 
+/// The documented diagnostic entry point for user-supplied specs: an
+/// explicit alias of [`build_str`], whose typed registry error —
+/// unknown codec (with the known-codec list), unknown parameter (with
+/// the entry's allowed keys), out-of-domain value —
+/// [`crate::compressors::by_name`]'s `Option` return discards via
+/// `.ok()`. The CLI routes `--method` through this so a typo like
+/// `sz_lv:segment=4096` prints *why* it is wrong, not a generic
+/// "unknown codec".
+pub fn try_build_str(s: &str) -> Result<Box<dyn SnapshotCompressor>> {
+    build_str(s)
+}
+
+/// The explicit `eb=` quality hint of a spec, if the spec set one
+/// (`None` when the parameter was left at its schema default). Drivers
+/// use it as the default [`Quality`] for specs like
+/// `sz_lv:eb=abs:1e-3`; an explicit `--eb`/`--quality` always wins.
+pub fn quality_hint(s: &str) -> Result<Option<ErrorBound>> {
+    let spec = CodecSpec::parse(s)?;
+    let (entry, params) = resolve(&spec)?;
+    if entry.params.iter().any(|d| d.key == "eb") && params.is_explicit("eb") {
+        return Ok(Some(ErrorBound::parse(params.get("eb"))?));
+    }
+    Ok(None)
+}
+
 /// Canonical form of a spec: alias-normalized name plus the *complete*
 /// resolved parameter set (defaults included), keys sorted. This is what
 /// the archive format stores, so a bundle decompresses identically even
@@ -665,6 +718,13 @@ pub fn canonical(s: &str) -> Result<String> {
     let mut out = entry.name.to_string();
     let mut sep = ':';
     for (k, v) in &params.values {
+        // The eb= quality hint is driver-level, not part of the codec's
+        // identity: the archive's quality block records the bound that
+        // was actually enforced, so canonical specs stay hint-free (and
+        // byte-compatible with pre-quality archives).
+        if *k == "eb" {
+            continue;
+        }
         out.push(sep);
         out.push_str(k);
         out.push('=');
@@ -710,6 +770,84 @@ pub fn sort_permutation_with(
         }
         _ => None,
     })
+}
+
+/// [`sort_permutation_with`] under a typed [`Quality`]: the permutation
+/// a reordering codec applies when compressed via
+/// `compress_with(ctx, snap, quality)`. For a uniform `rel:` quality
+/// this equals the legacy f64 helper bit-for-bit.
+pub fn sort_permutation_quality(
+    s: &str,
+    snap: &crate::snapshot::Snapshot,
+    q: &Quality,
+    ctx: &crate::exec::ExecCtx,
+) -> Result<Option<Vec<u32>>> {
+    let spec = CodecSpec::parse(s)?;
+    let (entry, params) = resolve(&spec)?;
+    let stats = quality::snapshot_field_stats(snap);
+    let ebs = q.resolve_fields(&stats);
+    Ok(match entry.name {
+        "cpc2000" => {
+            quality::ensure_no_exact("cpc2000", &ebs)?;
+            Some(Cpc2000.sort_permutation_abs(snap, [ebs[0], ebs[1], ebs[2]])?)
+        }
+        "sz_cpc2000" => {
+            quality::ensure_no_exact("sz_cpc2000", &ebs)?;
+            Some(SzCpc2000::default().sort_permutation_abs(snap, [ebs[0], ebs[1], ebs[2]])?)
+        }
+        "sz_lv_rx" | "sz_lv_prx" => {
+            quality::ensure_no_exact(entry.name, &ebs)?;
+            let rel = quality::sort_rel(q, &ebs, &stats);
+            Some(szrx_from(&params).sort_permutation_with(ctx, snap, rel))
+        }
+        "mode" => {
+            return sort_permutation_quality(mode_target(params.get("which")), snap, q, ctx)
+        }
+        _ => None,
+    })
+}
+
+/// The candidate specs the auto planner compares: the paper's three
+/// modes' concrete codecs, plain SZ-LV, and the lossless baseline.
+pub const AUTO_CANDIDATES: &[&str] = &["sz_lv", "sz_lv_rx", "sz_lv_prx", "sz_cpc2000", "gzip"];
+
+/// The planning stage behind `--quality auto[:target_ratio=<x>]`: plan
+/// every [`AUTO_CANDIDATES`] entry against the sampled stats and pick
+/// the *fastest* codec whose estimated ratio meets `target_ratio`
+/// (falling back to the best-ratio candidate when none does, or when no
+/// target is given). Candidates that cannot honor the quality (e.g. a
+/// reordering codec under a lossless bound) are skipped.
+pub fn plan_auto(
+    stats: &SnapshotStats,
+    q: &Quality,
+    target_ratio: Option<f64>,
+) -> Result<(String, Plan)> {
+    let mut best: Option<(String, Plan)> = None;
+    let mut fastest_ok: Option<(String, Plan)> = None;
+    for name in AUTO_CANDIDATES {
+        let comp = build_str(name)?;
+        let Ok(plan) = comp.plan(stats, q) else {
+            continue;
+        };
+        if best
+            .as_ref()
+            .is_none_or(|(_, b)| plan.est_ratio > b.est_ratio)
+        {
+            best = Some((name.to_string(), plan.clone()));
+        }
+        if let Some(target) = target_ratio {
+            if plan.est_ratio >= target
+                && fastest_ok
+                    .as_ref()
+                    .is_none_or(|(_, c)| plan.est_compress_mbps > c.est_compress_mbps)
+            {
+                fastest_ok = Some((name.to_string(), plan));
+            }
+        }
+    }
+    fastest_ok
+        .or(best)
+        .ok_or_else(|| Error::invalid("no candidate codec could plan under this quality"))
 }
 
 /// Turn a spec string into a per-worker [`CompressorFactory`] for the
@@ -866,7 +1004,8 @@ mod tests {
         });
         let old = build_str("sz_lv:lossless=false,radius=32768").unwrap();
         let new = build_str("sz_lv:lz=off").unwrap();
-        let (a, b) = (old.compress(&s, 1e-4).unwrap(), new.compress(&s, 1e-4).unwrap());
+        let q = Quality::rel(1e-4);
+        let (a, b) = (old.compress(&s, &q).unwrap(), new.compress(&s, &q).unwrap());
         for (fa, fb) in a.fields.iter().zip(b.fields.iter()) {
             assert_eq!(fa.bytes, fb.bytes);
         }
@@ -905,7 +1044,7 @@ mod tests {
             ..Default::default()
         });
         let comp = build_str("sz_lv_rx:segment=1024").unwrap();
-        let bundle = comp.compress(&s, 1e-4).unwrap();
+        let bundle = comp.compress(&s, &Quality::rel(1e-4)).unwrap();
         let back = comp.decompress(&bundle).unwrap();
         assert_eq!(back.len(), s.len());
         let reference = s
@@ -935,10 +1074,11 @@ mod tests {
             ..Default::default()
         });
         let ctx = crate::exec::ExecCtx::with_threads(4);
+        let q = Quality::rel(1e-3);
         for e in entries() {
             let comp = build_str(e.name).unwrap();
-            let seq = comp.compress(&s, 1e-3).unwrap();
-            let par = comp.compress_with(&ctx, &s, 1e-3).unwrap();
+            let seq = comp.compress(&s, &q).unwrap();
+            let par = comp.compress_with(&ctx, &s, &q).unwrap();
             assert_eq!(seq.fields.len(), par.fields.len(), "{}", e.name);
             for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
                 assert_eq!(a.bytes, b.bytes, "{}", e.name);
@@ -974,5 +1114,120 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn try_build_str_returns_typed_diagnostics() {
+        // The contract behind the CLI's --method errors: the message
+        // must say WHAT is wrong, not just "unknown codec".
+        let err = try_build_str("sz_lv:segment=4096").unwrap_err().to_string();
+        assert!(err.contains("unknown parameter 'segment'"), "{err}");
+        assert!(err.contains("sz_lv"), "{err}");
+        let err = try_build_str("warp_drive").unwrap_err().to_string();
+        assert!(err.contains("unknown codec"), "{err}");
+        assert!(err.contains("sz_lv"), "should list known codecs: {err}");
+        let err = try_build_str("sz_lv_rx:segment=-1").unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+        // ...while by_name (the Option wrapper) still just answers None.
+        assert!(crate::compressors::by_name("sz_lv:segment=4096").is_none());
+    }
+
+    #[test]
+    fn eb_param_is_typed_hinted_and_never_archived() {
+        // Every concrete entry accepts the typed eb= quality hint.
+        for e in entries() {
+            if e.name == "mode" {
+                continue; // mode canonicalizes away; hints attach to concrete codecs
+            }
+            assert!(
+                e.params.iter().any(|d| d.key == "eb"),
+                "{} should accept eb=",
+                e.name
+            );
+            assert!(build_str(&format!("{}:eb=abs:1e-3", e.name)).is_ok(), "{}", e.name);
+        }
+        // Bad bounds are rejected with the typed error.
+        for bad in ["sz_lv:eb=abs:0", "sz_lv:eb=rel:2", "sz_lv:eb=nonsense", "gzip:eb="] {
+            assert!(build_str(bad).is_err(), "should reject '{bad}'");
+        }
+        // The hint is surfaced to drivers...
+        assert_eq!(
+            quality_hint("sz_lv:eb=abs:1e-3").unwrap(),
+            Some(ErrorBound::Abs(1e-3))
+        );
+        assert_eq!(
+            quality_hint("gzip:eb=lossless").unwrap(),
+            Some(ErrorBound::Lossless)
+        );
+        assert_eq!(quality_hint("sz_lv").unwrap(), None, "default is not a hint");
+        assert_eq!(quality_hint("mode:best_speed").unwrap(), None);
+        // ...but never lands in the canonical (archived) spec.
+        assert_eq!(
+            canonical("sz_lv:eb=abs:1e-3").unwrap(),
+            "sz_lv:lossless=false,lz=off,radius=32768"
+        );
+        assert_eq!(canonical("gzip:eb=rel:1e-5").unwrap(), "gzip");
+    }
+
+    #[test]
+    fn sort_permutation_quality_matches_f64_helper_on_uniform_rel() {
+        let s = generate_md(&MdConfig {
+            n_particles: 6_000,
+            ..Default::default()
+        });
+        let ctx = crate::exec::ExecCtx::sequential();
+        let q = Quality::rel(1e-4);
+        for spec in ["cpc2000", "sz_cpc2000", "sz_lv_rx:segment=1024", "sz_lv_prx", "mode:best_tradeoff"] {
+            let via_q = sort_permutation_quality(spec, &s, &q, &ctx)
+                .unwrap()
+                .expect("reordering codec");
+            let via_f = sort_permutation(spec, &s, 1e-4).unwrap().unwrap();
+            assert_eq!(via_q, via_f, "{spec}");
+        }
+        assert!(sort_permutation_quality("sz_lv", &s, &q, &ctx).unwrap().is_none());
+        // Reordering codecs reject exact bounds at the permutation level
+        // too (same typed error as compress_with).
+        assert!(sort_permutation_quality("cpc2000", &s, &Quality::lossless(), &ctx).is_err());
+    }
+
+    #[test]
+    fn plan_estimates_and_auto_selection() {
+        let s = generate_md(&MdConfig {
+            n_particles: 60_000,
+            ..Default::default()
+        });
+        let stats = SnapshotStats::collect(&s);
+        let q = Quality::rel(1e-4);
+        // Per-codec plans carry resolved bounds and sane estimates.
+        let plan = build_str("sz_lv").unwrap().plan(&stats, &q).unwrap();
+        assert_eq!(plan.codec, "sz_lv");
+        assert_eq!(plan.quality, "rel:1e-4");
+        assert_eq!(plan.total_particles, 60_000);
+        assert!(plan.est_ratio > 1.0, "est ratio {}", plan.est_ratio);
+        assert!(plan.est_compress_mbps > 0.0);
+        for f in plan.fields.iter() {
+            assert!(f.eb_abs > 0.0, "{}", f.name);
+            assert!(f.est_bits_per_value > 0.0 && f.est_bits_per_value <= 32.0, "{}", f.name);
+        }
+        // The planner's estimate tracks the real ratio within a factor.
+        let real = build_str("sz_lv").unwrap().compress(&s, &q).unwrap().compression_ratio();
+        assert!(
+            plan.est_ratio > real * 0.5 && plan.est_ratio < real * 2.0,
+            "est {} vs real {real}",
+            plan.est_ratio
+        );
+        // Auto: an easy target picks something fast; an impossible
+        // target falls back to the best-ratio candidate.
+        let (spec_easy, plan_easy) = plan_auto(&stats, &q, Some(1.01)).unwrap();
+        assert!(plan_easy.est_ratio >= 1.01, "{spec_easy}: {}", plan_easy.est_ratio);
+        let (_, plan_hard) = plan_auto(&stats, &q, Some(1e9)).unwrap();
+        let (_, plan_none) = plan_auto(&stats, &q, None).unwrap();
+        assert!(plan_hard.est_ratio <= plan_none.est_ratio * 1.0001);
+        // A lossless quality still plans (per-field codecs can honor it).
+        let (spec_ll, _) = plan_auto(&stats, &Quality::lossless(), None).unwrap();
+        assert!(
+            !["cpc2000", "sz_cpc2000", "sz_lv_rx", "sz_lv_prx"].contains(&spec_ll.as_str()),
+            "reordering codec {spec_ll} cannot honor lossless"
+        );
     }
 }

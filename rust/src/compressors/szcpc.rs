@@ -8,6 +8,7 @@ use crate::compressors::cpc2000::{decode_coords, decode_velocity, encode_coords}
 use crate::compressors::sz::{LzMode, Sz, SzConfig};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
+use crate::quality::{self, Quality};
 use crate::snapshot::{
     CompressedField, CompressedSnapshot, FieldCompressor, Snapshot, SnapshotCompressor,
     FIELD_NAMES,
@@ -25,10 +26,17 @@ pub struct SzCpc2000 {
 }
 
 impl SzCpc2000 {
-    /// Deterministic sort permutation (for tests/benches).
+    /// Deterministic sort permutation (for tests/benches), legacy
+    /// value-range-relative spelling.
     pub fn sort_permutation(&self, snap: &Snapshot, eb_rel: f64) -> Result<Vec<u32>> {
         let ebs = snap.abs_bounds(eb_rel);
-        let (_, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
+        self.sort_permutation_abs(snap, [ebs[0], ebs[1], ebs[2]])
+    }
+
+    /// [`Self::sort_permutation`] under explicit absolute coordinate
+    /// bounds (what a resolved [`Quality`] supplies).
+    pub fn sort_permutation_abs(&self, snap: &Snapshot, ebs: [f64; 3]) -> Result<Vec<u32>> {
+        let (_, perm, _) = encode_coords(snap.coords(), ebs)?;
         Ok(perm)
     }
 }
@@ -46,9 +54,10 @@ impl SnapshotCompressor for SzCpc2000 {
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot> {
-        let ebs = snap.abs_bounds(eb_rel);
+        let ebs = quality.resolve(snap);
+        quality::ensure_no_exact(self.name(), &ebs)?;
         let (coord_bytes, perm, _) = encode_coords(snap.coords(), [ebs[0], ebs[1], ebs[2]])?;
         let mut header = vec![MAGIC];
         header.extend_from_slice(&coord_bytes);
@@ -80,7 +89,8 @@ impl SnapshotCompressor for SzCpc2000 {
         fields.extend(vels);
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
-            eb_rel,
+            eb_rel: quality.legacy_rel(),
+            field_bounds: Some(ebs),
             fields,
             n: snap.len(),
         })
@@ -138,7 +148,7 @@ mod tests {
         let s = md(40_000);
         let eb_rel = 1e-4;
         let c = SzCpc2000::default();
-        let bundle = c.compress(&s, eb_rel).unwrap();
+        let bundle = c.compress(&s, &Quality::rel(eb_rel)).unwrap();
         let recon = c.decompress(&bundle).unwrap();
         let perm = c.sort_permutation(&s, eb_rel).unwrap();
         let sorted = s.permute(&perm).unwrap();
@@ -149,8 +159,14 @@ mod tests {
     fn beats_cpc2000_ratio_on_md() {
         // The paper's +13% claim (we accept any clear improvement).
         let s = md(120_000);
-        let cpc = Cpc2000.compress(&s, 1e-4).unwrap().compression_ratio();
-        let ours = SzCpc2000::default().compress(&s, 1e-4).unwrap().compression_ratio();
+        let cpc = Cpc2000
+            .compress(&s, &Quality::rel(1e-4))
+            .unwrap()
+            .compression_ratio();
+        let ours = SzCpc2000::default()
+            .compress(&s, &Quality::rel(1e-4))
+            .unwrap()
+            .compression_ratio();
         // Paper: +13% at 2.8M particles; the margin shrinks at test
         // scale (Huffman table amortization), so require a clear +4%.
         assert!(
@@ -163,8 +179,8 @@ mod tests {
     fn coordinate_sections_identical_to_cpc2000() {
         // Both use the same stage-1..4 coordinate path.
         let s = md(20_000);
-        let a = Cpc2000.compress(&s, 1e-4).unwrap();
-        let b = SzCpc2000::default().compress(&s, 1e-4).unwrap();
+        let a = Cpc2000.compress(&s, &Quality::rel(1e-4)).unwrap();
+        let b = SzCpc2000::default().compress(&s, &Quality::rel(1e-4)).unwrap();
         assert_eq!(a.fields[0].bytes[1..], b.fields[0].bytes[1..]);
     }
 }

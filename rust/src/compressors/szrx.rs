@@ -18,6 +18,7 @@
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::model::quant::Predictor;
+use crate::quality::{self, Quality};
 use crate::rindex::morton::bits_for_step;
 use crate::rindex::sort::segmented_sort_perm_ctx;
 use crate::rindex::{build_rindex_ctx, RIndexSource};
@@ -115,12 +116,16 @@ impl SnapshotCompressor for SzRx {
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot> {
-        let perm = self.sort_permutation_with(ctx, snap, eb_rel);
         // Per-field bounds from the *original* arrays: value ranges are
         // permutation-invariant, so these equal the sorted snapshot's.
-        let ebs = snap.abs_bounds(eb_rel);
+        let stats = quality::snapshot_field_stats(snap);
+        let ebs = quality.resolve_fields(&stats);
+        // Exact (lossless) bounds have no reordering-codec story — the
+        // per-field codecs' lossless fallback does not apply here.
+        quality::ensure_no_exact(self.name(), &ebs)?;
+        let perm = self.sort_permutation_with(ctx, snap, quality::sort_rel(quality, &ebs, &stats));
         let sz = Sz {
             cfg: SzConfig {
                 predictor: self.predictor,
@@ -141,7 +146,8 @@ impl SnapshotCompressor for SzRx {
         })?;
         Ok(CompressedSnapshot {
             compressor: self.name().into(),
-            eb_rel,
+            eb_rel: quality.legacy_rel(),
+            field_bounds: Some(ebs),
             fields,
             n: snap.len(),
         })
@@ -180,7 +186,7 @@ mod tests {
         let s = md(40_000);
         let eb_rel = 1e-4;
         for comp in [SzRx::rx(4096), SzRx::prx()] {
-            let bundle = comp.compress(&s, eb_rel).unwrap();
+            let bundle = comp.compress(&s, &Quality::rel(eb_rel)).unwrap();
             let recon = comp.decompress(&bundle).unwrap();
             let perm = comp.sort_permutation(&s, eb_rel);
             let sorted = s.permute(&perm).unwrap();
@@ -194,10 +200,13 @@ mod tests {
         let s = md(120_000);
         let eb_rel = 1e-4;
         let plain = crate::snapshot::PerField(Sz::lv())
-            .compress(&s, eb_rel)
+            .compress(&s, &Quality::rel(eb_rel))
             .unwrap()
             .compression_ratio();
-        let rx = SzRx::rx(16384).compress(&s, eb_rel).unwrap().compression_ratio();
+        let rx = SzRx::rx(16384)
+            .compress(&s, &Quality::rel(eb_rel))
+            .unwrap()
+            .compression_ratio();
         assert!(
             rx > plain * 1.02,
             "RX should improve ratio: plain {plain:.3} vs rx {rx:.3}"
@@ -210,8 +219,14 @@ mod tests {
         // ratio essentially unchanged.
         let s = md(120_000);
         let eb_rel = 1e-4;
-        let full = SzRx::rx(16384).compress(&s, eb_rel).unwrap().compression_ratio();
-        let prx = SzRx::prx().compress(&s, eb_rel).unwrap().compression_ratio();
+        let full = SzRx::rx(16384)
+            .compress(&s, &Quality::rel(eb_rel))
+            .unwrap()
+            .compression_ratio();
+        let prx = SzRx::prx()
+            .compress(&s, &Quality::rel(eb_rel))
+            .unwrap()
+            .compression_ratio();
         assert!(
             (prx - full).abs() / full < 0.03,
             "PRX ratio {prx:.3} should match RX {full:.3}"
@@ -224,7 +239,7 @@ mod tests {
         // old materialize-then-compress path produced.
         let s = md(20_000);
         let comp = SzRx::rx(4096);
-        let bundle = comp.compress(&s, 1e-4).unwrap();
+        let bundle = comp.compress(&s, &Quality::rel(1e-4)).unwrap();
         let sorted = s.permute(&comp.sort_permutation(&s, 1e-4)).unwrap();
         let ebs = sorted.abs_bounds(1e-4);
         let sz = Sz::lv();
@@ -238,10 +253,10 @@ mod tests {
     fn parallel_compress_is_byte_identical() {
         let s = md(30_000);
         for comp in [SzRx::rx(2048), SzRx::prx()] {
-            let seq = comp.compress(&s, 1e-4).unwrap();
+            let seq = comp.compress(&s, &Quality::rel(1e-4)).unwrap();
             for threads in [2usize, 8] {
                 let ctx = ExecCtx::with_threads(threads);
-                let par = comp.compress_with(&ctx, &s, 1e-4).unwrap();
+                let par = comp.compress_with(&ctx, &s, &Quality::rel(1e-4)).unwrap();
                 for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
                     assert_eq!(a.bytes, b.bytes, "{} threads={threads}", comp.name());
                 }
@@ -259,6 +274,7 @@ mod tests {
         let c = CompressedSnapshot {
             compressor: "sz_lv_rx".into(),
             eb_rel: 1e-4,
+            field_bounds: None,
             fields: vec![],
             n: 0,
         };
@@ -269,8 +285,14 @@ mod tests {
     fn bigger_segments_dont_hurt() {
         // Table IV trend: ratio rises (weakly) with segment size.
         let s = md(100_000);
-        let small = SzRx::rx(1024).compress(&s, 1e-4).unwrap().compression_ratio();
-        let large = SzRx::rx(16384).compress(&s, 1e-4).unwrap().compression_ratio();
+        let small = SzRx::rx(1024)
+            .compress(&s, &Quality::rel(1e-4))
+            .unwrap()
+            .compression_ratio();
+        let large = SzRx::rx(16384)
+            .compress(&s, &Quality::rel(1e-4))
+            .unwrap()
+            .compression_ratio();
         assert!(large > small * 0.98, "small {small:.3} large {large:.3}");
     }
 }

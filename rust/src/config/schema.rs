@@ -3,6 +3,7 @@
 use crate::compressors::Mode;
 use crate::config::parse::ConfigDoc;
 use crate::error::{Error, Result};
+use crate::quality::Quality;
 
 /// Validated settings for `nblc pipeline` (section `[pipeline]`).
 #[derive(Clone, Debug)]
@@ -21,8 +22,10 @@ pub struct PipelineSettings {
     pub threads: usize,
     /// Bounded queue depth.
     pub queue_depth: usize,
-    /// Relative error bound.
-    pub eb_rel: f64,
+    /// Quality target (the `quality` key, e.g.
+    /// `"rel:1e-4,coords=abs:1e-3"`; the deprecated `eb_rel` float key
+    /// still parses as a uniform rel quality).
+    pub quality: Quality,
     /// Compression mode.
     pub mode: Mode,
     /// Explicit codec spec (e.g. `sz_lv_rx:segment=4096`); overrides
@@ -52,7 +55,7 @@ impl Default for PipelineSettings {
             workers: 1,
             threads: 1,
             queue_depth: 4,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             mode: Mode::BestSpeed,
             method: None,
             auto_route: true,
@@ -69,10 +72,10 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 14] = [
+        const KNOWN: [&str; 15] = [
             "dataset", "particles", "shards", "workers", "threads", "queue_depth",
-            "eb_rel", "mode", "method", "auto_route", "use_pjrt", "sim_procs",
-            "output", "rebalance",
+            "eb_rel", "quality", "mode", "method", "auto_route", "use_pjrt",
+            "sim_procs", "output", "rebalance",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -105,10 +108,24 @@ impl PipelineSettings {
         s.queue_depth = get_usize("queue_depth", s.queue_depth)?;
         s.sim_procs = get_usize("sim_procs", s.sim_procs)?;
         if let Some(v) = doc.get(sec, "eb_rel") {
-            s.eb_rel = v
+            // Deprecated alias: a bare float is a uniform rel quality.
+            if doc.get(sec, "quality").is_some() {
+                return Err(Error::Config(
+                    "set either 'quality' or the deprecated 'eb_rel', not both".into(),
+                ));
+            }
+            let eb = v
                 .as_float()
                 .filter(|&f| f > 0.0 && f < 1.0)
                 .ok_or_else(|| Error::Config("'eb_rel' must be in (0, 1)".into()))?;
+            s.quality = Quality::rel(eb);
+        }
+        if let Some(v) = doc.get(sec, "quality") {
+            let spec = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'quality' must be a string".into()))?;
+            s.quality = Quality::parse(spec)
+                .map_err(|e| Error::Config(format!("'quality': {e}")))?;
         }
         if let Some(v) = doc.get(sec, "mode") {
             let name = v
@@ -121,10 +138,25 @@ impl PipelineSettings {
             let spec_str = v
                 .as_str()
                 .ok_or_else(|| Error::Config("'method' must be a string".into()))?;
-            let spec = crate::compressors::registry::CodecSpec::parse(spec_str)
-                .map_err(|e| Error::Config(format!("'method': {e}")))?;
-            crate::compressors::registry::validate(&spec)
-                .map_err(|e| Error::Config(format!("'method': {e}")))?;
+            // `auto[:target_ratio=<x>]` defers codec choice to the
+            // sampled planner at pipeline time; anything else must be a
+            // valid registry spec.
+            if !(spec_str == "auto" || spec_str.starts_with("auto:")) {
+                let spec = crate::compressors::registry::CodecSpec::parse(spec_str)
+                    .map_err(|e| Error::Config(format!("'method': {e}")))?;
+                crate::compressors::registry::validate(&spec)
+                    .map_err(|e| Error::Config(format!("'method': {e}")))?;
+                // The spec's eb= hint is the drivers' default quality —
+                // honor it here exactly like `nblc compress` does, unless
+                // an explicit quality/eb_rel key was given.
+                if doc.get(sec, "quality").is_none() && doc.get(sec, "eb_rel").is_none() {
+                    if let Some(hint) = crate::compressors::registry::quality_hint(spec_str)
+                        .map_err(|e| Error::Config(format!("'method': {e}")))?
+                    {
+                        s.quality = Quality::new(hint);
+                    }
+                }
+            }
             s.method = Some(spec_str.to_string());
         }
         if let Some(v) = doc.get(sec, "auto_route") {
@@ -197,6 +229,7 @@ mod tests {
         assert_eq!(s.dataset, "amdf");
         assert_eq!(s.particles, 500_000);
         assert_eq!(s.threads, 0, "0 = auto thread budget");
+        assert_eq!(s.quality, Quality::rel(1e-3), "eb_rel aliases a uniform rel quality");
         assert_eq!(s.mode, Mode::BestCompression);
         assert!(!s.auto_route);
         assert!(s.use_pjrt);
@@ -213,6 +246,57 @@ mod tests {
         .unwrap();
         let s = PipelineSettings::from_doc(&doc).unwrap();
         assert_eq!(s.method.as_deref(), Some("sz_lv_rx:segment=4096"));
+        // `auto[:target_ratio=<x>]` defers codec choice to the planner
+        // and is not validated as a registry spec.
+        let doc = ConfigDoc::parse("[pipeline]\nmethod = \"auto:target_ratio=6\"\n").unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.method.as_deref(), Some("auto:target_ratio=6"));
+    }
+
+    #[test]
+    fn method_eb_hint_feeds_the_default_quality() {
+        use crate::quality::ErrorBound;
+        // The spec's eb= hint applies when no explicit quality is given
+        // (same precedence as `nblc compress`).
+        let doc = ConfigDoc::parse("[pipeline]\nmethod = \"sz_lv:eb=abs:1e-3\"\n").unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.quality, Quality::new(ErrorBound::Abs(1e-3)));
+        // ...but an explicit quality (or deprecated eb_rel) wins.
+        let doc = ConfigDoc::parse(
+            "[pipeline]\nmethod = \"sz_lv:eb=abs:1e-3\"\nquality = \"rel:1e-5\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            PipelineSettings::from_doc(&doc).unwrap().quality,
+            Quality::rel(1e-5)
+        );
+        let doc = ConfigDoc::parse(
+            "[pipeline]\nmethod = \"sz_lv:eb=abs:1e-3\"\neb_rel = 1e-5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            PipelineSettings::from_doc(&doc).unwrap().quality,
+            Quality::rel(1e-5)
+        );
+    }
+
+    #[test]
+    fn quality_key_parses_and_conflicts_with_eb_rel() {
+        let doc = ConfigDoc::parse(
+            "[pipeline]\nquality = \"rel:1e-4,coords=abs:1e-3\"\n",
+        )
+        .unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(
+            s.quality,
+            Quality::parse("rel:1e-4,coords=abs:1e-3").unwrap()
+        );
+        // Defaults to the paper's headline bound.
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(
+            PipelineSettings::from_doc(&doc).unwrap().quality,
+            Quality::rel(1e-4)
+        );
     }
 
     #[test]
@@ -230,6 +314,9 @@ mod tests {
             "[pipeline]\noutput = 3\n",
             "[pipeline]\noutput = \"\"\n",
             "[pipeline]\nrebalance = \"yes\"\n",
+            "[pipeline]\nquality = \"warp\"\n",
+            "[pipeline]\nquality = 3\n",
+            "[pipeline]\nquality = \"rel:1e-4\"\neb_rel = 1e-4\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

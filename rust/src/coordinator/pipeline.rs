@@ -22,6 +22,7 @@ use crate::coordinator::shard::{split_even, Shard};
 use crate::data::archive::{ShardIndex, ShardWriter};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
+use crate::quality::Quality;
 use crate::snapshot::{Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
 use std::sync::atomic::Ordering;
@@ -71,8 +72,9 @@ pub struct InsituConfig {
     pub threads: usize,
     /// Bounded queue capacity between stages (the in-flight budget).
     pub queue_depth: usize,
-    /// Relative error bound.
-    pub eb_rel: f64,
+    /// Quality target every shard is compressed under (per-field bounds
+    /// re-resolve against each shard's own value ranges).
+    pub quality: Quality,
     /// Compressor factory (one instance per worker).
     pub factory: CompressorFactory,
     /// Compressed-shard destination.
@@ -161,7 +163,7 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             let done_tx = done_tx.clone();
             let factory = Arc::clone(&cfg.factory);
             let counters = Arc::clone(&counters);
-            let eb_rel = cfg.eb_rel;
+            let quality = cfg.quality.clone();
             let exec = exec.clone();
             worker_handles.push(scope.spawn(move || -> Result<()> {
                 let compressor = factory();
@@ -171,7 +173,7 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                         guard.recv()
                     };
                     let Some(task) = task else { break };
-                    let result = run_rank(task, compressor.as_ref(), eb_rel, &exec)?;
+                    let result = run_rank(task, compressor.as_ref(), &quality, &exec)?;
                     counters.record_shard(
                         result.bytes_in,
                         result.bundle.compressed_bytes(),
@@ -197,7 +199,7 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                 let mut shard_ratios = vec![0f64; k];
                 let mut writer = match &cfg.sink {
                     Sink::Archive { path, spec } => {
-                        Some(ShardWriter::create(path, spec, cfg.eb_rel)?)
+                        Some(ShardWriter::create_quality(path, spec, &cfg.quality)?)
                     }
                     _ => None,
                 };
@@ -310,7 +312,7 @@ mod tests {
                 workers: 2,
                 threads: 1,
                 queue_depth: 4,
-                eb_rel: 1e-4,
+                quality: Quality::rel(1e-4),
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,
@@ -332,7 +334,7 @@ mod tests {
         let comp = PerField(Sz::lv());
         for sh in shards {
             let sub = s.slice(sh.start, sh.end);
-            let bundle = comp.compress(&sub, 1e-4).unwrap();
+            let bundle = comp.compress(&sub, &Quality::rel(1e-4)).unwrap();
             let back = comp.decompress(&bundle).unwrap();
             crate::snapshot::verify_bounds(&sub, &back, 1e-4).unwrap();
         }
@@ -355,7 +357,7 @@ mod tests {
                 workers: 2,
                 threads: 1,
                 queue_depth: 1,
-                eb_rel: 1e-4,
+                quality: Quality::rel(1e-4),
                 factory: factory(),
                 layout: None,
                 sink: Sink::Model {
@@ -381,7 +383,7 @@ mod tests {
                 workers: 2,
                 threads: 1,
                 queue_depth: 2,
-                eb_rel: 1e-4,
+                quality: Quality::rel(1e-4),
                 factory: factory(),
                 layout: None,
                 sink: Sink::Archive {
@@ -423,7 +425,7 @@ mod tests {
             workers: 1,
             threads: 1,
             queue_depth: 2,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             factory: factory(),
             layout,
             sink: Sink::Null,
@@ -461,7 +463,7 @@ mod tests {
                 workers: 1,
                 threads: 1,
                 queue_depth: 1,
-                eb_rel: 1e-3,
+                quality: Quality::rel(1e-3),
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,
@@ -485,7 +487,7 @@ mod tests {
                     workers: 2,
                     threads,
                     queue_depth: 4,
-                    eb_rel: 1e-4,
+                    quality: Quality::rel(1e-4),
                     factory: factory(),
                     layout: None,
                     sink: Sink::Null,
@@ -509,7 +511,7 @@ mod tests {
                 workers: 1,
                 threads: 1,
                 queue_depth: 1,
-                eb_rel: 1e-3,
+                quality: Quality::rel(1e-3),
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,

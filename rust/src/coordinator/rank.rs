@@ -4,6 +4,7 @@
 
 use crate::error::Result;
 use crate::exec::ExecCtx;
+use crate::quality::Quality;
 use crate::snapshot::{CompressedSnapshot, Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
 
@@ -51,12 +52,12 @@ impl RankResult {
 pub fn run_rank(
     task: RankTask,
     compressor: &dyn SnapshotCompressor,
-    eb_rel: f64,
+    quality: &Quality,
     ctx: &ExecCtx,
 ) -> Result<RankResult> {
     let bytes_in = task.shard.total_bytes();
     let t = Timer::start();
-    let bundle = compressor.compress_with(ctx, &task.shard, eb_rel)?;
+    let bundle = compressor.compress_with(ctx, &task.shard, quality)?;
     let secs = t.secs();
     Ok(RankResult {
         rank: task.rank,
@@ -91,7 +92,7 @@ mod tests {
                 shard,
             },
             &comp,
-            1e-4,
+            &Quality::rel(1e-4),
             &ExecCtx::sequential(),
         )
         .unwrap();

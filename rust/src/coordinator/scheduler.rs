@@ -125,8 +125,9 @@ mod tests {
             Mode::BestCompression,
         ));
         let unrouted = crate::compressors::mode_compressor(Mode::BestCompression);
-        let r1 = routed.compress(&h, 1e-4).unwrap().compression_ratio();
-        let r2 = unrouted.compress(&h, 1e-4).unwrap().compression_ratio();
+        let q = crate::quality::Quality::rel(1e-4);
+        let r1 = routed.compress(&h, &q).unwrap().compression_ratio();
+        let r2 = unrouted.compress(&h, &q).unwrap().compression_ratio();
         assert!(r1 > r2, "routed {r1:.3} should beat unrouted {r2:.3}");
     }
 }

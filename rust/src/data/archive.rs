@@ -50,6 +50,10 @@
 //!   k         v   shard count
 //!   per shard (sorted by start — the explicit logical order):
 //!             start v, end v, offset v, len v, bytes_out v, cost_ns v
+//!   quality (optional — absent in pre-quality archives):
+//!             qlen v, canonical Quality string qlen bytes,
+//!             6 × f64 resolved per-field absolute bounds (max over
+//!             shards; 0.0 = exact coding)
 //!   file_crc  4   CRC-32 of every byte before the footer marker
 //!   foot_crc  4   CRC-32 of the footer from its marker through file_crc
 //!   foot_len  8   u64 byte length of marker..=foot_crc
@@ -75,6 +79,7 @@
 
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
+use crate::quality::Quality;
 use crate::snapshot::{CompressedField, CompressedSnapshot, Snapshot};
 use crate::util::crc32::crc32;
 use crate::util::varint::{get_uvarint, put_uvarint};
@@ -310,6 +315,7 @@ fn read_v2(bytes: &[u8]) -> Result<Archive> {
         bundle: CompressedSnapshot {
             compressor,
             eb_rel,
+            field_bounds: None,
             fields,
             n: n as usize,
         },
@@ -351,6 +357,7 @@ fn read_v1(bytes: &[u8]) -> Result<Archive> {
         bundle: CompressedSnapshot {
             compressor,
             eb_rel,
+            field_bounds: None,
             fields,
             n: n as usize,
         },
@@ -391,13 +398,27 @@ impl ShardEntry {
     }
 }
 
+/// The archived quality target: the canonical [`Quality`] string plus
+/// the *resolved* absolute bound per field — the per-file guarantee
+/// (max over shards; [`crate::quality::EXACT`] = exact coding), so
+/// `decompress`/`inspect` can report it without re-reading any data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveQuality {
+    /// Canonical quality spec string (see [`Quality::canonical`]).
+    pub quality: String,
+    /// Resolved absolute bound per field in canonical field order.
+    pub field_bounds: [f64; 6],
+}
+
 /// The decoded v3 footer: snapshot-level metadata plus the shard table
 /// in logical (particle-range) order.
 #[derive(Clone, Debug)]
 pub struct ShardIndex {
     /// Canonical codec spec for every shard.
     pub spec: String,
-    /// Relative error bound used for every shard.
+    /// Legacy relative error bound header field: the uniform `rel:`
+    /// coefficient, or `0.0` when the quality is not expressible as one
+    /// (see `quality`).
     pub eb_rel: f64,
     /// Total particle count across all shards.
     pub n: u64,
@@ -406,6 +427,9 @@ pub struct ShardIndex {
     pub entries: Vec<ShardEntry>,
     /// CRC-32 of every byte before the footer marker.
     pub file_crc: u32,
+    /// The archived quality block (`None` for pre-quality archives —
+    /// v1/v2 files and v3 files written before the quality redesign).
+    pub quality: Option<ArchiveQuality>,
 }
 
 impl ShardIndex {
@@ -432,14 +456,33 @@ pub struct ShardWriter {
     spec: String,
     eb_rel: f64,
     entries: Vec<ShardEntry>,
+    /// Canonical quality string recorded in the footer's quality block.
+    quality: String,
+    /// Max resolved bound per field over all shards written so far.
+    bounds: [f64; 6],
+    /// False once a shard's bundle arrived without resolved bounds
+    /// (legacy producer) — the quality block is then omitted.
+    bounds_known: bool,
 }
 
 impl ShardWriter {
-    /// Create the archive file and write the v3 header.
+    /// Create the archive file and write the v3 header, recording the
+    /// legacy value-range-relative bound (`Quality::rel(eb_rel)`).
     pub fn create(path: &Path, spec: &str, eb_rel: f64) -> Result<ShardWriter> {
+        Self::create_quality(path, spec, &Quality::rel(eb_rel))
+    }
+
+    /// Create the archive file and write the v3 header under a typed
+    /// [`Quality`]: the header keeps the legacy `eb_rel` field (the
+    /// uniform rel coefficient, or `0.0`), and [`Self::finish`] appends
+    /// a quality block — the canonical quality string plus the
+    /// *resolved* per-field bounds accumulated from the shards — to the
+    /// seekable footer.
+    pub fn create_quality(path: &Path, spec: &str, quality: &Quality) -> Result<ShardWriter> {
         if spec.is_empty() || spec.len() > MAX_STR_LEN {
             return Err(Error::invalid("archive codec spec empty or too long"));
         }
+        let eb_rel = quality.legacy_rel();
         let mut head = Vec::with_capacity(64 + spec.len());
         head.extend_from_slice(MAGIC_V3);
         head.extend_from_slice(&FORMAT_VERSION_V3.to_le_bytes());
@@ -455,6 +498,9 @@ impl ShardWriter {
             spec: spec.to_string(),
             eb_rel,
             entries: Vec::new(),
+            quality: quality.canonical(),
+            bounds: [0.0; 6],
+            bounds_known: true,
         };
         sw.emit(&head)?;
         Ok(sw)
@@ -494,6 +540,17 @@ impl ShardWriter {
         if self.entries.len() >= MAX_SHARDS {
             return Err(Error::invalid("too many shards in archive"));
         }
+        match bundle.field_bounds {
+            // The per-file guarantee is the max resolved bound per field
+            // over all shards (each shard resolves against its own value
+            // ranges).
+            Some(b) => {
+                for f in 0..6 {
+                    self.bounds[f] = self.bounds[f].max(b[f]);
+                }
+            }
+            None => self.bounds_known = false,
+        }
         let offset = self.offset;
         let mut head = Vec::with_capacity(16);
         head.extend_from_slice(SHARD_MARKER);
@@ -532,7 +589,15 @@ impl ShardWriter {
         let ranges: Vec<(u64, u64)> = self.entries.iter().map(|e| (e.start, e.end)).collect();
         crate::coordinator::shard::check_partition(&ranges, n)
             .map_err(|m| Error::invalid(format!("shards do not partition the snapshot: {m}")))?;
-        let tail = encode_footer_tail(n, &self.entries, self.crc);
+        let quality = if self.bounds_known {
+            Some(ArchiveQuality {
+                quality: self.quality,
+                field_bounds: self.bounds,
+            })
+        } else {
+            None
+        };
+        let tail = encode_footer_tail(n, &self.entries, self.crc, quality.as_ref());
         self.w.write_all(&tail)?;
         self.w.flush()?;
         Ok(ShardIndex {
@@ -541,13 +606,22 @@ impl ShardWriter {
             n,
             entries: self.entries,
             file_crc: self.crc,
+            quality,
         })
     }
 }
 
-/// Encode everything after the last shard record: footer, footer CRC,
-/// footer length, tail magic.
-fn encode_footer_tail(n: u64, entries: &[ShardEntry], file_crc: u32) -> Vec<u8> {
+/// Encode everything after the last shard record: footer (shard table
+/// plus optional quality block), footer CRC, footer length, tail magic.
+/// Pre-quality readers reject a footer carrying the quality block
+/// ("trailing garbage"), but every pre-quality *file* still parses here
+/// — the block's presence is detected by the footer length.
+fn encode_footer_tail(
+    n: u64,
+    entries: &[ShardEntry],
+    file_crc: u32,
+    quality: Option<&ArchiveQuality>,
+) -> Vec<u8> {
     let mut f = Vec::with_capacity(32 + entries.len() * 24);
     f.extend_from_slice(FOOTER_MARKER);
     put_uvarint(&mut f, n);
@@ -559,6 +633,13 @@ fn encode_footer_tail(n: u64, entries: &[ShardEntry], file_crc: u32) -> Vec<u8> 
         put_uvarint(&mut f, e.len);
         put_uvarint(&mut f, e.bytes_out);
         put_uvarint(&mut f, e.cost_nanos);
+    }
+    if let Some(q) = quality {
+        put_uvarint(&mut f, q.quality.len() as u64);
+        f.extend_from_slice(q.quality.as_bytes());
+        for b in &q.field_bounds {
+            f.extend_from_slice(&b.to_le_bytes());
+        }
     }
     f.extend_from_slice(&file_crc.to_le_bytes());
     let foot_crc = crc32(&f);
@@ -617,6 +698,7 @@ impl ShardReader {
                     cost_nanos: 0,
                 }],
                 file_crc: 0,
+                quality: None,
             },
             legacy: Some(arch.bundle),
             data_end: file_len,
@@ -685,9 +767,37 @@ impl ShardReader {
                 cost_nanos,
             });
         }
-        if pos != fl - 8 {
-            return Err(Error::corrupt("trailing garbage in v3 footer"));
-        }
+        // Optional quality block (files written since the quality
+        // redesign): canonical quality string + 6 resolved per-field
+        // bounds. Its absence (pos already at the file CRC) marks a
+        // pre-quality archive.
+        let quality = if pos != fl - 8 {
+            let qlen = get_uvarint(&foot, &mut pos)?;
+            if qlen == 0 || qlen > MAX_STR_LEN as u64 {
+                return Err(Error::corrupt("implausible quality-block length"));
+            }
+            let raw = take(&foot, &mut pos, qlen as usize, "quality string")?;
+            let qstr = String::from_utf8(raw.to_vec())
+                .map_err(|_| Error::corrupt("quality string is not utf8"))?;
+            let mut field_bounds = [0f64; 6];
+            for b in &mut field_bounds {
+                *b = f64::from_le_bytes(
+                    take(&foot, &mut pos, 8, "quality bound")?.try_into().unwrap(),
+                );
+                if !b.is_finite() || *b < 0.0 {
+                    return Err(Error::corrupt("implausible resolved quality bound"));
+                }
+            }
+            if pos != fl - 8 {
+                return Err(Error::corrupt("trailing garbage in v3 footer"));
+            }
+            Some(ArchiveQuality {
+                quality: qstr,
+                field_bounds,
+            })
+        } else {
+            None
+        };
         let file_crc = u32::from_le_bytes(foot[fl - 8..fl - 4].try_into().unwrap());
 
         // Header (start of file): spec + error bound, CRC-protected.
@@ -740,6 +850,7 @@ impl ShardReader {
                 n,
                 entries,
                 file_crc,
+                quality,
             },
             legacy: None,
             data_end,
@@ -880,6 +991,7 @@ fn parse_shard_record(
     Ok(CompressedSnapshot {
         compressor,
         eb_rel,
+        field_bounds: None,
         fields,
         n: (e.end - e.start) as usize,
     })
@@ -1040,7 +1152,7 @@ mod tests {
             ..Default::default()
         });
         let comp = registry::build_str("sz_lv").unwrap();
-        let b = comp.compress(&s, 1e-4).unwrap();
+        let b = comp.compress(&s, &crate::quality::Quality::rel(1e-4)).unwrap();
         (s, b)
     }
 
@@ -1187,6 +1299,7 @@ mod tests {
         let b = CompressedSnapshot {
             compressor: "gzip".into(),
             eb_rel: 1e-4,
+            field_bounds: None,
             n: 16,
             fields: vec![CompressedField {
                 name: "XFIELDNAMEX".into(),
@@ -1222,7 +1335,7 @@ mod tests {
         });
         let spec = registry::canonical("sz_lv_rx:segment=4096").unwrap();
         let comp = registry::build_str(&spec).unwrap();
-        let b = comp.compress(&s, 1e-4).unwrap();
+        let b = comp.compress(&s, &crate::quality::Quality::rel(1e-4)).unwrap();
         let bytes = write_bytes(&b, &spec).unwrap();
         let arch = read_bytes(&bytes).unwrap();
         assert_eq!(arch.spec, "sz_lv_rx:ignore=0,segment=4096,source=coords");
@@ -1255,7 +1368,7 @@ mod tests {
         let mut layout = crate::coordinator::shard::split_even(s.len(), shards);
         layout.reverse();
         for sh in &layout {
-            let b = comp.compress(&s.slice(sh.start, sh.end), V3_EB).unwrap();
+            let b = comp.compress(&s.slice(sh.start, sh.end), &crate::quality::Quality::rel(V3_EB)).unwrap();
             w.write_shard(sh.start, sh.end, &b, 1_000 + sh.id as u64).unwrap();
         }
         let index = w.finish().unwrap();
@@ -1342,7 +1455,7 @@ mod tests {
         // (and its full-decode path) must too.
         let s = Snapshot::default();
         let comp = registry::build_str(V3_SPEC).unwrap();
-        let b = comp.compress(&s, V3_EB).unwrap();
+        let b = comp.compress(&s, &crate::quality::Quality::rel(V3_EB)).unwrap();
         let p = tmp_path("empty");
         let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
         w.write_shard(0, 0, &b, 0).unwrap();
@@ -1354,6 +1467,69 @@ mod tests {
         assert_eq!(dec.snapshot.len(), 0);
         assert_eq!(dec.shards_touched, 1);
         assert!(dec.exact);
+    }
+
+    #[test]
+    fn v3_quality_block_roundtrips() {
+        use crate::quality::{ErrorBound, Quality};
+        let s = generate_md(&MdConfig {
+            n_particles: 2_000,
+            ..Default::default()
+        });
+        let q = Quality::rel(1e-3).with_coords(ErrorBound::Abs(1e-3));
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let p = tmp_path("quality");
+        let mut w = ShardWriter::create_quality(&p, V3_SPEC, &q).unwrap();
+        let mut expect = [0f64; 6];
+        for (start, end) in [(0usize, 1_200), (1_200, 2_000)] {
+            let b = comp.compress(&s.slice(start, end), &q).unwrap();
+            let fb = b.field_bounds.unwrap();
+            for f in 0..6 {
+                expect[f] = expect[f].max(fb[f]);
+            }
+            w.write_shard(start, end, &b, 0).unwrap();
+        }
+        let index = w.finish().unwrap();
+        // Non-uniform quality: the legacy header field is the 0 sentinel.
+        assert_eq!(index.eb_rel, 0.0);
+        let aq = index.quality.as_ref().expect("quality block written");
+        assert_eq!(aq.quality, q.canonical());
+        assert_eq!(aq.field_bounds, expect);
+        assert_eq!(aq.field_bounds[0], 1e-3, "abs coord bound is shard-invariant");
+        // ...and it survives the file round-trip.
+        let reader = ShardReader::open(&p).unwrap();
+        assert_eq!(reader.index().quality.as_ref(), Some(aq));
+        reader.verify_file_crc().unwrap();
+        let dec = decode_shards(&reader, reader.spec(), None, &ExecCtx::sequential()).unwrap();
+        crate::quality::verify_quality(&s, &dec.snapshot, &q).unwrap();
+        std::fs::remove_file(&p).ok();
+
+        // Legacy create() records the uniform rel quality.
+        let (_, path2, index2) = v3_file("quality_legacy", 1_000, 2);
+        assert_eq!(
+            index2.quality.as_ref().map(|a| a.quality.as_str()),
+            Some("rel:1e-4")
+        );
+        std::fs::remove_file(&path2).ok();
+
+        // Pre-quality v3 files (no quality block) still open: rebuild
+        // the footer tail without the block over the same data region.
+        let (_, path3, index3) = v3_file("quality_pre", 1_000, 2);
+        let bytes = std::fs::read(&path3).unwrap();
+        std::fs::remove_file(&path3).ok();
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        let data_end = bytes.len() - 16 - foot_len as usize;
+        let mut pre = bytes[..data_end].to_vec();
+        let file_crc = crc32(&pre);
+        pre.extend_from_slice(&encode_footer_tail(1_000, &index3.entries, file_crc, None));
+        let p3 = tmp_path("quality_pre_rewritten");
+        std::fs::write(&p3, &pre).unwrap();
+        let reader = ShardReader::open(&p3).unwrap();
+        assert!(reader.index().quality.is_none(), "pre-quality archive reads as None");
+        reader.verify_file_crc().unwrap();
+        decode_shards(&reader, reader.spec(), None, &ExecCtx::sequential()).unwrap();
+        std::fs::remove_file(&p3).ok();
     }
 
     #[test]
@@ -1468,7 +1644,7 @@ mod tests {
         let p = tmp_path("hostile_case");
         for (what, n, entries) in hostile {
             let mut evil = data.to_vec();
-            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc));
+            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc, None));
             std::fs::write(&p, &evil).unwrap();
             match ShardReader::open(&p) {
                 Err(_) => {}
@@ -1485,7 +1661,7 @@ mod tests {
             ..Default::default()
         });
         let comp = registry::build_str(V3_SPEC).unwrap();
-        let b = comp.compress(&s.slice(0, 500), V3_EB).unwrap();
+        let b = comp.compress(&s.slice(0, 500), &crate::quality::Quality::rel(V3_EB)).unwrap();
         let p = tmp_path("badwriter");
 
         // Range/bundle mismatch.
@@ -1498,7 +1674,7 @@ mod tests {
         // Gap between shards is caught at finish.
         let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
         w.write_shard(0, 500, &b, 0).unwrap();
-        let b2 = comp.compress(&s.slice(600, 1_000), V3_EB).unwrap();
+        let b2 = comp.compress(&s.slice(600, 1_000), &crate::quality::Quality::rel(V3_EB)).unwrap();
         w.write_shard(600, 1_000, &b2, 0).unwrap();
         assert!(w.finish().is_err(), "gap must be rejected");
 

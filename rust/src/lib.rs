@@ -20,24 +20,60 @@
 //! * **Benchmark harnesses** regenerating every table and figure of the
 //!   paper's evaluation section (see `benches/`).
 //!
-//! ## Quickstart: the codec registry
+//! ## Quickstart: codec specs + quality targets
 //!
 //! Compressors are built from a **codec spec** — `name:key=val,key=val`
 //! — through the central registry in [`compressors::registry`]. Bare
 //! names (`sz_lv`), tuned parameters (`sz_lv_rx:segment=4096`, swept in
 //! the paper's Table IV), and the paper's mode selector
-//! (`mode:best_tradeoff`) all go through the same path:
+//! (`mode:best_tradeoff`) all go through the same path. Compression
+//! takes a typed [`quality::Quality`] target — one default
+//! [`quality::ErrorBound`] (`abs:`/`rel:`/`pw_rel:`/`lossless`) plus
+//! optional per-field overrides, e.g. tighter positions than
+//! velocities:
 //!
 //! ```no_run
 //! use nblc::compressors::registry;
 //! use nblc::data::gen_md::{MdConfig, generate_md};
+//! use nblc::quality::{ErrorBound, Quality};
 //!
 //! let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
 //! let comp = registry::build_str("sz_lv_rx:segment=4096").unwrap();
-//! let bundle = comp.compress(&snap, 1e-4).unwrap();
+//! // rel: value-range-relative (the paper's §III bound); coords get an
+//! // absolute 1e-3 override.
+//! let quality = Quality::rel(1e-4).with_coords(ErrorBound::Abs(1e-3));
+//! let bundle = comp.compress(&snap, &quality).unwrap();
 //! println!("ratio = {:.2}", bundle.compression_ratio());
 //! let restored = comp.decompress(&bundle).unwrap();
 //! assert_eq!(restored.len(), snap.len());
+//! ```
+//!
+//! The bare-`f64` entry points of earlier releases survive as deprecated
+//! shims (`compress_rel(snap, eb_rel)` ≡ `compress(snap,
+//! &Quality::rel(eb_rel))`); see the README's migration table.
+//!
+//! ## Planning before compressing
+//!
+//! [`quality::SnapshotStats::collect`] takes a cheap contiguous-block
+//! sample (~1% of the data), and
+//! [`snapshot::SnapshotCompressor::plan`] resolves a quality against it
+//! while estimating ratio and throughput — so a driver (or `nblc
+//! compress --quality auto:target_ratio=6`, via
+//! [`compressors::registry::plan_auto`]) can pick the right codec before
+//! touching the full snapshot:
+//!
+//! ```no_run
+//! # use nblc::compressors::registry;
+//! # use nblc::data::gen_md::{MdConfig, generate_md};
+//! use nblc::quality::{Quality, SnapshotStats};
+//!
+//! # let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
+//! let stats = SnapshotStats::collect(&snap);
+//! let quality = Quality::rel(1e-4);
+//! let plan = registry::build_str("sz_lv").unwrap().plan(&stats, &quality).unwrap();
+//! println!("est ratio {:.2} at {:.0} MB/s", plan.est_ratio, plan.est_compress_mbps);
+//! let (codec, _plan) = registry::plan_auto(&stats, &quality, Some(6.0)).unwrap();
+//! println!("auto picked {codec}");
 //! ```
 //!
 //! ## Self-describing archives
@@ -54,8 +90,10 @@
 //! use std::path::Path;
 //!
 //! # let snap = generate_md(&MdConfig { n_particles: 1000, ..Default::default() });
+//! use nblc::quality::Quality;
 //! let spec = registry::canonical("sz_lv_rx:segment=4096").unwrap();
-//! let bundle = registry::build_str(&spec).unwrap().compress(&snap, 1e-4).unwrap();
+//! let bundle = registry::build_str(&spec).unwrap()
+//!     .compress(&snap, &Quality::rel(1e-4)).unwrap();
 //! archive::write(Path::new("out.nblc"), &bundle, &spec).unwrap();
 //!
 //! let arch = archive::read(Path::new("out.nblc")).unwrap();
@@ -86,11 +124,13 @@
 //! use std::path::Path;
 //!
 //! # let snap = generate_md(&MdConfig { n_particles: 10_000, ..Default::default() });
+//! use nblc::quality::Quality;
+//! let quality = Quality::rel(1e-4);
 //! let spec = registry::canonical("sz_lv").unwrap();
 //! let comp = registry::build_str(&spec).unwrap();
-//! let mut w = ShardWriter::create(Path::new("out.nblc"), &spec, 1e-4).unwrap();
+//! let mut w = ShardWriter::create_quality(Path::new("out.nblc"), &spec, &quality).unwrap();
 //! for (start, end) in [(0usize, 5_000), (5_000, 10_000)] {
-//!     let bundle = comp.compress(&snap.slice(start, end), 1e-4).unwrap();
+//!     let bundle = comp.compress(&snap.slice(start, end), &quality).unwrap();
 //!     w.write_shard(start, end, &bundle, 0).unwrap();
 //! }
 //! let index = w.finish().unwrap(); // validates coverage, writes footer
@@ -121,11 +161,13 @@
 //! use nblc::exec::ExecCtx;
 //!
 //! # let snap = generate_md(&MdConfig { n_particles: 100_000, ..Default::default() });
+//! use nblc::quality::Quality;
+//! let quality = Quality::rel(1e-4);
 //! let comp = registry::build_str("sz_lv_rx").unwrap();
 //! let ctx = ExecCtx::auto(); // NBLC_THREADS env, else all cores
-//! let bundle = comp.compress_with(&ctx, &snap, 1e-4).unwrap();
+//! let bundle = comp.compress_with(&ctx, &snap, &quality).unwrap();
 //! // Hard guarantee: identical bytes at ANY thread count.
-//! let sequential = comp.compress(&snap, 1e-4).unwrap();
+//! let sequential = comp.compress(&snap, &quality).unwrap();
 //! for (par, seq) in bundle.fields.iter().zip(sequential.fields.iter()) {
 //!     assert_eq!(par.bytes, seq.bytes);
 //! }
@@ -148,6 +190,7 @@ pub mod testkit;
 pub mod codec;
 pub mod model;
 pub mod rindex;
+pub mod quality;
 pub mod data;
 pub mod snapshot;
 pub mod compressors;

@@ -16,12 +16,13 @@ use nblc::config::{ConfigDoc, PipelineSettings};
 use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink};
 use nblc::coordinator::shard::{rebalance, Shard};
 use nblc::coordinator::{choose_compressor, GpfsModel};
-use nblc::data::archive::{self, decode_shards, ShardReader};
+use nblc::data::archive::{decode_shards, ShardReader, ShardWriter};
 use nblc::data::io::{read_snapshot, write_snapshot};
 use nblc::data::{generate, DatasetKind};
 use nblc::error::{Error, Result};
 use nblc::exec::ExecCtx;
 use nblc::metrics::ErrorStats;
+use nblc::quality::{ErrorBound, Plan, Quality, SnapshotStats, EXACT};
 use nblc::snapshot::FIELD_NAMES;
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
@@ -34,7 +35,8 @@ USAGE: nblc <command> [flags]
 
 COMMANDS:
   gen         --dataset hacc|amdf --n <count> --seed <u64> --out <file>
-  compress    <in.snap> <out.nblc> --method <spec> [--eb 1e-4] [--threads N]
+  compress    <in.snap> <out.nblc> --method <spec> [--eb <bound>]
+              [--quality <quality>|auto[:target_ratio=<x>]] [--threads N]
   decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
               [--particles a..b]
   inspect     <in.nblc> [--verify]
@@ -47,6 +49,17 @@ A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
 `sz_lv_rx:segment=4096`, `sz:pred=lv`, or `mode:best_tradeoff`.
 Archives are self-describing: `decompress` needs no --method.
 Run `nblc list-codecs` for every codec and tunable parameter.
+
+Quality targets are typed. --eb takes one bound for every field:
+`abs:1e-3` (absolute), `rel:1e-4` (value-range-relative, the paper's
+definition — a bare float still means this), `pw_rel:1e-3`
+(pointwise-relative), or `lossless`. --quality takes a full per-field
+spec such as `rel:1e-4,coords=abs:1e-3`, or `auto[:target_ratio=<x>]`
+to let the planner pick the codec from a cheap sampled pass. A spec's
+`eb=` parameter (e.g. `sz_lv:eb=abs:1e-3`) is the default when neither
+flag is given. compress writes a single-shard v3 archive whose footer
+records the canonical quality and the resolved per-field bounds;
+`inspect` prints them (pre-quality archives report n/a).
 
 decompress reads v1/v2 single-record archives and sharded v3 archives
 (written by `pipeline` with `output = \"...\"`). For v3, shard decodes
@@ -133,23 +146,127 @@ fn exec_ctx(args: &Args) -> Result<ExecCtx> {
     Ok(ExecCtx::resolve(threads))
 }
 
+/// Parse a `--quality auto[:target_ratio=<x>]` value. `Some(target)`
+/// when the flag requests auto planning, `None` otherwise.
+fn parse_auto(q: &str) -> Result<Option<Option<f64>>> {
+    if q == "auto" {
+        return Ok(Some(None));
+    }
+    if let Some(rest) = q.strip_prefix("auto:") {
+        let tr = rest.strip_prefix("target_ratio=").ok_or_else(|| {
+            Error::invalid(format!(
+                "--quality auto takes 'auto' or 'auto:target_ratio=<x>', got '{q}'"
+            ))
+        })?;
+        let t: f64 = tr
+            .parse()
+            .map_err(|_| Error::invalid(format!("target_ratio '{tr}' is not a number")))?;
+        if !(t >= 1.0) || !t.is_finite() {
+            return Err(Error::invalid(format!("target_ratio must be >= 1, got {t}")));
+        }
+        return Ok(Some(Some(t)));
+    }
+    Ok(None)
+}
+
+/// Resolve the compress-side quality from the flags and the spec's
+/// `eb=` hint: `--quality` > `--eb` > spec hint > `rel:1e-4`.
+fn resolve_quality(args: &Args, method: &str) -> Result<Quality> {
+    let eb_flag = match args.get("eb") {
+        Some(s) => Some(ErrorBound::parse(s)?),
+        None => None,
+    };
+    if let Some(q) = args.get("quality") {
+        if parse_auto(q)?.is_none() {
+            if eb_flag.is_some() {
+                return Err(Error::invalid(
+                    "give --quality or --eb, not both (a quality spec already \
+                     carries its default bound)",
+                ));
+            }
+            return Quality::parse(q);
+        }
+    }
+    if let Some(b) = eb_flag {
+        return Ok(Quality::new(b));
+    }
+    if let Some(hint) = registry::quality_hint(method)? {
+        return Ok(Quality::new(hint));
+    }
+    Ok(Quality::default())
+}
+
+fn print_plan(plan: &Plan) {
+    println!(
+        "plan: codec {} (quality {}), est ratio {:.2} ({:.2} bits/value), est {} \
+         [sampled {} of {} particles]",
+        plan.codec,
+        plan.quality,
+        plan.est_ratio,
+        plan.est_bits_per_value,
+        humansize::rate(plan.est_compress_mbps * 1e6),
+        plan.sample_particles,
+        plan.total_particles,
+    );
+    println!("{:>8} {:>16} {:>14} {:>10}", "field", "bound", "eb_abs", "est b/v");
+    for f in &plan.fields {
+        println!(
+            "{:>8} {:>16} {:>14} {:>10.2}",
+            f.name,
+            f.bound.canonical(),
+            fmt_bound(f.eb_abs),
+            f.est_bits_per_value,
+        );
+    }
+}
+
+/// Render a resolved absolute bound (the [`EXACT`] sentinel reads as
+/// "exact").
+fn fmt_bound(eb: f64) -> String {
+    if eb == EXACT {
+        "exact".into()
+    } else {
+        format!("{eb:.3e}")
+    }
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "eb", "threads"])?;
+    args.expect_known(&["method", "eb", "quality", "threads"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: compress <in.snap> <out.nblc>"));
     };
     let method = args.get_or("method", "sz_lv");
-    let eb: f64 = args.get_parse("eb", 1e-4)?;
     let ctx = exec_ctx(args)?;
-    let spec = registry::canonical(&method)?;
-    let comp = registry::build_str(&spec)?;
     let snap = read_snapshot(Path::new(input))?;
+    let quality = resolve_quality(args, &method)?;
+    // --quality auto[:target_ratio=x]: plan every candidate codec on a
+    // cheap block sample and pick before touching the full data.
+    let auto = match args.get("quality") {
+        Some(q) => parse_auto(q)?,
+        None => None,
+    };
+    let spec = if let Some(target) = auto {
+        let stats = SnapshotStats::collect(&snap);
+        let (name, plan) = registry::plan_auto(&stats, &quality, target)?;
+        print_plan(&plan);
+        if args.get("method").is_some() {
+            println!("(--quality auto overrides --method {method})");
+        }
+        registry::canonical(&name)?
+    } else {
+        registry::canonical(&method)?
+    };
+    // try_build_str so a bad --method prints the registry's typed
+    // diagnostics (unknown parameter, value out of domain, ...).
+    let comp = registry::try_build_str(&spec)?;
     let t = Timer::start();
-    let bundle = comp.compress_with(&ctx, &snap, eb)?;
+    let bundle = comp.compress_with(&ctx, &snap, &quality)?;
     let secs = t.secs();
-    archive::write(Path::new(output), &bundle, &spec)?;
+    let mut w = ShardWriter::create_quality(Path::new(output), &spec, &quality)?;
+    w.write_shard(0, snap.len(), &bundle, (secs * 1e9) as u64)?;
+    let index = w.finish()?;
     println!(
-        "{method}: {} -> {} (ratio {:.2}, {} at {}, {} threads)",
+        "{spec}: {} -> {} (ratio {:.2}, {} at {}, {} threads)",
         humansize::bytes(bundle.original_bytes() as u64),
         humansize::bytes(bundle.compressed_bytes() as u64),
         bundle.compression_ratio(),
@@ -157,7 +274,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
         humansize::rate(bundle.original_bytes() as f64 / secs),
         ctx.threads(),
     );
-    println!("archived spec: {spec}");
+    if let Some(q) = &index.quality {
+        println!("quality:   {} (resolved per-field bounds below)", q.quality);
+        println!("{:>8} {:>14}", "field", "eb_abs");
+        for (f, name) in FIELD_NAMES.iter().enumerate() {
+            println!("{:>8} {:>14}", name, fmt_bound(q.field_bounds[f]));
+        }
+    }
+    println!("archived spec: {spec} (v3, 1 shard)");
     Ok(())
 }
 
@@ -228,7 +352,19 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("archive:   {input}");
     println!("format:    v{}", reader.version());
     println!("spec:      {}", idx.spec);
-    println!("eb_rel:    {:.3e}", idx.eb_rel);
+    match &idx.quality {
+        Some(q) => {
+            println!("quality:   {}", q.quality);
+            println!("{:>8} {:>14}", "field", "eb_abs");
+            for (f, name) in FIELD_NAMES.iter().enumerate() {
+                println!("{:>8} {:>14}", name, fmt_bound(q.field_bounds[f]));
+            }
+        }
+        None => {
+            println!("quality:   n/a (pre-quality archive)");
+            println!("eb_rel:    {:.3e}", idx.eb_rel);
+        }
+    }
     println!("particles: {}", idx.n);
     println!(
         "size:      {} -> {} (ratio {ratio:.2}, {:.2} bits/value)",
@@ -360,15 +496,26 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("generating {} snapshot (n={n})...", kind.name());
     let snap = generate(kind, n, nblc::bench::BENCH_SEED);
 
-    // An explicit codec spec pins the compressor; otherwise the mode
-    // (plus the §V-C scheduler when auto_route is on) picks it.
-    let spec = match &settings.method {
-        Some(m) => {
+    // An explicit codec spec pins the compressor; `method = "auto..."`
+    // runs the sampled planner; otherwise the mode (plus the §V-C
+    // scheduler when auto_route is on) picks it.
+    let auto_target = match &settings.method {
+        Some(m) => parse_auto(m)?,
+        None => None,
+    };
+    let spec = match (&settings.method, auto_target) {
+        (Some(_), Some(target)) => {
+            let stats = SnapshotStats::collect(&snap);
+            let (name, plan) = registry::plan_auto(&stats, &settings.quality, target)?;
+            print_plan(&plan);
+            registry::canonical(&name)?
+        }
+        (Some(m), None) => {
             let canonical = registry::canonical(m)?;
             println!("pipeline codec: {canonical}");
             canonical
         }
-        None => {
+        (None, _) => {
             let mode = if settings.auto_route {
                 let routed = choose_compressor(&snap, settings.mode);
                 if routed != settings.mode {
@@ -422,7 +569,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 workers: settings.workers,
                 threads: settings.threads,
                 queue_depth: settings.queue_depth,
-                eb_rel: settings.eb_rel,
+                quality: settings.quality.clone(),
                 factory: factory.clone(),
                 sink,
             },

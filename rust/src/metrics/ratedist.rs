@@ -3,6 +3,7 @@
 
 use crate::error::Result;
 use crate::metrics::error::ErrorStats;
+use crate::quality::Quality;
 use crate::snapshot::{Snapshot, SnapshotCompressor};
 
 /// One rate-distortion sample.
@@ -30,7 +31,7 @@ pub fn rate_distortion_curve(
 ) -> Vec<RdPoint> {
     let mut out = Vec::new();
     for &eb in eb_rels {
-        let Ok(bundle) = compressor.compress(snap, eb) else {
+        let Ok(bundle) = compressor.compress(snap, &Quality::rel(eb)) else {
             continue;
         };
         let Ok(recon) = compressor.decompress(&bundle) else {

@@ -1,0 +1,898 @@
+//! First-class quality targets: typed error bounds, per-field [`Quality`]
+//! specifications, cheap sampled [`SnapshotStats`], and the [`Plan`]
+//! produced by the planning stage of [`crate::snapshot::SnapshotCompressor`].
+//!
+//! The paper's central knob — the user-controlled error bound — used to
+//! be a bare `f64` interpreted as a value-range-relative bound. This
+//! module replaces it with a typed [`ErrorBound`]:
+//!
+//! * `abs:1e-3` — absolute: every reconstructed value within `1e-3`;
+//! * `rel:1e-4` — value-range-relative (the paper's §III definition):
+//!   absolute bound `eb_rel × (max − min)` per field;
+//! * `pw_rel:1e-3` — pointwise-relative: `|x̃_i − x_i| ≤ p·|x_i|` for
+//!   every element (resolved conservatively to `p × min|x|` per field);
+//! * `lossless` — exact reconstruction.
+//!
+//! A [`Quality`] is one default bound plus optional per-field overrides
+//! (e.g. tighter positions than velocities). Bounds *resolve* to one
+//! absolute `f64` per field; the sentinel [`EXACT`] (`0.0`) means "must
+//! be reconstructed exactly" and routes per-field codecs through their
+//! lossless fallback (see [`crate::snapshot::PerField`]). Bounds so
+//! tight that the quantization lattice could not be indexed by an `i64`
+//! are floored to [`EXACT`] — exact coding is both safe and strictly
+//! within any such bound.
+//!
+//! Spec strings round-trip: `Quality::parse` accepts
+//! `rel:1e-4,coords=abs:1e-3,vz=pw_rel:1e-2` (groups `coords` /
+//! `velocities` expand to fields) and a bare float (`1e-4`) as the
+//! deprecated spelling of `rel:<x>`; [`Quality::canonical`] emits the
+//! normalized fixed-point form that archives store.
+
+use crate::error::{Error, Result};
+use crate::model::quant::{LatticeQuantizer, Predictor};
+use crate::snapshot::{Snapshot, FIELD_NAMES};
+use crate::util::stats;
+use std::fmt;
+
+/// Resolved bound sentinel meaning "reconstruct exactly" (the lossless
+/// per-field fallback; joint codecs reject it with a typed error).
+pub const EXACT: f64 = 0.0;
+
+/// Absolute bounds below this fraction of the field's value range are
+/// floored to [`EXACT`]: the lattice index range `range / (2·eb)` must
+/// stay well inside `i64` (LCF second differences use ~2 extra bits),
+/// and exact coding trivially satisfies any bound.
+const EXACT_FLOOR_REL: f64 = 1e-17;
+
+/// Smallest accepted `rel:` / `pw_rel:` coefficient (tighter requests
+/// are below f32 representability and almost certainly typos).
+const MIN_REL: f64 = 1e-15;
+
+fn parse_f64(s: &str, what: &str) -> Result<f64> {
+    s.trim()
+        .parse::<f64>()
+        .map_err(|_| Error::invalid(format!("{what}: '{s}' is not a number")))
+}
+
+/// A typed per-field quality target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute bound: `|x̃ − x| ≤ a` for every element.
+    Abs(f64),
+    /// Value-range-relative bound (paper §III): absolute bound
+    /// `r × (max − min)` derived from the field's value range.
+    Rel(f64),
+    /// Pointwise-relative bound: `|x̃_i − x_i| ≤ p·|x_i|` for every
+    /// element, resolved conservatively to `p × min|x|` per field
+    /// ([`EXACT`] when the field contains zeros).
+    PwRel(f64),
+    /// Exact reconstruction.
+    Lossless,
+}
+
+impl ErrorBound {
+    /// Parse a bound spec: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`,
+    /// `lossless`, or — the deprecated bare spelling — a plain float,
+    /// which means `rel:<v>` (the legacy `eb_rel` interpretation).
+    pub fn parse(s: &str) -> Result<ErrorBound> {
+        let s = s.trim();
+        let b = if let Some(v) = s.strip_prefix("abs:") {
+            ErrorBound::Abs(parse_f64(v, "abs bound")?)
+        } else if let Some(v) = s.strip_prefix("rel:") {
+            ErrorBound::Rel(parse_f64(v, "rel bound")?)
+        } else if let Some(v) = s.strip_prefix("pw_rel:") {
+            ErrorBound::PwRel(parse_f64(v, "pw_rel bound")?)
+        } else if s == "lossless" {
+            ErrorBound::Lossless
+        } else {
+            // Deprecated alias: a bare float is the legacy
+            // value-range-relative bound.
+            ErrorBound::Rel(parse_f64(
+                s,
+                "error bound (abs:<v>|rel:<v>|pw_rel:<v>|lossless, or a bare \
+                 float for the deprecated rel spelling)",
+            )?)
+        };
+        b.validate()?;
+        Ok(b)
+    }
+
+    /// Validate the coefficient's domain.
+    pub fn validate(&self) -> Result<()> {
+        let check_rel = |r: f64, kind: &str| -> Result<()> {
+            if !(MIN_REL..1.0).contains(&r) {
+                return Err(Error::invalid(format!(
+                    "{kind} bound must be in [{MIN_REL:e}, 1), got {r}"
+                )));
+            }
+            Ok(())
+        };
+        match *self {
+            ErrorBound::Abs(a) => {
+                if !(a > 0.0) || !a.is_finite() {
+                    return Err(Error::invalid(format!(
+                        "abs bound must be positive and finite, got {a}"
+                    )));
+                }
+                Ok(())
+            }
+            ErrorBound::Rel(r) => check_rel(r, "rel"),
+            ErrorBound::PwRel(p) => check_rel(p, "pw_rel"),
+            ErrorBound::Lossless => Ok(()),
+        }
+    }
+
+    /// Canonical spec-syntax form (a parse/canonicalize fixed point:
+    /// `f64`'s shortest round-trip formatting is used for coefficients).
+    pub fn canonical(&self) -> String {
+        match *self {
+            ErrorBound::Abs(a) => format!("abs:{a:e}"),
+            ErrorBound::Rel(r) => format!("rel:{r:e}"),
+            ErrorBound::PwRel(p) => format!("pw_rel:{p:e}"),
+            ErrorBound::Lossless => "lossless".into(),
+        }
+    }
+
+    /// Resolve to the absolute per-field bound the codecs enforce.
+    /// Returns [`EXACT`] when only exact coding can honor the request.
+    pub fn resolve(&self, st: &FieldStats) -> f64 {
+        let range = st.range();
+        match *self {
+            // Bit-for-bit the legacy `Snapshot::abs_bounds` math, so a
+            // uniform rel quality compresses identically to the old
+            // bare-f64 path (constant fields clamp to a tiny positive
+            // bound and encode exactly anyway).
+            ErrorBound::Rel(r) => (r * range).max(f64::MIN_POSITIVE),
+            ErrorBound::Abs(a) => floor_exact(a, range),
+            ErrorBound::PwRel(p) => floor_exact(p * st.min_abs, range),
+            ErrorBound::Lossless => EXACT,
+        }
+    }
+}
+
+fn floor_exact(raw: f64, range: f64) -> f64 {
+    if raw <= 0.0 || raw < range * EXACT_FLOOR_REL {
+        EXACT
+    } else {
+        raw
+    }
+}
+
+impl fmt::Display for ErrorBound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.canonical())
+    }
+}
+
+/// Per-field summary the bounds resolve against: min/max (value range),
+/// smallest magnitude (pointwise-relative resolution), and — when
+/// produced by [`SnapshotStats`] sampling — a compressibility estimate.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FieldStats {
+    /// Smallest value (0 for an empty field).
+    pub min: f32,
+    /// Largest value (0 for an empty field).
+    pub max: f32,
+    /// Smallest magnitude `min |x|` (0 when the field contains zeros).
+    pub min_abs: f64,
+    /// Shannon entropy (bits/value) of the last-value lattice codes at
+    /// the reference `rel:1e-4` bound; only filled by
+    /// [`SnapshotStats::collect`], 0 from [`FieldStats::scan`].
+    pub entropy_bits: f64,
+}
+
+impl FieldStats {
+    /// One full pass over a field: min, max, min |x|.
+    pub fn scan(xs: &[f32]) -> FieldStats {
+        if xs.is_empty() {
+            return FieldStats::default();
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut ma = f64::INFINITY;
+        for &x in xs {
+            if x < lo {
+                lo = x;
+            }
+            if x > hi {
+                hi = x;
+            }
+            let a = x.abs() as f64;
+            if a < ma {
+                ma = a;
+            }
+        }
+        FieldStats {
+            min: lo,
+            max: hi,
+            min_abs: ma,
+            entropy_bits: 0.0,
+        }
+    }
+
+    /// Value range `max − min` (f32 subtraction, matching
+    /// `util::stats::value_range` exactly; 0 for empty fields).
+    pub fn range(&self) -> f64 {
+        (self.max - self.min) as f64
+    }
+}
+
+/// Full-scan per-field stats of a snapshot (what `compress_with`
+/// resolves bounds against; [`SnapshotStats::collect`] is the sampled
+/// planning-time counterpart).
+pub fn snapshot_field_stats(snap: &Snapshot) -> [FieldStats; 6] {
+    std::array::from_fn(|f| FieldStats::scan(&snap.fields[f]))
+}
+
+/// A complete quality target: one default [`ErrorBound`] plus optional
+/// per-field overrides, built either from a spec string
+/// ([`Quality::parse`]) or the builder methods:
+///
+/// ```
+/// use nblc::quality::{ErrorBound, Quality};
+/// // Tighter positions than velocities.
+/// let q = Quality::rel(1e-3).with_coords(ErrorBound::Rel(1e-5));
+/// assert_eq!(q.canonical(), "rel:1e-3,xx=rel:1e-5,yy=rel:1e-5,zz=rel:1e-5");
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quality {
+    default: ErrorBound,
+    overrides: [Option<ErrorBound>; 6],
+}
+
+impl Default for Quality {
+    /// The paper's headline bound, `rel:1e-4`.
+    fn default() -> Self {
+        Quality::rel(1e-4)
+    }
+}
+
+impl Quality {
+    /// Uniform quality from one default bound.
+    pub fn new(default: ErrorBound) -> Quality {
+        Quality {
+            default,
+            overrides: [None; 6],
+        }
+    }
+
+    /// Uniform value-range-relative quality (the legacy `eb_rel`).
+    pub fn rel(eb_rel: f64) -> Quality {
+        Quality::new(ErrorBound::Rel(eb_rel))
+    }
+
+    /// Uniform absolute quality.
+    pub fn abs(eb_abs: f64) -> Quality {
+        Quality::new(ErrorBound::Abs(eb_abs))
+    }
+
+    /// Uniform pointwise-relative quality.
+    pub fn pw_rel(p: f64) -> Quality {
+        Quality::new(ErrorBound::PwRel(p))
+    }
+
+    /// Exact reconstruction for every field.
+    pub fn lossless() -> Quality {
+        Quality::new(ErrorBound::Lossless)
+    }
+
+    /// Builder: override the bound for one field (`xx`..`vz`) or group
+    /// (`coords`, `velocities`/`vel`).
+    pub fn with(mut self, field: &str, bound: ErrorBound) -> Result<Quality> {
+        for i in field_indices(field)? {
+            self.overrides[i] = Some(bound);
+        }
+        Ok(self)
+    }
+
+    /// Builder: override the three coordinate fields.
+    pub fn with_coords(self, bound: ErrorBound) -> Quality {
+        self.with("coords", bound).expect("'coords' is a valid group")
+    }
+
+    /// Builder: override the three velocity fields.
+    pub fn with_velocities(self, bound: ErrorBound) -> Quality {
+        self.with("velocities", bound).expect("'velocities' is a valid group")
+    }
+
+    /// The default bound (fields without an override).
+    pub fn default_bound(&self) -> ErrorBound {
+        self.default
+    }
+
+    /// Effective bound for a field (canonical index).
+    pub fn bound(&self, f: usize) -> ErrorBound {
+        self.overrides[f].unwrap_or(self.default)
+    }
+
+    /// `Some(r)` when every field's bound is the same `rel:r` — i.e. the
+    /// quality is expressible as the legacy bare `eb_rel`.
+    pub fn uniform_rel(&self) -> Option<f64> {
+        let ErrorBound::Rel(r) = self.default else {
+            return None;
+        };
+        for ov in &self.overrides {
+            match ov {
+                None => {}
+                Some(ErrorBound::Rel(x)) if *x == r => {}
+                _ => return None,
+            }
+        }
+        Some(r)
+    }
+
+    /// The legacy `eb_rel` header value: the uniform rel coefficient, or
+    /// `0.0` when the quality is not expressible as one (readers must
+    /// consult the archive's quality block instead).
+    pub fn legacy_rel(&self) -> f64 {
+        self.uniform_rel().unwrap_or(0.0)
+    }
+
+    /// Parse a quality spec: comma-separated items, one default bound
+    /// plus `field=bound` / `group=bound` overrides, e.g.
+    /// `rel:1e-4,coords=abs:1e-3`. A bare float (`1e-4`) is the
+    /// deprecated spelling of a uniform `rel:` quality.
+    pub fn parse(s: &str) -> Result<Quality> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(Error::invalid("empty quality spec"));
+        }
+        let mut default: Option<ErrorBound> = None;
+        let mut overrides: [Option<ErrorBound>; 6] = [None; 6];
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(Error::invalid(format!("empty item in quality '{s}'")));
+            }
+            match item.split_once('=') {
+                Some((field, bound)) => {
+                    let b = ErrorBound::parse(bound)?;
+                    for i in field_indices(field.trim())? {
+                        if overrides[i].is_some() {
+                            return Err(Error::invalid(format!(
+                                "field '{}' bound given twice in quality '{s}'",
+                                FIELD_NAMES[i]
+                            )));
+                        }
+                        overrides[i] = Some(b);
+                    }
+                }
+                None => {
+                    if default.is_some() {
+                        return Err(Error::invalid(format!(
+                            "more than one default bound in quality '{s}'"
+                        )));
+                    }
+                    default = Some(ErrorBound::parse(item)?);
+                }
+            }
+        }
+        let default = default
+            .ok_or_else(|| Error::invalid(format!("quality '{s}' has no default bound")))?;
+        // Normalize: overrides equal to the default carry no information.
+        let overrides = std::array::from_fn(|i| overrides[i].filter(|b| *b != default));
+        Ok(Quality { default, overrides })
+    }
+
+    /// Canonical spec form: default first, then per-field overrides in
+    /// canonical field order, groups expanded, no-op overrides dropped.
+    /// A fixed point of `parse` ∘ `canonical`; this is the string the
+    /// `.nblc` quality block stores.
+    pub fn canonical(&self) -> String {
+        let mut out = self.default.canonical();
+        for f in 0..6 {
+            if let Some(b) = self.overrides[f] {
+                if b != self.default {
+                    out.push(',');
+                    out.push_str(FIELD_NAMES[f]);
+                    out.push('=');
+                    out.push_str(&b.canonical());
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve against precomputed per-field stats.
+    pub fn resolve_fields(&self, stats: &[FieldStats; 6]) -> [f64; 6] {
+        std::array::from_fn(|f| self.bound(f).resolve(&stats[f]))
+    }
+
+    /// Resolve to absolute per-field bounds with a full scan of the
+    /// snapshot (what `compress_with` uses; planning resolves against
+    /// sampled [`SnapshotStats`] instead).
+    pub fn resolve(&self, snap: &Snapshot) -> [f64; 6] {
+        self.resolve_fields(&snapshot_field_stats(snap))
+    }
+}
+
+impl fmt::Display for Quality {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.canonical())
+    }
+}
+
+fn field_indices(name: &str) -> Result<Vec<usize>> {
+    if let Some(i) = FIELD_NAMES.iter().position(|&n| n == name) {
+        return Ok(vec![i]);
+    }
+    match name {
+        "coords" => Ok(vec![0, 1, 2]),
+        "vel" | "velocities" => Ok(vec![3, 4, 5]),
+        _ => Err(Error::invalid(format!(
+            "unknown field '{name}' in quality spec (fields: {}, groups: coords, velocities)",
+            FIELD_NAMES.join(" ")
+        ))),
+    }
+}
+
+/// Typed rejection for codecs that cannot reconstruct exactly (the
+/// joint/reordering family): called with the resolved bounds before
+/// compressing.
+pub(crate) fn ensure_no_exact(codec: &str, ebs: &[f64; 6]) -> Result<()> {
+    if let Some(f) = (0..6).find(|&f| ebs[f] == EXACT) {
+        return Err(Error::invalid(format!(
+            "codec '{codec}' cannot honor the exact/lossless bound resolved for field \
+             '{}'; use a per-field codec (sz_lv, gzip, ...) whose lossless fallback \
+             applies, or loosen the bound",
+            FIELD_NAMES[f]
+        )));
+    }
+    Ok(())
+}
+
+/// The equivalent value-range-relative coefficient the R-index sorting
+/// stage bins by. Exactly the uniform rel coefficient when the quality
+/// is a legacy-style one (bit-compatible permutations with the old f64
+/// path); otherwise the tightest per-field `eb/range` ratio. Only ratio
+/// is affected by this choice — correctness never depends on the sort.
+pub(crate) fn sort_rel(quality: &Quality, ebs: &[f64; 6], stats: &[FieldStats; 6]) -> f64 {
+    if let Some(r) = quality.uniform_rel() {
+        return r;
+    }
+    let mut rel = f64::INFINITY;
+    for f in 0..6 {
+        let range = stats[f].range();
+        if range > 0.0 && ebs[f] > 0.0 {
+            rel = rel.min(ebs[f] / range);
+        }
+    }
+    if rel.is_finite() {
+        rel.clamp(1e-12, 0.5)
+    } else {
+        1e-4
+    }
+}
+
+/// Verify a reconstruction against a [`Quality`], per field and per
+/// element — the typed counterpart of
+/// [`crate::snapshot::verify_bounds`]. `PwRel` is checked *pointwise*
+/// (`|x̃_i − x_i| ≤ p·|x_i|`), which is strictly stronger than the
+/// uniform bound compression resolved to.
+pub fn verify_quality(orig: &Snapshot, recon: &Snapshot, quality: &Quality) -> Result<()> {
+    if orig.len() != recon.len() {
+        return Err(Error::invalid("length mismatch in quality verification"));
+    }
+    for f in 0..6 {
+        let bound = quality.bound(f);
+        // Only the Rel arm consults the value range — skip the O(n)
+        // scan for the other bound kinds.
+        let range = match bound {
+            ErrorBound::Rel(_) => FieldStats::scan(&orig.fields[f]).range(),
+            _ => 0.0,
+        };
+        for (i, (&a, &b)) in orig.fields[f].iter().zip(recon.fields[f].iter()).enumerate() {
+            let err = (a as f64 - b as f64).abs();
+            let limit = match bound {
+                ErrorBound::Abs(x) => x,
+                ErrorBound::Rel(r) => (r * range).max(f64::MIN_POSITIVE),
+                ErrorBound::PwRel(p) => p * (a as f64).abs(),
+                ErrorBound::Lossless => 0.0,
+            };
+            if err > limit {
+                return Err(Error::BoundViolation {
+                    index: f * orig.len() + i,
+                    err,
+                    eb: limit,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Elements per contiguous sampling block: whole blocks preserve
+/// neighbor relations, so prediction-based codecs see realistic deltas.
+pub const SAMPLE_BLOCK: usize = 256;
+
+/// A cheap sampled summary of a snapshot: per-field stats plus a small
+/// contiguous-block sample snapshot the planning stage compresses to
+/// estimate ratio and throughput. Collection is deterministic (no RNG)
+/// and touches ~1% of the data by default.
+#[derive(Clone, Debug)]
+pub struct SnapshotStats {
+    /// Full snapshot's particle count.
+    pub n: usize,
+    /// Per-field sampled stats (min/max/min-abs/entropy estimate).
+    pub fields: [FieldStats; 6],
+    /// The block sample itself (fed to `SnapshotCompressor::plan`).
+    pub sample: Snapshot,
+}
+
+impl SnapshotStats {
+    /// Collect with the default sample budget: `n / 128` particles,
+    /// clamped to `[1024, 65536]` (everything, for tiny snapshots).
+    pub fn collect(snap: &Snapshot) -> SnapshotStats {
+        Self::collect_target(snap, (snap.len() / 128).clamp(1024, 65536))
+    }
+
+    /// Collect with an explicit sample-size target.
+    pub fn collect_target(snap: &Snapshot, target: usize) -> SnapshotStats {
+        let n = snap.len();
+        let target = target.min(n);
+        let blocks: Vec<(usize, usize)> = if n == 0 {
+            Vec::new()
+        } else if target >= n {
+            vec![(0, n)]
+        } else {
+            let nblocks = target.div_ceil(SAMPLE_BLOCK);
+            let stride = n as f64 / nblocks as f64;
+            (0..nblocks)
+                .map(|b| {
+                    // Each block ends at the next block's start, so a
+                    // target close to n (stride < SAMPLE_BLOCK) never
+                    // duplicates elements or oversamples past n.
+                    let start = (b as f64 * stride) as usize;
+                    let next = if b + 1 == nblocks {
+                        n
+                    } else {
+                        ((b + 1) as f64 * stride) as usize
+                    };
+                    (start, (start + SAMPLE_BLOCK).min(next.max(start)).min(n))
+                })
+                .collect()
+        };
+        let fields: [Vec<f32>; 6] = std::array::from_fn(|f| {
+            let mut v = Vec::with_capacity(target + SAMPLE_BLOCK);
+            for &(a, b) in &blocks {
+                v.extend_from_slice(&snap.fields[f][a..b]);
+            }
+            v
+        });
+        let mut field_stats: [FieldStats; 6] = std::array::from_fn(|f| FieldStats::scan(&fields[f]));
+        for (f, st) in field_stats.iter_mut().enumerate() {
+            st.entropy_bits = code_entropy_estimate(&fields[f]);
+        }
+        let sample = Snapshot {
+            name: format!("{}:sample", snap.name),
+            fields,
+            box_size: snap.box_size,
+            seed: snap.seed,
+        };
+        SnapshotStats {
+            n,
+            fields: field_stats,
+            sample,
+        }
+    }
+
+    /// Fraction of the snapshot the sample covers.
+    pub fn sample_fraction(&self) -> f64 {
+        if self.n == 0 {
+            1.0
+        } else {
+            self.sample.len() as f64 / self.n as f64
+        }
+    }
+}
+
+/// Entropy (bits/value) of the last-value lattice codes at the
+/// reference `rel:1e-4` bound — a codec-independent compressibility
+/// indicator (lower = smoother = better SZ-family ratio).
+fn code_entropy_estimate(xs: &[f32]) -> f64 {
+    let range = stats::value_range(xs);
+    let eb = (range * 1e-4).max(f64::MIN_POSITIVE);
+    match LatticeQuantizer::new(eb) {
+        Ok(q) => stats::entropy_bits(q.quantize(xs, Predictor::LastValue).codes.into_iter()),
+        Err(_) => 0.0,
+    }
+}
+
+/// One field's slice of a [`Plan`].
+#[derive(Clone, Copy, Debug)]
+pub struct FieldPlan {
+    /// Field name (canonical order).
+    pub name: &'static str,
+    /// The effective bound for this field.
+    pub bound: ErrorBound,
+    /// Resolved absolute bound, estimated from the sampled stats
+    /// ([`EXACT`] = exact coding); the archive records the exact
+    /// compress-time resolution.
+    pub eb_abs: f64,
+    /// Estimated encoded bits per value (from the sample compression;
+    /// joint codecs report the aggregate for every field).
+    pub est_bits_per_value: f64,
+}
+
+/// The output of the planning stage: resolved per-field bounds plus
+/// ratio/throughput estimates from compressing the stats' block sample.
+/// Estimates carry the sample's bias (per-stream table overheads are
+/// amortized over fewer values), so ratios are mild *underestimates*
+/// for large snapshots.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Compressor name the plan was made for.
+    pub codec: String,
+    /// Canonical quality string.
+    pub quality: String,
+    /// Per-field resolved bounds and size estimates.
+    pub fields: [FieldPlan; 6],
+    /// Estimated overall compression ratio.
+    pub est_ratio: f64,
+    /// Estimated overall bits per value (`32 / est_ratio`).
+    pub est_bits_per_value: f64,
+    /// Estimated single-thread compression throughput (MB/s), measured
+    /// on the sample.
+    pub est_compress_mbps: f64,
+    /// Particles in the sample the estimates came from.
+    pub sample_particles: usize,
+    /// Particles in the full snapshot.
+    pub total_particles: usize,
+}
+
+impl Plan {
+    /// Build a plan from one sample-compression run (the default
+    /// `SnapshotCompressor::plan` body).
+    pub(crate) fn from_sample_run(
+        codec: &str,
+        stats: &SnapshotStats,
+        quality: &Quality,
+        bundle: &crate::snapshot::CompressedSnapshot,
+        secs: f64,
+    ) -> Plan {
+        let m = stats.sample.len().max(1);
+        let ebs = quality.resolve_fields(&stats.fields);
+        let per_field = bundle.fields.len() == 6;
+        let agg_bits = bundle.compressed_bytes() as f64 * 8.0 / (m * 6) as f64;
+        let fields: [FieldPlan; 6] = std::array::from_fn(|f| FieldPlan {
+            name: FIELD_NAMES[f],
+            bound: quality.bound(f),
+            eb_abs: ebs[f],
+            est_bits_per_value: if per_field {
+                bundle.fields[f].bytes.len() as f64 * 8.0 / m as f64
+            } else {
+                agg_bits
+            },
+        });
+        Plan {
+            codec: codec.to_string(),
+            quality: quality.canonical(),
+            fields,
+            est_ratio: bundle.compression_ratio(),
+            est_bits_per_value: bundle.bit_rate(),
+            est_compress_mbps: stats.sample.total_bytes() as f64 / secs.max(1e-9) / 1e6,
+            sample_particles: stats.sample.len(),
+            total_particles: stats.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    #[test]
+    fn bound_parse_and_canonical_roundtrip() {
+        for (s, want) in [
+            ("abs:1e-3", ErrorBound::Abs(1e-3)),
+            ("rel:1e-4", ErrorBound::Rel(1e-4)),
+            ("pw_rel:0.01", ErrorBound::PwRel(0.01)),
+            ("lossless", ErrorBound::Lossless),
+            // Deprecated bare-float spelling.
+            ("1e-4", ErrorBound::Rel(1e-4)),
+            ("0.001", ErrorBound::Rel(0.001)),
+        ] {
+            let b = ErrorBound::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(b, want, "{s}");
+            // Canonical form is a parse fixed point.
+            let c = b.canonical();
+            assert_eq!(ErrorBound::parse(&c).unwrap(), b, "{s} -> {c}");
+            assert_eq!(ErrorBound::parse(&c).unwrap().canonical(), c, "{s} -> {c}");
+        }
+    }
+
+    #[test]
+    fn bound_rejects_bad_input() {
+        for bad in [
+            "", "abs:", "abs:x", "abs:-1", "abs:0", "abs:inf", "rel:0", "rel:1.5",
+            "rel:1e-40", "pw_rel:2", "losless", "abs=1e-3", "rel 1e-4",
+        ] {
+            assert!(ErrorBound::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn quality_parse_canonical_fixed_point() {
+        for s in [
+            "rel:1e-4",
+            "abs:1e-3",
+            "lossless",
+            "rel:1e-4,coords=abs:1e-3",
+            "rel:1e-3,xx=rel:1e-5,vz=pw_rel:1e-2",
+            "pw_rel:1e-2,velocities=rel:1e-4",
+            "1e-4", // deprecated bare spelling
+        ] {
+            let q = Quality::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            let c = q.canonical();
+            let q2 = Quality::parse(&c).unwrap_or_else(|e| panic!("{s} -> {c}: {e}"));
+            assert_eq!(q2.canonical(), c, "{s}");
+            assert_eq!(q, q2, "{s}");
+        }
+        // Group expansion lands per field.
+        let q = Quality::parse("rel:1e-4,coords=abs:1e-3").unwrap();
+        assert_eq!(q.bound(0), ErrorBound::Abs(1e-3));
+        assert_eq!(q.bound(2), ErrorBound::Abs(1e-3));
+        assert_eq!(q.bound(3), ErrorBound::Rel(1e-4));
+        // A no-op override normalizes away.
+        assert_eq!(Quality::parse("rel:1e-4,xx=rel:1e-4").unwrap().canonical(), "rel:1e-4");
+    }
+
+    #[test]
+    fn quality_rejects_bad_input() {
+        for bad in [
+            "",
+            ",",
+            "rel:1e-4,",
+            "rel:1e-4,rel:1e-3",   // two defaults
+            "xx=rel:1e-4",          // no default
+            "rel:1e-4,ww=abs:1e-3", // unknown field
+            "rel:1e-4,xx=abs:1e-3,xx=abs:1e-2",
+            "rel:1e-4,coords=abs:1e-3,xx=abs:1e-2", // group/field overlap
+        ] {
+            assert!(Quality::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn uniform_rel_and_legacy() {
+        assert_eq!(Quality::rel(1e-4).uniform_rel(), Some(1e-4));
+        assert_eq!(Quality::rel(1e-4).legacy_rel(), 1e-4);
+        assert_eq!(Quality::abs(1e-3).legacy_rel(), 0.0);
+        let mixed = Quality::rel(1e-4).with_coords(ErrorBound::Abs(1e-3));
+        assert_eq!(mixed.uniform_rel(), None);
+        // An explicit no-op rel override keeps uniformity.
+        let same = Quality::rel(1e-4).with("xx", ErrorBound::Rel(1e-4)).unwrap();
+        assert_eq!(same.uniform_rel(), Some(1e-4));
+    }
+
+    #[test]
+    fn rel_resolution_matches_legacy_abs_bounds() {
+        let s = generate_md(&MdConfig {
+            n_particles: 2_000,
+            ..Default::default()
+        });
+        for eb_rel in [1e-3, 1e-4, 1e-6] {
+            let legacy = s.abs_bounds(eb_rel);
+            let resolved = Quality::rel(eb_rel).resolve(&s);
+            for f in 0..6 {
+                assert_eq!(legacy[f].to_bits(), resolved[f].to_bits(), "field {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn abs_and_pw_rel_resolution() {
+        let st = FieldStats {
+            min: 2.0,
+            max: 6.0,
+            min_abs: 2.0,
+            entropy_bits: 0.0,
+        };
+        assert_eq!(ErrorBound::Abs(1e-3).resolve(&st), 1e-3);
+        assert_eq!(ErrorBound::PwRel(0.01).resolve(&st), 0.02);
+        assert_eq!(ErrorBound::Lossless.resolve(&st), EXACT);
+        // A field containing zeros degrades pw_rel to exact.
+        let zero = FieldStats {
+            min: -1.0,
+            max: 1.0,
+            min_abs: 0.0,
+            entropy_bits: 0.0,
+        };
+        assert_eq!(ErrorBound::PwRel(0.01).resolve(&zero), EXACT);
+        // Bounds far below the range floor to exact (i64 lattice safety).
+        assert_eq!(ErrorBound::Abs(1e-30).resolve(&st), EXACT);
+        // Constant field: abs keeps its bound, rel clamps tiny-positive.
+        let flat = FieldStats {
+            min: 3.0,
+            max: 3.0,
+            min_abs: 3.0,
+            entropy_bits: 0.0,
+        };
+        assert_eq!(ErrorBound::Abs(1e-3).resolve(&flat), 1e-3);
+        assert_eq!(ErrorBound::Rel(1e-4).resolve(&flat), f64::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn verify_quality_checks_each_kind() {
+        let s = Snapshot::new(
+            "t",
+            [
+                vec![1.0, 2.0, 3.0],
+                vec![1.0, 2.0, 3.0],
+                vec![1.0, 2.0, 3.0],
+                vec![-1.0, 0.5, 1.0],
+                vec![0.5, 0.5, 0.5],
+                vec![2.0, 2.0, 2.0],
+            ],
+            4.0,
+        )
+        .unwrap();
+        let mut off = s.clone();
+        off.fields[0][1] += 0.01;
+        assert!(verify_quality(&s, &s, &Quality::lossless()).is_ok());
+        assert!(verify_quality(&s, &off, &Quality::lossless()).is_err());
+        assert!(verify_quality(&s, &off, &Quality::abs(0.02)).is_ok());
+        assert!(verify_quality(&s, &off, &Quality::abs(0.001)).is_err());
+        // pw_rel is pointwise: 0.01 error at value 2.0 needs p >= 0.005.
+        assert!(verify_quality(&s, &off, &Quality::pw_rel(0.01)).is_ok());
+        assert!(verify_quality(&s, &off, &Quality::pw_rel(0.001)).is_err());
+        // Per-field override: loosening only the wrong field still fails.
+        let q = Quality::abs(0.001).with("yy", ErrorBound::Abs(0.1)).unwrap();
+        assert!(verify_quality(&s, &off, &q).is_err());
+        let q = Quality::abs(0.001).with("xx", ErrorBound::Abs(0.1)).unwrap();
+        assert!(verify_quality(&s, &off, &q).is_ok());
+    }
+
+    #[test]
+    fn stats_sampling_is_cheap_and_representative() {
+        let s = generate_md(&MdConfig {
+            n_particles: 200_000,
+            ..Default::default()
+        });
+        let stats = SnapshotStats::collect(&s);
+        assert_eq!(stats.n, 200_000);
+        let frac = stats.sample_fraction();
+        assert!(frac < 0.02, "sample fraction {frac}");
+        assert!(stats.sample.len() >= 1024);
+        // Sampled ranges sit inside (and near) the true ranges.
+        let full = snapshot_field_stats(&s);
+        for f in 0..6 {
+            assert!(stats.fields[f].range() <= full[f].range() + 1e-12, "field {f}");
+            assert!(
+                stats.fields[f].range() > 0.5 * full[f].range(),
+                "field {f}: sampled range {} vs full {}",
+                stats.fields[f].range(),
+                full[f].range()
+            );
+            assert!(stats.fields[f].entropy_bits >= 0.0);
+        }
+        // Tiny snapshots sample everything.
+        let tiny = generate_md(&MdConfig {
+            n_particles: 500,
+            ..Default::default()
+        });
+        let ts = SnapshotStats::collect(&tiny);
+        assert_eq!(ts.sample.len(), 500);
+        // Empty snapshots don't panic.
+        let es = SnapshotStats::collect(&Snapshot::default());
+        assert_eq!(es.sample.len(), 0);
+    }
+
+    #[test]
+    fn sort_rel_matches_uniform_rel_exactly() {
+        let s = generate_md(&MdConfig {
+            n_particles: 1_000,
+            ..Default::default()
+        });
+        let stats = snapshot_field_stats(&s);
+        let q = Quality::rel(1e-4);
+        let ebs = q.resolve_fields(&stats);
+        assert_eq!(sort_rel(&q, &ebs, &stats), 1e-4);
+        // Mixed quality: tightest eb/range ratio, clamped.
+        let q = Quality::rel(1e-3).with_coords(ErrorBound::Rel(1e-5));
+        let ebs = q.resolve_fields(&stats);
+        let r = sort_rel(&q, &ebs, &stats);
+        assert!(r > 0.0 && r <= 1e-3 * 1.0000001, "r={r}");
+    }
+}

@@ -12,7 +12,9 @@
 
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
+use crate::quality::{self, Plan, Quality, SnapshotStats};
 use crate::util::stats;
+use crate::util::timer::Timer;
 
 /// Field names in canonical order.
 pub const FIELD_NAMES: [&str; 6] = ["xx", "yy", "zz", "vx", "vy", "vz"];
@@ -173,8 +175,14 @@ impl CompressedField {
 pub struct CompressedSnapshot {
     /// Compressor name that produced this bundle.
     pub compressor: String,
-    /// The relative error bound used.
+    /// Legacy value-range-relative bound: the uniform `rel:` coefficient
+    /// when the [`Quality`] is expressible as one, else `0.0` (consult
+    /// `field_bounds` / the archive's quality block instead).
     pub eb_rel: f64,
+    /// Resolved absolute error bound per field (canonical order;
+    /// [`quality::EXACT`] = exact coding). `None` on bundles read from
+    /// pre-quality archives.
+    pub field_bounds: Option<[f64; 6]>,
     /// Per-field streams, in [`FIELD_NAMES`] order. Joint compressors
     /// (CPC2000 family) may use fewer streams; they document their own
     /// layout and keep per-field accounting where possible.
@@ -218,6 +226,13 @@ impl CompressedSnapshot {
 pub trait FieldCompressor {
     /// Short identifier ("sz_lv", "zfp", ...).
     fn name(&self) -> &'static str;
+    /// True when this codec reconstructs exactly regardless of the
+    /// bound (the gzip baseline). Exact-coding requests
+    /// ([`quality::EXACT`]) on lossy codecs route through the adapters'
+    /// lossless fallback instead of reaching `compress`.
+    fn is_lossless(&self) -> bool {
+        false
+    }
     /// Compress `xs` so every reconstructed value differs by at most
     /// `eb_abs`.
     fn compress(&self, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>>;
@@ -236,7 +251,7 @@ pub trait FieldCompressor {
     fn decompress(&self, bytes: &[u8]) -> Result<Vec<f32>>;
 }
 
-/// Compressor over a whole snapshot under a value-range-relative bound.
+/// Compressor over a whole snapshot under a typed [`Quality`] target.
 /// (Not `Send + Sync` — see [`FieldCompressor`].)
 ///
 /// The `*_with` methods are the primary entry points and take an
@@ -245,28 +260,68 @@ pub trait FieldCompressor {
 /// implementation MUST produce byte-identical output for every thread
 /// count (enforced by `tests/parallel_determinism.rs`) so archives
 /// stay deterministic regardless of how they were produced.
+///
+/// The bare-`f64` entry points of earlier releases survive as the
+/// deprecated [`Self::compress_rel`] / [`Self::compress_with_rel`]
+/// shims (`eb_rel` ≡ `Quality::rel(eb_rel)`); they are scheduled for
+/// removal one release after 0.3.
 pub trait SnapshotCompressor {
     /// Short identifier used in tables.
     fn name(&self) -> &'static str;
-    /// Compress all six fields under `eb_rel` (per-field absolute bounds
-    /// derived from each field's value range), fanning independent work
+    /// Compress all six fields under `quality` (per-field bounds
+    /// resolved against each field's stats), fanning independent work
     /// items across `ctx.threads()` threads.
     fn compress_with(
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot>;
     /// Reconstruct a snapshot (possibly particle-permuted, see
     /// [`Self::reorders`]) under the context's thread budget.
     fn decompress_with(&self, ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot>;
     /// Sequential convenience wrapper over [`Self::compress_with`].
-    fn compress(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
-        self.compress_with(&ExecCtx::sequential(), snap, eb_rel)
+    fn compress(&self, snap: &Snapshot, quality: &Quality) -> Result<CompressedSnapshot> {
+        self.compress_with(&ExecCtx::sequential(), snap, quality)
     }
     /// Sequential convenience wrapper over [`Self::decompress_with`].
     fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
         self.decompress_with(&ExecCtx::sequential(), c)
+    }
+    /// Deprecated bare-`f64` shim: `eb_rel` is the legacy
+    /// value-range-relative bound, `Quality::rel(eb_rel)` today.
+    #[deprecated(
+        since = "0.3.0",
+        note = "bare f64 bounds are the legacy value-range-relative spelling; \
+                pass &Quality (e.g. Quality::rel(eb_rel)) to compress()"
+    )]
+    fn compress_rel(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
+        self.compress(snap, &Quality::rel(eb_rel))
+    }
+    /// Deprecated bare-`f64` shim over [`Self::compress_with`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "bare f64 bounds are the legacy value-range-relative spelling; \
+                pass &Quality (e.g. Quality::rel(eb_rel)) to compress_with()"
+    )]
+    fn compress_with_rel(
+        &self,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        eb_rel: f64,
+    ) -> Result<CompressedSnapshot> {
+        self.compress_with(ctx, snap, &Quality::rel(eb_rel))
+    }
+    /// The cheap planning stage: resolve `quality` against sampled
+    /// [`SnapshotStats`] and estimate ratio/throughput by compressing
+    /// the stats' contiguous-block sample (sequentially — planning must
+    /// stay a negligible fraction of a full compress; the hotpath bench
+    /// pins it under 1%). Codecs with analytic models can override.
+    fn plan(&self, stats: &SnapshotStats, quality: &Quality) -> Result<Plan> {
+        let t = Timer::start();
+        let bundle = self.compress_with(&ExecCtx::sequential(), &stats.sample, quality)?;
+        let secs = t.secs();
+        Ok(Plan::from_sample_run(self.name(), stats, quality, &bundle, secs))
     }
     /// True when decompression may return the particles in a different
     /// (but cross-field-consistent) order.
@@ -279,6 +334,52 @@ pub trait SnapshotCompressor {
 /// per-field parallel fan-out.
 pub(crate) const FIELD_IDX: [usize; 6] = [0, 1, 2, 3, 4, 5];
 
+/// Leading byte of an exact-coded (lossless-fallback) field stream.
+/// Distinct from every field codec's magic (`'S'`, `'F'`, `'Z'`, `'I'`),
+/// so the per-field adapters can dispatch on it at decompress time.
+pub(crate) const EXACT_MAGIC: u8 = b'E';
+
+/// Lossless-code a field: the DEFLATE-style codec over the raw
+/// little-endian f32 bytes. Shared by the gzip baseline codec and the
+/// per-field exact fallback (the single implementation of this
+/// round-trip in the crate).
+pub(crate) fn lossless_field_bytes(ctx: Option<&ExecCtx>, xs: &[f32]) -> Result<Vec<u8>> {
+    let mut raw = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        raw.extend_from_slice(&x.to_le_bytes());
+    }
+    crate::codec::lz77::compress_ctx(&raw, crate::codec::lz77::Effort::Best, ctx)
+}
+
+/// Inverse of [`lossless_field_bytes`].
+pub(crate) fn lossless_field_decode(bytes: &[u8]) -> Result<Vec<f32>> {
+    let raw = crate::codec::lz77::decompress(bytes)?;
+    if raw.len() % 4 != 0 {
+        return Err(Error::corrupt("lossless field payload not a multiple of 4 bytes"));
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Exact-code a field: [`EXACT_MAGIC`] + [`lossless_field_bytes`]. This
+/// is the per-field fallback for [`quality::EXACT`] resolved bounds
+/// (lossless targets, pointwise bounds on zero-crossing fields, bounds
+/// below the lattice floor).
+fn compress_exact(ctx: &ExecCtx, xs: &[f32]) -> Result<Vec<u8>> {
+    let packed = lossless_field_bytes(Some(ctx), xs)?;
+    let mut out = Vec::with_capacity(packed.len() + 1);
+    out.push(EXACT_MAGIC);
+    out.extend_from_slice(&packed);
+    Ok(out)
+}
+
+/// Inverse of [`compress_exact`].
+fn decompress_exact(bytes: &[u8]) -> Result<Vec<f32>> {
+    lossless_field_decode(&bytes[1..])
+}
+
 fn compress_one_field<T: FieldCompressor>(
     inner: &T,
     snap: &Snapshot,
@@ -286,7 +387,11 @@ fn compress_one_field<T: FieldCompressor>(
     i: usize,
     ctx: &ExecCtx,
 ) -> Result<CompressedField> {
-    let bytes = inner.compress_pooled(ctx, &snap.fields[i], ebs[i])?;
+    let bytes = if ebs[i] == quality::EXACT && !inner.is_lossless() {
+        compress_exact(ctx, &snap.fields[i])?
+    } else {
+        inner.compress_pooled(ctx, &snap.fields[i], ebs[i])?
+    };
     Ok(CompressedField {
         name: FIELD_NAMES[i].to_string(),
         n: snap.len(),
@@ -299,7 +404,12 @@ fn decompress_one_field<T: FieldCompressor>(
     c: &CompressedSnapshot,
     i: usize,
 ) -> Result<Vec<f32>> {
-    let field = inner.decompress(&c.fields[i].bytes)?;
+    let bytes = &c.fields[i].bytes;
+    let field = if !inner.is_lossless() && bytes.first() == Some(&EXACT_MAGIC) {
+        decompress_exact(bytes)?
+    } else {
+        inner.decompress(bytes)?
+    };
     if field.len() != c.n {
         return Err(Error::corrupt("field length mismatch after decompress"));
     }
@@ -334,13 +444,14 @@ impl<T: FieldCompressor + Sync> SnapshotCompressor for PerField<T> {
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot> {
-        let ebs = snap.abs_bounds(eb_rel);
+        let ebs = quality.resolve(snap);
         let fields = ctx.try_par(&FIELD_IDX, |&i| compress_one_field(&self.0, snap, &ebs, i, ctx))?;
         Ok(CompressedSnapshot {
             compressor: self.name().to_string(),
-            eb_rel,
+            eb_rel: quality.legacy_rel(),
+            field_bounds: Some(ebs),
             fields,
             n: snap.len(),
         })
@@ -370,9 +481,9 @@ impl<T: FieldCompressor> SnapshotCompressor for PerFieldSeq<T> {
         &self,
         ctx: &ExecCtx,
         snap: &Snapshot,
-        eb_rel: f64,
+        quality: &Quality,
     ) -> Result<CompressedSnapshot> {
-        let ebs = snap.abs_bounds(eb_rel);
+        let ebs = quality.resolve(snap);
         let mut fields = Vec::with_capacity(6);
         for i in 0..6 {
             // Sequential by design (thread-affine inner compressors),
@@ -381,7 +492,8 @@ impl<T: FieldCompressor> SnapshotCompressor for PerFieldSeq<T> {
         }
         Ok(CompressedSnapshot {
             compressor: self.name().to_string(),
-            eb_rel,
+            eb_rel: quality.legacy_rel(),
+            field_bounds: Some(ebs),
             fields,
             n: snap.len(),
         })
@@ -521,11 +633,14 @@ mod tests {
                 .collect();
         }
         let s = Snapshot::new("par", fields, 1.0).unwrap();
+        let q = Quality::rel(1e-4);
         let comp = PerField(Sz::lv());
-        let seq = comp.compress(&s, 1e-4).unwrap();
+        let seq = comp.compress(&s, &q).unwrap();
+        assert_eq!(seq.eb_rel, 1e-4, "uniform rel quality keeps the legacy header value");
+        assert_eq!(seq.field_bounds, Some(s.abs_bounds(1e-4)));
         for threads in [2usize, 8] {
             let ctx = ExecCtx::with_threads(threads);
-            let par = comp.compress_with(&ctx, &s, 1e-4).unwrap();
+            let par = comp.compress_with(&ctx, &s, &q).unwrap();
             assert_eq!(seq.fields.len(), par.fields.len());
             for (a, b) in seq.fields.iter().zip(par.fields.iter()) {
                 assert_eq!(a.bytes, b.bytes, "threads={threads}");
@@ -534,10 +649,54 @@ mod tests {
             verify_bounds(&s, &recon, 1e-4).unwrap();
         }
         // The sequential adapter emits the same streams.
-        let seq_adapter = PerFieldSeq(Sz::lv()).compress(&s, 1e-4).unwrap();
+        let seq_adapter = PerFieldSeq(Sz::lv()).compress(&s, &q).unwrap();
         for (a, b) in seq.fields.iter().zip(seq_adapter.fields.iter()) {
             assert_eq!(a.bytes, b.bytes);
         }
+        // The deprecated bare-f64 shim is byte-identical to the typed path.
+        #[allow(deprecated)]
+        let shim = comp.compress_rel(&s, 1e-4).unwrap();
+        for (a, b) in seq.fields.iter().zip(shim.fields.iter()) {
+            assert_eq!(a.bytes, b.bytes);
+        }
+    }
+
+    #[test]
+    fn lossless_quality_routes_through_exact_fallback() {
+        use crate::compressors::sz::Sz;
+        use crate::quality::ErrorBound;
+        let mut fields: [Vec<f32>; 6] = Default::default();
+        for (f, field) in fields.iter_mut().enumerate() {
+            *field = (0..2000)
+                .map(|i| ((i * 13 + f * 7) as f32 * 0.37).sin() * (f as f32 + 1.0))
+                .collect();
+        }
+        // Zeros in vx: pw_rel degrades that field to exact too.
+        fields[3][100] = 0.0;
+        let s = Snapshot::new("exact", fields, 1.0).unwrap();
+        let comp = PerField(Sz::lv());
+        // Uniform lossless: every stream is exact-coded and the bundle
+        // round-trips bit-for-bit.
+        let bundle = comp.compress(&s, &Quality::lossless()).unwrap();
+        assert_eq!(bundle.field_bounds, Some([quality::EXACT; 6]));
+        for f in &bundle.fields {
+            assert_eq!(f.bytes.first(), Some(&EXACT_MAGIC));
+        }
+        let back = comp.decompress(&bundle).unwrap();
+        for f in 0..6 {
+            assert_eq!(back.fields[f], s.fields[f], "field {f} must be bit-exact");
+        }
+        // Mixed: only the overridden field goes exact.
+        let q = Quality::rel(1e-3).with("vx", ErrorBound::PwRel(1e-2)).unwrap();
+        let bundle = comp.compress(&s, &q).unwrap();
+        let ebs = bundle.field_bounds.unwrap();
+        assert_eq!(ebs[3], quality::EXACT, "zero-crossing pw_rel resolves to exact");
+        assert!(ebs[0] > 0.0);
+        assert_eq!(bundle.fields[3].bytes.first(), Some(&EXACT_MAGIC));
+        assert_ne!(bundle.fields[0].bytes.first(), Some(&EXACT_MAGIC));
+        let back = comp.decompress(&bundle).unwrap();
+        assert_eq!(back.fields[3], s.fields[3], "exact field must round-trip exactly");
+        crate::quality::verify_quality(&s, &back, &q).unwrap();
     }
 
     #[test]
@@ -545,6 +704,7 @@ mod tests {
         let c = CompressedSnapshot {
             compressor: "x".into(),
             eb_rel: 1e-4,
+            field_bounds: None,
             fields: vec![CompressedField {
                 name: "xx".into(),
                 n: 100,

@@ -5,6 +5,7 @@
 
 use nblc::compressors::{full_lineup, registry};
 use nblc::data::archive;
+use nblc::quality::Quality;
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::snapshot::verify_bounds;
@@ -26,7 +27,7 @@ fn full_lineup_roundtrips_through_archive() {
                 let ctx = format!("{tag}/{name}/eb={eb_rel:e}");
                 let comp = registry::build_str(name).unwrap();
                 let bundle = comp
-                    .compress(snap, eb_rel)
+                    .compress(snap, &Quality::rel(eb_rel))
                     .unwrap_or_else(|e| panic!("{ctx}: compress failed: {e}"));
                 let spec = registry::canonical(name).unwrap();
                 let path = dir.join(format!(
@@ -78,7 +79,7 @@ fn tuned_spec_roundtrips_from_archive_alone() {
     let user_spec = "sz_lv_rx:segment=4096";
     let canonical = registry::canonical(user_spec).unwrap();
     let comp = registry::build_str(user_spec).unwrap();
-    let bundle = comp.compress(&snap, 1e-4).unwrap();
+    let bundle = comp.compress(&snap, &Quality::rel(1e-4)).unwrap();
     let path = std::env::temp_dir().join(format!("nblc_rt_tuned_{}.nblc", std::process::id()));
     archive::write(&path, &bundle, &canonical).unwrap();
 

@@ -11,19 +11,21 @@ use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::exec::ExecCtx;
+use nblc::quality::Quality;
 use nblc::snapshot::{verify_bounds, Snapshot};
 
 const THREADS: [usize; 3] = [1, 2, 8];
 
 fn assert_deterministic(spec: &str, snap: &Snapshot, eb_rel: f64) {
     let comp = registry::build_str(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+    let quality = Quality::rel(eb_rel);
     let seq = comp
-        .compress(snap, eb_rel)
+        .compress(snap, &quality)
         .unwrap_or_else(|e| panic!("{spec}: sequential compress failed: {e}"));
     for threads in THREADS {
         let ctx = ExecCtx::with_threads(threads);
         let par = comp
-            .compress_with(&ctx, snap, eb_rel)
+            .compress_with(&ctx, snap, &quality)
             .unwrap_or_else(|e| panic!("{spec}@{threads}: compress failed: {e}"));
         assert_eq!(
             seq.fields.len(),
@@ -129,7 +131,7 @@ fn pipeline_archives_decode_identically_at_any_concurrency() {
                     workers,
                     threads,
                     queue_depth: 3,
-                    eb_rel: 1e-4,
+                    quality: Quality::rel(1e-4),
                     factory: registry::factory(&spec).unwrap(),
                     sink: Sink::Archive {
                         path: path.clone(),

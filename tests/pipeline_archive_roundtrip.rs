@@ -12,6 +12,7 @@ use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::exec::ExecCtx;
+use nblc::quality::Quality;
 use nblc::snapshot::{verify_bounds, Snapshot};
 
 const N: usize = 7_000;
@@ -50,7 +51,7 @@ fn full_lineup_roundtrips_through_sharded_pipeline_archive() {
                     workers: 2,
                     threads: 1,
                     queue_depth: 2,
-                    eb_rel: EB,
+                    quality: Quality::rel(EB),
                     factory: registry::factory(&spec).unwrap(),
                     sink: Sink::Archive {
                         path: path.clone(),

@@ -8,6 +8,7 @@ use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, S
 use nblc::coordinator::shard::{rebalance, split_even, Shard};
 use nblc::coordinator::GpfsModel;
 use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::quality::Quality;
 use nblc::snapshot::{verify_bounds, PerField, SnapshotCompressor};
 
 fn factory_for(mode: Mode) -> CompressorFactory {
@@ -43,7 +44,7 @@ fn config_to_pipeline_roundtrip() {
             workers: settings.workers,
             threads: settings.threads,
             queue_depth: settings.queue_depth,
-            eb_rel: settings.eb_rel,
+            quality: settings.quality.clone(),
             factory: factory_for(settings.mode),
             sink: Sink::Model {
                 model: GpfsModel::default(),
@@ -89,7 +90,7 @@ fn config_method_spec_drives_pipeline() {
             workers: settings.workers,
             threads: settings.threads,
             queue_depth: settings.queue_depth,
-            eb_rel: settings.eb_rel,
+            quality: settings.quality.clone(),
             factory: registry::factory(spec).unwrap(),
             sink: Sink::Null,
         },
@@ -111,7 +112,7 @@ fn every_shard_stream_decodes_within_bound() {
     let comp = PerField(nblc::compressors::sz::Sz::lv());
     for shard in split_even(snap.len(), 5) {
         let sub = snap.slice(shard.start, shard.end);
-        let bundle = comp.compress(&sub, eb_rel).unwrap();
+        let bundle = comp.compress(&sub, &Quality::rel(eb_rel)).unwrap();
         let recon = comp.decompress(&bundle).unwrap();
         verify_bounds(&sub, &recon, eb_rel).unwrap();
     }
@@ -169,7 +170,7 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
             workers: 2,
             threads: 1,
             queue_depth: 2,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             factory: factory.clone(),
             sink: Sink::Null,
         },
@@ -187,7 +188,7 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
             workers: 2,
             threads: 1,
             queue_depth: 2,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             factory,
             sink: Sink::Archive {
                 path: path.clone(),
@@ -243,7 +244,7 @@ fn scheduler_routing_via_pipeline() {
             workers: 1,
             threads: 1,
             queue_depth: 2,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             factory: factory_for(routed),
             sink: Sink::Null,
         },
@@ -257,7 +258,7 @@ fn scheduler_routing_via_pipeline() {
             workers: 1,
             threads: 1,
             queue_depth: 2,
-            eb_rel: 1e-4,
+            quality: Quality::rel(1e-4),
             factory: factory_for(Mode::BestCompression),
             sink: Sink::Null,
         },

@@ -1,0 +1,134 @@
+//! Max-error conformance sweep for the typed quality targets: `Abs`,
+//! `Rel`, and `PwRel` guarantees must hold per field (pointwise for
+//! `PwRel`) across the full codec lineup, modulo the reordering codecs'
+//! deterministic permutation; `Lossless` must be bit-exact on the
+//! per-field codecs and a typed error on the joint/reordering ones.
+
+use nblc::compressors::{full_lineup, registry};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::exec::ExecCtx;
+use nblc::quality::{verify_quality, ErrorBound, Quality};
+use nblc::snapshot::Snapshot;
+
+const N: usize = 3_000;
+
+fn md() -> Snapshot {
+    generate_md(&MdConfig {
+        n_particles: N,
+        ..Default::default()
+    })
+}
+
+/// The same snapshot shifted away from zero: every field strictly
+/// positive, so `pw_rel` resolves to a usable uniform bound (zero
+/// crossings would degrade it to exact coding, which the reordering
+/// codecs reject — covered separately below).
+fn md_positive() -> Snapshot {
+    let s = md();
+    let fields: [Vec<f32>; 6] =
+        std::array::from_fn(|f| s.fields[f].iter().map(|&x| x + 64.0).collect());
+    Snapshot::new("md+64", fields, s.box_size).unwrap()
+}
+
+fn sweep(snap: &Snapshot, quality: &Quality, tag: &str) {
+    let ctx = ExecCtx::sequential();
+    for name in full_lineup() {
+        if name == "fpzip" {
+            // Precision-based: lands near the bound, not strictly under
+            // it (paper §IV) — excluded from bound assertions everywhere.
+            continue;
+        }
+        let c = format!("{tag}/{name}");
+        let comp = registry::build_str(name).unwrap();
+        let bundle = comp
+            .compress(snap, quality)
+            .unwrap_or_else(|e| panic!("{c}: compress failed: {e}"));
+        let recon = comp
+            .decompress(&bundle)
+            .unwrap_or_else(|e| panic!("{c}: decompress failed: {e}"));
+        assert_eq!(recon.len(), snap.len(), "{c}");
+        let reference = match registry::sort_permutation_quality(name, snap, quality, &ctx)
+            .unwrap_or_else(|e| panic!("{c}: sort permutation failed: {e}"))
+        {
+            Some(perm) => snap.permute(&perm).unwrap(),
+            None => snap.clone(),
+        };
+        verify_quality(&reference, &recon, quality)
+            .unwrap_or_else(|e| panic!("{c}: quality violated: {e}"));
+        // The archived metadata agrees with what was enforced.
+        let bounds = bundle.field_bounds.unwrap_or_else(|| panic!("{c}: bounds missing"));
+        assert!(bounds.iter().all(|&b| b > 0.0), "{c}: lossy sweep resolves positive bounds");
+    }
+}
+
+#[test]
+fn rel_bounds_hold_across_lineup() {
+    sweep(&md(), &Quality::rel(1e-3), "rel");
+    sweep(&md(), &Quality::rel(1e-5), "rel-tight");
+}
+
+#[test]
+fn abs_bounds_hold_across_lineup() {
+    // 2e-3 absolute sits comfortably inside CPC2000's 21-bit Morton
+    // grid on MD-scale ranges while still being a meaningful target.
+    sweep(&md(), &Quality::abs(2e-3), "abs");
+}
+
+#[test]
+fn pw_rel_bounds_hold_across_lineup() {
+    sweep(&md_positive(), &Quality::pw_rel(1e-3), "pw_rel");
+}
+
+#[test]
+fn per_field_overrides_hold_across_lineup() {
+    // The motivating case: tighter positions than velocities.
+    let q = Quality::rel(1e-3).with_coords(ErrorBound::Rel(1e-5));
+    sweep(&md(), &q, "mixed");
+    // And a mixed-kind target.
+    let q = Quality::abs(2e-3)
+        .with_velocities(ErrorBound::Rel(1e-4));
+    sweep(&md(), &q, "mixed-kind");
+}
+
+#[test]
+fn lossless_policy_across_lineup() {
+    let snap = md();
+    let q = Quality::lossless();
+    for name in full_lineup() {
+        let comp = registry::build_str(name).unwrap();
+        let result = comp.compress(&snap, &q);
+        if comp.reorders() {
+            // Joint codecs cannot reconstruct exactly: typed rejection.
+            let err = result.err().unwrap_or_else(|| panic!("{name} must reject lossless"));
+            assert!(err.to_string().contains("lossless"), "{name}: {err}");
+        } else {
+            // Per-field codecs route through the exact fallback.
+            let bundle = result.unwrap_or_else(|e| panic!("{name}: {e}"));
+            let recon = comp.decompress(&bundle).unwrap();
+            for f in 0..6 {
+                let a: Vec<u32> = snap.fields[f].iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = recon.fields[f].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "{name} field {f} must round-trip bit-exactly");
+            }
+        }
+    }
+}
+
+#[test]
+fn pw_rel_with_zero_crossings_degrades_to_exact_on_per_field_codecs() {
+    let snap = md(); // velocities cross zero
+    let q = Quality::pw_rel(1e-3);
+    let comp = registry::build_str("sz_lv").unwrap();
+    let bundle = comp.compress(&snap, &q).unwrap();
+    let recon = comp.decompress(&bundle).unwrap();
+    verify_quality(&snap, &recon, &q).unwrap();
+    // ...while a reordering codec reports the typed error instead of
+    // silently violating the pointwise guarantee.
+    let joint = registry::build_str("sz_lv_prx").unwrap();
+    let min_abs_is_zeroish = snap.fields[3..]
+        .iter()
+        .any(|f| f.iter().fold(f64::INFINITY, |m, &x| m.min((x as f64).abs())) < 1e-10);
+    if min_abs_is_zeroish {
+        assert!(joint.compress(&snap, &q).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Property tests for the typed quality layer: `ErrorBound`/`Quality`
+//! parse → canonicalize → re-parse round-trips (canonical form is a
+//! fixed point and resolution is preserved), including the deprecated
+//! bare-`f64`/`eb_rel` alias paths and the `compress_rel` trait shims.
+
+use nblc::compressors::registry;
+use nblc::config::{ConfigDoc, PipelineSettings};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::quality::{ErrorBound, FieldStats, Quality};
+use nblc::snapshot::FIELD_NAMES;
+use nblc::testkit::{gen_field_like, Prop};
+use nblc::util::rng::Pcg64;
+
+fn gen_coeff(rng: &mut Pcg64, max_exp: u64) -> f64 {
+    // mantissa in {1, 1.25, 3.7, 9.5} × 10^-(1..=max_exp): inside every
+    // bound kind's accepted domain and stable under {:e} round-trips.
+    let m = [1.0, 1.25, 3.7, 9.5][rng.below(4) as usize];
+    let e = 1 + rng.below(max_exp);
+    m * 10f64.powi(-(e as i32))
+}
+
+fn gen_bound(rng: &mut Pcg64) -> ErrorBound {
+    match rng.below(4) {
+        0 => ErrorBound::Abs(gen_coeff(rng, 8)),
+        1 => ErrorBound::Rel(gen_coeff(rng, 12)),
+        2 => ErrorBound::PwRel(gen_coeff(rng, 12)),
+        _ => ErrorBound::Lossless,
+    }
+}
+
+#[test]
+fn error_bound_canonical_is_a_parse_fixed_point() {
+    Prop::new("ErrorBound canonical round-trip").cases(200).run(|rng| {
+        let b = gen_bound(rng);
+        let c = b.canonical();
+        let reparsed = ErrorBound::parse(&c).unwrap_or_else(|e| panic!("{c}: {e}"));
+        assert_eq!(reparsed, b, "{c}");
+        assert_eq!(reparsed.canonical(), c, "{c} must be a fixed point");
+        // Resolution (the semantics) survives the round-trip on
+        // arbitrary field stats.
+        let xs = gen_field_like(rng, 1..500);
+        let st = FieldStats::scan(&xs);
+        assert_eq!(b.resolve(&st).to_bits(), reparsed.resolve(&st).to_bits(), "{c}");
+    });
+}
+
+#[test]
+fn quality_canonical_is_a_parse_fixed_point() {
+    Prop::new("Quality canonical round-trip").cases(200).run(|rng| {
+        let mut q = Quality::new(gen_bound(rng));
+        // Up to 3 distinct per-field overrides.
+        for _ in 0..rng.below(4) {
+            let field = FIELD_NAMES[rng.below(6) as usize];
+            q = q.clone().with(field, gen_bound(rng)).unwrap();
+        }
+        let c = q.canonical();
+        let reparsed = Quality::parse(&c).unwrap_or_else(|e| panic!("{c}: {e}"));
+        assert_eq!(reparsed.canonical(), c, "{c} must be a fixed point");
+        let xs: [Vec<f32>; 6] = std::array::from_fn(|_| gen_field_like(rng, 1..300));
+        let stats: [FieldStats; 6] = std::array::from_fn(|f| FieldStats::scan(&xs[f]));
+        let a = q.resolve_fields(&stats);
+        let b = reparsed.resolve_fields(&stats);
+        for f in 0..6 {
+            assert_eq!(a[f].to_bits(), b[f].to_bits(), "{c} field {f}");
+        }
+    });
+}
+
+#[test]
+fn deprecated_bare_f64_spellings_still_parse() {
+    // A bare float is the legacy value-range-relative bound everywhere
+    // it could previously appear.
+    assert_eq!(ErrorBound::parse("1e-4").unwrap(), ErrorBound::Rel(1e-4));
+    assert_eq!(ErrorBound::parse("0.001").unwrap(), ErrorBound::Rel(0.001));
+    assert_eq!(
+        Quality::parse("1e-4").unwrap().canonical(),
+        Quality::rel(1e-4).canonical()
+    );
+    // Config: the deprecated eb_rel float key aliases a uniform rel
+    // quality...
+    let doc = ConfigDoc::parse("[pipeline]\neb_rel = 1e-3\n").unwrap();
+    let s = PipelineSettings::from_doc(&doc).unwrap();
+    assert_eq!(s.quality, Quality::rel(1e-3));
+    // ...and the typed quality key accepts the bare spelling too.
+    let doc = ConfigDoc::parse("[pipeline]\nquality = \"1e-3\"\n").unwrap();
+    assert_eq!(PipelineSettings::from_doc(&doc).unwrap().quality, s.quality);
+}
+
+#[test]
+fn deprecated_compress_shims_are_byte_identical() {
+    let snap = generate_md(&MdConfig {
+        n_particles: 3_000,
+        ..Default::default()
+    });
+    let q = Quality::rel(1e-4);
+    for name in ["sz_lv", "sz_lv_rx", "cpc2000", "gzip"] {
+        let comp = registry::build_str(name).unwrap();
+        let typed = comp.compress(&snap, &q).unwrap();
+        #[allow(deprecated)]
+        let shim = comp.compress_rel(&snap, 1e-4).unwrap();
+        #[allow(deprecated)]
+        let shim_ctx = comp
+            .compress_with_rel(&nblc::exec::ExecCtx::sequential(), &snap, 1e-4)
+            .unwrap();
+        assert_eq!(typed.fields.len(), shim.fields.len(), "{name}");
+        for ((a, b), c) in typed
+            .fields
+            .iter()
+            .zip(shim.fields.iter())
+            .zip(shim_ctx.fields.iter())
+        {
+            assert_eq!(a.bytes, b.bytes, "{name}");
+            assert_eq!(a.bytes, c.bytes, "{name}");
+        }
+        assert_eq!(typed.eb_rel, 1e-4, "{name}: legacy header field");
+    }
+}
+
+#[test]
+fn spec_eb_hint_and_archive_quality_agree() {
+    // The registry's eb= hint feeds the driver's default quality, the
+    // canonical spec stays hint-free, and what the archive records is
+    // the canonical quality string.
+    let hint = registry::quality_hint("sz_lv:eb=pw_rel:1e-3").unwrap().unwrap();
+    assert_eq!(hint, ErrorBound::PwRel(1e-3));
+    let q = Quality::new(hint);
+    assert_eq!(q.canonical(), "pw_rel:1e-3");
+    assert_eq!(
+        registry::canonical("sz_lv:eb=pw_rel:1e-3").unwrap(),
+        registry::canonical("sz_lv").unwrap()
+    );
+}
