@@ -355,6 +355,64 @@ fn main() {
     );
     decode.print();
     decode.write_csv("hotpath_decode").unwrap();
+
+    // Serve daemon over the same archive: cold = first full get (cache
+    // empty, pays decode + wire), hot = repeated gets once every shard
+    // is resident (pure cache + wire). The hot row is the one worth
+    // gating — it pins the service overhead on top of decode.
+    let serve_handle = nblc::serve::Server::bind(
+        &nblc::serve::ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            cache_mb: 1024,
+            max_inflight: 4,
+            queue_timeout_ms: 10_000,
+            decode_budget_ms: 0,
+            threads: n_threads,
+        },
+        &[&arch_path],
+    )
+    .unwrap()
+    .spawn();
+    let serve_addr = serve_handle.addr();
+    let mut serve = Table::new(
+        "Serve daemon (loopback, full-archive gets)",
+        &["Stage", "Threads", "MB/s", "Speedup"],
+    );
+    let get_all = || {
+        let mut client = nblc::serve::ServeClient::connect(serve_addr).unwrap();
+        match client.get("", None).unwrap() {
+            nblc::serve::GetReply::Data(d) => d,
+            nblc::serve::GetReply::Busy(_) => panic!("bench daemon shed a request"),
+        }
+    };
+    let t_cold = {
+        let timer = nblc::util::timer::Timer::start();
+        let d = get_all();
+        let secs = timer.secs();
+        assert_eq!(d.cache_hits, 0, "cold get must decode every shard");
+        secs
+    };
+    serve.row(vec![
+        "serve get (cold cache)".into(),
+        "1".into(),
+        format!("{:.1}", total_mb / t_cold),
+        "1.00x".into(),
+    ]);
+    json_rows.push(("serve_get_cold".into(), 1, total_mb / t_cold));
+    let t_hot = bench_min_time(1.0, 3, || {
+        let d = get_all();
+        assert!(d.cache_hits > 0, "hot get must be served from cache");
+    });
+    serve.row(vec![
+        "serve get (hot cache)".into(),
+        "1".into(),
+        format!("{:.1}", total_mb / t_hot),
+        format!("{:.2}x", t_cold / t_hot),
+    ]);
+    json_rows.push(("serve_get_hot".into(), 1, total_mb / t_hot));
+    serve.print();
+    serve.write_csv("hotpath_serve").unwrap();
+    serve_handle.stop();
     std::fs::remove_file(&arch_path).ok();
 
     let json_path = results_dir().join("BENCH_hotpath.json");

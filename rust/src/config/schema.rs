@@ -193,6 +193,85 @@ impl PipelineSettings {
     }
 }
 
+/// Validated settings for `nblc serve` (section `[serve]`). CLI flags
+/// override whatever the config file supplies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSettings {
+    /// Listen address (`host:port`; port `0` = ephemeral).
+    pub addr: String,
+    /// Decoded-shard LRU cache bound, MiB.
+    pub cache_mb: u64,
+    /// Concurrent admitted range requests.
+    pub max_inflight: usize,
+    /// Admission wait before a typed `Busy` shed, milliseconds.
+    pub queue_timeout_ms: u64,
+    /// Estimated-decode-cost budget, milliseconds (0 = disabled).
+    pub decode_budget_ms: u64,
+    /// Decode thread budget (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        ServeSettings {
+            addr: "127.0.0.1:7117".into(),
+            cache_mb: 256,
+            max_inflight: 4,
+            queue_timeout_ms: 250,
+            decode_budget_ms: 0,
+            threads: 0,
+        }
+    }
+}
+
+impl ServeSettings {
+    /// Read from a parsed document, applying defaults and validating.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<ServeSettings> {
+        let mut s = ServeSettings::default();
+        let sec = "serve";
+        const KNOWN: [&str; 6] = [
+            "addr", "cache_mb", "max_inflight", "queue_timeout_ms",
+            "decode_budget_ms", "threads",
+        ];
+        for key in doc.keys(sec) {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!("unknown [serve] key '{key}'")));
+            }
+        }
+        let get_u64 = |key: &str, default: u64| -> Result<u64> {
+            match doc.get(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_int()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as u64)
+                    .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer"))),
+            }
+        };
+        if let Some(v) = doc.get(sec, "addr") {
+            let addr = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'addr' must be a string".into()))?;
+            if addr.is_empty() {
+                return Err(Error::Config("'addr' must not be empty".into()));
+            }
+            s.addr = addr.to_string();
+        }
+        s.cache_mb = get_u64("cache_mb", s.cache_mb)?;
+        s.max_inflight = get_u64("max_inflight", s.max_inflight as u64)? as usize;
+        s.queue_timeout_ms = get_u64("queue_timeout_ms", s.queue_timeout_ms)?;
+        s.decode_budget_ms = get_u64("decode_budget_ms", s.decode_budget_ms)?;
+        s.threads = get_u64("threads", s.threads as u64)? as usize;
+        if s.cache_mb == 0 {
+            return Err(Error::Config("'cache_mb' must be >= 1".into()));
+        }
+        if s.max_inflight == 0 {
+            return Err(Error::Config("'max_inflight' must be >= 1".into()));
+        }
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,6 +399,50 @@ mod tests {
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serve_defaults_without_section() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(ServeSettings::from_doc(&doc).unwrap(), ServeSettings::default());
+    }
+
+    #[test]
+    fn serve_full_parse() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [serve]
+            addr = "0.0.0.0:9000"
+            cache_mb = 64
+            max_inflight = 2
+            queue_timeout_ms = 50
+            decode_budget_ms = 20
+            threads = 8
+            "#,
+        )
+        .unwrap();
+        let s = ServeSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.addr, "0.0.0.0:9000");
+        assert_eq!(s.cache_mb, 64);
+        assert_eq!(s.max_inflight, 2);
+        assert_eq!(s.queue_timeout_ms, 50);
+        assert_eq!(s.decode_budget_ms, 20);
+        assert_eq!(s.threads, 8);
+    }
+
+    #[test]
+    fn serve_validation_errors() {
+        for bad in [
+            "[serve]\naddr = \"\"\n",
+            "[serve]\naddr = 3\n",
+            "[serve]\ncache_mb = 0\n",
+            "[serve]\nmax_inflight = 0\n",
+            "[serve]\nqueue_timeout_ms = -1\n",
+            "[serve]\nmystery = 1\n",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(ServeSettings::from_doc(&doc).is_err(), "{bad}");
         }
     }
 }

@@ -20,6 +20,10 @@ pub struct QueueStats {
     pub send_stalls: AtomicU64,
     /// Total nanoseconds spent blocked in send.
     pub stall_nanos: AtomicU64,
+    /// Highest queue depth ever observed after a push — how close the
+    /// queue has come to its capacity over its lifetime (the serve
+    /// daemon reports it as the admission high-water mark).
+    pub high_water: AtomicU64,
 }
 
 impl QueueStats {
@@ -29,6 +33,28 @@ impl QueueStats {
             .load(Ordering::Relaxed)
             .saturating_sub(self.popped.load(Ordering::Relaxed))
     }
+
+    /// Record one successful push and fold the resulting depth into the
+    /// high-water mark.
+    fn record_push(&self) {
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        self.high_water.fetch_max(self.depth(), Ordering::Relaxed);
+    }
+}
+
+/// Typed rejection returned by [`BoundedSender::try_send`]: the item is
+/// handed back along with the depth observed at rejection time, so shed
+/// paths (the serve daemon's `Busy` response) can report how loaded the
+/// queue was without a second stats call.
+#[derive(Debug)]
+pub struct TrySendRejected<T> {
+    /// The item that was not enqueued.
+    pub item: T,
+    /// Queue depth observed when the send was rejected.
+    pub depth: u64,
+    /// True when the receiver is gone (the queue can never drain);
+    /// false when the queue was merely full.
+    pub disconnected: bool,
 }
 
 /// Sending half of a bounded queue.
@@ -75,7 +101,7 @@ impl<T> BoundedSender<T> {
     pub fn send(&self, item: T) -> Result<(), ()> {
         match self.tx.try_send(item) {
             Ok(()) => {
-                self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                self.stats.record_push();
                 Ok(())
             }
             Err(TrySendError::Disconnected(_)) => Err(()),
@@ -87,11 +113,39 @@ impl<T> BoundedSender<T> {
                     .stall_nanos
                     .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 if r.is_ok() {
-                    self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+                    self.stats.record_push();
                 }
                 r
             }
         }
+    }
+
+    /// Non-blocking send: enqueue if there is room, otherwise hand the
+    /// item back with the observed depth ([`TrySendRejected`]). Never
+    /// blocks and never counts a stall — rejection is the caller's
+    /// signal to shed load (queue admission) rather than wait.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendRejected<T>> {
+        match self.tx.try_send(item) {
+            Ok(()) => {
+                self.stats.record_push();
+                Ok(())
+            }
+            Err(TrySendError::Full(item)) => Err(TrySendRejected {
+                item,
+                depth: self.stats.depth(),
+                disconnected: false,
+            }),
+            Err(TrySendError::Disconnected(item)) => Err(TrySendRejected {
+                item,
+                depth: self.stats.depth(),
+                disconnected: true,
+            }),
+        }
+    }
+
+    /// The shared stats handle (same counters [`bounded`] returned).
+    pub fn stats(&self) -> &Arc<QueueStats> {
+        &self.stats
     }
 }
 
@@ -168,5 +222,52 @@ mod tests {
         rx.recv();
         rx.recv();
         assert_eq!(stats.depth(), 3);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_depth() {
+        let (tx, rx, stats) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(stats.high_water.load(Ordering::Relaxed), 5);
+        // Draining does not lower the mark...
+        for _ in 0..4 {
+            rx.recv();
+        }
+        assert_eq!(stats.high_water.load(Ordering::Relaxed), 5);
+        // ...and pushes below the old peak leave it untouched.
+        tx.send(9).unwrap();
+        assert_eq!(stats.depth(), 2);
+        assert_eq!(stats.high_water.load(Ordering::Relaxed), 5);
+        // A new peak raises it.
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(stats.high_water.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn try_send_reports_depth_without_blocking() {
+        let (tx, rx, stats) = bounded::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        // Full: the item comes back with the observed depth, instantly.
+        let rej = tx.try_send(3).unwrap_err();
+        assert_eq!(rej.item, 3);
+        assert_eq!(rej.depth, 2);
+        assert!(!rej.disconnected);
+        // Rejection is not a stall (no blocking happened).
+        assert_eq!(stats.send_stalls.load(Ordering::Relaxed), 0);
+        // Draining restores capacity.
+        assert_eq!(rx.recv(), Some(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(stats.high_water.load(Ordering::Relaxed), 2);
+        // Disconnected receivers are reported as such.
+        drop(rx);
+        let rej = tx.try_send(4).unwrap_err();
+        assert!(rej.disconnected);
+        assert_eq!(rej.item, 4);
+        assert!(Arc::ptr_eq(tx.stats(), &stats));
     }
 }

@@ -901,6 +901,35 @@ impl ShardReader {
             .collect()
     }
 
+    /// Footer cost counter for shard `i`: the nanoseconds the writer
+    /// spent compressing it (0 for legacy v1/v2 single-record archives
+    /// and for writers that did not record timings). Cheap `&self`
+    /// footer lookup — no I/O — so the serve daemon's admission control
+    /// can price a request before committing any decode work.
+    pub fn shard_cost_nanos(&self, i: usize) -> Option<u64> {
+        self.index.entries.get(i).map(|e| e.cost_nanos)
+    }
+
+    /// Estimated decode cost in nanoseconds for a set of shards, from
+    /// the footer counters. Shards whose counter is 0 (legacy archives,
+    /// counter-less writers) fall back to a size-proportional estimate
+    /// (~100 ns/particle, i.e. a conservative few-hundred-MB/s decode)
+    /// so admission control never prices real work at zero. Cheap
+    /// `&self` footer arithmetic; out-of-range indices count as 0.
+    pub fn est_decode_cost_nanos(&self, shards: &[usize]) -> u64 {
+        shards
+            .iter()
+            .filter_map(|&i| self.index.entries.get(i))
+            .map(|e| {
+                if e.cost_nanos > 0 {
+                    e.cost_nanos
+                } else {
+                    e.particles().saturating_mul(100)
+                }
+            })
+            .sum()
+    }
+
     /// Fetch and fully validate one shard record (CRC-checked). Takes
     /// `&self` — concurrent callers each use their own file handle, so
     /// shard decodes can fan out across threads.
@@ -1018,6 +1047,25 @@ pub struct DecodedRange {
     pub reordered: bool,
 }
 
+/// Validate/clamp a particle range against the archive's `n`:
+/// `(start, end, partial)` where `None` means a full read.
+fn resolve_range(n: u64, range: Option<(u64, u64)>) -> Result<(u64, u64, bool)> {
+    match range {
+        None => Ok((0, n, false)),
+        Some((a, b)) => {
+            if a >= b {
+                return Err(Error::invalid("particle range is empty"));
+            }
+            if a >= n {
+                return Err(Error::invalid(format!(
+                    "particle range starts at {a} but the archive holds {n} particles"
+                )));
+            }
+            Ok((a, b.min(n), true))
+        }
+    }
+}
+
 /// Decode an archive (fully, or any particle range `[a, b)`) by fanning
 /// the per-shard decodes across the context's threads — the decode-side
 /// counterpart of the pipeline's parallel compression. `spec` is
@@ -1033,20 +1081,7 @@ pub fn decode_shards(
     ctx: &ExecCtx,
 ) -> Result<DecodedRange> {
     let n = reader.n();
-    let (a, b, partial) = match range {
-        None => (0, n, false),
-        Some((a, b)) => {
-            if a >= b {
-                return Err(Error::invalid("particle range is empty"));
-            }
-            if a >= n {
-                return Err(Error::invalid(format!(
-                    "particle range starts at {a} but the archive holds {n} particles"
-                )));
-            }
-            (a, b.min(n), true)
-        }
-    };
+    let (a, b, partial) = resolve_range(n, range)?;
     // Validate the spec once; the factory hands out cheap pre-validated
     // builders for the per-shard fan-out (compressors are not `Sync`).
     let factory = crate::compressors::registry::factory(spec)?;
@@ -1123,6 +1158,100 @@ pub fn decode_shards(
         parts.into_iter().next().unwrap()
     } else {
         Snapshot::concat(&parts)?
+    };
+    let (particle_start, particle_end, exact) = if partial && !reordered {
+        (a, b, true)
+    } else {
+        (cover_start, cover_end, cover_start == a && cover_end == b)
+    };
+    Ok(DecodedRange {
+        snapshot,
+        shards_touched: touched.len(),
+        particle_start,
+        particle_end,
+        exact,
+        reordered,
+    })
+}
+
+/// [`decode_shards`] with the per-shard decode replaced by a caller
+/// hook — the serve daemon's cached partial-read path. `fetch(i)` must
+/// return shard `i` fully decoded (in the codec's per-shard particle
+/// order); the hook is where an LRU cache interposes, so one decode of
+/// a hot shard serves many overlapping range requests and only the
+/// *slicing* below is re-run per request. Fetches for distinct shards
+/// fan out across `ctx`'s threads, so the hook must be `Sync` (the
+/// serve cache is internally locked).
+///
+/// `reordered` is the codec's [`SnapshotCompressor::reorders`] flag
+/// (the caller resolved the spec once at archive-open time, so no
+/// registry lookup happens per request).
+///
+/// **RX-family caveat** (same contract as [`decode_shards`]): when
+/// `reordered` is true, particle identity inside a shard is permuted by
+/// the codec's deterministic sort, so a range cannot be trimmed exactly
+/// — the result covers the *whole* overlapping shards, stitched in
+/// logical shard order with each shard internally in its sort order,
+/// and [`DecodedRange::exact`] is false unless the range happened to
+/// align with shard boundaries. Cache entries hold whole decoded shards
+/// either way, which is what makes them reusable across ranges.
+///
+/// [`SnapshotCompressor::reorders`]: crate::snapshot::SnapshotCompressor::reorders
+pub fn decode_shards_cached(
+    reader: &ShardReader,
+    range: Option<(u64, u64)>,
+    ctx: &ExecCtx,
+    reordered: bool,
+    fetch: &(dyn Fn(usize) -> Result<std::sync::Arc<Snapshot>> + Sync),
+) -> Result<DecodedRange> {
+    let n = reader.n();
+    let (a, b, partial) = resolve_range(n, range)?;
+    let touched: Vec<usize> = if partial {
+        reader.shards_for_range(a, b)
+    } else {
+        (0..reader.index().entries.len()).collect()
+    };
+    if touched.is_empty() {
+        return Err(Error::invalid("particle range overlaps no shards"));
+    }
+    let entries = &reader.index().entries;
+    let cover_start = entries[touched[0]].start;
+    let cover_end = entries[*touched.last().unwrap()].end;
+    let parts = ctx.try_par(&touched, |&i| {
+        let part = fetch(i)?;
+        let e = &reader.index().entries[i];
+        if part.len() as u64 != e.end - e.start {
+            return Err(Error::corrupt(format!(
+                "shard {i} decoded to {} particles, footer says {}",
+                part.len(),
+                e.end - e.start
+            )));
+        }
+        Ok(part)
+    })?;
+    // Same assembly as `decode_shards`, except the parts are shared
+    // (`Arc`) because the cache retains them: boundary shards of an
+    // order-preserving partial read are sliced (copying only ~(b - a)
+    // particles), everything else stitches via `concat_refs`.
+    let snapshot = if partial && !reordered {
+        let owned: Vec<Snapshot> = parts
+            .iter()
+            .zip(&touched)
+            .map(|(p, &i)| {
+                let e = &reader.index().entries[i];
+                let lo = (a.max(e.start) - e.start) as usize;
+                let hi = (b.min(e.end) - e.start) as usize;
+                p.slice(lo, hi)
+            })
+            .collect();
+        if owned.len() == 1 {
+            owned.into_iter().next().unwrap()
+        } else {
+            Snapshot::concat(&owned)?
+        }
+    } else {
+        let refs: Vec<&Snapshot> = parts.iter().map(|p| p.as_ref()).collect();
+        Snapshot::concat_refs(&refs)?
     };
     let (particle_start, particle_end, exact) = if partial && !reordered {
         (a, b, true)

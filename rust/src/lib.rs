@@ -182,6 +182,33 @@
 //! config). Parallelism pays off from roughly 10⁵ particles upward;
 //! below that, thread spawn overhead dominates and `ExecCtx::sequential`
 //! (or the plain wrappers) is the right call.
+//!
+//! ## Serving archives
+//!
+//! `nblc serve a.nblc b.nblc` turns the read path into a long-running
+//! daemon ([`serve`]): archives stay open, decoded shards sit in a
+//! weight-bounded LRU cache, and admission control sheds overload with
+//! a typed `Busy` instead of queueing unboundedly. [`serve::ServeClient`]
+//! is the library-side counterpart of `nblc get`:
+//!
+//! ```no_run
+//! use nblc::serve::{GetReply, ServeClient};
+//!
+//! # fn main() -> nblc::Result<()> {
+//! let mut client = ServeClient::connect("127.0.0.1:7117")?;
+//! match client.get("snap.nblc", Some((10_000, 20_000)))? {
+//!     GetReply::Data(d) => {
+//!         // Exact for order-preserving codecs; whole overlapping
+//!         // shards (d.exact == false) for the RX reordering family.
+//!         println!("{} particles, {} cache hits", d.snapshot.len(), d.cache_hits);
+//!     }
+//!     GetReply::Busy(b) => println!("shed: {}/{} in flight", b.inflight, b.max_inflight),
+//! }
+//! let stats = client.stats()?;
+//! println!("cache hit rate: {}/{}", stats.cache_hits, stats.cache_hits + stats.cache_misses);
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod error;
 pub mod util;
@@ -199,6 +226,7 @@ pub mod config;
 pub mod cli;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench;
 
 pub use error::{Error, Result};

@@ -8,11 +8,13 @@
 //!   list-codecs show every registered codec and its tunable parameters
 //!   analyze     distortion report (max err / NRMSE / PSNR per field)
 //!   pipeline    run the in-situ pipeline from a config file
+//!   serve       long-running archive service daemon (LRU shard cache)
+//!   get         query a running serve daemon for a particle range
 //!   info        print dataset / artifact / runtime diagnostics
 
 use nblc::cli::Args;
 use nblc::compressors::registry;
-use nblc::config::{ConfigDoc, PipelineSettings};
+use nblc::config::{ConfigDoc, PipelineSettings, ServeSettings};
 use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink};
 use nblc::coordinator::shard::{rebalance, Shard};
 use nblc::coordinator::{choose_compressor, GpfsModel};
@@ -23,6 +25,7 @@ use nblc::error::{Error, Result};
 use nblc::exec::ExecCtx;
 use nblc::metrics::ErrorStats;
 use nblc::quality::{ErrorBound, Plan, Quality, SnapshotStats, EXACT};
+use nblc::serve::{GetReply, ServeClient, ServeConfig, Server};
 use nblc::snapshot::FIELD_NAMES;
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
@@ -43,6 +46,11 @@ COMMANDS:
   list-codecs
   analyze     <orig.snap> <recon.snap>
   pipeline    --config <file.toml> [--threads N]
+  serve       <archive.nblc>... [--config <file.toml>] [--addr host:port]
+              [--cache_mb N] [--max_inflight N] [--queue_timeout_ms N]
+              [--decode_budget_ms N] [--threads N]
+  get         [<archive>] [--addr host:port] [--particles a..b]
+              [--out <file.snap>] [--stats]
   info        [--artifacts <dir>]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
@@ -72,6 +80,15 @@ the default is the NBLC_THREADS env var, else all available cores;
 pipeline defaults to 1 per worker (workers already run in parallel)
 unless the config or --threads says otherwise, with 0 = auto.
 Compressed bytes are identical at every thread count.
+
+serve holds v3 archives open behind a TCP daemon with an LRU cache of
+decoded shards and admission control: over-budget load is shed with a
+typed Busy response instead of queueing unboundedly. Defaults come
+from the config's [serve] section (addr, cache_mb, max_inflight,
+queue_timeout_ms, decode_budget_ms, threads); flags override. get
+addresses archives by basename (omit it when one archive is served),
+reuses --particles a..b for ranges, and --stats prints the daemon's
+cache/admission counters.
 ";
 
 fn main() {
@@ -82,7 +99,7 @@ fn main() {
     }
     // Boolean switches declared up front so they never swallow a
     // following positional (e.g. `inspect --verify file.nblc`).
-    let parsed = match Args::parse_with_switches(args, &["verify"]) {
+    let parsed = match Args::parse_with_switches(args, &["verify", "stats"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}");
@@ -104,6 +121,8 @@ fn run(args: &Args) -> Result<()> {
         "list-codecs" => cmd_list_codecs(args),
         "analyze" => cmd_analyze(args),
         "pipeline" => cmd_pipeline(args),
+        "serve" => cmd_serve(args),
+        "get" => cmd_get(args),
         "info" => cmd_info(args),
         other => Err(Error::invalid(format!(
             "unknown command '{other}' (try --help)"
@@ -609,6 +628,106 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     }
     if settings.use_pjrt {
         println!("(note: use_pjrt requested; PJRT quantizer engages in the sz_lv path when artifacts are present)");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "config",
+        "addr",
+        "cache_mb",
+        "max_inflight",
+        "queue_timeout_ms",
+        "decode_budget_ms",
+        "threads",
+    ])?;
+    if args.positionals.is_empty() {
+        return Err(Error::invalid(
+            "usage: serve <archive.nblc>... [--addr host:port]",
+        ));
+    }
+    let mut settings = ServeSettings::default();
+    if let Some(cfg_path) = args.get("config") {
+        let doc = ConfigDoc::from_file(Path::new(cfg_path))?;
+        settings = ServeSettings::from_doc(&doc)?;
+    }
+    // Flags override the config's [serve] section.
+    if let Some(addr) = args.get("addr") {
+        settings.addr = addr.to_string();
+    }
+    settings.cache_mb = args.get_parse("cache_mb", settings.cache_mb)?;
+    settings.max_inflight = args.get_parse("max_inflight", settings.max_inflight)?;
+    settings.queue_timeout_ms = args.get_parse("queue_timeout_ms", settings.queue_timeout_ms)?;
+    settings.decode_budget_ms = args.get_parse("decode_budget_ms", settings.decode_budget_ms)?;
+    settings.threads = args.get_parse("threads", settings.threads)?;
+    let cfg = ServeConfig {
+        addr: settings.addr,
+        cache_mb: settings.cache_mb,
+        max_inflight: settings.max_inflight,
+        queue_timeout_ms: settings.queue_timeout_ms,
+        decode_budget_ms: settings.decode_budget_ms,
+        threads: settings.threads,
+    };
+    let paths: Vec<PathBuf> = args.positionals.iter().map(PathBuf::from).collect();
+    let server = Server::bind(&cfg, &paths)?;
+    println!(
+        "serving {} on {} (cache {} MiB, max_inflight {}, queue timeout {} ms)",
+        server.archive_names().join(", "),
+        server.local_addr(),
+        cfg.cache_mb,
+        cfg.max_inflight,
+        cfg.queue_timeout_ms,
+    );
+    server.run();
+    Ok(())
+}
+
+fn cmd_get(args: &Args) -> Result<()> {
+    args.expect_known(&["addr", "particles", "out", "stats"])?;
+    let addr = args.get_or("addr", "127.0.0.1:7117");
+    let mut client = ServeClient::connect(addr.as_str())?;
+    if args.has("stats") {
+        print!("{}", client.stats()?.render());
+        return Ok(());
+    }
+    // Archive basename; empty selects the daemon's only archive.
+    let archive = args.positionals.first().map(String::as_str).unwrap_or("");
+    let range = match args.get("particles") {
+        Some(s) => Some(parse_particles(s)?),
+        None => None,
+    };
+    let t = Timer::start();
+    match client.get(archive, range)? {
+        GetReply::Data(d) => {
+            let secs = t.secs();
+            if let Some(out) = args.get("out") {
+                write_snapshot(&d.snapshot, Path::new(out))?;
+            }
+            println!(
+                "got {} particles [{}..{}] in {} ({} shards, {} cache hits, {})",
+                d.snapshot.len(),
+                d.particle_start,
+                d.particle_end,
+                humansize::secs(secs),
+                d.shards_touched,
+                d.cache_hits,
+                if d.exact {
+                    "exact range"
+                } else {
+                    "whole overlapping shards"
+                },
+            );
+        }
+        GetReply::Busy(b) => {
+            return Err(Error::Pipeline(format!(
+                "server busy: {}/{} requests in flight (est cost {:.1} ms in flight, budget {:.1} ms); retry later",
+                b.inflight,
+                b.max_inflight,
+                b.inflight_cost_nanos as f64 / 1e6,
+                b.budget_nanos as f64 / 1e6,
+            )));
+        }
     }
     Ok(())
 }

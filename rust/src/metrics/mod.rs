@@ -1,8 +1,11 @@
 //! Distortion analysis (the paper's "Z-checker" role, §VI): pointwise
-//! error statistics, PSNR, and rate-distortion sweeps.
+//! error statistics, PSNR, and rate-distortion sweeps — plus the serve
+//! daemon's request/cache counters.
 
 pub mod error;
 pub mod ratedist;
+pub mod service;
 
 pub use error::ErrorStats;
 pub use ratedist::{rate_distortion_curve, RdPoint};
+pub use service::{CacheFigures, ServeMetrics, ServeStats};

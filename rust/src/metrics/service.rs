@@ -1,0 +1,214 @@
+//! Serve-daemon counters: lock-free request/byte totals plus a
+//! per-archive shard-touch histogram, snapshotted on demand into the
+//! plain [`ServeStats`] value that crosses the wire for `stats`
+//! requests. The hot path only does relaxed atomic increments; all
+//! aggregation happens at snapshot time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters owned by a running server. One instance per daemon,
+/// shared (via `Arc`) across connection handler threads.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// Requests received (any kind).
+    pub requests: AtomicU64,
+    /// Range requests answered with data.
+    pub data_ok: AtomicU64,
+    /// Range requests shed with `Busy`.
+    pub busy: AtomicU64,
+    /// Requests answered with an error frame.
+    pub errors: AtomicU64,
+    /// Decoded particle bytes returned to clients.
+    pub bytes_served: AtomicU64,
+    /// Archive names, parallel to `shard_touches`.
+    names: Vec<String>,
+    /// Shards fetched (cache hit or decode) per archive.
+    shard_touches: Vec<AtomicU64>,
+}
+
+impl ServeMetrics {
+    /// Fresh zeroed counters for the given served-archive names.
+    pub fn new(names: Vec<String>) -> Self {
+        let shard_touches = names.iter().map(|_| AtomicU64::new(0)).collect();
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            data_ok: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+            names,
+            shard_touches,
+        }
+    }
+
+    /// Count `n` shard touches against archive `archive_id` (its index
+    /// in the served list). Out-of-range ids are ignored — the server
+    /// resolves names before counting, so this only guards bugs.
+    pub fn touch_shards(&self, archive_id: usize, n: u64) {
+        if let Some(c) = self.shard_touches.get(archive_id) {
+            c.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Materialize the counters (plus cache and admission figures the
+    /// server layers in) into one wire-serializable value.
+    pub fn snapshot(
+        &self,
+        cache: CacheFigures,
+        inflight: u64,
+        inflight_high_water: u64,
+    ) -> ServeStats {
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            data_ok: self.data_ok.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            bytes_served: self.bytes_served.load(Ordering::Relaxed),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_evictions: cache.evictions,
+            cache_entries: cache.entries,
+            cache_bytes: cache.bytes,
+            cache_cap_bytes: cache.cap_bytes,
+            inflight,
+            inflight_high_water,
+            archives: self
+                .names
+                .iter()
+                .zip(&self.shard_touches)
+                .map(|(n, t)| (n.clone(), t.load(Ordering::Relaxed)))
+                .collect(),
+        }
+    }
+}
+
+/// Cache-side figures folded into a [`ServeStats`] snapshot (produced
+/// by the serve shard cache; kept here so `metrics` does not depend on
+/// `serve`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheFigures {
+    /// Lookups served from memory.
+    pub hits: u64,
+    /// Lookups that required a decode.
+    pub misses: u64,
+    /// Entries displaced by the weight bound.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+    /// Decoded bytes currently resident.
+    pub bytes: u64,
+    /// Configured weight bound in bytes.
+    pub cap_bytes: u64,
+}
+
+/// Point-in-time server statistics, as answered to a `stats` request.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests received (any kind).
+    pub requests: u64,
+    /// Range requests answered with data.
+    pub data_ok: u64,
+    /// Range requests shed with `Busy`.
+    pub busy: u64,
+    /// Requests answered with an error frame.
+    pub errors: u64,
+    /// Decoded particle bytes returned to clients.
+    pub bytes_served: u64,
+    /// Shard-cache lookups served from memory.
+    pub cache_hits: u64,
+    /// Shard-cache lookups that required a decode.
+    pub cache_misses: u64,
+    /// Shard-cache entries displaced by the weight bound.
+    pub cache_evictions: u64,
+    /// Shard-cache entries currently resident.
+    pub cache_entries: u64,
+    /// Decoded bytes currently resident in the shard cache.
+    pub cache_bytes: u64,
+    /// Configured cache weight bound in bytes.
+    pub cache_cap_bytes: u64,
+    /// Range requests currently admitted and decoding.
+    pub inflight: u64,
+    /// Peak concurrent admitted requests over the server's lifetime.
+    pub inflight_high_water: u64,
+    /// `(archive name, shards fetched)` per served archive.
+    pub archives: Vec<(String, u64)>,
+}
+
+impl ServeStats {
+    /// Render as stable `key: value` lines (what `nblc get --stats`
+    /// prints and the CI smoke test greps).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("requests: {}\n", self.requests));
+        s.push_str(&format!("data ok: {}\n", self.data_ok));
+        s.push_str(&format!("busy: {}\n", self.busy));
+        s.push_str(&format!("errors: {}\n", self.errors));
+        s.push_str(&format!("bytes served: {}\n", self.bytes_served));
+        s.push_str(&format!("cache hits: {}\n", self.cache_hits));
+        s.push_str(&format!("cache misses: {}\n", self.cache_misses));
+        s.push_str(&format!("cache evictions: {}\n", self.cache_evictions));
+        s.push_str(&format!(
+            "cache resident: {} entries, {} / {} bytes\n",
+            self.cache_entries, self.cache_bytes, self.cache_cap_bytes
+        ));
+        s.push_str(&format!(
+            "inflight: {} (high water {})\n",
+            self.inflight, self.inflight_high_water
+        ));
+        for (name, touches) in &self.archives {
+            s.push_str(&format!("archive {name}: {touches} shard touches\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = ServeMetrics::new(vec!["a.nblc".into(), "b.nblc".into()]);
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.data_ok.fetch_add(3, Ordering::Relaxed);
+        m.busy.fetch_add(1, Ordering::Relaxed);
+        m.bytes_served.fetch_add(1024, Ordering::Relaxed);
+        m.touch_shards(0, 4);
+        m.touch_shards(1, 2);
+        m.touch_shards(9, 7); // out of range: ignored
+        let cache = CacheFigures {
+            hits: 10,
+            misses: 6,
+            evictions: 2,
+            entries: 4,
+            bytes: 4096,
+            cap_bytes: 1 << 20,
+        };
+        let s = m.snapshot(cache, 2, 3);
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.data_ok, 3);
+        assert_eq!(s.busy, 1);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.bytes_served, 1024);
+        assert_eq!(s.cache_hits, 10);
+        assert_eq!(s.cache_evictions, 2);
+        assert_eq!(s.inflight, 2);
+        assert_eq!(s.inflight_high_water, 3);
+        assert_eq!(
+            s.archives,
+            vec![("a.nblc".to_string(), 4), ("b.nblc".to_string(), 2)]
+        );
+    }
+
+    #[test]
+    fn render_is_grepable() {
+        let s = ServeStats {
+            cache_hits: 12,
+            archives: vec![("x.nblc".into(), 9)],
+            ..Default::default()
+        };
+        let text = s.render();
+        assert!(text.contains("cache hits: 12\n"));
+        assert!(text.contains("archive x.nblc: 9 shard touches\n"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Weight-bounded LRU cache of decoded shards. Keys are
+//! `(archive id, shard index)`, weight is decoded particle bytes, so
+//! overlapping range requests against hot shards hit memory instead of
+//! re-running entropy decode + dequantization.
+//!
+//! Entries are `Arc<Snapshot>`: a hit hands out a shared handle, so an
+//! eviction never invalidates data a request is still slicing. There
+//! is deliberately no single-flight machinery — two concurrent misses
+//! on the same shard may both decode it (last insert wins); that
+//! wastes one decode under a cold-start stampede but keeps the lock
+//! strictly around map bookkeeping, never around a decode.
+
+use crate::metrics::CacheFigures;
+use crate::snapshot::Snapshot;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key: `(served-archive id, shard index)`.
+pub type ShardKey = (usize, usize);
+
+struct Entry {
+    snap: Arc<Snapshot>,
+    weight: u64,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<ShardKey, Entry>,
+    /// Logical clock bumped on every touch; the entry with the
+    /// smallest tick is the least recently used.
+    tick: u64,
+    bytes: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// The cache. All methods take `&self`; a single internal mutex guards
+/// the map (decodes happen outside the lock, see module docs).
+pub struct ShardCache {
+    cap_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+impl ShardCache {
+    /// An empty cache bounded to `cap_bytes` of decoded data.
+    pub fn new(cap_bytes: u64) -> Self {
+        ShardCache {
+            cap_bytes,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Non-bumping residency probe: does not count a hit or miss and
+    /// does not refresh recency. Admission control uses it to estimate
+    /// how much of a request's decode cost the cache will absorb.
+    pub fn contains(&self, key: ShardKey) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    /// Look up a shard, counting a hit (recency refreshed) or a miss.
+    pub fn get(&self, key: ShardKey) -> Option<Arc<Snapshot>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                let snap = Arc::clone(&e.snap);
+                g.hits += 1;
+                Some(snap)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly decoded shard, evicting least-recently-used
+    /// entries until the weight bound holds. A shard heavier than the
+    /// whole bound is not cached at all (the handle the caller already
+    /// holds stays valid — it just won't be shared).
+    pub fn insert(&self, key: ShardKey, snap: Arc<Snapshot>) {
+        let weight = snap.total_bytes() as u64;
+        if weight > self.cap_bytes {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(old) = g.map.insert(
+            key,
+            Entry {
+                snap,
+                weight,
+                last_used: tick,
+            },
+        ) {
+            g.bytes -= old.weight;
+        }
+        g.bytes += weight;
+        while g.bytes > self.cap_bytes {
+            let lru = g
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(lru) = lru else { break };
+            if let Some(e) = g.map.remove(&lru) {
+                g.bytes -= e.weight;
+                g.evictions += 1;
+            }
+        }
+    }
+
+    /// Point-in-time counters for a stats snapshot.
+    pub fn figures(&self) -> CacheFigures {
+        let g = self.inner.lock().unwrap();
+        CacheFigures {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len() as u64,
+            bytes: g.bytes,
+            cap_bytes: self.cap_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(n: usize, tag: f32) -> Arc<Snapshot> {
+        Arc::new(Snapshot {
+            name: "t".into(),
+            fields: std::array::from_fn(|_| vec![tag; n]),
+            box_size: 1.0,
+            seed: 0,
+        })
+    }
+
+    #[test]
+    fn hit_miss_counting_and_sharing() {
+        let c = ShardCache::new(1 << 20);
+        assert!(c.get((0, 0)).is_none());
+        c.insert((0, 0), snap(10, 1.0));
+        let a = c.get((0, 0)).unwrap();
+        let b = c.get((0, 0)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let f = c.figures();
+        assert_eq!((f.hits, f.misses), (2, 1));
+        assert_eq!(f.entries, 1);
+        assert_eq!(f.bytes, a.total_bytes() as u64);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        // Each 10-particle shard weighs 240 bytes; cap fits two.
+        let c = ShardCache::new(480);
+        c.insert((0, 0), snap(10, 0.0));
+        c.insert((0, 1), snap(10, 1.0));
+        // Touch shard 0 so shard 1 becomes the LRU victim.
+        assert!(c.get((0, 0)).is_some());
+        c.insert((0, 2), snap(10, 2.0));
+        assert!(c.contains((0, 0)));
+        assert!(!c.contains((0, 1)));
+        assert!(c.contains((0, 2)));
+        let f = c.figures();
+        assert_eq!(f.evictions, 1);
+        assert_eq!(f.entries, 2);
+        assert_eq!(f.bytes, 480);
+    }
+
+    #[test]
+    fn contains_does_not_touch_counters_or_recency() {
+        let c = ShardCache::new(480);
+        c.insert((0, 0), snap(10, 0.0));
+        c.insert((0, 1), snap(10, 1.0));
+        // Probing shard 0 must NOT refresh it...
+        assert!(c.contains((0, 0)));
+        let f = c.figures();
+        assert_eq!((f.hits, f.misses), (0, 0));
+        // ...so it is still the eviction victim.
+        c.insert((0, 2), snap(10, 2.0));
+        assert!(!c.contains((0, 0)));
+    }
+
+    #[test]
+    fn oversized_entries_are_skipped() {
+        let c = ShardCache::new(100);
+        c.insert((0, 0), snap(10, 0.0)); // 240 bytes > 100
+        assert!(!c.contains((0, 0)));
+        assert_eq!(c.figures().bytes, 0);
+        assert_eq!(c.figures().evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_counting() {
+        let c = ShardCache::new(1 << 20);
+        c.insert((0, 0), snap(10, 0.0));
+        c.insert((0, 0), snap(20, 1.0));
+        let f = c.figures();
+        assert_eq!(f.entries, 1);
+        assert_eq!(f.bytes, 20 * 24);
+    }
+}

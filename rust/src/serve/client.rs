@@ -1,0 +1,79 @@
+//! Blocking client for the serve daemon — used by `nblc get`, the
+//! integration tests, and any embedder that wants ranges without
+//! shelling out.
+
+use crate::error::{Error, Result};
+use crate::metrics::ServeStats;
+use crate::serve::protocol::{
+    read_frame_or_eof, write_frame, BusyInfo, RangeData, Request, Response, MAX_RESPONSE_FRAME,
+};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// What a range request came back with: data, or a typed shed notice.
+/// `Busy` is an `Ok` outcome — the server is healthy, just loaded —
+/// so callers decide their own retry policy instead of unwinding
+/// through an error path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GetReply {
+    /// The decoded range.
+    Data(RangeData),
+    /// Shed by admission control; retry later.
+    Busy(BusyInfo),
+}
+
+/// A connection to a serve daemon. One request runs at a time per
+/// connection (the protocol is strictly request/response); open more
+/// connections for client-side concurrency.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to a daemon.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServeClient { stream })
+    }
+
+    /// Request particles `[a, b)` (or everything, with `range = None`)
+    /// from `archive` — its basename on the server, or `""` when the
+    /// daemon serves exactly one archive.
+    pub fn get(&mut self, archive: &str, range: Option<(u64, u64)>) -> Result<GetReply> {
+        let resp = self.round_trip(&Request::Get {
+            archive: archive.into(),
+            range,
+        })?;
+        match resp {
+            Response::Data(d) => Ok(GetReply::Data(d)),
+            Response::Busy(b) => Ok(GetReply::Busy(b)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Fetch the daemon's statistics snapshot.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.round_trip(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    fn round_trip(&mut self, req: &Request) -> Result<Response> {
+        let (kind, payload) = req.encode();
+        write_frame(&mut self.stream, kind, &payload)?;
+        match read_frame_or_eof(&mut self.stream, MAX_RESPONSE_FRAME)? {
+            Some((kind, payload)) => Response::decode(kind, &payload),
+            None => Err(Error::Pipeline(
+                "server closed the connection mid-request".into(),
+            )),
+        }
+    }
+}
+
+fn unexpected(resp: Response) -> Error {
+    match resp {
+        Response::Error(msg) => Error::Pipeline(format!("server: {msg}")),
+        other => Error::corrupt(format!("unexpected response frame: {other:?}")),
+    }
+}

@@ -1,0 +1,24 @@
+//! Archive service layer: `nblc serve` holds sharded v3 archives open
+//! and answers concurrent particle-range queries over a small
+//! length-prefixed TCP protocol (LCP's "compression as a data
+//! service" reading of the paper's I/O-reduction motivation).
+//!
+//! The stack, bottom-up:
+//! - [`protocol`] — framed requests/responses, hostile-input safe;
+//! - [`cache`] — weight-bounded LRU of decoded shards, so hot ranges
+//!   skip entropy decode + dequantization entirely;
+//! - [`server`] — `TcpListener` accept loop, thread-per-connection,
+//!   admission control (permit queue + decode-cost budget from the v3
+//!   footer's cost counters) shedding overload as typed `Busy`;
+//! - [`client`] — [`ServeClient`], the blocking request/response
+//!   counterpart used by `nblc get` and the integration tests.
+
+pub mod cache;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use cache::ShardCache;
+pub use client::{GetReply, ServeClient};
+pub use protocol::{BusyInfo, RangeData};
+pub use server::{ServeConfig, Server, ServerHandle};

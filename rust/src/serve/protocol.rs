@@ -1,0 +1,551 @@
+//! Wire protocol for the serve daemon: length-prefixed frames over a
+//! plain TCP stream, no external serialization dependency.
+//!
+//! Every frame is `magic(4) | kind(1) | len(4, LE) | payload(len)`.
+//! Requests are tiny (capped at [`MAX_REQUEST_FRAME`]); data responses
+//! carry decoded particle fields and are capped at
+//! [`MAX_RESPONSE_FRAME`] so a hostile peer cannot make either side
+//! allocate unbounded memory from a forged length prefix. Malformed
+//! input (bad magic, oversized length, truncated body) decodes to a
+//! typed [`Error`] — never a panic — and the server answers with an
+//! error frame before closing the connection.
+
+use crate::error::{Error, Result};
+use crate::metrics::ServeStats;
+use crate::snapshot::Snapshot;
+use crate::util::varint::{get_uvarint, put_uvarint};
+use std::io::{Read, Write};
+
+/// Frame magic, first bytes of every frame in both directions.
+pub const FRAME_MAGIC: [u8; 4] = *b"NBS1";
+
+/// Largest accepted request payload (requests are a name + a range).
+pub const MAX_REQUEST_FRAME: u32 = 1 << 16;
+/// Largest accepted response payload (decoded particle data).
+pub const MAX_RESPONSE_FRAME: u32 = 1 << 30;
+
+/// Frame kind: particle-range request.
+pub const REQ_GET: u8 = 1;
+/// Frame kind: server statistics request.
+pub const REQ_STATS: u8 = 2;
+/// Frame kind: decoded particle data.
+pub const RESP_DATA: u8 = 0x81;
+/// Frame kind: statistics snapshot.
+pub const RESP_STATS: u8 = 0x82;
+/// Frame kind: request shed by admission control.
+pub const RESP_BUSY: u8 = 0x83;
+/// Frame kind: request failed; payload is a UTF-8 message.
+pub const RESP_ERROR: u8 = 0x84;
+
+/// Write one frame: magic, kind, length prefix, payload.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    w.write_all(&FRAME_MAGIC)?;
+    w.write_all(&[kind])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, returning `Ok(None)` on a clean EOF *before* the
+/// first magic byte (the peer closed between frames). Any other
+/// malformation — wrong magic, a length prefix above `max_payload`,
+/// or EOF mid-frame — is a [`Error::Corrupt`].
+pub fn read_frame_or_eof<R: Read>(r: &mut R, max_payload: u32) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut magic = [0u8; 4];
+    match r.read(&mut magic)? {
+        0 => return Ok(None),
+        n => r.read_exact(&mut magic[n..]).map_err(truncated)?,
+    }
+    if magic != FRAME_MAGIC {
+        return Err(Error::corrupt("bad frame magic"));
+    }
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head).map_err(truncated)?;
+    let kind = head[0];
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    if len > max_payload {
+        return Err(Error::corrupt(format!(
+            "frame payload of {len} bytes exceeds the {max_payload}-byte limit"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(truncated)?;
+    Ok(Some((kind, payload)))
+}
+
+fn truncated(e: std::io::Error) -> Error {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        Error::corrupt("truncated frame")
+    } else {
+        Error::Io(e)
+    }
+}
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Decode a particle range. `archive` may be empty when the server
+    /// holds exactly one archive; `range = None` means all particles.
+    Get {
+        /// Served-archive name (file basename).
+        archive: String,
+        /// Half-open particle range `[a, b)`.
+        range: Option<(u64, u64)>,
+    },
+    /// Fetch a [`ServeStats`] snapshot.
+    Stats,
+}
+
+impl Request {
+    /// Serialize into `(frame kind, payload)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Request::Get { archive, range } => {
+                let mut p = Vec::new();
+                put_str(&mut p, archive);
+                match range {
+                    None => p.push(0),
+                    Some((a, b)) => {
+                        p.push(1);
+                        put_uvarint(&mut p, *a);
+                        put_uvarint(&mut p, *b);
+                    }
+                }
+                (REQ_GET, p)
+            }
+            Request::Stats => (REQ_STATS, Vec::new()),
+        }
+    }
+
+    /// Decode a request from a frame; hostile bytes yield typed errors.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Request> {
+        match kind {
+            REQ_GET => {
+                let mut pos = 0;
+                let archive = get_str(payload, &mut pos)?;
+                let range = match payload.get(pos) {
+                    Some(0) => {
+                        pos += 1;
+                        None
+                    }
+                    Some(1) => {
+                        pos += 1;
+                        let a = get_uvarint(payload, &mut pos)?;
+                        let b = get_uvarint(payload, &mut pos)?;
+                        Some((a, b))
+                    }
+                    _ => return Err(Error::corrupt("bad range tag in get request")),
+                };
+                expect_consumed(payload, pos)?;
+                Ok(Request::Get { archive, range })
+            }
+            REQ_STATS => {
+                expect_consumed(payload, 0)?;
+                Ok(Request::Stats)
+            }
+            other => Err(Error::corrupt(format!("unknown request kind {other:#x}"))),
+        }
+    }
+}
+
+/// Decoded range data as carried by a [`RESP_DATA`] frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeData {
+    /// First particle actually covered (see `exact`).
+    pub particle_start: u64,
+    /// One past the last particle covered.
+    pub particle_end: u64,
+    /// True when the result is exactly the requested range; false for
+    /// reordering codecs, which return whole overlapping shards.
+    pub exact: bool,
+    /// True when the codec permutes particles within each shard.
+    pub reordered: bool,
+    /// Shards fetched to answer this request.
+    pub shards_touched: u64,
+    /// How many of those fetches were LRU-cache hits.
+    pub cache_hits: u64,
+    /// The decoded particles.
+    pub snapshot: Snapshot,
+}
+
+/// Admission-control shed notice carried by a [`RESP_BUSY`] frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BusyInfo {
+    /// Requests admitted and decoding when this one was shed.
+    pub inflight: u64,
+    /// Configured concurrent-request cap.
+    pub max_inflight: u64,
+    /// Estimated decode cost currently in flight, nanoseconds.
+    pub inflight_cost_nanos: u64,
+    /// Configured decode-cost budget, nanoseconds (0 = disabled).
+    pub budget_nanos: u64,
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Decoded particle data.
+    Data(RangeData),
+    /// Statistics snapshot.
+    Stats(ServeStats),
+    /// Request shed by admission control; retry later.
+    Busy(BusyInfo),
+    /// Request failed; human-readable message.
+    Error(String),
+}
+
+impl Response {
+    /// Serialize into `(frame kind, payload)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Response::Data(d) => (RESP_DATA, encode_data(d)),
+            Response::Stats(s) => (RESP_STATS, encode_stats(s)),
+            Response::Busy(b) => {
+                let mut p = Vec::new();
+                put_uvarint(&mut p, b.inflight);
+                put_uvarint(&mut p, b.max_inflight);
+                put_uvarint(&mut p, b.inflight_cost_nanos);
+                put_uvarint(&mut p, b.budget_nanos);
+                (RESP_BUSY, p)
+            }
+            Response::Error(msg) => {
+                let mut p = Vec::new();
+                put_str(&mut p, msg);
+                (RESP_ERROR, p)
+            }
+        }
+    }
+
+    /// Decode a response from a frame; hostile bytes yield typed errors.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Response> {
+        match kind {
+            RESP_DATA => decode_data(payload).map(Response::Data),
+            RESP_STATS => decode_stats(payload).map(Response::Stats),
+            RESP_BUSY => {
+                let mut pos = 0;
+                let b = BusyInfo {
+                    inflight: get_uvarint(payload, &mut pos)?,
+                    max_inflight: get_uvarint(payload, &mut pos)?,
+                    inflight_cost_nanos: get_uvarint(payload, &mut pos)?,
+                    budget_nanos: get_uvarint(payload, &mut pos)?,
+                };
+                expect_consumed(payload, pos)?;
+                Ok(Response::Busy(b))
+            }
+            RESP_ERROR => {
+                let mut pos = 0;
+                let msg = get_str(payload, &mut pos)?;
+                expect_consumed(payload, pos)?;
+                Ok(Response::Error(msg))
+            }
+            other => Err(Error::corrupt(format!("unknown response kind {other:#x}"))),
+        }
+    }
+}
+
+fn encode_data(d: &RangeData) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64 + d.snapshot.total_bytes());
+    let flags = (d.exact as u8) | ((d.reordered as u8) << 1);
+    p.push(flags);
+    put_uvarint(&mut p, d.particle_start);
+    put_uvarint(&mut p, d.particle_end);
+    put_uvarint(&mut p, d.shards_touched);
+    put_uvarint(&mut p, d.cache_hits);
+    p.extend_from_slice(&d.snapshot.box_size.to_le_bytes());
+    put_uvarint(&mut p, d.snapshot.seed);
+    put_str(&mut p, &d.snapshot.name);
+    put_uvarint(&mut p, d.snapshot.len() as u64);
+    for field in &d.snapshot.fields {
+        for v in field {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    p
+}
+
+fn decode_data(payload: &[u8]) -> Result<RangeData> {
+    let mut pos = 0;
+    let flags = *payload
+        .get(pos)
+        .ok_or_else(|| Error::corrupt("empty data payload"))?;
+    pos += 1;
+    if flags & !0b11 != 0 {
+        return Err(Error::corrupt("unknown data flags"));
+    }
+    let particle_start = get_uvarint(payload, &mut pos)?;
+    let particle_end = get_uvarint(payload, &mut pos)?;
+    let shards_touched = get_uvarint(payload, &mut pos)?;
+    let cache_hits = get_uvarint(payload, &mut pos)?;
+    let box_size = f64::from_le_bytes(take8(payload, &mut pos)?);
+    let seed = get_uvarint(payload, &mut pos)?;
+    let name = get_str(payload, &mut pos)?;
+    let n = get_uvarint(payload, &mut pos)? as usize;
+    let need = n
+        .checked_mul(24)
+        .ok_or_else(|| Error::corrupt("particle count overflow"))?;
+    if payload.len() - pos != need {
+        return Err(Error::corrupt(format!(
+            "data payload holds {} field bytes, {n} particles need {need}",
+            payload.len() - pos
+        )));
+    }
+    let fields: [Vec<f32>; 6] = std::array::from_fn(|_| {
+        let mut f = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&payload[pos..pos + 4]);
+            pos += 4;
+            f.push(f32::from_le_bytes(b));
+        }
+        f
+    });
+    Ok(RangeData {
+        particle_start,
+        particle_end,
+        exact: flags & 1 != 0,
+        reordered: flags & 2 != 0,
+        shards_touched,
+        cache_hits,
+        snapshot: Snapshot {
+            name,
+            fields,
+            box_size,
+            seed,
+        },
+    })
+}
+
+fn encode_stats(s: &ServeStats) -> Vec<u8> {
+    let mut p = Vec::new();
+    for v in [
+        s.requests,
+        s.data_ok,
+        s.busy,
+        s.errors,
+        s.bytes_served,
+        s.cache_hits,
+        s.cache_misses,
+        s.cache_evictions,
+        s.cache_entries,
+        s.cache_bytes,
+        s.cache_cap_bytes,
+        s.inflight,
+        s.inflight_high_water,
+    ] {
+        put_uvarint(&mut p, v);
+    }
+    put_uvarint(&mut p, s.archives.len() as u64);
+    for (name, touches) in &s.archives {
+        put_str(&mut p, name);
+        put_uvarint(&mut p, *touches);
+    }
+    p
+}
+
+fn decode_stats(payload: &[u8]) -> Result<ServeStats> {
+    let mut pos = 0;
+    let mut next = || get_uvarint(payload, &mut pos);
+    let mut s = ServeStats {
+        requests: next()?,
+        data_ok: next()?,
+        busy: next()?,
+        errors: next()?,
+        bytes_served: next()?,
+        cache_hits: next()?,
+        cache_misses: next()?,
+        cache_evictions: next()?,
+        cache_entries: next()?,
+        cache_bytes: next()?,
+        cache_cap_bytes: next()?,
+        inflight: next()?,
+        inflight_high_water: next()?,
+        archives: Vec::new(),
+    };
+    let n_archives = get_uvarint(payload, &mut pos)?;
+    if n_archives > payload.len() as u64 {
+        return Err(Error::corrupt("archive count exceeds payload"));
+    }
+    for _ in 0..n_archives {
+        let name = get_str(payload, &mut pos)?;
+        let touches = get_uvarint(payload, &mut pos)?;
+        s.archives.push((name, touches));
+    }
+    expect_consumed(payload, pos)?;
+    Ok(s)
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_uvarint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_uvarint(buf, pos)? as usize;
+    if buf.len() - *pos < len {
+        return Err(Error::corrupt("string extends past payload"));
+    }
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|_| Error::corrupt("string is not UTF-8"))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+fn expect_consumed(payload: &[u8], pos: usize) -> Result<()> {
+    if pos != payload.len() {
+        return Err(Error::corrupt(format!(
+            "{} trailing bytes after payload",
+            payload.len() - pos
+        )));
+    }
+    Ok(())
+}
+
+fn take8(buf: &[u8], pos: &mut usize) -> Result<[u8; 8]> {
+    if buf.len() - *pos < 8 {
+        return Err(Error::corrupt("payload truncated in f64"));
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[*pos..*pos + 8]);
+    *pos += 8;
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip_request(req: Request) {
+        let (kind, payload) = req.encode();
+        assert_eq!(Request::decode(kind, &payload).unwrap(), req);
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let (kind, payload) = resp.encode();
+        assert_eq!(Response::decode(kind, &payload).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::Get {
+            archive: String::new(),
+            range: None,
+        });
+        roundtrip_request(Request::Get {
+            archive: "snap.nblc".into(),
+            range: Some((17, 123_456_789)),
+        });
+        roundtrip_request(Request::Stats);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let snap = Snapshot {
+            name: "t".into(),
+            fields: std::array::from_fn(|f| (0..5).map(|i| (f * 10 + i) as f32).collect()),
+            box_size: 64.0,
+            seed: 7,
+        };
+        roundtrip_response(Response::Data(RangeData {
+            particle_start: 3,
+            particle_end: 8,
+            exact: true,
+            reordered: false,
+            shards_touched: 2,
+            cache_hits: 1,
+            snapshot: snap,
+        }));
+        roundtrip_response(Response::Stats(ServeStats {
+            requests: 9,
+            cache_hits: 4,
+            archives: vec![("a.nblc".into(), 3), ("b.nblc".into(), 0)],
+            ..Default::default()
+        }));
+        roundtrip_response(Response::Busy(BusyInfo {
+            inflight: 4,
+            max_inflight: 4,
+            inflight_cost_nanos: 1_000_000,
+            budget_nanos: 0,
+        }));
+        roundtrip_response(Response::Error("no such archive".into()));
+    }
+
+    #[test]
+    fn frame_roundtrips_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_GET, b"hello").unwrap();
+        write_frame(&mut buf, REQ_STATS, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame_or_eof(&mut r, MAX_REQUEST_FRAME).unwrap(),
+            Some((REQ_GET, b"hello".to_vec()))
+        );
+        assert_eq!(
+            read_frame_or_eof(&mut r, MAX_REQUEST_FRAME).unwrap(),
+            Some((REQ_STATS, Vec::new()))
+        );
+        assert_eq!(read_frame_or_eof(&mut r, MAX_REQUEST_FRAME).unwrap(), None);
+    }
+
+    #[test]
+    fn bad_magic_is_corrupt() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_GET, b"x").unwrap();
+        buf[0] = b'X';
+        let err = read_frame_or_eof(&mut &buf[..], MAX_REQUEST_FRAME).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&FRAME_MAGIC);
+        buf.push(REQ_GET);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame_or_eof(&mut &buf[..], MAX_REQUEST_FRAME).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_typed_error() {
+        let mut full = Vec::new();
+        write_frame(&mut full, REQ_GET, b"payload").unwrap();
+        // EOF at offset 0 is a clean close; anywhere else is Corrupt.
+        for cut in 1..full.len() {
+            let err = read_frame_or_eof(&mut &full[..cut], MAX_REQUEST_FRAME).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt(_)),
+                "cut at {cut}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_payload_bytes_never_panic() {
+        let mut rng = Pcg64::seeded(0x5e21);
+        for round in 0..2_000 {
+            let len = (rng.below(64)) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let kind = (round % 256) as u8;
+            // Decoding arbitrary bytes must return, not panic.
+            let _ = Request::decode(kind, &payload);
+            let _ = Response::decode(kind, &payload);
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let (kind, mut payload) = Request::Stats.encode();
+        payload.push(0);
+        assert!(Request::decode(kind, &payload).is_err());
+        let (kind, mut payload) = Request::Get {
+            archive: "a".into(),
+            range: None,
+        }
+        .encode();
+        payload.push(9);
+        assert!(Request::decode(kind, &payload).is_err());
+    }
+}

@@ -1,0 +1,507 @@
+//! The serve daemon: a `TcpListener` + thread-per-connection loop over
+//! open [`ShardReader`]s, an LRU shard cache, and admission control.
+//!
+//! No async runtime: connections are cheap blocking threads (the
+//! request path is decode-bound, not connection-count-bound), and the
+//! admission queue — built on the pipeline's bounded-queue substrate —
+//! caps how many decodes run at once. A request that cannot be
+//! admitted within the configured timeout is shed with a typed `Busy`
+//! response carrying the observed load, so clients can back off
+//! instead of piling up server threads.
+
+use crate::compressors::registry;
+use crate::coordinator::backpressure::{bounded, BoundedReceiver, BoundedSender, QueueStats};
+use crate::coordinator::pipeline::CompressorFactory;
+use crate::data::archive::{decode_shards_cached, ShardReader};
+use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
+use crate::metrics::ServeMetrics;
+use crate::serve::cache::ShardCache;
+use crate::serve::protocol::{
+    read_frame_or_eof, write_frame, BusyInfo, RangeData, Request, Response, MAX_REQUEST_FRAME,
+};
+use crate::snapshot::Snapshot;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration (the `[serve]` config section mirrors this).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7117` (`:0` = ephemeral port).
+    pub addr: String,
+    /// Shard-cache weight bound, MiB of decoded particle data.
+    pub cache_mb: u64,
+    /// Concurrent admitted range requests.
+    pub max_inflight: usize,
+    /// How long a request waits for admission before `Busy`.
+    pub queue_timeout_ms: u64,
+    /// Estimated-decode-cost budget, milliseconds; `0` disables the
+    /// cost gate and only `max_inflight` limits concurrency.
+    pub decode_budget_ms: u64,
+    /// Thread budget shared by concurrent decodes (`0` = auto).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7117".into(),
+            cache_mb: 256,
+            max_inflight: 4,
+            queue_timeout_ms: 250,
+            decode_budget_ms: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// Admission control: a permit queue (capacity = `max_inflight`) plus
+/// an optional decode-cost gate. Acquire polls until the deadline,
+/// then sheds with the observed load; dropping the returned permit
+/// releases both the slot and the cost.
+pub(crate) struct Admission {
+    permits_tx: BoundedSender<()>,
+    permits_rx: Mutex<BoundedReceiver<()>>,
+    stats: Arc<QueueStats>,
+    max_inflight: u64,
+    budget_nanos: u64,
+    /// Estimated cost of admitted, still-running decodes.
+    inflight_cost: Mutex<u64>,
+    timeout: Duration,
+}
+
+impl Admission {
+    pub(crate) fn new(max_inflight: usize, budget_nanos: u64, timeout: Duration) -> Arc<Self> {
+        let (permits_tx, permits_rx, stats) = bounded::<()>(max_inflight.max(1));
+        Arc::new(Admission {
+            permits_tx,
+            permits_rx: Mutex::new(permits_rx),
+            stats,
+            max_inflight: max_inflight.max(1) as u64,
+            budget_nanos,
+            inflight_cost: Mutex::new(0),
+            timeout,
+        })
+    }
+
+    /// One admission attempt: cost gate first, then a permit slot.
+    fn try_acquire(
+        self: &Arc<Self>,
+        est_cost_nanos: u64,
+    ) -> std::result::Result<AdmissionPermit, BusyInfo> {
+        let mut cost = self.inflight_cost.lock().unwrap();
+        // The gate never starves a request whose lone estimate exceeds
+        // the whole budget: it is admitted once nothing else runs.
+        let over_budget = self.budget_nanos > 0
+            && *cost > 0
+            && cost.saturating_add(est_cost_nanos) > self.budget_nanos;
+        if !over_budget {
+            match self.permits_tx.try_send(()) {
+                Ok(()) => {
+                    *cost += est_cost_nanos;
+                    return Ok(AdmissionPermit {
+                        admission: Arc::clone(self),
+                        est_cost_nanos,
+                    });
+                }
+                Err(rej) => {
+                    return Err(self.busy(rej.depth, *cost));
+                }
+            }
+        }
+        Err(self.busy(self.stats.depth(), *cost))
+    }
+
+    /// Wait up to the configured timeout for admission; on timeout the
+    /// last observed load comes back as a [`BusyInfo`] shed notice.
+    pub(crate) fn acquire(
+        self: &Arc<Self>,
+        est_cost_nanos: u64,
+    ) -> std::result::Result<AdmissionPermit, BusyInfo> {
+        let deadline = Instant::now() + self.timeout;
+        let poll = Duration::from_millis((self.timeout.as_millis() as u64 / 20).clamp(1, 10));
+        loop {
+            match self.try_acquire(est_cost_nanos) {
+                Ok(permit) => return Ok(permit),
+                Err(busy) => {
+                    if Instant::now() >= deadline {
+                        return Err(busy);
+                    }
+                    std::thread::sleep(poll);
+                }
+            }
+        }
+    }
+
+    fn busy(&self, inflight: u64, inflight_cost_nanos: u64) -> BusyInfo {
+        BusyInfo {
+            inflight,
+            max_inflight: self.max_inflight,
+            inflight_cost_nanos,
+            budget_nanos: self.budget_nanos,
+        }
+    }
+
+    /// Currently admitted requests / lifetime peak, for stats.
+    pub(crate) fn load(&self) -> (u64, u64) {
+        (
+            self.stats.depth(),
+            self.stats.high_water.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// RAII admission slot: dropping it frees the permit and the cost.
+pub(crate) struct AdmissionPermit {
+    admission: Arc<Admission>,
+    est_cost_nanos: u64,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        let _ = self.admission.permits_rx.lock().unwrap().recv();
+        let mut cost = self.admission.inflight_cost.lock().unwrap();
+        *cost = cost.saturating_sub(self.est_cost_nanos);
+    }
+}
+
+/// One archive held open by the daemon.
+struct ServedArchive {
+    /// Request-facing name: the file basename.
+    name: String,
+    reader: ShardReader,
+    factory: CompressorFactory,
+    /// Whether the archive's codec permutes particles within shards
+    /// (resolved once at bind time; see `decode_shards_cached`).
+    reordered: bool,
+}
+
+struct Shared {
+    archives: Vec<ServedArchive>,
+    cache: ShardCache,
+    metrics: ServeMetrics,
+    admission: Arc<Admission>,
+    ctx: ExecCtx,
+}
+
+/// A bound (but not yet accepting) serve daemon.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle to a daemon running on a background thread.
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound listen address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the accept loop, and join the accept
+    /// thread. Handler threads for connections still open finish (or
+    /// exit at the peer's EOF) on their own.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Server {
+    /// Open every archive, resolve its codec, and bind the listener.
+    /// Archive names (request-facing) are file basenames; duplicates
+    /// are rejected rather than silently shadowed.
+    pub fn bind<P: AsRef<Path>>(cfg: &ServeConfig, archives: &[P]) -> Result<Server> {
+        if archives.is_empty() {
+            return Err(Error::invalid("serve needs at least one archive"));
+        }
+        let mut served = Vec::with_capacity(archives.len());
+        let mut names = Vec::with_capacity(archives.len());
+        for path in archives {
+            let path = path.as_ref();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| Error::invalid(format!("bad archive path {}", path.display())))?
+                .to_string();
+            if names.contains(&name) {
+                return Err(Error::invalid(format!(
+                    "duplicate archive name {name}: served archives are addressed by basename"
+                )));
+            }
+            let reader = ShardReader::open(path)?;
+            let factory = registry::factory(reader.spec())?;
+            let reordered = factory().reorders();
+            names.push(name.clone());
+            served.push(ServedArchive {
+                name,
+                reader,
+                factory,
+                reordered,
+            });
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            archives: served,
+            cache: ShardCache::new(cfg.cache_mb.saturating_mul(1 << 20)),
+            metrics: ServeMetrics::new(names),
+            admission: Admission::new(
+                cfg.max_inflight,
+                cfg.decode_budget_ms.saturating_mul(1_000_000),
+                Duration::from_millis(cfg.queue_timeout_ms),
+            ),
+            ctx: ExecCtx::resolve(cfg.threads),
+        });
+        Ok(Server {
+            listener,
+            addr,
+            shared,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound listen address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Names of the served archives, in request-resolution order.
+    pub fn archive_names(&self) -> Vec<String> {
+        self.shared.archives.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Accept loop (blocking; the CLI's `nblc serve` lives here).
+    /// Each connection gets its own handler thread; the loop exits
+    /// when a [`ServerHandle::stop`] wakes it.
+    pub fn run(&self) {
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || handle_conn(&shared, stream));
+        }
+    }
+
+    /// Run the accept loop on a background thread.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let stop = Arc::clone(&self.stop);
+        let join = std::thread::spawn(move || self.run());
+        ServerHandle {
+            stop,
+            addr,
+            join: Some(join),
+        }
+    }
+}
+
+/// Per-connection loop: read a frame, answer it, repeat until EOF.
+/// Frame-level corruption (bad magic, truncation, oversized prefix)
+/// answers with an error frame and closes; semantic errors (unknown
+/// archive, bad range) answer and keep the connection usable.
+fn handle_conn(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let (kind, payload) = match read_frame_or_eof(&mut stream, MAX_REQUEST_FRAME) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return,
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                respond(&mut stream, &Response::Error(e.to_string()));
+                return;
+            }
+        };
+        let req = match Request::decode(kind, &payload) {
+            Ok(req) => req,
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                respond(&mut stream, &Response::Error(e.to_string()));
+                return;
+            }
+        };
+        let resp = handle_request(shared, req);
+        if !respond(&mut stream, &resp) {
+            return;
+        }
+    }
+}
+
+fn respond(stream: &mut TcpStream, resp: &Response) -> bool {
+    let (kind, payload) = resp.encode();
+    write_frame(stream, kind, &payload).is_ok()
+}
+
+fn handle_request(shared: &Shared, req: Request) -> Response {
+    shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    match req {
+        Request::Stats => {
+            let (inflight, high_water) = shared.admission.load();
+            Response::Stats(shared.metrics.snapshot(shared.cache.figures(), inflight, high_water))
+        }
+        Request::Get { archive, range } => {
+            let resp = handle_get(shared, &archive, range);
+            match &resp {
+                Response::Data(_) => {
+                    shared.metrics.data_ok.fetch_add(1, Ordering::Relaxed);
+                }
+                Response::Busy(_) => {
+                    shared.metrics.busy.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            resp
+        }
+    }
+}
+
+fn handle_get(shared: &Shared, archive: &str, range: Option<(u64, u64)>) -> Response {
+    let aid = if archive.is_empty() && shared.archives.len() == 1 {
+        0
+    } else {
+        match shared.archives.iter().position(|a| a.name == archive) {
+            Some(aid) => aid,
+            None => {
+                return Response::Error(format!(
+                    "unknown archive {archive:?} (serving: {})",
+                    shared
+                        .archives
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+    };
+    let served = &shared.archives[aid];
+    let reader = &served.reader;
+    // Cheap range sanity before admission, mirroring the decode path,
+    // so hostile ranges cost nothing and keep the connection open.
+    let touched = match range {
+        Some((a, b)) => {
+            if a >= b || a >= reader.n() {
+                return Response::Error(format!(
+                    "particle range {a}..{b} is invalid for an archive of {} particles",
+                    reader.n()
+                ));
+            }
+            reader.shards_for_range(a, b.min(reader.n()))
+        }
+        None => (0..reader.index().entries.len()).collect(),
+    };
+    if touched.is_empty() {
+        return Response::Error("particle range overlaps no shards".into());
+    }
+    // Only the shards the cache will NOT absorb count toward the
+    // admission cost estimate.
+    let cold: Vec<usize> = touched
+        .iter()
+        .copied()
+        .filter(|&i| !shared.cache.contains((aid, i)))
+        .collect();
+    let est = reader.est_decode_cost_nanos(&cold);
+    let _permit = match shared.admission.acquire(est) {
+        Ok(p) => p,
+        Err(busy) => return Response::Busy(busy),
+    };
+    // Shard fan-out takes the outer budget; each decode gets the rest.
+    let inner = ExecCtx::with_threads((shared.ctx.threads() / touched.len()).max(1));
+    let hits = AtomicU64::new(0);
+    let fetch = |i: usize| -> Result<Arc<Snapshot>> {
+        let key = (aid, i);
+        if let Some(snap) = shared.cache.get(key) {
+            hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(snap);
+        }
+        let bundle = reader.read_shard(i)?;
+        let snap = Arc::new((served.factory)().decompress_with(&inner, &bundle)?);
+        shared.cache.insert(key, Arc::clone(&snap));
+        Ok(snap)
+    };
+    match decode_shards_cached(reader, range, &shared.ctx, served.reordered, &fetch) {
+        Ok(dec) => {
+            shared
+                .metrics
+                .bytes_served
+                .fetch_add(dec.snapshot.total_bytes() as u64, Ordering::Relaxed);
+            shared.metrics.touch_shards(aid, dec.shards_touched as u64);
+            Response::Data(RangeData {
+                particle_start: dec.particle_start,
+                particle_end: dec.particle_end,
+                exact: dec.exact,
+                reordered: dec.reordered,
+                shards_touched: dec.shards_touched as u64,
+                cache_hits: hits.load(Ordering::Relaxed),
+                snapshot: dec.snapshot,
+            })
+        }
+        Err(e) => Response::Error(e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(max_inflight: usize, budget_nanos: u64) -> Arc<Admission> {
+        Admission::new(max_inflight, budget_nanos, Duration::from_millis(1))
+    }
+
+    #[test]
+    fn permit_slots_bound_concurrency() {
+        let adm = quick(2, 0);
+        let p1 = adm.acquire(0).unwrap();
+        let _p2 = adm.acquire(0).unwrap();
+        let busy = adm.acquire(0).unwrap_err();
+        assert_eq!(busy.inflight, 2);
+        assert_eq!(busy.max_inflight, 2);
+        assert_eq!(busy.budget_nanos, 0);
+        drop(p1);
+        let _p3 = adm.acquire(0).unwrap();
+        assert_eq!(adm.load().0, 2);
+        assert_eq!(adm.load().1, 2);
+    }
+
+    #[test]
+    fn cost_gate_sheds_over_budget_work() {
+        let adm = quick(8, 1_000);
+        let p1 = adm.acquire(800).unwrap();
+        let busy = adm.acquire(800).unwrap_err();
+        assert_eq!(busy.inflight_cost_nanos, 800);
+        assert_eq!(busy.budget_nanos, 1_000);
+        // Small work still fits under the budget.
+        let p2 = adm.acquire(100).unwrap();
+        drop(p1);
+        drop(p2);
+        // A lone request above the whole budget is never starved.
+        let _p3 = adm.acquire(50_000).unwrap();
+    }
+
+    #[test]
+    fn dropping_permits_restores_cost() {
+        let adm = quick(8, 1_000);
+        let p = adm.acquire(900).unwrap();
+        drop(p);
+        assert_eq!(*adm.inflight_cost.lock().unwrap(), 0);
+        let _p = adm.acquire(900).unwrap();
+    }
+}

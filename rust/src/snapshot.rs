@@ -28,7 +28,7 @@ pub const PARTICLE_BYTES: usize = FIELD_NAMES.len() * 4;
 pub const VEL_OFFSET: usize = 3;
 
 /// A particle snapshot: six index-consistent 1D fields.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
     /// Data set name ("HACC", "AMDF", ...), used in reports.
     pub name: String,
@@ -111,10 +111,18 @@ impl Snapshot {
     /// order) back into one snapshot. Name/box metadata comes from the
     /// first part.
     pub fn concat(parts: &[Snapshot]) -> Result<Snapshot> {
+        let refs: Vec<&Snapshot> = parts.iter().collect();
+        Snapshot::concat_refs(&refs)
+    }
+
+    /// [`Self::concat`] over borrowed parts — the serve daemon's shard
+    /// cache hands out `Arc<Snapshot>`s, which can be stitched without
+    /// cloning each shard into an owned buffer first.
+    pub fn concat_refs(parts: &[&Snapshot]) -> Result<Snapshot> {
         let Some(first) = parts.first() else {
             return Err(Error::invalid("cannot concatenate zero snapshots"));
         };
-        let total: usize = parts.iter().map(Snapshot::len).sum();
+        let total: usize = parts.iter().map(|p| p.len()).sum();
         let fields = std::array::from_fn(|i| {
             let mut f = Vec::with_capacity(total);
             for p in parts {

@@ -1,0 +1,318 @@
+//! Acceptance-criteria integration test for `nblc serve`: a daemon on
+//! a loopback ephemeral port serving the full codec lineup, hammered
+//! by concurrent clients with overlapping and disjoint ranges. Every
+//! reply must be bitwise identical to a direct `ShardReader` decode,
+//! repeats must hit the LRU cache, an undersized `max_inflight` must
+//! shed with a typed `Busy` (never a hang or panic), and hostile wire
+//! bytes must get typed error frames with clean connection handling.
+
+use nblc::compressors::{full_lineup, registry};
+use nblc::data::archive::{decode_shards, ShardReader, ShardWriter};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::exec::ExecCtx;
+use nblc::quality::Quality;
+use nblc::serve::protocol::{
+    read_frame_or_eof, write_frame, Request, Response, FRAME_MAGIC, MAX_RESPONSE_FRAME, REQ_GET,
+};
+use nblc::serve::{GetReply, RangeData, ServeClient, ServeConfig, Server};
+use nblc::snapshot::Snapshot;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const EB: f64 = 1e-4;
+
+fn build_archive(path: &Path, snap: &Snapshot, spec: &str, shards: usize) {
+    let quality = Quality::rel(EB);
+    let comp = registry::build_str(spec).unwrap();
+    let mut w = ShardWriter::create_quality(path, spec, &quality).unwrap();
+    let n = snap.len();
+    for s in 0..shards {
+        let (start, end) = (s * n / shards, (s + 1) * n / shards);
+        let bundle = comp.compress(&snap.slice(start, end), &quality).unwrap();
+        // Nonzero cost counters so admission estimates have substance.
+        w.write_shard(start, end, &bundle, 2_000_000).unwrap();
+    }
+    w.finish().unwrap();
+}
+
+/// Get with bounded retry-on-busy, so a loaded CI box never flakes.
+fn get_ok(client: &mut ServeClient, archive: &str, range: Option<(u64, u64)>) -> RangeData {
+    for _ in 0..200 {
+        match client.get(archive, range).unwrap() {
+            GetReply::Data(d) => return d,
+            GetReply::Busy(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    panic!("server stayed busy for {archive}");
+}
+
+fn bits(s: &Snapshot) -> Vec<Vec<u32>> {
+    s.fields
+        .iter()
+        .map(|f| f.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn concurrent_range_reads_match_direct_decodes_across_the_lineup() {
+    let snap = generate_md(&MdConfig {
+        n_particles: 6_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    for name in full_lineup() {
+        let spec = registry::canonical(name).unwrap();
+        let fname = format!("nblc_serve_{pid}_{name}.nblc");
+        let path = dir.join(&fname);
+        build_archive(&path, &snap, &spec, 4);
+        paths.push(path);
+        names.push(fname);
+    }
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_mb: 64,
+        max_inflight: 8,
+        queue_timeout_ms: 5_000,
+        decode_budget_ms: 0,
+        threads: 2,
+    };
+    let handle = Server::bind(&cfg, &paths).unwrap().spawn();
+    let addr = handle.addr();
+
+    // Overlapping and disjoint windows, plus full reads.
+    let ranges: [Option<(u64, u64)>; 4] =
+        [None, Some((1_000, 2_500)), Some((2_000, 4_800)), Some((4_600, 6_000))];
+    let seq = ExecCtx::sequential();
+    std::thread::scope(|scope| {
+        for (name, path) in names.iter().zip(&paths) {
+            for range in ranges {
+                let seq = &seq;
+                scope.spawn(move || {
+                    let mut client = ServeClient::connect(addr).unwrap();
+                    let d = get_ok(&mut client, name, range);
+                    let reader = ShardReader::open(path).unwrap();
+                    let direct = decode_shards(&reader, reader.spec(), range, seq).unwrap();
+                    assert_eq!(d.particle_start, direct.particle_start, "{name} {range:?}");
+                    assert_eq!(d.particle_end, direct.particle_end, "{name} {range:?}");
+                    assert_eq!(d.exact, direct.exact, "{name} {range:?}");
+                    assert_eq!(d.reordered, direct.reordered, "{name} {range:?}");
+                    assert_eq!(
+                        d.shards_touched as usize, direct.shards_touched,
+                        "{name} {range:?}"
+                    );
+                    assert_eq!(
+                        bits(&d.snapshot),
+                        bits(&direct.snapshot),
+                        "{name} {range:?}: served bytes differ from direct decode"
+                    );
+                });
+            }
+        }
+    });
+
+    // Repeats are served from the LRU cache.
+    let mut client = ServeClient::connect(addr).unwrap();
+    let d = get_ok(&mut client, &names[0], Some((1_000, 2_500)));
+    assert!(
+        d.cache_hits > 0,
+        "repeat read of a hot range must hit the cache"
+    );
+    let stats = client.stats().unwrap();
+    assert!(stats.cache_hits > 0);
+    assert!(stats.cache_misses > 0);
+    assert_eq!(stats.busy + stats.data_ok + stats.errors + 1, stats.requests);
+    assert!(
+        stats.data_ok >= (names.len() * ranges.len()) as u64,
+        "every scoped request must eventually have been answered with data"
+    );
+    assert_eq!(stats.archives.len(), names.len());
+    for (name, touches) in &stats.archives {
+        assert!(*touches > 0, "archive {name} was never touched");
+    }
+    assert!(stats.inflight_high_water >= 1);
+
+    handle.stop();
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn undersized_admission_sheds_with_typed_busy() {
+    let snap = generate_md(&MdConfig {
+        n_particles: 120_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("nblc_serve_busy_{}.nblc", std::process::id()));
+    build_archive(&path, &snap, &registry::canonical("sz_lv").unwrap(), 2);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_mb: 1, // smaller than one decoded shard: every get decodes
+        max_inflight: 1,
+        queue_timeout_ms: 1,
+        decode_budget_ms: 0,
+        threads: 1,
+    };
+    let handle = Server::bind(&cfg, &[&path]).unwrap().spawn();
+    let addr = handle.addr();
+
+    let (mut data, mut busy) = (0u32, 0u32);
+    std::thread::scope(|scope| {
+        let replies: Vec<_> = (0..12)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut client = ServeClient::connect(addr).unwrap();
+                    client.get("", None).unwrap()
+                })
+            })
+            .collect();
+        for h in replies {
+            match h.join().unwrap() {
+                GetReply::Data(_) => data += 1,
+                GetReply::Busy(b) => {
+                    busy += 1;
+                    assert_eq!(b.max_inflight, 1);
+                    assert!(b.inflight >= 1);
+                }
+            }
+        }
+    });
+    // The permit holder always finishes; with a 1 ms admission window
+    // against multi-ms decodes, someone must have been shed.
+    assert!(data >= 1, "at least one request must be admitted");
+    assert!(busy >= 1, "over-budget load must shed with typed Busy");
+    assert_eq!(data + busy, 12);
+
+    // The daemon is still healthy afterwards.
+    let mut client = ServeClient::connect(addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.busy, busy as u64);
+    assert_eq!(stats.data_ok, data as u64);
+
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hostile_wire_input_gets_typed_errors_and_clean_closes() {
+    let snap = generate_md(&MdConfig {
+        n_particles: 2_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("nblc_serve_hostile_{}.nblc", std::process::id()));
+    build_archive(&path, &snap, &registry::canonical("sz_lv").unwrap(), 2);
+    let handle = Server::bind(
+        &ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        &[&path],
+    )
+    .unwrap()
+    .spawn();
+    let addr = handle.addr();
+
+    let expect_error_then_close = |raw: &[u8], what: &str| {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw).unwrap();
+        s.flush().unwrap();
+        let frame = read_frame_or_eof(&mut s, MAX_RESPONSE_FRAME).unwrap();
+        let (kind, payload) = frame.unwrap_or_else(|| panic!("{what}: no error frame"));
+        let resp = Response::decode(kind, &payload).unwrap();
+        assert!(
+            matches!(resp, Response::Error(_)),
+            "{what}: expected error frame, got {resp:?}"
+        );
+        // The server closes after a protocol-level error: next read is
+        // a clean EOF, not a hang.
+        assert_eq!(read_frame_or_eof(&mut s, MAX_RESPONSE_FRAME).unwrap(), None, "{what}");
+    };
+
+    // Bad magic. Exactly four bytes, so the server has consumed every
+    // byte we sent before it closes (a close with unread bytes pending
+    // would RST and race the error frame past the client).
+    expect_error_then_close(b"XXXX", "bad magic");
+    // Oversized length prefix (u32::MAX) — rejected before allocating.
+    let mut oversized = Vec::new();
+    oversized.extend_from_slice(&FRAME_MAGIC);
+    oversized.push(REQ_GET);
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    expect_error_then_close(&oversized, "oversized length prefix");
+    // Unknown frame kind.
+    let mut unknown = Vec::new();
+    write_frame(&mut unknown, 0x7f, b"").unwrap();
+    expect_error_then_close(&unknown, "unknown request kind");
+    // Garbage payload inside a well-formed frame.
+    let mut garbage = Vec::new();
+    write_frame(&mut garbage, REQ_GET, &[0xff; 16]).unwrap();
+    expect_error_then_close(&garbage, "garbage get payload");
+
+    // Truncated frame: close mid-header; server must just drop the
+    // connection without wedging the accept loop.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&FRAME_MAGIC[..2]).unwrap();
+        drop(s);
+    }
+
+    // Semantic errors keep the connection usable.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let send = |s: &mut TcpStream, req: &Request| {
+            let (kind, payload) = req.encode();
+            write_frame(s, kind, &payload).unwrap();
+            let (kind, payload) = read_frame_or_eof(s, MAX_RESPONSE_FRAME).unwrap().unwrap();
+            Response::decode(kind, &payload).unwrap()
+        };
+        let resp = send(
+            &mut s,
+            &Request::Get {
+                archive: "nope.nblc".into(),
+                range: None,
+            },
+        );
+        assert!(matches!(resp, Response::Error(_)), "unknown archive: {resp:?}");
+        let resp = send(
+            &mut s,
+            &Request::Get {
+                archive: String::new(),
+                range: Some((1_000_000, 2_000_000)), // out of bounds
+            },
+        );
+        assert!(matches!(resp, Response::Error(_)), "oob range: {resp:?}");
+        let resp = send(
+            &mut s,
+            &Request::Get {
+                archive: String::new(),
+                range: Some((500, 100)), // empty range
+            },
+        );
+        assert!(matches!(resp, Response::Error(_)), "empty range: {resp:?}");
+        // ...and a good request on the SAME connection still works.
+        let resp = send(
+            &mut s,
+            &Request::Get {
+                archive: String::new(),
+                range: Some((100, 200)),
+            },
+        );
+        assert!(matches!(resp, Response::Data(_)), "follow-up get: {resp:?}");
+    }
+
+    // The daemon survived everything above and still answers.
+    let mut client = ServeClient::connect(addr).unwrap();
+    let d = get_ok(&mut client, "", Some((0, 1_000)));
+    assert_eq!(d.snapshot.len(), 1_000);
+    let stats = client.stats().unwrap();
+    assert!(stats.errors >= 6, "typed errors must be counted, got {}", stats.errors);
+
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
