@@ -1,9 +1,12 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf targets): lattice
 //! quantization, Huffman encode/decode, radix sort, Morton interleave,
 //! AVLE, DEFLATE, the end-to-end per-field SZ-LV compress / decompress,
-//! and the snapshot-level parallel field-plane engine (1 thread vs all
-//! cores; byte-identity across budgets is enforced by
-//! `tests/parallel_determinism.rs`, not re-checked here). Uses min-of-N
+//! the kernel-backend matrix (every hot loop through every selectable
+//! scalar/SIMD table, with a bytes/cycle roofline summary), and the
+//! snapshot-level parallel field-plane engine (1 thread vs all
+//! cores; byte-identity across budgets and backends is enforced by
+//! `tests/parallel_determinism.rs` / `tests/backend_equivalence.rs`,
+//! not re-checked here). Uses min-of-N
 //! timing (robust on a noisy 1-core box). Besides the usual CSV, the
 //! engine rows land in a machine-readable `BENCH_hotpath.json` (codec,
 //! threads, MB/s) so later changes have a perf trajectory to compare
@@ -17,10 +20,11 @@ use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::DatasetKind;
 use nblc::exec::ExecCtx;
+use nblc::kernels::Kernels;
 use nblc::model::quant::{LatticeQuantizer, Predictor};
 use nblc::quality::{Quality, SnapshotStats};
-use nblc::rindex::morton::interleave3;
-use nblc::rindex::sort::sort_perm;
+use nblc::rindex::morton::{interleave3, interleave_fields_with, quantize_uniform_with};
+use nblc::rindex::sort::{segmented_sort_perm_with, sort_perm};
 use nblc::snapshot::FieldCompressor;
 use nblc::util::bits::{BitReader, BitWriter};
 use nblc::util::rng::Pcg64;
@@ -43,6 +47,8 @@ fn bench_scaling(
     mut work: impl FnMut(&ExecCtx),
 ) {
     let budgets = if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
+    // (Scaling rows run on the selected kernel backend; the per-backend
+    // matrix below isolates the kernel contribution at threads=1.)
     let mut base_rate = 0.0f64;
     for &threads in &budgets {
         let ctx = ExecCtx::with_threads(threads);
@@ -59,6 +65,43 @@ fn bench_scaling(
         ]);
         json_rows.push((json_label.to_string(), threads, rate));
     }
+}
+
+/// Time one vectorized hot loop through every selectable kernel table
+/// (threads = 1, so only the instruction mix differs). One table row
+/// per backend plus a machine-readable `stage:backend` JSON row, and
+/// the raw rates are collected for the roofline summary.
+#[allow(clippy::too_many_arguments)]
+fn bench_kernel_stage(
+    table: &mut Table,
+    json_rows: &mut Vec<(String, usize, f64)>,
+    roofline: &mut Vec<(&'static str, Vec<(&'static str, f64)>)>,
+    variants: &[&'static Kernels],
+    ghz: f64,
+    name: &'static str,
+    data_mb: f64,
+    mut work: impl FnMut(&'static Kernels),
+) {
+    let mut rates = Vec::new();
+    let mut scalar_rate = 0.0f64;
+    for &kern in variants {
+        let secs = bench_min_time(0.3, 3, || work(kern));
+        let rate = data_mb / secs;
+        if kern.label == "scalar" {
+            scalar_rate = rate;
+        }
+        let speedup = if scalar_rate > 0.0 { rate / scalar_rate } else { 1.0 };
+        table.row(vec![
+            name.into(),
+            kern.label.into(),
+            format!("{rate:.1}"),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", rate / (ghz * 1e3)),
+        ]);
+        json_rows.push((format!("{name}:{}", kern.label), 1, rate));
+        rates.push((kern.label, rate));
+    }
+    roofline.push((name, rates));
 }
 
 fn main() {
@@ -292,6 +335,111 @@ fn main() {
 
     t.print();
     t.write_csv("hotpath").unwrap();
+
+    // Kernel-backend matrix: the four vectorized hot loops (quantize
+    // round/check, Huffman pair-table emit, Morton key build, radix
+    // sort) timed through every table the host can select. Bytes are
+    // backend-invariant (tests/backend_equivalence.rs); only throughput
+    // may differ. The bytes/cycle column and the roofline summary put
+    // the speedups on an absolute scale — set NBLC_CPU_GHZ to your
+    // actual clock (default 3.0) for honest numbers.
+    let ghz: f64 = std::env::var("NBLC_CPU_GHZ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    let variants = Kernels::variants();
+    let mut kern_table = Table::new(
+        &format!(
+            "Kernel backends (selected: {}, {} available, B/cycle at {ghz:.1} GHz)",
+            nblc::kernels::active().label,
+            variants.len()
+        ),
+        &["Kernel", "Backend", "MB/s", "Speedup", "B/cycle"],
+    );
+    let mut roofline: Vec<(&'static str, Vec<(&'static str, f64)>)> = Vec::new();
+    bench_kernel_stage(
+        &mut kern_table,
+        &mut json_rows,
+        &mut roofline,
+        &variants,
+        ghz,
+        "quantize",
+        mb,
+        |kern| {
+            LatticeQuantizer::quantize_field_into_with(
+                kern,
+                eb,
+                field,
+                Predictor::LastValue,
+                Vec::new(),
+            )
+            .unwrap();
+        },
+    );
+    bench_kernel_stage(
+        &mut kern_table,
+        &mut json_rows,
+        &mut roofline,
+        &variants,
+        ghz,
+        "huffman_encode",
+        sym_mb,
+        |kern| {
+            let mut w = BitWriter::with_capacity(symbols.len() / 2);
+            enc.encode_slice_with(kern, &mut w, &symbols);
+            w.finish();
+        },
+    );
+    let coord_mb = (n * 3 * 4) as f64 / 1e6;
+    bench_kernel_stage(
+        &mut kern_table,
+        &mut json_rows,
+        &mut roofline,
+        &variants,
+        ghz,
+        "morton_key",
+        coord_mb,
+        |kern| {
+            let qx = quantize_uniform_with(kern, &s.fields[0], 16);
+            let qy = quantize_uniform_with(kern, &s.fields[1], 16);
+            let qz = quantize_uniform_with(kern, &s.fields[2], 16);
+            interleave_fields_with(kern, &[&qx, &qy, &qz], 16);
+        },
+    );
+    let key_mb = (n * 8) as f64 / 1e6;
+    bench_kernel_stage(
+        &mut kern_table,
+        &mut json_rows,
+        &mut roofline,
+        &variants,
+        ghz,
+        "radix_sort",
+        key_mb,
+        |kern| {
+            segmented_sort_perm_with(kern, &keys, 0, 0);
+        },
+    );
+    kern_table.print();
+    kern_table.write_csv("hotpath_kernels").unwrap();
+    println!("Roofline @ {ghz:.2} GHz (override with NBLC_CPU_GHZ):");
+    for (name, rates) in &roofline {
+        let scalar = rates
+            .iter()
+            .find(|(l, _)| *l == "scalar")
+            .map(|&(_, r)| r)
+            .unwrap_or(0.0);
+        let (best_label, best) = rates
+            .iter()
+            .filter(|(l, _)| *l != "scalar")
+            .fold(("scalar", scalar), |acc, &(l, r)| if r > acc.1 { (l, r) } else { acc });
+        println!(
+            "  {name:<15} scalar {:5.2} B/c -> {best_label} {:5.2} B/c ({:.2}x)",
+            scalar / (ghz * 1e3),
+            best / (ghz * 1e3),
+            if scalar > 0.0 { best / scalar } else { 1.0 },
+        );
+    }
+    println!();
 
     // Snapshot-level parallel engine: whole-snapshot compress at 1
     // thread vs all cores, per paper mode. Bytes must not depend on the

@@ -2,9 +2,8 @@
 //! workload — the paper's headline use case.
 //!
 //! Layers exercised:
-//!   L1/L2  AOT Pallas quantization kernels, executed via PJRT when
-//!          `artifacts/` is present (falls back to the native quantizer
-//!          with a notice otherwise);
+//!   L1     the kernel backend (scalar or SIMD, runtime-detected) on
+//!          the quantize / entropy / key-build hot loops;
 //!   L3     scheduler routing (par.V-C), sharded in-situ pipeline with
 //!          bounded-queue backpressure, GPFS-model sink;
 //!   +      decompression + per-element bound verification, and the
@@ -16,15 +15,13 @@
 
 use nblc::compressors::sz::Sz;
 use nblc::compressors::{registry, Mode};
-use nblc::coordinator::pipeline::{run_insitu, CompressorFactory, InsituConfig, Sink};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
 use nblc::coordinator::{choose_compressor, GpfsModel};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::quality::Quality;
-use nblc::runtime::quantizer::SzPjrt;
-use nblc::snapshot::{verify_bounds, PerField, PerFieldSeq, SnapshotCompressor};
+use nblc::snapshot::{verify_bounds, PerField, SnapshotCompressor};
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
-use std::sync::Arc;
 
 fn main() {
     let n: usize = std::env::args()
@@ -54,22 +51,13 @@ fn main() {
         mode == Mode::BestSpeed
     );
 
-    // Pipeline with the PJRT-backed quantizer when artifacts exist.
-    let use_pjrt = nblc::runtime::Runtime::load_default().is_some();
-    let factory: CompressorFactory = if use_pjrt {
-        println!("[3/5] PJRT runtime: artifacts loaded — L1 Pallas kernels on the hot path");
-        Arc::new(|| {
-            let rt = Arc::new(nblc::runtime::Runtime::load_default().expect("artifacts vanished"));
-            // PJRT handles are thread-affine: sequential per-field adapter.
-            Box::new(PerFieldSeq(SzPjrt::lv(rt))) as Box<dyn SnapshotCompressor>
-        })
-    } else {
-        println!("[3/5] PJRT runtime: artifacts NOT built — native quantizer fallback");
-        registry::factory(&Mode::BestSpeed.spec()).expect("mode spec is registry-valid")
-    };
+    println!(
+        "[3/5] kernel backend: {} (NBLC_SIMD={} resolves here; bytes are backend-invariant)",
+        nblc::kernels::active().label,
+        nblc::kernels::mode().name(),
+    );
+    let factory = registry::factory(&Mode::BestSpeed.spec()).expect("mode spec is registry-valid");
 
-    // Shard size should cover the AOT block (2^18 elements) so PJRT
-    // executions are not dominated by tail padding.
     let shards = (n / (1 << 18)).max(1);
     let sim_procs = 1024;
     let report = run_insitu(
@@ -98,10 +86,8 @@ fn main() {
     );
 
     // Verify: recompress + decompress one pass over the whole snapshot
-    // through the same (native-decodable) streams; also measures the
-    // native single-core rate used for the cluster projection (the
-    // interpret-mode Pallas kernel on CPU is a correctness vehicle, not
-    // a performance proxy — DESIGN.md par.Hardware-Adaptation).
+    // through the same streams; also measures the single-core rate used
+    // for the cluster projection.
     let comp = PerField(Sz::lv());
     let t_native = Timer::start();
     let bundle = comp.compress(&snap, &quality).expect("compress");

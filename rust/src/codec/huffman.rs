@@ -21,6 +21,7 @@
 //! length-limiting pass.
 
 use crate::error::{Error, Result};
+use crate::kernels::Kernels;
 use crate::util::bits::{pack_pair, BitReader, BitWriter};
 use crate::util::varint::{get_uvarint, put_uvarint};
 
@@ -190,11 +191,15 @@ impl HuffmanEncoder {
     /// Byte-identical to calling [`Self::put`] per symbol; the
     /// accumulator stays in registers for the whole run.
     pub fn encode_slice(&self, w: &mut BitWriter, syms: &[u32]) {
-        w.put_pairs(syms.iter().map(|&s| {
-            let p = self.pairs[s as usize];
-            debug_assert!(p & 63 != 0, "encoding symbol {s} with zero count");
-            p
-        }));
+        self.encode_slice_with(crate::kernels::active(), w, syms);
+    }
+
+    /// [`Self::encode_slice`] through an explicit kernel backend: the
+    /// backend gathers `(code,len)` pairs (eight symbols per block on
+    /// the SIMD tables) and drains them through the writer's 64-bit
+    /// accumulator. Bytes are identical for every backend.
+    pub fn encode_slice_with(&self, kern: &Kernels, w: &mut BitWriter, syms: &[u32]) {
+        (kern.encode_pairs)(syms, &self.pairs, w);
     }
 
     /// Total encoded size in bits for the given counts (exact).
@@ -450,10 +455,14 @@ pub fn deserialize_lengths(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
 
 /// Convenience: Huffman-encode a symbol stream into `(table bytes, payload bytes)`.
 pub fn encode_block(symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
+    encode_block_with(crate::kernels::active(), symbols, alphabet)
+}
+
+/// [`encode_block`] through an explicit kernel backend (histogram and
+/// bulk pair encode both dispatch; output bytes are backend-invariant).
+pub fn encode_block_with(kern: &Kernels, symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
     let mut counts = vec![0u64; alphabet];
-    for &s in symbols {
-        counts[s as usize] += 1;
-    }
+    (kern.histogram_u64)(symbols, &mut counts);
     let enc = HuffmanEncoder::from_counts(&counts)?;
     let mut out = Vec::new();
     serialize_lengths(enc.lengths(), &mut out);
@@ -465,7 +474,7 @@ pub fn encode_block(symbols: &[u32], alphabet: usize) -> Result<Vec<u8>> {
         return Ok(out);
     }
     let mut w = BitWriter::with_capacity(symbols.len() / 2);
-    enc.encode_slice(&mut w, symbols);
+    enc.encode_slice_with(kern, &mut w, symbols);
     let payload = w.finish();
     put_uvarint(&mut out, payload.len() as u64);
     out.extend_from_slice(&payload);

@@ -92,8 +92,7 @@ pub struct SzConfig {
     pub radius: u32,
     /// Optional entropy-gated LZ pass over the payload (SZ's gzip
     /// stage). Off by default: the Huffman stage is already near
-    /// entropy on quantization codes, and the rate cost is large
-    /// (ablation bench `ablation_runtime`).
+    /// entropy on quantization codes, and the rate cost is large.
     pub lz: LzMode,
 }
 
@@ -164,14 +163,13 @@ impl Sz {
         }
     }
 
-    /// Compress pre-computed quantization codes (the entry point used by
-    /// the PJRT-backed pipeline, where the L1 kernel already produced
-    /// the codes). The stream records the *effective* lattice step
-    /// (`q.eb_eff`), which is all the decoder needs. The symbol scratch
-    /// is thread-local, so repeated calls on a long-lived thread
-    /// (sequential loops, the PJRT path, pipeline workers) reuse one
-    /// allocation; ctx-pooled callers use [`Self::compress_codes_into`]
-    /// directly.
+    /// Compress pre-computed quantization codes (the entry point for
+    /// callers that already produced the codes elsewhere). The stream
+    /// records the *effective* lattice step (`q.eb_eff`), which is all
+    /// the decoder needs. The symbol scratch is thread-local, so
+    /// repeated calls on a long-lived thread (sequential loops,
+    /// pipeline workers) reuse one allocation; ctx-pooled callers use
+    /// [`Self::compress_codes_into`] directly.
     pub fn compress_codes(&self, q: &QuantCodes) -> Result<Vec<u8>> {
         thread_local! {
             static SYMBOLS: std::cell::RefCell<Vec<u32>> =
@@ -199,22 +197,27 @@ impl Sz {
     }
 
     /// Core encode: symbol build, Huffman stage, optional entropy-gated
-    /// LZ pass. `ctx` only feeds scratch pools (the LZ search arrays);
-    /// output bytes are identical with or without it.
+    /// LZ pass. `ctx` feeds scratch pools (the LZ search arrays) and
+    /// picks the kernel backend; output bytes are identical with or
+    /// without it, and across backends.
     fn compress_codes_ctx(
         &self,
         q: &QuantCodes,
         symbols: &mut Vec<u32>,
         ctx: Option<&ExecCtx>,
     ) -> Result<Vec<u8>> {
+        let kern = ctx.map(ExecCtx::kernels).unwrap_or_else(crate::kernels::active);
         let n = q.codes.len();
         let radius = self.cfg.radius as i64;
         let esc_sym = (2 * radius) as u32;
         let alphabet = esc_sym as usize + 1;
 
-        // Single pass over the codes: symbol stream, symbol counts, and
-        // escape payload all come out of one walk (the radius checks run
-        // once per element instead of once per pass).
+        // Symbol build pass: symbol stream and escape payload come out
+        // of one walk over the codes; the histogram runs afterwards as
+        // a dense kernel over the finished symbol stream (the split
+        // count tables vectorize, and u64 adds are exact, so counts —
+        // and therefore the Huffman table and every output byte — are
+        // backend-invariant).
         let mut counts = vec![0u64; alphabet];
         let mut escapes: Vec<u8> = Vec::new();
         let mut n_escapes = 0u64;
@@ -239,9 +242,9 @@ impl Sz {
                 n_escapes += 1;
                 esc_sym
             };
-            counts[sym as usize] += 1;
             symbols.push(sym);
         }
+        (kern.histogram_u64)(symbols, &mut counts);
 
         // Entropy stage: encode the prepared symbol stream (byte-format
         // identical to `huffman::encode_block`) through the batched
@@ -255,7 +258,7 @@ impl Sz {
             put_uvarint(&mut payload, 0);
         } else {
             let mut w = crate::util::bits::BitWriter::with_capacity(n / 2);
-            enc.encode_slice(&mut w, symbols);
+            enc.encode_slice_with(kern, &mut w, symbols);
             let bits = w.finish();
             put_uvarint(&mut payload, bits.len() as u64);
             payload.extend_from_slice(&bits);
@@ -312,6 +315,7 @@ impl Sz {
         eb_abs: f64,
     ) -> Result<Vec<u8>> {
         let q = LatticeQuantizer::quantize_field_gathered_trusted(
+            ctx.kernels(),
             eb_abs,
             xs,
             perm,
@@ -342,7 +346,8 @@ impl FieldCompressor for Sz {
     }
 
     fn compress_pooled(&self, ctx: &ExecCtx, xs: &[f32], eb_abs: f64) -> Result<Vec<u8>> {
-        let q = LatticeQuantizer::quantize_field_into(
+        let q = LatticeQuantizer::quantize_field_into_with(
+            ctx.kernels(),
             eb_abs,
             xs,
             self.cfg.predictor,

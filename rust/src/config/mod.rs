@@ -10,7 +10,7 @@
 //! shards = 64
 //! eb_rel = 1e-4
 //! mode = "best_speed"
-//! use_pjrt = false
+//! simd = "auto"
 //! ```
 
 pub mod parse;

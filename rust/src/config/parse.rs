@@ -177,7 +177,7 @@ mod tests {
             shards = 64
             eb_rel = 1e-4
             mode = "best_speed"
-            use_pjrt = false
+            rebalance = false
             big = 1_000_000
             "#,
         )
@@ -188,7 +188,7 @@ mod tests {
             doc.get("pipeline", "mode").unwrap().as_str(),
             Some("best_speed")
         );
-        assert_eq!(doc.get("pipeline", "use_pjrt").unwrap().as_bool(), Some(false));
+        assert_eq!(doc.get("pipeline", "rebalance").unwrap().as_bool(), Some(false));
         assert_eq!(doc.get("pipeline", "big").unwrap().as_int(), Some(1_000_000));
     }
 

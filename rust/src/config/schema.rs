@@ -33,8 +33,9 @@ pub struct PipelineSettings {
     pub method: Option<String>,
     /// Let the scheduler override R-index modes on orderly data (§V-C).
     pub auto_route: bool,
-    /// Use the PJRT-backed quantizer when artifacts are present.
-    pub use_pjrt: bool,
+    /// Kernel backend policy: `"off" | "auto" | "force"` (see
+    /// [`crate::kernels::SimdMode`]). Bytes are backend-invariant.
+    pub simd: String,
     /// Simulated processes for the PFS model sink (0 = null sink).
     pub sim_procs: usize,
     /// Write a sharded, seekable v3 `.nblc` archive to this path
@@ -59,7 +60,7 @@ impl Default for PipelineSettings {
             mode: Mode::BestSpeed,
             method: None,
             auto_route: true,
-            use_pjrt: false,
+            simd: "auto".into(),
             sim_procs: 0,
             output: None,
             rebalance: false,
@@ -74,7 +75,7 @@ impl PipelineSettings {
         let sec = "pipeline";
         const KNOWN: [&str; 15] = [
             "dataset", "particles", "shards", "workers", "threads", "queue_depth",
-            "eb_rel", "quality", "mode", "method", "auto_route", "use_pjrt",
+            "eb_rel", "quality", "mode", "method", "auto_route", "simd",
             "sim_procs", "output", "rebalance",
         ];
         for key in doc.keys(sec) {
@@ -164,10 +165,16 @@ impl PipelineSettings {
                 .as_bool()
                 .ok_or_else(|| Error::Config("'auto_route' must be a boolean".into()))?;
         }
-        if let Some(v) = doc.get(sec, "use_pjrt") {
-            s.use_pjrt = v
-                .as_bool()
-                .ok_or_else(|| Error::Config("'use_pjrt' must be a boolean".into()))?;
+        if let Some(v) = doc.get(sec, "simd") {
+            let val = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'simd' must be a string".into()))?;
+            if crate::kernels::SimdMode::parse(val).is_none() {
+                return Err(Error::Config(format!(
+                    "'simd' must be off|auto|force, got '{val}'"
+                )));
+            }
+            s.simd = val.to_string();
         }
         if let Some(v) = doc.get(sec, "output") {
             let path = v
@@ -297,7 +304,7 @@ mod tests {
             eb_rel = 1e-3
             mode = "best_compression"
             auto_route = false
-            use_pjrt = true
+            simd = "force"
             sim_procs = 1024
             output = "out.nblc"
             rebalance = true
@@ -311,7 +318,7 @@ mod tests {
         assert_eq!(s.quality, Quality::rel(1e-3), "eb_rel aliases a uniform rel quality");
         assert_eq!(s.mode, Mode::BestCompression);
         assert!(!s.auto_route);
-        assert!(s.use_pjrt);
+        assert_eq!(s.simd, "force");
         assert_eq!(s.sim_procs, 1024);
         assert_eq!(s.output.as_deref(), Some("out.nblc"));
         assert!(s.rebalance);
@@ -396,6 +403,9 @@ mod tests {
             "[pipeline]\nquality = \"warp\"\n",
             "[pipeline]\nquality = 3\n",
             "[pipeline]\nquality = \"rel:1e-4\"\neb_rel = 1e-4\n",
+            "[pipeline]\nsimd = \"fast\"\n",
+            "[pipeline]\nsimd = 1\n",
+            "[pipeline]\nuse_pjrt = true\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

@@ -1,6 +1,6 @@
 //! Per-rank work unit: one shard of the snapshot, compressed in place
 //! by a rank-local compressor instance (compressors are not shared
-//! across threads — PJRT handles are thread-affine).
+//! across threads — they are not required to be `Send + Sync`).
 
 use crate::error::Result;
 use crate::exec::ExecCtx;

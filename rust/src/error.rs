@@ -23,9 +23,6 @@ pub enum Error {
     /// Configuration file problems.
     Config(String),
 
-    /// PJRT / XLA runtime problems.
-    Runtime(String),
-
     /// Coordinator / pipeline problems.
     Pipeline(String),
 
@@ -46,7 +43,6 @@ impl fmt::Display for Error {
                 "error bound violated: index {index}, |err|={err:.3e} > eb={eb:.3e}"
             ),
             Error::Config(msg) => write!(f, "config error: {msg}"),
-            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
         }

@@ -27,6 +27,7 @@
 //! return it, so a six-field compression reuses a handful of
 //! allocations instead of making one per field.
 
+use crate::kernels::Kernels;
 use crate::util::threadpool::par_map;
 use std::sync::{Arc, Mutex};
 
@@ -74,6 +75,10 @@ fn pool_put<T>(pool: &Mutex<Vec<Vec<T>>>, mut buf: Vec<T>) {
 pub struct ExecCtx {
     threads: usize,
     scratch: Arc<Scratch>,
+    /// Kernel backend every hot loop under this context dispatches
+    /// through (see [`crate::kernels`]). Output bytes are identical
+    /// for every table, so this is a pure scheduling choice.
+    kernels: &'static Kernels,
 }
 
 impl Default for ExecCtx {
@@ -104,6 +109,7 @@ impl ExecCtx {
         ExecCtx {
             threads: threads.clamp(1, cap),
             scratch: Arc::new(Scratch::default()),
+            kernels: crate::kernels::active(),
         }
     }
 
@@ -133,6 +139,19 @@ impl ExecCtx {
     /// The thread budget.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The kernel backend this context dispatches through.
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
+    }
+
+    /// Replace the kernel backend (tests, the `--simd` CLI knob, and
+    /// benches sweep backends this way; everyone else inherits
+    /// [`crate::kernels::active`]).
+    pub fn with_kernels(mut self, kernels: &'static Kernels) -> Self {
+        self.kernels = kernels;
+        self
     }
 
     /// Order-preserving parallel map over `items` under this context's
@@ -217,6 +236,16 @@ mod tests {
         // Clones share the scratch pool.
         clone.put_u32(Vec::with_capacity(64));
         assert!(ctx.take_u32().capacity() >= 64);
+    }
+
+    #[test]
+    fn kernels_ride_on_the_context() {
+        let ctx = ExecCtx::sequential();
+        assert!(!ctx.kernels().label.is_empty());
+        let ctx = ctx.with_kernels(Kernels::scalar());
+        assert_eq!(ctx.kernels().label, "scalar");
+        // Clones carry the override.
+        assert_eq!(ctx.clone().kernels().label, "scalar");
     }
 
     #[test]

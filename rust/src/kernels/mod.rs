@@ -1,0 +1,413 @@
+//! Kernel backends for the engine's three hottest inner loops —
+//! quantization (round/check), entropy coding (histogram + pair-table
+//! encode), and R-index key building (fixed-point coords, Morton
+//! interleave, radix-count) — behind a vtable selected once at startup.
+//!
+//! Two backends ship:
+//!
+//! * **scalar** — the straight-line reference loops (always available);
+//! * **simd** — 8-lane unrolled inner loops shaped for the
+//!   auto-vectorizer, plus `std::arch` AVX2 intrinsics for the Morton
+//!   bit-interleave on `x86_64` when the CPU reports AVX2 at runtime.
+//!
+//! Selection happens via [`active`] (env + CLI override) or an explicit
+//! [`select`]; the chosen table rides on
+//! [`ExecCtx`](crate::exec::ExecCtx) so every compressor picks it up
+//! without signature churn. Dispatch is feature-gated at *selection*
+//! time: a table containing AVX2 code is only ever returned when
+//! `is_x86_feature_detected!("avx2")` is true, so unsupported
+//! instructions never execute.
+//!
+//! **Hard invariant (test-enforced):** compressed bytes are
+//! bit-identical across backends, exactly as they are across thread
+//! counts. Every SIMD kernel performs the *same per-lane arithmetic*
+//! as its scalar twin — same f64 rounding, same saturating casts, same
+//! exact-integer bit shuffles — so lane order is the only thing that
+//! changes, and none of these loops is order-sensitive. Notably the
+//! quantizer keeps Rust's `f64::round` (half-away-from-zero) in every
+//! backend; hardware rounding intrinsics round half-to-even and are
+//! therefore banned from this module's float paths.
+//!
+//! Knobs: `NBLC_SIMD=off|auto|force` in the environment, or `--simd`
+//! on the CLI / `simd = "..."` in `[pipeline]` config (which call
+//! [`set_mode`] and take precedence over the environment).
+
+use crate::util::bits::BitWriter;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+pub mod scalar;
+pub mod simd;
+
+/// Which implementation family a [`Kernels`] table belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Reference straight-line loops.
+    Scalar,
+    /// 8-lane / intrinsic loops (bit-identical output).
+    Simd,
+}
+
+/// Backend-selection policy (the `NBLC_SIMD` / `--simd` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Always the scalar reference loops.
+    Off,
+    /// Best table the running CPU supports (AVX2 where detected,
+    /// portable 8-lane on aarch64, scalar elsewhere).
+    Auto,
+    /// The SIMD-shaped loops even on CPUs where `Auto` would stay
+    /// scalar (still never an undetected instruction set: the AVX2
+    /// table requires detection even under `Force`).
+    Force,
+}
+
+impl SimdMode {
+    /// Parse a knob value (`off|auto|force`).
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(SimdMode::Off),
+            "auto" => Some(SimdMode::Auto),
+            "force" => Some(SimdMode::Force),
+            _ => None,
+        }
+    }
+
+    /// Knob-syntax name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::Auto => "auto",
+            SimdMode::Force => "force",
+        }
+    }
+}
+
+/// The kernel vtable: one function pointer per vectorized hot loop.
+/// Tables are `'static`; [`ExecCtx`](crate::exec::ExecCtx) carries a
+/// reference, so cloning a context never copies the table.
+///
+/// Every entry is a pure function of its arguments (no hidden state),
+/// and every backend's entry computes identical results — callers may
+/// treat the choice of table as a pure scheduling decision.
+pub struct Kernels {
+    /// Implementation family.
+    pub backend: Backend,
+    /// Human-readable backend name (`scalar`, `simd`, `simd+avx2`) —
+    /// what `nblc inspect` and the pipeline log report.
+    pub label: &'static str,
+    /// Lattice rounding, the quantizer's pass A over a gathered chunk:
+    /// `out[i] = ((xs[i] as f64 - anchor64) * inv_step).round() as i64`.
+    pub quantize_round: fn(xs: &[f32], anchor64: f64, inv_step: f64, out: &mut [i64]),
+    /// The quantizer's pass-C violation flag, reduced with a lane-OR:
+    /// returns true iff any element's lattice reconstruction
+    /// `(anchor64 + 2*eb_eff*k) as f32` misses `xs[i]` by more than
+    /// `eb_user`. (NaN inputs compare false, exactly like the scalar
+    /// reference: they are reconstructed as lattice points, not
+    /// exceptions.)
+    pub quantize_check: fn(xs: &[f32], ks: &[i64], anchor64: f64, eb_eff: f64, eb_user: f64) -> bool,
+    /// Symbol histogram feeding Huffman tree build: `counts[s] += 1`
+    /// for every `s` in `syms`. `counts` must already be sized to the
+    /// alphabet (entries are added to, not reset).
+    pub histogram_u64: fn(syms: &[u32], counts: &mut [u64]),
+    /// Bulk Huffman encode through the packed `(code,len)` pair table
+    /// (see [`crate::util::bits::pack_pair`]): gather `pairs[s]` per
+    /// symbol and drain through [`BitWriter::put_pairs`]. Byte-identical
+    /// to per-symbol puts.
+    pub encode_pairs: fn(syms: &[u32], pairs: &[u64], w: &mut BitWriter),
+    /// 3-way Morton interleave of `<= 21`-bit lattice coordinates
+    /// (`out[i] = interleave3(xs[i], ys[i], zs[i])`). All-integer bit
+    /// shuffling — exact in every backend.
+    pub morton3: fn(xs: &[u32], ys: &[u32], zs: &[u32], out: &mut [u64]),
+    /// Fixed-point lattice coordinates from floats (the R-index /
+    /// CPC2000 uniform quantization inner loop):
+    /// `out[i] = clamp(((xs[i] - lo) as f64 * scale) as i64, 0, max_q)`.
+    /// Note the `xs[i] - lo` subtraction is f32, as in the reference.
+    pub fixed_point: fn(xs: &[f32], lo: f32, scale: f64, max_q: u32, out: &mut [u32]),
+    /// Radix-sort digit count over a permutation slice:
+    /// `counts[(keys[p] & mask) >> shift & 0xFF] += 1` for `p` in
+    /// `perm`. (The scatter pass stays scalar in every backend: it is
+    /// a serial walk through the `starts` cursors and must stay stable.)
+    pub radix_count: fn(keys: &[u64], mask: u64, shift: u32, perm: &[u32], counts: &mut [usize; 256]),
+}
+
+impl Kernels {
+    /// The scalar reference table (always available).
+    pub fn scalar() -> &'static Kernels {
+        &scalar::SCALAR
+    }
+
+    /// The best SIMD table the running CPU supports (what `force`
+    /// selects): AVX2 where detected, portable 8-lane otherwise.
+    pub fn simd() -> &'static Kernels {
+        force_table()
+    }
+
+    /// Every table selectable on this machine (for equivalence tests
+    /// and benches): scalar, portable SIMD, and — when the CPU reports
+    /// AVX2 — the AVX2 table.
+    pub fn variants() -> Vec<&'static Kernels> {
+        let mut v: Vec<&'static Kernels> = vec![&scalar::SCALAR, &simd::SIMD];
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            v.push(&simd::SIMD_AVX2);
+        }
+        v
+    }
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels")
+            .field("backend", &self.backend)
+            .field("label", &self.label)
+            .finish()
+    }
+}
+
+/// CLI/config override: 0 = none (use the environment), else SimdMode.
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Install a process-wide mode override (the `--simd` flag / `simd`
+/// config key). Takes precedence over `NBLC_SIMD`.
+pub fn set_mode(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Off => 1,
+        SimdMode::Auto => 2,
+        SimdMode::Force => 3,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+fn env_mode() -> SimdMode {
+    static ENV: OnceLock<SimdMode> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("NBLC_SIMD")
+            .ok()
+            .and_then(|s| SimdMode::parse(&s))
+            .unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// The effective selection policy: CLI/config override if set, else
+/// `NBLC_SIMD` (unknown values fall back to `auto`), else `auto`.
+pub fn mode() -> SimdMode {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdMode::Off,
+        2 => SimdMode::Auto,
+        3 => SimdMode::Force,
+        _ => env_mode(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn auto_table() -> &'static Kernels {
+    if is_x86_feature_detected!("avx2") {
+        &simd::SIMD_AVX2
+    } else {
+        &scalar::SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn auto_table() -> &'static Kernels {
+    // NEON is baseline on aarch64; the portable 8-lane loops
+    // auto-vectorize to it.
+    &simd::SIMD
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn auto_table() -> &'static Kernels {
+    &scalar::SCALAR
+}
+
+#[cfg(target_arch = "x86_64")]
+fn force_table() -> &'static Kernels {
+    if is_x86_feature_detected!("avx2") {
+        &simd::SIMD_AVX2
+    } else {
+        &simd::SIMD
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn force_table() -> &'static Kernels {
+    &simd::SIMD
+}
+
+/// Resolve a policy to a concrete table. Feature detection happens
+/// here, never inside a kernel: a table with arch-specific code is
+/// only returned when the CPU reports the feature.
+pub fn select(mode: SimdMode) -> &'static Kernels {
+    match mode {
+        SimdMode::Off => &scalar::SCALAR,
+        SimdMode::Auto => auto_table(),
+        SimdMode::Force => force_table(),
+    }
+}
+
+/// The table new [`ExecCtx`](crate::exec::ExecCtx) instances carry:
+/// [`select`] applied to the effective [`mode`].
+pub fn active() -> &'static Kernels {
+    select(mode())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::BitWriter;
+    use crate::util::rng::Pcg64;
+
+    fn field(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() as f32) * 50.0).collect()
+    }
+
+    #[test]
+    fn selection_is_safe_and_labelled() {
+        for mode in [SimdMode::Off, SimdMode::Auto, SimdMode::Force] {
+            let k = select(mode);
+            assert!(!k.label.is_empty());
+            // Off is always the scalar reference.
+            if mode == SimdMode::Off {
+                assert_eq!(k.backend, Backend::Scalar);
+            }
+        }
+        assert_eq!(Kernels::scalar().backend, Backend::Scalar);
+        assert_eq!(Kernels::simd().backend, Backend::Simd);
+        let variants = Kernels::variants();
+        assert!(variants.len() >= 2);
+        let labels: Vec<_> = variants.iter().map(|k| k.label).collect();
+        assert!(labels.contains(&"scalar"));
+    }
+
+    #[test]
+    fn mode_parsing_and_override() {
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse(" AUTO "), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("force"), Some(SimdMode::Force));
+        assert_eq!(SimdMode::parse("fast"), None);
+        for m in [SimdMode::Off, SimdMode::Auto, SimdMode::Force] {
+            assert_eq!(SimdMode::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn quantize_round_and_check_match_across_backends() {
+        let mut rng = Pcg64::seeded(301);
+        for n in [0usize, 1, 7, 8, 9, 511, 513] {
+            let mut xs = field(&mut rng, n);
+            // Adversarial lanes: NaN, infinities, denormals, huge.
+            if n > 8 {
+                xs[1] = f32::NAN;
+                xs[2] = f32::INFINITY;
+                xs[3] = f32::NEG_INFINITY;
+                xs[4] = f32::MIN_POSITIVE / 2.0;
+                xs[5] = 3e37;
+            }
+            let (anchor64, inv_step) = (0.37f64, 1.0 / 2e-4);
+            let reference: Vec<i64> = {
+                let mut out = vec![0i64; n];
+                (scalar::SCALAR.quantize_round)(&xs, anchor64, inv_step, &mut out);
+                out
+            };
+            for k in Kernels::variants() {
+                let mut out = vec![0i64; n];
+                (k.quantize_round)(&xs, anchor64, inv_step, &mut out);
+                assert_eq!(out, reference, "quantize_round {}", k.label);
+                let want =
+                    (scalar::SCALAR.quantize_check)(&xs, &reference, anchor64, 1e-4, 1e-4);
+                let got = (k.quantize_check)(&xs, &reference, anchor64, 1e-4, 1e-4);
+                assert_eq!(got, want, "quantize_check {}", k.label);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_matches_across_backends() {
+        let mut rng = Pcg64::seeded(302);
+        for (n, alphabet) in [(0usize, 4usize), (3, 4), (1000, 7), (20_000, 257)] {
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(alphabet as u64) as u32).collect();
+            let mut reference = vec![0u64; alphabet];
+            (scalar::SCALAR.histogram_u64)(&syms, &mut reference);
+            assert_eq!(reference.iter().sum::<u64>(), n as u64);
+            for k in Kernels::variants() {
+                let mut counts = vec![0u64; alphabet];
+                (k.histogram_u64)(&syms, &mut counts);
+                assert_eq!(counts, reference, "histogram {}", k.label);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_pairs_matches_across_backends() {
+        // A tiny synthetic pair table: symbol s -> code s with length
+        // (s % 13) + 1 (valid pack_pair inputs).
+        let pairs: Vec<u64> = (0..64u32)
+            .map(|s| crate::util::bits::pack_pair(s & ((1 << ((s % 13) + 1)) - 1), (s % 13) + 1))
+            .collect();
+        let mut rng = Pcg64::seeded(303);
+        for n in [0usize, 1, 7, 8, 9, 1000, 4097] {
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(64) as u32).collect();
+            let reference = {
+                let mut w = BitWriter::new();
+                (scalar::SCALAR.encode_pairs)(&syms, &pairs, &mut w);
+                w.finish()
+            };
+            for k in Kernels::variants() {
+                let mut w = BitWriter::new();
+                (k.encode_pairs)(&syms, &pairs, &mut w);
+                assert_eq!(w.finish(), reference, "encode_pairs {} n={n}", k.label);
+            }
+        }
+    }
+
+    #[test]
+    fn morton_and_fixed_point_match_across_backends() {
+        let mut rng = Pcg64::seeded(304);
+        for n in [0usize, 1, 3, 4, 5, 8, 1000, 1003] {
+            let xs: Vec<u32> = (0..n).map(|_| rng.below(1 << 21) as u32).collect();
+            let ys: Vec<u32> = (0..n).map(|_| rng.below(1 << 21) as u32).collect();
+            let zs: Vec<u32> = (0..n).map(|_| rng.below(1 << 21) as u32).collect();
+            let mut reference = vec![0u64; n];
+            (scalar::SCALAR.morton3)(&xs, &ys, &zs, &mut reference);
+            for k in Kernels::variants() {
+                let mut out = vec![0u64; n];
+                (k.morton3)(&xs, &ys, &zs, &mut out);
+                assert_eq!(out, reference, "morton3 {} n={n}", k.label);
+            }
+
+            let mut fs = field(&mut rng, n);
+            if n > 4 {
+                fs[0] = f32::NAN;
+                fs[1] = f32::INFINITY;
+                fs[2] = -1e30;
+            }
+            let mut fref = vec![0u32; n];
+            (scalar::SCALAR.fixed_point)(&fs, -3.0, 17.5, (1 << 16) - 1, &mut fref);
+            for k in Kernels::variants() {
+                let mut out = vec![0u32; n];
+                (k.fixed_point)(&fs, -3.0, 17.5, (1 << 16) - 1, &mut out);
+                assert_eq!(out, fref, "fixed_point {} n={n}", k.label);
+            }
+        }
+    }
+
+    #[test]
+    fn radix_count_matches_across_backends() {
+        let mut rng = Pcg64::seeded(305);
+        for n in [0usize, 1, 3, 4, 5, 10_000] {
+            let keys: Vec<u64> = (0..n.max(1)).map(|_| rng.next_u64()).collect();
+            let perm: Vec<u32> = (0..n as u32).collect();
+            for (mask, shift) in [(!0u64, 0u32), (!0u64 << 6, 8), (0xFF00, 8)] {
+                let mut reference = [0usize; 256];
+                (scalar::SCALAR.radix_count)(&keys, mask, shift, &perm, &mut reference);
+                assert_eq!(reference.iter().sum::<usize>(), n);
+                for k in Kernels::variants() {
+                    let mut counts = [0usize; 256];
+                    (k.radix_count)(&keys, mask, shift, &perm, &mut counts);
+                    assert_eq!(counts[..], reference[..], "radix_count {}", k.label);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! The scalar reference kernels: straight-line loops, always
+//! available, and the behavioral definition every other backend must
+//! match bit-for-bit (see the [module docs](crate::kernels)).
+
+use super::{Backend, Kernels};
+use crate::util::bits::BitWriter;
+
+pub(super) fn quantize_round(xs: &[f32], anchor64: f64, inv_step: f64, out: &mut [i64]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (k, &x) in out.iter_mut().zip(xs.iter()) {
+        *k = ((x as f64 - anchor64) * inv_step).round() as i64;
+    }
+}
+
+pub(super) fn quantize_check(
+    xs: &[f32],
+    ks: &[i64],
+    anchor64: f64,
+    eb_eff: f64,
+    eb_user: f64,
+) -> bool {
+    debug_assert_eq!(xs.len(), ks.len());
+    let mut any_bad = false;
+    for (&x, &k) in xs.iter().zip(ks.iter()) {
+        let recon = ((anchor64 + 2.0 * eb_eff * (k as f64)) as f32) as f64;
+        any_bad |= (recon - x as f64).abs() > eb_user;
+    }
+    any_bad
+}
+
+pub(super) fn histogram_u64(syms: &[u32], counts: &mut [u64]) {
+    for &s in syms {
+        counts[s as usize] += 1;
+    }
+}
+
+pub(super) fn encode_pairs(syms: &[u32], pairs: &[u64], w: &mut BitWriter) {
+    w.put_pairs(syms.iter().map(|&s| {
+        let p = pairs[s as usize];
+        debug_assert!(p & 63 != 0, "encoding symbol {s} with zero count");
+        p
+    }));
+}
+
+pub(super) fn morton3(xs: &[u32], ys: &[u32], zs: &[u32], out: &mut [u64]) {
+    debug_assert_eq!(xs.len(), out.len());
+    debug_assert_eq!(ys.len(), out.len());
+    debug_assert_eq!(zs.len(), out.len());
+    for (i, m) in out.iter_mut().enumerate() {
+        *m = crate::rindex::morton::interleave3(xs[i], ys[i], zs[i]);
+    }
+}
+
+pub(super) fn fixed_point(xs: &[f32], lo: f32, scale: f64, max_q: u32, out: &mut [u32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs.iter()) {
+        let q = (((x - lo) as f64) * scale) as i64;
+        *o = q.clamp(0, max_q as i64) as u32;
+    }
+}
+
+pub(super) fn radix_count(
+    keys: &[u64],
+    mask: u64,
+    shift: u32,
+    perm: &[u32],
+    counts: &mut [usize; 256],
+) {
+    for &i in perm {
+        let d = ((keys[i as usize] & mask) >> shift) & 0xFF;
+        counts[d as usize] += 1;
+    }
+}
+
+/// The scalar reference table.
+pub static SCALAR: Kernels = Kernels {
+    backend: Backend::Scalar,
+    label: "scalar",
+    quantize_round,
+    quantize_check,
+    histogram_u64,
+    encode_pairs,
+    morton3,
+    fixed_point,
+    radix_count,
+};

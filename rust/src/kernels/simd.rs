@@ -1,0 +1,292 @@
+//! The SIMD backend: 8-lane unrolled inner loops (fixed trip counts
+//! the auto-vectorizer turns into vector code on any target), plus an
+//! AVX2 `std::arch` Morton interleave on `x86_64`.
+//!
+//! Bit-identity discipline (see the [module docs](crate::kernels)):
+//! every loop here performs the *same per-lane arithmetic* as the
+//! scalar reference — `f64::round`, Rust's saturating float→int `as`
+//! casts, exact integer shifts — merely restructured into independent
+//! lanes. Split histogram tables are merged with exact `u64`/`usize`
+//! additions, which commute, so counts (and therefore every downstream
+//! byte) are identical. Float rounding intrinsics (`vroundpd` & co.)
+//! round half-to-even where `f64::round` rounds half-away-from-zero,
+//! so the float paths deliberately use no intrinsics at all; the AVX2
+//! table differs from the portable one only in the all-integer Morton
+//! kernel, where every operation is exact.
+
+use super::{scalar, Backend, Kernels};
+use crate::util::bits::BitWriter;
+
+/// Lanes per unrolled block in the float loops (f32x8 shape).
+const LANES: usize = 8;
+
+pub(super) fn quantize_round(xs: &[f32], anchor64: f64, inv_step: f64, out: &mut [i64]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let mut xc = xs.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (x8, o8) in (&mut xc).zip(&mut oc) {
+        for (k, &x) in o8.iter_mut().zip(x8.iter()) {
+            *k = ((x as f64 - anchor64) * inv_step).round() as i64;
+        }
+    }
+    for (k, &x) in oc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
+        *k = ((x as f64 - anchor64) * inv_step).round() as i64;
+    }
+}
+
+pub(super) fn quantize_check(
+    xs: &[f32],
+    ks: &[i64],
+    anchor64: f64,
+    eb_eff: f64,
+    eb_user: f64,
+) -> bool {
+    debug_assert_eq!(xs.len(), ks.len());
+    // Per-lane violation flags, lane-OR'd at the end. Boolean OR is
+    // exact and commutative, so the reduction order cannot matter.
+    let mut bad = [false; LANES];
+    let mut xc = xs.chunks_exact(LANES);
+    let mut kc = ks.chunks_exact(LANES);
+    for (x8, k8) in (&mut xc).zip(&mut kc) {
+        for ((b, &x), &k) in bad.iter_mut().zip(x8.iter()).zip(k8.iter()) {
+            let recon = ((anchor64 + 2.0 * eb_eff * (k as f64)) as f32) as f64;
+            *b |= (recon - x as f64).abs() > eb_user;
+        }
+    }
+    let mut any_bad = bad.iter().any(|&b| b);
+    for (&x, &k) in xc.remainder().iter().zip(kc.remainder().iter()) {
+        let recon = ((anchor64 + 2.0 * eb_eff * (k as f64)) as f32) as f64;
+        any_bad |= (recon - x as f64).abs() > eb_user;
+    }
+    any_bad
+}
+
+pub(super) fn histogram_u64(syms: &[u32], counts: &mut [u64]) {
+    // Four split count tables break the serial dependence of repeated
+    // increments on one hot counter (quantization codes concentrate on
+    // the zero symbol). The merge is exact u64 addition, so the final
+    // counts equal the scalar single-table walk. Only worth the extra
+    // table memory when the stream meaningfully outweighs the alphabet.
+    let m = counts.len();
+    if m == 0 || syms.len() < m * 4 {
+        scalar::histogram_u64(syms, counts);
+        return;
+    }
+    let mut scratch = vec![0u64; 3 * m];
+    let (t1, rest) = scratch.split_at_mut(m);
+    let (t2, t3) = rest.split_at_mut(m);
+    let mut it = syms.chunks_exact(4);
+    for c in &mut it {
+        counts[c[0] as usize] += 1;
+        t1[c[1] as usize] += 1;
+        t2[c[2] as usize] += 1;
+        t3[c[3] as usize] += 1;
+    }
+    for &s in it.remainder() {
+        counts[s as usize] += 1;
+    }
+    for ((c, &a), (&b, &d)) in counts
+        .iter_mut()
+        .zip(t1.iter())
+        .zip(t2.iter().zip(t3.iter()))
+    {
+        *c += a + b + d;
+    }
+}
+
+pub(super) fn encode_pairs(syms: &[u32], pairs: &[u64], w: &mut BitWriter) {
+    // Gather (code,len) pairs eight symbols at a time into a register
+    // block, then drain the block through the writer's bulk 64-bit
+    // accumulator. `BitWriter::put_pairs` persists its accumulator
+    // across calls, so blocked draining is byte-identical to one pass
+    // (pinned by `util::bits` tests).
+    let mut it = syms.chunks_exact(8);
+    let mut buf = [0u64; 8];
+    for c in &mut it {
+        for (b, &s) in buf.iter_mut().zip(c.iter()) {
+            let p = pairs[s as usize];
+            debug_assert!(p & 63 != 0, "encoding symbol {s} with zero count");
+            *b = p;
+        }
+        w.put_pairs(buf.iter().copied());
+    }
+    w.put_pairs(it.remainder().iter().map(|&s| {
+        let p = pairs[s as usize];
+        debug_assert!(p & 63 != 0, "encoding symbol {s} with zero count");
+        p
+    }));
+}
+
+pub(super) fn morton3(xs: &[u32], ys: &[u32], zs: &[u32], out: &mut [u64]) {
+    debug_assert_eq!(xs.len(), out.len());
+    debug_assert_eq!(ys.len(), out.len());
+    debug_assert_eq!(zs.len(), out.len());
+    let n = out.len();
+    let mut i = 0usize;
+    // Four keys per block (u64x4 shape); the spread/interleave is pure
+    // integer shift/mask work, exact in any order.
+    while i + 4 <= n {
+        for j in 0..4 {
+            out[i + j] = crate::rindex::morton::interleave3(xs[i + j], ys[i + j], zs[i + j]);
+        }
+        i += 4;
+    }
+    while i < n {
+        out[i] = crate::rindex::morton::interleave3(xs[i], ys[i], zs[i]);
+        i += 1;
+    }
+}
+
+pub(super) fn fixed_point(xs: &[f32], lo: f32, scale: f64, max_q: u32, out: &mut [u32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let mut xc = xs.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (x8, o8) in (&mut xc).zip(&mut oc) {
+        for (o, &x) in o8.iter_mut().zip(x8.iter()) {
+            let q = (((x - lo) as f64) * scale) as i64;
+            *o = q.clamp(0, max_q as i64) as u32;
+        }
+    }
+    for (o, &x) in oc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
+        let q = (((x - lo) as f64) * scale) as i64;
+        *o = q.clamp(0, max_q as i64) as u32;
+    }
+}
+
+pub(super) fn radix_count(
+    keys: &[u64],
+    mask: u64,
+    shift: u32,
+    perm: &[u32],
+    counts: &mut [usize; 256],
+) {
+    // Same split-table trick as the histogram, on the stack (256-entry
+    // digit tables). The scatter pass stays scalar in every backend:
+    // it advances 256 cursors serially and must remain stable.
+    let mut t1 = [0usize; 256];
+    let mut t2 = [0usize; 256];
+    let mut t3 = [0usize; 256];
+    let mut it = perm.chunks_exact(4);
+    for c in &mut it {
+        counts[(((keys[c[0] as usize] & mask) >> shift) & 0xFF) as usize] += 1;
+        t1[(((keys[c[1] as usize] & mask) >> shift) & 0xFF) as usize] += 1;
+        t2[(((keys[c[2] as usize] & mask) >> shift) & 0xFF) as usize] += 1;
+        t3[(((keys[c[3] as usize] & mask) >> shift) & 0xFF) as usize] += 1;
+    }
+    for &i in it.remainder() {
+        counts[(((keys[i as usize] & mask) >> shift) & 0xFF) as usize] += 1;
+    }
+    for ((c, &a), (&b, &d)) in counts
+        .iter_mut()
+        .zip(t1.iter())
+        .zip(t2.iter().zip(t3.iter()))
+    {
+        *c += a + b + d;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 Morton interleave: widen 4 u32 coordinates per axis to u64
+    //! lanes, run the exact magic-mask spread sequence from
+    //! [`crate::rindex::morton`] across all four lanes, and OR the
+    //! three axes together. Integer-only, therefore bit-exact.
+    use std::arch::x86_64::*;
+
+    /// Four-lane `spread3`: the same mask/shift sequence as the scalar
+    /// `rindex::morton::spread3`, one `u64` per lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn spread3x4(v: __m256i) -> __m256i {
+        let x = _mm256_and_si256(v, _mm256_set1_epi64x(0x1F_FFFF));
+        let x = _mm256_and_si256(
+            _mm256_or_si256(x, _mm256_slli_epi64::<32>(x)),
+            _mm256_set1_epi64x(0x1F00000000FFFF),
+        );
+        let x = _mm256_and_si256(
+            _mm256_or_si256(x, _mm256_slli_epi64::<16>(x)),
+            _mm256_set1_epi64x(0x1F0000FF0000FF),
+        );
+        let x = _mm256_and_si256(
+            _mm256_or_si256(x, _mm256_slli_epi64::<8>(x)),
+            _mm256_set1_epi64x(0x100F00F00F00F00F),
+        );
+        let x = _mm256_and_si256(
+            _mm256_or_si256(x, _mm256_slli_epi64::<4>(x)),
+            _mm256_set1_epi64x(0x10C30C30C30C30C3),
+        );
+        _mm256_and_si256(
+            _mm256_or_si256(x, _mm256_slli_epi64::<2>(x)),
+            _mm256_set1_epi64x(0x1249249249249249),
+        )
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers go through the detection-gated table) and
+    /// `xs`, `ys`, `zs` at least as long as `out`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn morton3(xs: &[u32], ys: &[u32], zs: &[u32], out: &mut [u64]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vx = _mm256_cvtepu32_epi64(_mm_loadu_si128(xs.as_ptr().add(i).cast()));
+            let vy = _mm256_cvtepu32_epi64(_mm_loadu_si128(ys.as_ptr().add(i).cast()));
+            let vz = _mm256_cvtepu32_epi64(_mm_loadu_si128(zs.as_ptr().add(i).cast()));
+            let m = _mm256_or_si256(
+                spread3x4(vx),
+                _mm256_or_si256(
+                    _mm256_slli_epi64::<1>(spread3x4(vy)),
+                    _mm256_slli_epi64::<2>(spread3x4(vz)),
+                ),
+            );
+            _mm256_storeu_si256(out.as_mut_ptr().add(i).cast(), m);
+            i += 4;
+        }
+        while i < n {
+            out[i] = crate::rindex::morton::interleave3(xs[i], ys[i], zs[i]);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn morton3_avx2(xs: &[u32], ys: &[u32], zs: &[u32], out: &mut [u64]) {
+    // Hard length checks: the intrinsic path reads 16-byte blocks and
+    // must never run off a short coordinate slice.
+    assert_eq!(xs.len(), out.len());
+    assert_eq!(ys.len(), out.len());
+    assert_eq!(zs.len(), out.len());
+    // SAFETY: this function is only ever installed in `SIMD_AVX2`,
+    // which `select`/`variants` hand out strictly behind a successful
+    // `is_x86_feature_detected!("avx2")`; lengths are checked above.
+    unsafe { avx2::morton3(xs, ys, zs, out) }
+}
+
+/// The portable SIMD table: 8-lane unrolled loops, no arch-specific
+/// instructions — safe on every CPU the binary runs on.
+pub static SIMD: Kernels = Kernels {
+    backend: Backend::Simd,
+    label: "simd",
+    quantize_round,
+    quantize_check,
+    histogram_u64,
+    encode_pairs,
+    morton3,
+    fixed_point,
+    radix_count,
+};
+
+/// The AVX2 table: identical to [`SIMD`] except for the intrinsic
+/// Morton kernel. Only ever selected behind runtime AVX2 detection.
+#[cfg(target_arch = "x86_64")]
+pub static SIMD_AVX2: Kernels = Kernels {
+    backend: Backend::Simd,
+    label: "simd+avx2",
+    quantize_round,
+    quantize_check,
+    histogram_u64,
+    encode_pairs,
+    morton3: morton3_avx2,
+    fixed_point,
+    radix_count,
+};

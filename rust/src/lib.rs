@@ -14,9 +14,10 @@
 //! * **An in-situ streaming coordinator**: sharding, bounded-queue
 //!   backpressure, worker scheduling, and a GPFS-like parallel-file-system
 //!   model for scaling studies.
-//! * **A PJRT runtime** executing the AOT-compiled JAX/Pallas
-//!   prediction+quantization kernels (`artifacts/*.hlo.txt`) from the Rust
-//!   hot path.
+//! * **A SIMD kernel backend** ([`kernels`]) for the quantize / entropy /
+//!   key-build hot loops, selected once at startup by runtime feature
+//!   detection, with compressed bytes bit-identical to the scalar
+//!   reference on every backend (`NBLC_SIMD=off|auto|force`, `--simd`).
 //! * **Benchmark harnesses** regenerating every table and figure of the
 //!   paper's evaluation section (see `benches/`).
 //!
@@ -183,6 +184,11 @@
 //! below that, thread spawn overhead dominates and `ExecCtx::sequential`
 //! (or the plain wrappers) is the right call.
 //!
+//! The same determinism contract covers the [`kernels`] backend table
+//! the context carries: scalar and SIMD kernels produce bit-identical
+//! archives, so backend selection — like the thread budget — is a pure
+//! scheduling choice (enforced by `tests/backend_equivalence.rs`).
+//!
 //! ## Serving archives
 //!
 //! `nblc serve a.nblc b.nblc` turns the read path into a long-running
@@ -212,6 +218,7 @@
 
 pub mod error;
 pub mod util;
+pub mod kernels;
 pub mod exec;
 pub mod testkit;
 pub mod codec;
@@ -224,7 +231,6 @@ pub mod compressors;
 pub mod metrics;
 pub mod config;
 pub mod cli;
-pub mod runtime;
 pub mod coordinator;
 pub mod serve;
 pub mod bench;

@@ -10,7 +10,7 @@
 //!   pipeline    run the in-situ pipeline from a config file
 //!   serve       long-running archive service daemon (LRU shard cache)
 //!   get         query a running serve daemon for a particle range
-//!   info        print dataset / artifact / runtime diagnostics
+//!   info        print dataset / kernel-backend diagnostics
 
 use nblc::cli::Args;
 use nblc::compressors::registry;
@@ -40,18 +40,19 @@ COMMANDS:
   gen         --dataset hacc|amdf --n <count> --seed <u64> --out <file>
   compress    <in.snap> <out.nblc> --method <spec> [--eb <bound>]
               [--quality <quality>|auto[:target_ratio=<x>]] [--threads N]
+              [--simd off|auto|force]
   decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
-              [--particles a..b]
+              [--particles a..b] [--simd off|auto|force]
   inspect     <in.nblc> [--verify]
   list-codecs
   analyze     <orig.snap> <recon.snap>
-  pipeline    --config <file.toml> [--threads N]
+  pipeline    --config <file.toml> [--threads N] [--simd off|auto|force]
   serve       <archive.nblc>... [--config <file.toml>] [--addr host:port]
               [--cache_mb N] [--max_inflight N] [--queue_timeout_ms N]
-              [--decode_budget_ms N] [--threads N]
+              [--decode_budget_ms N] [--threads N] [--simd off|auto|force]
   get         [<archive>] [--addr host:port] [--particles a..b]
               [--out <file.snap>] [--stats]
-  info        [--artifacts <dir>]
+  info        [--simd off|auto|force]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
 `sz_lv_rx:segment=4096`, `sz:pred=lv`, or `mode:best_tradeoff`.
@@ -80,6 +81,11 @@ the default is the NBLC_THREADS env var, else all available cores;
 pipeline defaults to 1 per worker (workers already run in parallel)
 unless the config or --threads says otherwise, with 0 = auto.
 Compressed bytes are identical at every thread count.
+
+--simd off|auto|force picks the kernel backend for the quantize /
+entropy / key-build hot loops (default: the NBLC_SIMD env var, else
+auto = runtime feature detection). Compressed bytes are bit-identical
+on every backend; `nblc info` prints what auto selects.
 
 serve holds v3 archives open behind a TCP daemon with an LRU cache of
 decoded shards and admission control: over-budget load is shed with a
@@ -159,10 +165,25 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 /// Resolve the `--threads` flag: explicit value > `NBLC_THREADS` env >
-/// available parallelism (`--threads 0` also means auto).
+/// available parallelism (`--threads 0` also means auto). Also applies
+/// the `--simd` backend choice so the context (and every ctx-less call
+/// site behind [`nblc::kernels::active`]) agrees on one table.
 fn exec_ctx(args: &Args) -> Result<ExecCtx> {
     let threads: usize = args.get_parse("threads", 0)?;
-    Ok(ExecCtx::resolve(threads))
+    let kern = simd_kernels(args)?;
+    Ok(ExecCtx::resolve(threads).with_kernels(kern))
+}
+
+/// Resolve `--simd off|auto|force` (default: the `NBLC_SIMD` env var,
+/// else auto): an explicit flag sets the process-wide mode, then the
+/// active table is returned.
+fn simd_kernels(args: &Args) -> Result<&'static nblc::kernels::Kernels> {
+    if let Some(s) = args.get("simd") {
+        let mode = nblc::kernels::SimdMode::parse(s)
+            .ok_or_else(|| Error::invalid(format!("--simd expects off|auto|force, got '{s}'")))?;
+        nblc::kernels::set_mode(mode);
+    }
+    Ok(nblc::kernels::active())
 }
 
 /// Parse a `--quality auto[:target_ratio=<x>]` value. `Some(target)`
@@ -250,7 +271,7 @@ fn fmt_bound(eb: f64) -> String {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "eb", "quality", "threads"])?;
+    args.expect_known(&["method", "eb", "quality", "threads", "simd"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: compress <in.snap> <out.nblc>"));
     };
@@ -317,7 +338,7 @@ fn parse_particles(s: &str) -> Result<(u64, u64)> {
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "threads", "particles"])?;
+    args.expect_known(&["method", "threads", "particles", "simd"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
@@ -371,6 +392,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("archive:   {input}");
     println!("format:    v{}", reader.version());
     println!("spec:      {}", idx.spec);
+    println!("kernels:   {} (decode backend; bytes are backend-invariant)", nblc::kernels::active().label);
     match &idx.quality {
         Some(q) => {
             println!("quality:   {}", q.quality);
@@ -500,12 +522,21 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    args.expect_known(&["config", "threads"])?;
+    args.expect_known(&["config", "threads", "simd"])?;
     let cfg_path = args.get_or("config", "nblc.toml");
     let doc = ConfigDoc::from_file(Path::new(&cfg_path))?;
     let mut settings = PipelineSettings::from_doc(&doc)?;
     // --threads overrides the config's per-worker budget (0 = auto).
     settings.threads = args.get_parse("threads", settings.threads)?;
+    // Kernel backend: `--simd` flag > config's `simd` key > NBLC_SIMD.
+    if args.get("simd").is_none() {
+        let mode = nblc::kernels::SimdMode::parse(&settings.simd).ok_or_else(|| {
+            Error::Config(format!("'simd' must be off|auto|force, got '{}'", settings.simd))
+        })?;
+        nblc::kernels::set_mode(mode);
+    }
+    let kern = simd_kernels(args)?;
+    println!("kernel backend: {}", kern.label);
     let kind = dataset_kind(&settings.dataset)?;
     let n = if settings.particles > 0 {
         settings.particles
@@ -626,9 +657,6 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             .unwrap_or(0);
         println!("archive: wrote sharded v3 archive to {out} ({shards_written} shards; try `nblc inspect {out}`)");
     }
-    if settings.use_pjrt {
-        println!("(note: use_pjrt requested; PJRT quantizer engages in the sz_lv path when artifacts are present)");
-    }
     Ok(())
 }
 
@@ -641,7 +669,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "queue_timeout_ms",
         "decode_budget_ms",
         "threads",
+        "simd",
     ])?;
+    // Backend selection must land before the server builds its contexts.
+    let kern = simd_kernels(args)?;
     if args.positionals.is_empty() {
         return Err(Error::invalid(
             "usage: serve <archive.nblc>... [--addr host:port]",
@@ -672,12 +703,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let paths: Vec<PathBuf> = args.positionals.iter().map(PathBuf::from).collect();
     let server = Server::bind(&cfg, &paths)?;
     println!(
-        "serving {} on {} (cache {} MiB, max_inflight {}, queue timeout {} ms)",
+        "serving {} on {} (cache {} MiB, max_inflight {}, queue timeout {} ms, kernels {})",
         server.archive_names().join(", "),
         server.local_addr(),
         cfg.cache_mb,
         cfg.max_inflight,
         cfg.queue_timeout_ms,
+        kern.label,
     );
     server.run();
     Ok(())
@@ -733,20 +765,13 @@ fn cmd_get(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    args.expect_known(&["artifacts"])?;
+    args.expect_known(&["simd"])?;
     println!("nblc {}", env!("CARGO_PKG_VERSION"));
-    let dir = args
-        .get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(nblc::runtime::default_artifacts_dir);
-    match nblc::runtime::Runtime::load(&dir) {
-        Ok(rt) => println!(
-            "artifacts: {} (platform {})",
-            rt.dir().display(),
-            rt.platform()
-        ),
-        Err(e) => println!("artifacts: unavailable ({e})"),
-    }
+    let kern = simd_kernels(args)?;
+    println!("kernels: {} (selected; --simd off|auto|force or NBLC_SIMD overrides)", kern.label);
+    let available: Vec<&str> =
+        nblc::kernels::Kernels::variants().iter().map(|k| k.label).collect();
+    println!("kernel backends available: {}", available.join(", "));
     for kind in [DatasetKind::Hacc, DatasetKind::Amdf] {
         println!(
             "dataset {}: default n = {}",

@@ -66,6 +66,7 @@ impl ServeMetrics {
             bytes_served: self.bytes_served.load(Ordering::Relaxed),
             cache_hits: cache.hits,
             cache_misses: cache.misses,
+            cache_coalesced: cache.coalesced,
             cache_evictions: cache.evictions,
             cache_entries: cache.entries,
             cache_bytes: cache.bytes,
@@ -91,6 +92,9 @@ pub struct CacheFigures {
     pub hits: u64,
     /// Lookups that required a decode.
     pub misses: u64,
+    /// Lookups that joined a concurrent in-flight decode (single-flight
+    /// coalescing) instead of decoding again.
+    pub coalesced: u64,
     /// Entries displaced by the weight bound.
     pub evictions: u64,
     /// Entries currently resident.
@@ -118,6 +122,8 @@ pub struct ServeStats {
     pub cache_hits: u64,
     /// Shard-cache lookups that required a decode.
     pub cache_misses: u64,
+    /// Shard-cache lookups coalesced onto a concurrent in-flight decode.
+    pub cache_coalesced: u64,
     /// Shard-cache entries displaced by the weight bound.
     pub cache_evictions: u64,
     /// Shard-cache entries currently resident.
@@ -146,6 +152,7 @@ impl ServeStats {
         s.push_str(&format!("bytes served: {}\n", self.bytes_served));
         s.push_str(&format!("cache hits: {}\n", self.cache_hits));
         s.push_str(&format!("cache misses: {}\n", self.cache_misses));
+        s.push_str(&format!("cache coalesced: {}\n", self.cache_coalesced));
         s.push_str(&format!("cache evictions: {}\n", self.cache_evictions));
         s.push_str(&format!(
             "cache resident: {} entries, {} / {} bytes\n",
@@ -179,6 +186,7 @@ mod tests {
         let cache = CacheFigures {
             hits: 10,
             misses: 6,
+            coalesced: 5,
             evictions: 2,
             entries: 4,
             bytes: 4096,
@@ -191,6 +199,7 @@ mod tests {
         assert_eq!(s.errors, 0);
         assert_eq!(s.bytes_served, 1024);
         assert_eq!(s.cache_hits, 10);
+        assert_eq!(s.cache_coalesced, 5);
         assert_eq!(s.cache_evictions, 2);
         assert_eq!(s.inflight, 2);
         assert_eq!(s.inflight_high_water, 3);

@@ -2,7 +2,7 @@
 //!
 //! SZ's prediction loop is inherently sequential: the predictor consumes
 //! *reconstructed* values. This module implements the parallel
-//! reformulation used throughout `nblc` (and by the Pallas kernel):
+//! reformulation used throughout `nblc`:
 //! with midpoint quantization the reconstruction
 //! `x̃_i = pred_i + 2eb·q_i` stays on the lattice `{x̃_0 + 2eb·k}` for
 //! both the last-value (LV) and linear-curve-fitting (LCF) predictors,
@@ -22,6 +22,7 @@
 //! errors equal the bound *exactly* in the worst case, never exceed it.
 
 use crate::error::{Error, Result};
+use crate::kernels::Kernels;
 
 /// Relative shrink applied to the error bound before quantization so
 /// floating-point roundoff stays inside the user bound.
@@ -161,7 +162,14 @@ impl LatticeQuantizer {
     /// Prefer [`Self::quantize_field`], which picks the margin-based
     /// fast path (no per-element verification) when the bound allows.
     pub fn quantize(&self, xs: &[f32], predictor: Predictor) -> QuantCodes {
-        self.quantize_src(xs.len(), |i| xs[i], predictor, true, Vec::new())
+        self.quantize_with(crate::kernels::active(), xs, predictor)
+    }
+
+    /// [`Self::quantize`] through an explicit kernel backend (benches
+    /// and the backend-equivalence tests; codes and exceptions are
+    /// identical for every table).
+    pub fn quantize_with(&self, kern: &Kernels, xs: &[f32], predictor: Predictor) -> QuantCodes {
+        self.quantize_src(kern, xs.len(), |i| xs[i], predictor, true, Vec::new())
     }
 
     /// Entry point used by the compressors: scans the field once for
@@ -184,12 +192,30 @@ impl LatticeQuantizer {
         predictor: Predictor,
         codes_buf: Vec<i64>,
     ) -> Result<QuantCodes> {
+        Self::quantize_field_into_with(crate::kernels::active(), eb_abs, xs, predictor, codes_buf)
+    }
+
+    /// [`Self::quantize_field_into`] through an explicit kernel backend
+    /// (context-carrying callers pass
+    /// [`ExecCtx::kernels`](crate::exec::ExecCtx::kernels)).
+    pub fn quantize_field_into_with(
+        kern: &Kernels,
+        eb_abs: f64,
+        xs: &[f32],
+        predictor: Predictor,
+        codes_buf: Vec<i64>,
+    ) -> Result<QuantCodes> {
         let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
         match Self::with_cast_margin(eb_abs, max_abs) {
-            Some(q) => Ok(q.quantize_src(xs.len(), |i| xs[i], predictor, false, codes_buf)),
-            None => {
-                Ok(Self::new(eb_abs)?.quantize_src(xs.len(), |i| xs[i], predictor, true, codes_buf))
-            }
+            Some(q) => Ok(q.quantize_src(kern, xs.len(), |i| xs[i], predictor, false, codes_buf)),
+            None => Ok(Self::new(eb_abs)?.quantize_src(
+                kern,
+                xs.len(),
+                |i| xs[i],
+                predictor,
+                true,
+                codes_buf,
+            )),
         }
     }
 
@@ -219,7 +245,14 @@ impl LatticeQuantizer {
                 xs.len()
             )));
         }
-        Self::quantize_field_gathered_trusted(eb_abs, xs, perm, predictor, Vec::new())
+        Self::quantize_field_gathered_trusted(
+            crate::kernels::active(),
+            eb_abs,
+            xs,
+            perm,
+            predictor,
+            Vec::new(),
+        )
     }
 
     /// [`Self::quantize_field_gathered`] minus the O(n) permutation
@@ -229,6 +262,7 @@ impl LatticeQuantizer {
     /// validation scan 6x per snapshot would tax exactly the hot path
     /// the fusion exists to speed up.
     pub(crate) fn quantize_field_gathered_trusted(
+        kern: &Kernels,
         eb_abs: f64,
         xs: &[f32],
         perm: &[u32],
@@ -239,8 +273,10 @@ impl LatticeQuantizer {
         let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
         let at = |i: usize| xs[perm[i] as usize];
         match Self::with_cast_margin(eb_abs, max_abs) {
-            Some(q) => Ok(q.quantize_src(perm.len(), at, predictor, false, codes_buf)),
-            None => Ok(Self::new(eb_abs)?.quantize_src(perm.len(), at, predictor, true, codes_buf)),
+            Some(q) => Ok(q.quantize_src(kern, perm.len(), at, predictor, false, codes_buf)),
+            None => {
+                Ok(Self::new(eb_abs)?.quantize_src(kern, perm.len(), at, predictor, true, codes_buf))
+            }
         }
     }
 
@@ -249,16 +285,19 @@ impl LatticeQuantizer {
     /// per accessor.
     ///
     /// The loop is chunked and branchless: per [`QUANT_CHUNK`]-element
-    /// chunk, pass A gathers sources and computes lattice indices with
-    /// no data-dependent branches (auto-vectorizes), pass B turns
-    /// indices into difference codes, and — verified path only — pass C
-    /// reduces the chunk to a single violation flag (again branchless)
-    /// and re-scans for exception literals only when the flag tripped,
-    /// so `exceptions.push` never appears in the hot loop. Codes and
-    /// exceptions are bit-identical to [`Self::quantize_reference`]
-    /// (asserted by tests).
+    /// chunk, pass A gathers sources and hands the chunk to the kernel
+    /// backend's rounding loop (`kern.quantize_round` — the vectorized
+    /// predict/scale/round/widen pass), pass B turns indices into
+    /// difference codes, and — verified path only — pass C reduces the
+    /// chunk to a single violation flag with the backend's lane-OR
+    /// check and re-scans for exception literals only when the flag
+    /// tripped, so `exceptions.push` never appears in the hot loop.
+    /// Codes and exceptions are bit-identical to
+    /// [`Self::quantize_reference`] for every backend (asserted by
+    /// tests).
     fn quantize_src(
         &self,
+        kern: &Kernels,
         n: usize,
         at: impl Fn(usize) -> f32,
         predictor: Predictor,
@@ -287,11 +326,12 @@ impl LatticeQuantizer {
         let mut start = 1usize;
         while start < n {
             let m = (n - start).min(QUANT_CHUNK);
-            // Pass A: gather sources, compute lattice indices.
-            for (j, (x, k)) in xbuf[..m].iter_mut().zip(kbuf[..m].iter_mut()).enumerate() {
+            // Pass A: gather sources, then lattice indices through the
+            // backend's rounding kernel.
+            for (j, x) in xbuf[..m].iter_mut().enumerate() {
                 *x = at(start + j);
-                *k = ((*x as f64 - anchor64) * self.inv_step).round() as i64;
             }
+            (kern.quantize_round)(&xbuf[..m], anchor64, self.inv_step, &mut kbuf[..m]);
             // Pass B: difference codes from the index buffer.
             match predictor {
                 Predictor::LastValue => {
@@ -317,14 +357,17 @@ impl LatticeQuantizer {
                     }
                 }
             }
-            // Pass C (verified path): branchless chunk flag, then a
-            // rare patch pass pushing exception literals.
+            // Pass C (verified path): the backend's branchless lane-OR
+            // chunk flag, then a rare patch pass pushing exception
+            // literals.
             if verify {
-                let mut any_bad = false;
-                for (&x, &k) in xbuf[..m].iter().zip(kbuf[..m].iter()) {
-                    let recon = ((anchor64 + 2.0 * self.eb_eff * (k as f64)) as f32) as f64;
-                    any_bad |= (recon - x as f64).abs() > self.eb_user;
-                }
+                let any_bad = (kern.quantize_check)(
+                    &xbuf[..m],
+                    &kbuf[..m],
+                    anchor64,
+                    self.eb_eff,
+                    self.eb_user,
+                );
                 if any_bad {
                     for (j, (&x, &k)) in xbuf[..m].iter().zip(kbuf[..m].iter()).enumerate() {
                         let recon = self.value_at(k, anchor);
@@ -667,19 +710,73 @@ mod tests {
             for eb in [1.0, 1e-3, 1e-6, 1e-9] {
                 for n in [0usize, 1, 2, 3, 511, 512, 513, 1024, 1025, 2500] {
                     let q = LatticeQuantizer::new(eb).unwrap();
-                    let fast = q.quantize(&xs[..n], pred);
                     let reference = q.quantize_reference(&xs[..n], pred, true);
-                    assert_eq!(fast.codes, reference.codes, "codes eb={eb} n={n} {pred:?}");
-                    assert_eq!(
-                        fast.exceptions, reference.exceptions,
-                        "exceptions eb={eb} n={n} {pred:?}"
-                    );
-                    assert_eq!(fast.anchor.to_bits(), reference.anchor.to_bits());
-                    let ra: Vec<u32> =
-                        q.reconstruct(&fast).iter().map(|v| v.to_bits()).collect();
-                    let rb: Vec<u32> =
-                        q.reconstruct(&reference).iter().map(|v| v.to_bits()).collect();
-                    assert_eq!(ra, rb, "reconstruction eb={eb} n={n} {pred:?}");
+                    // Every kernel backend must reproduce the inline
+                    // reference bitwise (scalar, portable SIMD, and the
+                    // AVX2 table when this CPU has it).
+                    for kern in Kernels::variants() {
+                        let fast = q.quantize_with(kern, &xs[..n], pred);
+                        let tag = kern.label;
+                        assert_eq!(
+                            fast.codes, reference.codes,
+                            "codes eb={eb} n={n} {pred:?} {tag}"
+                        );
+                        assert_eq!(
+                            fast.exceptions, reference.exceptions,
+                            "exceptions eb={eb} n={n} {pred:?} {tag}"
+                        );
+                        assert_eq!(fast.anchor.to_bits(), reference.anchor.to_bits());
+                        let ra: Vec<u32> =
+                            q.reconstruct(&fast).iter().map(|v| v.to_bits()).collect();
+                        let rb: Vec<u32> =
+                            q.reconstruct(&reference).iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(ra, rb, "reconstruction eb={eb} n={n} {pred:?} {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_planes_are_backend_invariant() {
+        // NaN / infinity / denormal planes and all-exception chunks
+        // must quantize identically through every backend (NaNs land on
+        // lattice index 0 and are deliberately NOT exceptions — the
+        // bound check against NaN compares false, matching the scalar
+        // reference and `quantize_reference`).
+        let n = 1500usize;
+        let mut planes: Vec<Vec<f32>> = vec![
+            vec![f32::NAN; n],
+            vec![f32::INFINITY; n],
+            vec![f32::NEG_INFINITY; n],
+            vec![f32::MIN_POSITIVE / 4.0; n],
+        ];
+        // A mixed plane: smooth data with hostile lanes sprinkled in.
+        let mut mixed: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        for i in (0..n).step_by(97) {
+            mixed[i] = f32::NAN;
+        }
+        for i in (13..n).step_by(211) {
+            mixed[i] = f32::INFINITY;
+        }
+        planes.push(mixed);
+        // All-exception chunks: a bound far below the data ULP.
+        let coarse: Vec<f32> = (0..n).map(|i| 1e6 + i as f32).collect();
+        planes.push(coarse);
+        for xs in &planes {
+            for pred in [Predictor::LastValue, Predictor::LinearCurveFit] {
+                for eb in [1e-3, 1e-9] {
+                    let q = LatticeQuantizer::new(eb).unwrap();
+                    let reference = q.quantize_reference(xs, pred, true);
+                    for kern in Kernels::variants() {
+                        let fast = q.quantize_with(kern, xs, pred);
+                        assert_eq!(fast.codes, reference.codes, "{} eb={eb}", kern.label);
+                        assert_eq!(
+                            fast.exceptions, reference.exceptions,
+                            "{} eb={eb}",
+                            kern.label
+                        );
+                    }
                 }
             }
         }

@@ -55,10 +55,11 @@ pub fn build_rindex_ctx(
         bits_per_field as usize * idxs.len() <= 63,
         "R-index would exceed 63 bits"
     );
+    let kern = ctx.kernels();
     let quantized: Vec<Vec<u32>> =
-        ctx.par(idxs, |&f| morton::quantize_uniform(&snap.fields[f], bits_per_field));
+        ctx.par(idxs, |&f| morton::quantize_uniform_with(kern, &snap.fields[f], bits_per_field));
     let refs: Vec<&[u32]> = quantized.iter().map(|v| v.as_slice()).collect();
-    morton::interleave_fields(&refs, bits_per_field)
+    morton::interleave_fields_with(kern, &refs, bits_per_field)
 }
 
 #[cfg(test)]

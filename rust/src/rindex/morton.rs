@@ -2,11 +2,23 @@
 //! uniform quantization used to derive integer coordinates from floats
 //! (CPC2000 stage 1: "convert all floating-point values to integer
 //! numbers by dividing them by user-required error bound").
+//!
+//! Both hot loops (fixed-point quantization and the 3-way interleave)
+//! dispatch through the [`crate::kernels`] backend table; the `_with`
+//! variants take an explicit table, the plain names use the
+//! process-wide active one. Output is backend-invariant.
+
+use crate::kernels::Kernels;
 
 /// Uniformly quantize a float field to `bits`-bit integers over its own
 /// min..max range. With `bits = ceil(log2(range/2eb))` the bin width is
 /// `<= 2eb`, so bin centers reconstruct within `eb`.
 pub fn quantize_uniform(xs: &[f32], bits: u32) -> Vec<u32> {
+    quantize_uniform_with(crate::kernels::active(), xs, bits)
+}
+
+/// [`quantize_uniform`] through an explicit kernel backend.
+pub fn quantize_uniform_with(kern: &Kernels, xs: &[f32], bits: u32) -> Vec<u32> {
     assert!(bits >= 1 && bits <= 21);
     if xs.is_empty() {
         return Vec::new();
@@ -19,12 +31,9 @@ pub fn quantize_uniform(xs: &[f32], bits: u32) -> Vec<u32> {
     }
     let scale = levels / range;
     let max_q = (1u32 << bits) - 1;
-    xs.iter()
-        .map(|&x| {
-            let q = (((x - lo) as f64) * scale) as i64;
-            q.clamp(0, max_q as i64) as u32
-        })
-        .collect()
+    let mut out = vec![0u32; xs.len()];
+    (kern.fixed_point)(xs, lo, scale, max_q, &mut out);
+    out
 }
 
 /// Number of bits needed so a uniform quantization of `range` has bin
@@ -82,17 +91,22 @@ pub fn deinterleave3(m: u64) -> (u32, u32, u32) {
 
 /// General n-way interleave (n = fields.len() in 1..=6, n*bits <= 63).
 /// Bit `i` of field `f` lands at position `n*i + f`. The 3-way case
-/// dispatches to the fast path.
+/// dispatches to the kernel backend's bulk Morton path.
 pub fn interleave_fields(fields: &[&[u32]], bits: u32) -> Vec<u64> {
+    interleave_fields_with(crate::kernels::active(), fields, bits)
+}
+
+/// [`interleave_fields`] through an explicit kernel backend.
+pub fn interleave_fields_with(kern: &Kernels, fields: &[&[u32]], bits: u32) -> Vec<u64> {
     let nf = fields.len();
     assert!((1..=6).contains(&nf));
     assert!(bits as usize * nf <= 63, "interleave exceeds 63 bits");
     let n = fields[0].len();
     assert!(fields.iter().all(|f| f.len() == n));
     if nf == 3 {
-        return (0..n)
-            .map(|i| interleave3(fields[0][i], fields[1][i], fields[2][i]))
-            .collect();
+        let mut out = vec![0u64; n];
+        (kern.morton3)(fields[0], fields[1], fields[2], &mut out);
+        return out;
     }
     (0..n)
         .map(|i| {
@@ -191,6 +205,26 @@ mod tests {
         assert_eq!(bits_for_step(0.0, 0.1), 1);
         // Huge ratios clamp at 21 (the Morton limit per dimension).
         assert_eq!(bits_for_step(1.0, 1e-9), 21);
+    }
+
+    #[test]
+    fn key_build_is_backend_invariant() {
+        let mut rng = crate::util::rng::Pcg64::seeded(17);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.next_f32() * 64.0 - 32.0).collect();
+        let ys: Vec<f32> = (0..5000).map(|_| rng.next_f32() * 1e-3).collect();
+        let zs: Vec<f32> = (0..5000).map(|_| rng.next_f32()).collect();
+        let reference = {
+            let k = Kernels::scalar();
+            let q: Vec<Vec<u32>> =
+                [&xs, &ys, &zs].iter().map(|f| quantize_uniform_with(k, f, 16)).collect();
+            interleave_fields_with(k, &[&q[0], &q[1], &q[2]], 16)
+        };
+        for kern in Kernels::variants() {
+            let q: Vec<Vec<u32>> =
+                [&xs, &ys, &zs].iter().map(|f| quantize_uniform_with(kern, f, 16)).collect();
+            let keys = interleave_fields_with(kern, &[&q[0], &q[1], &q[2]], 16);
+            assert_eq!(keys, reference, "backend {}", kern.label);
+        }
     }
 
     #[test]

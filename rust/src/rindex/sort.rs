@@ -17,6 +17,7 @@
 //! the sequential [`segmented_sort_perm`].
 
 use crate::exec::ExecCtx;
+use crate::kernels::Kernels;
 
 /// Stable ascending sort permutation of `keys`, ignoring the low
 /// `ignore_bits` bits of each key. `perm[i]` is the index (into `keys`)
@@ -27,13 +28,22 @@ pub fn sort_perm(keys: &[u64], ignore_bits: u32) -> Vec<u32> {
     if n <= 1 {
         return perm;
     }
-    sort_perm_range(keys, &mut perm, ignore_bits, &mut Vec::new());
+    sort_perm_range(crate::kernels::active(), keys, &mut perm, ignore_bits, &mut Vec::new());
     perm
 }
 
 /// Sort `perm` (a slice of indices into `keys`) in place, stable, by the
-/// masked keys. `aux` is a reusable scatter buffer (resized here).
-fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32, aux: &mut Vec<u32>) {
+/// masked keys. `aux` is a reusable scatter buffer (resized here). The
+/// digit-count pass dispatches through the kernel backend (split count
+/// tables vectorize; usize adds are exact, so the permutation — and
+/// downstream archive bytes — are backend-invariant).
+fn sort_perm_range(
+    kern: &Kernels,
+    keys: &[u64],
+    perm: &mut [u32],
+    ignore_bits: u32,
+    aux: &mut Vec<u32>,
+) {
     let mask = if ignore_bits >= 64 {
         0u64
     } else {
@@ -68,10 +78,7 @@ fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32, aux: &mut V
             continue;
         }
         counts.fill(0);
-        for &i in perm.iter() {
-            let d = ((keys[i as usize] & mask) >> shift) & 0xFF;
-            counts[d as usize] += 1;
-        }
+        (kern.radix_count)(keys, mask, shift, perm, &mut counts);
         let mut sum = 0usize;
         let mut starts = [0usize; 256];
         for d in 0..256 {
@@ -92,6 +99,16 @@ fn sort_perm_range(keys: &[u64], perm: &mut [u32], ignore_bits: u32, aux: &mut V
 /// segment. The scatter buffer is shared across segments, so the whole
 /// pass makes one allocation instead of one per segment.
 pub fn segmented_sort_perm(keys: &[u64], seg: usize, ignore_bits: u32) -> Vec<u32> {
+    segmented_sort_perm_with(crate::kernels::active(), keys, seg, ignore_bits)
+}
+
+/// [`segmented_sort_perm`] through an explicit kernel backend.
+pub fn segmented_sort_perm_with(
+    kern: &Kernels,
+    keys: &[u64],
+    seg: usize,
+    ignore_bits: u32,
+) -> Vec<u32> {
     let n = keys.len();
     let mut perm: Vec<u32> = (0..n as u32).collect();
     if n <= 1 {
@@ -102,7 +119,7 @@ pub fn segmented_sort_perm(keys: &[u64], seg: usize, ignore_bits: u32) -> Vec<u3
     let mut start = 0usize;
     while start < n {
         let end = (start + seg).min(n);
-        sort_perm_range(keys, &mut perm[start..end], ignore_bits, &mut aux);
+        sort_perm_range(kern, keys, &mut perm[start..end], ignore_bits, &mut aux);
         start = end;
     }
     perm
@@ -121,14 +138,15 @@ pub fn segmented_sort_perm_ctx(
     ctx: &ExecCtx,
 ) -> Vec<u32> {
     let n = keys.len();
+    let kern = ctx.kernels();
     if ctx.threads() <= 1 || n <= 1 {
-        return segmented_sort_perm(keys, seg, ignore_bits);
+        return segmented_sort_perm_with(kern, keys, seg, ignore_bits);
     }
     let seg = if seg == 0 { n } else { seg };
     let n_segs = n.div_ceil(seg);
     let threads = ctx.threads().min(n_segs);
     if threads <= 1 {
-        return segmented_sort_perm(keys, seg, ignore_bits);
+        return segmented_sort_perm_with(kern, keys, seg, ignore_bits);
     }
     let mut perm: Vec<u32> = (0..n as u32).collect();
     // Whole segments per thread chunk: chunk offsets stay multiples of
@@ -141,7 +159,7 @@ pub fn segmented_sort_perm_ctx(
                 let mut start = 0usize;
                 while start < chunk.len() {
                     let end = (start + seg).min(chunk.len());
-                    sort_perm_range(keys, &mut chunk[start..end], ignore_bits, &mut aux);
+                    sort_perm_range(kern, keys, &mut chunk[start..end], ignore_bits, &mut aux);
                     start = end;
                 }
                 ctx.put_u32(aux);
@@ -263,6 +281,23 @@ mod tests {
                     let par = segmented_sort_perm_ctx(&keys, seg, ignore, &ctx);
                     assert_eq!(seq, par, "seg={seg} ignore={ignore} threads={threads}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn sort_is_backend_invariant() {
+        let mut rng = Pcg64::seeded(33);
+        let keys: Vec<u64> = (0..30_000).map(|_| rng.below(1 << 50)).collect();
+        for (seg, ignore) in [(0usize, 0u32), (4096, 6)] {
+            let reference = segmented_sort_perm_with(Kernels::scalar(), &keys, seg, ignore);
+            for kern in Kernels::variants() {
+                assert_eq!(
+                    segmented_sort_perm_with(kern, &keys, seg, ignore),
+                    reference,
+                    "backend {} seg={seg} ignore={ignore}",
+                    kern.label
+                );
             }
         }
     }

@@ -4,16 +4,21 @@
 //! re-running entropy decode + dequantization.
 //!
 //! Entries are `Arc<Snapshot>`: a hit hands out a shared handle, so an
-//! eviction never invalidates data a request is still slicing. There
-//! is deliberately no single-flight machinery — two concurrent misses
-//! on the same shard may both decode it (last insert wins); that
-//! wastes one decode under a cold-start stampede but keeps the lock
-//! strictly around map bookkeeping, never around a decode.
+//! eviction never invalidates data a request is still slicing.
+//!
+//! Misses are **single-flight**: the first thread to miss a key becomes
+//! the decode leader (a [`FlightLead`]) and every concurrent miss on the
+//! same key parks on a per-key latch until the leader publishes, so a
+//! cold-start stampede runs exactly one decode per shard. The cache
+//! lock is still held only for map bookkeeping — decodes, and the wait
+//! for them, happen outside it. If a leader drops without publishing
+//! (decode error, panic), waiters are released and one of them retries
+//! as the new leader, so an error never wedges the key.
 
 use crate::metrics::CacheFigures;
 use crate::snapshot::Snapshot;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Cache key: `(served-archive id, shard index)`.
 pub type ShardKey = (usize, usize);
@@ -24,14 +29,29 @@ struct Entry {
     last_used: u64,
 }
 
+/// Per-key decode latch. `done` is `None` while the leader decodes;
+/// the leader (or its abort path) sets it and broadcasts on `cv`.
+/// `Some(None)` means the leader gave up without a result.
+#[derive(Default)]
+struct Inflight {
+    done: Mutex<Option<Option<Arc<Snapshot>>>>,
+    cv: Condvar,
+}
+
 struct Inner {
     map: HashMap<ShardKey, Entry>,
+    /// Keys currently being decoded by a leader; joiners wait on the
+    /// latch instead of decoding again.
+    inflight: HashMap<ShardKey, Arc<Inflight>>,
     /// Logical clock bumped on every touch; the entry with the
     /// smallest tick is the least recently used.
     tick: u64,
     bytes: u64,
     hits: u64,
     misses: u64,
+    /// Lookups that joined another thread's in-flight decode instead of
+    /// running their own.
+    coalesced: u64,
     evictions: u64,
 }
 
@@ -49,10 +69,12 @@ impl ShardCache {
             cap_bytes,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
+                inflight: HashMap::new(),
                 tick: 0,
                 bytes: 0,
                 hits: 0,
                 misses: 0,
+                coalesced: 0,
                 evictions: 0,
             }),
         }
@@ -89,11 +111,15 @@ impl ShardCache {
     /// whole bound is not cached at all (the handle the caller already
     /// holds stays valid — it just won't be shared).
     pub fn insert(&self, key: ShardKey, snap: Arc<Snapshot>) {
+        let mut g = self.inner.lock().unwrap();
+        self.insert_locked(&mut g, key, snap);
+    }
+
+    fn insert_locked(&self, g: &mut Inner, key: ShardKey, snap: Arc<Snapshot>) {
         let weight = snap.total_bytes() as u64;
         if weight > self.cap_bytes {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
         if let Some(old) = g.map.insert(
@@ -122,17 +148,113 @@ impl ShardCache {
         }
     }
 
+    /// Single-flight lookup. Returns either the shard (from the map, or
+    /// decoded by a concurrent leader we waited on) or a [`FlightLead`]
+    /// obligating the caller to decode and [`FlightLead::publish`] the
+    /// result. Exactly one caller per key holds a lead at a time, so
+    /// `misses` counts actual decode attempts; joiners bump `coalesced`
+    /// instead. If the leader aborts (drops the lead without
+    /// publishing), each waiter re-enters the lookup and one becomes
+    /// the next leader — such retries count again.
+    pub fn get_or_join(&self, key: ShardKey) -> Flight<'_> {
+        loop {
+            let latch = {
+                let mut g = self.inner.lock().unwrap();
+                g.tick += 1;
+                let tick = g.tick;
+                if let Some(e) = g.map.get_mut(&key) {
+                    e.last_used = tick;
+                    let snap = Arc::clone(&e.snap);
+                    g.hits += 1;
+                    return Flight::Hit(snap);
+                }
+                if let Some(l) = g.inflight.get(&key).cloned() {
+                    g.coalesced += 1;
+                    l
+                } else {
+                    g.misses += 1;
+                    let l = Arc::new(Inflight::default());
+                    g.inflight.insert(key, Arc::clone(&l));
+                    return Flight::Lead(FlightLead {
+                        cache: self,
+                        key,
+                        latch: l,
+                        published: false,
+                    });
+                }
+            };
+            // Wait outside the cache lock; the latch has its own.
+            let mut done = latch.done.lock().unwrap();
+            while done.is_none() {
+                done = latch.cv.wait(done).unwrap();
+            }
+            match done.as_ref().and_then(|r| r.as_ref()) {
+                Some(snap) => return Flight::Hit(Arc::clone(snap)),
+                None => continue, // leader aborted; race for the next lead
+            }
+        }
+    }
+
     /// Point-in-time counters for a stats snapshot.
     pub fn figures(&self) -> CacheFigures {
         let g = self.inner.lock().unwrap();
         CacheFigures {
             hits: g.hits,
             misses: g.misses,
+            coalesced: g.coalesced,
             evictions: g.evictions,
             entries: g.map.len() as u64,
             bytes: g.bytes,
             cap_bytes: self.cap_bytes,
         }
+    }
+}
+
+/// Result of a single-flight lookup.
+pub enum Flight<'a> {
+    /// The shard, either resident or just published by another thread's
+    /// decode we joined.
+    Hit(Arc<Snapshot>),
+    /// This caller is the decode leader for the key.
+    Lead(FlightLead<'a>),
+}
+
+/// The decode obligation handed to exactly one thread per missing key.
+/// Call [`publish`](FlightLead::publish) with the decoded shard;
+/// dropping without publishing releases waiting joiners to retry.
+pub struct FlightLead<'a> {
+    cache: &'a ShardCache,
+    key: ShardKey,
+    latch: Arc<Inflight>,
+    published: bool,
+}
+
+impl FlightLead<'_> {
+    /// Insert the decoded shard (subject to the weight bound) and wake
+    /// every joiner waiting on this key with a shared handle.
+    pub fn publish(mut self, snap: Arc<Snapshot>) {
+        {
+            let mut g = self.cache.inner.lock().unwrap();
+            self.cache.insert_locked(&mut g, self.key, Arc::clone(&snap));
+            g.inflight.remove(&self.key);
+        }
+        *self.latch.done.lock().unwrap() = Some(Some(snap));
+        self.latch.cv.notify_all();
+        self.published = true;
+    }
+}
+
+impl Drop for FlightLead<'_> {
+    fn drop(&mut self) {
+        if self.published {
+            return;
+        }
+        // Abort path (decode error / panic): clear the latch so a
+        // joiner can take over, and tell current waiters there is no
+        // result coming from this flight.
+        self.cache.inner.lock().unwrap().inflight.remove(&self.key);
+        *self.latch.done.lock().unwrap() = Some(None);
+        self.latch.cv.notify_all();
     }
 }
 
@@ -212,5 +334,74 @@ mod tests {
         let f = c.figures();
         assert_eq!(f.entries, 1);
         assert_eq!(f.bytes, 20 * 24);
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_misses() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        const THREADS: usize = 8;
+        let c = Arc::new(ShardCache::new(1 << 20));
+        let barrier = Arc::new(Barrier::new(THREADS));
+        let decodes = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let barrier = Arc::clone(&barrier);
+                let decodes = Arc::clone(&decodes);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    match c.get_or_join((0, 7)) {
+                        Flight::Hit(s) => s,
+                        Flight::Lead(lead) => {
+                            decodes.fetch_add(1, Ordering::SeqCst);
+                            // Hold the flight open so joiners pile up.
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                            let s = snap(10, 3.0);
+                            lead.publish(Arc::clone(&s));
+                            s
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            let s = h.join().unwrap();
+            assert_eq!(s.fields[0][0], 3.0);
+        }
+        assert_eq!(decodes.load(Ordering::SeqCst), 1, "exactly one decode");
+        let f = c.figures();
+        assert_eq!(f.misses, 1);
+        assert_eq!(f.hits + f.coalesced, (THREADS - 1) as u64);
+    }
+
+    #[test]
+    fn aborted_lead_hands_off_to_a_joiner() {
+        let c = Arc::new(ShardCache::new(1 << 20));
+        let key = (1, 1);
+        let lead = match c.get_or_join(key) {
+            Flight::Lead(l) => l,
+            Flight::Hit(_) => panic!("empty cache cannot hit"),
+        };
+        let joiner = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || match c.get_or_join(key) {
+                Flight::Hit(s) => s,
+                Flight::Lead(lead) => {
+                    let s = snap(10, 9.0);
+                    lead.publish(Arc::clone(&s));
+                    s
+                }
+            })
+        };
+        // Give the joiner a chance to park on the latch, then abort the
+        // flight as a failed decode would.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(lead);
+        let s = joiner.join().unwrap();
+        assert_eq!(s.fields[0][0], 9.0);
+        assert!(c.contains(key));
+        // Both the aborted flight and the retry count as misses.
+        assert_eq!(c.figures().misses, 2);
     }
 }

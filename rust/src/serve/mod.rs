@@ -5,8 +5,10 @@
 //!
 //! The stack, bottom-up:
 //! - [`protocol`] — framed requests/responses, hostile-input safe;
-//! - [`cache`] — weight-bounded LRU of decoded shards, so hot ranges
-//!   skip entropy decode + dequantization entirely;
+//! - [`cache`] — weight-bounded LRU of decoded shards with
+//!   single-flight miss coalescing, so hot ranges skip entropy decode
+//!   + dequantization entirely and a cold-start stampede runs one
+//!   decode per shard;
 //! - [`server`] — `TcpListener` accept loop, thread-per-connection,
 //!   admission control (permit queue + decode-cost budget from the v3
 //!   footer's cost counters) shedding overload as typed `Busy`;
@@ -18,7 +20,7 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use cache::ShardCache;
+pub use cache::{Flight, FlightLead, ShardCache};
 pub use client::{GetReply, ServeClient};
 pub use protocol::{BusyInfo, RangeData};
 pub use server::{ServeConfig, Server, ServerHandle};

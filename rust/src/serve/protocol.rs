@@ -332,6 +332,7 @@ fn encode_stats(s: &ServeStats) -> Vec<u8> {
         s.cache_cap_bytes,
         s.inflight,
         s.inflight_high_water,
+        s.cache_coalesced,
     ] {
         put_uvarint(&mut p, v);
     }
@@ -360,6 +361,7 @@ fn decode_stats(payload: &[u8]) -> Result<ServeStats> {
         cache_cap_bytes: next()?,
         inflight: next()?,
         inflight_high_water: next()?,
+        cache_coalesced: next()?,
         archives: Vec::new(),
     };
     let n_archives = get_uvarint(payload, &mut pos)?;
@@ -460,6 +462,7 @@ mod tests {
         roundtrip_response(Response::Stats(ServeStats {
             requests: 9,
             cache_hits: 4,
+            cache_coalesced: 2,
             archives: vec![("a.nblc".into(), 3), ("b.nblc".into(), 0)],
             ..Default::default()
         }));

@@ -1,5 +1,6 @@
 //! The serve daemon: a `TcpListener` + thread-per-connection loop over
-//! open [`ShardReader`]s, an LRU shard cache, and admission control.
+//! open [`ShardReader`]s, a single-flight LRU shard cache, and
+//! admission control.
 //!
 //! No async runtime: connections are cheap blocking threads (the
 //! request path is decode-bound, not connection-count-bound), and the
@@ -16,7 +17,7 @@ use crate::data::archive::{decode_shards_cached, ShardReader};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::metrics::ServeMetrics;
-use crate::serve::cache::ShardCache;
+use crate::serve::cache::{Flight, ShardCache};
 use crate::serve::protocol::{
     read_frame_or_eof, write_frame, BusyInfo, RangeData, Request, Response, MAX_REQUEST_FRAME,
 };
@@ -424,18 +425,28 @@ fn handle_get(shared: &Shared, archive: &str, range: Option<(u64, u64)>) -> Resp
         Err(busy) => return Response::Busy(busy),
     };
     // Shard fan-out takes the outer budget; each decode gets the rest.
-    let inner = ExecCtx::with_threads((shared.ctx.threads() / touched.len()).max(1));
+    // Decodes inherit the server's kernel backend so bytes/stats are
+    // consistent with the rest of the process.
+    let inner = ExecCtx::with_threads((shared.ctx.threads() / touched.len()).max(1))
+        .with_kernels(shared.ctx.kernels());
     let hits = AtomicU64::new(0);
     let fetch = |i: usize| -> Result<Arc<Snapshot>> {
-        let key = (aid, i);
-        if let Some(snap) = shared.cache.get(key) {
-            hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(snap);
+        match shared.cache.get_or_join((aid, i)) {
+            Flight::Hit(snap) => {
+                hits.fetch_add(1, Ordering::Relaxed);
+                Ok(snap)
+            }
+            Flight::Lead(lead) => {
+                // Decode outside the cache lock; publish wakes every
+                // request that joined this flight. On error the lead's
+                // Drop releases joiners to retry (one becomes the next
+                // leader), so a bad shard never wedges the key.
+                let bundle = reader.read_shard(i)?;
+                let snap = Arc::new((served.factory)().decompress_with(&inner, &bundle)?);
+                lead.publish(Arc::clone(&snap));
+                Ok(snap)
+            }
         }
-        let bundle = reader.read_shard(i)?;
-        let snap = Arc::new((served.factory)().decompress_with(&inner, &bundle)?);
-        shared.cache.insert(key, Arc::clone(&snap));
-        Ok(snap)
     };
     match decode_shards_cached(reader, range, &shared.ctx, served.reordered, &fetch) {
         Ok(dec) => {

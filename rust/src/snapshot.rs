@@ -227,9 +227,9 @@ impl CompressedSnapshot {
 
 /// Compressor over a single 1D field under an *absolute* error bound.
 ///
-/// Deliberately NOT `Send + Sync`: the PJRT-backed implementation wraps
-/// thread-affine XLA handles. Parallel pipelines construct one
-/// compressor per worker thread via a factory (see
+/// Deliberately NOT `Send + Sync`, so implementations may hold
+/// thread-affine state (caches, external handles). Parallel pipelines
+/// construct one compressor per worker thread via a factory (see
 /// `coordinator::pipeline`).
 pub trait FieldCompressor {
     /// Short identifier ("sz_lv", "zfp", ...).
@@ -439,8 +439,7 @@ pub(crate) fn collect_fields(name: &str, decoded: Vec<Vec<f32>>) -> Result<Snaps
 /// independently (how the paper applies the mesh compressors to
 /// particle data, §IV). The six planes are independent work items, so
 /// they fan out across the context's threads with byte-identical
-/// output at any budget. Thread-affine field compressors (the
-/// PJRT-backed SZ) use [`PerFieldSeq`] instead.
+/// output at any budget.
 pub struct PerField<T: FieldCompressor + Sync>(pub T);
 
 impl<T: FieldCompressor + Sync> SnapshotCompressor for PerField<T> {
@@ -470,51 +469,6 @@ impl<T: FieldCompressor + Sync> SnapshotCompressor for PerField<T> {
             return Err(Error::corrupt("expected 6 per-field streams"));
         }
         let decoded = ctx.try_par(&FIELD_IDX, |&i| decompress_one_field(&self.0, c, i))?;
-        collect_fields("decompressed", decoded)
-    }
-}
-
-/// Sequential per-field adapter for thread-affine field compressors
-/// (e.g. [`crate::runtime::quantizer::SzPjrt`], whose XLA handles must
-/// stay on one thread). Stream layout is identical to [`PerField`];
-/// the execution context's thread budget is ignored.
-pub struct PerFieldSeq<T: FieldCompressor>(pub T);
-
-impl<T: FieldCompressor> SnapshotCompressor for PerFieldSeq<T> {
-    fn name(&self) -> &'static str {
-        self.0.name()
-    }
-
-    fn compress_with(
-        &self,
-        ctx: &ExecCtx,
-        snap: &Snapshot,
-        quality: &Quality,
-    ) -> Result<CompressedSnapshot> {
-        let ebs = quality.resolve(snap);
-        let mut fields = Vec::with_capacity(6);
-        for i in 0..6 {
-            // Sequential by design (thread-affine inner compressors),
-            // but scratch still cycles through the context's pools.
-            fields.push(compress_one_field(&self.0, snap, &ebs, i, ctx)?);
-        }
-        Ok(CompressedSnapshot {
-            compressor: self.name().to_string(),
-            eb_rel: quality.legacy_rel(),
-            field_bounds: Some(ebs),
-            fields,
-            n: snap.len(),
-        })
-    }
-
-    fn decompress_with(&self, _ctx: &ExecCtx, c: &CompressedSnapshot) -> Result<Snapshot> {
-        if c.fields.len() != 6 {
-            return Err(Error::corrupt("expected 6 per-field streams"));
-        }
-        let mut decoded = Vec::with_capacity(6);
-        for i in 0..6 {
-            decoded.push(decompress_one_field(&self.0, c, i)?);
-        }
         collect_fields("decompressed", decoded)
     }
 }
@@ -655,11 +609,6 @@ mod tests {
             }
             let recon = comp.decompress_with(&ctx, &par).unwrap();
             verify_bounds(&s, &recon, 1e-4).unwrap();
-        }
-        // The sequential adapter emits the same streams.
-        let seq_adapter = PerFieldSeq(Sz::lv()).compress(&s, &q).unwrap();
-        for (a, b) in seq.fields.iter().zip(seq_adapter.fields.iter()) {
-            assert_eq!(a.bytes, b.bytes);
         }
         // The deprecated bare-f64 shim is byte-identical to the typed path.
         #[allow(deprecated)]

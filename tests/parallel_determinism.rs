@@ -11,6 +11,7 @@ use nblc::data::archive::{decode_shards, ShardReader};
 use nblc::data::gen_cosmo::{generate_cosmo, CosmoConfig};
 use nblc::data::gen_md::{generate_md, MdConfig};
 use nblc::exec::ExecCtx;
+use nblc::kernels::Kernels;
 use nblc::quality::Quality;
 use nblc::snapshot::{verify_bounds, Snapshot};
 
@@ -57,6 +58,23 @@ fn assert_deterministic(spec: &str, snap: &Snapshot, eb_rel: f64) {
         };
         verify_bounds(&reference, &recon, eb_rel)
             .unwrap_or_else(|e| panic!("{spec}@{threads}: bound violated: {e}"));
+    }
+
+    // Kernel backends must not change bytes either (the full SIMD
+    // matrix lives in backend_equivalence.rs; this crosses it with the
+    // engine's thread sweep on a parallel budget).
+    for kern in Kernels::variants() {
+        let ctx = ExecCtx::with_threads(2).with_kernels(kern);
+        let out = comp
+            .compress_with(&ctx, snap, &quality)
+            .unwrap_or_else(|e| panic!("{spec}@{}: compress failed: {e}", kern.label));
+        for (a, b) in seq.fields.iter().zip(out.fields.iter()) {
+            assert_eq!(
+                a.bytes, b.bytes,
+                "{spec}@{}: field '{}' bytes depend on the kernel backend",
+                kern.label, a.name
+            );
+        }
     }
 }
 

@@ -143,6 +143,69 @@ fn concurrent_range_reads_match_direct_decodes_across_the_lineup() {
 }
 
 #[test]
+fn cold_start_stampede_runs_exactly_one_decode() {
+    // One big shard, eight concurrent clients asking for the same
+    // range the instant the server comes up. Single-flight coalescing
+    // must collapse the stampede onto a single decode: one cache miss,
+    // everyone else a hit or a coalesced join of the in-flight decode.
+    let snap = generate_md(&MdConfig {
+        n_particles: 200_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("nblc_serve_stampede_{}.nblc", std::process::id()));
+    build_archive(&path, &snap, &registry::canonical("sz_lv").unwrap(), 1);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_mb: 64,
+        max_inflight: 8, // every client is admitted; nothing sheds
+        queue_timeout_ms: 30_000,
+        decode_budget_ms: 0,
+        threads: 2,
+    };
+    let handle = Server::bind(&cfg, &[&path]).unwrap().spawn();
+    let addr = handle.addr();
+
+    const CLIENTS: usize = 8;
+    let barrier = std::sync::Barrier::new(CLIENTS);
+    let replies: Vec<RangeData> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut client = ServeClient::connect(addr).unwrap();
+                    barrier.wait();
+                    get_ok(&mut client, "", Some((10_000, 150_000)))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Everyone got the same bytes.
+    let first = bits(&replies[0].snapshot);
+    for d in &replies[1..] {
+        assert_eq!(bits(&d.snapshot), first, "stampede replies must agree");
+    }
+
+    let mut client = ServeClient::connect(addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.cache_misses, 1,
+        "a stampede on one shard must decode it exactly once: {stats:?}"
+    );
+    assert_eq!(
+        stats.cache_hits + stats.cache_coalesced,
+        (CLIENTS - 1) as u64,
+        "every other lookup must be a hit or a coalesced join: {stats:?}"
+    );
+    assert_eq!(stats.data_ok, CLIENTS as u64);
+
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn undersized_admission_sheds_with_typed_busy() {
     let snap = generate_md(&MdConfig {
         n_particles: 120_000,
