@@ -16,8 +16,9 @@ use nblc::bench::{results_dir, Table, EB_REL};
 use nblc::codec::{avle, huffman, lz77};
 use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
-use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink};
-use nblc::data::archive::{decode_shards, ShardReader};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink, SpatialInsitu};
+use nblc::coordinator::spatial::plan_spatial;
+use nblc::data::archive::{decode_region, decode_shards, Region, ShardReader};
 use nblc::data::DatasetKind;
 use nblc::exec::ExecCtx;
 use nblc::kernels::Kernels;
@@ -482,6 +483,7 @@ fn main() {
                 path: arch_path.clone(),
                 spec: arch_spec.clone(),
             },
+            spatial: None,
         },
     )
     .unwrap();
@@ -503,6 +505,129 @@ fn main() {
     );
     decode.print();
     decode.write_csv("hotpath_decode").unwrap();
+
+    // Spatially-pruned region reads: the same small box query against a
+    // Morton-layout archive (footer bbox index decodes only overlapping
+    // shards) and against a cost-layout archive (full scan + filter
+    // fallback). Rates are effective scan throughput — archive MB per
+    // query second — so the pruned row's win IS the pruning ratio.
+    let region_shards = 16usize;
+    let plan = plan_spatial(&s, region_shards, 10, &ExecCtx::sequential()).unwrap();
+    let spatial_path =
+        std::env::temp_dir().join(format!("nblc_hotpath_spatial_{}.nblc", std::process::id()));
+    let cost_path =
+        std::env::temp_dir().join(format!("nblc_hotpath_cost_{}.nblc", std::process::id()));
+    run_insitu(
+        &plan.snapshot,
+        &InsituConfig {
+            shards: region_shards,
+            layout: Some(plan.layout.clone()),
+            workers: n_threads.clamp(1, region_shards),
+            threads: 1,
+            queue_depth: 4,
+            quality: Quality::rel(EB_REL),
+            factory: registry::factory(&arch_spec).unwrap(),
+            sink: Sink::Archive {
+                path: spatial_path.clone(),
+                spec: arch_spec.clone(),
+            },
+            spatial: Some(SpatialInsitu {
+                bits: plan.bits,
+                seg: 2_048,
+                keys: std::sync::Arc::clone(&plan.keys),
+            }),
+        },
+    )
+    .unwrap();
+    run_insitu(
+        &s,
+        &InsituConfig {
+            shards: region_shards,
+            layout: None,
+            workers: n_threads.clamp(1, region_shards),
+            threads: 1,
+            queue_depth: 4,
+            quality: Quality::rel(EB_REL),
+            factory: registry::factory(&arch_spec).unwrap(),
+            sink: Sink::Archive {
+                path: cost_path.clone(),
+                spec: arch_spec.clone(),
+            },
+            spatial: None,
+        },
+    )
+    .unwrap();
+    let sp_reader = ShardReader::open(&spatial_path).unwrap();
+    let cost_reader = ShardReader::open(&cost_path).unwrap();
+    let spb = sp_reader.spatial().expect("spatial archive must carry a footer index");
+    // A quarter-extent box around the middle shard's bbox center.
+    let mid = sp_reader
+        .index()
+        .entries
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.start < e.end)
+        .map(|(i, _)| i)
+        .nth(region_shards / 2)
+        .unwrap_or(0);
+    let bb = &spb.shards[mid].bbox;
+    let region = Region::new(
+        [
+            bb[0] + (bb[1] - bb[0]) * 0.25,
+            bb[2] + (bb[3] - bb[2]) * 0.25,
+            bb[4] + (bb[5] - bb[4]) * 0.25,
+        ],
+        [
+            bb[1] - (bb[1] - bb[0]) * 0.25,
+            bb[3] - (bb[3] - bb[2]) * 0.25,
+            bb[5] - (bb[5] - bb[4]) * 0.25,
+        ],
+    )
+    .unwrap();
+    let ctx1 = ExecCtx::sequential();
+    let probe = decode_region(&sp_reader, sp_reader.spec(), &region, &ctx1).unwrap();
+    assert!(probe.indexed, "region bench must run against the footer index");
+    assert!(
+        probe.shards_touched <= region_shards / 2,
+        "interior box touched {} of {region_shards} shards — pruning is broken",
+        probe.shards_touched
+    );
+    let t_pruned = bench_min_time(1.0, 3, || {
+        decode_region(&sp_reader, sp_reader.spec(), &region, &ctx1).unwrap();
+    });
+    let t_full = bench_min_time(1.0, 3, || {
+        decode_region(&cost_reader, cost_reader.spec(), &region, &ctx1).unwrap();
+    });
+    let mut region_t = Table::new(
+        &format!(
+            "Region decode ({region_shards} shards; box touched {} shards, pruned {})",
+            probe.shards_touched, probe.shards_pruned
+        ),
+        &["Stage", "Threads", "Effective MB/s", "Speedup"],
+    );
+    region_t.row(vec![
+        "region decode (full scan)".into(),
+        "1".into(),
+        format!("{:.1}", total_mb / t_full),
+        "1.00x".into(),
+    ]);
+    region_t.row(vec![
+        "region decode (index pruned)".into(),
+        "1".into(),
+        format!("{:.1}", total_mb / t_pruned),
+        format!("{:.2}x", t_full / t_pruned),
+    ]);
+    region_t.print();
+    region_t.write_csv("hotpath_region").unwrap();
+    json_rows.push(("region_decode:full".into(), 1, total_mb / t_full));
+    json_rows.push(("region_decode:pruned".into(), 1, total_mb / t_pruned));
+    if t_pruned >= t_full {
+        eprintln!(
+            "WARNING: pruned region decode ({t_pruned:.4}s) is not faster than the full scan ({t_full:.4}s)"
+        );
+    }
+    std::fs::remove_file(&spatial_path).ok();
+    std::fs::remove_file(&cost_path).ok();
 
     // Serve daemon over the same archive: cold = first full get (cache
     // empty, pays decode + wire), hot = repeated gets once every shard

@@ -74,6 +74,7 @@ fn main() {
                 model: GpfsModel::default(),
                 procs: sim_procs,
             },
+            spatial: None,
         },
     )
     .expect("pipeline failed");

@@ -45,6 +45,15 @@ pub struct PipelineSettings {
     /// from the first round's per-shard cost counters (the counters the
     /// v3 footer records).
     pub rebalance: bool,
+    /// Shard layout policy: `"cost"` (contiguous ranges, cost-balanced)
+    /// or `"spatial"` (Morton-aligned shards + the v3 footer's spatial
+    /// block, enabling pruned `--region` reads).
+    pub layout: String,
+    /// Morton bits per axis for the spatial layout (1..=21).
+    pub spatial_bits: u32,
+    /// Segment length for per-segment bboxes inside spatial shards
+    /// (0 = shard-level boxes only).
+    pub spatial_seg: usize,
 }
 
 impl Default for PipelineSettings {
@@ -64,6 +73,9 @@ impl Default for PipelineSettings {
             sim_procs: 0,
             output: None,
             rebalance: false,
+            layout: "cost".into(),
+            spatial_bits: crate::coordinator::spatial::DEFAULT_SPATIAL_BITS,
+            spatial_seg: crate::coordinator::spatial::DEFAULT_SPATIAL_SEG,
         }
     }
 }
@@ -73,10 +85,11 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 15] = [
+        const KNOWN: [&str; 18] = [
             "dataset", "particles", "shards", "workers", "threads", "queue_depth",
             "eb_rel", "quality", "mode", "method", "auto_route", "simd",
-            "sim_procs", "output", "rebalance",
+            "sim_procs", "output", "rebalance", "layout", "spatial_bits",
+            "spatial_seg",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -189,6 +202,28 @@ impl PipelineSettings {
             s.rebalance = v
                 .as_bool()
                 .ok_or_else(|| Error::Config("'rebalance' must be a boolean".into()))?;
+        }
+        if let Some(v) = doc.get(sec, "layout") {
+            let val = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'layout' must be a string".into()))?;
+            if !["cost", "spatial"].contains(&val) {
+                return Err(Error::Config(format!(
+                    "'layout' must be cost|spatial, got '{val}'"
+                )));
+            }
+            s.layout = val.to_string();
+        }
+        s.spatial_bits = get_usize("spatial_bits", s.spatial_bits as usize)? as u32;
+        s.spatial_seg = get_usize("spatial_seg", s.spatial_seg)?;
+        if s.spatial_bits == 0
+            || s.spatial_bits as u64 > crate::data::archive::MAX_MORTON_BITS
+        {
+            return Err(Error::Config(format!(
+                "'spatial_bits' must be in 1..={}, got {}",
+                crate::data::archive::MAX_MORTON_BITS,
+                s.spatial_bits
+            )));
         }
         if s.shards == 0 {
             return Err(Error::Config("'shards' must be >= 1".into()));
@@ -308,6 +343,9 @@ mod tests {
             sim_procs = 1024
             output = "out.nblc"
             rebalance = true
+            layout = "spatial"
+            spatial_bits = 12
+            spatial_seg = 4096
             "#,
         )
         .unwrap();
@@ -322,6 +360,18 @@ mod tests {
         assert_eq!(s.sim_procs, 1024);
         assert_eq!(s.output.as_deref(), Some("out.nblc"));
         assert!(s.rebalance);
+        assert_eq!(s.layout, "spatial");
+        assert_eq!(s.spatial_bits, 12);
+        assert_eq!(s.spatial_seg, 4096);
+    }
+
+    #[test]
+    fn layout_defaults_to_cost() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let s = PipelineSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.layout, "cost");
+        assert_eq!(s.spatial_bits, crate::coordinator::spatial::DEFAULT_SPATIAL_BITS);
+        assert_eq!(s.spatial_seg, crate::coordinator::spatial::DEFAULT_SPATIAL_SEG);
     }
 
     #[test]
@@ -406,6 +456,11 @@ mod tests {
             "[pipeline]\nsimd = \"fast\"\n",
             "[pipeline]\nsimd = 1\n",
             "[pipeline]\nuse_pjrt = true\n",
+            "[pipeline]\nlayout = \"hilbert\"\n",
+            "[pipeline]\nlayout = 3\n",
+            "[pipeline]\nspatial_bits = 0\n",
+            "[pipeline]\nspatial_bits = 22\n",
+            "[pipeline]\nspatial_seg = -1\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

@@ -6,6 +6,9 @@
 //! that insertion point:
 //!
 //! * [`shard`] — particle-range sharding + cost-based rebalancing;
+//! * [`spatial`] — Morton-aligned spatial layouts whose shards cover
+//!   contiguous Z-order ranges, feeding the v3 footer's spatial block
+//!   so region reads decode only overlapping shards;
 //! * [`backpressure`] — bounded queues with stall accounting (the
 //!   in-situ memory constraint: one snapshot in flight);
 //! * [`pipeline`] — staged source → compress-workers → sink pipeline
@@ -26,7 +29,8 @@ pub mod pipeline;
 pub mod rank;
 pub mod scheduler;
 pub mod shard;
+pub mod spatial;
 
 pub use iomodel::GpfsModel;
-pub use pipeline::{InsituConfig, InsituReport, run_insitu};
+pub use pipeline::{InsituConfig, InsituReport, SpatialInsitu, run_insitu};
 pub use scheduler::choose_compressor;

@@ -17,7 +17,7 @@
 use crate::coordinator::backpressure::{bounded, QueueStats};
 use crate::coordinator::counters::PipelineCounters;
 use crate::coordinator::iomodel::GpfsModel;
-use crate::coordinator::rank::{run_rank, RankResult, RankTask};
+use crate::coordinator::rank::{run_rank, RankResult, RankSpatial, RankTask};
 use crate::coordinator::shard::{split_even, Shard};
 use crate::data::archive::{ShardIndex, ShardWriter};
 use crate::error::{Error, Result};
@@ -53,6 +53,23 @@ pub enum Sink {
     Model { model: GpfsModel, procs: usize },
 }
 
+/// Spatial-layout companion data for a pipeline run (see
+/// [`crate::coordinator::spatial`]). The snapshot handed to
+/// [`run_insitu`] must already be Morton-permuted (e.g. by
+/// [`crate::coordinator::spatial::plan_spatial`]) and `keys` are its
+/// sorted Morton keys, parallel to the particle order. With this set,
+/// an [`Sink::Archive`] run writes the v3 footer's spatial block and
+/// each worker round-trips its bundle to box the decoded coordinates.
+#[derive(Clone)]
+pub struct SpatialInsitu {
+    /// Morton bits per axis the keys were built with (1..=21).
+    pub bits: u32,
+    /// Decoded-order segment length for per-segment boxes (0 = none).
+    pub seg: usize,
+    /// Sorted Morton keys, one per particle of the permuted snapshot.
+    pub keys: Arc<Vec<u64>>,
+}
+
 /// In-situ pipeline configuration.
 pub struct InsituConfig {
     /// Number of shards ("ranks") to cut the snapshot into (evenly;
@@ -79,6 +96,10 @@ pub struct InsituConfig {
     pub factory: CompressorFactory,
     /// Compressed-shard destination.
     pub sink: Sink,
+    /// Spatial layout mode: `Some` arms the footer spatial block on
+    /// archive sinks (and per-rank decoded-bbox computation). `None`
+    /// leaves every write path byte-identical to non-spatial runs.
+    pub spatial: Option<SpatialInsitu>,
 }
 
 /// Pipeline outcome.
@@ -143,6 +164,15 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             split_even(snap.len(), cfg.shards)
         }
     };
+    if let Some(sp) = &cfg.spatial {
+        if sp.keys.len() != snap.len() {
+            return Err(Error::Pipeline(format!(
+                "spatial keys cover {} particles, snapshot has {}",
+                sp.keys.len(),
+                snap.len()
+            )));
+        }
+    }
     let k = layout.len();
     let counters = Arc::new(PipelineCounters::default());
     let wall = Timer::start();
@@ -199,11 +229,15 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                 let mut shard_ratios = vec![0f64; k];
                 let mut writer = match &cfg.sink {
                     Sink::Archive { path, spec } => {
-                        Some(ShardWriter::create_quality(path, spec, &cfg.quality)?)
+                        let mut w = ShardWriter::create_quality(path, spec, &cfg.quality)?;
+                        if let Some(sp) = &cfg.spatial {
+                            w.enable_spatial(sp.bits, sp.seg as u64)?;
+                        }
+                        Some(w)
                     }
                     _ => None,
                 };
-                while let Some(result) = done_rx.recv() {
+                while let Some(mut result) = done_rx.recv() {
                     shard_secs[result.rank] = result.secs;
                     shard_ratios[result.rank] = result.bundle.compression_ratio();
                     let bytes = result.bundle.compressed_bytes() as u64;
@@ -212,12 +246,19 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                         Sink::Archive { .. } => {
                             let t = Timer::start();
                             let w = writer.as_mut().expect("archive sink open");
-                            w.write_shard(
-                                result.start,
-                                result.end,
-                                &result.bundle,
-                                (result.secs * 1e9) as u64,
-                            )?;
+                            let cost = (result.secs * 1e9) as u64;
+                            match result.spatial.take() {
+                                Some(spatial) => w.write_shard_spatial(
+                                    result.start,
+                                    result.end,
+                                    &result.bundle,
+                                    cost,
+                                    spatial,
+                                )?,
+                                None => {
+                                    w.write_shard(result.start, result.end, &result.bundle, cost)?
+                                }
+                            }
                             sink_secs += t.secs();
                         }
                         Sink::Model { model, procs } => {
@@ -244,6 +285,18 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                 start: shard.start,
                 end: shard.end,
                 shard: snap.slice(shard.start, shard.end),
+                spatial: cfg.spatial.as_ref().map(|sp| {
+                    let (mkey_lo, mkey_hi) = if shard.start < shard.end {
+                        (sp.keys[shard.start], sp.keys[shard.end - 1])
+                    } else {
+                        (0, 0)
+                    };
+                    RankSpatial {
+                        mkey_lo,
+                        mkey_hi,
+                        seg: sp.seg,
+                    }
+                }),
             };
             if task_tx.send(task).is_err() {
                 break; // workers died; join below reports the error
@@ -316,6 +369,7 @@ mod tests {
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,
+                spatial: None,
             },
         )
         .unwrap();
@@ -364,6 +418,7 @@ mod tests {
                     model: slow,
                     procs: 1,
                 },
+                spatial: None,
             },
         )
         .unwrap();
@@ -390,6 +445,7 @@ mod tests {
                     path: path.clone(),
                     spec: "sz_lv:lossless=false,radius=32768".into(),
                 },
+                spatial: None,
             },
         )
         .unwrap();
@@ -414,6 +470,70 @@ mod tests {
     }
 
     #[test]
+    fn spatial_archive_sink_writes_spatial_footer() {
+        use crate::coordinator::spatial::plan_spatial;
+        use crate::data::archive::{decode_region, Region, ShardReader};
+        let s = md(12_000);
+        let plan = plan_spatial(&s, 8, 8, &ExecCtx::sequential()).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("nblc_pipe_spatial_{}.nblc", std::process::id()));
+        let report = run_insitu(
+            &plan.snapshot,
+            &InsituConfig {
+                shards: 8,
+                workers: 2,
+                threads: 1,
+                queue_depth: 2,
+                quality: Quality::rel(1e-4),
+                factory: factory(),
+                layout: Some(plan.layout.clone()),
+                sink: Sink::Archive {
+                    path: path.clone(),
+                    spec: "sz_lv:lossless=false,radius=32768".into(),
+                },
+                spatial: Some(SpatialInsitu {
+                    bits: 8,
+                    seg: 1024,
+                    keys: Arc::clone(&plan.keys),
+                }),
+            },
+        )
+        .unwrap();
+        let index = report.shard_index.as_ref().expect("archive sink returns its index");
+        let sp = index.spatial.as_ref().expect("spatial block in the footer");
+        assert_eq!(sp.bits, 8);
+        assert_eq!(sp.seg, 1024);
+        assert_eq!(sp.shards.len(), index.entries.len());
+        // Reopen: the spatial block round-trips, and a box equal to the
+        // first shard's bbox prunes at least the opposite Morton octants.
+        let reader = ShardReader::open(&path).unwrap();
+        let rsp = reader.spatial().expect("reader surfaces the spatial block");
+        let bb = rsp.shards[0].bbox;
+        // The region max is exclusive; bump it just past the closed bbox
+        // max so every particle of shard 0 stays inside.
+        let above = |v: f32| v + (v.abs() * 1e-5).max(1e-5);
+        let region = Region::new(
+            [bb[0], bb[2], bb[4]],
+            [above(bb[1]), above(bb[3]), above(bb[5])],
+        )
+        .unwrap();
+        let dec =
+            decode_region(&reader, reader.spec(), &region, &ExecCtx::with_threads(2)).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(dec.indexed);
+        assert!(dec.shards_touched >= 1);
+        assert!(
+            dec.shards_touched < index.entries.len(),
+            "a one-shard box must prune something ({} of {} touched)",
+            dec.shards_touched,
+            index.entries.len()
+        );
+        // Every particle of shard 0 sits inside its own bbox, so the
+        // region decode must return at least that shard's population.
+        assert!(dec.snapshot.len() >= index.entries[0].particles() as usize);
+    }
+
+    #[test]
     fn explicit_layout_drives_shards() {
         let s = md(9_000);
         let layout = vec![
@@ -429,6 +549,7 @@ mod tests {
             factory: factory(),
             layout,
             sink: Sink::Null,
+            spatial: None,
         };
         let report = run_insitu(&s, &cfg(Some(layout.clone()))).unwrap();
         assert_eq!(report.layout, layout);
@@ -467,6 +588,7 @@ mod tests {
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,
+                spatial: None,
             },
         )
         .unwrap();
@@ -491,6 +613,7 @@ mod tests {
                     factory: factory(),
                     layout: None,
                     sink: Sink::Null,
+                    spatial: None,
                 },
             )
             .unwrap()
@@ -515,6 +638,7 @@ mod tests {
                 factory: factory(),
                 layout: None,
                 sink: Sink::Null,
+                spatial: None,
             },
         );
         assert!(r.is_err());

@@ -2,11 +2,24 @@
 //! by a rank-local compressor instance (compressors are not shared
 //! across threads — they are not required to be `Send + Sync`).
 
+use crate::data::archive::ShardSpatial;
 use crate::error::Result;
 use crate::exec::ExecCtx;
 use crate::quality::Quality;
 use crate::snapshot::{CompressedSnapshot, Snapshot, SnapshotCompressor};
 use crate::util::timer::Timer;
+
+/// Spatial-layout parameters a rank needs to produce its shard's
+/// footer spatial entry (see [`crate::coordinator::spatial`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RankSpatial {
+    /// Smallest Morton key in the shard (layout order).
+    pub mkey_lo: u64,
+    /// Largest Morton key in the shard.
+    pub mkey_hi: u64,
+    /// Decoded-order segment length for per-segment boxes (0 = none).
+    pub seg: usize,
+}
 
 /// Input to a rank: its shard of the snapshot.
 pub struct RankTask {
@@ -18,6 +31,10 @@ pub struct RankTask {
     pub end: usize,
     /// The shard's particles.
     pub shard: Snapshot,
+    /// Spatial-layout parameters (`None` outside spatial mode). When
+    /// set, the rank round-trips its bundle and records the decoded
+    /// coordinate boxes the archive footer will carry.
+    pub spatial: Option<RankSpatial>,
 }
 
 /// Output of a rank.
@@ -35,6 +52,8 @@ pub struct RankResult {
     pub bytes_in: usize,
     /// Compression wall time (seconds).
     pub secs: f64,
+    /// The shard's footer spatial entry (spatial mode only).
+    pub spatial: Option<ShardSpatial>,
 }
 
 impl RankResult {
@@ -59,6 +78,19 @@ pub fn run_rank(
     let t = Timer::start();
     let bundle = compressor.compress_with(ctx, &task.shard, quality)?;
     let secs = t.secs();
+    // Spatial mode: round-trip the bundle and box the *decoded*
+    // coordinates. Decoded bits are deterministic across threads and
+    // kernel backends, so whatever a later reader decodes lands inside
+    // these boxes exactly — no error-bound widening heuristics.
+    let spatial = match task.spatial {
+        Some(rs) => {
+            let decoded = compressor.decompress_with(ctx, &bundle)?;
+            Some(crate::coordinator::spatial::shard_spatial(
+                &decoded, rs.mkey_lo, rs.mkey_hi, rs.seg,
+            ))
+        }
+        None => None,
+    };
     Ok(RankResult {
         rank: task.rank,
         start: task.start,
@@ -66,6 +98,7 @@ pub fn run_rank(
         bundle,
         bytes_in,
         secs,
+        spatial,
     })
 }
 
@@ -90,6 +123,7 @@ mod tests {
                 start: 5_000,
                 end: 15_000,
                 shard,
+                spatial: None,
             },
             &comp,
             &Quality::rel(1e-4),

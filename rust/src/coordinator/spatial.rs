@@ -1,0 +1,405 @@
+//! Spatial shard planning: Morton-aligned layouts for region-prunable
+//! archives.
+//!
+//! The cost layout (see [`super::shard`]) cuts shard boundaries purely
+//! by predicted compression cost, so a shard's particles can come from
+//! anywhere in the simulation box and a region query must decode every
+//! shard. The spatial layout instead globally sorts the snapshot by its
+//! coordinate R-index (Morton / Z-order key, the same key build the RX
+//! codec family uses — [`crate::rindex`]) and only cuts boundaries where
+//! the Morton key changes octree cell at a chosen depth. Every shard
+//! then covers a contiguous Morton range — a compact set of octree
+//! cells — and its decoded-coordinate bounding box (recorded in the v3
+//! footer's spatial block) is tight enough that a small query box
+//! overlaps O(1) shards instead of all of them.
+//!
+//! Cost balancing still applies *within* the alignment constraint:
+//! [`rebalance_aligned`] runs the ordinary cost rebalancer and then
+//! snaps each boundary to the nearest allowed Morton cut, so the second
+//! pipeline round trades a little balance for spatial purity.
+
+use crate::coordinator::shard::{rebalance, split_even, Shard};
+use crate::data::archive::{ShardSpatial, MAX_MORTON_BITS};
+use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
+use crate::rindex::{build_rindex_ctx, sort, RIndexSource};
+use crate::snapshot::Snapshot;
+use std::sync::Arc;
+
+/// Default Morton depth per axis for the spatial layout (30-bit keys:
+/// fine enough that cells are far smaller than any practical shard).
+pub const DEFAULT_SPATIAL_BITS: u32 = 10;
+
+/// Default decoded-order segment length for per-segment bounding boxes
+/// in the footer's spatial block.
+pub const DEFAULT_SPATIAL_SEG: usize = 2048;
+
+/// A spatial sharding plan: the Morton-ordered snapshot, its sorted
+/// keys, the allowed cut positions, and an initial aligned layout.
+pub struct SpatialPlan {
+    /// The snapshot permuted into global Morton order — this is what
+    /// the pipeline compresses (the archive stores particles in this
+    /// order; region queries return sets, so the permutation is free).
+    pub snapshot: Snapshot,
+    /// Sorted Morton keys, parallel to `snapshot`'s particles. Shared
+    /// with the pipeline so per-shard key ranges need no realignment
+    /// after rebalancing.
+    pub keys: Arc<Vec<u64>>,
+    /// Morton bits per axis the keys were built with.
+    pub bits: u32,
+    /// Allowed interior cut positions (ascending, each in `1..n`): the
+    /// octree-cell boundaries at the chosen depth. A boundary placed on
+    /// one of these never splits a cell between two shards.
+    pub cuts: Vec<usize>,
+    /// Initial layout: an even split with every boundary snapped to the
+    /// nearest allowed cut.
+    pub layout: Vec<Shard>,
+}
+
+impl SpatialPlan {
+    /// Morton key range `(lo, hi)` covered by particles `[start, end)`
+    /// of the plan's (sorted) order — `(0, 0)` for an empty range.
+    pub fn key_range(&self, start: usize, end: usize) -> (u64, u64) {
+        if start >= end {
+            (0, 0)
+        } else {
+            (self.keys[start], self.keys[end - 1])
+        }
+    }
+}
+
+/// Build a spatial sharding plan: Morton-sort the snapshot, pick an
+/// octree depth with enough distinct cells to place `k` boundaries
+/// (at least ~4 cells per shard, falling back to full key granularity),
+/// and lay out `k` shards on cell boundaries. Deterministic for a given
+/// snapshot at any thread count (the key build and the radix sort both
+/// are).
+pub fn plan_spatial(snap: &Snapshot, k: usize, bits: u32, ctx: &ExecCtx) -> Result<SpatialPlan> {
+    if k == 0 {
+        return Err(Error::invalid("spatial layout needs at least one shard"));
+    }
+    if bits == 0 || bits as u64 > MAX_MORTON_BITS {
+        return Err(Error::invalid(format!(
+            "spatial Morton bits must be 1..={MAX_MORTON_BITS}, got {bits}"
+        )));
+    }
+    let raw = build_rindex_ctx(snap, RIndexSource::Coordinates, bits, ctx);
+    let perm = sort::sort_perm(&raw, 0);
+    let snapshot = snap.permute(&perm)?;
+    let keys: Vec<u64> = perm.iter().map(|&p| raw[p as usize]).collect();
+    let cuts = prefix_cuts(&keys, bits, k);
+    let layout = if cuts.is_empty() {
+        // Degenerate key distribution (all particles in one cell, or
+        // n < 2): alignment is meaningless, fall back to an even split.
+        split_even(snap.len(), k)
+    } else {
+        aligned_layout(snap.len(), k, &cuts)
+    };
+    Ok(SpatialPlan {
+        snapshot,
+        keys: Arc::new(keys),
+        bits,
+        cuts,
+        layout,
+    })
+}
+
+/// Interior positions where sorted `keys` cross an octree-cell boundary
+/// at the shallowest depth offering at least `4 * k` boundaries (else
+/// at full key granularity). Coarse cells keep shards aligned to big,
+/// boxy octree nodes; the fallback guarantees the cost balancer still
+/// has cuts to work with on clustered data.
+fn prefix_cuts(keys: &[u64], bits: u32, k: usize) -> Vec<usize> {
+    let n = keys.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    // Divergence depth per adjacent pair: 0 = identical keys, else the
+    // shallowest octree level whose cells separate them (1 = children
+    // of the root, `bits` = full key granularity).
+    let mut level = vec![0u32; n];
+    let mut hist = vec![0usize; bits as usize + 1];
+    for i in 1..n {
+        let x = keys[i - 1] ^ keys[i];
+        if x != 0 {
+            let h = 63 - x.leading_zeros(); // highest differing bit
+            let l = bits - (h / 3).min(bits - 1);
+            level[i] = l;
+            hist[l as usize] += 1;
+        }
+    }
+    let want = 4 * k;
+    let mut depth = bits;
+    let mut cum = 0usize;
+    for l in 1..=bits {
+        cum += hist[l as usize];
+        if cum >= want {
+            depth = l;
+            break;
+        }
+    }
+    (1..n).filter(|&i| level[i] != 0 && level[i] <= depth).collect()
+}
+
+/// The allowed cut nearest to `pos` (by particle distance; ties to the
+/// left). `cuts` must be non-empty and ascending.
+fn nearest_cut(cuts: &[usize], pos: usize) -> usize {
+    let i = cuts.partition_point(|&c| c < pos);
+    match (i.checked_sub(1).map(|j| cuts[j]), cuts.get(i)) {
+        (Some(lo), Some(&hi)) => {
+            if pos - lo <= hi - pos {
+                lo
+            } else {
+                hi
+            }
+        }
+        (Some(lo), None) => lo,
+        (None, Some(&hi)) => hi,
+        (None, None) => unreachable!("nearest_cut on empty cuts"),
+    }
+}
+
+/// Build `k` shards over `0..n` with every interior boundary on an
+/// allowed cut, starting from the even-split positions. Snapping can
+/// collide boundaries — the resulting empty shards are legal (the
+/// partition invariant allows them) and simply produce zero-length
+/// records.
+fn aligned_layout(n: usize, k: usize, cuts: &[usize]) -> Vec<Shard> {
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(0usize);
+    for j in 1..k {
+        let snapped = nearest_cut(cuts, j * n / k);
+        bounds.push(snapped.max(*bounds.last().unwrap()));
+    }
+    bounds.push(n);
+    bounds
+        .windows(2)
+        .enumerate()
+        .map(|(id, w)| Shard {
+            id,
+            start: w[0],
+            end: w[1].max(w[0]),
+        })
+        .collect()
+}
+
+/// Cost rebalancing under the spatial alignment constraint: run the
+/// ordinary [`rebalance`] and snap every interior boundary to the
+/// nearest allowed Morton cut (monotonically, so contiguity survives).
+/// With `cuts` empty this degenerates to plain rebalancing.
+pub fn rebalance_aligned(
+    shards: &[Shard],
+    cost_per_particle: &[f64],
+    cuts: &[usize],
+) -> Vec<Shard> {
+    let free = rebalance(shards, cost_per_particle);
+    if cuts.is_empty() || free.is_empty() {
+        return free;
+    }
+    let n = free.last().unwrap().end;
+    let k = free.len();
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(0usize);
+    for s in free.iter().take(k - 1) {
+        let snapped = nearest_cut(cuts, s.end).min(n);
+        bounds.push(snapped.max(*bounds.last().unwrap()));
+    }
+    bounds.push(n);
+    bounds
+        .windows(2)
+        .enumerate()
+        .map(|(id, w)| Shard {
+            id,
+            start: w[0],
+            end: w[1].max(w[0]),
+        })
+        .collect()
+}
+
+/// Compute a shard's footer spatial entry from its **decoded**
+/// snapshot: the AABB of the round-tripped coordinates plus
+/// decoded-order segment boxes every `seg` particles (`seg == 0` skips
+/// them). Using decoded values — not the originals — is what makes
+/// region pruning exact under lossy error for every codec, including
+/// reordering ones: whatever a later reader decodes is bit-identical
+/// (the determinism contract), so it lands inside these boxes by
+/// construction.
+pub fn shard_spatial(decoded: &Snapshot, mkey_lo: u64, mkey_hi: u64, seg: usize) -> ShardSpatial {
+    let n = decoded.len();
+    if n == 0 {
+        return ShardSpatial::empty();
+    }
+    let seg_boxes = if seg == 0 {
+        Vec::new()
+    } else {
+        (0..n)
+            .step_by(seg)
+            .map(|s0| aabb(decoded, s0, (s0 + seg).min(n)))
+            .collect()
+    };
+    ShardSpatial {
+        mkey_lo,
+        mkey_hi,
+        bbox: aabb(decoded, 0, n),
+        seg_boxes,
+    }
+}
+
+/// Closed coordinate AABB of particles `[a, b)` (`b > a`):
+/// `[xmin, xmax, ymin, ymax, zmin, zmax]`.
+fn aabb(s: &Snapshot, a: usize, b: usize) -> [f32; 6] {
+    let mut out = [0f32; 6];
+    for axis in 0..3 {
+        let f = &s.fields[axis];
+        let (mut lo, mut hi) = (f[a], f[a]);
+        for &v in &f[a + 1..b] {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        out[2 * axis] = lo;
+        out[2 * axis + 1] = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    fn assert_partition(shards: &[Shard], n: usize) {
+        assert_eq!(shards.first().unwrap().start, 0);
+        assert_eq!(shards.last().unwrap().end, n);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "shards must be contiguous");
+        }
+    }
+
+    fn assert_aligned(shards: &[Shard], keys: &[u64]) {
+        for s in shards.iter().skip(1) {
+            let b = s.start;
+            if b > 0 && b < keys.len() {
+                assert_ne!(
+                    keys[b - 1],
+                    keys[b],
+                    "boundary at {b} splits a run of equal Morton keys"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_aligned_partition_with_sorted_keys() {
+        let s = generate_md(&MdConfig {
+            n_particles: 20_000,
+            ..Default::default()
+        });
+        let plan = plan_spatial(&s, 8, 10, &ExecCtx::sequential()).unwrap();
+        assert_eq!(plan.snapshot.len(), s.len());
+        assert_eq!(plan.keys.len(), s.len());
+        assert!(plan.keys.windows(2).all(|w| w[0] <= w[1]), "keys sorted");
+        assert_partition(&plan.layout, s.len());
+        assert_aligned(&plan.layout, &plan.keys);
+        // Shard key ranges are disjoint and ordered: every shard covers
+        // a contiguous Morton range.
+        let ranges: Vec<(u64, u64)> = plan
+            .layout
+            .iter()
+            .filter(|sh| !sh.is_empty())
+            .map(|sh| plan.key_range(sh.start, sh.end))
+            .collect();
+        for (lo, hi) in &ranges {
+            assert!(lo <= hi);
+        }
+        for w in ranges.windows(2) {
+            assert!(w[0].1 < w[1].0, "shard key ranges must not interleave");
+        }
+        // The permutation really is the Morton sort of the input.
+        let mean_step = |xs: &[f32]| {
+            xs.windows(2).map(|w| (w[1] - w[0]).abs() as f64).sum::<f64>()
+                / (xs.len() - 1) as f64
+        };
+        assert!(
+            mean_step(&plan.snapshot.fields[0]) < mean_step(&s.fields[0]) * 0.5,
+            "spatial order should substantially improve coordinate locality"
+        );
+    }
+
+    #[test]
+    fn plan_is_deterministic_across_thread_counts() {
+        let s = generate_md(&MdConfig {
+            n_particles: 6_000,
+            ..Default::default()
+        });
+        let a = plan_spatial(&s, 5, 10, &ExecCtx::sequential()).unwrap();
+        for threads in [2usize, 8] {
+            let b = plan_spatial(&s, 5, 10, &ExecCtx::with_threads(threads)).unwrap();
+            assert_eq!(a.keys, b.keys, "@{threads} threads");
+            assert_eq!(a.cuts, b.cuts, "@{threads} threads");
+            assert_eq!(a.layout, b.layout, "@{threads} threads");
+            assert_eq!(a.snapshot, b.snapshot, "@{threads} threads");
+        }
+    }
+
+    #[test]
+    fn rebalance_respects_alignment() {
+        let s = generate_md(&MdConfig {
+            n_particles: 30_000,
+            ..Default::default()
+        });
+        let plan = plan_spatial(&s, 6, 10, &ExecCtx::sequential()).unwrap();
+        // Skewed costs pull boundaries around; they must stay on cuts.
+        let costs = [5.0, 1.0, 1.0, 1.0, 1.0, 0.2];
+        let rb = rebalance_aligned(&plan.layout, &costs, &plan.cuts);
+        assert_eq!(rb.len(), plan.layout.len());
+        assert_partition(&rb, s.len());
+        assert_aligned(&rb, &plan.keys);
+        // The expensive first shard should have shrunk despite snapping.
+        assert!(rb[0].len() < plan.layout[0].len());
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        // Empty snapshot.
+        let empty = Snapshot::default();
+        let plan = plan_spatial(&empty, 3, 10, &ExecCtx::sequential()).unwrap();
+        assert_eq!(plan.layout.len(), 3);
+        assert_partition(&plan.layout, 0);
+        assert!(plan.cuts.is_empty());
+        assert_eq!(plan.key_range(0, 0), (0, 0));
+        // More shards than particles: empty shards are fine.
+        let s = generate_md(&MdConfig {
+            n_particles: 5,
+            ..Default::default()
+        });
+        let plan = plan_spatial(&s, 8, 4, &ExecCtx::sequential()).unwrap();
+        assert_eq!(plan.layout.len(), 8);
+        assert_partition(&plan.layout, 5);
+        // Bad parameters are typed errors.
+        assert!(plan_spatial(&s, 0, 10, &ExecCtx::sequential()).is_err());
+        assert!(plan_spatial(&s, 2, 0, &ExecCtx::sequential()).is_err());
+        assert!(plan_spatial(&s, 2, 22, &ExecCtx::sequential()).is_err());
+    }
+
+    #[test]
+    fn shard_spatial_boxes_cover_all_particles() {
+        let s = generate_md(&MdConfig {
+            n_particles: 5_000,
+            ..Default::default()
+        });
+        let sp = shard_spatial(&s, 3, 99, 700);
+        assert_eq!((sp.mkey_lo, sp.mkey_hi), (3, 99));
+        assert_eq!(sp.seg_boxes.len(), 5_000usize.div_ceil(700));
+        for i in 0..s.len() {
+            let (x, y, z) = (s.fields[0][i], s.fields[1][i], s.fields[2][i]);
+            assert!(x >= sp.bbox[0] && x <= sp.bbox[1]);
+            assert!(y >= sp.bbox[2] && y <= sp.bbox[3]);
+            assert!(z >= sp.bbox[4] && z <= sp.bbox[5]);
+            let b = &sp.seg_boxes[i / 700];
+            assert!(x >= b[0] && x <= b[1] && y >= b[2] && y <= b[3] && z >= b[4] && z <= b[5]);
+        }
+        // Empty shard.
+        let e = shard_spatial(&Snapshot::default(), 0, 0, 64);
+        assert_eq!(e, ShardSpatial::empty());
+    }
+}

@@ -54,6 +54,12 @@
 //!             qlen v, canonical Quality string qlen bytes,
 //!             6 × f64 resolved per-field absolute bounds (max over
 //!             shards; 0.0 = exact coding)
+//!   spatial (optional — spatial-layout archives only):
+//!             marker 4 b"SPIX", bits v (Morton bits/axis), seg v
+//!             (decoded-order segment length, 0 = no segment boxes),
+//!             then per shard in footer order:
+//!             mkey_lo 8 u64, mkey_hi 8 u64, bbox 6 × f32,
+//!             nseg v, nseg × 6 × f32 segment boxes
 //!   file_crc  4   CRC-32 of every byte before the footer marker
 //!   foot_crc  4   CRC-32 of the footer from its marker through file_crc
 //!   foot_len  8   u64 byte length of marker..=foot_crc
@@ -103,6 +109,13 @@ pub const FORMAT_VERSION_V3: u32 = 3;
 const SHARD_MARKER: &[u8; 4] = b"SHRD";
 /// Footer marker preceding the shard index.
 const FOOTER_MARKER: &[u8; 4] = b"FIDX";
+/// Marker preceding the optional spatial block inside the footer. A
+/// quality block can never alias it: its first byte is the length of a
+/// canonical quality string, which is never followed by `PIX`.
+const SPATIAL_MARKER: &[u8; 4] = b"SPIX";
+/// Widest Morton key a spatial block may declare per axis (3 × 21 = 63
+/// interleaved bits fit a u64 with the sign bit to spare).
+pub const MAX_MORTON_BITS: u64 = 21;
 
 /// Caps against hostile headers (far above anything we write).
 const MAX_STR_LEN: usize = 4096;
@@ -410,6 +423,103 @@ pub struct ArchiveQuality {
     pub field_bounds: [f64; 6],
 }
 
+/// An axis-aligned query box over the coordinate planes, half-open on
+/// every axis (`min <= p < max`), so adjacent regions tile the domain
+/// without double-counting particles on shared faces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Region {
+    /// Inclusive lower corner (x, y, z).
+    pub min: [f32; 3],
+    /// Exclusive upper corner (x, y, z).
+    pub max: [f32; 3],
+}
+
+impl Region {
+    /// Build a region, rejecting non-finite or inverted corners.
+    /// `min == max` on an axis is allowed and selects nothing there
+    /// (an empty box is a valid query, not an error).
+    pub fn new(min: [f32; 3], max: [f32; 3]) -> Result<Region> {
+        for a in 0..3 {
+            if !min[a].is_finite() || !max[a].is_finite() || min[a] > max[a] {
+                return Err(Error::invalid(format!(
+                    "region axis {a} is inverted or not finite: {}..{}",
+                    min[a], max[a]
+                )));
+            }
+        }
+        Ok(Region { min, max })
+    }
+
+    /// Half-open membership test for one particle position.
+    pub fn contains(&self, x: f32, y: f32, z: f32) -> bool {
+        let p = [x, y, z];
+        (0..3).all(|a| p[a] >= self.min[a] && p[a] < self.max[a])
+    }
+
+    /// Overlap test against a *closed* AABB in the footer layout
+    /// `[xmin, xmax, ymin, ymax, zmin, zmax]`.
+    pub fn intersects(&self, bbox: &[f32; 6]) -> bool {
+        (0..3).all(|a| bbox[2 * a] < self.max[a] && bbox[2 * a + 1] >= self.min[a])
+    }
+
+    /// True when the closed AABB lies entirely inside the region — the
+    /// filter's take-everything fast path.
+    pub fn covers(&self, bbox: &[f32; 6]) -> bool {
+        (0..3).all(|a| bbox[2 * a] >= self.min[a] && bbox[2 * a + 1] < self.max[a])
+    }
+}
+
+/// Per-shard entry of the footer's spatial block: the shard's Morton
+/// key range in layout order plus the AABB of its **decoded**
+/// coordinates. Computing the box from the round-tripped (decoded)
+/// values rather than the originals makes region pruning exact for
+/// every codec — lossy error, fpzip's near-bound precision mode, and
+/// the RX family's reordering all land inside the stored box by
+/// construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpatial {
+    /// Smallest Morton key among the shard's particles (0 for an
+    /// empty shard).
+    pub mkey_lo: u64,
+    /// Largest Morton key among the shard's particles (0 for an
+    /// empty shard).
+    pub mkey_hi: u64,
+    /// Decoded-coordinate AABB: `[xmin, xmax, ymin, ymax, zmin, zmax]`.
+    pub bbox: [f32; 6],
+    /// AABBs over consecutive runs of the block's `seg` particles in
+    /// the shard's decoded order (empty when `seg` is 0). Refines both
+    /// pruning (a shard none of whose segments overlap is skipped) and
+    /// the membership filter (whole segments are skipped or taken).
+    pub seg_boxes: Vec<[f32; 6]>,
+}
+
+impl ShardSpatial {
+    /// Spatial entry of an empty shard.
+    pub fn empty() -> ShardSpatial {
+        ShardSpatial {
+            mkey_lo: 0,
+            mkey_hi: 0,
+            bbox: [0.0; 6],
+            seg_boxes: Vec::new(),
+        }
+    }
+}
+
+/// The footer's optional spatial block: one [`ShardSpatial`] per shard,
+/// parallel to the shard table, plus the layout parameters that
+/// produced it. Present only in archives written under the spatial
+/// sharding mode — cost-layout archives stay byte-identical to the
+/// pre-spatial format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveSpatial {
+    /// Morton bits per axis of the layout keys (1..=21).
+    pub bits: u32,
+    /// Decoded-order segment length for `seg_boxes` (0 = none).
+    pub seg: u64,
+    /// Per-shard spatial entries in footer (logical) order.
+    pub shards: Vec<ShardSpatial>,
+}
+
 /// The decoded v3 footer: snapshot-level metadata plus the shard table
 /// in logical (particle-range) order.
 #[derive(Clone, Debug)]
@@ -430,6 +540,9 @@ pub struct ShardIndex {
     /// The archived quality block (`None` for pre-quality archives —
     /// v1/v2 files and v3 files written before the quality redesign).
     pub quality: Option<ArchiveQuality>,
+    /// The spatial block (`None` for cost-layout and pre-spatial
+    /// archives — region reads then fall back to a full scan).
+    pub spatial: Option<ArchiveSpatial>,
 }
 
 impl ShardIndex {
@@ -463,6 +576,18 @@ pub struct ShardWriter {
     /// False once a shard's bundle arrived without resolved bounds
     /// (legacy producer) — the quality block is then omitted.
     bounds_known: bool,
+    /// Armed by [`Self::enable_spatial`]: layout parameters plus the
+    /// per-shard spatial entries keyed by `(start, end)` (records
+    /// arrive in completion order; [`Self::finish`] sorts them back
+    /// into footer order alongside the shard table).
+    spatial: Option<SpatialAcc>,
+}
+
+/// Spatial-block accumulator inside [`ShardWriter`].
+struct SpatialAcc {
+    bits: u32,
+    seg: u64,
+    per_shard: Vec<((u64, u64), ShardSpatial)>,
 }
 
 impl ShardWriter {
@@ -501,9 +626,35 @@ impl ShardWriter {
             quality: quality.canonical(),
             bounds: [0.0; 6],
             bounds_known: true,
+            spatial: None,
         };
         sw.emit(&head)?;
         Ok(sw)
+    }
+
+    /// Arm the spatial block: every subsequent shard must be written
+    /// through [`Self::write_shard_spatial`], and [`Self::finish`]
+    /// appends the block to the footer. `bits` is the Morton depth per
+    /// axis of the layout keys; `seg` the decoded-order segment length
+    /// for per-segment boxes (0 = shard boxes only). Must be called
+    /// before any shard is written.
+    pub fn enable_spatial(&mut self, bits: u32, seg: u64) -> Result<()> {
+        if !self.entries.is_empty() {
+            return Err(Error::invalid(
+                "enable_spatial must be called before the first shard",
+            ));
+        }
+        if bits == 0 || bits as u64 > MAX_MORTON_BITS {
+            return Err(Error::invalid(format!(
+                "spatial Morton bits must be 1..={MAX_MORTON_BITS}, got {bits}"
+            )));
+        }
+        self.spatial = Some(SpatialAcc {
+            bits,
+            seg,
+            per_shard: Vec::new(),
+        });
+        Ok(())
     }
 
     /// Write bytes, tracking the file offset and the running whole-file
@@ -519,6 +670,77 @@ impl ShardWriter {
     /// Shards may arrive in any order; `cost_nanos` is the shard's
     /// compression time, recorded in the footer for rebalancing.
     pub fn write_shard(
+        &mut self,
+        start: usize,
+        end: usize,
+        bundle: &CompressedSnapshot,
+        cost_nanos: u64,
+    ) -> Result<()> {
+        if self.spatial.is_some() {
+            return Err(Error::invalid(
+                "spatial archive: every shard must go through write_shard_spatial",
+            ));
+        }
+        self.write_shard_impl(start, end, bundle, cost_nanos)
+    }
+
+    /// [`Self::write_shard`] plus the shard's spatial entry (requires
+    /// [`Self::enable_spatial`]). The entry is validated against the
+    /// block parameters here, so [`ShardReader`] never sees a spatial
+    /// block this writer produced that it would reject.
+    pub fn write_shard_spatial(
+        &mut self,
+        start: usize,
+        end: usize,
+        bundle: &CompressedSnapshot,
+        cost_nanos: u64,
+        spatial: ShardSpatial,
+    ) -> Result<()> {
+        let (bits, seg) = match &self.spatial {
+            Some(acc) => (acc.bits, acc.seg),
+            None => {
+                return Err(Error::invalid(
+                    "write_shard_spatial requires enable_spatial",
+                ))
+            }
+        };
+        let np = (end - start.min(end)) as u64;
+        let expect_segs = if seg == 0 || np == 0 { 0 } else { np.div_ceil(seg) };
+        if spatial.seg_boxes.len() as u64 != expect_segs {
+            return Err(Error::invalid(format!(
+                "shard {start}..{end}: {} segment boxes, layout seg={seg} implies {expect_segs}",
+                spatial.seg_boxes.len()
+            )));
+        }
+        if np > 0 {
+            let max_key = morton_key_max(bits);
+            if spatial.mkey_lo > spatial.mkey_hi || spatial.mkey_hi > max_key {
+                return Err(Error::invalid(format!(
+                    "shard {start}..{end}: Morton range {:#x}..{:#x} invalid for {bits} bits",
+                    spatial.mkey_lo, spatial.mkey_hi
+                )));
+            }
+            for b in std::iter::once(&spatial.bbox).chain(&spatial.seg_boxes) {
+                for a in 0..3 {
+                    if !b[2 * a].is_finite() || !b[2 * a + 1].is_finite() || b[2 * a] > b[2 * a + 1]
+                    {
+                        return Err(Error::invalid(format!(
+                            "shard {start}..{end}: bbox axis {a} inverted or not finite"
+                        )));
+                    }
+                }
+            }
+        }
+        self.write_shard_impl(start, end, bundle, cost_nanos)?;
+        // Only after the record landed, so a rejected shard leaves no
+        // orphan spatial entry behind.
+        if let Some(acc) = &mut self.spatial {
+            acc.per_shard.push(((start as u64, end as u64), spatial));
+        }
+        Ok(())
+    }
+
+    fn write_shard_impl(
         &mut self,
         start: usize,
         end: usize,
@@ -597,7 +819,29 @@ impl ShardWriter {
         } else {
             None
         };
-        let tail = encode_footer_tail(n, &self.entries, self.crc, quality.as_ref());
+        let spatial = match self.spatial {
+            Some(mut acc) => {
+                // Completion order in, footer order out — exactly like
+                // the shard table itself.
+                acc.per_shard.sort_by_key(|(k, _)| *k);
+                let keys: Vec<(u64, u64)> = acc.per_shard.iter().map(|(k, _)| *k).collect();
+                let want: Vec<(u64, u64)> =
+                    self.entries.iter().map(|e| (e.start, e.end)).collect();
+                if keys != want {
+                    return Err(Error::invalid(
+                        "spatial entries do not match the shard table",
+                    ));
+                }
+                Some(ArchiveSpatial {
+                    bits: acc.bits,
+                    seg: acc.seg,
+                    shards: acc.per_shard.into_iter().map(|(_, s)| s).collect(),
+                })
+            }
+            None => None,
+        };
+        let tail =
+            encode_footer_tail(n, &self.entries, self.crc, quality.as_ref(), spatial.as_ref());
         self.w.write_all(&tail)?;
         self.w.flush()?;
         Ok(ShardIndex {
@@ -607,8 +851,15 @@ impl ShardWriter {
             entries: self.entries,
             file_crc: self.crc,
             quality,
+            spatial,
         })
     }
+}
+
+/// Largest Morton key representable at `bits` per axis.
+fn morton_key_max(bits: u32) -> u64 {
+    debug_assert!(bits >= 1 && bits as u64 <= MAX_MORTON_BITS);
+    (1u64 << (3 * bits.min(MAX_MORTON_BITS as u32))) - 1
 }
 
 /// Encode everything after the last shard record: footer (shard table
@@ -621,6 +872,7 @@ fn encode_footer_tail(
     entries: &[ShardEntry],
     file_crc: u32,
     quality: Option<&ArchiveQuality>,
+    spatial: Option<&ArchiveSpatial>,
 ) -> Vec<u8> {
     let mut f = Vec::with_capacity(32 + entries.len() * 24);
     f.extend_from_slice(FOOTER_MARKER);
@@ -641,6 +893,24 @@ fn encode_footer_tail(
             f.extend_from_slice(&b.to_le_bytes());
         }
     }
+    if let Some(sp) = spatial {
+        f.extend_from_slice(SPATIAL_MARKER);
+        put_uvarint(&mut f, sp.bits as u64);
+        put_uvarint(&mut f, sp.seg);
+        for s in &sp.shards {
+            f.extend_from_slice(&s.mkey_lo.to_le_bytes());
+            f.extend_from_slice(&s.mkey_hi.to_le_bytes());
+            for v in &s.bbox {
+                f.extend_from_slice(&v.to_le_bytes());
+            }
+            put_uvarint(&mut f, s.seg_boxes.len() as u64);
+            for b in &s.seg_boxes {
+                for v in b {
+                    f.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
     f.extend_from_slice(&file_crc.to_le_bytes());
     let foot_crc = crc32(&f);
     f.extend_from_slice(&foot_crc.to_le_bytes());
@@ -648,6 +918,100 @@ fn encode_footer_tail(
     f.extend_from_slice(&foot_len.to_le_bytes());
     f.extend_from_slice(MAGIC_TAIL);
     f
+}
+
+/// Parse and validate the footer's spatial block. Runs before the
+/// shard table has been cross-checked, so every entry field is treated
+/// as hostile (no `particles()`, which would underflow on `start >
+/// end`). `fl` is the footer length; the block must end exactly at the
+/// file CRC (`fl - 8`), which the caller re-checks.
+fn parse_spatial_block(
+    foot: &[u8],
+    pos: &mut usize,
+    fl: usize,
+    entries: &[ShardEntry],
+) -> Result<ArchiveSpatial> {
+    if *pos + 4 > fl - 8 || &foot[*pos..*pos + 4] != SPATIAL_MARKER {
+        return Err(Error::corrupt("trailing garbage in v3 footer"));
+    }
+    *pos += 4;
+    let bits = get_uvarint(foot, pos)?;
+    if bits == 0 || bits > MAX_MORTON_BITS {
+        return Err(Error::corrupt(format!(
+            "implausible spatial Morton depth {bits}"
+        )));
+    }
+    let max_key = morton_key_max(bits as u32);
+    let seg = get_uvarint(foot, pos)?;
+    if seg > MAX_PARTICLES {
+        return Err(Error::corrupt("implausible spatial segment length"));
+    }
+    let mut shards = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let raw = take(foot, pos, 40, "spatial shard entry")?;
+        let mkey_lo = u64::from_le_bytes(raw[0..8].try_into().unwrap());
+        let mkey_hi = u64::from_le_bytes(raw[8..16].try_into().unwrap());
+        let mut bbox = [0f32; 6];
+        for (a, v) in bbox.iter_mut().enumerate() {
+            *v = f32::from_le_bytes(raw[16 + 4 * a..20 + 4 * a].try_into().unwrap());
+        }
+        let np = e.end.saturating_sub(e.start);
+        let nseg = get_uvarint(foot, pos)?;
+        let expect = if seg == 0 || np == 0 { 0 } else { np.div_ceil(seg) };
+        if nseg != expect {
+            return Err(Error::corrupt(format!(
+                "shard {i}: {nseg} spatial segment boxes, expected {expect}"
+            )));
+        }
+        // Allocation guard: the boxes must physically fit in what is
+        // left of the footer before reserving anything.
+        (nseg as usize)
+            .checked_mul(24)
+            .filter(|&b| *pos + b <= fl)
+            .ok_or_else(|| Error::corrupt("spatial segment table larger than the footer"))?;
+        let mut seg_boxes = Vec::with_capacity(nseg as usize);
+        for _ in 0..nseg {
+            let raw = take(foot, pos, 24, "spatial segment box")?;
+            let mut b = [0f32; 6];
+            for (a, v) in b.iter_mut().enumerate() {
+                *v = f32::from_le_bytes(raw[4 * a..4 * a + 4].try_into().unwrap());
+            }
+            seg_boxes.push(b);
+        }
+        if np > 0 {
+            if mkey_lo > mkey_hi {
+                return Err(Error::corrupt(format!(
+                    "shard {i}: inverted Morton key range"
+                )));
+            }
+            if mkey_hi > max_key {
+                return Err(Error::corrupt(format!(
+                    "shard {i}: Morton key beyond {bits}-bit depth"
+                )));
+            }
+            for b in std::iter::once(&bbox).chain(&seg_boxes) {
+                for a in 0..3 {
+                    if !b[2 * a].is_finite() || !b[2 * a + 1].is_finite() || b[2 * a] > b[2 * a + 1]
+                    {
+                        return Err(Error::corrupt(format!(
+                            "shard {i}: spatial bbox axis {a} inverted or not finite"
+                        )));
+                    }
+                }
+            }
+        }
+        shards.push(ShardSpatial {
+            mkey_lo,
+            mkey_hi,
+            bbox,
+            seg_boxes,
+        });
+    }
+    Ok(ArchiveSpatial {
+        bits: bits as u32,
+        seg,
+        shards,
+    })
 }
 
 /// Seekable archive reader for all format versions. v3 archives are
@@ -699,6 +1063,7 @@ impl ShardReader {
                 }],
                 file_crc: 0,
                 quality: None,
+                spatial: None,
             },
             legacy: Some(arch.bundle),
             data_end: file_len,
@@ -769,9 +1134,11 @@ impl ShardReader {
         }
         // Optional quality block (files written since the quality
         // redesign): canonical quality string + 6 resolved per-field
-        // bounds. Its absence (pos already at the file CRC) marks a
-        // pre-quality archive.
-        let quality = if pos != fl - 8 {
+        // bounds. Its absence (pos already at the file CRC, or a
+        // spatial marker next) marks a pre-quality archive.
+        let at_spatial =
+            |pos: usize| pos + 4 <= fl - 8 && &foot[pos..pos + 4] == SPATIAL_MARKER;
+        let quality = if pos != fl - 8 && !at_spatial(pos) {
             let qlen = get_uvarint(&foot, &mut pos)?;
             if qlen == 0 || qlen > MAX_STR_LEN as u64 {
                 return Err(Error::corrupt("implausible quality-block length"));
@@ -788,9 +1155,6 @@ impl ShardReader {
                     return Err(Error::corrupt("implausible resolved quality bound"));
                 }
             }
-            if pos != fl - 8 {
-                return Err(Error::corrupt("trailing garbage in v3 footer"));
-            }
             Some(ArchiveQuality {
                 quality: qstr,
                 field_bounds,
@@ -798,6 +1162,15 @@ impl ShardReader {
         } else {
             None
         };
+        // Optional spatial block (spatial-layout archives only).
+        let spatial = if pos != fl - 8 {
+            Some(parse_spatial_block(&foot, &mut pos, fl, &entries)?)
+        } else {
+            None
+        };
+        if pos != fl - 8 {
+            return Err(Error::corrupt("trailing garbage in v3 footer"));
+        }
         let file_crc = u32::from_le_bytes(foot[fl - 8..fl - 4].try_into().unwrap());
 
         // Header (start of file): spec + error bound, CRC-protected.
@@ -851,6 +1224,7 @@ impl ShardReader {
                 entries,
                 file_crc,
                 quality,
+                spatial,
             },
             legacy: None,
             data_end,
@@ -899,6 +1273,57 @@ impl ShardReader {
             .filter(|(_, e)| e.start < e.end && e.start < b && e.end > a)
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// The footer's spatial block (`None` for cost-layout, pre-spatial
+    /// v3, and v1/v2 archives).
+    pub fn spatial(&self) -> Option<&ArchiveSpatial> {
+        self.index.spatial.as_ref()
+    }
+
+    /// Shard selection for a region query: `(touched, pruned, indexed)`
+    /// where `touched` are the indices of non-empty shards the query
+    /// must decode, `pruned` how many non-empty shards the spatial
+    /// index eliminated, and `indexed` whether a spatial block drove
+    /// the decision. Without one, every non-empty shard is touched and
+    /// `pruned` is 0 — the full-scan fallback for pre-spatial archives.
+    /// A shard survives only if the region overlaps its bbox *and*, when
+    /// segment boxes exist, at least one segment box (segments tile the
+    /// shard, so their union is tighter than the shard box).
+    pub fn shards_for_region(&self, region: &Region) -> (Vec<usize>, usize, bool) {
+        let nonempty = |e: &ShardEntry| e.start < e.end;
+        match &self.index.spatial {
+            Some(sp) => {
+                let mut touched = Vec::new();
+                let mut pruned = 0usize;
+                for (i, e) in self.index.entries.iter().enumerate() {
+                    if !nonempty(e) {
+                        continue;
+                    }
+                    let s = &sp.shards[i];
+                    let hit = region.intersects(&s.bbox)
+                        && (s.seg_boxes.is_empty()
+                            || s.seg_boxes.iter().any(|b| region.intersects(b)));
+                    if hit {
+                        touched.push(i);
+                    } else {
+                        pruned += 1;
+                    }
+                }
+                (touched, pruned, true)
+            }
+            None => (
+                self.index
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| nonempty(e))
+                    .map(|(i, _)| i)
+                    .collect(),
+                0,
+                false,
+            ),
+        }
     }
 
     /// Footer cost counter for shard `i`: the nanoseconds the writer
@@ -1265,6 +1690,190 @@ pub fn decode_shards_cached(
         particle_end,
         exact,
         reordered,
+    })
+}
+
+/// Result of [`decode_region`].
+#[derive(Debug)]
+pub struct DecodedRegion {
+    /// The particles inside the region, exact membership on decoded
+    /// coordinates, stitched in logical shard order (each shard
+    /// internally in its decoded order). Empty when nothing matches.
+    pub snapshot: Snapshot,
+    /// Shard records fetched and decoded — the pruning guarantee:
+    /// O(overlapping shards), not O(all shards), on a spatial archive.
+    pub shards_touched: usize,
+    /// Non-empty shards the spatial index eliminated without touching.
+    pub shards_pruned: usize,
+    /// Whether a footer spatial block drove the pruning (`false` =
+    /// full-scan fallback on a pre-spatial or cost-layout archive).
+    pub indexed: bool,
+}
+
+/// Filter one decoded shard down to the particles inside `region`,
+/// walking decoded-order segments of `seg` particles: a segment whose
+/// box misses the region is skipped wholesale, one the region covers is
+/// taken wholesale, and only straddling segments pay the per-particle
+/// test. Without segment boxes the whole shard is one segment.
+fn filter_region(part: &Snapshot, region: &Region, seg: usize, seg_boxes: &[[f32; 6]]) -> Snapshot {
+    let n = part.len();
+    let (xs, ys, zs) = (&part.fields[0], &part.fields[1], &part.fields[2]);
+    let seg = if seg == 0 || seg_boxes.is_empty() { n.max(1) } else { seg };
+    let mut keep: Vec<u32> = Vec::new();
+    let (mut s0, mut si) = (0usize, 0usize);
+    while s0 < n {
+        let s1 = (s0 + seg).min(n);
+        match seg_boxes.get(si) {
+            Some(b) if !region.intersects(b) => {}
+            Some(b) if region.covers(b) => keep.extend(s0 as u32..s1 as u32),
+            _ => {
+                for i in s0..s1 {
+                    if region.contains(xs[i], ys[i], zs[i]) {
+                        keep.push(i as u32);
+                    }
+                }
+            }
+        }
+        s0 = s1;
+        si += 1;
+    }
+    if keep.len() == n {
+        return part.clone();
+    }
+    Snapshot {
+        name: part.name.clone(),
+        fields: std::array::from_fn(|f| {
+            keep.iter().map(|&i| part.fields[f][i as usize]).collect()
+        }),
+        box_size: part.box_size,
+        seed: part.seed,
+    }
+}
+
+/// Decode exactly the particles inside an axis-aligned `region`. On a
+/// spatial-layout archive the footer's bbox index selects the
+/// overlapping shards up front — only those are fetched and decoded
+/// (fanned across `ctx` like [`decode_shards`]) — and each decoded
+/// shard is trimmed to exact membership, segment boxes fast-pathing the
+/// filter. Pre-spatial and cost-layout archives still answer correctly
+/// through a decode-everything fallback ([`DecodedRegion::indexed`] is
+/// then `false`). Membership is evaluated on *decoded* coordinates —
+/// the same values a full decode + filter would test — so the result is
+/// identical for every codec, reordering or not, and an empty result is
+/// `Ok`, not an error.
+pub fn decode_region(
+    reader: &ShardReader,
+    spec: &str,
+    region: &Region,
+    ctx: &ExecCtx,
+) -> Result<DecodedRegion> {
+    let factory = crate::compressors::registry::factory(spec)?;
+    let (touched, pruned, indexed) = reader.shards_for_region(region);
+    if touched.is_empty() {
+        return Ok(DecodedRegion {
+            snapshot: Snapshot::default(),
+            shards_touched: 0,
+            shards_pruned: pruned,
+            indexed,
+        });
+    }
+    let seg = reader.spatial().map(|s| s.seg as usize).unwrap_or(0);
+    let parts: Vec<Snapshot> = if let Some(bundle) = reader.single_record() {
+        let part = factory().decompress_with(ctx, bundle)?;
+        if part.len() as u64 != reader.n() {
+            return Err(Error::corrupt(format!(
+                "archive decoded to {} particles, header says {}",
+                part.len(),
+                reader.n()
+            )));
+        }
+        vec![filter_region(&part, region, 0, &[])]
+    } else {
+        // Same two-axis thread split as `decode_shards`; the membership
+        // filter runs inside the fan-out, so pruned-down queries also
+        // parallelize the trimming.
+        let per_shard = (ctx.threads() / touched.len()).max(1);
+        let inner = ExecCtx::with_threads(per_shard);
+        ctx.try_par(&touched, |&i| {
+            let comp = factory();
+            let bundle = reader.read_shard(i)?;
+            let part = comp.decompress_with(&inner, &bundle)?;
+            let e = &reader.index().entries[i];
+            if part.len() as u64 != e.end - e.start {
+                return Err(Error::corrupt(format!(
+                    "shard {i} decoded to {} particles, footer says {}",
+                    part.len(),
+                    e.end - e.start
+                )));
+            }
+            let boxes = reader
+                .spatial()
+                .map(|s| s.shards[i].seg_boxes.as_slice())
+                .unwrap_or(&[]);
+            Ok(filter_region(&part, region, seg, boxes))
+        })?
+    };
+    let snapshot = if parts.len() == 1 {
+        parts.into_iter().next().unwrap()
+    } else {
+        Snapshot::concat(&parts)?
+    };
+    Ok(DecodedRegion {
+        snapshot,
+        shards_touched: touched.len(),
+        shards_pruned: pruned,
+        indexed,
+    })
+}
+
+/// [`decode_region`] with the per-shard decode replaced by a caller
+/// hook — the serve daemon's cached region path. Cache entries are
+/// whole decoded shards (the same `fetch` contract, and the same
+/// entries, as [`decode_shards_cached`]), so hot shards serve range
+/// *and* region requests alike; only the membership filter re-runs per
+/// request.
+pub fn decode_region_cached(
+    reader: &ShardReader,
+    region: &Region,
+    ctx: &ExecCtx,
+    fetch: &(dyn Fn(usize) -> Result<std::sync::Arc<Snapshot>> + Sync),
+) -> Result<DecodedRegion> {
+    let (touched, pruned, indexed) = reader.shards_for_region(region);
+    if touched.is_empty() {
+        return Ok(DecodedRegion {
+            snapshot: Snapshot::default(),
+            shards_touched: 0,
+            shards_pruned: pruned,
+            indexed,
+        });
+    }
+    let seg = reader.spatial().map(|s| s.seg as usize).unwrap_or(0);
+    let parts = ctx.try_par(&touched, |&i| {
+        let part = fetch(i)?;
+        let e = &reader.index().entries[i];
+        if part.len() as u64 != e.end - e.start {
+            return Err(Error::corrupt(format!(
+                "shard {i} decoded to {} particles, footer says {}",
+                part.len(),
+                e.end - e.start
+            )));
+        }
+        let boxes = reader
+            .spatial()
+            .map(|s| s.shards[i].seg_boxes.as_slice())
+            .unwrap_or(&[]);
+        Ok(filter_region(&part, region, seg, boxes))
+    })?;
+    let snapshot = if parts.len() == 1 {
+        parts.into_iter().next().unwrap()
+    } else {
+        Snapshot::concat(&parts)?
+    };
+    Ok(DecodedRegion {
+        snapshot,
+        shards_touched: touched.len(),
+        shards_pruned: pruned,
+        indexed,
     })
 }
 
@@ -1651,7 +2260,7 @@ mod tests {
         let data_end = bytes.len() - 16 - foot_len as usize;
         let mut pre = bytes[..data_end].to_vec();
         let file_crc = crc32(&pre);
-        pre.extend_from_slice(&encode_footer_tail(1_000, &index3.entries, file_crc, None));
+        pre.extend_from_slice(&encode_footer_tail(1_000, &index3.entries, file_crc, None, None));
         let p3 = tmp_path("quality_pre_rewritten");
         std::fs::write(&p3, &pre).unwrap();
         let reader = ShardReader::open(&p3).unwrap();
@@ -1773,7 +2382,7 @@ mod tests {
         let p = tmp_path("hostile_case");
         for (what, n, entries) in hostile {
             let mut evil = data.to_vec();
-            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc, None));
+            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc, None, None));
             std::fs::write(&p, &evil).unwrap();
             match ShardReader::open(&p) {
                 Err(_) => {}
@@ -1856,6 +2465,375 @@ mod tests {
         assert!(reader.verify_file_crc().is_err());
         let dec = decode_shards(&reader, reader.spec(), None, &ctx).unwrap();
         crate::snapshot::verify_bounds(&s, &dec.snapshot, 1e-4).unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    // ------------------------------------------------------------------
+    // v3 spatial block + region decode
+    // ------------------------------------------------------------------
+
+    /// Write a spatial-layout v3 archive exactly the way the pipeline
+    /// sink does: Morton-sort, cut on octree cells, compute each shard's
+    /// footer entry from its round-tripped (decoded) coordinates.
+    fn v3_spatial_file(
+        tag: &str,
+        n: usize,
+        shards: usize,
+        seg: u64,
+    ) -> (Snapshot, std::path::PathBuf, ShardIndex) {
+        use crate::coordinator::spatial::{plan_spatial, shard_spatial};
+        let s = generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        });
+        let plan = plan_spatial(&s, shards, 10, &ExecCtx::sequential()).unwrap();
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let path = tmp_path(tag);
+        let mut w = ShardWriter::create(&path, V3_SPEC, V3_EB).unwrap();
+        w.enable_spatial(plan.bits, seg).unwrap();
+        for sh in &plan.layout {
+            let b = comp
+                .compress(
+                    &plan.snapshot.slice(sh.start, sh.end),
+                    &crate::quality::Quality::rel(V3_EB),
+                )
+                .unwrap();
+            let decoded = comp.decompress(&b).unwrap();
+            let (lo, hi) = plan.key_range(sh.start, sh.end);
+            let sp = shard_spatial(&decoded, lo, hi, seg as usize);
+            w.write_shard_spatial(sh.start, sh.end, &b, 0, sp).unwrap();
+        }
+        let index = w.finish().unwrap();
+        (plan.snapshot, path, index)
+    }
+
+    /// Membership indices of the particles inside `r`, from a full
+    /// decode — the brute-force reference every region decode must match.
+    fn brute_indices(full: &Snapshot, r: &Region) -> Vec<usize> {
+        (0..full.len())
+            .filter(|&i| r.contains(full.fields[0][i], full.fields[1][i], full.fields[2][i]))
+            .collect()
+    }
+
+    fn assert_region_matches_brute(
+        reader: &ShardReader,
+        full: &Snapshot,
+        r: &Region,
+        ctx: &ExecCtx,
+    ) -> DecodedRegion {
+        let dec = decode_region(reader, reader.spec(), r, ctx).unwrap();
+        let keep = brute_indices(full, r);
+        assert_eq!(dec.snapshot.len(), keep.len(), "membership count");
+        for f in 0..6 {
+            let want: Vec<f32> = keep.iter().map(|&i| full.fields[f][i]).collect();
+            assert_eq!(dec.snapshot.fields[f], want, "field {f}");
+        }
+        dec
+    }
+
+    #[test]
+    fn v3_spatial_block_roundtrips_and_prunes() {
+        let (_, path, index) = v3_spatial_file("spatial_rt", 8_000, 6, 512);
+        let sp = index.spatial.as_ref().expect("spatial block written");
+        assert_eq!(sp.bits, 10);
+        assert_eq!(sp.seg, 512);
+        assert_eq!(sp.shards.len(), index.entries.len());
+        let reader = ShardReader::open(&path).unwrap();
+        assert_eq!(reader.spatial(), Some(sp), "block survives the file roundtrip");
+        reader.verify_file_crc().unwrap();
+
+        let ctx = ExecCtx::with_threads(4);
+        // Decoded reference: membership is defined on decoded coords.
+        let full = decode_shards(&reader, reader.spec(), None, &ctx).unwrap().snapshot;
+
+        // Interior box around the first non-empty shard's bbox midpoint:
+        // must decode strictly fewer shards than exist, exactly.
+        let nonempty: Vec<usize> = index
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.start < e.end)
+            .map(|(i, _)| i)
+            .collect();
+        let b = &sp.shards[nonempty[0]].bbox;
+        let e0 = &index.entries[nonempty[0]];
+        // Anchor on a real particle of shard 0 so the box is never empty.
+        let i0 = ((e0.start + e0.end) / 2) as usize;
+        let mid = |a: usize| full.fields[a][i0];
+        let half = |a: usize| ((b[2 * a + 1] - b[2 * a]) / 4.0).max(1e-3);
+        let r = Region::new(
+            [mid(0) - half(0), mid(1) - half(1), mid(2) - half(2)],
+            [mid(0) + half(0), mid(1) + half(1), mid(2) + half(2)],
+        )
+        .unwrap();
+        let dec = assert_region_matches_brute(&reader, &full, &r, &ctx);
+        assert!(dec.indexed, "footer index must drive the decision");
+        assert!(dec.shards_touched >= 1);
+        assert!(
+            dec.shards_touched < nonempty.len(),
+            "an interior box must prune: touched {} of {}",
+            dec.shards_touched,
+            nonempty.len()
+        );
+        assert_eq!(dec.shards_touched + dec.shards_pruned, nonempty.len());
+        // Touched is a ceiling: brute-force the overlap count.
+        let overlap = nonempty
+            .iter()
+            .filter(|&&i| r.intersects(&sp.shards[i].bbox))
+            .count();
+        assert!(dec.shards_touched <= overlap, "segment boxes only tighten");
+
+        // Full-domain box returns everything.
+        let r_all = Region::new(
+            [f32::MIN / 2.0; 3],
+            [f32::MAX / 2.0; 3],
+        )
+        .unwrap();
+        let dec = assert_region_matches_brute(&reader, &full, &r_all, &ctx);
+        assert_eq!(dec.snapshot.len(), full.len());
+        assert_eq!(dec.shards_pruned, 0);
+
+        // A box in empty space touches nothing and is Ok, not an error.
+        let far = Region::new([1e30, 1e30, 1e30], [2e30, 2e30, 2e30]).unwrap();
+        let dec = decode_region(&reader, reader.spec(), &far, &ctx).unwrap();
+        assert_eq!(dec.snapshot.len(), 0);
+        assert_eq!(dec.shards_touched, 0);
+        assert_eq!(dec.shards_pruned, nonempty.len());
+
+        // Degenerate min == max box selects nothing.
+        let line = Region::new([mid(0); 3], [mid(0); 3]).unwrap();
+        let dec = decode_region(&reader, reader.spec(), &line, &ctx).unwrap();
+        assert_eq!(dec.snapshot.len(), 0);
+
+        // Face-clipping box: one face on the domain edge.
+        let xmin = full.fields[0].iter().copied().fold(f32::MAX, f32::min);
+        let clip = Region::new(
+            [xmin, mid(1) - half(1), mid(2) - half(2)],
+            [mid(0), mid(1) + half(1), mid(2) + half(2)],
+        )
+        .unwrap();
+        assert_region_matches_brute(&reader, &full, &clip, &ctx);
+
+        // The cached variant answers identically through a fetch hook.
+        let comp = registry::build_str(reader.spec()).unwrap();
+        let fetch = |i: usize| -> Result<std::sync::Arc<Snapshot>> {
+            Ok(std::sync::Arc::new(comp.decompress(&reader.read_shard(i)?)?))
+        };
+        let cached = decode_region_cached(&reader, &r, &ctx, &fetch).unwrap();
+        let uncached = decode_region(&reader, reader.spec(), &r, &ctx).unwrap();
+        assert_eq!(cached.shards_touched, uncached.shards_touched);
+        assert_eq!(cached.shards_pruned, uncached.shards_pruned);
+        for f in 0..6 {
+            assert_eq!(cached.snapshot.fields[f], uncached.snapshot.fields[f]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn region_decode_fallback_without_spatial_index() {
+        // Cost-layout archive: every region query still answers exactly,
+        // through the decode-everything fallback.
+        let (_, path, index) = v3_file("region_fallback", 4_000, 4);
+        let reader = ShardReader::open(&path).unwrap();
+        assert!(reader.spatial().is_none());
+        let ctx = ExecCtx::sequential();
+        let full = decode_shards(&reader, reader.spec(), None, &ctx).unwrap().snapshot;
+        let xs = &full.fields[0];
+        let (lo, hi) = (
+            xs.iter().copied().fold(f32::MAX, f32::min),
+            xs.iter().copied().fold(f32::MIN, f32::max),
+        );
+        let r = Region::new([lo, f32::MIN / 2.0, f32::MIN / 2.0], [
+            (lo + hi) / 2.0,
+            f32::MAX / 2.0,
+            f32::MAX / 2.0,
+        ])
+        .unwrap();
+        let dec = assert_region_matches_brute(&reader, &full, &r, &ctx);
+        assert!(!dec.indexed);
+        assert_eq!(dec.shards_touched, index.entries.len(), "full scan");
+        assert_eq!(dec.shards_pruned, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn region_validation_is_typed() {
+        assert!(Region::new([0.0; 3], [1.0; 3]).is_ok());
+        assert!(Region::new([0.0; 3], [0.0; 3]).is_ok(), "empty box is a valid query");
+        assert!(Region::new([1.0, 0.0, 0.0], [0.0, 1.0, 1.0]).is_err(), "inverted");
+        assert!(Region::new([f32::NAN, 0.0, 0.0], [1.0; 3]).is_err());
+        assert!(Region::new([0.0; 3], [f32::INFINITY, 1.0, 1.0]).is_err());
+        let r = Region::new([0.0; 3], [1.0; 3]).unwrap();
+        assert!(r.contains(0.0, 0.0, 0.0), "min corner is inside");
+        assert!(!r.contains(1.0, 0.0, 0.0), "max face is outside (half-open)");
+    }
+
+    #[test]
+    fn est_decode_cost_charges_only_listed_shards() {
+        let (_, path, index) = v3_file("cost_subset", 2_000, 4);
+        let reader = ShardReader::open(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let all: Vec<usize> = (0..index.entries.len()).collect();
+        let total = reader.est_decode_cost_nanos(&all);
+        let one = reader.est_decode_cost_nanos(&[0]);
+        assert!(one > 0, "never price real work at zero");
+        assert!(one < total, "a one-shard request must not be billed the archive");
+        assert_eq!(reader.est_decode_cost_nanos(&[]), 0);
+        assert_eq!(
+            reader.est_decode_cost_nanos(&[0, 1]),
+            reader.est_decode_cost_nanos(&[0]) + reader.est_decode_cost_nanos(&[1]),
+        );
+    }
+
+    #[test]
+    fn v3_spatial_writer_guards() {
+        use crate::coordinator::spatial::shard_spatial;
+        let s = generate_md(&MdConfig {
+            n_particles: 1_000,
+            ..Default::default()
+        });
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let b = comp.compress(&s, &q).unwrap();
+        let decoded = comp.decompress(&b).unwrap();
+        let p = tmp_path("spatial_guards");
+
+        // Spatial write without arming the block.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        let sp = shard_spatial(&decoded, 0, 7, 0);
+        assert!(w.write_shard_spatial(0, 1_000, &b, 0, sp.clone()).is_err());
+        // Plain write after arming.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.enable_spatial(10, 0).unwrap();
+        assert!(w.write_shard(0, 1_000, &b, 0).is_err());
+        // Arming after a shard landed.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.write_shard(0, 1_000, &b, 0).unwrap();
+        assert!(w.enable_spatial(10, 0).is_err());
+        // Bad depths.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        assert!(w.enable_spatial(0, 0).is_err());
+        assert!(w.enable_spatial(22, 0).is_err());
+        // Segment-count mismatch: seg=256 over 1000 particles needs 4 boxes.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.enable_spatial(10, 256).unwrap();
+        assert!(
+            w.write_shard_spatial(0, 1_000, &b, 0, sp.clone()).is_err(),
+            "seg_boxes must match the armed segment length"
+        );
+        // Inverted Morton range and inverted bbox.
+        let mut w = ShardWriter::create(&p, V3_SPEC, V3_EB).unwrap();
+        w.enable_spatial(10, 0).unwrap();
+        let mut bad = sp.clone();
+        bad.mkey_lo = 9;
+        bad.mkey_hi = 3;
+        assert!(w.write_shard_spatial(0, 1_000, &b, 0, bad).is_err());
+        let mut bad = sp.clone();
+        bad.bbox.swap(0, 1);
+        assert!(w.write_shard_spatial(0, 1_000, &b, 0, bad).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_hostile_spatial_footers_rejected() {
+        let (_, path, index) = v3_spatial_file("spatial_hostile", 3_000, 3, 512);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        let data_end = bytes.len() - 16 - foot_len as usize;
+        let data = &bytes[..data_end];
+        let file_crc = crc32(data);
+        let good = index.spatial.as_ref().unwrap().clone();
+        // Every rebuilt footer is internally consistent (fresh CRCs), so
+        // only the spatial *semantic* validation can reject it.
+        let rebuilt = |sp: &ArchiveSpatial| {
+            let mut evil = data.to_vec();
+            evil.extend_from_slice(&encode_footer_tail(
+                3_000,
+                &index.entries,
+                file_crc,
+                None,
+                Some(sp),
+            ));
+            evil
+        };
+        let nonempty = index
+            .entries
+            .iter()
+            .position(|e| e.start < e.end)
+            .unwrap();
+
+        let mut inverted_box = good.clone();
+        inverted_box.shards[nonempty].bbox.swap(0, 1);
+        let mut nan_box = good.clone();
+        nan_box.shards[nonempty].bbox[2] = f32::NAN;
+        let mut inverted_keys = good.clone();
+        inverted_keys.shards[nonempty].mkey_lo = inverted_keys.shards[nonempty].mkey_hi + 1;
+        let mut oob_keys = good.clone();
+        oob_keys.shards[nonempty].mkey_hi = u64::MAX; // beyond 10-bit depth
+        let mut zero_bits = good.clone();
+        zero_bits.bits = 0;
+        let mut deep_bits = good.clone();
+        deep_bits.bits = 22; // past MAX_MORTON_BITS
+        let mut lost_segment = good.clone();
+        lost_segment.shards[nonempty].seg_boxes.pop();
+        let mut nan_segment = good.clone();
+        nan_segment.shards[nonempty].seg_boxes[0][4] = f32::NAN;
+
+        let p = tmp_path("spatial_hostile_case");
+        for (what, sp) in [
+            ("inverted bbox", &inverted_box),
+            ("NaN bbox", &nan_box),
+            ("inverted Morton range", &inverted_keys),
+            ("Morton key beyond depth", &oob_keys),
+            ("zero Morton bits", &zero_bits),
+            ("Morton bits past the cap", &deep_bits),
+            ("missing segment box", &lost_segment),
+            ("NaN segment box", &nan_segment),
+        ] {
+            std::fs::write(&p, rebuilt(sp)).unwrap();
+            match ShardReader::open(&p) {
+                Err(_) => {}
+                Ok(_) => panic!("hostile spatial footer accepted: {what}"),
+            }
+        }
+        // Truncation anywhere in the footer (which now ends with the
+        // spatial block) errors cleanly, never panics.
+        let len = bytes.len();
+        for cut in data_end..len {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(ShardReader::open(&p).is_err(), "cut at {cut}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_spatial_without_quality_block_parses() {
+        // The spatial block is located by its SPIX marker, not by a
+        // fixed offset after the quality block — a footer carrying
+        // spatial but no quality must read cleanly.
+        let (_, path, index) = v3_spatial_file("spatial_noq", 2_000, 2, 0);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        let data_end = bytes.len() - 16 - foot_len as usize;
+        let mut out = bytes[..data_end].to_vec();
+        let file_crc = crc32(&out);
+        out.extend_from_slice(&encode_footer_tail(
+            2_000,
+            &index.entries,
+            file_crc,
+            None,
+            index.spatial.as_ref(),
+        ));
+        let p = tmp_path("spatial_noq_rewritten");
+        std::fs::write(&p, &out).unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        assert!(reader.index().quality.is_none());
+        assert_eq!(reader.spatial(), index.spatial.as_ref());
+        reader.verify_file_crc().unwrap();
         std::fs::remove_file(&p).ok();
     }
 }

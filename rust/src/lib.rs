@@ -148,6 +148,36 @@
 //! payload, and the decoded snapshot are bit-identical at any worker /
 //! thread count.
 //!
+//! ## Spatial queries
+//!
+//! Archives written with the pipeline's `layout = "spatial"` carry a
+//! footer spatial index — per shard, a Morton key range and an f32 AABB
+//! of the *decoded* coordinates (plus optional per-segment boxes).
+//! [`data::archive::decode_region`] intersects an axis-aligned query
+//! box against that index, decodes only the overlapping shards, and
+//! trims each to exact membership; because the boxes describe the
+//! round-tripped values every future decode reproduces, pruning never
+//! drops a member for any codec. Pre-spatial archives answer the same
+//! query through a decode-everything fallback:
+//!
+//! ```no_run
+//! use nblc::data::archive::{decode_region, Region, ShardReader};
+//! use nblc::exec::ExecCtx;
+//! use std::path::Path;
+//!
+//! let reader = ShardReader::open(Path::new("spatial.nblc")).unwrap();
+//! // Half-open box, snapshot coordinate units.
+//! let region = Region::new([10.0, 10.0, 10.0], [14.0, 14.0, 14.0]).unwrap();
+//! let dec = decode_region(&reader, reader.spec(), &region, &ExecCtx::auto()).unwrap();
+//! println!(
+//!     "{} particles ({} shards decoded, {} pruned, indexed: {})",
+//!     dec.snapshot.len(),
+//!     dec.shards_touched,
+//!     dec.shards_pruned,
+//!     dec.indexed,
+//! );
+//! ```
+//!
 //! ## Threading model
 //!
 //! Every snapshot compressor is driven by an [`exec::ExecCtx`] — a

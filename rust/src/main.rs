@@ -15,10 +15,11 @@
 use nblc::cli::Args;
 use nblc::compressors::registry;
 use nblc::config::{ConfigDoc, PipelineSettings, ServeSettings};
-use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink};
+use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink, SpatialInsitu};
 use nblc::coordinator::shard::{rebalance, Shard};
+use nblc::coordinator::spatial::{plan_spatial, rebalance_aligned};
 use nblc::coordinator::{choose_compressor, GpfsModel};
-use nblc::data::archive::{decode_shards, ShardReader, ShardWriter};
+use nblc::data::archive::{decode_region, decode_shards, Region, ShardReader, ShardWriter};
 use nblc::data::io::{read_snapshot, write_snapshot};
 use nblc::data::{generate, DatasetKind};
 use nblc::error::{Error, Result};
@@ -42,7 +43,8 @@ COMMANDS:
               [--quality <quality>|auto[:target_ratio=<x>]] [--threads N]
               [--simd off|auto|force]
   decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
-              [--particles a..b] [--simd off|auto|force]
+              [--particles a..b] [--region x0..x1,y0..y1,z0..z1]
+              [--simd off|auto|force]
   inspect     <in.nblc> [--verify]
   list-codecs
   analyze     <orig.snap> <recon.snap>
@@ -51,7 +53,8 @@ COMMANDS:
               [--cache_mb N] [--max_inflight N] [--queue_timeout_ms N]
               [--decode_budget_ms N] [--threads N] [--simd off|auto|force]
   get         [<archive>] [--addr host:port] [--particles a..b]
-              [--out <file.snap>] [--stats]
+              [--region x0..x1,y0..y1,z0..z1] [--out <file.snap>]
+              [--stats]
   info        [--simd off|auto|force]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
@@ -75,6 +78,13 @@ decompress reads v1/v2 single-record archives and sharded v3 archives
 fan out across --threads, and --particles a..b decodes only the shards
 overlapping that range (seekable partial read). inspect prints the v3
 shard table; --verify additionally streams the whole-file CRC.
+
+--region x0..x1,y0..y1,z0..z1 (decompress and get; half-open per
+axis) extracts exactly the particles inside an axis-aligned box. On
+an archive written with `layout = \"spatial\"` in [pipeline] (Morton-
+aligned shards + a footer bbox index) only the shards overlapping the
+box are decoded; pre-spatial archives still answer via a full scan.
+inspect prints the spatial block when present.
 
 --threads N sets the engine's thread budget. For compress/decompress
 the default is the NBLC_THREADS env var, else all available cores;
@@ -337,8 +347,29 @@ fn parse_particles(s: &str) -> Result<(u64, u64)> {
     Ok((a, b))
 }
 
+/// Parse a `--region x0..x1,y0..y1,z0..z1` box (half-open per axis).
+fn parse_region(s: &str) -> Result<Region> {
+    let err = || {
+        Error::invalid(format!(
+            "--region expects 'x0..x1,y0..y1,z0..z1', got '{s}'"
+        ))
+    };
+    let mut min = [0f32; 3];
+    let mut max = [0f32; 3];
+    let axes: Vec<&str> = s.split(',').collect();
+    if axes.len() != 3 {
+        return Err(err());
+    }
+    for (a, axis) in axes.iter().enumerate() {
+        let (lo, hi) = axis.split_once("..").ok_or_else(err)?;
+        min[a] = lo.trim().parse().map_err(|_| err())?;
+        max[a] = hi.trim().parse().map_err(|_| err())?;
+    }
+    Region::new(min, max)
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "threads", "particles", "simd"])?;
+    args.expect_known(&["method", "threads", "particles", "region", "simd"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
@@ -348,6 +379,33 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         .get("method")
         .map(str::to_string)
         .unwrap_or_else(|| reader.spec().to_string());
+    if args.get("region").is_some() && args.get("particles").is_some() {
+        return Err(Error::invalid(
+            "give --region or --particles, not both (a box query selects \
+             by position, not by index)",
+        ));
+    }
+    if let Some(rs) = args.get("region") {
+        let region = parse_region(rs)?;
+        let ctx = exec_ctx(args)?;
+        let t = Timer::start();
+        let dec = decode_region(&reader, &spec, &region, &ctx)?;
+        write_snapshot(&dec.snapshot, Path::new(output))?;
+        println!(
+            "region [{rs}]: {} particles via '{spec}' in {} ({} shards decoded, {} pruned {}, {} threads)",
+            dec.snapshot.len(),
+            humansize::secs(t.secs()),
+            dec.shards_touched,
+            dec.shards_pruned,
+            if dec.indexed {
+                "by the spatial index"
+            } else {
+                "(no spatial index: full scan)"
+            },
+            ctx.threads(),
+        );
+        return Ok(());
+    }
     let range = match args.get("particles") {
         Some(s) => Some(parse_particles(s)?),
         None => None,
@@ -458,11 +516,44 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             );
         }
     }
+    if reader.single_record().is_none() {
+        match reader.spatial() {
+            Some(sp) => {
+                println!(
+                    "spatial:   Morton {} bits/axis, {} segment boxes per shard (seg={})",
+                    sp.bits,
+                    if sp.seg > 0 { "with" } else { "no" },
+                    sp.seg,
+                );
+                println!(
+                    "{:>6} {:>34} {:>44}",
+                    "shard", "morton range", "bbox [x0..x1 y0..y1 z0..z1]"
+                );
+                for (i, s) in sp.shards.iter().enumerate() {
+                    println!(
+                        "{:>6} {:>16x}..{:<16x} [{:>9.3e}..{:<9.3e} {:>9.3e}..{:<9.3e} {:>9.3e}..{:<9.3e}]",
+                        i,
+                        s.mkey_lo,
+                        s.mkey_hi,
+                        s.bbox[0],
+                        s.bbox[1],
+                        s.bbox[2],
+                        s.bbox[3],
+                        s.bbox[4],
+                        s.bbox[5],
+                    );
+                }
+            }
+            None => {
+                println!("spatial:   n/a (no spatial index; --region falls back to a full scan)")
+            }
+        }
+    }
     if verify {
         match reader.version() {
             3 => {
                 reader.verify_file_crc()?;
-                println!("whole-file CRC: OK");
+                println!("whole-file CRC: OK (covers shard payloads and the full footer, spatial block included)");
             }
             2 => println!("whole-file CRC: n/a (v2: header + per-field CRCs verified at open)"),
             _ => println!("whole-file CRC: n/a (v1 bundles carry no checksums)"),
@@ -546,6 +637,39 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     println!("generating {} snapshot (n={n})...", kind.name());
     let snap = generate(kind, n, nblc::bench::BENCH_SEED);
 
+    // Spatial layout: globally Morton-order the snapshot and cut shard
+    // boundaries on octree-cell edges, so the archive's footer carries
+    // a bbox index that region queries can prune against. Done before
+    // spec resolution: codec routing must see the snapshot it will
+    // actually compress (the permuted one).
+    let mut spatial_cuts: Vec<usize> = Vec::new();
+    let mut spatial_cfg: Option<SpatialInsitu> = None;
+    let mut initial_layout: Option<Vec<Shard>> = None;
+    let snap = if settings.layout == "spatial" {
+        let plan = plan_spatial(
+            &snap,
+            settings.shards,
+            settings.spatial_bits,
+            &ExecCtx::resolve(settings.threads),
+        )?;
+        println!(
+            "layout: spatial ({} shards cut on Morton cell edges, {} bits/axis, {} interior cuts)",
+            plan.layout.len(),
+            plan.bits,
+            plan.cuts.len(),
+        );
+        spatial_cuts = plan.cuts.clone();
+        spatial_cfg = Some(SpatialInsitu {
+            bits: plan.bits,
+            seg: settings.spatial_seg,
+            keys: std::sync::Arc::clone(&plan.keys),
+        });
+        initial_layout = Some(plan.layout.clone());
+        plan.snapshot
+    } else {
+        snap
+    };
+
     // An explicit codec spec pins the compressor; `method = "auto..."`
     // runs the sampled planner; otherwise the mode (plus the §V-C
     // scheduler when auto_route is on) picks it.
@@ -622,6 +746,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 quality: settings.quality.clone(),
                 factory: factory.clone(),
                 sink,
+                spatial: spatial_cfg.clone(),
             },
         )
     };
@@ -637,14 +762,20 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         );
     };
 
-    let mut report = run(None, !settings.rebalance)?;
+    let mut report = run(initial_layout.clone(), !settings.rebalance)?;
     print_report("round 1", &report);
     if settings.rebalance {
         // Feed the observed per-shard cost counters (the same numbers
         // the v3 footer records) back into the boundary splitter and
-        // re-run; the archive is written by this final round.
+        // re-run; the archive is written by this final round. A spatial
+        // layout recuts only along the Morton cell edges so the footer
+        // index stays aligned with the octree cells.
         let costs = report.cost_per_particle();
-        let layout2 = rebalance(&report.layout, &costs);
+        let layout2 = if spatial_cfg.is_some() {
+            rebalance_aligned(&report.layout, &costs, &spatial_cuts)
+        } else {
+            rebalance(&report.layout, &costs)
+        };
         println!("rebalance: shard boundaries recut from round-1 cost counters");
         report = run(Some(layout2), true)?;
         print_report("round 2 (rebalanced)", &report);
@@ -716,7 +847,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_get(args: &Args) -> Result<()> {
-    args.expect_known(&["addr", "particles", "out", "stats"])?;
+    args.expect_known(&["addr", "particles", "region", "out", "stats"])?;
     let addr = args.get_or("addr", "127.0.0.1:7117");
     let mut client = ServeClient::connect(addr.as_str())?;
     if args.has("stats") {
@@ -725,31 +856,56 @@ fn cmd_get(args: &Args) -> Result<()> {
     }
     // Archive basename; empty selects the daemon's only archive.
     let archive = args.positionals.first().map(String::as_str).unwrap_or("");
+    if args.get("region").is_some() && args.get("particles").is_some() {
+        return Err(Error::invalid(
+            "give --region or --particles, not both (a box query selects \
+             by position, not by index)",
+        ));
+    }
+    let region = match args.get("region") {
+        Some(s) => Some(parse_region(s)?),
+        None => None,
+    };
     let range = match args.get("particles") {
         Some(s) => Some(parse_particles(s)?),
         None => None,
     };
     let t = Timer::start();
-    match client.get(archive, range)? {
+    let reply = match &region {
+        Some(r) => client.get_region(archive, r.min, r.max)?,
+        None => client.get(archive, range)?,
+    };
+    match reply {
         GetReply::Data(d) => {
             let secs = t.secs();
             if let Some(out) = args.get("out") {
                 write_snapshot(&d.snapshot, Path::new(out))?;
             }
-            println!(
-                "got {} particles [{}..{}] in {} ({} shards, {} cache hits, {})",
-                d.snapshot.len(),
-                d.particle_start,
-                d.particle_end,
-                humansize::secs(secs),
-                d.shards_touched,
-                d.cache_hits,
-                if d.exact {
-                    "exact range"
-                } else {
-                    "whole overlapping shards"
-                },
-            );
+            if d.region {
+                println!(
+                    "got {} particles in region in {} ({} shards decoded, {} pruned, {} cache hits)",
+                    d.snapshot.len(),
+                    humansize::secs(secs),
+                    d.shards_touched,
+                    d.shards_pruned,
+                    d.cache_hits,
+                );
+            } else {
+                println!(
+                    "got {} particles [{}..{}] in {} ({} shards, {} cache hits, {})",
+                    d.snapshot.len(),
+                    d.particle_start,
+                    d.particle_end,
+                    humansize::secs(secs),
+                    d.shards_touched,
+                    d.cache_hits,
+                    if d.exact {
+                        "exact range"
+                    } else {
+                        "whole overlapping shards"
+                    },
+                );
+            }
         }
         GetReply::Busy(b) => {
             return Err(Error::Pipeline(format!(

@@ -20,6 +20,10 @@ pub struct ServeMetrics {
     pub errors: AtomicU64,
     /// Decoded particle bytes returned to clients.
     pub bytes_served: AtomicU64,
+    /// Region (box) requests answered with data.
+    pub region_requests: AtomicU64,
+    /// Shards the spatial index pruned from region requests.
+    pub shards_pruned: AtomicU64,
     /// Archive names, parallel to `shard_touches`.
     names: Vec<String>,
     /// Shards fetched (cache hit or decode) per archive.
@@ -36,6 +40,8 @@ impl ServeMetrics {
             busy: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             bytes_served: AtomicU64::new(0),
+            region_requests: AtomicU64::new(0),
+            shards_pruned: AtomicU64::new(0),
             names,
             shard_touches,
         }
@@ -64,6 +70,8 @@ impl ServeMetrics {
             busy: self.busy.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             bytes_served: self.bytes_served.load(Ordering::Relaxed),
+            region_requests: self.region_requests.load(Ordering::Relaxed),
+            shards_pruned: self.shards_pruned.load(Ordering::Relaxed),
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             cache_coalesced: cache.coalesced,
@@ -118,6 +126,10 @@ pub struct ServeStats {
     pub errors: u64,
     /// Decoded particle bytes returned to clients.
     pub bytes_served: u64,
+    /// Region (box) requests answered with data.
+    pub region_requests: u64,
+    /// Shards spatial-index pruning skipped across all region requests.
+    pub shards_pruned: u64,
     /// Shard-cache lookups served from memory.
     pub cache_hits: u64,
     /// Shard-cache lookups that required a decode.
@@ -150,6 +162,8 @@ impl ServeStats {
         s.push_str(&format!("busy: {}\n", self.busy));
         s.push_str(&format!("errors: {}\n", self.errors));
         s.push_str(&format!("bytes served: {}\n", self.bytes_served));
+        s.push_str(&format!("region requests: {}\n", self.region_requests));
+        s.push_str(&format!("shards pruned: {}\n", self.shards_pruned));
         s.push_str(&format!("cache hits: {}\n", self.cache_hits));
         s.push_str(&format!("cache misses: {}\n", self.cache_misses));
         s.push_str(&format!("cache coalesced: {}\n", self.cache_coalesced));
@@ -180,6 +194,8 @@ mod tests {
         m.data_ok.fetch_add(3, Ordering::Relaxed);
         m.busy.fetch_add(1, Ordering::Relaxed);
         m.bytes_served.fetch_add(1024, Ordering::Relaxed);
+        m.region_requests.fetch_add(2, Ordering::Relaxed);
+        m.shards_pruned.fetch_add(14, Ordering::Relaxed);
         m.touch_shards(0, 4);
         m.touch_shards(1, 2);
         m.touch_shards(9, 7); // out of range: ignored
@@ -198,6 +214,8 @@ mod tests {
         assert_eq!(s.busy, 1);
         assert_eq!(s.errors, 0);
         assert_eq!(s.bytes_served, 1024);
+        assert_eq!(s.region_requests, 2);
+        assert_eq!(s.shards_pruned, 14);
         assert_eq!(s.cache_hits, 10);
         assert_eq!(s.cache_coalesced, 5);
         assert_eq!(s.cache_evictions, 2);
@@ -213,11 +231,15 @@ mod tests {
     fn render_is_grepable() {
         let s = ServeStats {
             cache_hits: 12,
+            region_requests: 3,
+            shards_pruned: 21,
             archives: vec![("x.nblc".into(), 9)],
             ..Default::default()
         };
         let text = s.render();
         assert!(text.contains("cache hits: 12\n"));
+        assert!(text.contains("region requests: 3\n"));
+        assert!(text.contains("shards pruned: 21\n"));
         assert!(text.contains("archive x.nblc: 9 shard touches\n"));
     }
 }

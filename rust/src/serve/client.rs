@@ -51,6 +51,29 @@ impl ServeClient {
         }
     }
 
+    /// Request the particles inside the axis-aligned box
+    /// `[min, max)` (half-open per axis) from `archive`. Served from
+    /// the archive's footer spatial index when present — only the
+    /// overlapping shards are decoded — and trimmed to exact
+    /// membership either way.
+    pub fn get_region(
+        &mut self,
+        archive: &str,
+        min: [f32; 3],
+        max: [f32; 3],
+    ) -> Result<GetReply> {
+        let resp = self.round_trip(&Request::Region {
+            archive: archive.into(),
+            min,
+            max,
+        })?;
+        match resp {
+            Response::Data(d) => Ok(GetReply::Data(d)),
+            Response::Busy(b) => Ok(GetReply::Busy(b)),
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// Fetch the daemon's statistics snapshot.
     pub fn stats(&mut self) -> Result<ServeStats> {
         match self.round_trip(&Request::Stats)? {

@@ -28,6 +28,8 @@ pub const MAX_RESPONSE_FRAME: u32 = 1 << 30;
 pub const REQ_GET: u8 = 1;
 /// Frame kind: server statistics request.
 pub const REQ_STATS: u8 = 2;
+/// Frame kind: spatial region request (axis-aligned box query).
+pub const REQ_REGION: u8 = 3;
 /// Frame kind: decoded particle data.
 pub const RESP_DATA: u8 = 0x81;
 /// Frame kind: statistics snapshot.
@@ -93,6 +95,17 @@ pub enum Request {
         /// Half-open particle range `[a, b)`.
         range: Option<(u64, u64)>,
     },
+    /// Decode the particles inside an axis-aligned box (half-open per
+    /// axis: `min <= coord < max`). Served from the archive's footer
+    /// spatial index when present; otherwise every shard is scanned.
+    Region {
+        /// Served-archive name (file basename).
+        archive: String,
+        /// Box minimum corner (inclusive), xyz.
+        min: [f32; 3],
+        /// Box maximum corner (exclusive), xyz.
+        max: [f32; 3],
+    },
     /// Fetch a [`ServeStats`] snapshot.
     Stats,
 }
@@ -113,6 +126,14 @@ impl Request {
                     }
                 }
                 (REQ_GET, p)
+            }
+            Request::Region { archive, min, max } => {
+                let mut p = Vec::new();
+                put_str(&mut p, archive);
+                for v in min.iter().chain(max.iter()) {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                (REQ_REGION, p)
             }
             Request::Stats => (REQ_STATS, Vec::new()),
         }
@@ -140,6 +161,22 @@ impl Request {
                 expect_consumed(payload, pos)?;
                 Ok(Request::Get { archive, range })
             }
+            REQ_REGION => {
+                let mut pos = 0;
+                let archive = get_str(payload, &mut pos)?;
+                let mut corners = [0f32; 6];
+                for c in corners.iter_mut() {
+                    *c = f32::from_le_bytes(take4(payload, &mut pos)?);
+                }
+                expect_consumed(payload, pos)?;
+                // Box validity (finite, min <= max) is the server's
+                // concern — it answers with a typed error frame.
+                Ok(Request::Region {
+                    archive,
+                    min: [corners[0], corners[1], corners[2]],
+                    max: [corners[3], corners[4], corners[5]],
+                })
+            }
             REQ_STATS => {
                 expect_consumed(payload, 0)?;
                 Ok(Request::Stats)
@@ -161,8 +198,15 @@ pub struct RangeData {
     pub exact: bool,
     /// True when the codec permutes particles within each shard.
     pub reordered: bool,
+    /// True for a region (box) query answered by trimming decoded
+    /// shards to exact spatial membership.
+    pub region: bool,
     /// Shards fetched to answer this request.
     pub shards_touched: u64,
+    /// Shards the footer's spatial index proved disjoint from the query
+    /// box and skipped entirely (0 for range requests and unindexed
+    /// archives).
+    pub shards_pruned: u64,
     /// How many of those fetches were LRU-cache hits.
     pub cache_hits: u64,
     /// The decoded particles.
@@ -246,11 +290,12 @@ impl Response {
 
 fn encode_data(d: &RangeData) -> Vec<u8> {
     let mut p = Vec::with_capacity(64 + d.snapshot.total_bytes());
-    let flags = (d.exact as u8) | ((d.reordered as u8) << 1);
+    let flags = (d.exact as u8) | ((d.reordered as u8) << 1) | ((d.region as u8) << 2);
     p.push(flags);
     put_uvarint(&mut p, d.particle_start);
     put_uvarint(&mut p, d.particle_end);
     put_uvarint(&mut p, d.shards_touched);
+    put_uvarint(&mut p, d.shards_pruned);
     put_uvarint(&mut p, d.cache_hits);
     p.extend_from_slice(&d.snapshot.box_size.to_le_bytes());
     put_uvarint(&mut p, d.snapshot.seed);
@@ -270,12 +315,13 @@ fn decode_data(payload: &[u8]) -> Result<RangeData> {
         .get(pos)
         .ok_or_else(|| Error::corrupt("empty data payload"))?;
     pos += 1;
-    if flags & !0b11 != 0 {
+    if flags & !0b111 != 0 {
         return Err(Error::corrupt("unknown data flags"));
     }
     let particle_start = get_uvarint(payload, &mut pos)?;
     let particle_end = get_uvarint(payload, &mut pos)?;
     let shards_touched = get_uvarint(payload, &mut pos)?;
+    let shards_pruned = get_uvarint(payload, &mut pos)?;
     let cache_hits = get_uvarint(payload, &mut pos)?;
     let box_size = f64::from_le_bytes(take8(payload, &mut pos)?);
     let seed = get_uvarint(payload, &mut pos)?;
@@ -305,7 +351,9 @@ fn decode_data(payload: &[u8]) -> Result<RangeData> {
         particle_end,
         exact: flags & 1 != 0,
         reordered: flags & 2 != 0,
+        region: flags & 4 != 0,
         shards_touched,
+        shards_pruned,
         cache_hits,
         snapshot: Snapshot {
             name,
@@ -333,6 +381,8 @@ fn encode_stats(s: &ServeStats) -> Vec<u8> {
         s.inflight,
         s.inflight_high_water,
         s.cache_coalesced,
+        s.region_requests,
+        s.shards_pruned,
     ] {
         put_uvarint(&mut p, v);
     }
@@ -362,6 +412,8 @@ fn decode_stats(payload: &[u8]) -> Result<ServeStats> {
         inflight: next()?,
         inflight_high_water: next()?,
         cache_coalesced: next()?,
+        region_requests: next()?,
+        shards_pruned: next()?,
         archives: Vec::new(),
     };
     let n_archives = get_uvarint(payload, &mut pos)?;
@@ -404,6 +456,16 @@ fn expect_consumed(payload: &[u8], pos: usize) -> Result<()> {
     Ok(())
 }
 
+fn take4(buf: &[u8], pos: &mut usize) -> Result<[u8; 4]> {
+    if buf.len() - *pos < 4 {
+        return Err(Error::corrupt("payload truncated in f32"));
+    }
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[*pos..*pos + 4]);
+    *pos += 4;
+    Ok(b)
+}
+
 fn take8(buf: &[u8], pos: &mut usize) -> Result<[u8; 8]> {
     if buf.len() - *pos < 8 {
         return Err(Error::corrupt("payload truncated in f64"));
@@ -439,7 +501,33 @@ mod tests {
             archive: "snap.nblc".into(),
             range: Some((17, 123_456_789)),
         });
+        roundtrip_request(Request::Region {
+            archive: "snap.nblc".into(),
+            min: [-1.5, 0.0, 3.25],
+            max: [2.5, 64.0, 8.75],
+        });
+        roundtrip_request(Request::Region {
+            archive: String::new(),
+            min: [0.0; 3],
+            max: [0.0; 3],
+        });
         roundtrip_request(Request::Stats);
+    }
+
+    #[test]
+    fn truncated_region_request_is_corrupt() {
+        let (kind, payload) = Request::Region {
+            archive: "a".into(),
+            min: [1.0, 2.0, 3.0],
+            max: [4.0, 5.0, 6.0],
+        }
+        .encode();
+        for cut in 0..payload.len() {
+            assert!(
+                Request::decode(kind, &payload[..cut]).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
     }
 
     #[test]
@@ -455,14 +543,29 @@ mod tests {
             particle_end: 8,
             exact: true,
             reordered: false,
+            region: false,
             shards_touched: 2,
+            shards_pruned: 0,
             cache_hits: 1,
+            snapshot: snap.clone(),
+        }));
+        roundtrip_response(Response::Data(RangeData {
+            particle_start: 0,
+            particle_end: 5,
+            exact: true,
+            reordered: true,
+            region: true,
+            shards_touched: 2,
+            shards_pruned: 14,
+            cache_hits: 2,
             snapshot: snap,
         }));
         roundtrip_response(Response::Stats(ServeStats {
             requests: 9,
             cache_hits: 4,
             cache_coalesced: 2,
+            region_requests: 5,
+            shards_pruned: 40,
             archives: vec![("a.nblc".into(), 3), ("b.nblc".into(), 0)],
             ..Default::default()
         }));

@@ -13,7 +13,7 @@
 use crate::compressors::registry;
 use crate::coordinator::backpressure::{bounded, BoundedReceiver, BoundedSender, QueueStats};
 use crate::coordinator::pipeline::CompressorFactory;
-use crate::data::archive::{decode_shards_cached, ShardReader};
+use crate::data::archive::{decode_region_cached, decode_shards_cached, Region, ShardReader};
 use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::metrics::ServeMetrics;
@@ -357,41 +357,62 @@ fn handle_request(shared: &Shared, req: Request) -> Response {
             Response::Stats(shared.metrics.snapshot(shared.cache.figures(), inflight, high_water))
         }
         Request::Get { archive, range } => {
-            let resp = handle_get(shared, &archive, range);
-            match &resp {
-                Response::Data(_) => {
-                    shared.metrics.data_ok.fetch_add(1, Ordering::Relaxed);
-                }
-                Response::Busy(_) => {
-                    shared.metrics.busy.fetch_add(1, Ordering::Relaxed);
-                }
-                _ => {
-                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                }
+            count_outcome(shared, handle_get(shared, &archive, range))
+        }
+        Request::Region { archive, min, max } => {
+            let resp = count_outcome(shared, handle_region(shared, &archive, min, max));
+            if let Response::Data(d) = &resp {
+                shared.metrics.region_requests.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .metrics
+                    .shards_pruned
+                    .fetch_add(d.shards_pruned, Ordering::Relaxed);
             }
             resp
         }
     }
 }
 
-fn handle_get(shared: &Shared, archive: &str, range: Option<(u64, u64)>) -> Response {
-    let aid = if archive.is_empty() && shared.archives.len() == 1 {
-        0
-    } else {
-        match shared.archives.iter().position(|a| a.name == archive) {
-            Some(aid) => aid,
-            None => {
-                return Response::Error(format!(
-                    "unknown archive {archive:?} (serving: {})",
-                    shared
-                        .archives
-                        .iter()
-                        .map(|a| a.name.as_str())
-                        .collect::<Vec<_>>()
-                        .join(", ")
-                ));
-            }
+/// Roll a data-path response into the data_ok / busy / errors counters.
+fn count_outcome(shared: &Shared, resp: Response) -> Response {
+    match &resp {
+        Response::Data(_) => {
+            shared.metrics.data_ok.fetch_add(1, Ordering::Relaxed);
         }
+        Response::Busy(_) => {
+            shared.metrics.busy.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    resp
+}
+
+/// Resolve a request's archive name to its served index (an empty name
+/// selects the daemon's only archive).
+fn resolve_archive(shared: &Shared, archive: &str) -> std::result::Result<usize, Response> {
+    if archive.is_empty() && shared.archives.len() == 1 {
+        return Ok(0);
+    }
+    match shared.archives.iter().position(|a| a.name == archive) {
+        Some(aid) => Ok(aid),
+        None => Err(Response::Error(format!(
+            "unknown archive {archive:?} (serving: {})",
+            shared
+                .archives
+                .iter()
+                .map(|a| a.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))),
+    }
+}
+
+fn handle_get(shared: &Shared, archive: &str, range: Option<(u64, u64)>) -> Response {
+    let aid = match resolve_archive(shared, archive) {
+        Ok(aid) => aid,
+        Err(resp) => return resp,
     };
     let served = &shared.archives[aid];
     let reader = &served.reader;
@@ -460,7 +481,81 @@ fn handle_get(shared: &Shared, archive: &str, range: Option<(u64, u64)>) -> Resp
                 particle_end: dec.particle_end,
                 exact: dec.exact,
                 reordered: dec.reordered,
+                region: false,
                 shards_touched: dec.shards_touched as u64,
+                shards_pruned: 0,
+                cache_hits: hits.load(Ordering::Relaxed),
+                snapshot: dec.snapshot,
+            })
+        }
+        Err(e) => Response::Error(e.to_string()),
+    }
+}
+
+/// Answer a region (box) request: intersect the query against the
+/// archive's footer spatial index, decode only the overlapping shards
+/// (cache-aware), and trim to exact membership. Admission charges only
+/// the cache-cold shards the query actually touches, so a small box on
+/// a big archive is priced like the small read it is.
+fn handle_region(shared: &Shared, archive: &str, min: [f32; 3], max: [f32; 3]) -> Response {
+    let aid = match resolve_archive(shared, archive) {
+        Ok(aid) => aid,
+        Err(resp) => return resp,
+    };
+    let served = &shared.archives[aid];
+    let reader = &served.reader;
+    // Box validation is cheap and happens before admission, so hostile
+    // boxes cost nothing and keep the connection open.
+    let region = match Region::new(min, max) {
+        Ok(r) => r,
+        Err(e) => return Response::Error(e.to_string()),
+    };
+    let (touched, _pruned, _indexed) = reader.shards_for_region(&region);
+    let cold: Vec<usize> = touched
+        .iter()
+        .copied()
+        .filter(|&i| !shared.cache.contains((aid, i)))
+        .collect();
+    let est = reader.est_decode_cost_nanos(&cold);
+    let _permit = match shared.admission.acquire(est) {
+        Ok(p) => p,
+        Err(busy) => return Response::Busy(busy),
+    };
+    let inner = ExecCtx::with_threads((shared.ctx.threads() / touched.len().max(1)).max(1))
+        .with_kernels(shared.ctx.kernels());
+    let hits = AtomicU64::new(0);
+    let fetch = |i: usize| -> Result<Arc<Snapshot>> {
+        match shared.cache.get_or_join((aid, i)) {
+            Flight::Hit(snap) => {
+                hits.fetch_add(1, Ordering::Relaxed);
+                Ok(snap)
+            }
+            Flight::Lead(lead) => {
+                let bundle = reader.read_shard(i)?;
+                let snap = Arc::new((served.factory)().decompress_with(&inner, &bundle)?);
+                lead.publish(Arc::clone(&snap));
+                Ok(snap)
+            }
+        }
+    };
+    match decode_region_cached(reader, &region, &shared.ctx, &fetch) {
+        Ok(dec) => {
+            shared
+                .metrics
+                .bytes_served
+                .fetch_add(dec.snapshot.total_bytes() as u64, Ordering::Relaxed);
+            shared.metrics.touch_shards(aid, dec.shards_touched as u64);
+            let n = dec.snapshot.len() as u64;
+            Response::Data(RangeData {
+                particle_start: 0,
+                particle_end: n,
+                // Region results are always trimmed to exact spatial
+                // membership, whatever the codec's particle order.
+                exact: true,
+                reordered: served.reordered,
+                region: true,
+                shards_touched: dec.shards_touched as u64,
+                shards_pruned: dec.shards_pruned as u64,
                 cache_hits: hits.load(Ordering::Relaxed),
                 snapshot: dec.snapshot,
             })

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Brute-force region filter over a .snap snapshot file.
+
+Keeps exactly the particles whose (x, y, z) lie inside an axis-aligned,
+half-open box — the same membership rule as `Region::contains` in
+rust/src/data/archive.rs — preserving particle order and the snapshot
+header. CI uses this as the independent reference for
+`nblc decompress --region`: filtering the FULL decode with this script
+must reproduce the pruned region decode byte-for-byte.
+
+Usage: filter_region.py in.snap x0 x1 y0 y1 z0 z1 out.snap
+
+The box corners must be exactly f32-representable (CI uses small
+integers), so comparing the widened-to-f64 field values against them
+matches the f32 comparison the decoder performs.
+"""
+
+import struct
+import sys
+
+MAGIC = b"NBLCSNAP"
+N_FIELDS = 6  # xx yy zz vx vy vz
+
+
+def main() -> None:
+    if len(sys.argv) != 9:
+        sys.exit("usage: filter_region.py in.snap x0 x1 y0 y1 z0 z1 out.snap")
+    src, out = sys.argv[1], sys.argv[8]
+    lo = [float(v) for v in sys.argv[2:8:2]]
+    hi = [float(v) for v in sys.argv[3:8:2]]
+
+    with open(src, "rb") as f:
+        blob = f.read()
+    if blob[:8] != MAGIC:
+        sys.exit(f"{src}: bad magic {blob[:8]!r}")
+    version = struct.unpack_from("<I", blob, 8)[0]
+    if version != 1:
+        sys.exit(f"{src}: unsupported snapshot version {version}")
+    n = struct.unpack_from("<Q", blob, 12)[0]
+    name_len = struct.unpack_from("<I", blob, 36)[0]
+    base = 40 + name_len
+    if len(blob) != base + 4 * n * N_FIELDS:
+        sys.exit(f"{src}: truncated (n={n}, {len(blob)} bytes)")
+    fields = [
+        struct.unpack_from(f"<{n}f", blob, base + 4 * n * i) for i in range(N_FIELDS)
+    ]
+
+    # Half-open on every axis: lo <= p < hi (Region::contains).
+    keep = [
+        i for i in range(n) if all(lo[a] <= fields[a][i] < hi[a] for a in range(3))
+    ]
+
+    with open(out, "wb") as f:
+        f.write(blob[:12])
+        f.write(struct.pack("<Q", len(keep)))
+        f.write(blob[20:base])  # box_size, seed, name — copied verbatim
+        for plane in fields:
+            f.write(struct.pack(f"<{len(keep)}f", *(plane[i] for i in keep)))
+    print(f"kept {len(keep)}/{n} particles")
+
+
+if __name__ == "__main__":
+    main()

@@ -155,6 +155,7 @@ fn pipeline_archives_decode_identically_at_any_concurrency() {
                         path: path.clone(),
                         spec: spec.clone(),
                     },
+                    spatial: None,
                 },
             )
             .unwrap_or_else(|e| panic!("{name}@{workers}w/{threads}t: pipeline failed: {e}"));
@@ -195,6 +196,113 @@ fn pipeline_archives_decode_identically_at_any_concurrency() {
             }
         }
     }
+}
+
+#[test]
+fn spatial_pipeline_archives_are_concurrency_invariant_and_cost_archives_spatial_free() {
+    // Two pins in one: (1) a spatial-layout pipeline run produces the
+    // same footer spatial block, shard payloads, and decoded bits at
+    // every worker/thread combination; (2) a cost-layout run writes NO
+    // spatial block — the non-spatial archive bytes are exactly the
+    // pre-spatial format, so PR-over-PR file identity holds for
+    // everyone not opting in.
+    use nblc::coordinator::pipeline::SpatialInsitu;
+    use nblc::coordinator::spatial::plan_spatial;
+    use std::sync::Arc;
+
+    let md = generate_md(&MdConfig {
+        n_particles: 12_000,
+        ..Default::default()
+    });
+    let spec = registry::canonical("sz_lv").unwrap();
+    let plan = plan_spatial(&md, 5, 10, &ExecCtx::sequential()).unwrap();
+    let mut baseline: Option<(Vec<u8>, Vec<Vec<u32>>)> = None;
+    for (workers, threads) in [(1usize, 1usize), (2, 2), (4, 1)] {
+        let path = std::env::temp_dir().join(format!(
+            "nblc_det_spatial_{workers}_{threads}_{}.nblc",
+            std::process::id()
+        ));
+        run_insitu(
+            &plan.snapshot,
+            &InsituConfig {
+                shards: 5,
+                layout: Some(plan.layout.clone()),
+                workers,
+                threads,
+                queue_depth: 3,
+                quality: Quality::rel(1e-4),
+                factory: registry::factory(&spec).unwrap(),
+                sink: Sink::Archive {
+                    path: path.clone(),
+                    spec: spec.clone(),
+                },
+                spatial: Some(SpatialInsitu {
+                    bits: plan.bits,
+                    seg: 2_048,
+                    keys: Arc::clone(&plan.keys),
+                }),
+            },
+        )
+        .unwrap_or_else(|e| panic!("spatial@{workers}w/{threads}t: pipeline failed: {e}"));
+        let reader = ShardReader::open(&path).unwrap();
+        let sp = reader.spatial().expect("spatial block must be written").clone();
+        // Serialize the block into a comparable byte stream.
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&sp.bits.to_le_bytes());
+        blob.extend_from_slice(&sp.seg.to_le_bytes());
+        for s in &sp.shards {
+            blob.extend_from_slice(&s.mkey_lo.to_le_bytes());
+            blob.extend_from_slice(&s.mkey_hi.to_le_bytes());
+            for v in s.bbox.iter().chain(s.seg_boxes.iter().flatten()) {
+                blob.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let dec = decode_shards(&reader, reader.spec(), None, &ExecCtx::with_threads(2)).unwrap();
+        std::fs::remove_file(&path).ok();
+        let bits: Vec<Vec<u32>> = dec
+            .snapshot
+            .fields
+            .iter()
+            .map(|f| f.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        match &baseline {
+            None => baseline = Some((blob, bits)),
+            Some((b0, d0)) => {
+                assert_eq!(b0, &blob, "@{workers}w/{threads}t: spatial block differs");
+                assert_eq!(d0, &bits, "@{workers}w/{threads}t: decoded bits differ");
+            }
+        }
+    }
+
+    // Cost layout: `spatial: None` must leave the file spatial-free.
+    let path = std::env::temp_dir().join(format!(
+        "nblc_det_nonspatial_{}.nblc",
+        std::process::id()
+    ));
+    run_insitu(
+        &md,
+        &InsituConfig {
+            shards: 5,
+            layout: None,
+            workers: 2,
+            threads: 1,
+            queue_depth: 3,
+            quality: Quality::rel(1e-4),
+            factory: registry::factory(&spec).unwrap(),
+            sink: Sink::Archive {
+                path: path.clone(),
+                spec: spec.clone(),
+            },
+            spatial: None,
+        },
+    )
+    .unwrap();
+    let reader = ShardReader::open(&path).unwrap();
+    assert!(
+        reader.spatial().is_none(),
+        "cost-layout archives must not grow a spatial block"
+    );
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

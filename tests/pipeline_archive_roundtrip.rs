@@ -57,6 +57,7 @@ fn full_lineup_roundtrips_through_sharded_pipeline_archive() {
                         path: path.clone(),
                         spec: spec.clone(),
                     },
+                    spatial: None,
                 },
             )
             .unwrap_or_else(|e| panic!("{tag}: pipeline failed: {e}"));

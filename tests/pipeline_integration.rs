@@ -50,6 +50,7 @@ fn config_to_pipeline_roundtrip() {
                 model: GpfsModel::default(),
                 procs: settings.sim_procs,
             },
+            spatial: None,
         },
     )
     .unwrap();
@@ -93,6 +94,7 @@ fn config_method_spec_drives_pipeline() {
             quality: settings.quality.clone(),
             factory: registry::factory(spec).unwrap(),
             sink: Sink::Null,
+            spatial: None,
         },
     )
     .unwrap();
@@ -173,6 +175,7 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
             quality: Quality::rel(1e-4),
             factory: factory.clone(),
             sink: Sink::Null,
+            spatial: None,
         },
     )
     .unwrap();
@@ -194,6 +197,7 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
                 path: path.clone(),
                 spec: registry::canonical("sz_lv").unwrap(),
             },
+            spatial: None,
         },
     )
     .unwrap();
@@ -247,6 +251,7 @@ fn scheduler_routing_via_pipeline() {
             quality: Quality::rel(1e-4),
             factory: factory_for(routed),
             sink: Sink::Null,
+            spatial: None,
         },
     )
     .unwrap();
@@ -261,6 +266,7 @@ fn scheduler_routing_via_pipeline() {
             quality: Quality::rel(1e-4),
             factory: factory_for(Mode::BestCompression),
             sink: Sink::Null,
+            spatial: None,
         },
     )
     .unwrap();

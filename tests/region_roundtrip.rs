@@ -1,0 +1,389 @@
+//! Acceptance tests for spatially-pruned region reads: every codec in
+//! the lineup, spatial and cost layouts, interior / face-clipping /
+//! empty / full-domain query boxes. A region decode must return exactly
+//! the particles a brute-force filter of the full decode keeps (bitwise,
+//! in the same order), touch no more shards than the footer bbox index
+//! overlaps, and on a ≥16-shard spatial archive a small interior box
+//! must decode ≤2 shards — through the library path and through a live
+//! serve daemon (whose LRU cache and pruning counters are also checked).
+
+use nblc::compressors::{full_lineup, registry};
+use nblc::coordinator::spatial::{plan_spatial, shard_spatial};
+use nblc::data::archive::{
+    decode_region, decode_shards, Region, ShardIndex, ShardReader, ShardWriter,
+};
+use nblc::data::gen_md::{generate_md, MdConfig};
+use nblc::exec::ExecCtx;
+use nblc::quality::Quality;
+use nblc::serve::{GetReply, ServeClient, ServeConfig, Server};
+use nblc::snapshot::Snapshot;
+use std::path::Path;
+use std::time::Duration;
+
+const EB: f64 = 1e-4;
+const BITS: u32 = 10;
+
+/// Write a spatial-layout archive the way the pipeline sink does:
+/// Morton-sort, cut on octree cells, per-shard footer entries computed
+/// from the decoded (round-tripped) coordinates. Returns the sorted
+/// snapshot (the archive's logical order) and the written index.
+fn build_spatial_archive(
+    path: &Path,
+    snap: &Snapshot,
+    spec: &str,
+    shards: usize,
+    seg: u64,
+) -> (Snapshot, ShardIndex) {
+    let quality = Quality::rel(EB);
+    let comp = registry::build_str(spec).unwrap();
+    let plan = plan_spatial(snap, shards, BITS, &ExecCtx::sequential()).unwrap();
+    let mut w = ShardWriter::create_quality(path, spec, &quality).unwrap();
+    w.enable_spatial(plan.bits, seg).unwrap();
+    for sh in &plan.layout {
+        let bundle = comp
+            .compress(&plan.snapshot.slice(sh.start, sh.end), &quality)
+            .unwrap();
+        let decoded = comp.decompress(&bundle).unwrap();
+        let (lo, hi) = plan.key_range(sh.start, sh.end);
+        let sp = shard_spatial(&decoded, lo, hi, seg as usize);
+        w.write_shard_spatial(sh.start, sh.end, &bundle, 2_000_000, sp)
+            .unwrap();
+    }
+    let index = w.finish().unwrap();
+    (plan.snapshot, index)
+}
+
+/// Cost-layout (even split) archive over the same snapshot: no spatial
+/// block, so region queries must fall back to a full scan.
+fn build_cost_archive(path: &Path, snap: &Snapshot, spec: &str, shards: usize) {
+    let quality = Quality::rel(EB);
+    let comp = registry::build_str(spec).unwrap();
+    let mut w = ShardWriter::create_quality(path, spec, &quality).unwrap();
+    let n = snap.len();
+    for s in 0..shards {
+        let (start, end) = (s * n / shards, (s + 1) * n / shards);
+        let bundle = comp.compress(&snap.slice(start, end), &quality).unwrap();
+        w.write_shard(start, end, &bundle, 2_000_000).unwrap();
+    }
+    w.finish().unwrap();
+}
+
+fn bits_of(s: &Snapshot) -> Vec<Vec<u32>> {
+    s.fields
+        .iter()
+        .map(|f| f.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Indices a brute-force filter of the full decode keeps.
+fn brute(full: &Snapshot, r: &Region) -> Vec<usize> {
+    (0..full.len())
+        .filter(|&i| r.contains(full.fields[0][i], full.fields[1][i], full.fields[2][i]))
+        .collect()
+}
+
+/// Assert the region decode equals the brute-force reference bitwise,
+/// returning `(shards_touched, shards_pruned, indexed)`.
+fn check_region(
+    reader: &ShardReader,
+    full: &Snapshot,
+    r: &Region,
+    ctx: &ExecCtx,
+    what: &str,
+) -> (usize, usize, bool) {
+    let dec = decode_region(reader, reader.spec(), r, ctx).unwrap();
+    let keep = brute(full, r);
+    assert_eq!(dec.snapshot.len(), keep.len(), "{what}: membership count");
+    for f in 0..6 {
+        let want: Vec<u32> = keep.iter().map(|&i| full.fields[f][i].to_bits()).collect();
+        let got: Vec<u32> = dec.snapshot.fields[f].iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{what}: field {f} differs from brute force");
+    }
+    (dec.shards_touched, dec.shards_pruned, dec.indexed)
+}
+
+/// The four query-box shapes of the acceptance matrix, derived from the
+/// decoded coordinates so every codec (including lossy ones) anchors on
+/// values that actually exist in its output.
+fn query_boxes(full: &Snapshot) -> Vec<(&'static str, Region)> {
+    let ext = |a: usize| -> (f32, f32) {
+        let f = &full.fields[a];
+        (
+            f.iter().copied().fold(f32::MAX, f32::min),
+            f.iter().copied().fold(f32::MIN, f32::max),
+        )
+    };
+    let (x0, x1) = ext(0);
+    let (y0, y1) = ext(1);
+    let (z0, z1) = ext(2);
+    // Anchor the interior box on a real particle near the middle of the
+    // archive's order, a tenth of the domain wide per axis.
+    let i = full.len() / 2;
+    let p = [full.fields[0][i], full.fields[1][i], full.fields[2][i]];
+    let d = [
+        ((x1 - x0) / 10.0).max(1e-3),
+        ((y1 - y0) / 10.0).max(1e-3),
+        ((z1 - z0) / 10.0).max(1e-3),
+    ];
+    vec![
+        (
+            "interior",
+            Region::new(
+                [p[0] - d[0], p[1] - d[1], p[2] - d[2]],
+                [p[0] + d[0], p[1] + d[1], p[2] + d[2]],
+            )
+            .unwrap(),
+        ),
+        (
+            // One face flush with the domain edge, clipping a slab.
+            "face-clipping",
+            Region::new([x0, y0, z0], [x0 + (x1 - x0) / 3.0, y1 + 1.0, z1 + 1.0]).unwrap(),
+        ),
+        (
+            "empty",
+            Region::new([x1 + 1e3, y1 + 1e3, z1 + 1e3], [x1 + 2e3, y1 + 2e3, z1 + 2e3]).unwrap(),
+        ),
+        (
+            "full-domain",
+            Region::new([f32::MIN / 2.0; 3], [f32::MAX / 2.0; 3]).unwrap(),
+        ),
+    ]
+}
+
+#[test]
+fn full_lineup_region_queries_match_brute_force() {
+    let snap = generate_md(&MdConfig {
+        n_particles: 5_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let ctx = ExecCtx::with_threads(2);
+    for name in full_lineup() {
+        let spec = registry::canonical(name).unwrap();
+        for layout in ["spatial", "cost"] {
+            let path = dir.join(format!("nblc_region_{pid}_{name}_{layout}.nblc"));
+            match layout {
+                "spatial" => {
+                    build_spatial_archive(&path, &snap, &spec, 5, 512);
+                }
+                _ => build_cost_archive(&path, &snap, &spec, 5),
+            }
+            let reader = ShardReader::open(&path).unwrap();
+            // Membership is defined on decoded coordinates.
+            let full = decode_shards(&reader, reader.spec(), None, &ctx)
+                .unwrap()
+                .snapshot;
+            let sp = reader.spatial().cloned();
+            assert_eq!(sp.is_some(), layout == "spatial", "{name} {layout}");
+            let nonempty = reader
+                .index()
+                .entries
+                .iter()
+                .filter(|e| e.start < e.end)
+                .count();
+            for (shape, r) in query_boxes(&full) {
+                let what = format!("{name} {layout} {shape}");
+                let (touched, pruned, indexed) = check_region(&reader, &full, &r, &ctx, &what);
+                assert_eq!(indexed, layout == "spatial", "{what}");
+                match &sp {
+                    Some(sp) => {
+                        // Touched is bounded by the bbox-overlap count —
+                        // segment boxes only ever tighten it.
+                        let overlap = reader
+                            .index()
+                            .entries
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, e)| e.start < e.end && r.intersects(&sp.shards[*i].bbox))
+                            .count();
+                        assert!(touched <= overlap, "{what}: {touched} > overlap {overlap}");
+                        assert_eq!(touched + pruned, nonempty, "{what}");
+                        if shape == "empty" {
+                            assert_eq!(touched, 0, "{what}: far box must decode nothing");
+                        }
+                        if shape == "full-domain" {
+                            assert_eq!(pruned, 0, "{what}");
+                        }
+                    }
+                    None => {
+                        assert_eq!(touched, nonempty, "{what}: fallback scans everything");
+                        assert_eq!(pruned, 0, "{what}");
+                    }
+                }
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+#[test]
+fn sixteen_shard_interior_box_decodes_at_most_two_shards_cli_and_serve() {
+    const SHARDS: usize = 16;
+    let snap = generate_md(&MdConfig {
+        n_particles: 40_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("nblc_region16_{}.nblc", std::process::id()));
+    let spec = registry::canonical("sz_lv").unwrap();
+    let (_, index) = build_spatial_archive(&path, &snap, &spec, SHARDS, 1_024);
+    let sp = index.spatial.as_ref().unwrap();
+    let reader = ShardReader::open(&path).unwrap();
+    let ctx = ExecCtx::with_threads(2);
+    let full = decode_shards(&reader, reader.spec(), None, &ctx)
+        .unwrap()
+        .snapshot;
+    let nonempty: Vec<usize> = index
+        .entries
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.start < e.end)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(nonempty.len() >= 12, "layout degenerated: {nonempty:?}");
+
+    // Tiny boxes around particles deep inside each shard; pick one the
+    // bbox index says ≤2 shards overlap (Morton shards are compact, so
+    // such particles are plentiful — but don't hardcode which).
+    let tiny = {
+        let f = &full.fields[0];
+        let (lo, hi) = (
+            f.iter().copied().fold(f32::MAX, f32::min),
+            f.iter().copied().fold(f32::MIN, f32::max),
+        );
+        ((hi - lo) / 100.0).max(1e-3)
+    };
+    let mut pick: Option<Region> = None;
+    for &si in &nonempty {
+        let e = &index.entries[si];
+        let i = ((e.start + e.end) / 2) as usize;
+        let p = [full.fields[0][i], full.fields[1][i], full.fields[2][i]];
+        let r = Region::new(
+            [p[0] - tiny, p[1] - tiny, p[2] - tiny],
+            [p[0] + tiny, p[1] + tiny, p[2] + tiny],
+        )
+        .unwrap();
+        let overlap = nonempty
+            .iter()
+            .filter(|&&j| r.intersects(&sp.shards[j].bbox))
+            .count();
+        if overlap <= 2 {
+            pick = Some(r);
+            break;
+        }
+    }
+    let r =
+        pick.expect("no interior box overlapping ≤2 of 16 Morton shards — index is not spatial");
+
+    // Library ("CLI") path: exactly the overlapping shards, nothing else.
+    let dec = decode_region(&reader, reader.spec(), &r, &ctx).unwrap();
+    assert!(dec.indexed);
+    assert!(
+        (1..=2).contains(&dec.shards_touched),
+        "interior box decoded {} shards",
+        dec.shards_touched
+    );
+    assert_eq!(dec.shards_touched + dec.shards_pruned, nonempty.len());
+    assert!(dec.shards_pruned >= nonempty.len() - 2);
+    let keep = brute(&full, &r);
+    assert_eq!(dec.snapshot.len(), keep.len());
+    assert!(!keep.is_empty(), "anchor particle must be inside its own box");
+
+    // Serve path: same counters and the same bytes over the wire, and
+    // region replies ride the shard LRU (a repeat hits the cache).
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_mb: 64,
+        max_inflight: 4,
+        queue_timeout_ms: 5_000,
+        decode_budget_ms: 0,
+        threads: 2,
+    };
+    let handle = Server::bind(&cfg, &[&path]).unwrap().spawn();
+    let addr = handle.addr();
+    let mut client = ServeClient::connect(addr).unwrap();
+    let served = loop {
+        match client.get_region("", r.min, r.max).unwrap() {
+            GetReply::Data(d) => break d,
+            GetReply::Busy(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    };
+    assert!(served.region, "reply must be flagged as a region result");
+    assert_eq!(served.shards_touched as usize, dec.shards_touched);
+    assert_eq!(served.shards_pruned as usize, dec.shards_pruned);
+    assert_eq!(
+        bits_of(&served.snapshot),
+        bits_of(&dec.snapshot),
+        "served region bytes differ from the direct decode"
+    );
+    let again = match client.get_region("", r.min, r.max).unwrap() {
+        GetReply::Data(d) => d,
+        GetReply::Busy(b) => panic!("warm repeat shed: {b:?}"),
+    };
+    assert!(again.cache_hits > 0, "repeat region read must hit the LRU");
+    assert_eq!(bits_of(&again.snapshot), bits_of(&served.snapshot));
+
+    // Pruning is visible in the daemon's stats.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.region_requests, 2);
+    assert_eq!(stats.shards_pruned, 2 * dec.shards_pruned as u64);
+
+    // A malformed box is a typed server error, and the daemon survives.
+    assert!(client.get_region("", [1.0, 0.0, 0.0], [0.0, 1.0, 1.0]).is_err());
+    let mut client = ServeClient::connect(addr).unwrap();
+    let ok = client.get_region("", r.min, r.max).unwrap();
+    assert!(matches!(ok, GetReply::Data(_)), "daemon wedged after bad region");
+
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pre_spatial_archives_answer_region_queries_via_serve_fallback() {
+    // A cost-layout archive served over the wire: region queries still
+    // answer exactly (full-scan), with zero pruned and `region` flagged.
+    let snap = generate_md(&MdConfig {
+        n_particles: 4_000,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("nblc_region_fallback_{}.nblc", std::process::id()));
+    let spec = registry::canonical("sz_lv").unwrap();
+    build_cost_archive(&path, &snap, &spec, 4);
+    let reader = ShardReader::open(&path).unwrap();
+    let ctx = ExecCtx::sequential();
+    let full = decode_shards(&reader, reader.spec(), None, &ctx)
+        .unwrap()
+        .snapshot;
+    let (_, r) = query_boxes(&full).remove(0);
+
+    let handle = Server::bind(
+        &ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        &[&path],
+    )
+    .unwrap()
+    .spawn();
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    let d = loop {
+        match client.get_region("", r.min, r.max).unwrap() {
+            GetReply::Data(d) => break d,
+            GetReply::Busy(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    };
+    assert!(d.region);
+    assert_eq!(d.shards_pruned, 0, "no index, nothing pruned");
+    assert_eq!(d.shards_touched, 4, "fallback decodes every shard");
+    let keep = brute(&full, &r);
+    assert_eq!(d.snapshot.len(), keep.len());
+    for f in 0..6 {
+        let want: Vec<u32> = keep.iter().map(|&i| full.fields[f][i].to_bits()).collect();
+        let got: Vec<u32> = d.snapshot.fields[f].iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "field {f}");
+    }
+    handle.stop();
+    std::fs::remove_file(&path).ok();
+}
