@@ -484,6 +484,8 @@ fn main() {
                 spec: arch_spec.clone(),
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -536,6 +538,8 @@ fn main() {
                 seg: 2_048,
                 keys: std::sync::Arc::clone(&plan.keys),
             }),
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -554,6 +558,8 @@ fn main() {
                 spec: arch_spec.clone(),
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();

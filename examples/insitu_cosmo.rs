@@ -75,6 +75,8 @@ fn main() {
                 procs: sim_procs,
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .expect("pipeline failed");

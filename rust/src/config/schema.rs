@@ -54,6 +54,10 @@ pub struct PipelineSettings {
     /// Segment length for per-segment bboxes inside spatial shards
     /// (0 = shard-level boxes only).
     pub spatial_seg: usize,
+    /// Bounded per-shard retries for failed or panicked compression
+    /// tasks (0 = fail fast). Retries run on the same worker so a
+    /// recovered run stays byte-identical to a fault-free one.
+    pub max_retries: usize,
 }
 
 impl Default for PipelineSettings {
@@ -76,6 +80,7 @@ impl Default for PipelineSettings {
             layout: "cost".into(),
             spatial_bits: crate::coordinator::spatial::DEFAULT_SPATIAL_BITS,
             spatial_seg: crate::coordinator::spatial::DEFAULT_SPATIAL_SEG,
+            max_retries: 0,
         }
     }
 }
@@ -85,11 +90,11 @@ impl PipelineSettings {
     pub fn from_doc(doc: &ConfigDoc) -> Result<PipelineSettings> {
         let mut s = PipelineSettings::default();
         let sec = "pipeline";
-        const KNOWN: [&str; 18] = [
+        const KNOWN: [&str; 19] = [
             "dataset", "particles", "shards", "workers", "threads", "queue_depth",
             "eb_rel", "quality", "mode", "method", "auto_route", "simd",
             "sim_procs", "output", "rebalance", "layout", "spatial_bits",
-            "spatial_seg",
+            "spatial_seg", "max_retries",
         ];
         for key in doc.keys(sec) {
             if !KNOWN.contains(&key) {
@@ -216,6 +221,7 @@ impl PipelineSettings {
         }
         s.spatial_bits = get_usize("spatial_bits", s.spatial_bits as usize)? as u32;
         s.spatial_seg = get_usize("spatial_seg", s.spatial_seg)?;
+        s.max_retries = get_usize("max_retries", s.max_retries)?;
         if s.spatial_bits == 0
             || s.spatial_bits as u64 > crate::data::archive::MAX_MORTON_BITS
         {
@@ -346,6 +352,7 @@ mod tests {
             layout = "spatial"
             spatial_bits = 12
             spatial_seg = 4096
+            max_retries = 2
             "#,
         )
         .unwrap();
@@ -363,6 +370,7 @@ mod tests {
         assert_eq!(s.layout, "spatial");
         assert_eq!(s.spatial_bits, 12);
         assert_eq!(s.spatial_seg, 4096);
+        assert_eq!(s.max_retries, 2);
     }
 
     #[test]
@@ -461,6 +469,8 @@ mod tests {
             "[pipeline]\nspatial_bits = 0\n",
             "[pipeline]\nspatial_bits = 22\n",
             "[pipeline]\nspatial_seg = -1\n",
+            "[pipeline]\nmax_retries = -1\n",
+            "[pipeline]\nmax_retries = \"lots\"\n",
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");

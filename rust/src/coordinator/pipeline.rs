@@ -24,9 +24,10 @@ use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::quality::Quality;
 use crate::snapshot::{Snapshot, SnapshotCompressor};
+use crate::testkit::failpoint::FaultPlan;
 use crate::util::timer::Timer;
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Factory building one compressor per worker thread. Usually obtained
 /// from a codec spec via [`crate::compressors::registry::factory`].
@@ -100,6 +101,39 @@ pub struct InsituConfig {
     /// archive sinks (and per-rank decoded-bbox computation). `None`
     /// leaves every write path byte-identical to non-spatial runs.
     pub spatial: Option<SpatialInsitu>,
+    /// Bounded per-shard retry budget (`[pipeline] max_retries`). A
+    /// shard whose compress fails — typed error *or* panic — is retried
+    /// up to this many extra times on the same worker (a panicked
+    /// compressor is rebuilt from the factory first). Retrying locally
+    /// keeps completion order, so a run that recovers from transient
+    /// failures is byte-identical to a fault-free run. When the budget
+    /// is exhausted the shard lands in [`InsituReport::failures`] and
+    /// the run degrades instead of aborting.
+    pub max_retries: usize,
+    /// Explicit fault plan for the archive sink's [`ShardWriter`]
+    /// (crash-consistency tests). `None` defers to the `NBLC_FAILPOINT`
+    /// environment variable, which is also how production runs stay
+    /// unarmed.
+    pub sink_fault: Option<FaultPlan>,
+}
+
+/// One permanently-failed unit of pipeline work.
+#[derive(Clone, Debug)]
+pub struct ShardFailure {
+    /// Shard / rank id (0 for archive-level failures).
+    pub rank: usize,
+    /// Particle range of the shard (0..0 for archive-level failures).
+    pub start: usize,
+    /// One past the last particle index.
+    pub end: usize,
+    /// Attempts made before giving up (1 = no retry budget was left).
+    pub attempts: usize,
+    /// Where it failed: `"compress"` (worker), `"write"` (a shard that
+    /// compressed but could not be written), or `"archive"` (sink-level
+    /// — archive creation or footer finish).
+    pub stage: &'static str,
+    /// The final error, stringified.
+    pub error: String,
 }
 
 /// Pipeline outcome.
@@ -132,6 +166,15 @@ pub struct InsituReport {
     /// for other sinks). Carries the same per-shard cost counters as
     /// `shard_secs`, persisted in the file.
     pub shard_index: Option<ShardIndex>,
+    /// Task retries that were attempted across the run (successful or
+    /// not). Zero on a fault-free run.
+    pub retries: u64,
+    /// Shards (and archive-level steps) that failed permanently, in
+    /// rank order. Empty on a fully-successful run; when non-empty the
+    /// run is *degraded* — an archive sink's file has no footer (the
+    /// surviving shards cannot partition the snapshot) but remains
+    /// recoverable via `ShardReader::open_salvage`.
+    pub failures: Vec<ShardFailure>,
 }
 
 impl InsituReport {
@@ -175,6 +218,8 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
     }
     let k = layout.len();
     let counters = Arc::new(PipelineCounters::default());
+    let retries_ctr = Arc::new(AtomicU64::new(0));
+    let failures = Arc::new(Mutex::new(Vec::<ShardFailure>::new()));
     let wall = Timer::start();
 
     let (task_tx, task_rx, source_q) = bounded::<RankTask>(cfg.queue_depth);
@@ -193,27 +238,88 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             let done_tx = done_tx.clone();
             let factory = Arc::clone(&cfg.factory);
             let counters = Arc::clone(&counters);
+            let retries_ctr = Arc::clone(&retries_ctr);
+            let failures = Arc::clone(&failures);
             let quality = cfg.quality.clone();
             let exec = exec.clone();
-            worker_handles.push(scope.spawn(move || -> Result<()> {
-                let compressor = factory();
+            let max_retries = cfg.max_retries;
+            worker_handles.push(scope.spawn(move || {
+                let mut compressor = factory();
                 loop {
                     let task = {
                         let guard = task_rx.lock().expect("task queue poisoned");
                         guard.recv()
                     };
                     let Some(task) = task else { break };
-                    let result = run_rank(task, compressor.as_ref(), &quality, &exec)?;
-                    counters.record_shard(
-                        result.bytes_in,
-                        result.bundle.compressed_bytes(),
-                        (result.secs * 1e9) as u64,
-                    );
-                    if done_tx.send(result).is_err() {
-                        break;
+                    let (rank, start, end, rank_spatial) =
+                        (task.rank, task.start, task.end, task.spatial);
+                    // Retry locally (same worker, immediately): the
+                    // task's slot in the completion order is preserved,
+                    // which is what keeps recovered runs byte-identical
+                    // to fault-free ones.
+                    let mut task = Some(task);
+                    let mut attempts = 0usize;
+                    let outcome = loop {
+                        let t = task.take().unwrap_or_else(|| RankTask {
+                            rank,
+                            start,
+                            end,
+                            shard: snap.slice(start, end),
+                            spatial: rank_spatial,
+                        });
+                        attempts += 1;
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run_rank(t, compressor.as_ref(), &quality, &exec)
+                        }));
+                        let error = match run {
+                            Ok(Ok(result)) => break Ok(result),
+                            Ok(Err(e)) => e.to_string(),
+                            Err(panic) => {
+                                // A panicked compressor may hold torn
+                                // internal state; rebuild before any
+                                // retry touches it again.
+                                compressor = factory();
+                                let msg = panic
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        panic.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "<non-string panic>".into());
+                                format!("panic: {msg}")
+                            }
+                        };
+                        if attempts <= max_retries {
+                            retries_ctr.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        break Err(error);
+                    };
+                    match outcome {
+                        Ok(result) => {
+                            counters.record_shard(
+                                result.bytes_in,
+                                result.bundle.compressed_bytes(),
+                                (result.secs * 1e9) as u64,
+                            );
+                            if done_tx.send(result).is_err() {
+                                break;
+                            }
+                        }
+                        Err(error) => {
+                            failures.lock().expect("failure list poisoned").push(
+                                ShardFailure {
+                                    rank,
+                                    start,
+                                    end,
+                                    attempts,
+                                    stage: "compress",
+                                    error,
+                                },
+                            );
+                        }
                     }
                 }
-                Ok(())
             }));
         }
         drop(done_tx);
@@ -222,61 +328,132 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
         // and copies into the closure). Archive records are written the
         // moment a shard completes — the footer, not buffering, makes
         // the logical order explicit.
-        let sink_handle =
-            scope.spawn(move || -> Result<(f64, Vec<f64>, Vec<f64>, Option<ShardIndex>)> {
-                let mut sink_secs = 0f64;
-                let mut shard_secs = vec![0f64; k];
-                let mut shard_ratios = vec![0f64; k];
-                let mut writer = match &cfg.sink {
-                    Sink::Archive { path, spec } => {
-                        let mut w = ShardWriter::create_quality(path, spec, &cfg.quality)?;
+        type SinkOut = (f64, Vec<f64>, Vec<f64>, Option<ShardIndex>, Vec<ShardFailure>);
+        let sink_handle = scope.spawn(move || -> SinkOut {
+            let mut sink_secs = 0f64;
+            let mut shard_secs = vec![0f64; k];
+            let mut shard_ratios = vec![0f64; k];
+            let mut fails: Vec<ShardFailure> = Vec::new();
+            // The streaming sink writes in place (salvageable on
+            // crash); a creation failure degrades the run — the drain
+            // below still consumes every result so no worker blocks.
+            let mut writer = match &cfg.sink {
+                Sink::Archive { path, spec } => {
+                    let made = match cfg.sink_fault {
+                        Some(plan) => ShardWriter::create_stream_with(
+                            path,
+                            spec,
+                            &cfg.quality,
+                            Some(plan),
+                        ),
+                        None => ShardWriter::create_stream(path, spec, &cfg.quality),
+                    }
+                    .and_then(|mut w| {
                         if let Some(sp) = &cfg.spatial {
                             w.enable_spatial(sp.bits, sp.seg as u64)?;
                         }
-                        Some(w)
-                    }
-                    _ => None,
-                };
-                while let Some(mut result) = done_rx.recv() {
-                    shard_secs[result.rank] = result.secs;
-                    shard_ratios[result.rank] = result.bundle.compression_ratio();
-                    let bytes = result.bundle.compressed_bytes() as u64;
-                    match &cfg.sink {
-                        Sink::Null => {}
-                        Sink::Archive { .. } => {
-                            let t = Timer::start();
-                            let w = writer.as_mut().expect("archive sink open");
-                            let cost = (result.secs * 1e9) as u64;
-                            match result.spatial.take() {
-                                Some(spatial) => w.write_shard_spatial(
-                                    result.start,
-                                    result.end,
-                                    &result.bundle,
-                                    cost,
-                                    spatial,
-                                )?,
-                                None => {
-                                    w.write_shard(result.start, result.end, &result.bundle, cost)?
-                                }
-                            }
-                            sink_secs += t.secs();
-                        }
-                        Sink::Model { model, procs } => {
-                            sink_secs += model.write_time(bytes, *procs);
+                        Ok(w)
+                    });
+                    match made {
+                        Ok(w) => Some(w),
+                        Err(e) => {
+                            fails.push(ShardFailure {
+                                rank: 0,
+                                start: 0,
+                                end: 0,
+                                attempts: 1,
+                                stage: "archive",
+                                error: format!("archive create failed: {e}"),
+                            });
+                            None
                         }
                     }
                 }
-                let shard_index = match writer {
-                    Some(w) => {
-                        let t = Timer::start();
-                        let index = w.finish()?;
-                        sink_secs += t.secs();
-                        Some(index)
+                _ => None,
+            };
+            let mut sink_dead = matches!(cfg.sink, Sink::Archive { .. }) && writer.is_none();
+            while let Some(mut result) = done_rx.recv() {
+                shard_secs[result.rank] = result.secs;
+                shard_ratios[result.rank] = result.bundle.compression_ratio();
+                let bytes = result.bundle.compressed_bytes() as u64;
+                match &cfg.sink {
+                    Sink::Null => {}
+                    Sink::Archive { .. } => {
+                        let cost = (result.secs * 1e9) as u64;
+                        let wrote = match writer.as_mut() {
+                            Some(w) => {
+                                let t = Timer::start();
+                                let r = match result.spatial.take() {
+                                    Some(spatial) => w.write_shard_spatial(
+                                        result.start,
+                                        result.end,
+                                        &result.bundle,
+                                        cost,
+                                        spatial,
+                                    ),
+                                    None => w.write_shard(
+                                        result.start,
+                                        result.end,
+                                        &result.bundle,
+                                        cost,
+                                    ),
+                                };
+                                sink_secs += t.secs();
+                                r.map_err(|e| e.to_string())
+                            }
+                            None => {
+                                Err("not written: archive sink already failed".to_string())
+                            }
+                        };
+                        if let Err(error) = wrote {
+                            fails.push(ShardFailure {
+                                rank: result.rank,
+                                start: result.start,
+                                end: result.end,
+                                attempts: 1,
+                                stage: "write",
+                                error,
+                            });
+                            if !sink_dead {
+                                // After a failed write the file offset
+                                // is unknowable (a short write may have
+                                // torn the record); stop writing and
+                                // leave the file for salvage.
+                                sink_dead = true;
+                                writer = None;
+                            }
+                        }
                     }
-                    None => None,
-                };
-                Ok((sink_secs, shard_secs, shard_ratios, shard_index))
-            });
+                    Sink::Model { model, procs } => {
+                        sink_secs += model.write_time(bytes, *procs);
+                    }
+                }
+            }
+            let shard_index = match writer {
+                Some(w) => {
+                    let t = Timer::start();
+                    match w.finish() {
+                        Ok(index) => {
+                            sink_secs += t.secs();
+                            Some(index)
+                        }
+                        Err(e) => {
+                            fails.push(ShardFailure {
+                                rank: 0,
+                                start: 0,
+                                end: 0,
+                                attempts: 1,
+                                stage: "archive",
+                                error: format!("archive finish failed: {e}"),
+                            });
+                            None
+                        }
+                    }
+                }
+                None => None,
+            };
+            (sink_secs, shard_secs, shard_ratios, shard_index, fails)
+        });
 
         // Source: feed shards (slices of the resident snapshot).
         for (id, shard) in layout.iter().enumerate() {
@@ -299,16 +476,21 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
                 }),
             };
             if task_tx.send(task).is_err() {
-                break; // workers died; join below reports the error
+                break; // all workers exited; nothing can consume tasks
             }
         }
         drop(task_tx);
 
         for h in worker_handles {
-            h.join().expect("worker panicked")?;
+            h.join().expect("worker panicked");
         }
-        let (sink_secs, shard_secs, shard_ratios, shard_index) =
-            sink_handle.join().expect("sink panicked")?;
+        let (sink_secs, shard_secs, shard_ratios, shard_index, sink_fails) =
+            sink_handle.join().expect("sink panicked");
+
+        let mut all_failures =
+            std::mem::take(&mut *failures.lock().expect("failure list poisoned"));
+        all_failures.extend(sink_fails);
+        all_failures.sort_by(|a, b| (a.rank, a.start, a.stage).cmp(&(b.rank, b.start, b.stage)));
 
         let bytes_in = counters.bytes_in.load(Ordering::Relaxed);
         let bytes_out = counters.bytes_out.load(Ordering::Relaxed);
@@ -329,6 +511,8 @@ pub fn run_insitu(snap: &Snapshot, cfg: &InsituConfig) -> Result<InsituReport> {
             shard_ratios,
             layout: layout.clone(),
             shard_index,
+            retries: retries_ctr.load(Ordering::Relaxed),
+            failures: all_failures,
         })
     })
 }
@@ -370,6 +554,8 @@ mod tests {
                 layout: None,
                 sink: Sink::Null,
                 spatial: None,
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap();
@@ -419,6 +605,8 @@ mod tests {
                     procs: 1,
                 },
                 spatial: None,
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap();
@@ -446,6 +634,8 @@ mod tests {
                     spec: "sz_lv:lossless=false,radius=32768".into(),
                 },
                 spatial: None,
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap();
@@ -496,6 +686,8 @@ mod tests {
                     seg: 1024,
                     keys: Arc::clone(&plan.keys),
                 }),
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap();
@@ -550,6 +742,8 @@ mod tests {
             layout,
             sink: Sink::Null,
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         };
         let report = run_insitu(&s, &cfg(Some(layout.clone()))).unwrap();
         assert_eq!(report.layout, layout);
@@ -589,6 +783,8 @@ mod tests {
                 layout: None,
                 sink: Sink::Null,
                 spatial: None,
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap();
@@ -614,6 +810,8 @@ mod tests {
                     layout: None,
                     sink: Sink::Null,
                     spatial: None,
+                    max_retries: 0,
+                    sink_fault: None,
                 },
             )
             .unwrap()
@@ -639,8 +837,229 @@ mod tests {
                 layout: None,
                 sink: Sink::Null,
                 spatial: None,
+                max_retries: 0,
+                sink_fault: None,
             },
         );
         assert!(r.is_err());
+    }
+
+    use crate::snapshot::CompressedSnapshot;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A compressor whose first `fail_first` compress calls (counted
+    /// across all instances via the shared counter) fail — with a typed
+    /// error or a panic — then behaves exactly like the real codec.
+    struct Flaky {
+        inner: PerField<Sz>,
+        calls: Arc<AtomicUsize>,
+        fail_first: usize,
+        panic: bool,
+    }
+
+    impl SnapshotCompressor for Flaky {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn compress_with(
+            &self,
+            ctx: &ExecCtx,
+            snap: &Snapshot,
+            quality: &Quality,
+        ) -> Result<CompressedSnapshot> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) < self.fail_first {
+                if self.panic {
+                    panic!("flaky compressor blew up");
+                }
+                return Err(Error::Pipeline("flaky compressor failed".into()));
+            }
+            self.inner.compress_with(ctx, snap, quality)
+        }
+        fn decompress_with(
+            &self,
+            ctx: &ExecCtx,
+            c: &CompressedSnapshot,
+        ) -> Result<Snapshot> {
+            self.inner.decompress_with(ctx, c)
+        }
+    }
+
+    fn flaky_factory(fail_first: usize, panic: bool) -> CompressorFactory {
+        let calls = Arc::new(AtomicUsize::new(0));
+        Arc::new(move || {
+            Box::new(Flaky {
+                inner: PerField(Sz::lv()),
+                calls: Arc::clone(&calls),
+                fail_first,
+                panic,
+            }) as Box<dyn SnapshotCompressor>
+        })
+    }
+
+    fn archive_cfg(
+        path: &std::path::Path,
+        factory: CompressorFactory,
+        max_retries: usize,
+    ) -> InsituConfig {
+        InsituConfig {
+            shards: 4,
+            workers: 1, // single worker: completion order == task order
+            threads: 1,
+            queue_depth: 2,
+            quality: Quality::rel(1e-4),
+            factory,
+            layout: None,
+            sink: Sink::Archive {
+                path: path.to_path_buf(),
+                spec: "sz_lv:lossless=false,radius=32768".into(),
+            },
+            spatial: None,
+            max_retries,
+            sink_fault: None,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nblc_heal_{tag}_{}.nblc", std::process::id()))
+    }
+
+    /// The deterministic bytes of a v3 file: header + every shard
+    /// record (the region the footer's `file_crc` pins). The footer
+    /// itself carries wall-clock `cost_ns` counters, so it legitimately
+    /// differs between two otherwise identical runs.
+    fn data_region(bytes: &[u8]) -> &[u8] {
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        &bytes[..bytes.len() - 16 - foot_len as usize]
+    }
+
+    #[test]
+    fn transient_failures_retry_to_byte_identical_output() {
+        let s = md(8_000);
+        let good = tmp("retry_good");
+        let r0 = run_insitu(&s, &archive_cfg(&good, factory(), 0)).unwrap();
+        assert_eq!(r0.retries, 0);
+        assert!(r0.failures.is_empty());
+
+        for panics in [false, true] {
+            let flaky = tmp(if panics { "retry_panic" } else { "retry_err" });
+            let report =
+                run_insitu(&s, &archive_cfg(&flaky, flaky_factory(1, panics), 1)).unwrap();
+            assert_eq!(report.retries, 1, "one transient failure, one retry");
+            assert!(report.failures.is_empty(), "{:?}", report.failures);
+            assert_eq!(report.bytes_out, r0.bytes_out);
+            let index = report.shard_index.as_ref().unwrap();
+            let good_index = r0.shard_index.as_ref().unwrap();
+            let a = std::fs::read(&good).unwrap();
+            let b = std::fs::read(&flaky).unwrap();
+            assert_eq!(
+                data_region(&a),
+                data_region(&b),
+                "recovered run must be byte-identical (panics={panics})"
+            );
+            assert_eq!(index.file_crc, good_index.file_crc);
+            for (x, y) in index.entries.iter().zip(&good_index.entries) {
+                assert_eq!(
+                    (x.start, x.end, x.offset, x.len, x.bytes_out),
+                    (y.start, y.end, y.offset, y.len, y.bytes_out)
+                );
+            }
+            std::fs::remove_file(&flaky).ok();
+        }
+        std::fs::remove_file(&good).ok();
+    }
+
+    #[test]
+    fn exhausted_retries_degrade_to_failure_report() {
+        let s = md(4_000);
+        // Every compress call fails, budget of 1 retry per shard: the
+        // run completes (no abort, no panic) with every shard reported.
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 4,
+                workers: 2,
+                threads: 1,
+                queue_depth: 2,
+                quality: Quality::rel(1e-4),
+                factory: flaky_factory(usize::MAX, false),
+                layout: None,
+                sink: Sink::Null,
+                spatial: None,
+                max_retries: 1,
+                sink_fault: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.failures.len(), 4);
+        assert_eq!(report.retries, 4, "one retry per shard");
+        assert_eq!(report.bytes_out, 0);
+        for (i, f) in report.failures.iter().enumerate() {
+            assert_eq!(f.rank, i, "failures are rank-sorted");
+            assert_eq!(f.attempts, 2);
+            assert_eq!(f.stage, "compress");
+            assert!(f.error.contains("flaky"), "{}", f.error);
+        }
+    }
+
+    #[test]
+    fn persistent_panics_degrade_without_poisoning() {
+        let s = md(4_000);
+        let report = run_insitu(
+            &s,
+            &InsituConfig {
+                shards: 3,
+                workers: 2,
+                threads: 1,
+                queue_depth: 2,
+                quality: Quality::rel(1e-4),
+                factory: flaky_factory(usize::MAX, true),
+                layout: None,
+                sink: Sink::Null,
+                spatial: None,
+                max_retries: 0,
+                sink_fault: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.failures.len(), 3);
+        assert!(report
+            .failures
+            .iter()
+            .all(|f| f.stage == "compress" && f.error.contains("panic")));
+    }
+
+    #[test]
+    fn sink_fault_degrades_and_leaves_salvageable_file() {
+        use crate::data::archive::ShardReader;
+        use crate::testkit::failpoint::FaultKind;
+        let s = md(8_000);
+        // Fault inside the second shard record: header is 1 write, each
+        // record is 1 + 3 * n_fields writes.
+        let nf = PerField(Sz::lv())
+            .compress(&s.slice(0, 2_000), &Quality::rel(1e-4))
+            .unwrap()
+            .fields
+            .len() as u64;
+        let at = 1 + (1 + 3 * nf) + 2;
+        let path = tmp("sink_fault");
+        let mut cfg = archive_cfg(&path, factory(), 0);
+        cfg.sink_fault = Some(FaultPlan::new(at, FaultKind::Eio));
+        let report = run_insitu(&s, &cfg).unwrap();
+        assert!(report.shard_index.is_none());
+        let writes: Vec<_> = report
+            .failures
+            .iter()
+            .filter(|f| f.stage == "write")
+            .collect();
+        assert!(!writes.is_empty(), "{:?}", report.failures);
+        assert!(writes[0].error.contains("failpoint") || writes[0].error.contains("not written"));
+        // The torn in-place file still salvages to the first shard.
+        let (reader, salvage) = ShardReader::open_salvage(&path).unwrap();
+        assert!(!salvage.had_footer);
+        assert_eq!(salvage.shards_recovered, 1);
+        reader.verify_file_crc().unwrap();
+        reader.read_shard(0).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -87,6 +87,7 @@ use crate::error::{Error, Result};
 use crate::exec::ExecCtx;
 use crate::quality::Quality;
 use crate::snapshot::{CompressedField, CompressedSnapshot, Snapshot};
+use crate::testkit::failpoint::{FailpointWriter, FaultPlan};
 use crate::util::crc32::crc32;
 use crate::util::varint::{get_uvarint, put_uvarint};
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -557,13 +558,192 @@ impl ShardIndex {
     }
 }
 
+/// Destination of a [`ShardWriter`]: any byte sink plus the two
+/// durability hooks crash consistency needs. `barrier` runs between the
+/// last data record and the footer (streaming sinks fsync here, so a
+/// footer never claims records the disk has not seen); `commit` runs
+/// after the footer (flush + fsync, and for temp-file sinks the atomic
+/// rename into place). The trait is deliberately tiny so the testkit's
+/// [`FailpointWriter`] threads through every production write path
+/// unmodified.
+pub trait ArchiveSink: Write {
+    /// Durability barrier before the footer is written.
+    fn barrier(&mut self) -> Result<()>;
+    /// Durable completion after the footer is written.
+    fn commit(&mut self) -> Result<()>;
+}
+
+/// In-memory sink (tests, size probes): no durability to speak of.
+impl ArchiveSink for Vec<u8> {
+    fn barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+    fn commit(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// A failpoint wraps any sink; the durability hooks respect its trip
+/// state (a crashed disk cannot fsync either).
+impl<S: ArchiveSink> ArchiveSink for FailpointWriter<S> {
+    fn barrier(&mut self) -> Result<()> {
+        self.flush()?;
+        self.get_mut().barrier()
+    }
+    fn commit(&mut self) -> Result<()> {
+        self.flush()?;
+        self.get_mut().commit()
+    }
+}
+
+/// Atomic-and-durable file sink for `nblc compress`-style one-shot
+/// writes: bytes land in a sibling `<name>.tmp`, `commit` fsyncs and
+/// renames it into place (plus a best-effort directory fsync), so the
+/// destination path only ever holds a complete archive — a crash leaves
+/// the previous version (or nothing) and the temp file is removed on
+/// drop. A [`FailpointWriter`] sits permanently in the stack; it is
+/// armed from the `NBLC_FAILPOINT` environment variable (see
+/// [`FaultPlan::from_env`]).
+pub struct FileSink {
+    w: FailpointWriter<std::io::BufWriter<std::fs::File>>,
+    tmp: PathBuf,
+    dst: PathBuf,
+    committed: bool,
+}
+
+impl FileSink {
+    /// Create the temp file next to `dst`, arming the failpoint from
+    /// the environment.
+    pub fn create(dst: &Path) -> Result<FileSink> {
+        Self::create_with(dst, FaultPlan::from_env()?)
+    }
+
+    /// Create with an explicit fault plan (`None` = no fault).
+    pub fn create_with(dst: &Path, plan: Option<FaultPlan>) -> Result<FileSink> {
+        let name = dst
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| Error::invalid("archive path has no file name"))?;
+        let tmp = dst.with_file_name(format!("{name}.tmp"));
+        let file = std::fs::File::create(&tmp)?;
+        Ok(FileSink {
+            w: FailpointWriter::new(std::io::BufWriter::new(file), plan),
+            tmp,
+            dst: dst.to_path_buf(),
+            committed: false,
+        })
+    }
+}
+
+impl Write for FileSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.w.write(buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+impl ArchiveSink for FileSink {
+    fn barrier(&mut self) -> Result<()> {
+        // Nothing to order: the destination path is only created by the
+        // post-footer rename, which `commit` fsyncs first.
+        Ok(())
+    }
+    fn commit(&mut self) -> Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().get_ref().sync_all()?;
+        std::fs::rename(&self.tmp, &self.dst)?;
+        self.committed = true;
+        // Make the rename itself durable; failure here cannot un-land
+        // the data, so it is best-effort.
+        if let Some(parent) = self.dst.parent() {
+            let dir = if parent.as_os_str().is_empty() {
+                Path::new(".")
+            } else {
+                parent
+            };
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for FileSink {
+    fn drop(&mut self) {
+        if !self.committed {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Streaming in-place file sink for pipeline archives: records are
+/// appended to the destination path as they complete, `barrier` fsyncs
+/// the data region before the footer lands (footer-last ordering), and
+/// `commit` fsyncs the finished file. A crash mid-run leaves a torn
+/// but *salvageable* file — every fully-written record is on disk and
+/// [`ShardReader::open_salvage`] recovers it. Like [`FileSink`], a
+/// permanently-threaded [`FailpointWriter`] is armed from
+/// `NBLC_FAILPOINT`.
+pub struct StreamSink {
+    w: FailpointWriter<std::io::BufWriter<std::fs::File>>,
+}
+
+impl StreamSink {
+    /// Create (truncate) the destination file, arming the failpoint
+    /// from the environment.
+    pub fn create(path: &Path) -> Result<StreamSink> {
+        Self::create_with(path, FaultPlan::from_env()?)
+    }
+
+    /// Create with an explicit fault plan (`None` = no fault).
+    pub fn create_with(path: &Path, plan: Option<FaultPlan>) -> Result<StreamSink> {
+        let file = std::fs::File::create(path)?;
+        Ok(StreamSink {
+            w: FailpointWriter::new(std::io::BufWriter::new(file), plan),
+        })
+    }
+}
+
+impl Write for StreamSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.w.write(buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+impl ArchiveSink for StreamSink {
+    fn barrier(&mut self) -> Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().get_ref().sync_data()?;
+        Ok(())
+    }
+    fn commit(&mut self) -> Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().get_ref().sync_all()?;
+        Ok(())
+    }
+}
+
 /// Streaming v3 archive writer: records are appended in whatever order
 /// [`Self::write_shard`] is called (completion order in the pipeline);
 /// [`Self::finish`] sorts the index into logical order, validates that
 /// the shards partition `0..n` contiguously, and writes the seekable
 /// footer. No shard payload is ever re-buffered or rewritten.
-pub struct ShardWriter {
-    w: std::io::BufWriter<std::fs::File>,
+///
+/// The writer is generic over its [`ArchiveSink`], so the same code
+/// path serves the atomic temp-file sink ([`FileSink`], the
+/// `nblc compress` default), the salvageable in-place streaming sink
+/// ([`StreamSink`], the pipeline default), in-memory `Vec<u8>` sinks,
+/// and any of those behind a fault-injecting
+/// [`FailpointWriter`].
+pub struct ShardWriter<S: ArchiveSink = FileSink> {
+    w: S,
     offset: u64,
     crc: u32,
     spec: String,
@@ -593,6 +773,8 @@ struct SpatialAcc {
 impl ShardWriter {
     /// Create the archive file and write the v3 header, recording the
     /// legacy value-range-relative bound (`Quality::rel(eb_rel)`).
+    /// Writes through the atomic [`FileSink`]: the destination path
+    /// only appears once [`Self::finish`] commits.
     pub fn create(path: &Path, spec: &str, eb_rel: f64) -> Result<ShardWriter> {
         Self::create_quality(path, spec, &Quality::rel(eb_rel))
     }
@@ -602,8 +784,40 @@ impl ShardWriter {
     /// uniform rel coefficient, or `0.0`), and [`Self::finish`] appends
     /// a quality block — the canonical quality string plus the
     /// *resolved* per-field bounds accumulated from the shards — to the
-    /// seekable footer.
+    /// seekable footer. Atomic-and-durable via [`FileSink`].
     pub fn create_quality(path: &Path, spec: &str, quality: &Quality) -> Result<ShardWriter> {
+        Self::with_sink(FileSink::create(path)?, spec, quality)
+    }
+}
+
+impl ShardWriter<StreamSink> {
+    /// Create a *streaming* archive at `path` (in place, no temp file):
+    /// records become durable incrementally and a crash mid-run leaves
+    /// a salvageable file (see [`ShardReader::open_salvage`]). This is
+    /// the pipeline sink's constructor. The failpoint is armed from
+    /// `NBLC_FAILPOINT`.
+    pub fn create_stream(path: &Path, spec: &str, quality: &Quality) -> Result<Self> {
+        Self::with_sink(StreamSink::create(path)?, spec, quality)
+    }
+
+    /// [`Self::create_stream`] with an explicit fault plan (tests).
+    pub fn create_stream_with(
+        path: &Path,
+        spec: &str,
+        quality: &Quality,
+        plan: Option<FaultPlan>,
+    ) -> Result<Self> {
+        Self::with_sink(StreamSink::create_with(path, plan)?, spec, quality)
+    }
+}
+
+impl<S: ArchiveSink> ShardWriter<S> {
+    /// Wrap an arbitrary sink and write the v3 header through it. The
+    /// named constructors ([`ShardWriter::create_quality`],
+    /// [`ShardWriter::create_stream`]) all funnel here, so every sink —
+    /// including fault-injecting ones — exercises the identical write
+    /// path.
+    pub fn with_sink(sink: S, spec: &str, quality: &Quality) -> Result<ShardWriter<S>> {
         if spec.is_empty() || spec.len() > MAX_STR_LEN {
             return Err(Error::invalid("archive codec spec empty or too long"));
         }
@@ -617,7 +831,7 @@ impl ShardWriter {
         let head_crc = crc32(&head);
         head.extend_from_slice(&head_crc.to_le_bytes());
         let mut sw = ShardWriter {
-            w: std::io::BufWriter::new(std::fs::File::create(path)?),
+            w: sink,
             offset: 0,
             crc: 0,
             spec: spec.to_string(),
@@ -800,8 +1014,11 @@ impl ShardWriter {
         Ok(())
     }
 
-    /// Validate shard coverage, write the seekable footer, and flush.
-    /// Returns the index that was written.
+    /// Validate shard coverage, write the seekable footer, and make the
+    /// archive durable: the sink's barrier runs *before* the footer (so
+    /// a footer on disk never claims records that are not) and its
+    /// commit runs after (flush + fsync, plus the atomic rename for
+    /// temp-file sinks). Returns the index that was written.
     pub fn finish(mut self) -> Result<ShardIndex> {
         if self.entries.is_empty() {
             return Err(Error::invalid("a v3 archive needs at least one shard"));
@@ -842,8 +1059,11 @@ impl ShardWriter {
         };
         let tail =
             encode_footer_tail(n, &self.entries, self.crc, quality.as_ref(), spatial.as_ref());
+        // Footer-last with a durability barrier: every shard record is
+        // on stable storage before the footer that indexes it.
+        self.w.barrier()?;
         self.w.write_all(&tail)?;
-        self.w.flush()?;
+        self.w.commit()?;
         Ok(ShardIndex {
             spec: self.spec,
             eb_rel: self.eb_rel,
@@ -1409,6 +1629,248 @@ impl ShardReader {
         }
         Ok(())
     }
+
+    /// Open a damaged (crashed-before-footer, truncated, or torn) v3
+    /// archive by walking its records directly instead of trusting a
+    /// footer. The scan starts after the CRC-verified header and
+    /// accepts records while they parse completely — every field CRC
+    /// must verify — stopping at the first torn or missing record
+    /// (after a torn record there is no reliable way to resynchronize,
+    /// since payload bytes may alias the record marker). A footer is
+    /// then reconstructed in memory for the longest logically
+    /// *contiguous* shard prefix (`0..n` with no gaps — the invariant
+    /// every intact archive satisfies), and the reader serves shards
+    /// straight from the damaged file. Use [`Self::export_salvaged`] to
+    /// write a clean archive.
+    ///
+    /// An *intact* v3 file opens normally and reports zero loss, so the
+    /// call is safe to use unconditionally. v1/v2 archives are a
+    /// [`Error::Format`] error: they are a single record with no
+    /// internal structure to salvage.
+    pub fn open_salvage(path: &Path) -> Result<(ShardReader, SalvageReport)> {
+        match Self::open(path) {
+            Ok(reader) => {
+                return if reader.version == FORMAT_VERSION_V3 {
+                    let report = SalvageReport {
+                        had_footer: true,
+                        shards_recovered: reader.index.entries.len(),
+                        shards_dropped: 0,
+                        particles_recovered: reader.index.n,
+                        data_end: reader.data_end,
+                        bytes_lost: 0,
+                        last_valid: reader
+                            .index
+                            .entries
+                            .last()
+                            .map(|e| (e.start, e.end, e.offset)),
+                    };
+                    Ok((reader, report))
+                } else {
+                    Err(Error::Format {
+                        expected: "v3 sharded archive".into(),
+                        found: format!(
+                            "intact v{} single-record archive (nothing to salvage)",
+                            reader.version
+                        ),
+                    })
+                };
+            }
+            Err(Error::Io(e)) => return Err(Error::Io(e)),
+            Err(_) => {}
+        }
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 8 || &bytes[..8] != MAGIC_V3 {
+            return Err(Error::Format {
+                expected: "NBLCARC3 sharded archive".into(),
+                found: "bad or non-v3 magic (salvage only understands v3 files)".into(),
+            });
+        }
+        // Header first, strictly: without a trusted spec + error bound
+        // nothing downstream of salvage could decode the payloads.
+        let mut hpos = 8usize;
+        let version =
+            u32::from_le_bytes(take(&bytes, &mut hpos, 4, "version")?.try_into().unwrap());
+        if version != FORMAT_VERSION_V3 {
+            return Err(Error::Format {
+                expected: format!("archive v{FORMAT_VERSION_V3}"),
+                found: format!("archive v{version}"),
+            });
+        }
+        let spec = take_string(&bytes, &mut hpos, "codec spec")?;
+        let eb_rel =
+            f64::from_le_bytes(take(&bytes, &mut hpos, 8, "error bound")?.try_into().unwrap());
+        let stored_hcrc =
+            u32::from_le_bytes(take(&bytes, &mut hpos, 4, "header crc")?.try_into().unwrap());
+        if stored_hcrc != crc32(&bytes[..hpos - 4]) {
+            return Err(Error::corrupt(
+                "v3 header checksum mismatch; nothing is salvageable without a trusted header",
+            ));
+        }
+
+        // Record walk: accept complete, CRC-valid records until the
+        // stream tears.
+        let mut entries: Vec<ShardEntry> = Vec::new();
+        let mut pos = hpos;
+        loop {
+            let rec_start = pos;
+            if rec_start + 4 > bytes.len() || &bytes[rec_start..rec_start + 4] != SHARD_MARKER {
+                break;
+            }
+            if entries.len() >= MAX_SHARDS {
+                break;
+            }
+            let parsed = (|| -> Result<ShardEntry> {
+                let mut p = rec_start + 4;
+                let start = get_uvarint(&bytes, &mut p)?;
+                let end = get_uvarint(&bytes, &mut p)?;
+                if end < start || end > MAX_PARTICLES {
+                    return Err(Error::corrupt("shard record range invalid"));
+                }
+                let n_fields = get_uvarint(&bytes, &mut p)?;
+                if n_fields > MAX_FIELDS as u64 {
+                    return Err(Error::corrupt("implausible field count in shard record"));
+                }
+                let mut bytes_out = 0u64;
+                for i in 0..n_fields {
+                    let f = parse_field_stream(&bytes, &mut p, i)?;
+                    bytes_out += f.bytes.len() as u64;
+                }
+                Ok(ShardEntry {
+                    start,
+                    end,
+                    offset: rec_start as u64,
+                    len: (p - rec_start) as u64,
+                    bytes_out,
+                    cost_nanos: 0,
+                })
+            })();
+            match parsed {
+                Ok(e) => {
+                    pos = (e.offset + e.len) as usize;
+                    entries.push(e);
+                }
+                Err(_) => break,
+            }
+        }
+        let data_end = pos as u64;
+        let bytes_lost = bytes.len() as u64 - data_end;
+        // Physically-last intact record (the "you got this far" marker
+        // for diagnostics) — before the logical sort below.
+        let last_valid = entries.last().map(|e| (e.start, e.end, e.offset));
+        let total = entries.len();
+
+        // Keep the longest contiguous logical prefix 0..n — a partial
+        // coverage with a hole would violate the partition invariant
+        // every reader enforces.
+        entries.sort_by_key(|e| (e.start, e.end));
+        let mut cover = 0u64;
+        let mut keep = 0usize;
+        for e in &entries {
+            if e.start != cover {
+                break;
+            }
+            cover = e.end;
+            keep += 1;
+        }
+        entries.truncate(keep);
+        if keep == 0 {
+            return Err(Error::corrupt(
+                "no complete shard records found; nothing to salvage",
+            ));
+        }
+
+        let report = SalvageReport {
+            had_footer: false,
+            shards_recovered: keep,
+            shards_dropped: total - keep,
+            particles_recovered: cover,
+            data_end,
+            bytes_lost,
+            last_valid,
+        };
+        Ok((
+            ShardReader {
+                path: path.to_path_buf(),
+                version: FORMAT_VERSION_V3,
+                index: ShardIndex {
+                    spec,
+                    eb_rel,
+                    n: cover,
+                    entries,
+                    // Pin what actually survives: every byte up to the
+                    // scan stop (dropped-but-intact records included).
+                    file_crc: crc32(&bytes[..data_end as usize]),
+                    quality: None,
+                    spatial: None,
+                },
+                legacy: None,
+                data_end,
+            },
+            report,
+        ))
+    }
+
+    /// Write this reader's view out as a clean, footered v3 archive:
+    /// the data region `[0, data_end)` is copied byte-for-byte and a
+    /// fresh footer indexing this reader's shard table is appended.
+    /// After [`Self::open_salvage`] that turns a damaged file into one
+    /// every normal reader accepts. The write is atomic-and-durable
+    /// ([`FileSink`], deliberately *not* armed from `NBLC_FAILPOINT` —
+    /// the recovery tool must not be killed by the fault that created
+    /// its input).
+    pub fn export_salvaged(&self, out: &Path) -> Result<ShardIndex> {
+        if self.legacy.is_some() {
+            return Err(Error::invalid(
+                "only v3 sharded archives can be re-exported",
+            ));
+        }
+        let mut sink = FileSink::create_with(out, None)?;
+        let mut file = std::fs::File::open(&self.path)?;
+        let mut remaining = self.data_end;
+        let mut buf = vec![0u8; 1 << 16];
+        while remaining > 0 {
+            let k = remaining.min(buf.len() as u64) as usize;
+            file.read_exact(&mut buf[..k])
+                .map_err(|_| Error::corrupt("archive truncated during salvage export"))?;
+            sink.write_all(&buf[..k])?;
+            remaining -= k as u64;
+        }
+        let tail = encode_footer_tail(
+            self.index.n,
+            &self.index.entries,
+            self.index.file_crc,
+            self.index.quality.as_ref(),
+            self.index.spatial.as_ref(),
+        );
+        sink.barrier()?;
+        sink.write_all(&tail)?;
+        sink.commit()?;
+        Ok(self.index.clone())
+    }
+}
+
+/// What [`ShardReader::open_salvage`] recovered — and what it could not.
+#[derive(Clone, Debug)]
+pub struct SalvageReport {
+    /// The file opened normally through its footer (no salvage needed;
+    /// all loss fields are zero).
+    pub had_footer: bool,
+    /// Complete, CRC-valid shards in the recovered contiguous prefix.
+    pub shards_recovered: usize,
+    /// Complete records that had to be dropped because the contiguous
+    /// coverage `0..n` broke before them (a missing earlier shard).
+    pub shards_dropped: usize,
+    /// Particles covered by the recovered prefix (`0..this`).
+    pub particles_recovered: u64,
+    /// Byte offset where the record scan stopped (everything before it
+    /// is structurally valid).
+    pub data_end: u64,
+    /// Bytes past `data_end` that could not be interpreted (the torn
+    /// record plus anything after it).
+    pub bytes_lost: u64,
+    /// `(start, end, byte offset)` of the physically last intact record
+    /// — the most precise "how far did the write get" marker.
+    pub last_valid: Option<(u64, u64, u64)>,
 }
 
 /// Parse one shard record's bytes against its footer entry.
@@ -2835,5 +3297,209 @@ mod tests {
         assert_eq!(reader.spatial(), index.spatial.as_ref());
         reader.verify_file_crc().unwrap();
         std::fs::remove_file(&p).ok();
+    }
+
+    use crate::testkit::failpoint::FaultKind;
+
+    /// Stream-write `shards` shards through an (optionally armed)
+    /// StreamSink; returns the result of `finish`.
+    fn stream_v3(
+        path: &std::path::Path,
+        n: usize,
+        shards: usize,
+        plan: Option<FaultPlan>,
+    ) -> Result<ShardIndex> {
+        let s = generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        });
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let mut w = ShardWriter::create_stream_with(path, V3_SPEC, &q, plan)?;
+        for sh in &crate::coordinator::shard::split_even(s.len(), shards) {
+            let b = comp.compress(&s.slice(sh.start, sh.end), &q).unwrap();
+            w.write_shard(sh.start, sh.end, &b, 0)?;
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn file_sink_commit_is_atomic() {
+        // The destination path must not exist until finish() commits,
+        // and a failed run must leave neither destination nor temp.
+        let dst = tmp_path("atomic_commit");
+        let tmp = dst.with_file_name(format!(
+            "{}.tmp",
+            dst.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::remove_file(&dst).ok();
+
+        let (s, _) = bundle();
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let b = comp.compress(&s, &q).unwrap();
+
+        let mut w = ShardWriter::create_quality(&dst, V3_SPEC, &q).unwrap();
+        assert!(!dst.exists(), "destination appeared before commit");
+        assert!(tmp.exists(), "writer must stage into the sibling temp");
+        w.write_shard(0, s.len(), &b, 0).unwrap();
+        assert!(!dst.exists());
+        w.finish().unwrap();
+        assert!(dst.exists(), "commit renames the temp into place");
+        assert!(!tmp.exists(), "commit consumes the temp");
+        ShardReader::open(&dst).unwrap().verify_file_crc().unwrap();
+        std::fs::remove_file(&dst).ok();
+
+        // Failed run: fault on an early write, drop the writer.
+        let sink =
+            FileSink::create_with(&dst, Some(FaultPlan::new(1, FaultKind::Eio))).unwrap();
+        let mut w = ShardWriter::with_sink(sink, V3_SPEC, &q).unwrap();
+        assert!(w.write_shard(0, s.len(), &b, 0).is_err());
+        drop(w);
+        assert!(!dst.exists(), "no destination after a failed run");
+        assert!(!tmp.exists(), "temp cleaned up on drop");
+    }
+
+    #[test]
+    fn stream_sink_crash_is_salvageable() {
+        // Fault an in-place streaming write partway, then salvage: the
+        // recovered prefix must decode bitwise-equal to the fault-free
+        // run, and the exported archive must open normally.
+        let good = tmp_path("salvage_good");
+        let index = stream_v3(&good, 3_000, 4, None).unwrap();
+        let good_reader = ShardReader::open(&good).unwrap();
+
+        // 1 header write + (1 + 3 * n_fields) writes per shard: fault
+        // inside the third record so exactly two complete shards land.
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let probe = generate_md(&MdConfig {
+            n_particles: 3_000,
+            ..Default::default()
+        });
+        let sh0 = crate::coordinator::shard::split_even(3_000, 4)[0];
+        let nf = comp
+            .compress(&probe.slice(sh0.start, sh0.end), &q)
+            .unwrap()
+            .fields
+            .len() as u64;
+        let at = 1 + 2 * (1 + 3 * nf) + 2;
+        let torn = tmp_path("salvage_torn");
+        let err = stream_v3(&torn, 3_000, 4, Some(FaultPlan::new(at, FaultKind::Short)))
+            .expect_err("the armed run must fail");
+        assert!(matches!(err, Error::Io(_)), "typed error, got {err:?}");
+        assert!(
+            ShardReader::open(&torn).is_err(),
+            "a torn file must not open through the normal path"
+        );
+
+        let (reader, report) = ShardReader::open_salvage(&torn).unwrap();
+        assert!(!report.had_footer);
+        assert!(report.shards_recovered >= 1);
+        assert!(report.bytes_lost > 0);
+        assert!(report.last_valid.is_some());
+        assert_eq!(reader.n(), report.particles_recovered);
+        reader.verify_file_crc().unwrap();
+
+        // Recovered shards are bitwise-identical to the fault-free run.
+        for (i, e) in reader.index().entries.iter().enumerate() {
+            let g = good_reader
+                .index()
+                .entries
+                .iter()
+                .position(|ge| (ge.start, ge.end) == (e.start, e.end))
+                .expect("recovered shard exists in the fault-free run");
+            let a = reader.read_shard(i).unwrap();
+            let b = good_reader.read_shard(g).unwrap();
+            assert_eq!(a.fields.len(), b.fields.len());
+            for (fa, fb) in a.fields.iter().zip(&b.fields) {
+                assert_eq!(fa.bytes, fb.bytes, "shard {i} diverged");
+            }
+        }
+
+        // Export → a clean archive any reader accepts.
+        let clean = tmp_path("salvage_clean");
+        let out = reader.export_salvaged(&clean).unwrap();
+        assert_eq!(out.n, reader.n());
+        let re = ShardReader::open(&clean).unwrap();
+        re.verify_file_crc().unwrap();
+        assert_eq!(re.n(), reader.n());
+        assert_eq!(re.spec(), V3_SPEC);
+
+        // An intact archive "salvages" to itself with zero loss.
+        let (ok_reader, ok_report) = ShardReader::open_salvage(&good).unwrap();
+        assert!(ok_report.had_footer);
+        assert_eq!(ok_report.bytes_lost, 0);
+        assert_eq!(ok_report.shards_dropped, 0);
+        assert_eq!(ok_report.shards_recovered, index.entries.len());
+        assert_eq!(ok_reader.n(), index.n);
+
+        for p in [&good, &torn, &clean] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn salvage_sweep_never_panics() {
+        // Every write index up to well past the first shard must yield
+        // either a salvageable prefix or a typed "nothing to salvage" —
+        // never a panic, never a silently-open torn file.
+        let probe = tmp_path("salvage_sweep_probe");
+        stream_v3(&probe, 1_200, 3, None).unwrap();
+        std::fs::remove_file(&probe).ok();
+        for at in 0..24u64 {
+            for kind in [FaultKind::Enospc, FaultKind::Short] {
+                let p = tmp_path(&format!("salvage_sweep_{at}_{kind:?}"));
+                let r = stream_v3(&p, 1_200, 3, Some(FaultPlan::new(at, kind)));
+                match r {
+                    // Fault landed: salvage must either recover a
+                    // verified prefix or report nothing salvageable.
+                    Err(_) => match ShardReader::open_salvage(&p) {
+                        Ok((reader, report)) => {
+                            assert!(report.shards_recovered >= 1);
+                            reader.verify_file_crc().unwrap();
+                            for i in 0..reader.index().entries.len() {
+                                reader.read_shard(i).unwrap();
+                            }
+                        }
+                        Err(e) => {
+                            assert!(
+                                !matches!(e, Error::Io(_)),
+                                "salvage returned a raw I/O error at op {at}: {e}"
+                            );
+                        }
+                    },
+                    // Fault index past the workload's write count: the
+                    // run completed and the file must simply be intact.
+                    Ok(_) => {
+                        ShardReader::open(&p).unwrap().verify_file_crc().unwrap();
+                    }
+                }
+                std::fs::remove_file(&p).ok();
+            }
+        }
+    }
+
+    #[test]
+    fn salvage_rejects_hopeless_input() {
+        let p = tmp_path("salvage_hopeless");
+        // Non-v3 magic.
+        std::fs::write(&p, b"garbage-not-an-archive").unwrap();
+        assert!(matches!(
+            ShardReader::open_salvage(&p),
+            Err(Error::Format { .. })
+        ));
+        // Valid magic but the header tears before any record.
+        let good = tmp_path("salvage_hopeless_src");
+        stream_v3(&good, 600, 1, None).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&p, &bytes[..20]).unwrap();
+        assert!(ShardReader::open_salvage(&p).is_err());
+        // Header intact but zero complete records.
+        std::fs::write(&p, &bytes[..30]).unwrap();
+        let r = ShardReader::open_salvage(&p);
+        assert!(r.is_err(), "no records -> nothing to salvage");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&good).ok();
     }
 }

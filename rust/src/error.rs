@@ -26,6 +26,17 @@ pub enum Error {
     /// Coordinator / pipeline problems.
     Pipeline(String),
 
+    /// A pipeline run finished degraded: some shards failed even after
+    /// retries, and their data is missing from the output.
+    PartialFailure {
+        /// Shards that failed permanently.
+        failed: usize,
+        /// Total shards in the run.
+        total: usize,
+        /// Task retries that were attempted across the run.
+        retries: u64,
+    },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -44,6 +55,14 @@ impl fmt::Display for Error {
             ),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
+            Error::PartialFailure {
+                failed,
+                total,
+                retries,
+            } => write!(
+                f,
+                "pipeline partial failure: {failed} of {total} shards failed ({retries} retries)"
+            ),
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -102,5 +121,14 @@ mod tests {
         );
         let io: Error = std::io::Error::other("boom").into();
         assert_eq!(io.to_string(), "boom");
+        assert_eq!(
+            Error::PartialFailure {
+                failed: 2,
+                total: 8,
+                retries: 3
+            }
+            .to_string(),
+            "pipeline partial failure: 2 of 8 shards failed (3 retries)"
+        );
     }
 }

@@ -148,6 +148,48 @@
 //! payload, and the decoded snapshot are bit-identical at any worker /
 //! thread count.
 //!
+//! ## Durability & recovery
+//!
+//! v3 writes are crash-consistent by construction: `nblc compress`
+//! stages through a temp file and commits with fsync + atomic rename,
+//! while the streaming pipeline sink writes the footer *last* behind an
+//! fsync barrier, so every byte the footer indexes is already on stable
+//! storage. A writer killed mid-run therefore leaves a footer-less file
+//! whose record prefix is still intact.
+//! [`data::archive::ShardReader::open_salvage`] walks such a file
+//! record by record, keeps the CRC-verified contiguous prefix, and
+//! reconstructs an index for it; `export_salvaged` re-emits the prefix
+//! as an intact archive (the `nblc salvage` command). Intact archives
+//! pass through unchanged:
+//!
+//! ```no_run
+//! use nblc::data::archive::ShardReader;
+//! use std::path::Path;
+//!
+//! let (reader, report) = ShardReader::open_salvage(Path::new("torn.nblc")).unwrap();
+//! println!(
+//!     "recovered {} shards / {} particles ({} bytes lost past the tear)",
+//!     report.shards_recovered,
+//!     report.particles_recovered,
+//!     report.bytes_lost,
+//! );
+//! // The salvaged prefix reads like any archive...
+//! let bundle = reader.read_shard(0).unwrap();
+//! # let _ = bundle;
+//! // ...and can be materialized as an intact file, footer and all.
+//! reader.export_salvaged(Path::new("recovered.nblc")).unwrap();
+//! ```
+//!
+//! Upstream of the archive, `[pipeline] max_retries = N` gives each
+//! shard task a bounded in-place retry (failed or panicked compressors
+//! are rebuilt and re-run on the same worker, so a recovered run is
+//! byte-identical to a fault-free one); what still fails degrades the
+//! run into a typed [`Error::PartialFailure`] report instead of a
+//! panic. The serve daemon drains gracefully on SIGTERM and falls back
+//! to the salvage path when asked to serve a footer-less archive. The
+//! deterministic fault-injection harness behind all of this lives in
+//! [`testkit::failpoint`] (`NBLC_FAILPOINT=write:<N>[:enospc|eio|short]`).
+//!
 //! ## Spatial queries
 //!
 //! Archives written with the pipeline's `layout = "spatial"` carry a

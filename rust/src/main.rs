@@ -5,6 +5,7 @@
 //!   compress    compress a snapshot file with a codec spec
 //!   decompress  decompress an archive back to a snapshot file
 //!   inspect     print an archive's self-description (spec, fields, CRCs)
+//!   salvage     recover the verified prefix of a torn / footer-less archive
 //!   list-codecs show every registered codec and its tunable parameters
 //!   analyze     distortion report (max err / NRMSE / PSNR per field)
 //!   pipeline    run the in-situ pipeline from a config file
@@ -31,6 +32,7 @@ use nblc::snapshot::FIELD_NAMES;
 use nblc::util::humansize;
 use nblc::util::timer::Timer;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 const HELP: &str = "\
 nblc — single-snapshot lossy compression for N-body simulations
@@ -46,6 +48,7 @@ COMMANDS:
               [--particles a..b] [--region x0..x1,y0..y1,z0..z1]
               [--simd off|auto|force]
   inspect     <in.nblc> [--verify]
+  salvage     <in.nblc> [--output <out.nblc>]
   list-codecs
   analyze     <orig.snap> <recon.snap>
   pipeline    --config <file.toml> [--threads N] [--simd off|auto|force]
@@ -54,7 +57,7 @@ COMMANDS:
               [--decode_budget_ms N] [--threads N] [--simd off|auto|force]
   get         [<archive>] [--addr host:port] [--particles a..b]
               [--region x0..x1,y0..y1,z0..z1] [--out <file.snap>]
-              [--stats]
+              [--stats] [--retries N]
   info        [--simd off|auto|force]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
@@ -103,8 +106,18 @@ typed Busy response instead of queueing unboundedly. Defaults come
 from the config's [serve] section (addr, cache_mb, max_inflight,
 queue_timeout_ms, decode_budget_ms, threads); flags override. get
 addresses archives by basename (omit it when one archive is served),
-reuses --particles a..b for ranges, and --stats prints the daemon's
-cache/admission counters.
+reuses --particles a..b for ranges, --retries N waits out Busy sheds
+with jittered backoff, and --stats prints the daemon's cache/admission
+counters. SIGTERM/SIGINT drain the daemon gracefully: in-flight
+requests complete before the process exits.
+
+Durability: pipeline archives are written footer-last with fsync
+barriers, and `nblc compress` writes through a temp file + atomic
+rename. A run killed mid-write leaves a footer-less file; `salvage`
+walks its records, keeps the CRC-verified contiguous prefix, and
+re-exports it as an intact archive. `[pipeline] max_retries = N`
+retries failed/panicked shard tasks in place before a run degrades to
+a typed partial-failure report.
 ";
 
 fn main() {
@@ -134,6 +147,7 @@ fn run(args: &Args) -> Result<()> {
         "compress" => cmd_compress(args),
         "decompress" => cmd_decompress(args),
         "inspect" => cmd_inspect(args),
+        "salvage" => cmd_salvage(args),
         "list-codecs" => cmd_list_codecs(args),
         "analyze" => cmd_analyze(args),
         "pipeline" => cmd_pipeline(args),
@@ -438,7 +452,31 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         return Err(Error::invalid("usage: inspect <in.nblc> [--verify]"));
     };
     let verify = args.has("verify");
-    let reader = ShardReader::open(Path::new(input))?;
+    // A torn v3 archive (crashed writer, truncated copy) still has a
+    // readable prefix: name the last structurally-valid shard and point
+    // at `nblc salvage` instead of a bare corruption error.
+    let reader = match ShardReader::open(Path::new(input)) {
+        Ok(reader) => reader,
+        Err(Error::Io(e)) => return Err(Error::Io(e)),
+        Err(first) => match ShardReader::open_salvage(Path::new(input)) {
+            Ok((_, rep)) if !rep.had_footer => {
+                let tail = match rep.last_valid {
+                    Some((s, e, off)) => format!(
+                        "last structurally-valid shard covers particles {s}..{e} \
+                         (record at byte offset {off})"
+                    ),
+                    None => "no structurally-valid shard record survives".into(),
+                };
+                return Err(Error::Corrupt(format!(
+                    "{first}; {} of {} bytes are a verifiable prefix; {tail}; \
+                     run `nblc salvage {input}` to recover it",
+                    rep.data_end,
+                    rep.data_end + rep.bytes_lost,
+                )));
+            }
+            _ => return Err(first),
+        },
+    };
     let idx = reader.index();
     let orig_bytes = idx.original_bytes();
     let comp_bytes = idx.compressed_bytes();
@@ -559,6 +597,55 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             _ => println!("whole-file CRC: n/a (v1 bundles carry no checksums)"),
         }
     }
+    Ok(())
+}
+
+fn cmd_salvage(args: &Args) -> Result<()> {
+    args.expect_known(&["output"])?;
+    let [input] = args.positionals.as_slice() else {
+        return Err(Error::invalid(
+            "usage: salvage <in.nblc> [--output <out.nblc>]",
+        ));
+    };
+    let (reader, report) = ShardReader::open_salvage(Path::new(input))?;
+    if report.had_footer {
+        println!(
+            "{input}: archive is intact ({} shards, footer verified); nothing to salvage",
+            report.shards_recovered
+        );
+        return Ok(());
+    }
+    println!("{input}: no footer (crashed or truncated write)");
+    println!(
+        "recovered: {} shards / {} particles (CRC-verified contiguous prefix)",
+        report.shards_recovered, report.particles_recovered
+    );
+    if report.shards_dropped > 0 {
+        println!(
+            "dropped:   {} record(s) outside the contiguous prefix",
+            report.shards_dropped
+        );
+    }
+    println!(
+        "readable:  {} of {} bytes ({} lost past the tear)",
+        report.data_end,
+        report.data_end + report.bytes_lost,
+        report.bytes_lost,
+    );
+    if let Some((s, e, off)) = report.last_valid {
+        println!("last structurally-valid record: particles {s}..{e} at byte offset {off}");
+    }
+    let out = match args.get("output") {
+        Some(o) => PathBuf::from(o),
+        None => PathBuf::from(format!("{input}.salvaged")),
+    };
+    let index = reader.export_salvaged(&out)?;
+    println!(
+        "wrote {} ({} shards, footer reconstructed; try `nblc inspect {}`)",
+        out.display(),
+        index.entries.len(),
+        out.display(),
+    );
     Ok(())
 }
 
@@ -747,6 +834,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 factory: factory.clone(),
                 sink,
                 spatial: spatial_cfg.clone(),
+                max_retries: settings.max_retries,
+                sink_fault: None,
             },
         )
     };
@@ -760,10 +849,38 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             report.source_stalls,
             report.sink_stalls,
         );
+        if report.retries > 0 {
+            println!(
+                "pipeline {label}: {} task retr{} recovered transient faults",
+                report.retries,
+                if report.retries == 1 { "y" } else { "ies" },
+            );
+        }
+    };
+    // A degraded run (shards missing even after retries) is a typed
+    // failure with a non-zero exit: the archive — when one was being
+    // written — has no footer, but remains recoverable via
+    // `nblc salvage`.
+    let check_degraded = |report: &InsituReport| -> Result<()> {
+        if report.failures.is_empty() {
+            return Ok(());
+        }
+        for f in &report.failures {
+            eprintln!(
+                "pipeline failure: rank {} [{}..{}] at stage '{}' after {} attempt(s): {}",
+                f.rank, f.start, f.end, f.stage, f.attempts, f.error,
+            );
+        }
+        Err(Error::PartialFailure {
+            failed: report.failures.len(),
+            total: settings.shards,
+            retries: report.retries,
+        })
     };
 
     let mut report = run(initial_layout.clone(), !settings.rebalance)?;
     print_report("round 1", &report);
+    check_degraded(&report)?;
     if settings.rebalance {
         // Feed the observed per-shard cost counters (the same numbers
         // the v3 footer records) back into the boundary splitter and
@@ -779,6 +896,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         println!("rebalance: shard boundaries recut from round-1 cost counters");
         report = run(Some(layout2), true)?;
         print_report("round 2 (rebalanced)", &report);
+        check_degraded(&report)?;
     }
     if let Some(out) = &settings.output {
         let shards_written = report
@@ -842,12 +960,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.queue_timeout_ms,
         kern.label,
     );
+    if server.salvaged_shards() > 0 {
+        println!(
+            "warning: serving {} salvaged shard(s) from footer-less archive(s); \
+             run `nblc salvage` to materialize intact copies",
+            server.salvaged_shards(),
+        );
+    }
+    install_stop_handler();
+    // Watcher: the signal handler only flips an atomic (async-signal-
+    // safe); this thread turns it into a server stop + a throwaway
+    // connection, because glibc installs SIGTERM with SA_RESTART and a
+    // blocking accept() would otherwise never notice.
+    let stop = server.stop_flag();
+    let addr = server.local_addr();
+    std::thread::spawn(move || loop {
+        if STOP_SIGNAL.load(Ordering::SeqCst) {
+            stop.store(true, Ordering::SeqCst);
+            let _ = std::net::TcpStream::connect(addr);
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
     server.run();
+    println!(
+        "shutdown: drained {} connection(s) after their in-flight request completed",
+        server.drained_connections(),
+    );
     Ok(())
 }
 
+/// Set on SIGTERM/SIGINT; polled by the serve watcher thread.
+static STOP_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_stop_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_stop(_sig: i32) {
+        STOP_SIGNAL.store(true, Ordering::SeqCst);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_stop as usize);
+        signal(SIGINT, on_stop as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_stop_handler() {}
+
 fn cmd_get(args: &Args) -> Result<()> {
-    args.expect_known(&["addr", "particles", "region", "out", "stats"])?;
+    args.expect_known(&["addr", "particles", "region", "out", "stats", "retries"])?;
     let addr = args.get_or("addr", "127.0.0.1:7117");
     let mut client = ServeClient::connect(addr.as_str())?;
     if args.has("stats") {
@@ -870,10 +1036,11 @@ fn cmd_get(args: &Args) -> Result<()> {
         Some(s) => Some(parse_particles(s)?),
         None => None,
     };
+    let retries: usize = args.get_parse("retries", 0)?;
     let t = Timer::start();
     let reply = match &region {
         Some(r) => client.get_region(archive, r.min, r.max)?,
-        None => client.get(archive, range)?,
+        None => client.get_with_retry(archive, range, retries)?,
     };
     match reply {
         GetReply::Data(d) => {
@@ -909,7 +1076,9 @@ fn cmd_get(args: &Args) -> Result<()> {
         }
         GetReply::Busy(b) => {
             return Err(Error::Pipeline(format!(
-                "server busy: {}/{} requests in flight (est cost {:.1} ms in flight, budget {:.1} ms); retry later",
+                "server busy after {} attempt(s): {}/{} requests in flight \
+                 (est cost {:.1} ms in flight, budget {:.1} ms); retry later or raise --retries",
+                retries + 1,
                 b.inflight,
                 b.max_inflight,
                 b.inflight_cost_nanos as f64 / 1e6,

@@ -24,6 +24,15 @@ pub struct ServeMetrics {
     pub region_requests: AtomicU64,
     /// Shards the spatial index pruned from region requests.
     pub shards_pruned: AtomicU64,
+    /// Admission acquires that had to wait (blocked at least once)
+    /// before a slot opened up.
+    pub retries: AtomicU64,
+    /// Shards recovered by the salvage fallback when a served archive
+    /// opened without an intact footer.
+    pub salvaged_shards: AtomicU64,
+    /// Connections closed by a graceful drain after their in-flight
+    /// request completed.
+    pub drained_connections: AtomicU64,
     /// Archive names, parallel to `shard_touches`.
     names: Vec<String>,
     /// Shards fetched (cache hit or decode) per archive.
@@ -42,6 +51,9 @@ impl ServeMetrics {
             bytes_served: AtomicU64::new(0),
             region_requests: AtomicU64::new(0),
             shards_pruned: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            salvaged_shards: AtomicU64::new(0),
+            drained_connections: AtomicU64::new(0),
             names,
             shard_touches,
         }
@@ -81,6 +93,9 @@ impl ServeMetrics {
             cache_cap_bytes: cache.cap_bytes,
             inflight,
             inflight_high_water,
+            retries: self.retries.load(Ordering::Relaxed),
+            salvaged_shards: self.salvaged_shards.load(Ordering::Relaxed),
+            drained_connections: self.drained_connections.load(Ordering::Relaxed),
             archives: self
                 .names
                 .iter()
@@ -148,6 +163,12 @@ pub struct ServeStats {
     pub inflight: u64,
     /// Peak concurrent admitted requests over the server's lifetime.
     pub inflight_high_water: u64,
+    /// Admission acquires that blocked at least once before admission.
+    pub retries: u64,
+    /// Shards recovered by the salvage fallback at archive-open time.
+    pub salvaged_shards: u64,
+    /// Connections closed by a graceful drain after finishing a request.
+    pub drained_connections: u64,
     /// `(archive name, shards fetched)` per served archive.
     pub archives: Vec<(String, u64)>,
 }
@@ -176,6 +197,12 @@ impl ServeStats {
             "inflight: {} (high water {})\n",
             self.inflight, self.inflight_high_water
         ));
+        s.push_str(&format!("retries: {}\n", self.retries));
+        s.push_str(&format!("salvaged shards: {}\n", self.salvaged_shards));
+        s.push_str(&format!(
+            "drained connections: {}\n",
+            self.drained_connections
+        ));
         for (name, touches) in &self.archives {
             s.push_str(&format!("archive {name}: {touches} shard touches\n"));
         }
@@ -196,6 +223,9 @@ mod tests {
         m.bytes_served.fetch_add(1024, Ordering::Relaxed);
         m.region_requests.fetch_add(2, Ordering::Relaxed);
         m.shards_pruned.fetch_add(14, Ordering::Relaxed);
+        m.retries.fetch_add(4, Ordering::Relaxed);
+        m.salvaged_shards.fetch_add(6, Ordering::Relaxed);
+        m.drained_connections.fetch_add(2, Ordering::Relaxed);
         m.touch_shards(0, 4);
         m.touch_shards(1, 2);
         m.touch_shards(9, 7); // out of range: ignored
@@ -221,6 +251,9 @@ mod tests {
         assert_eq!(s.cache_evictions, 2);
         assert_eq!(s.inflight, 2);
         assert_eq!(s.inflight_high_water, 3);
+        assert_eq!(s.retries, 4);
+        assert_eq!(s.salvaged_shards, 6);
+        assert_eq!(s.drained_connections, 2);
         assert_eq!(
             s.archives,
             vec![("a.nblc".to_string(), 4), ("b.nblc".to_string(), 2)]
@@ -233,6 +266,9 @@ mod tests {
             cache_hits: 12,
             region_requests: 3,
             shards_pruned: 21,
+            retries: 5,
+            salvaged_shards: 7,
+            drained_connections: 1,
             archives: vec![("x.nblc".into(), 9)],
             ..Default::default()
         };
@@ -240,6 +276,9 @@ mod tests {
         assert!(text.contains("cache hits: 12\n"));
         assert!(text.contains("region requests: 3\n"));
         assert!(text.contains("shards pruned: 21\n"));
+        assert!(text.contains("retries: 5\n"));
+        assert!(text.contains("salvaged shards: 7\n"));
+        assert!(text.contains("drained connections: 1\n"));
         assert!(text.contains("archive x.nblc: 9 shard touches\n"));
     }
 }

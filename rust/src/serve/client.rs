@@ -7,7 +7,9 @@ use crate::metrics::ServeStats;
 use crate::serve::protocol::{
     read_frame_or_eof, write_frame, BusyInfo, RangeData, Request, Response, MAX_RESPONSE_FRAME,
 };
+use crate::util::rng::Pcg64;
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 /// What a range request came back with: data, or a typed shed notice.
 /// `Busy` is an `Ok` outcome — the server is healthy, just loaded —
@@ -49,6 +51,31 @@ impl ServeClient {
             Response::Busy(b) => Ok(GetReply::Busy(b)),
             other => Err(unexpected(other)),
         }
+    }
+
+    /// Like [`ServeClient::get`], but waits out `Busy` sheds: up to
+    /// `max_retries` re-requests with jittered exponential backoff
+    /// (base 10 ms, doubling, ×[0.5, 1.5) jitter so a herd of shed
+    /// clients does not re-arrive in lockstep). Data and hard errors
+    /// return immediately; if every attempt is shed, the last `Busy`
+    /// comes back so the caller still sees the observed load.
+    pub fn get_with_retry(
+        &mut self,
+        archive: &str,
+        range: Option<(u64, u64)>,
+        max_retries: usize,
+    ) -> Result<GetReply> {
+        let mut rng = Pcg64::seeded(0x6e62_6c63_7265_7472 ^ max_retries as u64);
+        for attempt in 0..=max_retries {
+            let reply = self.get(archive, range)?;
+            if !matches!(reply, GetReply::Busy(_)) || attempt == max_retries {
+                return Ok(reply);
+            }
+            let base_ms = 10u64 << attempt.min(6);
+            let sleep_ms = (base_ms as f64 * rng.range_f64(0.5, 1.5)) as u64;
+            std::thread::sleep(Duration::from_millis(sleep_ms.clamp(1, 1_000)));
+        }
+        unreachable!("the loop returns on its final attempt");
     }
 
     /// Request the particles inside the axis-aligned box

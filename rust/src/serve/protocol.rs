@@ -383,6 +383,9 @@ fn encode_stats(s: &ServeStats) -> Vec<u8> {
         s.cache_coalesced,
         s.region_requests,
         s.shards_pruned,
+        s.retries,
+        s.salvaged_shards,
+        s.drained_connections,
     ] {
         put_uvarint(&mut p, v);
     }
@@ -414,6 +417,9 @@ fn decode_stats(payload: &[u8]) -> Result<ServeStats> {
         cache_coalesced: next()?,
         region_requests: next()?,
         shards_pruned: next()?,
+        retries: next()?,
+        salvaged_shards: next()?,
+        drained_connections: next()?,
         archives: Vec::new(),
     };
     let n_archives = get_uvarint(payload, &mut pos)?;
@@ -566,6 +572,9 @@ mod tests {
             cache_coalesced: 2,
             region_requests: 5,
             shards_pruned: 40,
+            retries: 3,
+            salvaged_shards: 12,
+            drained_connections: 1,
             archives: vec![("a.nblc".into(), 3), ("b.nblc".into(), 0)],
             ..Default::default()
         }));

@@ -1,0 +1,389 @@
+//! Deterministic I/O fault injection for crash-consistency testing.
+//!
+//! [`FailpointWriter`] / [`FailpointReader`] wrap any `Write` / `Read`
+//! and inject one fault at a chosen operation index: an `ENOSPC`-style
+//! "no space" error, a generic `EIO`, or a *short* write/read (a torn
+//! prefix lands, then the device dies). After the fault trips, every
+//! subsequent operation fails too — a crashed disk does not come back
+//! mid-run. The prefix length of a short operation is drawn from a
+//! [`Pcg64`] seeded from the plan, so sweeps are exactly replayable.
+//!
+//! Production archive writers thread an (unarmed) failpoint through
+//! their sink stack permanently; [`FaultPlan::from_env`] arms it from
+//! `NBLC_FAILPOINT` (`write:<N>`, optionally `write:<N>:enospc|eio|short`),
+//! which is how the CI crash-recovery smoke kills a pipeline mid-write
+//! without test-only code paths.
+
+use crate::util::rng::Pcg64;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+
+/// Which fault fires when the failpoint trips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// "No space left on device": the operation fails outright.
+    Enospc,
+    /// Generic I/O error: the operation fails outright.
+    Eio,
+    /// Torn operation: a seeded-random strict prefix succeeds, then the
+    /// device dies (the *next* operation errors).
+    Short,
+}
+
+impl FaultKind {
+    fn io_error(self, op: u64) -> io::Error {
+        let what = match self {
+            FaultKind::Enospc => "ENOSPC (no space left on device)",
+            FaultKind::Eio => "EIO",
+            FaultKind::Short => "EIO after short operation",
+        };
+        io::Error::other(format!("failpoint: injected {what} at op {op}"))
+    }
+}
+
+/// A deterministic fault: trip at the `at`-th operation (0-based count
+/// of `write`/`read` calls on the wrapped stream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// 0-based operation index at which the fault fires.
+    pub at: u64,
+    /// What happens when it fires.
+    pub kind: FaultKind,
+    /// Seed for the short-operation prefix length.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Fault of `kind` at operation `at`, with the default seed.
+    pub fn new(at: u64, kind: FaultKind) -> FaultPlan {
+        FaultPlan {
+            at,
+            kind,
+            seed: 0x5eed_fa11,
+        }
+    }
+
+    /// Parse the `NBLC_FAILPOINT` environment variable:
+    /// `write:<N>[:enospc|eio|short]`. Unset means no fault (`None`);
+    /// a malformed value is a typed error so a mistyped CI step cannot
+    /// silently run fault-free.
+    pub fn from_env() -> crate::error::Result<Option<FaultPlan>> {
+        match std::env::var("NBLC_FAILPOINT") {
+            Ok(v) => Self::parse(&v).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Parse a failpoint spec string (see [`Self::from_env`]).
+    pub fn parse(spec: &str) -> crate::error::Result<FaultPlan> {
+        let bad = || {
+            crate::error::Error::invalid(format!(
+                "failpoint spec '{spec}' (want write:<N>[:enospc|eio|short])"
+            ))
+        };
+        let mut parts = spec.split(':');
+        if parts.next() != Some("write") {
+            return Err(bad());
+        }
+        let at: u64 = parts.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+        let kind = match parts.next() {
+            None | Some("enospc") => FaultKind::Enospc,
+            Some("eio") => FaultKind::Eio,
+            Some("short") => FaultKind::Short,
+            Some(_) => return Err(bad()),
+        };
+        if parts.next().is_some() {
+            return Err(bad());
+        }
+        Ok(FaultPlan::new(at, kind))
+    }
+}
+
+/// `Write` shim injecting one [`FaultPlan`] fault, then failing every
+/// later operation. With `plan = None` it is a transparent passthrough,
+/// which is how production sinks keep the failpoint permanently in
+/// their stack without a test-only code path.
+#[derive(Debug)]
+pub struct FailpointWriter<W: Write> {
+    inner: W,
+    plan: Option<FaultPlan>,
+    writes: u64,
+    tripped: bool,
+    rng: Pcg64,
+}
+
+impl<W: Write> FailpointWriter<W> {
+    /// Wrap `inner`; `plan = None` passes everything through.
+    pub fn new(inner: W, plan: Option<FaultPlan>) -> FailpointWriter<W> {
+        let seed = plan.map(|p| p.seed ^ p.at).unwrap_or(0);
+        FailpointWriter {
+            inner,
+            plan,
+            writes: 0,
+            tripped: false,
+            rng: Pcg64::seeded(seed),
+        }
+    }
+
+    /// Number of `write` calls seen so far (armed or not) — sweeps use
+    /// a passthrough run to learn how many crash points a workload has.
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Whether the fault has fired.
+    pub fn tripped(&self) -> bool {
+        self.tripped
+    }
+
+    /// The wrapped writer.
+    pub fn get_ref(&self) -> &W {
+        &self.inner
+    }
+
+    /// The wrapped writer, mutably (durability hooks on the inner sink
+    /// — fsync, rename — go through here).
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.inner
+    }
+}
+
+impl<W: Write> Write for FailpointWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.tripped {
+            return Err(self
+                .plan
+                .expect("tripped implies a plan")
+                .kind
+                .io_error(self.writes));
+        }
+        let op = self.writes;
+        self.writes += 1;
+        match self.plan {
+            Some(p) if op == p.at => {
+                self.tripped = true;
+                match p.kind {
+                    FaultKind::Enospc | FaultKind::Eio => Err(p.kind.io_error(op)),
+                    FaultKind::Short => {
+                        // A strict prefix lands on disk; `write_all`
+                        // retries the remainder and hits the dead
+                        // device on the next call.
+                        let k = if buf.is_empty() {
+                            0
+                        } else {
+                            self.rng.below_usize(buf.len())
+                        };
+                        if k == 0 {
+                            return Err(p.kind.io_error(op));
+                        }
+                        self.inner.write_all(&buf[..k])?;
+                        Ok(k)
+                    }
+                }
+            }
+            _ => self.inner.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.tripped {
+            return Err(self
+                .plan
+                .expect("tripped implies a plan")
+                .kind
+                .io_error(self.writes));
+        }
+        self.inner.flush()
+    }
+}
+
+impl<W: Write + Seek> Seek for FailpointWriter<W> {
+    fn seek(&mut self, pos: SeekFrom) -> io::Result<u64> {
+        if self.tripped {
+            return Err(self
+                .plan
+                .expect("tripped implies a plan")
+                .kind
+                .io_error(self.writes));
+        }
+        self.inner.seek(pos)
+    }
+}
+
+/// `Read` shim mirroring [`FailpointWriter`]: one fault at the `at`-th
+/// `read` call (error or torn short read), then a dead device.
+#[derive(Debug)]
+pub struct FailpointReader<R: Read> {
+    inner: R,
+    plan: Option<FaultPlan>,
+    reads: u64,
+    tripped: bool,
+    rng: Pcg64,
+}
+
+impl<R: Read> FailpointReader<R> {
+    /// Wrap `inner`; `plan = None` passes everything through.
+    pub fn new(inner: R, plan: Option<FaultPlan>) -> FailpointReader<R> {
+        let seed = plan.map(|p| p.seed ^ p.at.rotate_left(17)).unwrap_or(0);
+        FailpointReader {
+            inner,
+            plan,
+            reads: 0,
+            tripped: false,
+            rng: Pcg64::seeded(seed),
+        }
+    }
+
+    /// Number of `read` calls seen so far.
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    /// Whether the fault has fired.
+    pub fn tripped(&self) -> bool {
+        self.tripped
+    }
+}
+
+impl<R: Read> Read for FailpointReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.tripped {
+            return Err(self
+                .plan
+                .expect("tripped implies a plan")
+                .kind
+                .io_error(self.reads));
+        }
+        let op = self.reads;
+        self.reads += 1;
+        match self.plan {
+            Some(p) if op == p.at => {
+                self.tripped = true;
+                match p.kind {
+                    FaultKind::Enospc | FaultKind::Eio => Err(p.kind.io_error(op)),
+                    FaultKind::Short => {
+                        let k = if buf.is_empty() {
+                            0
+                        } else {
+                            self.rng.below_usize(buf.len())
+                        };
+                        if k == 0 {
+                            return Err(p.kind.io_error(op));
+                        }
+                        self.inner.read(&mut buf[..k])
+                    }
+                }
+            }
+            _ => self.inner.read(buf),
+        }
+    }
+}
+
+impl<R: Read + Seek> Seek for FailpointReader<R> {
+    fn seek(&mut self, pos: SeekFrom) -> io::Result<u64> {
+        if self.tripped {
+            return Err(self
+                .plan
+                .expect("tripped implies a plan")
+                .kind
+                .io_error(self.reads));
+        }
+        self.inner.seek(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_transparent() {
+        let mut w = FailpointWriter::new(Vec::new(), None);
+        w.write_all(b"hello").unwrap();
+        w.write_all(b" world").unwrap();
+        w.flush().unwrap();
+        assert_eq!(w.writes(), 2);
+        assert!(!w.tripped());
+        assert_eq!(w.get_ref(), b"hello world");
+    }
+
+    #[test]
+    fn fails_exactly_at_the_nth_write_and_stays_dead() {
+        for kind in [FaultKind::Enospc, FaultKind::Eio] {
+            let mut w = FailpointWriter::new(Vec::new(), Some(FaultPlan::new(2, kind)));
+            w.write_all(b"a").unwrap();
+            w.write_all(b"b").unwrap();
+            let err = w.write_all(b"c").unwrap_err();
+            assert!(err.to_string().contains("failpoint"), "{err}");
+            // The device never recovers.
+            assert!(w.write_all(b"d").is_err());
+            assert!(w.flush().is_err());
+            assert_eq!(w.get_ref(), b"ab");
+        }
+    }
+
+    #[test]
+    fn short_write_lands_a_strict_prefix_then_dies() {
+        let payload = vec![7u8; 4096];
+        let mut w = FailpointWriter::new(Vec::new(), Some(FaultPlan::new(1, FaultKind::Short)));
+        w.write_all(b"head").unwrap();
+        let err = w.write_all(&payload).unwrap_err();
+        assert!(err.to_string().contains("failpoint"), "{err}");
+        let got = w.get_ref();
+        assert!(got.len() >= 4, "prefix must keep the earlier write");
+        assert!(
+            got.len() < 4 + payload.len(),
+            "a short write must not land the full buffer"
+        );
+        assert!(got[4..].iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn short_writes_are_seed_deterministic() {
+        let run = |seed: u64| {
+            let plan = FaultPlan {
+                at: 0,
+                kind: FaultKind::Short,
+                seed,
+            };
+            let mut w = FailpointWriter::new(Vec::new(), Some(plan));
+            let _ = w.write_all(&[1u8; 1000]);
+            w.get_ref().len()
+        };
+        assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn reader_faults_mirror_writer_faults() {
+        let data = vec![9u8; 1000];
+        let mut r = FailpointReader::new(&data[..], Some(FaultPlan::new(1, FaultKind::Eio)));
+        let mut buf = [0u8; 100];
+        r.read_exact(&mut buf).unwrap();
+        assert!(r.read_exact(&mut buf).is_err());
+        assert!(r.read_exact(&mut buf).is_err(), "stays dead");
+
+        let mut r = FailpointReader::new(&data[..], Some(FaultPlan::new(0, FaultKind::Short)));
+        let mut buf = [0u8; 1000];
+        let k = r.read(&mut buf).unwrap_or(0);
+        assert!(k < 1000, "short read returns a strict prefix");
+        assert!(r.read(&mut buf).is_err());
+    }
+
+    #[test]
+    fn env_spec_parses_and_rejects_garbage() {
+        assert_eq!(
+            FaultPlan::parse("write:17").unwrap(),
+            FaultPlan::new(17, FaultKind::Enospc)
+        );
+        assert_eq!(
+            FaultPlan::parse("write:3:eio").unwrap(),
+            FaultPlan::new(3, FaultKind::Eio)
+        );
+        assert_eq!(
+            FaultPlan::parse("write:0:short").unwrap(),
+            FaultPlan::new(0, FaultKind::Short)
+        );
+        for bad in ["", "write", "write:", "write:x", "read:1", "write:1:boom", "write:1:eio:2"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -18,6 +18,10 @@
 //!     });
 //! ```
 
+pub mod failpoint;
+
+pub use failpoint::{FailpointReader, FailpointWriter, FaultKind, FaultPlan};
+
 use crate::util::rng::Pcg64;
 use std::ops::Range;
 

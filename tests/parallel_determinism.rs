@@ -156,6 +156,8 @@ fn pipeline_archives_decode_identically_at_any_concurrency() {
                         spec: spec.clone(),
                     },
                     spatial: None,
+                    max_retries: 0,
+                    sink_fault: None,
                 },
             )
             .unwrap_or_else(|e| panic!("{name}@{workers}w/{threads}t: pipeline failed: {e}"));
@@ -241,6 +243,8 @@ fn spatial_pipeline_archives_are_concurrency_invariant_and_cost_archives_spatial
                     seg: 2_048,
                     keys: Arc::clone(&plan.keys),
                 }),
+                max_retries: 0,
+                sink_fault: None,
             },
         )
         .unwrap_or_else(|e| panic!("spatial@{workers}w/{threads}t: pipeline failed: {e}"));
@@ -294,6 +298,8 @@ fn spatial_pipeline_archives_are_concurrency_invariant_and_cost_archives_spatial
                 spec: spec.clone(),
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();

@@ -58,6 +58,8 @@ fn full_lineup_roundtrips_through_sharded_pipeline_archive() {
                         spec: spec.clone(),
                     },
                     spatial: None,
+                    max_retries: 0,
+                    sink_fault: None,
                 },
             )
             .unwrap_or_else(|e| panic!("{tag}: pipeline failed: {e}"));

@@ -51,6 +51,8 @@ fn config_to_pipeline_roundtrip() {
                 procs: settings.sim_procs,
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -95,6 +97,8 @@ fn config_method_spec_drives_pipeline() {
             factory: registry::factory(spec).unwrap(),
             sink: Sink::Null,
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -176,6 +180,8 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
             factory: factory.clone(),
             sink: Sink::Null,
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -198,6 +204,8 @@ fn rebalanced_layout_round_trips_through_pipeline_and_archive() {
                 spec: registry::canonical("sz_lv").unwrap(),
             },
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -252,6 +260,8 @@ fn scheduler_routing_via_pipeline() {
             factory: factory_for(routed),
             sink: Sink::Null,
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
@@ -267,6 +277,8 @@ fn scheduler_routing_via_pipeline() {
             factory: factory_for(Mode::BestCompression),
             sink: Sink::Null,
             spatial: None,
+            max_retries: 0,
+            sink_fault: None,
         },
     )
     .unwrap();
