@@ -6,24 +6,30 @@
 //! snapshot-level parallel field-plane engine (1 thread vs all
 //! cores; byte-identity across budgets and backends is enforced by
 //! `tests/parallel_determinism.rs` / `tests/backend_equivalence.rs`,
-//! not re-checked here). Uses min-of-N
+//! not re-checked here), plus the temporal stream paths (keyframe
+//! compress, delta residual compress, mid-chain `decode_timestep`
+//! seek). Uses min-of-N
 //! timing (robust on a noisy 1-core box). Besides the usual CSV, the
 //! engine rows land in a machine-readable `BENCH_hotpath.json` (codec,
 //! threads, MB/s) so later changes have a perf trajectory to compare
 //! against.
 
-use nblc::bench::{results_dir, Table, EB_REL};
+use nblc::bench::{results_dir, Table, BENCH_SEED, EB_REL};
 use nblc::codec::{avle, huffman, lz77};
 use nblc::compressors::registry;
 use nblc::compressors::sz::Sz;
-use nblc::coordinator::pipeline::{run_insitu, InsituConfig, Sink, SpatialInsitu};
+use nblc::coordinator::pipeline::{
+    run_insitu, run_insitu_stream, InsituConfig, Sink, SpatialInsitu, StreamConfig,
+};
 use nblc::coordinator::spatial::plan_spatial;
 use nblc::data::archive::{decode_region, decode_shards, Region, ShardReader};
+use nblc::data::gen_cosmo::{self, CosmoConfig};
 use nblc::data::DatasetKind;
 use nblc::exec::ExecCtx;
 use nblc::kernels::Kernels;
 use nblc::model::quant::{LatticeQuantizer, Predictor};
-use nblc::quality::{Quality, SnapshotStats};
+use nblc::quality::{snapshot_field_stats, Quality, SnapshotStats};
+use nblc::temporal::{delta_bounds, predict, residual, residual_quality, TemporalConfig};
 use nblc::rindex::morton::{interleave3, interleave_fields_with, quantize_uniform_with};
 use nblc::rindex::sort::{segmented_sort_perm_with, sort_perm};
 use nblc::snapshot::FieldCompressor;
@@ -693,6 +699,106 @@ fn main() {
     serve.write_csv("hotpath_serve").unwrap();
     serve_handle.stop();
     std::fs::remove_file(&arch_path).ok();
+
+    // Temporal stream hot paths: keyframe compress (a plain bounded
+    // snapshot compress), delta-step compress (predict from *decoded*
+    // state + residual + margin-bound compress — the per-step work of
+    // `run_insitu_stream`), and the mid-chain `decode_timestep` seek
+    // (keyframe decode + replayed delta steps). Rates are MB/s of one
+    // timestep's raw planes; the last column pins why the delta path
+    // exists — residuals of a velocity-coherent stream compress far
+    // smaller than keyframes.
+    let n_t = (n / 4).clamp(10_000, 250_000);
+    let t_steps = 8usize;
+    let t_interval = 4usize;
+    let dt = 0.05;
+    let tseries = gen_cosmo::time_series(
+        &CosmoConfig {
+            n_particles: n_t,
+            seed: BENCH_SEED,
+            ..Default::default()
+        },
+        t_steps,
+        dt,
+    );
+    let slab_mb = (n_t * 6 * 4) as f64 / 1e6;
+    let kf_q = Quality::rel(EB_REL);
+    let t_comp = registry::build_str("sz_lv").unwrap();
+    let t_kf = bench_min_time(0.5, 3, || {
+        t_comp.compress_with(&ctx1, &tseries[4], &kf_q).unwrap()
+    });
+    let kf_bundle = t_comp.compress_with(&ctx1, &tseries[4], &kf_q).unwrap();
+    let prev_dec = t_comp.decompress_with(&ctx1, &kf_bundle).unwrap();
+    let t5_stats = snapshot_field_stats(&tseries[5]);
+    let step_bounds = delta_bounds(&kf_q.resolve_fields(&t5_stats), &t5_stats);
+    let res_q = residual_quality(&step_bounds);
+    let delta_work = || {
+        let pred = predict(&prev_dec, dt);
+        let res = residual(&tseries[5], &pred, &step_bounds).unwrap();
+        t_comp.compress_with(&ctx1, &res, &res_q).unwrap()
+    };
+    let t_delta = bench_min_time(0.5, 3, || delta_work());
+    let delta_bundle = delta_work();
+    let dvk = kf_bundle.compressed_bytes() as f64 / delta_bundle.compressed_bytes() as f64;
+    // Seek: one stream archive written outside the timing, then a
+    // mid-chain decode (t = 6 replays keyframe 4 plus two deltas).
+    let stream_path =
+        std::env::temp_dir().join(format!("nblc_hotpath_stream_{}.nblc", std::process::id()));
+    let stream_report = run_insitu_stream(
+        &tseries,
+        &StreamConfig {
+            shards: 4,
+            threads: 1,
+            quality: kf_q.clone(),
+            factory: registry::factory(&arch_spec).unwrap(),
+            path: stream_path.clone(),
+            spec: arch_spec.clone(),
+            temporal: TemporalConfig::new(t_interval).unwrap(),
+            dt,
+            max_retries: 0,
+        },
+    )
+    .unwrap();
+    let stream_reader = ShardReader::open(&stream_path).unwrap();
+    let seek_probe = stream_reader.decode_timestep(6, &ctx1).unwrap();
+    assert_eq!(seek_probe.keyframe, 4, "mid-chain seek must replay from keyframe 4");
+    let t_seek = bench_min_time(0.5, 3, || {
+        stream_reader.decode_timestep(6, &ctx1).unwrap();
+    });
+    let mut temporal_t = Table::new(
+        &format!("Temporal stream (n={n_t}/step, K={t_interval}, {t_steps} steps, sz_lv)"),
+        &["Stage", "Threads", "MB/s", "Bytes vs keyframe"],
+    );
+    temporal_t.row(vec![
+        "keyframe compress".into(),
+        "1".into(),
+        format!("{:.1}", slab_mb / t_kf),
+        "1.00x".into(),
+    ]);
+    temporal_t.row(vec![
+        "delta compress (predict+residual)".into(),
+        "1".into(),
+        format!("{:.1}", slab_mb / t_delta),
+        format!("{dvk:.2}x smaller"),
+    ]);
+    temporal_t.row(vec![
+        "mid-chain seek (t=6, depth 2)".into(),
+        "1".into(),
+        format!("{:.1}", slab_mb / t_seek),
+        "-".into(),
+    ]);
+    temporal_t.print();
+    temporal_t.write_csv("hotpath_temporal").unwrap();
+    json_rows.push(("temporal:keyframe".into(), 1, slab_mb / t_kf));
+    json_rows.push(("temporal:delta".into(), 1, slab_mb / t_delta));
+    json_rows.push(("temporal:seek".into(), 1, slab_mb / t_seek));
+    if let Some(r) = stream_report.delta_vs_keyframe() {
+        println!("temporal: archive delta steps {r:.2}x smaller than keyframes");
+        if r < 1.5 {
+            eprintln!("WARNING: delta steps only {r:.2}x smaller than keyframes (target >= 1.5x)");
+        }
+    }
+    std::fs::remove_file(&stream_path).ok();
 
     let json_path = results_dir().join("BENCH_hotpath.json");
     let mut j = String::from("[\n");

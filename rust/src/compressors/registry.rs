@@ -142,9 +142,8 @@ pub enum ParamKind {
     Bool,
     /// One of a fixed set of identifiers.
     Choice(&'static [&'static str]),
-    /// A typed quality target: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`,
-    /// `lossless`, or a bare float (deprecated `rel:` spelling) — see
-    /// [`crate::quality::ErrorBound::parse`].
+    /// A typed quality target: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`, or
+    /// `lossless` — see [`crate::quality::ErrorBound::parse`].
     ErrorBound,
 }
 

@@ -17,4 +17,4 @@ pub mod parse;
 pub mod schema;
 
 pub use parse::{ConfigDoc, Value};
-pub use schema::{PipelineSettings, ServeSettings};
+pub use schema::{PipelineSettings, ServeSettings, TemporalSettings};

@@ -241,6 +241,76 @@ impl PipelineSettings {
     }
 }
 
+/// Validated settings for the temporal stream mode of `nblc pipeline`
+/// (section `[temporal]`). CLI flags (`--keyframe-every`, `--steps`,
+/// `--dt`) override whatever the config file supplies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TemporalSettings {
+    /// Keyframe cadence: timestep `t` is a keyframe iff
+    /// `t % keyframe_interval == 0` (1 = every step is a keyframe).
+    pub keyframe_interval: usize,
+    /// Timesteps the stream pipeline generates and compresses.
+    pub steps: usize,
+    /// Integration timestep fed to the leapfrog series generator and
+    /// recorded per chain step for the decoder's `x + v·dt` predictor.
+    pub dt: f64,
+}
+
+impl Default for TemporalSettings {
+    fn default() -> Self {
+        TemporalSettings {
+            keyframe_interval: 8,
+            steps: 16,
+            dt: 0.05,
+        }
+    }
+}
+
+impl TemporalSettings {
+    /// Read from a parsed document, applying defaults and validating.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<TemporalSettings> {
+        let mut s = TemporalSettings::default();
+        let sec = "temporal";
+        const KNOWN: [&str; 3] = ["keyframe_interval", "steps", "dt"];
+        for key in doc.keys(sec) {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!("unknown [temporal] key '{key}'")));
+            }
+        }
+        let get_usize = |key: &str, default: usize| -> Result<usize> {
+            match doc.get(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_int()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer"))),
+            }
+        };
+        s.keyframe_interval = get_usize("keyframe_interval", s.keyframe_interval)?;
+        s.steps = get_usize("steps", s.steps)?;
+        if let Some(v) = doc.get(sec, "dt") {
+            s.dt = v
+                .as_float()
+                .filter(|f| f.is_finite() && *f >= 0.0)
+                .ok_or_else(|| Error::Config("'dt' must be a finite float >= 0".into()))?;
+        }
+        if s.keyframe_interval == 0
+            || s.keyframe_interval > crate::data::archive::MAX_SHARDS
+        {
+            return Err(Error::Config(format!(
+                "'keyframe_interval' must be in 1..={}, got {}",
+                crate::data::archive::MAX_SHARDS,
+                s.keyframe_interval
+            )));
+        }
+        if s.steps == 0 {
+            return Err(Error::Config("'steps' must be >= 1".into()));
+        }
+        Ok(s)
+    }
+}
+
 /// Validated settings for `nblc serve` (section `[serve]`). CLI flags
 /// override whatever the config file supplies.
 #[derive(Clone, Debug, PartialEq)]
@@ -474,6 +544,52 @@ mod tests {
         ] {
             let doc = ConfigDoc::parse(bad).unwrap();
             assert!(PipelineSettings::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn temporal_defaults_without_section() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(
+            TemporalSettings::from_doc(&doc).unwrap(),
+            TemporalSettings::default()
+        );
+    }
+
+    #[test]
+    fn temporal_full_parse() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [temporal]
+            keyframe_interval = 4
+            steps = 32
+            dt = 0.01
+            "#,
+        )
+        .unwrap();
+        let s = TemporalSettings::from_doc(&doc).unwrap();
+        assert_eq!(s.keyframe_interval, 4);
+        assert_eq!(s.steps, 32);
+        assert_eq!(s.dt, 0.01);
+        // Integer dt widens like every float key.
+        let doc = ConfigDoc::parse("[temporal]\ndt = 1\n").unwrap();
+        assert_eq!(TemporalSettings::from_doc(&doc).unwrap().dt, 1.0);
+    }
+
+    #[test]
+    fn temporal_validation_errors() {
+        for bad in [
+            "[temporal]\nkeyframe_interval = 0\n",
+            "[temporal]\nkeyframe_interval = -3\n",
+            "[temporal]\nkeyframe_interval = 1048577\n", // MAX_SHARDS + 1
+            "[temporal]\nsteps = 0\n",
+            "[temporal]\nsteps = \"many\"\n",
+            "[temporal]\ndt = -0.5\n",
+            "[temporal]\ndt = \"fast\"\n",
+            "[temporal]\nmystery = 1\n",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(TemporalSettings::from_doc(&doc).is_err(), "{bad}");
         }
     }
 

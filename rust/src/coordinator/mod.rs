@@ -12,7 +12,9 @@
 //! * [`backpressure`] — bounded queues with stall accounting (the
 //!   in-situ memory constraint: one snapshot in flight);
 //! * [`pipeline`] — staged source → compress-workers → sink pipeline
-//!   over std threads + bounded channels;
+//!   over std threads + bounded channels, plus the temporal stream
+//!   mode ([`pipeline::run_insitu_stream`]): one keyframe+delta round
+//!   per timestep through a single chain-armed archive writer;
 //! * [`rank`] — per-rank compression work unit;
 //! * [`scheduler`] — per-dataset compressor routing (the paper's §V-C
 //!   rule: orderly fields must not be R-index sorted);
@@ -33,4 +35,5 @@ pub mod spatial;
 
 pub use iomodel::GpfsModel;
 pub use pipeline::{InsituConfig, InsituReport, SpatialInsitu, run_insitu};
+pub use pipeline::{run_insitu_stream, StreamConfig, StreamReport, StreamStepReport};
 pub use scheduler::choose_compressor;

@@ -521,6 +521,278 @@ fn stat_stalls(q: &Arc<QueueStats>) -> u64 {
     q.send_stalls.load(Ordering::Relaxed)
 }
 
+// ---------------------------------------------------------------------------
+// Stream mode: temporal keyframe+delta rounds
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`run_insitu_stream`] (`nblc pipeline --stream`).
+pub struct StreamConfig {
+    /// Shards each timestep is cut into (evenly).
+    pub shards: usize,
+    /// Thread budget per timestep round (`0` = auto); shards fan out
+    /// across it and each shard's field-plane engine gets the floor of
+    /// the remainder. Output bytes are identical at any budget.
+    pub threads: usize,
+    /// Quality target. Keyframes compress directly under it; delta
+    /// steps derive per-field residual bounds from it (see
+    /// [`crate::temporal::chain`]).
+    pub quality: Quality,
+    /// Compressor factory. Stream mode rejects reordering codecs —
+    /// delta residuals are particle-index-aligned.
+    pub factory: CompressorFactory,
+    /// Output archive path (stream mode always writes an archive; the
+    /// chain lives in its footer).
+    pub path: std::path::PathBuf,
+    /// Canonical codec spec recorded in the archive header.
+    pub spec: String,
+    /// Keyframe cadence.
+    pub temporal: crate::temporal::TemporalConfig,
+    /// Simulation time between consecutive snapshots (what the
+    /// predictor extrapolates by; recorded per step in the footer).
+    pub dt: f64,
+    /// Bounded per-shard retry budget, same semantics as
+    /// [`InsituConfig::max_retries`] — except that exhausting it is a
+    /// typed error, not a degraded run: a temporal chain cannot proceed
+    /// past a hole (every later delta in the group needs this step
+    /// decoded).
+    pub max_retries: usize,
+}
+
+/// One timestep's outcome in a [`StreamReport`].
+#[derive(Clone, Debug)]
+pub struct StreamStepReport {
+    /// Whether the step was stored as a keyframe.
+    pub keyframe: bool,
+    /// Compressed payload bytes of the step.
+    pub bytes_out: u64,
+    /// Compression ratio of the step (uncompressed / compressed).
+    pub ratio: f64,
+    /// Compression seconds summed over the step's shards.
+    pub secs: f64,
+}
+
+/// Outcome of [`run_insitu_stream`].
+#[derive(Debug)]
+pub struct StreamReport {
+    /// Total uncompressed bytes (timesteps × particles × 24).
+    pub bytes_in: u64,
+    /// Total compressed bytes.
+    pub bytes_out: u64,
+    /// Overall ratio.
+    pub ratio: f64,
+    /// Wall-clock of the whole stream run (seconds).
+    pub wall_secs: f64,
+    /// Per-timestep outcomes, in chain order.
+    pub steps: Vec<StreamStepReport>,
+    /// The archive footer, temporal block included.
+    pub shard_index: ShardIndex,
+    /// Task retries attempted across the run (successful or not).
+    pub retries: u64,
+}
+
+impl StreamReport {
+    /// How many times smaller the average delta step is than the
+    /// average keyframe (`None` when the chain has no delta steps).
+    /// The headline number of the delta path: ≥ 1.5 on velocity-coherent
+    /// streams.
+    pub fn delta_vs_keyframe(&self) -> Option<f64> {
+        let mean = |key: bool| {
+            let v: Vec<u64> = self
+                .steps
+                .iter()
+                .filter(|s| s.keyframe == key)
+                .map(|s| s.bytes_out)
+                .collect();
+            if v.is_empty() {
+                None
+            } else {
+                Some(v.iter().sum::<u64>() as f64 / v.len() as f64)
+            }
+        };
+        match (mean(true), mean(false)) {
+            (Some(k), Some(d)) if d > 0.0 => Some(k / d),
+            _ => None,
+        }
+    }
+}
+
+/// Run the stream pipeline over a time series: one keyframe+delta round
+/// per timestep through a single temporal-armed [`ShardWriter`].
+///
+/// Timestep `t` occupies the global particle slab
+/// `[t·n_p, (t+1)·n_p)`, so the archive stays a valid v3 partition and
+/// every pre-temporal read path works on the stored representation.
+/// Keyframes store the snapshot itself; delta steps store residuals
+/// against a prediction from the previous *decoded* timestep (each
+/// round decompresses its own output to carry that state forward —
+/// the in-situ analogue of closed-loop prediction), so quantization
+/// error never accumulates across the chain.
+///
+/// Retry semantics: a failed shard compress — typed error or panic —
+/// retries on a fresh compressor up to `max_retries` times; exhaustion
+/// is a typed error (the chain cannot tolerate holes).
+pub fn run_insitu_stream(series: &[Snapshot], cfg: &StreamConfig) -> Result<StreamReport> {
+    use crate::quality::snapshot_field_stats;
+    use crate::temporal::{delta_bounds, predict, reconstruct, residual, residual_quality};
+
+    let Some(first) = series.first() else {
+        return Err(Error::invalid("stream needs at least one timestep"));
+    };
+    let n_p = first.len();
+    if series.iter().any(|s| s.len() != n_p) {
+        return Err(Error::invalid(
+            "every timestep of a stream must hold the same particle count",
+        ));
+    }
+    if cfg.shards == 0 {
+        return Err(Error::invalid("need at least one shard"));
+    }
+    if (cfg.factory)().reorders() {
+        return Err(Error::invalid(
+            "stream mode requires an order-preserving codec: delta residuals \
+             are particle-index-aligned",
+        ));
+    }
+    let layout = split_even(n_p, cfg.shards);
+    let exec = ExecCtx::resolve(cfg.threads);
+    let inner = ExecCtx::with_threads((exec.threads() / layout.len()).max(1));
+    let retries = AtomicU64::new(0);
+    let wall = Timer::start();
+
+    let mut writer = ShardWriter::create_stream(&cfg.path, &cfg.spec, &cfg.quality)?;
+    writer.enable_temporal(cfg.temporal.keyframe_interval as u64)?;
+
+    let mut prev_dec: Option<Snapshot> = None;
+    let mut steps = Vec::with_capacity(series.len());
+    let mut bytes_out_total = 0u64;
+    for (t, snap) in series.iter().enumerate() {
+        let keyframe = cfg.temporal.is_keyframe(t) || prev_dec.is_none();
+        let stats = snapshot_field_stats(snap);
+        let resolved = cfg.quality.resolve_fields(&stats);
+        // The recorded per-step bounds are the *reconstruction*
+        // guarantee: the resolved quality for keyframes, and for delta
+        // steps the same bounds with too-tight fields degraded to
+        // exact/passthrough (see `temporal::chain::delta_bounds`).
+        let (payload, step_bounds, step_quality) = if keyframe {
+            (snap.clone(), resolved, cfg.quality.clone())
+        } else {
+            let bounds = delta_bounds(&resolved, &stats);
+            let pred = predict(prev_dec.as_ref().unwrap(), cfg.dt);
+            let res = residual(snap, &pred, &bounds)?;
+            let q = residual_quality(&bounds);
+            (res, bounds, q)
+        };
+        writer.begin_timestep(keyframe, cfg.dt, step_bounds)?;
+
+        // Compress (and immediately decompress — the decoded state the
+        // next round predicts from) every shard of the round in
+        // parallel. Each attempt builds a fresh compressor, so a
+        // panicked one is never retried with torn state.
+        let parts = exec.try_par(&layout, |sh| {
+            let sub = payload.slice(sh.start, sh.end);
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<(crate::snapshot::CompressedSnapshot, Snapshot, f64)> {
+                        let comp = (cfg.factory)();
+                        let timer = Timer::start();
+                        let bundle = comp.compress_with(&inner, &sub, &step_quality)?;
+                        let secs = timer.secs();
+                        let dec = comp.decompress_with(&inner, &bundle)?;
+                        Ok((bundle, dec, secs))
+                    },
+                ));
+                let error = match run {
+                    Ok(Ok(out)) => {
+                        if out.1.len() != sub.len() {
+                            return Err(Error::corrupt(format!(
+                                "timestep {t} shard {} decoded to {} particles, expected {}",
+                                sh.id,
+                                out.1.len(),
+                                sub.len()
+                            )));
+                        }
+                        break Ok(out);
+                    }
+                    Ok(Err(e)) => e.to_string(),
+                    Err(panic) => {
+                        let msg = panic
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        format!("panic: {msg}")
+                    }
+                };
+                if attempts <= cfg.max_retries {
+                    retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                break Err(Error::Pipeline(format!(
+                    "timestep {t} shard {} failed after {attempts} attempts: {error}",
+                    sh.id
+                )));
+            }
+        })?;
+
+        // Write the round's shards in logical order at global offsets.
+        let base = (t * n_p) as u64;
+        let mut step_bytes = 0u64;
+        let mut step_secs = 0f64;
+        let mut decoded = Vec::with_capacity(parts.len());
+        for (sh, (bundle, dec, secs)) in layout.iter().zip(parts) {
+            let cost = (secs * 1e9) as u64;
+            writer.write_shard(
+                (base + sh.start as u64) as usize,
+                (base + sh.end as u64) as usize,
+                &bundle,
+                cost,
+            )?;
+            step_bytes += bundle.compressed_bytes() as u64;
+            step_secs += secs;
+            decoded.push(dec);
+        }
+        let stored = if decoded.len() == 1 {
+            decoded.into_iter().next().unwrap()
+        } else {
+            Snapshot::concat(&decoded)?
+        };
+        prev_dec = Some(if keyframe {
+            stored
+        } else {
+            let pred = predict(prev_dec.as_ref().unwrap(), cfg.dt);
+            reconstruct(&pred, &stored, &step_bounds)?
+        });
+        bytes_out_total += step_bytes;
+        steps.push(StreamStepReport {
+            keyframe,
+            bytes_out: step_bytes,
+            ratio: if step_bytes > 0 {
+                snap.total_bytes() as f64 / step_bytes as f64
+            } else {
+                f64::INFINITY
+            },
+            secs: step_secs,
+        });
+    }
+    let shard_index = writer.finish()?;
+    let bytes_in = (series.len() * n_p * crate::snapshot::PARTICLE_BYTES) as u64;
+    Ok(StreamReport {
+        bytes_in,
+        bytes_out: bytes_out_total,
+        ratio: if bytes_out_total > 0 {
+            bytes_in as f64 / bytes_out_total as f64
+        } else {
+            f64::INFINITY
+        },
+        wall_secs: wall.secs(),
+        steps,
+        shard_index,
+        retries: retries.load(Ordering::Relaxed),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -60,6 +60,12 @@
 //!             then per shard in footer order:
 //!             mkey_lo 8 u64, mkey_hi 8 u64, bbox 6 × f32,
 //!             nseg v, nseg × 6 × f32 segment boxes
+//!   temporal (optional — stream-mode archives only):
+//!             marker 4 b"TCHN", interval v (keyframe every K steps),
+//!             n_steps v, then per timestep in chain order:
+//!             shard_lo v, shard_hi v (the step's half-open range of
+//!             shard-table indices), flags 1 (bit 0 = keyframe),
+//!             dt 8 f64, 6 × f64 resolved per-field absolute bounds
 //!   file_crc  4   CRC-32 of every byte before the footer marker
 //!   foot_crc  4   CRC-32 of the footer from its marker through file_crc
 //!   foot_len  8   u64 byte length of marker..=foot_crc
@@ -114,6 +120,11 @@ const FOOTER_MARKER: &[u8; 4] = b"FIDX";
 /// quality block can never alias it: its first byte is the length of a
 /// canonical quality string, which is never followed by `PIX`.
 const SPATIAL_MARKER: &[u8; 4] = b"SPIX";
+/// Marker preceding the optional temporal block inside the footer.
+/// Like `SPIX`, a quality block cannot alias it: canonical quality
+/// strings start with a bound kind (`abs`/`rel`/`pw_rel`/`lossless`)
+/// or a field name, never `CHN`.
+const TEMPORAL_MARKER: &[u8; 4] = b"TCHN";
 /// Widest Morton key a spatial block may declare per axis (3 × 21 = 63
 /// interleaved bits fit a u64 with the sign bit to spare).
 pub const MAX_MORTON_BITS: u64 = 21;
@@ -122,7 +133,9 @@ pub const MAX_MORTON_BITS: u64 = 21;
 const MAX_STR_LEN: usize = 4096;
 const MAX_FIELDS: usize = 4096;
 const MAX_PARTICLES: u64 = 1 << 40;
-const MAX_SHARDS: usize = 1 << 20;
+/// Most shards a footer may declare (also caps the temporal keyframe
+/// interval — a chain can't space keyframes wider than the shard table).
+pub const MAX_SHARDS: usize = 1 << 20;
 
 /// A decoded archive: the bundle plus its self-description.
 #[derive(Clone, Debug)]
@@ -521,6 +534,55 @@ pub struct ArchiveSpatial {
     pub shards: Vec<ShardSpatial>,
 }
 
+/// One timestep of the footer's temporal chain: which shard-table
+/// slice holds it, whether it is a keyframe (stored positions) or a
+/// delta (stored residuals against the velocity-extrapolated previous
+/// decoded step), the integration step `dt` the prediction used, and
+/// the per-field absolute bounds the step's residuals were resolved to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TemporalStep {
+    /// First shard-table index of this timestep (inclusive).
+    pub shard_lo: u64,
+    /// One past the last shard-table index of this timestep.
+    pub shard_hi: u64,
+    /// True when the step stores positions directly (chain restart);
+    /// false when it stores residuals against the predicted step.
+    pub keyframe: bool,
+    /// Integration timestep the velocity extrapolation used to predict
+    /// this step from the previous decoded one.
+    pub dt: f64,
+    /// Resolved absolute error bound per field at this timestep
+    /// (`0.0` = exact coding).
+    pub bounds: [f64; 6],
+}
+
+/// The footer's optional temporal block: the keyframe+delta chain of a
+/// stream-mode archive. Steps partition the shard table in order —
+/// step `t`'s particles are the global slab its shards cover — and
+/// step 0 is always a keyframe, so any timestep decodes by reading only
+/// the shards from its most recent keyframe onward. Present only in
+/// archives written by the stream pipeline; single-snapshot archives
+/// stay byte-identical to the pre-temporal format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveTemporal {
+    /// Keyframe interval the chain was planned with (a keyframe every
+    /// `interval` steps).
+    pub interval: u64,
+    /// Per-timestep chain entries in chain order.
+    pub steps: Vec<TemporalStep>,
+}
+
+impl ArchiveTemporal {
+    /// Chain index of the most recent keyframe at or before step `t`.
+    /// `None` when `t` is out of range.
+    pub fn keyframe_for(&self, t: usize) -> Option<usize> {
+        if t >= self.steps.len() {
+            return None;
+        }
+        (0..=t).rev().find(|&i| self.steps[i].keyframe)
+    }
+}
+
 /// The decoded v3 footer: snapshot-level metadata plus the shard table
 /// in logical (particle-range) order.
 #[derive(Clone, Debug)]
@@ -544,6 +606,9 @@ pub struct ShardIndex {
     /// The spatial block (`None` for cost-layout and pre-spatial
     /// archives — region reads then fall back to a full scan).
     pub spatial: Option<ArchiveSpatial>,
+    /// The temporal block (`None` for single-snapshot archives —
+    /// timestep reads then report a typed error).
+    pub temporal: Option<ArchiveTemporal>,
 }
 
 impl ShardIndex {
@@ -761,6 +826,9 @@ pub struct ShardWriter<S: ArchiveSink = FileSink> {
     /// arrive in completion order; [`Self::finish`] sorts them back
     /// into footer order alongside the shard table).
     spatial: Option<SpatialAcc>,
+    /// Armed by [`Self::enable_temporal`]: the keyframe interval plus
+    /// the chain steps accumulated via [`Self::begin_timestep`].
+    temporal: Option<TemporalAcc>,
 }
 
 /// Spatial-block accumulator inside [`ShardWriter`].
@@ -768,6 +836,15 @@ struct SpatialAcc {
     bits: u32,
     seg: u64,
     per_shard: Vec<((u64, u64), ShardSpatial)>,
+}
+
+/// Temporal-block accumulator inside [`ShardWriter`]: each step keeps
+/// the `(start, end)` keys of the shards written while it was open, so
+/// [`ShardWriter::finish`] can map them back to sorted shard-table
+/// indices and reject a chain whose steps interleave.
+struct TemporalAcc {
+    interval: u64,
+    steps: Vec<(TemporalStep, Vec<(u64, u64)>)>,
 }
 
 impl ShardWriter {
@@ -841,6 +918,7 @@ impl<S: ArchiveSink> ShardWriter<S> {
             bounds: [0.0; 6],
             bounds_known: true,
             spatial: None,
+            temporal: None,
         };
         sw.emit(&head)?;
         Ok(sw)
@@ -868,6 +946,66 @@ impl<S: ArchiveSink> ShardWriter<S> {
             seg,
             per_shard: Vec::new(),
         });
+        Ok(())
+    }
+
+    /// Arm the temporal block: the archive becomes a keyframe+delta
+    /// stream with a keyframe every `interval` timesteps. Every shard
+    /// must then be written inside a [`Self::begin_timestep`] scope,
+    /// and [`Self::finish`] appends the chain to the footer. Must be
+    /// called before any shard is written.
+    pub fn enable_temporal(&mut self, interval: u64) -> Result<()> {
+        if !self.entries.is_empty() {
+            return Err(Error::invalid(
+                "enable_temporal must be called before the first shard",
+            ));
+        }
+        if interval == 0 || interval > MAX_SHARDS as u64 {
+            return Err(Error::invalid(format!(
+                "temporal keyframe interval must be 1..={MAX_SHARDS}, got {interval}"
+            )));
+        }
+        self.temporal = Some(TemporalAcc {
+            interval,
+            steps: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Open the next timestep of the chain (requires
+    /// [`Self::enable_temporal`]): shards written until the next
+    /// `begin_timestep` (or [`Self::finish`]) belong to it. `bounds`
+    /// are the step's resolved per-field absolute bounds; `dt` the
+    /// integration step the prediction used. Step 0 must be a keyframe,
+    /// and every step must end up with at least one shard.
+    pub fn begin_timestep(&mut self, keyframe: bool, dt: f64, bounds: [f64; 6]) -> Result<()> {
+        let acc = self.temporal.as_mut().ok_or_else(|| {
+            Error::invalid("begin_timestep requires enable_temporal")
+        })?;
+        if acc.steps.is_empty() && !keyframe {
+            return Err(Error::invalid("the first timestep must be a keyframe"));
+        }
+        if let Some((_, shards)) = acc.steps.last() {
+            if shards.is_empty() {
+                return Err(Error::invalid("previous timestep holds no shards"));
+            }
+        }
+        if !dt.is_finite() || dt < 0.0 {
+            return Err(Error::invalid(format!("temporal dt invalid: {dt}")));
+        }
+        if bounds.iter().any(|b| !b.is_finite() || *b < 0.0) {
+            return Err(Error::invalid("temporal step bounds must be finite and >= 0"));
+        }
+        acc.steps.push((
+            TemporalStep {
+                shard_lo: 0,
+                shard_hi: 0,
+                keyframe,
+                dt,
+                bounds,
+            },
+            Vec::new(),
+        ));
         Ok(())
     }
 
@@ -976,6 +1114,13 @@ impl<S: ArchiveSink> ShardWriter<S> {
         if self.entries.len() >= MAX_SHARDS {
             return Err(Error::invalid("too many shards in archive"));
         }
+        if let Some(acc) = &self.temporal {
+            if acc.steps.is_empty() {
+                return Err(Error::invalid(
+                    "temporal archive: every shard must land inside a begin_timestep scope",
+                ));
+            }
+        }
         match bundle.field_bounds {
             // The per-file guarantee is the max resolved bound per field
             // over all shards (each shard resolves against its own value
@@ -1011,6 +1156,13 @@ impl<S: ArchiveSink> ShardWriter<S> {
             bytes_out,
             cost_nanos,
         });
+        // Only after the record landed, so a failed emit leaves no
+        // phantom chain membership behind.
+        if let Some(acc) = &mut self.temporal {
+            if let Some((_, shards)) = acc.steps.last_mut() {
+                shards.push((start as u64, end as u64));
+            }
+        }
         Ok(())
     }
 
@@ -1057,8 +1209,56 @@ impl<S: ArchiveSink> ShardWriter<S> {
             }
             None => None,
         };
-        let tail =
-            encode_footer_tail(n, &self.entries, self.crc, quality.as_ref(), spatial.as_ref());
+        let temporal = match self.temporal {
+            Some(acc) => {
+                // Each step's shards must map to a contiguous run of the
+                // sorted shard table, in chain order — a chain whose
+                // steps interleave would break the O(1) seek contract.
+                let mut steps = Vec::with_capacity(acc.steps.len());
+                let mut next = 0usize;
+                for (si, (mut step, mut keys)) in acc.steps.into_iter().enumerate() {
+                    if keys.is_empty() {
+                        return Err(Error::invalid(format!(
+                            "timestep {si} holds no shards"
+                        )));
+                    }
+                    keys.sort_unstable();
+                    let lo = next;
+                    let hi = next + keys.len();
+                    let table: Vec<(u64, u64)> = self.entries[lo..hi.min(self.entries.len())]
+                        .iter()
+                        .map(|e| (e.start, e.end))
+                        .collect();
+                    if keys != table {
+                        return Err(Error::invalid(format!(
+                            "timestep {si} shards do not form a contiguous chain slice"
+                        )));
+                    }
+                    step.shard_lo = lo as u64;
+                    step.shard_hi = hi as u64;
+                    next = hi;
+                    steps.push(step);
+                }
+                if next != self.entries.len() {
+                    return Err(Error::invalid(
+                        "temporal chain does not cover every shard",
+                    ));
+                }
+                Some(ArchiveTemporal {
+                    interval: acc.interval,
+                    steps,
+                })
+            }
+            None => None,
+        };
+        let tail = encode_footer_tail(
+            n,
+            &self.entries,
+            self.crc,
+            quality.as_ref(),
+            spatial.as_ref(),
+            temporal.as_ref(),
+        );
         // Footer-last with a durability barrier: every shard record is
         // on stable storage before the footer that indexes it.
         self.w.barrier()?;
@@ -1072,6 +1272,7 @@ impl<S: ArchiveSink> ShardWriter<S> {
             file_crc: self.crc,
             quality,
             spatial,
+            temporal,
         })
     }
 }
@@ -1093,6 +1294,7 @@ fn encode_footer_tail(
     file_crc: u32,
     quality: Option<&ArchiveQuality>,
     spatial: Option<&ArchiveSpatial>,
+    temporal: Option<&ArchiveTemporal>,
 ) -> Vec<u8> {
     let mut f = Vec::with_capacity(32 + entries.len() * 24);
     f.extend_from_slice(FOOTER_MARKER);
@@ -1128,6 +1330,20 @@ fn encode_footer_tail(
                 for v in b {
                     f.extend_from_slice(&v.to_le_bytes());
                 }
+            }
+        }
+    }
+    if let Some(tc) = temporal {
+        f.extend_from_slice(TEMPORAL_MARKER);
+        put_uvarint(&mut f, tc.interval);
+        put_uvarint(&mut f, tc.steps.len() as u64);
+        for s in &tc.steps {
+            put_uvarint(&mut f, s.shard_lo);
+            put_uvarint(&mut f, s.shard_hi);
+            f.push(s.keyframe as u8);
+            f.extend_from_slice(&s.dt.to_le_bytes());
+            for b in &s.bounds {
+                f.extend_from_slice(&b.to_le_bytes());
             }
         }
     }
@@ -1234,6 +1450,97 @@ fn parse_spatial_block(
     })
 }
 
+/// Parse and validate the footer's temporal block. Every field is
+/// treated as hostile: the steps must partition the shard table as
+/// contiguous index runs in order, the chain must open with a keyframe,
+/// and `dt`/bounds must be finite. `fl` is the footer length; the block
+/// must end exactly at the file CRC (`fl - 8`), which the caller
+/// re-checks.
+fn parse_temporal_block(
+    foot: &[u8],
+    pos: &mut usize,
+    fl: usize,
+    entries: &[ShardEntry],
+) -> Result<ArchiveTemporal> {
+    if *pos + 4 > fl - 8 || &foot[*pos..*pos + 4] != TEMPORAL_MARKER {
+        return Err(Error::corrupt("trailing garbage in v3 footer"));
+    }
+    *pos += 4;
+    let interval = get_uvarint(foot, pos)?;
+    if interval == 0 || interval > MAX_SHARDS as u64 {
+        return Err(Error::corrupt(format!(
+            "implausible temporal keyframe interval {interval}"
+        )));
+    }
+    let n_steps = get_uvarint(foot, pos)?;
+    if n_steps == 0 || n_steps > entries.len() as u64 {
+        return Err(Error::corrupt(format!(
+            "implausible temporal step count {n_steps} for {} shards",
+            entries.len()
+        )));
+    }
+    // Allocation guard: each step occupies at least 59 bytes (two
+    // single-byte uvarints, the flag, dt, six bounds).
+    (n_steps as usize)
+        .checked_mul(59)
+        .filter(|&b| *pos + b <= fl)
+        .ok_or_else(|| Error::corrupt("temporal chain larger than the footer"))?;
+    let mut steps = Vec::with_capacity(n_steps as usize);
+    let mut next = 0u64;
+    for i in 0..n_steps {
+        let shard_lo = get_uvarint(foot, pos)?;
+        let shard_hi = get_uvarint(foot, pos)?;
+        if shard_lo != next || shard_hi <= shard_lo || shard_hi > entries.len() as u64 {
+            return Err(Error::corrupt(format!(
+                "temporal step {i}: shard range {shard_lo}..{shard_hi} does not continue the chain"
+            )));
+        }
+        next = shard_hi;
+        let flags = take(foot, pos, 1, "temporal step flags")?[0];
+        if flags & !1 != 0 {
+            return Err(Error::corrupt(format!(
+                "temporal step {i}: unknown flag bits {flags:#04x}"
+            )));
+        }
+        let keyframe = flags & 1 != 0;
+        if i == 0 && !keyframe {
+            return Err(Error::corrupt(
+                "temporal chain does not open with a keyframe",
+            ));
+        }
+        let dt = f64::from_le_bytes(
+            take(foot, pos, 8, "temporal step dt")?.try_into().unwrap(),
+        );
+        if !dt.is_finite() || dt < 0.0 {
+            return Err(Error::corrupt(format!("temporal step {i}: dt invalid")));
+        }
+        let mut bounds = [0f64; 6];
+        for b in &mut bounds {
+            *b = f64::from_le_bytes(
+                take(foot, pos, 8, "temporal step bound")?.try_into().unwrap(),
+            );
+            if !b.is_finite() || *b < 0.0 {
+                return Err(Error::corrupt(format!(
+                    "temporal step {i}: implausible resolved bound"
+                )));
+            }
+        }
+        steps.push(TemporalStep {
+            shard_lo,
+            shard_hi,
+            keyframe,
+            dt,
+            bounds,
+        });
+    }
+    if next != entries.len() as u64 {
+        return Err(Error::corrupt(
+            "temporal chain does not cover every shard",
+        ));
+    }
+    Ok(ArchiveTemporal { interval, steps })
+}
+
 /// Seekable archive reader for all format versions. v3 archives are
 /// opened by footer alone (no payload is read until
 /// [`Self::read_shard`]); v1/v2 single-record archives are loaded fully
@@ -1284,6 +1591,7 @@ impl ShardReader {
                 file_crc: 0,
                 quality: None,
                 spatial: None,
+                temporal: None,
             },
             legacy: Some(arch.bundle),
             data_end: file_len,
@@ -1358,7 +1666,9 @@ impl ShardReader {
         // spatial marker next) marks a pre-quality archive.
         let at_spatial =
             |pos: usize| pos + 4 <= fl - 8 && &foot[pos..pos + 4] == SPATIAL_MARKER;
-        let quality = if pos != fl - 8 && !at_spatial(pos) {
+        let at_temporal =
+            |pos: usize| pos + 4 <= fl - 8 && &foot[pos..pos + 4] == TEMPORAL_MARKER;
+        let quality = if pos != fl - 8 && !at_spatial(pos) && !at_temporal(pos) {
             let qlen = get_uvarint(&foot, &mut pos)?;
             if qlen == 0 || qlen > MAX_STR_LEN as u64 {
                 return Err(Error::corrupt("implausible quality-block length"));
@@ -1383,8 +1693,16 @@ impl ShardReader {
             None
         };
         // Optional spatial block (spatial-layout archives only).
-        let spatial = if pos != fl - 8 {
+        let spatial = if pos != fl - 8 && at_spatial(pos) {
             Some(parse_spatial_block(&foot, &mut pos, fl, &entries)?)
+        } else {
+            None
+        };
+        // Optional temporal block (stream-mode archives only). The
+        // parser re-checks the marker, so anything else left in the
+        // footer here is rejected as trailing garbage.
+        let temporal = if pos != fl - 8 {
+            Some(parse_temporal_block(&foot, &mut pos, fl, &entries)?)
         } else {
             None
         };
@@ -1445,6 +1763,7 @@ impl ShardReader {
                 file_crc,
                 quality,
                 spatial,
+                temporal,
             },
             legacy: None,
             data_end,
@@ -1499,6 +1818,30 @@ impl ShardReader {
     /// v3, and v1/v2 archives).
     pub fn spatial(&self) -> Option<&ArchiveSpatial> {
         self.index.spatial.as_ref()
+    }
+
+    /// The footer's temporal block (`None` for single-snapshot
+    /// archives).
+    pub fn temporal(&self) -> Option<&ArchiveTemporal> {
+        self.index.temporal.as_ref()
+    }
+
+    /// Shard selection for a timestep read: the indices of every shard
+    /// in timestep `t`'s keyframe group, from its most recent keyframe
+    /// through `t` itself — the only records a timestep decode touches,
+    /// which is what bounds seek cost to one group regardless of chain
+    /// length. Errors typed: no temporal block, or `t` out of range.
+    pub fn shards_for_timestep(&self, t: usize) -> Result<Vec<usize>> {
+        let tc = self.index.temporal.as_ref().ok_or_else(|| {
+            Error::invalid("archive has no temporal chain (not a stream archive)")
+        })?;
+        let k = tc.keyframe_for(t).ok_or_else(|| {
+            Error::invalid(format!(
+                "timestep {t} out of range: the chain holds {} steps",
+                tc.steps.len()
+            ))
+        })?;
+        Ok((tc.steps[k].shard_lo as usize..tc.steps[t].shard_hi as usize).collect())
     }
 
     /// Shard selection for a region query: `(touched, pruned, indexed)`
@@ -1802,6 +2145,10 @@ impl ShardReader {
                     file_crc: crc32(&bytes[..data_end as usize]),
                     quality: None,
                     spatial: None,
+                    // Salvage keeps data, not chain structure: a torn
+                    // stream may have lost the tail of a keyframe
+                    // group, so the chain is not reconstructible.
+                    temporal: None,
                 },
                 legacy: None,
                 data_end,
@@ -1841,6 +2188,7 @@ impl ShardReader {
             self.index.file_crc,
             self.index.quality.as_ref(),
             self.index.spatial.as_ref(),
+            self.index.temporal.as_ref(),
         );
         sink.barrier()?;
         sink.write_all(&tail)?;
@@ -2722,7 +3070,14 @@ mod tests {
         let data_end = bytes.len() - 16 - foot_len as usize;
         let mut pre = bytes[..data_end].to_vec();
         let file_crc = crc32(&pre);
-        pre.extend_from_slice(&encode_footer_tail(1_000, &index3.entries, file_crc, None, None));
+        pre.extend_from_slice(&encode_footer_tail(
+            1_000,
+            &index3.entries,
+            file_crc,
+            None,
+            None,
+            None,
+        ));
         let p3 = tmp_path("quality_pre_rewritten");
         std::fs::write(&p3, &pre).unwrap();
         let reader = ShardReader::open(&p3).unwrap();
@@ -2844,7 +3199,7 @@ mod tests {
         let p = tmp_path("hostile_case");
         for (what, n, entries) in hostile {
             let mut evil = data.to_vec();
-            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc, None, None));
+            evil.extend_from_slice(&encode_footer_tail(n, &entries, file_crc, None, None, None));
             std::fs::write(&p, &evil).unwrap();
             match ShardReader::open(&p) {
                 Err(_) => {}
@@ -3217,6 +3572,7 @@ mod tests {
                 file_crc,
                 None,
                 Some(sp),
+                None,
             ));
             evil
         };
@@ -3289,6 +3645,7 @@ mod tests {
             file_crc,
             None,
             index.spatial.as_ref(),
+            None,
         ));
         let p = tmp_path("spatial_noq_rewritten");
         std::fs::write(&p, &out).unwrap();
@@ -3501,5 +3858,308 @@ mod tests {
         assert!(r.is_err(), "no records -> nothing to salvage");
         std::fs::remove_file(&p).ok();
         std::fs::remove_file(&good).ok();
+    }
+
+    /// Stream-write a temporal keyframe+delta archive: `steps` timesteps
+    /// of `n_per_step` particles (each step owning its slab of the
+    /// global index space), `shards_per_step` shards each, keyframes
+    /// every `interval` steps. Payloads are synthetic — these tests pin
+    /// the chain bookkeeping, not the predictor (which
+    /// tests/temporal_roundtrip.rs covers end to end).
+    fn temporal_v3(
+        path: &std::path::Path,
+        n_per_step: usize,
+        steps: usize,
+        interval: u64,
+        shards_per_step: usize,
+    ) -> Result<ShardIndex> {
+        let s = generate_md(&MdConfig {
+            n_particles: n_per_step,
+            ..Default::default()
+        });
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let mut w = ShardWriter::create_stream(path, V3_SPEC, &q)?;
+        w.enable_temporal(interval)?;
+        for t in 0..steps {
+            let key = t as u64 % interval == 0;
+            let bounds = if key { [V3_EB; 6] } else { [V3_EB * 0.5; 6] };
+            w.begin_timestep(key, 0.05, bounds)?;
+            let base = t * n_per_step;
+            for sh in &crate::coordinator::shard::split_even(n_per_step, shards_per_step) {
+                let b = comp.compress(&s.slice(sh.start, sh.end), &q).unwrap();
+                w.write_shard(base + sh.start, base + sh.end, &b, 7)?;
+            }
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn v3_temporal_roundtrip_and_chain_accessors() {
+        // 4 steps x 2 shards, keyframes at interval 2: groups {0,1}
+        // and {2,3}.
+        let p = tmp_path("temporal_roundtrip");
+        let index = temporal_v3(&p, 500, 4, 2, 2).unwrap();
+        let reader = ShardReader::open(&p).unwrap();
+        reader.verify_file_crc().unwrap();
+        assert_eq!(reader.n(), 2_000);
+        assert!(reader.single_record().is_none());
+        let tc = reader.temporal().expect("temporal block survives reopen");
+        assert_eq!(tc, index.temporal.as_ref().unwrap());
+        assert_eq!(tc.interval, 2);
+        assert_eq!(tc.steps.len(), 4);
+        for (t, s) in tc.steps.iter().enumerate() {
+            assert_eq!(s.keyframe, t % 2 == 0, "step {t} keyframe flag");
+            assert_eq!(s.dt, 0.05);
+            let want = if s.keyframe { V3_EB } else { V3_EB * 0.5 };
+            assert_eq!(s.bounds, [want; 6], "step {t} bounds");
+            assert_eq!((s.shard_lo, s.shard_hi), (2 * t as u64, 2 * t as u64 + 2));
+        }
+        assert_eq!(tc.keyframe_for(0), Some(0));
+        assert_eq!(tc.keyframe_for(1), Some(0));
+        assert_eq!(tc.keyframe_for(2), Some(2));
+        assert_eq!(tc.keyframe_for(3), Some(2));
+        assert_eq!(tc.keyframe_for(4), None);
+        // Seeking decodes only the step's keyframe group: the group
+        // opener touches just its own shards, a mid-group step drags in
+        // the chain back to its keyframe — never shards of group 0.
+        assert_eq!(reader.shards_for_timestep(0).unwrap(), vec![0, 1]);
+        assert_eq!(reader.shards_for_timestep(1).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(reader.shards_for_timestep(2).unwrap(), vec![4, 5]);
+        assert_eq!(reader.shards_for_timestep(3).unwrap(), vec![4, 5, 6, 7]);
+        assert!(reader.shards_for_timestep(4).is_err(), "step past the chain");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_temporal_writer_guards() {
+        let (s, b) = bundle();
+        let q = crate::quality::Quality::rel(V3_EB);
+        let p = tmp_path("temporal_guards");
+
+        // Arming after a shard landed would orphan it from every chain.
+        let mut w = ShardWriter::create_stream(&p, V3_SPEC, &q).unwrap();
+        w.write_shard(0, s.len(), &b, 0).unwrap();
+        assert!(w.enable_temporal(4).is_err());
+        drop(w);
+
+        let mut w = ShardWriter::create_stream(&p, V3_SPEC, &q).unwrap();
+        assert!(w.enable_temporal(0).is_err(), "zero interval");
+        assert!(
+            w.enable_temporal(MAX_SHARDS as u64 + 1).is_err(),
+            "interval past MAX_SHARDS"
+        );
+        assert!(
+            w.begin_timestep(true, 0.05, [0.0; 6]).is_err(),
+            "begin_timestep before enable_temporal"
+        );
+        w.enable_temporal(4).unwrap();
+        assert!(
+            w.write_shard(0, s.len(), &b, 0).is_err(),
+            "armed writer must reject shards outside a timestep scope"
+        );
+        assert!(
+            w.begin_timestep(false, 0.05, [0.0; 6]).is_err(),
+            "the chain must open with a keyframe"
+        );
+        assert!(w.begin_timestep(true, f64::NAN, [0.0; 6]).is_err(), "NaN dt");
+        assert!(w.begin_timestep(true, -0.5, [0.0; 6]).is_err(), "negative dt");
+        let mut bad = [0.0f64; 6];
+        bad[2] = f64::NAN;
+        assert!(w.begin_timestep(true, 0.05, bad).is_err(), "NaN bound");
+        bad[2] = -1e-4;
+        assert!(w.begin_timestep(true, 0.05, bad).is_err(), "negative bound");
+        w.begin_timestep(true, 0.05, [V3_EB; 6]).unwrap();
+        assert!(
+            w.begin_timestep(false, 0.05, [V3_EB; 6]).is_err(),
+            "previous timestep holds no shards"
+        );
+        // A chain whose last step is empty must fail at finish, not
+        // write a footer that indexes a phantom step.
+        w.write_shard(0, s.len(), &b, 0).unwrap();
+        w.begin_timestep(false, 0.05, [V3_EB; 6]).unwrap();
+        assert!(w.finish().is_err());
+
+        // Steps whose shards interleave in particle order cannot form
+        // contiguous runs of the sorted shard table.
+        let comp = registry::build_str(V3_SPEC).unwrap();
+        let half = s.len() / 2;
+        let lo = comp.compress(&s.slice(0, half), &q).unwrap();
+        let hi = comp.compress(&s.slice(half, s.len()), &q).unwrap();
+        let mut w = ShardWriter::create_stream(&p, V3_SPEC, &q).unwrap();
+        w.enable_temporal(4).unwrap();
+        w.begin_timestep(true, 0.05, [V3_EB; 6]).unwrap();
+        w.write_shard(half, s.len(), &hi, 0).unwrap();
+        w.begin_timestep(false, 0.05, [V3_EB; 6]).unwrap();
+        w.write_shard(0, half, &lo, 0).unwrap();
+        assert!(w.finish().is_err(), "interleaved chain slices");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v3_hostile_temporal_footers_rejected() {
+        let path = tmp_path("temporal_hostile");
+        let index = temporal_v3(&path, 500, 4, 2, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let foot_len =
+            u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+        let data_end = bytes.len() - 16 - foot_len as usize;
+        let data = &bytes[..data_end];
+        let file_crc = crc32(data);
+        let good = index.temporal.as_ref().unwrap().clone();
+        // Every rebuilt footer is internally consistent (fresh CRCs), so
+        // only the temporal *semantic* validation can reject it.
+        let rebuilt = |tc: &ArchiveTemporal| {
+            let mut evil = data.to_vec();
+            evil.extend_from_slice(&encode_footer_tail(
+                2_000,
+                &index.entries,
+                file_crc,
+                None,
+                None,
+                Some(tc),
+            ));
+            evil
+        };
+        let p = tmp_path("temporal_hostile_case");
+        // Sanity: a faithful rebuild (temporal block without the quality
+        // block) must open with the chain intact — the block is located
+        // by its TCHN marker, not a fixed offset.
+        std::fs::write(&p, rebuilt(&good)).unwrap();
+        let r = ShardReader::open(&p).unwrap();
+        assert_eq!(r.temporal(), Some(&good));
+        r.verify_file_crc().unwrap();
+
+        let mut zero_interval = good.clone();
+        zero_interval.interval = 0;
+        let mut huge_interval = good.clone();
+        huge_interval.interval = MAX_SHARDS as u64 + 1;
+        let mut empty_chain = good.clone();
+        empty_chain.steps.clear();
+        let mut delta_opening = good.clone();
+        delta_opening.steps[0].keyframe = false;
+        let mut gapped = good.clone();
+        gapped.steps[1].shard_lo = 3;
+        let mut empty_step = good.clone();
+        empty_step.steps[1].shard_hi = empty_step.steps[1].shard_lo;
+        let mut past_table = good.clone();
+        past_table.steps[3].shard_hi = 9;
+        let mut short_chain = good.clone();
+        short_chain.steps[3].shard_hi = 7;
+        let mut inflated = good.clone();
+        while inflated.steps.len() <= index.entries.len() {
+            let last = inflated.steps.last().unwrap().clone();
+            inflated.steps.push(last);
+        }
+        let mut nan_dt = good.clone();
+        nan_dt.steps[1].dt = f64::NAN;
+        let mut negative_dt = good.clone();
+        negative_dt.steps[2].dt = -0.5;
+        let mut infinite_dt = good.clone();
+        infinite_dt.steps[0].dt = f64::INFINITY;
+        let mut nan_bound = good.clone();
+        nan_bound.steps[1].bounds[3] = f64::NAN;
+        let mut negative_bound = good.clone();
+        negative_bound.steps[2].bounds[0] = -1e-4;
+
+        for (what, tc) in [
+            ("zero keyframe interval", &zero_interval),
+            ("interval past MAX_SHARDS", &huge_interval),
+            ("empty chain", &empty_chain),
+            ("chain opening with a delta", &delta_opening),
+            ("gap between steps", &gapped),
+            ("step holding no shards", &empty_step),
+            ("step range past the shard table", &past_table),
+            ("chain not covering every shard", &short_chain),
+            ("more steps than shards", &inflated),
+            ("NaN dt", &nan_dt),
+            ("negative dt", &negative_dt),
+            ("infinite dt", &infinite_dt),
+            ("NaN resolved bound", &nan_bound),
+            ("negative resolved bound", &negative_bound),
+        ] {
+            std::fs::write(&p, rebuilt(tc)).unwrap();
+            match ShardReader::open(&p) {
+                Err(_) => {}
+                Ok(_) => panic!("hostile temporal footer accepted: {what}"),
+            }
+        }
+        // Truncation anywhere in the footer (which now ends with the
+        // temporal block) errors cleanly, never panics.
+        let len = bytes.len();
+        for cut in data_end..len {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(ShardReader::open(&p).is_err(), "cut at {cut}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Encode one raw temporal block (marker, header, steps as
+    /// `(shard_lo, shard_hi, flags)` with fixed dt/bounds) so flag bytes
+    /// the writer can never produce still reach the parser.
+    fn raw_temporal_block(interval: u64, steps: &[(u64, u64, u8)]) -> Vec<u8> {
+        let mut f = Vec::new();
+        f.extend_from_slice(TEMPORAL_MARKER);
+        put_uvarint(&mut f, interval);
+        put_uvarint(&mut f, steps.len() as u64);
+        for &(lo, hi, flags) in steps {
+            put_uvarint(&mut f, lo);
+            put_uvarint(&mut f, hi);
+            f.push(flags);
+            f.extend_from_slice(&0.05f64.to_le_bytes());
+            for _ in 0..6 {
+                f.extend_from_slice(&1e-4f64.to_le_bytes());
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn temporal_unknown_flag_bits_rejected() {
+        let entries: Vec<ShardEntry> = (0..2)
+            .map(|i| ShardEntry {
+                start: i * 100,
+                end: (i + 1) * 100,
+                offset: 0,
+                len: 1,
+                bytes_out: 1,
+                cost_nanos: 0,
+            })
+            .collect();
+        // The block must end exactly at the file CRC (`fl - 8`).
+        let parse = |block: &[u8]| {
+            let mut pos = 0usize;
+            parse_temporal_block(block, &mut pos, block.len() + 8, &entries)
+        };
+        // Bit 0 is the keyframe flag; every other bit is reserved and
+        // must be rejected, not silently masked.
+        for flags in [0x02u8, 0x03, 0x80, 0xFF] {
+            let block = raw_temporal_block(2, &[(0, 1, 1), (1, 2, flags)]);
+            assert!(parse(&block).is_err(), "flag byte {flags:#04x} accepted");
+        }
+        // A lawful delta flag on step 0 is still rejected: the chain
+        // must open with a keyframe.
+        let block = raw_temporal_block(2, &[(0, 1, 0), (1, 2, 1)]);
+        assert!(parse(&block).is_err());
+        // Sanity: the same shape with lawful flags parses.
+        let block = raw_temporal_block(2, &[(0, 1, 1), (1, 2, 0)]);
+        let tc = parse(&block).unwrap();
+        assert_eq!(tc.interval, 2);
+        assert!(tc.steps[0].keyframe && !tc.steps[1].keyframe);
+    }
+
+    #[test]
+    fn pre_temporal_archives_have_no_chain() {
+        // Plain v3 archives stay byte-identical and expose no chain;
+        // timestep seeks on them fail typed, not by panic.
+        let (_, path, _) = v3_file("no_chain", 2_000, 3);
+        let reader = ShardReader::open(&path).unwrap();
+        assert!(reader.temporal().is_none());
+        assert!(matches!(
+            reader.shards_for_timestep(0),
+            Err(Error::InvalidArg(_))
+        ));
+        std::fs::remove_file(&path).ok();
     }
 }

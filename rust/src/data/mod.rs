@@ -52,6 +52,90 @@ pub fn generate(kind: DatasetKind, n: usize, seed: u64) -> Snapshot {
     }
 }
 
+/// Evolve a snapshot `n_steps` times with leapfrog (kick-drift)
+/// integration under a harmonic trap toward the initial per-axis
+/// midpoint (`a = -ω²·(x - c)`, `omega2` = ω²) — the shared engine behind
+/// [`gen_cosmo::time_series`] and [`gen_md::time_series`]. The trap
+/// keeps particles bounded for any horizon, and the kick-before-drift
+/// order means each snapshot stores exactly the velocity its next drift
+/// uses, so the temporal predictor's `x + v·dt` extrapolation is exact
+/// up to the `a·dt²` kick of the *following* step — the velocity
+/// coherence real checkpoint streams have.
+///
+/// Returns `n_steps` snapshots: the input state (step 0, unmodified)
+/// followed by `n_steps - 1` evolved states. State is carried in `f64`;
+/// each snapshot rounds to `f32` once, like a simulation's own output.
+pub fn evolve_leapfrog(snap: &Snapshot, n_steps: usize, dt: f64, omega2: f64) -> Vec<Snapshot> {
+    let n = snap.len();
+    // Trap centers: the initial midpoint per axis (HACC boxes span
+    // [0, box], the MD nanoparticle is centered at the origin).
+    let c: [f64; 3] = std::array::from_fn(|a| {
+        let st = crate::quality::FieldStats::scan(&snap.fields[a]);
+        (st.min as f64 + st.max as f64) / 2.0
+    });
+    let mut x: [Vec<f64>; 3] =
+        std::array::from_fn(|a| snap.fields[a].iter().map(|&v| v as f64).collect());
+    let mut v: [Vec<f64>; 3] =
+        std::array::from_fn(|a| snap.fields[3 + a].iter().map(|&v| v as f64).collect());
+    let mut out = Vec::with_capacity(n_steps);
+    out.push(snap.clone());
+    for _ in 1..n_steps {
+        for axis in 0..3 {
+            for i in 0..n {
+                v[axis][i] += -omega2 * (x[axis][i] - c[axis]) * dt; // kick
+                x[axis][i] += v[axis][i] * dt; // drift
+            }
+        }
+        let fields: [Vec<f32>; 6] = std::array::from_fn(|f| {
+            if f < 3 {
+                x[f].iter().map(|&w| w as f32).collect()
+            } else {
+                v[f - 3].iter().map(|&w| w as f32).collect()
+            }
+        });
+        out.push(Snapshot {
+            name: snap.name.clone(),
+            fields,
+            box_size: snap.box_size,
+            seed: snap.seed,
+        });
+    }
+    out
+}
+
+/// Generate the standard benchmark *time series* for `kind`: the
+/// [`generate`] snapshot evolved to `n_steps` leapfrog states with
+/// timestep `dt` (see [`gen_cosmo::time_series`] /
+/// [`gen_md::time_series`] for the per-dataset trap parameters).
+pub fn generate_series(
+    kind: DatasetKind,
+    n: usize,
+    seed: u64,
+    n_steps: usize,
+    dt: f64,
+) -> Vec<Snapshot> {
+    match kind {
+        DatasetKind::Hacc => gen_cosmo::time_series(
+            &gen_cosmo::CosmoConfig {
+                n_particles: n,
+                seed,
+                ..Default::default()
+            },
+            n_steps,
+            dt,
+        ),
+        DatasetKind::Amdf => gen_md::time_series(
+            &gen_md::MdConfig {
+                n_particles: n,
+                seed,
+                ..Default::default()
+            },
+            n_steps,
+            dt,
+        ),
+    }
+}
+
 /// Default benchmark particle counts on this testbed (scaled-down from
 /// the paper's 147.3M / 2.8M; override with `NBLC_SCALE=full`).
 pub fn default_n(kind: DatasetKind) -> usize {

@@ -49,9 +49,9 @@
 //! assert_eq!(restored.len(), snap.len());
 //! ```
 //!
-//! The bare-`f64` entry points of earlier releases survive as deprecated
-//! shims (`compress_rel(snap, eb_rel)` ≡ `compress(snap,
-//! &Quality::rel(eb_rel))`); see the README's migration table.
+//! The bare-`f64` entry points of earlier releases (`compress_rel`,
+//! `compress_with_rel`, the bare-float bound spelling) were removed in
+//! 0.7; spell the same bound `Quality::rel(eb_rel)` / `rel:<v>`.
 //!
 //! ## Planning before compressing
 //!
@@ -220,6 +220,59 @@
 //! );
 //! ```
 //!
+//! ## Temporal streams
+//!
+//! [`temporal`] extends the v3 archive to multi-snapshot time series:
+//! [`coordinator::pipeline::run_insitu_stream`] writes a keyframe+delta
+//! chain (every K-th timestep stored whole, the rest as SZ-quantized
+//! residuals against a velocity-extrapolated prediction from the
+//! previous *decoded* step — so quantization error never accumulates,
+//! and every timestep reconstructs within the typed [`quality::Quality`]
+//! bound). [`data::archive::ShardReader::decode_timestep`] seeks to any
+//! step touching only its keyframe group — O(K) records, independent of
+//! stream length:
+//!
+//! ```no_run
+//! use nblc::compressors::registry;
+//! use nblc::coordinator::pipeline::{run_insitu_stream, StreamConfig};
+//! use nblc::data::archive::ShardReader;
+//! use nblc::data::gen_cosmo::{self, CosmoConfig};
+//! use nblc::exec::ExecCtx;
+//! use nblc::quality::Quality;
+//! use nblc::temporal::TemporalConfig;
+//! use std::path::PathBuf;
+//!
+//! // 16 leapfrog timesteps of a cosmology snapshot.
+//! let cfg = CosmoConfig { n_particles: 100_000, ..Default::default() };
+//! let series = gen_cosmo::time_series(&cfg, 16, 0.05);
+//! let path = PathBuf::from("stream.nblc");
+//! let report = run_insitu_stream(&series, &StreamConfig {
+//!     shards: 8,
+//!     threads: 0,
+//!     quality: Quality::rel(1e-4),
+//!     // Stream mode needs an order-preserving codec (residuals are
+//!     // particle-index-aligned); the RX family is rejected typed.
+//!     factory: registry::factory("sz_lv").unwrap(),
+//!     path: path.clone(),
+//!     spec: registry::canonical("sz_lv").unwrap(),
+//!     temporal: TemporalConfig::new(4).unwrap(), // keyframe every 4
+//!     dt: 0.05,
+//!     max_retries: 0,
+//! }).unwrap();
+//! println!("delta steps {:.1}x smaller than keyframes",
+//!     report.delta_vs_keyframe().unwrap_or(1.0));
+//!
+//! // Mid-chain seek: replays 4..=6 only, never steps 0..4 or 7..
+//! let reader = ShardReader::open(&path).unwrap();
+//! let dec = reader.decode_timestep(6, &ExecCtx::auto()).unwrap();
+//! assert_eq!(dec.keyframe, 4);
+//! assert_eq!(dec.shards_touched, reader.shards_for_timestep(6).unwrap().len());
+//! ```
+//!
+//! The CLI face is `nblc pipeline --stream` / `nblc decompress
+//! --timestep t` / `nblc get --timestep t` (served seeks share the LRU
+//! shard cache); `nblc inspect` prints the chain table.
+//!
 //! ## Threading model
 //!
 //! Every snapshot compressor is driven by an [`exec::ExecCtx`] — a
@@ -300,6 +353,7 @@ pub mod quality;
 pub mod data;
 pub mod snapshot;
 pub mod compressors;
+pub mod temporal;
 pub mod metrics;
 pub mod config;
 pub mod cli;

@@ -15,14 +15,16 @@
 
 use nblc::cli::Args;
 use nblc::compressors::registry;
-use nblc::config::{ConfigDoc, PipelineSettings, ServeSettings};
-use nblc::coordinator::pipeline::{run_insitu, InsituConfig, InsituReport, Sink, SpatialInsitu};
+use nblc::config::{ConfigDoc, PipelineSettings, ServeSettings, TemporalSettings};
+use nblc::coordinator::pipeline::{
+    run_insitu, run_insitu_stream, InsituConfig, InsituReport, Sink, SpatialInsitu, StreamConfig,
+};
 use nblc::coordinator::shard::{rebalance, Shard};
 use nblc::coordinator::spatial::{plan_spatial, rebalance_aligned};
 use nblc::coordinator::{choose_compressor, GpfsModel};
 use nblc::data::archive::{decode_region, decode_shards, Region, ShardReader, ShardWriter};
 use nblc::data::io::{read_snapshot, write_snapshot};
-use nblc::data::{generate, DatasetKind};
+use nblc::data::{generate, generate_series, DatasetKind};
 use nblc::error::{Error, Result};
 use nblc::exec::ExecCtx;
 use nblc::metrics::ErrorStats;
@@ -46,18 +48,19 @@ COMMANDS:
               [--simd off|auto|force]
   decompress  <in.nblc> <out.snap> [--method <spec>] [--threads N]
               [--particles a..b] [--region x0..x1,y0..y1,z0..z1]
-              [--simd off|auto|force]
+              [--timestep T] [--simd off|auto|force]
   inspect     <in.nblc> [--verify]
   salvage     <in.nblc> [--output <out.nblc>]
   list-codecs
   analyze     <orig.snap> <recon.snap>
   pipeline    --config <file.toml> [--threads N] [--simd off|auto|force]
+              [--stream] [--keyframe-every K] [--steps T] [--dt X]
   serve       <archive.nblc>... [--config <file.toml>] [--addr host:port]
               [--cache_mb N] [--max_inflight N] [--queue_timeout_ms N]
               [--decode_budget_ms N] [--threads N] [--simd off|auto|force]
   get         [<archive>] [--addr host:port] [--particles a..b]
-              [--region x0..x1,y0..y1,z0..z1] [--out <file.snap>]
-              [--stats] [--retries N]
+              [--region x0..x1,y0..y1,z0..z1] [--timestep T]
+              [--out <file.snap>] [--stats] [--retries N]
   info        [--simd off|auto|force]
 
 A codec spec is `name:key=val,key=val`, e.g. `sz_lv`,
@@ -67,7 +70,7 @@ Run `nblc list-codecs` for every codec and tunable parameter.
 
 Quality targets are typed. --eb takes one bound for every field:
 `abs:1e-3` (absolute), `rel:1e-4` (value-range-relative, the paper's
-definition — a bare float still means this), `pw_rel:1e-3`
+definition), `pw_rel:1e-3`
 (pointwise-relative), or `lossless`. --quality takes a full per-field
 spec such as `rel:1e-4,coords=abs:1e-3`, or `auto[:target_ratio=<x>]`
 to let the planner pick the codec from a cheap sampled pass. A spec's
@@ -111,6 +114,18 @@ with jittered backoff, and --stats prints the daemon's cache/admission
 counters. SIGTERM/SIGINT drain the daemon gracefully: in-flight
 requests complete before the process exits.
 
+pipeline --stream compresses a whole time series into one temporal
+archive: every K-th timestep (--keyframe-every, or [temporal]
+keyframe_interval) is stored as a keyframe, the rest as SZ-quantized
+residuals against a velocity extrapolation (x + v*dt) of the previous
+*decoded* timestep — prediction always runs off decoded data, so
+error never accumulates past the quality bound at any chain depth.
+--steps / --dt (or [temporal] steps / dt) size the generated series.
+Reordering codecs are rejected (residuals are index-aligned).
+decompress --timestep T and get --timestep T reconstruct one timestep
+by decoding only its keyframe group (keyframe through T, at most K
+steps), never the whole stream; inspect prints the chain table.
+
 Durability: pipeline archives are written footer-last with fsync
 barriers, and `nblc compress` writes through a temp file + atomic
 rename. A run killed mid-write leaves a footer-less file; `salvage`
@@ -128,7 +143,7 @@ fn main() {
     }
     // Boolean switches declared up front so they never swallow a
     // following positional (e.g. `inspect --verify file.nblc`).
-    let parsed = match Args::parse_with_switches(args, &["verify", "stats"]) {
+    let parsed = match Args::parse_with_switches(args, &["verify", "stats", "stream"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}");
@@ -383,7 +398,7 @@ fn parse_region(s: &str) -> Result<Region> {
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    args.expect_known(&["method", "threads", "particles", "region", "simd"])?;
+    args.expect_known(&["method", "threads", "particles", "region", "timestep", "simd"])?;
     let [input, output] = args.positionals.as_slice() else {
         return Err(Error::invalid("usage: decompress <in.nblc> <out.snap>"));
     };
@@ -398,6 +413,34 @@ fn cmd_decompress(args: &Args) -> Result<()> {
             "give --region or --particles, not both (a box query selects \
              by position, not by index)",
         ));
+    }
+    if let Some(ts) = args.get("timestep") {
+        if args.get("particles").is_some() || args.get("region").is_some() {
+            return Err(Error::invalid(
+                "give --timestep alone: it selects a whole chain step, not a \
+                 particle range or box",
+            ));
+        }
+        let t: usize = ts
+            .parse()
+            .map_err(|_| Error::invalid(format!("--timestep: cannot parse '{ts}'")))?;
+        let ctx = exec_ctx(args)?;
+        let timer = Timer::start();
+        let dec = reader.decode_timestep(t, &ctx)?;
+        write_snapshot(&dec.snapshot, Path::new(output))?;
+        println!(
+            "timestep {t}: {} particles [{}..{}] in {} ({} of {} shards decoded; \
+             chain replayed from keyframe {}, {} threads)",
+            dec.snapshot.len(),
+            dec.particle_start,
+            dec.particle_end,
+            humansize::secs(timer.secs()),
+            dec.shards_touched,
+            reader.index().entries.len(),
+            dec.keyframe,
+            ctx.threads(),
+        );
+        return Ok(());
     }
     if let Some(rs) = args.get("region") {
         let region = parse_region(rs)?;
@@ -586,6 +629,31 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 println!("spatial:   n/a (no spatial index; --region falls back to a full scan)")
             }
         }
+        if let Some(tc) = reader.temporal() {
+            let keyframes = tc.steps.iter().filter(|s| s.keyframe).count();
+            println!(
+                "temporal:  {} timesteps ({keyframes} keyframes at interval {}), {} particles/step",
+                tc.steps.len(),
+                tc.interval,
+                idx.n / tc.steps.len().max(1) as u64,
+            );
+            println!(
+                "{:>6} {:>5} {:>13} {:>10}   {}",
+                "step", "kind", "shards", "dt", "bounds [xx yy zz vx vy vz]"
+            );
+            for (t, s) in tc.steps.iter().enumerate() {
+                let bounds: Vec<String> = s.bounds.iter().map(|&b| fmt_bound(b)).collect();
+                println!(
+                    "{:>6} {:>5} {:>5}..{:<6} {:>10.3e}   [{}]",
+                    t,
+                    if s.keyframe { "key" } else { "delta" },
+                    s.shard_lo,
+                    s.shard_hi,
+                    s.dt,
+                    bounds.join(" "),
+                );
+            }
+        }
     }
     if verify {
         match reader.version() {
@@ -700,7 +768,16 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    args.expect_known(&["config", "threads", "simd"])?;
+    args.expect_known(&[
+        "config", "threads", "simd", "stream", "keyframe-every", "steps", "dt",
+    ])?;
+    for temporal_only in ["keyframe-every", "steps", "dt"] {
+        if args.get(temporal_only).is_some() && !args.has("stream") {
+            return Err(Error::invalid(format!(
+                "--{temporal_only} only applies to `pipeline --stream`"
+            )));
+        }
+    }
     let cfg_path = args.get_or("config", "nblc.toml");
     let doc = ConfigDoc::from_file(Path::new(&cfg_path))?;
     let mut settings = PipelineSettings::from_doc(&doc)?;
@@ -721,6 +798,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     } else {
         nblc::data::default_n(kind)
     };
+    if args.has("stream") {
+        return cmd_pipeline_stream(args, &doc, &settings, kind, n);
+    }
     println!("generating {} snapshot (n={n})...", kind.name());
     let snap = generate(kind, n, nblc::bench::BENCH_SEED);
 
@@ -909,6 +989,112 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--stream` arm of `pipeline`: compress a generated leapfrog
+/// time series into one temporal keyframe+delta archive (see
+/// [`run_insitu_stream`]).
+fn cmd_pipeline_stream(
+    args: &Args,
+    doc: &ConfigDoc,
+    settings: &PipelineSettings,
+    kind: DatasetKind,
+    n: usize,
+) -> Result<()> {
+    let mut temporal = TemporalSettings::from_doc(doc)?;
+    // Flags override the config's [temporal] section.
+    temporal.keyframe_interval = args.get_parse("keyframe-every", temporal.keyframe_interval)?;
+    temporal.steps = args.get_parse("steps", temporal.steps)?;
+    temporal.dt = args.get_parse("dt", temporal.dt)?;
+    if temporal.steps == 0 {
+        return Err(Error::invalid("--steps must be >= 1"));
+    }
+    if !temporal.dt.is_finite() || temporal.dt < 0.0 {
+        return Err(Error::invalid("--dt must be a finite float >= 0"));
+    }
+    let Some(out) = &settings.output else {
+        return Err(Error::Config(
+            "stream mode always writes an archive (the chain lives in its \
+             footer): set [pipeline] output"
+                .into(),
+        ));
+    };
+    if settings.layout == "spatial" {
+        return Err(Error::Config(
+            "stream mode requires layout = \"cost\": delta residuals are \
+             particle-index-aligned, which a per-timestep Morton permutation \
+             would break"
+                .into(),
+        ));
+    }
+    if settings.rebalance {
+        return Err(Error::Config(
+            "stream mode does not rebalance: the chain's shard layout must \
+             stay fixed across timesteps"
+                .into(),
+        ));
+    }
+    // Codec: an explicit method or the mode mapping. Auto planning is
+    // single-snapshot and not offered for streams, and the §V-C
+    // auto-route is skipped — it may pick an R-index codec, which
+    // stream mode rejects anyway.
+    let spec = match &settings.method {
+        Some(m) if m == "auto" || m.starts_with("auto:") => {
+            return Err(Error::Config(
+                "stream mode takes an explicit method or mode, not auto planning".into(),
+            ));
+        }
+        Some(m) => registry::canonical(m)?,
+        None => registry::canonical(&settings.mode.spec())?,
+    };
+    println!("stream codec: {spec}");
+    println!(
+        "generating {} time series (n={n}, {} steps, dt={})...",
+        kind.name(),
+        temporal.steps,
+        temporal.dt,
+    );
+    let series = generate_series(kind, n, nblc::bench::BENCH_SEED, temporal.steps, temporal.dt);
+    let report = run_insitu_stream(
+        &series,
+        &StreamConfig {
+            shards: settings.shards,
+            threads: settings.threads,
+            quality: settings.quality.clone(),
+            factory: registry::factory(&spec)?,
+            path: PathBuf::from(out),
+            spec: spec.clone(),
+            temporal: nblc::temporal::TemporalConfig::new(temporal.keyframe_interval)?,
+            dt: temporal.dt,
+            max_retries: settings.max_retries,
+        },
+    )?;
+    let keyframes = report.steps.iter().filter(|s| s.keyframe).count();
+    println!(
+        "stream: {} timesteps ({} keyframes at interval {}), ratio {:.2}, wall {}",
+        report.steps.len(),
+        keyframes,
+        temporal.keyframe_interval,
+        report.ratio,
+        humansize::secs(report.wall_secs),
+    );
+    if let Some(r) = report.delta_vs_keyframe() {
+        println!("stream: delta steps {r:.2}x smaller than keyframes on average");
+    }
+    if report.retries > 0 {
+        println!(
+            "stream: {} task retr{} recovered transient faults",
+            report.retries,
+            if report.retries == 1 { "y" } else { "ies" },
+        );
+    }
+    println!(
+        "archive: wrote temporal stream archive to {out} ({} shards across {} timesteps; \
+         try `nblc inspect {out}`)",
+        report.shard_index.entries.len(),
+        report.steps.len(),
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "config",
@@ -1013,7 +1199,7 @@ fn install_stop_handler() {
 fn install_stop_handler() {}
 
 fn cmd_get(args: &Args) -> Result<()> {
-    args.expect_known(&["addr", "particles", "region", "out", "stats", "retries"])?;
+    args.expect_known(&["addr", "particles", "region", "timestep", "out", "stats", "retries"])?;
     let addr = args.get_or("addr", "127.0.0.1:7117");
     let mut client = ServeClient::connect(addr.as_str())?;
     if args.has("stats") {
@@ -1022,10 +1208,14 @@ fn cmd_get(args: &Args) -> Result<()> {
     }
     // Archive basename; empty selects the daemon's only archive.
     let archive = args.positionals.first().map(String::as_str).unwrap_or("");
-    if args.get("region").is_some() && args.get("particles").is_some() {
+    let selectors = ["particles", "region", "timestep"]
+        .iter()
+        .filter(|f| args.get(f).is_some())
+        .count();
+    if selectors > 1 {
         return Err(Error::invalid(
-            "give --region or --particles, not both (a box query selects \
-             by position, not by index)",
+            "give at most one of --particles, --region, --timestep (index \
+             range, box, and chain step are distinct queries)",
         ));
     }
     let region = match args.get("region") {
@@ -1036,11 +1226,18 @@ fn cmd_get(args: &Args) -> Result<()> {
         Some(s) => Some(parse_particles(s)?),
         None => None,
     };
+    let timestep: Option<u64> = match args.get("timestep") {
+        Some(s) => Some(s.parse().map_err(|_| {
+            Error::invalid(format!("--timestep: cannot parse '{s}'"))
+        })?),
+        None => None,
+    };
     let retries: usize = args.get_parse("retries", 0)?;
     let t = Timer::start();
-    let reply = match &region {
-        Some(r) => client.get_region(archive, r.min, r.max)?,
-        None => client.get_with_retry(archive, range, retries)?,
+    let reply = match (&region, timestep) {
+        (Some(r), _) => client.get_region(archive, r.min, r.max)?,
+        (None, Some(ts)) => client.get_timestep(archive, ts)?,
+        (None, None) => client.get_with_retry(archive, range, retries)?,
     };
     match reply {
         GetReply::Data(d) => {
@@ -1055,6 +1252,16 @@ fn cmd_get(args: &Args) -> Result<()> {
                     humansize::secs(secs),
                     d.shards_touched,
                     d.shards_pruned,
+                    d.cache_hits,
+                );
+            } else if let Some(ts) = timestep {
+                println!(
+                    "got timestep {ts}: {} particles [{}..{}] in {} ({} shards decoded, {} cache hits)",
+                    d.snapshot.len(),
+                    d.particle_start,
+                    d.particle_end,
+                    humansize::secs(secs),
+                    d.shards_touched,
                     d.cache_hits,
                 );
             } else {

@@ -22,6 +22,8 @@ pub struct ServeMetrics {
     pub bytes_served: AtomicU64,
     /// Region (box) requests answered with data.
     pub region_requests: AtomicU64,
+    /// Timestep (temporal chain) requests answered with data.
+    pub timestep_requests: AtomicU64,
     /// Shards the spatial index pruned from region requests.
     pub shards_pruned: AtomicU64,
     /// Admission acquires that had to wait (blocked at least once)
@@ -50,6 +52,7 @@ impl ServeMetrics {
             errors: AtomicU64::new(0),
             bytes_served: AtomicU64::new(0),
             region_requests: AtomicU64::new(0),
+            timestep_requests: AtomicU64::new(0),
             shards_pruned: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             salvaged_shards: AtomicU64::new(0),
@@ -83,6 +86,7 @@ impl ServeMetrics {
             errors: self.errors.load(Ordering::Relaxed),
             bytes_served: self.bytes_served.load(Ordering::Relaxed),
             region_requests: self.region_requests.load(Ordering::Relaxed),
+            timestep_requests: self.timestep_requests.load(Ordering::Relaxed),
             shards_pruned: self.shards_pruned.load(Ordering::Relaxed),
             cache_hits: cache.hits,
             cache_misses: cache.misses,
@@ -143,6 +147,8 @@ pub struct ServeStats {
     pub bytes_served: u64,
     /// Region (box) requests answered with data.
     pub region_requests: u64,
+    /// Timestep (temporal chain) requests answered with data.
+    pub timestep_requests: u64,
     /// Shards spatial-index pruning skipped across all region requests.
     pub shards_pruned: u64,
     /// Shard-cache lookups served from memory.
@@ -184,6 +190,10 @@ impl ServeStats {
         s.push_str(&format!("errors: {}\n", self.errors));
         s.push_str(&format!("bytes served: {}\n", self.bytes_served));
         s.push_str(&format!("region requests: {}\n", self.region_requests));
+        s.push_str(&format!(
+            "timestep requests: {}\n",
+            self.timestep_requests
+        ));
         s.push_str(&format!("shards pruned: {}\n", self.shards_pruned));
         s.push_str(&format!("cache hits: {}\n", self.cache_hits));
         s.push_str(&format!("cache misses: {}\n", self.cache_misses));
@@ -222,6 +232,7 @@ mod tests {
         m.busy.fetch_add(1, Ordering::Relaxed);
         m.bytes_served.fetch_add(1024, Ordering::Relaxed);
         m.region_requests.fetch_add(2, Ordering::Relaxed);
+        m.timestep_requests.fetch_add(8, Ordering::Relaxed);
         m.shards_pruned.fetch_add(14, Ordering::Relaxed);
         m.retries.fetch_add(4, Ordering::Relaxed);
         m.salvaged_shards.fetch_add(6, Ordering::Relaxed);
@@ -245,6 +256,7 @@ mod tests {
         assert_eq!(s.errors, 0);
         assert_eq!(s.bytes_served, 1024);
         assert_eq!(s.region_requests, 2);
+        assert_eq!(s.timestep_requests, 8);
         assert_eq!(s.shards_pruned, 14);
         assert_eq!(s.cache_hits, 10);
         assert_eq!(s.cache_coalesced, 5);
@@ -265,6 +277,7 @@ mod tests {
         let s = ServeStats {
             cache_hits: 12,
             region_requests: 3,
+            timestep_requests: 6,
             shards_pruned: 21,
             retries: 5,
             salvaged_shards: 7,
@@ -275,6 +288,7 @@ mod tests {
         let text = s.render();
         assert!(text.contains("cache hits: 12\n"));
         assert!(text.contains("region requests: 3\n"));
+        assert!(text.contains("timestep requests: 6\n"));
         assert!(text.contains("shards pruned: 21\n"));
         assert!(text.contains("retries: 5\n"));
         assert!(text.contains("salvaged shards: 7\n"));

@@ -24,9 +24,10 @@
 //!
 //! Spec strings round-trip: `Quality::parse` accepts
 //! `rel:1e-4,coords=abs:1e-3,vz=pw_rel:1e-2` (groups `coords` /
-//! `velocities` expand to fields) and a bare float (`1e-4`) as the
-//! deprecated spelling of `rel:<x>`; [`Quality::canonical`] emits the
-//! normalized fixed-point form that archives store.
+//! `velocities` expand to fields); [`Quality::canonical`] emits the
+//! normalized fixed-point form that archives store. The legacy
+//! bare-float spelling (`1e-4` meaning `rel:1e-4`) was removed in 0.7
+//! — every bound now names its kind.
 
 use crate::error::{Error, Result};
 use crate::model::quant::{LatticeQuantizer, Predictor};
@@ -71,9 +72,9 @@ pub enum ErrorBound {
 }
 
 impl ErrorBound {
-    /// Parse a bound spec: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`,
-    /// `lossless`, or — the deprecated bare spelling — a plain float,
-    /// which means `rel:<v>` (the legacy `eb_rel` interpretation).
+    /// Parse a bound spec: `abs:<v>`, `rel:<v>`, `pw_rel:<v>`, or
+    /// `lossless`. Every bound names its kind — the legacy bare-float
+    /// alias (`1e-4` meaning `rel:1e-4`) was removed in 0.7.
     pub fn parse(s: &str) -> Result<ErrorBound> {
         let s = s.trim();
         let b = if let Some(v) = s.strip_prefix("abs:") {
@@ -85,13 +86,10 @@ impl ErrorBound {
         } else if s == "lossless" {
             ErrorBound::Lossless
         } else {
-            // Deprecated alias: a bare float is the legacy
-            // value-range-relative bound.
-            ErrorBound::Rel(parse_f64(
-                s,
-                "error bound (abs:<v>|rel:<v>|pw_rel:<v>|lossless, or a bare \
-                 float for the deprecated rel spelling)",
-            )?)
+            return Err(Error::invalid(format!(
+                "error bound '{s}' must name its kind: abs:<v>|rel:<v>|pw_rel:<v>|lossless \
+                 (the bare-float rel spelling was removed; write rel:{s})"
+            )));
         };
         b.validate()?;
         Ok(b)
@@ -330,8 +328,8 @@ impl Quality {
 
     /// Parse a quality spec: comma-separated items, one default bound
     /// plus `field=bound` / `group=bound` overrides, e.g.
-    /// `rel:1e-4,coords=abs:1e-3`. A bare float (`1e-4`) is the
-    /// deprecated spelling of a uniform `rel:` quality.
+    /// `rel:1e-4,coords=abs:1e-3`. Every bound names its kind (the
+    /// bare-float `rel:` alias was removed in 0.7).
     pub fn parse(s: &str) -> Result<Quality> {
         let s = s.trim();
         if s.is_empty() {
@@ -689,9 +687,6 @@ mod tests {
             ("rel:1e-4", ErrorBound::Rel(1e-4)),
             ("pw_rel:0.01", ErrorBound::PwRel(0.01)),
             ("lossless", ErrorBound::Lossless),
-            // Deprecated bare-float spelling.
-            ("1e-4", ErrorBound::Rel(1e-4)),
-            ("0.001", ErrorBound::Rel(0.001)),
         ] {
             let b = ErrorBound::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
             assert_eq!(b, want, "{s}");
@@ -707,6 +702,8 @@ mod tests {
         for bad in [
             "", "abs:", "abs:x", "abs:-1", "abs:0", "abs:inf", "rel:0", "rel:1.5",
             "rel:1e-40", "pw_rel:2", "losless", "abs=1e-3", "rel 1e-4",
+            // The bare-float rel alias was removed in 0.7.
+            "1e-4", "0.001",
         ] {
             assert!(ErrorBound::parse(bad).is_err(), "should reject '{bad}'");
         }
@@ -721,7 +718,6 @@ mod tests {
             "rel:1e-4,coords=abs:1e-3",
             "rel:1e-3,xx=rel:1e-5,vz=pw_rel:1e-2",
             "pw_rel:1e-2,velocities=rel:1e-4",
-            "1e-4", // deprecated bare spelling
         ] {
             let q = Quality::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
             let c = q.canonical();
@@ -749,6 +745,7 @@ mod tests {
             "rel:1e-4,ww=abs:1e-3", // unknown field
             "rel:1e-4,xx=abs:1e-3,xx=abs:1e-2",
             "rel:1e-4,coords=abs:1e-3,xx=abs:1e-2", // group/field overlap
+            "1e-4", // bare-float rel alias removed in 0.7
         ] {
             assert!(Quality::parse(bad).is_err(), "should reject '{bad}'");
         }

@@ -101,6 +101,23 @@ impl ServeClient {
         }
     }
 
+    /// Request one timestep of a temporal stream archive. The server
+    /// seeks to the timestep's most recent keyframe and replays the
+    /// delta chain from there, touching only that keyframe group's
+    /// shards; the reply's particle range is the timestep's slab in
+    /// the archive's global particle index.
+    pub fn get_timestep(&mut self, archive: &str, t: u64) -> Result<GetReply> {
+        let resp = self.round_trip(&Request::Timestep {
+            archive: archive.into(),
+            t,
+        })?;
+        match resp {
+            Response::Data(d) => Ok(GetReply::Data(d)),
+            Response::Busy(b) => Ok(GetReply::Busy(b)),
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// Fetch the daemon's statistics snapshot.
     pub fn stats(&mut self) -> Result<ServeStats> {
         match self.round_trip(&Request::Stats)? {

@@ -1,7 +1,8 @@
 //! Archive service layer: `nblc serve` holds sharded v3 archives open
-//! and answers concurrent particle-range queries over a small
-//! length-prefixed TCP protocol (LCP's "compression as a data
-//! service" reading of the paper's I/O-reduction motivation).
+//! and answers concurrent particle-range, spatial-region, and temporal
+//! timestep queries over a small length-prefixed TCP protocol (LCP's
+//! "compression as a data service" reading of the paper's
+//! I/O-reduction motivation).
 //!
 //! The stack, bottom-up:
 //! - [`protocol`] — framed requests/responses, hostile-input safe;

@@ -30,6 +30,8 @@ pub const REQ_GET: u8 = 1;
 pub const REQ_STATS: u8 = 2;
 /// Frame kind: spatial region request (axis-aligned box query).
 pub const REQ_REGION: u8 = 3;
+/// Frame kind: temporal timestep request (keyframe+delta chain seek).
+pub const REQ_TIMESTEP: u8 = 4;
 /// Frame kind: decoded particle data.
 pub const RESP_DATA: u8 = 0x81;
 /// Frame kind: statistics snapshot.
@@ -106,6 +108,15 @@ pub enum Request {
         /// Box maximum corner (exclusive), xyz.
         max: [f32; 3],
     },
+    /// Decode one timestep of a temporal stream archive: seek to the
+    /// timestep's most recent keyframe and replay the delta chain from
+    /// there — only that keyframe group's shards are touched.
+    Timestep {
+        /// Served-archive name (file basename).
+        archive: String,
+        /// Timestep index in the archive's temporal chain.
+        t: u64,
+    },
     /// Fetch a [`ServeStats`] snapshot.
     Stats,
 }
@@ -134,6 +145,12 @@ impl Request {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
                 (REQ_REGION, p)
+            }
+            Request::Timestep { archive, t } => {
+                let mut p = Vec::new();
+                put_str(&mut p, archive);
+                put_uvarint(&mut p, *t);
+                (REQ_TIMESTEP, p)
             }
             Request::Stats => (REQ_STATS, Vec::new()),
         }
@@ -176,6 +193,16 @@ impl Request {
                     min: [corners[0], corners[1], corners[2]],
                     max: [corners[3], corners[4], corners[5]],
                 })
+            }
+            REQ_TIMESTEP => {
+                let mut pos = 0;
+                let archive = get_str(payload, &mut pos)?;
+                let t = get_uvarint(payload, &mut pos)?;
+                expect_consumed(payload, pos)?;
+                // Chain membership (does the archive have a temporal
+                // block, is `t` in range) is the server's concern — it
+                // answers with a typed error frame.
+                Ok(Request::Timestep { archive, t })
             }
             REQ_STATS => {
                 expect_consumed(payload, 0)?;
@@ -382,6 +409,7 @@ fn encode_stats(s: &ServeStats) -> Vec<u8> {
         s.inflight_high_water,
         s.cache_coalesced,
         s.region_requests,
+        s.timestep_requests,
         s.shards_pruned,
         s.retries,
         s.salvaged_shards,
@@ -416,6 +444,7 @@ fn decode_stats(payload: &[u8]) -> Result<ServeStats> {
         inflight_high_water: next()?,
         cache_coalesced: next()?,
         region_requests: next()?,
+        timestep_requests: next()?,
         shards_pruned: next()?,
         retries: next()?,
         salvaged_shards: next()?,
@@ -517,7 +546,30 @@ mod tests {
             min: [0.0; 3],
             max: [0.0; 3],
         });
+        roundtrip_request(Request::Timestep {
+            archive: "stream.nblc".into(),
+            t: 0,
+        });
+        roundtrip_request(Request::Timestep {
+            archive: String::new(),
+            t: u64::MAX,
+        });
         roundtrip_request(Request::Stats);
+    }
+
+    #[test]
+    fn truncated_timestep_request_is_corrupt() {
+        let (kind, payload) = Request::Timestep {
+            archive: "stream.nblc".into(),
+            t: 123_456_789,
+        }
+        .encode();
+        for cut in 0..payload.len() {
+            assert!(
+                Request::decode(kind, &payload[..cut]).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
     }
 
     #[test]
@@ -571,6 +623,7 @@ mod tests {
             cache_hits: 4,
             cache_coalesced: 2,
             region_requests: 5,
+            timestep_requests: 11,
             shards_pruned: 40,
             retries: 3,
             salvaged_shards: 12,
@@ -661,6 +714,13 @@ mod tests {
         }
         .encode();
         payload.push(9);
+        assert!(Request::decode(kind, &payload).is_err());
+        let (kind, mut payload) = Request::Timestep {
+            archive: "a".into(),
+            t: 3,
+        }
+        .encode();
+        payload.push(0);
         assert!(Request::decode(kind, &payload).is_err());
     }
 }

@@ -476,6 +476,16 @@ fn handle_request(shared: &Shared, req: Request) -> Response {
             }
             resp
         }
+        Request::Timestep { archive, t } => {
+            let resp = count_outcome(shared, handle_timestep(shared, &archive, t));
+            if matches!(resp, Response::Data(_)) {
+                shared
+                    .metrics
+                    .timestep_requests
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            resp
+        }
     }
 }
 
@@ -672,6 +682,84 @@ fn handle_region(shared: &Shared, archive: &str, min: [f32; 3], max: [f32; 3]) -
                 region: true,
                 shards_touched: dec.shards_touched as u64,
                 shards_pruned: dec.shards_pruned as u64,
+                cache_hits: hits.load(Ordering::Relaxed),
+                snapshot: dec.snapshot,
+            })
+        }
+        Err(e) => Response::Error(e.to_string()),
+    }
+}
+
+/// Answer a timestep request: resolve the timestep's keyframe group in
+/// the archive's temporal chain, decode only those shards
+/// (cache-aware, single-flight), and replay the delta chain from the
+/// keyframe. Admission charges only the cache-cold shards of the one
+/// keyframe group, so a mid-chain seek is priced like the group-sized
+/// read it is — never the whole stream.
+fn handle_timestep(shared: &Shared, archive: &str, t: u64) -> Response {
+    let aid = match resolve_archive(shared, archive) {
+        Ok(aid) => aid,
+        Err(resp) => return resp,
+    };
+    let served = &shared.archives[aid];
+    let reader = &served.reader;
+    // Chain membership is cheap and checked before admission, so a
+    // hostile timestep costs nothing and keeps the connection open.
+    let t = t as usize;
+    let touched = match reader.shards_for_timestep(t) {
+        Ok(touched) => touched,
+        Err(e) => return Response::Error(e.to_string()),
+    };
+    let cold: Vec<usize> = touched
+        .iter()
+        .copied()
+        .filter(|&i| !shared.cache.contains((aid, i)))
+        .collect();
+    let est = reader.est_decode_cost_nanos(&cold);
+    let _permit = match shared.admission.acquire(est) {
+        Ok((p, waited)) => {
+            if waited {
+                shared.metrics.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            p
+        }
+        Err(busy) => return Response::Busy(busy),
+    };
+    let inner = ExecCtx::with_threads((shared.ctx.threads() / touched.len().max(1)).max(1))
+        .with_kernels(shared.ctx.kernels());
+    let hits = AtomicU64::new(0);
+    let fetch = |i: usize| -> Result<Arc<Snapshot>> {
+        match shared.cache.get_or_join((aid, i)) {
+            Flight::Hit(snap) => {
+                hits.fetch_add(1, Ordering::Relaxed);
+                Ok(snap)
+            }
+            Flight::Lead(lead) => {
+                let bundle = reader.read_shard(i)?;
+                let snap = Arc::new((served.factory)().decompress_with(&inner, &bundle)?);
+                lead.publish(Arc::clone(&snap));
+                Ok(snap)
+            }
+        }
+    };
+    match reader.decode_timestep_cached(t, &shared.ctx, served.reordered, &fetch) {
+        Ok(dec) => {
+            shared
+                .metrics
+                .bytes_served
+                .fetch_add(dec.snapshot.total_bytes() as u64, Ordering::Relaxed);
+            shared.metrics.touch_shards(aid, dec.shards_touched as u64);
+            Response::Data(RangeData {
+                particle_start: dec.particle_start,
+                particle_end: dec.particle_end,
+                // A timestep decode always reconstructs the exact step
+                // slab; reordering codecs are rejected at stream-write
+                // time, so the result is index-aligned.
+                exact: true,
+                reordered: false,
+                region: false,
+                shards_touched: dec.shards_touched as u64,
+                shards_pruned: 0,
                 cache_hits: hits.load(Ordering::Relaxed),
                 snapshot: dec.snapshot,
             })

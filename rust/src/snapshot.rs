@@ -269,10 +269,9 @@ pub trait FieldCompressor {
 /// count (enforced by `tests/parallel_determinism.rs`) so archives
 /// stay deterministic regardless of how they were produced.
 ///
-/// The bare-`f64` entry points of earlier releases survive as the
-/// deprecated [`Self::compress_rel`] / [`Self::compress_with_rel`]
-/// shims (`eb_rel` ≡ `Quality::rel(eb_rel)`); they are scheduled for
-/// removal one release after 0.3.
+/// The bare-`f64` entry points of earlier releases (`compress_rel` /
+/// `compress_with_rel`) were removed in 0.7; spell the same bound
+/// `Quality::rel(eb_rel)`.
 pub trait SnapshotCompressor {
     /// Short identifier used in tables.
     fn name(&self) -> &'static str;
@@ -295,30 +294,6 @@ pub trait SnapshotCompressor {
     /// Sequential convenience wrapper over [`Self::decompress_with`].
     fn decompress(&self, c: &CompressedSnapshot) -> Result<Snapshot> {
         self.decompress_with(&ExecCtx::sequential(), c)
-    }
-    /// Deprecated bare-`f64` shim: `eb_rel` is the legacy
-    /// value-range-relative bound, `Quality::rel(eb_rel)` today.
-    #[deprecated(
-        since = "0.3.0",
-        note = "bare f64 bounds are the legacy value-range-relative spelling; \
-                pass &Quality (e.g. Quality::rel(eb_rel)) to compress()"
-    )]
-    fn compress_rel(&self, snap: &Snapshot, eb_rel: f64) -> Result<CompressedSnapshot> {
-        self.compress(snap, &Quality::rel(eb_rel))
-    }
-    /// Deprecated bare-`f64` shim over [`Self::compress_with`].
-    #[deprecated(
-        since = "0.3.0",
-        note = "bare f64 bounds are the legacy value-range-relative spelling; \
-                pass &Quality (e.g. Quality::rel(eb_rel)) to compress_with()"
-    )]
-    fn compress_with_rel(
-        &self,
-        ctx: &ExecCtx,
-        snap: &Snapshot,
-        eb_rel: f64,
-    ) -> Result<CompressedSnapshot> {
-        self.compress_with(ctx, snap, &Quality::rel(eb_rel))
     }
     /// The cheap planning stage: resolve `quality` against sampled
     /// [`SnapshotStats`] and estimate ratio/throughput by compressing
@@ -609,12 +584,6 @@ mod tests {
             }
             let recon = comp.decompress_with(&ctx, &par).unwrap();
             verify_bounds(&s, &recon, 1e-4).unwrap();
-        }
-        // The deprecated bare-f64 shim is byte-identical to the typed path.
-        #[allow(deprecated)]
-        let shim = comp.compress_rel(&s, 1e-4).unwrap();
-        for (a, b) in seq.fields.iter().zip(shim.fields.iter()) {
-            assert_eq!(a.bytes, b.bytes);
         }
     }
 

@@ -1,0 +1,168 @@
+//! Chain planning: keyframe cadence and per-step residual bounds.
+//!
+//! A stream archive is a sequence of keyframe groups: timestep `t` is a
+//! keyframe iff `t % K == 0` (K = `keyframe_interval`), and every delta
+//! step between two keyframes is reconstructed by replaying predictions
+//! from the nearest keyframe at or before it. K trades compression
+//! against seek cost: larger K means more (smaller) delta steps per
+//! group but up to K-1 replayed steps on a mid-chain
+//! `decode_timestep`.
+//!
+//! ## Why the per-step bound holds without drift
+//!
+//! The footer records, per timestep and field, the bound the decoder is
+//! entitled to: `|x_dec - x| ≤ b`. Keyframes get the quality's resolved
+//! bound directly. Delta steps compress the residual at
+//! [`RESIDUAL_MARGIN`]`·b` absolute, and since the residual is taken
+//! against a prediction both sides compute from *decoded* data,
+//! reconstruction error is `|r_dec - r|` plus two f32 roundings — the
+//! margin absorbs the roundings, so `b` holds at every step no matter
+//! how deep the chain. When `b` is so tight the margin cannot absorb
+//! f32 rounding at the field's magnitude (or the bound resolved to
+//! [`EXACT`] already), the step degrades that field to *passthrough*:
+//! the original values are stored losslessly and the recorded bound is
+//! [`EXACT`] — strictly better than promised, and the marker the
+//! decoder keys the per-field split on.
+
+use crate::error::{Error, Result};
+use crate::quality::{ErrorBound, FieldStats, Quality, EXACT};
+use crate::snapshot::FIELD_NAMES;
+
+/// Fraction of the per-field resolved bound given to the residual
+/// quantizer; the rest absorbs the two f32 roundings of the
+/// predict/reconstruct round-trip (see the module doc).
+pub const RESIDUAL_MARGIN: f64 = 0.75;
+
+/// Rounding guard: a delta field needs `margin·b` comfortably above the
+/// f32 ulp at the field's magnitude, or passthrough is safer.
+const ROUNDING_GUARD: f64 = 8.0 * (f32::EPSILON as f64);
+
+/// Stream-mode knobs (the `[temporal]` config section /
+/// `--keyframe-every` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TemporalConfig {
+    /// Keyframe cadence K: timestep `t` is a keyframe iff `t % K == 0`.
+    /// `1` means every timestep is a keyframe (no deltas).
+    pub keyframe_interval: usize,
+}
+
+impl TemporalConfig {
+    /// Validate the cadence (`1..=` [`MAX_SHARDS`]).
+    ///
+    /// [`MAX_SHARDS`]: crate::data::archive::MAX_SHARDS
+    pub fn new(keyframe_interval: usize) -> Result<TemporalConfig> {
+        if keyframe_interval == 0 {
+            return Err(Error::invalid("keyframe interval must be at least 1"));
+        }
+        if keyframe_interval > crate::data::archive::MAX_SHARDS {
+            return Err(Error::invalid(format!(
+                "keyframe interval {keyframe_interval} is implausibly large"
+            )));
+        }
+        Ok(TemporalConfig { keyframe_interval })
+    }
+
+    /// Whether timestep `t` starts a new keyframe group.
+    pub fn is_keyframe(&self, t: usize) -> bool {
+        t % self.keyframe_interval == 0
+    }
+}
+
+impl Default for TemporalConfig {
+    fn default() -> Self {
+        TemporalConfig {
+            keyframe_interval: 8,
+        }
+    }
+}
+
+/// Per-field bounds recorded in the footer for a *delta* step, given
+/// the quality's bounds resolved against the original timestep
+/// (`quality.resolve_fields(stats)`) and that timestep's field stats.
+///
+/// A field comes back either as its resolved bound (the full
+/// reconstruction guarantee — the residual itself is quantized at
+/// [`RESIDUAL_MARGIN`] of it) or as [`EXACT`], the passthrough marker:
+/// the bound was already exact, or too tight for the margin to absorb
+/// f32 rounding at the field's magnitude (`max |x|`).
+pub fn delta_bounds(resolved: &[f64; 6], stats: &[FieldStats; 6]) -> [f64; 6] {
+    std::array::from_fn(|f| {
+        let b = resolved[f];
+        if b == EXACT {
+            return EXACT;
+        }
+        let max_abs = (stats[f].min.abs() as f64).max(stats[f].max.abs() as f64);
+        if RESIDUAL_MARGIN * b <= ROUNDING_GUARD * max_abs {
+            EXACT
+        } else {
+            b
+        }
+    })
+}
+
+/// The quality a delta step's residual snapshot is compressed under:
+/// `Abs(RESIDUAL_MARGIN · b)` per lossy field, `Lossless` for
+/// passthrough fields. The absolute override re-resolves against each
+/// residual shard's own (small) value range, which is what makes delta
+/// steps compress far smaller than keyframes on coherent streams.
+pub fn residual_quality(step_bounds: &[f64; 6]) -> Quality {
+    let mut q = Quality::new(ErrorBound::Lossless);
+    for (f, &b) in step_bounds.iter().enumerate() {
+        if b != EXACT {
+            q = q
+                .with(FIELD_NAMES[f], ErrorBound::Abs(RESIDUAL_MARGIN * b))
+                .expect("FIELD_NAMES entries are valid fields");
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyframe_cadence() {
+        let k = TemporalConfig::new(4).unwrap();
+        let flags: Vec<bool> = (0..9).map(|t| k.is_keyframe(t)).collect();
+        assert_eq!(
+            flags,
+            [true, false, false, false, true, false, false, false, true]
+        );
+        assert!(TemporalConfig::new(1).unwrap().is_keyframe(7), "K=1: all keyframes");
+        assert!(TemporalConfig::new(0).is_err());
+        assert!(TemporalConfig::new(usize::MAX).is_err());
+    }
+
+    fn st(min: f32, max: f32) -> FieldStats {
+        FieldStats {
+            min,
+            max,
+            min_abs: min.abs().min(max.abs()) as f64,
+            entropy_bits: 0.0,
+        }
+    }
+
+    #[test]
+    fn delta_bounds_keep_comfortable_bounds_and_degrade_tight_ones() {
+        let stats: [FieldStats; 6] = std::array::from_fn(|_| st(0.0, 256.0));
+        // A typical rel:1e-4 resolution: far above the f32 ulp at 256.
+        let resolved = [256.0 * 1e-4; 6];
+        assert_eq!(delta_bounds(&resolved, &stats), resolved);
+        // A bound at the rounding guard degrades to passthrough...
+        let tight = [256.0 * 1e-9; 6];
+        assert_eq!(delta_bounds(&tight, &stats), [EXACT; 6]);
+        // ...and an exact bound stays exact.
+        assert_eq!(delta_bounds(&[EXACT; 6], &stats), [EXACT; 6]);
+    }
+
+    #[test]
+    fn residual_quality_maps_fields() {
+        let b = [1e-3, EXACT, 2e-3, EXACT, EXACT, 4e-3];
+        let q = residual_quality(&b);
+        assert_eq!(q.bound(0), ErrorBound::Abs(RESIDUAL_MARGIN * 1e-3));
+        assert_eq!(q.bound(1), ErrorBound::Lossless);
+        assert_eq!(q.bound(2), ErrorBound::Abs(RESIDUAL_MARGIN * 2e-3));
+        assert_eq!(q.bound(5), ErrorBound::Abs(RESIDUAL_MARGIN * 4e-3));
+    }
+}

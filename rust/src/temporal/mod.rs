@@ -1,0 +1,192 @@
+//! Temporal keyframe+delta compression for multi-snapshot streams.
+//!
+//! The source paper scopes to single snapshots; this subsystem extends
+//! the v3 archive into a time-series store. A stream archive holds `T`
+//! timesteps of `n_p` particles each, laid out as consecutive global
+//! particle slabs (timestep `t` owns particles `t·n_p .. (t+1)·n_p`),
+//! so every existing decode path — full decode, `--particles` ranges,
+//! salvage — keeps working on the *stored* representation. The footer's
+//! temporal block ([`ArchiveTemporal`]) records what that
+//! representation means: which steps are keyframes (stored snapshots)
+//! and which are deltas (residuals against a velocity-extrapolated
+//! prediction from the previous *decoded* step — see [`predictor`]),
+//! plus per-step `dt` and the per-field bounds the decoder is entitled
+//! to.
+//!
+//! [`ShardReader::decode_timestep`] is the seek path: it touches only
+//! the shards of timestep `t`'s keyframe group (the keyframe at or
+//! before `t` plus the deltas up to `t`), never the whole archive —
+//! O(K) work for a keyframe interval of K, independent of `T`.
+//!
+//! Module layout: [`predictor`] holds the prediction/residual math,
+//! [`chain`] the keyframe cadence and per-step bound derivation, and
+//! this root the read path. The write path (the `nblc pipeline
+//! --stream` rounds) lives in
+//! [`crate::coordinator::pipeline::run_insitu_stream`].
+
+pub mod chain;
+pub mod predictor;
+
+pub use chain::{delta_bounds, residual_quality, TemporalConfig, RESIDUAL_MARGIN};
+pub use predictor::{predict, reconstruct, residual};
+
+use crate::data::archive::{ShardReader, TemporalStep};
+use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
+use crate::snapshot::Snapshot;
+
+/// Stream archives require order-preserving codecs: delta residuals are
+/// particle-index-aligned, so a reordering codec's output cannot be
+/// replayed against a prediction.
+fn reject_reordered(reordered: bool) -> Result<()> {
+    if reordered {
+        return Err(Error::invalid(
+            "temporal chain written with a reordering codec: delta residuals \
+             are particle-index-aligned, so this archive cannot be replayed",
+        ));
+    }
+    Ok(())
+}
+
+/// Result of [`ShardReader::decode_timestep`].
+#[derive(Debug)]
+pub struct DecodedTimestep {
+    /// The fully reconstructed timestep (`n_p` particles, original
+    /// particle order — stream archives require order-preserving
+    /// codecs).
+    pub snapshot: Snapshot,
+    /// Shard records fetched and decoded — exactly the keyframe group's
+    /// shards from the keyframe through `t`, proving the O(K) seek.
+    pub shards_touched: usize,
+    /// The keyframe timestep the reconstruction started from.
+    pub keyframe: usize,
+    /// The requested timestep.
+    pub timestep: usize,
+    /// First global particle index of the timestep's slab.
+    pub particle_start: u64,
+    /// One past the last global particle index of the slab.
+    pub particle_end: u64,
+}
+
+impl ShardReader {
+    /// Reconstruct timestep `t` of a stream archive, touching only its
+    /// keyframe group: decode the keyframe at or before `t`, then
+    /// replay predict → decode-residual → reconstruct for each delta
+    /// step up to `t`. Errors on non-stream archives, out-of-range
+    /// timesteps, and chains written with a reordering codec (delta
+    /// residuals are particle-index-aligned, so reordering codecs are
+    /// rejected at write time too).
+    pub fn decode_timestep(&self, t: usize, ctx: &ExecCtx) -> Result<DecodedTimestep> {
+        let factory = crate::compressors::registry::factory(self.spec())?;
+        reject_reordered(factory().reorders())?;
+        self.replay_chain(t, ctx, &|i, inner| {
+            let bundle = self.read_shard(i)?;
+            factory().decompress_with(inner, &bundle)
+        })
+    }
+
+    /// [`Self::decode_timestep`] with the per-shard decode replaced by
+    /// a caller hook — the serve daemon's cached path. `fetch(i)` must
+    /// return shard `i` fully decoded; the LRU cache interposes there,
+    /// so a hot keyframe group's shards decode once and serve many
+    /// timestep requests (only the cheap predict/reconstruct replay
+    /// runs per request). `reordered` is the codec's `reorders()` flag,
+    /// resolved once at archive-open time like
+    /// [`crate::data::archive::decode_shards_cached`]'s.
+    pub fn decode_timestep_cached(
+        &self,
+        t: usize,
+        ctx: &ExecCtx,
+        reordered: bool,
+        fetch: &(dyn Fn(usize) -> Result<std::sync::Arc<Snapshot>> + Sync),
+    ) -> Result<DecodedTimestep> {
+        reject_reordered(reordered)?;
+        self.replay_chain(t, ctx, &|i, _inner| fetch(i).map(|p| (*p).clone()))
+    }
+
+    /// Shared chain replay: `decode(i, inner_ctx)` returns shard `i`
+    /// decoded. Kept private so both entry points agree on validation
+    /// and touch accounting.
+    fn replay_chain(
+        &self,
+        t: usize,
+        ctx: &ExecCtx,
+        decode: &(dyn Fn(usize, &ExecCtx) -> Result<Snapshot> + Sync),
+    ) -> Result<DecodedTimestep> {
+        let tc = self
+            .temporal()
+            .ok_or_else(|| Error::invalid("archive has no temporal chain (not a stream archive)"))?;
+        let k = tc.keyframe_for(t).ok_or_else(|| {
+            Error::invalid(format!(
+                "timestep {t} out of range: the chain holds {} steps",
+                tc.steps.len()
+            ))
+        })?;
+        let mut touched = 0usize;
+        let mut cur = self.decode_step(&tc.steps[k], ctx, decode, &mut touched)?;
+        for u in k + 1..=t {
+            let step = &tc.steps[u];
+            let raw = self.decode_step(step, ctx, decode, &mut touched)?;
+            if raw.len() != cur.len() {
+                return Err(Error::corrupt(format!(
+                    "timestep {u} holds {} particles, timestep {} holds {}",
+                    raw.len(),
+                    u - 1,
+                    cur.len()
+                )));
+            }
+            let pred = predict(&cur, step.dt);
+            cur = reconstruct(&pred, &raw, &step.bounds)?;
+        }
+        // The timestep's global particle slab: the chain parser
+        // guarantees each step's shard range is non-empty and
+        // contiguous in the table.
+        let entries = &self.index().entries;
+        let step = &tc.steps[t];
+        let (lo, hi) = (
+            entries[step.shard_lo as usize].start,
+            entries[step.shard_hi as usize - 1].end,
+        );
+        Ok(DecodedTimestep {
+            snapshot: cur,
+            shards_touched: touched,
+            keyframe: k,
+            timestep: t,
+            particle_start: lo,
+            particle_end: hi,
+        })
+    }
+
+    /// Decode one chain step's stored payload (keyframe snapshot or
+    /// residual), shards fanned out over `ctx` and stitched in logical
+    /// order.
+    fn decode_step(
+        &self,
+        step: &TemporalStep,
+        ctx: &ExecCtx,
+        decode: &(dyn Fn(usize, &ExecCtx) -> Result<Snapshot> + Sync),
+        touched: &mut usize,
+    ) -> Result<Snapshot> {
+        let shards: Vec<usize> = (step.shard_lo as usize..step.shard_hi as usize).collect();
+        *touched += shards.len();
+        let per_shard = (ctx.threads() / shards.len()).max(1);
+        let inner = ExecCtx::with_threads(per_shard);
+        let parts = ctx.try_par(&shards, |&i| {
+            let part = decode(i, &inner)?;
+            let e = &self.index().entries[i];
+            if part.len() as u64 != e.end - e.start {
+                return Err(Error::corrupt(format!(
+                    "shard {i} decoded to {} particles, footer says {}",
+                    part.len(),
+                    e.end - e.start
+                )));
+            }
+            Ok(part)
+        })?;
+        if parts.len() == 1 {
+            Ok(parts.into_iter().next().unwrap())
+        } else {
+            Snapshot::concat(&parts)
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! The velocity-extrapolation predictor and its residual codec.
+//!
+//! A delta timestep stores `r = fl32(x(t) - x̂(t))` where
+//! `x̂(t) = fl32(x_dec(t-1) + v_dec(t-1)·dt)` — prediction always runs
+//! off *decoded* data, so the encoder and the decoder compute the same
+//! `x̂` bit for bit and quantization error never compounds along the
+//! chain: at every timestep `|x_dec - x| ≤ eb_residual + f32 rounding`,
+//! independent of how many delta steps precede it.
+//!
+//! Velocities use the identity predictor (`v̂(t) = v_dec(t-1)`), so
+//! their residual is the per-step velocity change (`a·dt` scale for
+//! leapfrog-evolved data) — small and highly compressible.
+//!
+//! All intermediate arithmetic is `f64`, rounded to `f32` exactly once
+//! per value; this is what makes the predictor deterministic across
+//! SIMD/scalar kernels and thread counts.
+
+use crate::error::{Error, Result};
+use crate::snapshot::{Snapshot, VEL_OFFSET};
+
+/// Predict timestep `t` from the decoded timestep `t-1`: coordinates
+/// extrapolate by `x + v·dt` (per axis, `f64` math, one rounding), and
+/// velocities carry over unchanged.
+pub fn predict(prev: &Snapshot, dt: f64) -> Snapshot {
+    let mut fields: [Vec<f32>; 6] = Default::default();
+    for axis in 0..VEL_OFFSET {
+        let xs = &prev.fields[axis];
+        let vs = &prev.fields[VEL_OFFSET + axis];
+        fields[axis] = xs
+            .iter()
+            .zip(vs)
+            .map(|(&x, &v)| (x as f64 + v as f64 * dt) as f32)
+            .collect();
+        fields[VEL_OFFSET + axis] = vs.clone();
+    }
+    Snapshot {
+        name: prev.name.clone(),
+        fields,
+        box_size: prev.box_size,
+        seed: prev.seed,
+    }
+}
+
+/// The payload a delta timestep compresses: per-field residuals
+/// `fl32(orig - pred)` for fields with a lossy bound, and the original
+/// values verbatim for fields whose recorded bound is [`EXACT`] (the
+/// passthrough marker — see [`super::chain::delta_bounds`]). The
+/// decoder applies the same per-field rule from the footer's recorded
+/// bounds, so the split is deterministic.
+///
+/// [`EXACT`]: crate::quality::EXACT
+pub fn residual(orig: &Snapshot, pred: &Snapshot, bounds: &[f64; 6]) -> Result<Snapshot> {
+    if orig.len() != pred.len() {
+        return Err(Error::invalid(format!(
+            "residual: timestep has {} particles, prediction has {}",
+            orig.len(),
+            pred.len()
+        )));
+    }
+    let fields: [Vec<f32>; 6] = std::array::from_fn(|f| {
+        if bounds[f] == crate::quality::EXACT {
+            orig.fields[f].clone()
+        } else {
+            orig.fields[f]
+                .iter()
+                .zip(&pred.fields[f])
+                .map(|(&o, &p)| (o as f64 - p as f64) as f32)
+                .collect()
+        }
+    });
+    Ok(Snapshot {
+        name: orig.name.clone(),
+        fields,
+        box_size: orig.box_size,
+        seed: orig.seed,
+    })
+}
+
+/// Invert [`residual`] with the decoded residual: lossy fields add the
+/// residual back onto the prediction (`fl32(pred + r_dec)`), passthrough
+/// fields take the stored values verbatim.
+pub fn reconstruct(pred: &Snapshot, res: &Snapshot, bounds: &[f64; 6]) -> Result<Snapshot> {
+    if res.len() != pred.len() {
+        return Err(Error::corrupt(format!(
+            "reconstruct: residual decoded to {} particles, prediction has {}",
+            res.len(),
+            pred.len()
+        )));
+    }
+    let fields: [Vec<f32>; 6] = std::array::from_fn(|f| {
+        if bounds[f] == crate::quality::EXACT {
+            res.fields[f].clone()
+        } else {
+            pred.fields[f]
+                .iter()
+                .zip(&res.fields[f])
+                .map(|(&p, &r)| (p as f64 + r as f64) as f32)
+                .collect()
+        }
+    });
+    Ok(Snapshot {
+        name: res.name.clone(),
+        fields,
+        box_size: res.box_size,
+        seed: res.seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_md::{generate_md, MdConfig};
+
+    fn snap(n: usize) -> Snapshot {
+        generate_md(&MdConfig {
+            n_particles: n,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn predict_extrapolates_coords_and_keeps_velocities() {
+        let s = snap(500);
+        let p = predict(&s, 0.25);
+        for i in 0..s.len() {
+            for axis in 0..3 {
+                let want =
+                    (s.fields[axis][i] as f64 + s.fields[3 + axis][i] as f64 * 0.25) as f32;
+                assert_eq!(p.fields[axis][i], want);
+                assert_eq!(p.fields[3 + axis][i], s.fields[3 + axis][i]);
+            }
+        }
+        // dt = 0 is the identity on every field.
+        let id = predict(&s, 0.0);
+        assert_eq!(id.fields, s.fields);
+    }
+
+    #[test]
+    fn residual_reconstruct_is_exact_on_undamaged_residuals() {
+        // With the residual passed through unquantized, reconstruction
+        // differs from the original only by one f32 rounding per value.
+        let s = snap(400);
+        let prev = snap(400);
+        let pred = predict(&prev, 0.1);
+        let bounds = [1e-3; 6];
+        let r = residual(&s, &pred, &bounds).unwrap();
+        let back = reconstruct(&pred, &r, &bounds).unwrap();
+        for f in 0..6 {
+            for i in 0..s.len() {
+                let got = back.fields[f][i] as f64;
+                let want = s.fields[f][i] as f64;
+                let tol = 2.0 * f32::EPSILON as f64 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "field {f} particle {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn passthrough_fields_are_bit_exact() {
+        let s = snap(300);
+        let pred = predict(&snap(300), 0.1);
+        // Field 0 passthrough, the rest lossy.
+        let bounds = [0.0, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3];
+        let r = residual(&s, &pred, &bounds).unwrap();
+        assert_eq!(r.fields[0], s.fields[0], "passthrough stores the original");
+        let back = reconstruct(&pred, &r, &bounds).unwrap();
+        assert_eq!(back.fields[0], s.fields[0]);
+    }
+
+    #[test]
+    fn length_mismatches_are_typed_errors() {
+        let a = snap(100);
+        let b = snap(101);
+        let bounds = [1e-3; 6];
+        assert!(residual(&a, &b, &bounds).is_err());
+        assert!(reconstruct(&a, &b, &bounds).is_err());
+    }
+}

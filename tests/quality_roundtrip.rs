@@ -1,7 +1,8 @@
 //! Property tests for the typed quality layer: `ErrorBound`/`Quality`
 //! parse → canonicalize → re-parse round-trips (canonical form is a
-//! fixed point and resolution is preserved), including the deprecated
-//! bare-`f64`/`eb_rel` alias paths and the `compress_rel` trait shims.
+//! fixed point and resolution is preserved). The bare-`f64` spelling and
+//! the `compress_rel` trait shims were removed in 0.7; this suite pins
+//! the rejection path and the surviving `[pipeline] eb_rel` config alias.
 
 use nblc::compressors::registry;
 use nblc::config::{ConfigDoc, PipelineSettings};
@@ -67,27 +68,26 @@ fn quality_canonical_is_a_parse_fixed_point() {
 }
 
 #[test]
-fn deprecated_bare_f64_spellings_still_parse() {
-    // A bare float is the legacy value-range-relative bound everywhere
-    // it could previously appear.
-    assert_eq!(ErrorBound::parse("1e-4").unwrap(), ErrorBound::Rel(1e-4));
-    assert_eq!(ErrorBound::parse("0.001").unwrap(), ErrorBound::Rel(0.001));
-    assert_eq!(
-        Quality::parse("1e-4").unwrap().canonical(),
-        Quality::rel(1e-4).canonical()
-    );
-    // Config: the deprecated eb_rel float key aliases a uniform rel
-    // quality...
+fn bare_f64_spellings_are_rejected() {
+    // The legacy value-range-relative bare-float spelling was removed in
+    // 0.7: a bound must name its kind everywhere a string is parsed.
+    assert!(ErrorBound::parse("1e-4").is_err());
+    assert!(ErrorBound::parse("0.001").is_err());
+    assert!(Quality::parse("1e-4").is_err());
+    let doc = ConfigDoc::parse("[pipeline]\nquality = \"1e-3\"\n").unwrap();
+    assert!(PipelineSettings::from_doc(&doc).is_err());
+    // The deprecated [pipeline] eb_rel *float key* survives (it is typed
+    // by the key name, not a bare string) and still aliases uniform rel.
     let doc = ConfigDoc::parse("[pipeline]\neb_rel = 1e-3\n").unwrap();
     let s = PipelineSettings::from_doc(&doc).unwrap();
     assert_eq!(s.quality, Quality::rel(1e-3));
-    // ...and the typed quality key accepts the bare spelling too.
-    let doc = ConfigDoc::parse("[pipeline]\nquality = \"1e-3\"\n").unwrap();
-    assert_eq!(PipelineSettings::from_doc(&doc).unwrap().quality, s.quality);
 }
 
 #[test]
-fn deprecated_compress_shims_are_byte_identical() {
+fn sequential_and_ctx_compress_are_byte_identical() {
+    // compress() is a thin sequential wrapper over compress_with(); the
+    // two entry points must produce identical archives (this pin used to
+    // cover the removed compress_rel shims as well).
     let snap = generate_md(&MdConfig {
         n_particles: 3_000,
         ..Default::default()
@@ -96,21 +96,12 @@ fn deprecated_compress_shims_are_byte_identical() {
     for name in ["sz_lv", "sz_lv_rx", "cpc2000", "gzip"] {
         let comp = registry::build_str(name).unwrap();
         let typed = comp.compress(&snap, &q).unwrap();
-        #[allow(deprecated)]
-        let shim = comp.compress_rel(&snap, 1e-4).unwrap();
-        #[allow(deprecated)]
-        let shim_ctx = comp
-            .compress_with_rel(&nblc::exec::ExecCtx::sequential(), &snap, 1e-4)
+        let ctx = comp
+            .compress_with(&nblc::exec::ExecCtx::sequential(), &snap, &q)
             .unwrap();
-        assert_eq!(typed.fields.len(), shim.fields.len(), "{name}");
-        for ((a, b), c) in typed
-            .fields
-            .iter()
-            .zip(shim.fields.iter())
-            .zip(shim_ctx.fields.iter())
-        {
+        assert_eq!(typed.fields.len(), ctx.fields.len(), "{name}");
+        for (a, b) in typed.fields.iter().zip(ctx.fields.iter()) {
             assert_eq!(a.bytes, b.bytes, "{name}");
-            assert_eq!(a.bytes, c.bytes, "{name}");
         }
         assert_eq!(typed.eb_rel, 1e-4, "{name}: legacy header field");
     }

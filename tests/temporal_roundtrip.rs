@@ -1,0 +1,282 @@
+//! Acceptance-criteria integration test for the temporal subsystem:
+//! stream-compress leapfrog time series with keyframe+delta chains
+//! across the three bound kinds × keyframe intervals {1, 4, 16} × the
+//! order-preserving codec lineup, then pin the contract:
+//!
+//! - every timestep of the chain reconstructs within the configured
+//!   quality bound — prediction runs off *decoded* state, so error
+//!   never drifts no matter how deep the delta chain;
+//! - `decode_timestep(t)` touches only t's keyframe group (shard-touch
+//!   counters) and is bit-identical to an independent sequential replay
+//!   of the whole chain;
+//! - delta steps compress materially smaller than keyframes on
+//!   velocity-coherent cosmology data;
+//! - reordering codecs are rejected at stream-write AND decode time.
+
+use nblc::compressors::registry;
+use nblc::coordinator::pipeline::{run_insitu_stream, StreamConfig};
+use nblc::data::archive::{decode_shards, ShardReader, ShardWriter};
+use nblc::data::gen_cosmo::{self, CosmoConfig};
+use nblc::exec::ExecCtx;
+use nblc::quality::{verify_quality, Quality};
+use nblc::snapshot::Snapshot;
+use nblc::temporal::{predict, reconstruct, TemporalConfig};
+
+const DT: f64 = 0.05;
+const SHARDS: usize = 2;
+
+fn series(n: usize, steps: usize) -> Vec<Snapshot> {
+    gen_cosmo::time_series(
+        &CosmoConfig {
+            n_particles: n,
+            ..Default::default()
+        },
+        steps,
+        DT,
+    )
+}
+
+fn stream(
+    series: &[Snapshot],
+    spec: &str,
+    q: &Quality,
+    interval: usize,
+    tag: &str,
+) -> (std::path::PathBuf, nblc::coordinator::pipeline::StreamReport) {
+    let path = std::env::temp_dir().join(format!(
+        "nblc_temporal_rt_{}_{}.nblc",
+        std::process::id(),
+        tag.replace(['/', ':', ' '], "_")
+    ));
+    let report = run_insitu_stream(
+        series,
+        &StreamConfig {
+            shards: SHARDS,
+            threads: 2,
+            quality: q.clone(),
+            factory: registry::factory(spec).unwrap(),
+            path: path.clone(),
+            spec: registry::canonical(spec).unwrap(),
+            temporal: TemporalConfig::new(interval).unwrap(),
+            dt: DT,
+            max_retries: 0,
+        },
+    )
+    .unwrap_or_else(|e| panic!("{tag}: stream pipeline failed: {e}"));
+    (path, report)
+}
+
+fn assert_bits_eq(a: &Snapshot, b: &Snapshot, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for f in 0..6 {
+        for i in 0..a.len() {
+            assert_eq!(
+                a.fields[f][i].to_bits(),
+                b.fields[f][i].to_bits(),
+                "{tag}: field {f} particle {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chains_hold_the_bound_at_every_timestep() {
+    // 16 steps so interval 16 exercises a 15-deep delta chain: if
+    // quantization error accumulated across deltas, the tail steps
+    // would breach the bound.
+    let n = 2_000;
+    let steps = 16;
+    let ts = series(n, steps);
+    let ctx = ExecCtx::with_threads(2);
+    for (qname, q) in [
+        ("abs", Quality::abs(1e-2)),
+        ("rel", Quality::rel(1e-4)),
+        ("pw_rel", Quality::pw_rel(1e-3)),
+    ] {
+        for interval in [1usize, 4, 16] {
+            for spec in ["sz_lv", "gzip"] {
+                let tag = format!("{qname}/k={interval}/{spec}");
+                let (path, report) = stream(&ts, spec, &q, interval, &tag);
+                let reader = ShardReader::open(&path)
+                    .unwrap_or_else(|e| panic!("{tag}: open: {e}"));
+                reader.verify_file_crc().unwrap();
+                let tc = reader.temporal().expect("stream archive has a chain");
+                assert_eq!(tc.interval as usize, interval, "{tag}");
+                assert_eq!(tc.steps.len(), steps, "{tag}");
+                assert_eq!(report.steps.len(), steps, "{tag}");
+                for t in 0..steps {
+                    assert_eq!(
+                        tc.steps[t].keyframe,
+                        t % interval == 0,
+                        "{tag}: step {t} keyframe cadence"
+                    );
+                    let dec = reader
+                        .decode_timestep(t, &ctx)
+                        .unwrap_or_else(|e| panic!("{tag}: decode step {t}: {e}"));
+                    // O(K) seek: exactly the keyframe group's shards
+                    // from the keyframe through t, never the archive.
+                    let group = reader.shards_for_timestep(t).unwrap();
+                    assert_eq!(dec.shards_touched, group.len(), "{tag}: step {t}");
+                    assert_eq!(
+                        group.len(),
+                        (t - dec.keyframe + 1) * SHARDS,
+                        "{tag}: step {t} group size"
+                    );
+                    assert_eq!(dec.keyframe, t - t % interval, "{tag}: step {t}");
+                    assert_eq!(dec.particle_start, (t * n) as u64, "{tag}");
+                    assert_eq!(dec.particle_end, ((t + 1) * n) as u64, "{tag}");
+                    // The headline guarantee: within the typed bound at
+                    // every chain depth.
+                    verify_quality(&ts[t], &dec.snapshot, &q)
+                        .unwrap_or_else(|e| panic!("{tag}: step {t} drifted: {e}"));
+                }
+                assert!(reader.decode_timestep(steps, &ctx).is_err(), "{tag}");
+                std::fs::remove_file(&path).ok();
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_chain_seek_matches_sequential_replay() {
+    // Replay the whole chain step by step through the *public* stored
+    // representation (slab decodes + predictor), independently of
+    // decode_timestep's internal seek, and demand bitwise equality —
+    // the mid-chain O(K) seek must be a pure optimization.
+    let n = 2_000;
+    let steps = 8;
+    let ts = series(n, steps);
+    let q = Quality::rel(1e-4);
+    let (path, _) = stream(&ts, "sz_lv", &q, 4, "seq_replay");
+    let reader = ShardReader::open(&path).unwrap();
+    let tc = reader.temporal().unwrap().clone();
+    let ctx = ExecCtx::with_threads(2);
+    let seq = ExecCtx::sequential();
+
+    let slab = |t: usize, ctx: &ExecCtx| -> Snapshot {
+        decode_shards(
+            &reader,
+            reader.spec(),
+            Some(((t * n) as u64, ((t + 1) * n) as u64)),
+            ctx,
+        )
+        .unwrap()
+        .snapshot
+    };
+    let mut cur: Option<Snapshot> = None;
+    for t in 0..steps {
+        let step = &tc.steps[t];
+        let raw = slab(t, &ctx);
+        cur = Some(if step.keyframe {
+            raw
+        } else {
+            let pred = predict(cur.as_ref().unwrap(), step.dt);
+            reconstruct(&pred, &raw, &step.bounds).unwrap()
+        });
+        let dec = reader.decode_timestep(t, &ctx).unwrap();
+        assert_bits_eq(
+            cur.as_ref().unwrap(),
+            &dec.snapshot,
+            &format!("seek vs sequential replay at step {t}"),
+        );
+        // Thread count must not change a single bit either.
+        let dec1 = reader.decode_timestep(t, &seq).unwrap();
+        assert_bits_eq(
+            &dec.snapshot,
+            &dec1.snapshot,
+            &format!("thread-count determinism at step {t}"),
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn delta_steps_beat_keyframes_on_coherent_streams() {
+    // The point of the delta path: velocity extrapolation leaves small
+    // residuals on leapfrog cosmology data, so delta steps must come
+    // out materially smaller than keyframes (acceptance floor 1.5x).
+    let ts = series(4_000, 8);
+    let (path, report) = stream(&ts, "sz_lv", &Quality::rel(1e-4), 4, "ratio");
+    let ratio = report
+        .delta_vs_keyframe()
+        .expect("interval 4 over 8 steps has both kinds");
+    assert!(
+        ratio >= 1.5,
+        "delta steps only {ratio:.2}x smaller than keyframes"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn reordering_codecs_are_rejected_end_to_end() {
+    let ts = series(1_000, 4);
+    let path = std::env::temp_dir().join(format!(
+        "nblc_temporal_rt_{}_reorder.nblc",
+        std::process::id()
+    ));
+    // Write side: the stream pipeline refuses to start.
+    let err = run_insitu_stream(
+        &ts,
+        &StreamConfig {
+            shards: SHARDS,
+            threads: 1,
+            quality: Quality::rel(1e-4),
+            factory: registry::factory("sz_cpc2000").unwrap(),
+            path: path.clone(),
+            spec: registry::canonical("sz_cpc2000").unwrap(),
+            temporal: TemporalConfig::new(2).unwrap(),
+            dt: DT,
+            max_retries: 0,
+        },
+    )
+    .expect_err("reordering codec must be rejected at stream-write time");
+    assert!(
+        err.to_string().contains("order-preserving"),
+        "unexpected error: {err}"
+    );
+
+    // Decode side: a temporal archive whose spec reorders (built by
+    // driving the writer directly — the pipeline refuses) must be
+    // rejected at decode_timestep, since residual replay would pair
+    // residuals with the wrong particles.
+    let spec = registry::canonical("sz_cpc2000").unwrap();
+    let q = Quality::rel(1e-4);
+    let comp = registry::build_str(&spec).unwrap();
+    let mut w = ShardWriter::create_stream(&path, &spec, &q).unwrap();
+    w.enable_temporal(2).unwrap();
+    for (t, snap) in ts.iter().enumerate() {
+        w.begin_timestep(t % 2 == 0, DT, [1e-3; 6]).unwrap();
+        let b = comp.compress(snap, &q).unwrap();
+        w.write_shard(t * snap.len(), (t + 1) * snap.len(), &b, 0)
+            .unwrap();
+    }
+    w.finish().unwrap();
+    let reader = ShardReader::open(&path).unwrap();
+    assert!(reader.temporal().is_some());
+    let err = reader
+        .decode_timestep(0, &ExecCtx::sequential())
+        .expect_err("reordering codec must be rejected at decode time");
+    assert!(
+        err.to_string().contains("reordering"),
+        "unexpected error: {err}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_stream_archives_fail_typed() {
+    // The footer now ends with the temporal chain; any cut through it
+    // must surface as a typed error through the normal open path (the
+    // dense hostile sweep lives in the archive unit tests).
+    let ts = series(500, 4);
+    let (path, _) = stream(&ts, "sz_lv", &Quality::rel(1e-4), 2, "trunc");
+    let bytes = std::fs::read(&path).unwrap();
+    let foot_len =
+        u64::from_le_bytes(bytes[bytes.len() - 16..bytes.len() - 8].try_into().unwrap());
+    let data_end = bytes.len() - 16 - foot_len as usize;
+    for cut in (data_end..bytes.len()).step_by(7).chain([bytes.len() - 1]) {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(ShardReader::open(&path).is_err(), "cut at {cut}");
+    }
+    std::fs::remove_file(&path).ok();
+}
